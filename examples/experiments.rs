@@ -1,0 +1,536 @@
+//! Experiment harness: regenerates every table in DESIGN.md §4 (T1–T10).
+//!
+//!     cargo run --release --example experiments [t1 t2 … | all]
+//!
+//! Each experiment prints the table EXPERIMENTS.md records.  All runs use
+//! modeled job durations (calibrated against the measured PJRT latency —
+//! see EXPERIMENTS.md §E2E) so hundreds of cluster-hours simulate in
+//! seconds, deterministically.
+
+use ds_rs::aws::ec2::Volatility;
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::json::Value;
+use ds_rs::metrics::{RunReport, Table};
+use ds_rs::sim::clock::{fmt_dur, SimTime};
+use ds_rs::sim::{HOUR, MINUTE, SECOND};
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn cfg(machines: u32, visibility: SimTime) -> AppConfig {
+    AppConfig {
+        cluster_machines: machines,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: visibility,
+        ..Default::default()
+    }
+}
+
+fn fleet_file() -> FleetSpec {
+    FleetSpec::template("us-east-1").unwrap()
+}
+
+fn run(
+    c: &AppConfig,
+    jobs: &JobSpec,
+    model: DurationModel,
+    opts: RunOptions,
+) -> RunReport {
+    let mut ex = ModeledExecutor {
+        model,
+        ..Default::default()
+    };
+    run_full(c, jobs, &fleet_file(), &mut ex, opts).expect("run failed")
+}
+
+fn model(mean_s: f64) -> DurationModel {
+    DurationModel {
+        mean_s,
+        cv: 0.3,
+        ..Default::default()
+    }
+}
+
+/// T1 — scaling: jobs/hour vs CLUSTER_MACHINES.
+fn t1() {
+    println!("\n== T1: throughput vs cluster size (2000 jobs, 90 s mean) ==");
+    let jobs = JobSpec::plate("P", 96, 21, vec![]); // 2016 jobs
+    let mut table = Table::new(&["machines", "cores", "makespan", "jobs/h", "ideal jobs/h", "efficiency"]);
+    for &m in &[1u32, 2, 4, 8, 16, 32, 64, 128] {
+        let c = cfg(m, 10 * MINUTE);
+        let r = run(&c, &jobs, model(90.0), RunOptions::default());
+        let cores = m * 4;
+        let ideal = f64::from(cores) * 3600.0 / 90.0;
+        table.row(&[
+            m.to_string(),
+            cores.to_string(),
+            fmt_dur(r.makespan().unwrap_or(0)),
+            format!("{:.0}", r.jobs_per_hour()),
+            format!("{ideal:.0}"),
+            format!("{:.2}", r.jobs_per_hour() / ideal),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: near-linear until the 2016-job queue drains faster than boot+tail overhead.");
+}
+
+/// T2 — cost: spot vs on-demand equivalent, and bid sweep.
+fn t2() {
+    println!("\n== T2: spot vs on-demand cost (384 jobs, 8 machines) ==");
+    let jobs = JobSpec::plate("P", 96, 4, vec![]);
+    let c = cfg(8, 10 * MINUTE);
+    let r = run(&c, &jobs, model(90.0), RunOptions::default());
+    println!(
+        "machine-hours {:.2}  spot ${:.4}  on-demand ${:.4}  savings {:.1}x  overhead {:.2}%",
+        r.cost.machine_hours,
+        r.cost.ec2_usd,
+        r.cost.on_demand_equivalent_usd,
+        r.cost.spot_savings_factor(),
+        r.cost.overhead_fraction() * 100.0
+    );
+
+    println!("\nbid sweep (medium volatility): cost and makespan vs MACHINE_PRICE");
+    let base = 0.192 * 0.30;
+    let mut table = Table::new(&["bid $/h", "bid/base", "makespan", "interruptions", "EC2 $"]);
+    for &mult in &[1.05, 1.2, 1.5, 2.0, 3.0] {
+        let mut c = cfg(8, 10 * MINUTE);
+        c.machine_price = base * mult;
+        let r = run(
+            &c,
+            &jobs,
+            model(90.0),
+            RunOptions {
+                volatility: Volatility::Medium,
+                seed: 21,
+                max_sim_time: 3 * 24 * HOUR,
+                ..Default::default()
+            },
+        );
+        table.row(&[
+            format!("{:.3}", base * mult),
+            format!("{mult:.2}"),
+            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+            r.stats.interruptions.to_string(),
+            format!("{:.4}", r.cost.ec2_usd),
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+/// T3 — cheapest mode vs normal monitor.
+fn t3() {
+    println!("\n== T3: cheapest mode (192 jobs, 6 machines, 120 s mean) ==");
+    let jobs = JobSpec::plate("P", 48, 4, vec![]);
+    let c = cfg(6, 10 * MINUTE);
+    let mut table = Table::new(&["mode", "makespan", "EC2 $", "total $", "instances"]);
+    for (name, cheapest, crash) in [
+        ("normal", false, None),
+        ("cheapest", true, None),
+        ("normal+crashes", false, Some(25 * MINUTE)),
+        ("cheapest+crashes", true, Some(25 * MINUTE)),
+    ] {
+        let r = run(
+            &c,
+            &jobs,
+            model(120.0),
+            RunOptions {
+                cheapest,
+                crash_mttf: crash,
+                seed: 31,
+                max_sim_time: 3 * 24 * HOUR,
+                ..Default::default()
+            },
+        );
+        table.row(&[
+            name.to_string(),
+            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+            format!("{:.4}", r.cost.ec2_usd),
+            format!("{:.4}", r.cost.total_usd()),
+            r.stats.instances_launched.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: cheapest ≤ normal on cost, ≥ on makespan; gap widens with crashes (no replacement).");
+}
+
+/// T4 — visibility timeout trade-off.
+fn t4() {
+    println!("\n== T4: SQS visibility timeout sweep (mean job 120 s, 5% stalls) ==");
+    let jobs = JobSpec::plate("P", 48, 2, vec![]); // 96 jobs
+    let mut table = Table::new(&[
+        "visibility", "x mean", "makespan", "duplicates", "dup %", "EC2 $",
+    ]);
+    for &(vis, label) in &[
+        (30 * SECOND, "0.25x"),
+        (MINUTE, "0.5x"),
+        (2 * MINUTE, "1x"),
+        (4 * MINUTE, "2x"),
+        (8 * MINUTE, "4x"),
+        (16 * MINUTE, "8x"),
+        (48 * MINUTE, "24x"),
+    ] {
+        let c = cfg(4, vis);
+        let r = run(
+            &c,
+            &jobs,
+            DurationModel {
+                mean_s: 120.0,
+                cv: 0.3,
+                stall_prob: 0.05,
+                ..Default::default()
+            },
+            RunOptions {
+                seed: 41,
+                max_sim_time: 3 * 24 * HOUR,
+                ..Default::default()
+            },
+        );
+        table.row(&[
+            fmt_dur(vis),
+            label.to_string(),
+            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+            r.stats.duplicates.to_string(),
+            format!("{:.1}", r.duplicate_fraction() * 100.0),
+            format!("{:.4}", r.cost.ec2_usd),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: short -> duplicate-work waste; long -> stall recovery dominates makespan; sweet spot ~1-2x mean (paper: 'slightly longer than the average').");
+}
+
+/// T5 — interruption tolerance vs market volatility.
+fn t5() {
+    println!("\n== T5: spot interruption tolerance (384 jobs, tight 10% bid headroom) ==");
+    let jobs = JobSpec::plate("P", 96, 4, vec![]);
+    let mut table = Table::new(&[
+        "volatility", "interruptions", "completed", "duplicates", "lost-to-death", "makespan",
+    ]);
+    for (name, vol) in [
+        ("low", Volatility::Low),
+        ("medium", Volatility::Medium),
+        ("high", Volatility::High),
+    ] {
+        let mut c = cfg(6, 10 * MINUTE);
+        c.machine_price = 0.192 * 0.30 * 1.10;
+        let r = run(
+            &c,
+            &jobs,
+            model(240.0),
+            RunOptions {
+                volatility: vol,
+                seed: 51,
+                max_sim_time: 7 * 24 * HOUR,
+                ..Default::default()
+            },
+        );
+        table.row(&[
+            name.to_string(),
+            r.stats.interruptions.to_string(),
+            format!("{}/{}", r.stats.completed, r.jobs_submitted),
+            r.stats.duplicates.to_string(),
+            r.stats.lost_to_death.to_string(),
+            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: completion stays 100% at every rate (SQS redelivery); waste and makespan grow with volatility.");
+}
+
+/// T6 — CHECK_IF_DONE resume.
+fn t6() {
+    println!("\n== T6: resume with CHECK_IF_DONE after a 50% crash (192 jobs) ==");
+    use ds_rs::coordinator::run::Simulation;
+    let c = cfg(6, 10 * MINUTE);
+    let jobs = JobSpec::plate("P", 96, 2, vec![]);
+    // Phase 1: interrupted run.
+    let mut sim1 = Simulation::new(
+        c.clone(),
+        RunOptions {
+            max_sim_time: 12 * MINUTE,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    sim1.submit(&jobs).unwrap();
+    sim1.start(&fleet_file()).unwrap();
+    let mut ex = ModeledExecutor {
+        model: model(120.0),
+        ..Default::default()
+    };
+    let r1 = sim1.run(&mut ex).unwrap();
+    let done_keys = sim1.acct.s3.list_prefix("ds-data", "output/");
+    println!(
+        "phase 1 (killed at 12 min): {}/{} jobs done, EC2 ${:.4}",
+        r1.stats.completed, r1.jobs_submitted, r1.cost.ec2_usd
+    );
+    let mut table = Table::new(&["resume mode", "reran", "skipped", "makespan", "EC2 $"]);
+    for enabled in [true, false] {
+        let mut c2 = c.clone();
+        c2.check_if_done.enabled = enabled;
+        let mut sim2 = Simulation::new(c2, RunOptions::default()).unwrap();
+        sim2.stage(|acct| {
+            for (k, sz) in &done_keys {
+                acct.s3
+                    .put("ds-data", k, ds_rs::aws::s3::Body::Synthetic { size: *sz }, 0)
+                    .unwrap();
+            }
+        });
+        sim2.submit(&jobs).unwrap();
+        sim2.start(&fleet_file()).unwrap();
+        let mut ex2 = ModeledExecutor {
+            model: model(120.0),
+            ..Default::default()
+        };
+        let r2 = sim2.run(&mut ex2).unwrap();
+        table.row(&[
+            if enabled { "CHECK_IF_DONE=true" } else { "CHECK_IF_DONE=false" }.to_string(),
+            r2.stats.completed.to_string(),
+            r2.stats.skipped_done.to_string(),
+            r2.makespan().map(fmt_dur).unwrap_or("-".into()),
+            format!("{:.4}", r2.cost.ec2_usd),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: resume reruns only the missing fraction; disabled reruns (and pays for) everything.");
+}
+
+/// T7 — dead-letter queue bounds poison damage.
+fn t7() {
+    println!("\n== T7: poison jobs with and without an effective DLQ (1% poison) ==");
+    let mut jobs = JobSpec::plate("P", 96, 2, vec![]); // 192 jobs
+    for i in [17usize, 103] {
+        jobs.groups[i].push(("poison".into(), Value::Bool(true)));
+    }
+    let mut table = Table::new(&[
+        "max_receive", "completed", "dead-lettered", "cleaned up", "ended", "EC2 $",
+    ]);
+    for &(max_recv, label) in &[(5u32, "5 (DLQ works)"), (100_000, "∞ (no DLQ)")] {
+        let mut c = cfg(4, 3 * MINUTE);
+        c.max_receive_count = max_recv;
+        let r = run(
+            &c,
+            &jobs,
+            model(60.0),
+            RunOptions {
+                seed: 71,
+                max_sim_time: 24 * HOUR,
+                ..Default::default()
+            },
+        );
+        table.row(&[
+            label.to_string(),
+            format!("{}/{}", r.stats.completed, r.jobs_submitted),
+            r.stats.dead_lettered.to_string(),
+            r.cleaned_up.to_string(),
+            fmt_dur(r.ended_at),
+            format!("{:.4}", r.cost.ec2_usd),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: with the DLQ the run ends shortly after the good work; without it the cluster idles+churns until the cap.");
+}
+
+/// T8 — crash reaper value.
+fn t8() {
+    println!("\n== T8: instance crashes vs the CPU<1%/15min alarm reaper (384 jobs) ==");
+    let jobs = JobSpec::plate("P", 96, 4, vec![]);
+    let mut table = Table::new(&[
+        "crash MTTF", "crashes", "alarm-reaped", "completed", "makespan", "EC2 $",
+    ]);
+    for &(mttf, label) in &[
+        (None, "none"),
+        (Some(120 * MINUTE), "2h"),
+        (Some(45 * MINUTE), "45m"),
+        (Some(20 * MINUTE), "20m"),
+    ] {
+        let c = cfg(6, 10 * MINUTE);
+        let r = run(
+            &c,
+            &jobs,
+            model(150.0),
+            RunOptions {
+                seed: 81,
+                crash_mttf: mttf,
+                max_sim_time: 3 * 24 * HOUR,
+                ..Default::default()
+            },
+        );
+        table.row(&[
+            label.to_string(),
+            r.stats.crashes.to_string(),
+            r.stats.alarm_terminations.to_string(),
+            format!("{}/{}", r.stats.completed, r.jobs_submitted),
+            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+            format!("{:.4}", r.cost.ec2_usd),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: every row completes 100%; makespan degrades gracefully because reaped machines are replaced.");
+}
+
+/// T9 — ECS placement mismatch matrix.
+fn t9() {
+    println!("\n== T9: ECS placement: containers placed per machine type ==");
+    use ds_rs::aws::ecs::{Ecs, Service, TaskDefinition};
+    let shapes = [
+        ("1 vCPU/2GB", 1024u32, 2_048u64),
+        ("2 vCPU/7.5GB", 2048, 7_680),
+        ("4 vCPU/15GB", 4096, 15_360),
+        ("8 vCPU/30GB", 8192, 30_720),
+    ];
+    let machines = ["m5.large", "m5.xlarge", "m5.2xlarge", "m5.4xlarge"];
+    let mut table = Table::new(&["container \\ machine", "m5.large", "m5.xlarge", "m5.2xlarge", "m5.4xlarge"]);
+    for (label, cpu, mem) in shapes {
+        let mut row = vec![label.to_string()];
+        for m in machines {
+            let ty = ds_rs::aws::ec2::instance_type(m).unwrap();
+            let mut ecs = Ecs::new();
+            ecs.register_task_definition(TaskDefinition {
+                family: "app".into(),
+                cpu_shares: cpu,
+                memory_mb: mem,
+                env: vec![],
+            });
+            ecs.create_service(Service {
+                name: "svc".into(),
+                cluster: "default".into(),
+                task_family: "app".into(),
+                desired_count: 100,
+            })
+            .unwrap();
+            ecs.register_instance("default", 1, ty.vcpus, ty.memory_mb).unwrap();
+            row.push(ecs.place_tasks(0).len().to_string());
+        }
+        table.row(&row);
+    }
+    println!("{}", table.render());
+    println!("shape check: 0 where the Docker exceeds the machine; over-large machines get over-packed (paper's caveat).");
+}
+
+/// T10 — bid headroom vs fleet fulfillment latency.
+fn t10() {
+    println!("\n== T10: bid headroom vs time-to-ready (50-machine fleet, quiet market) ==");
+    use ds_rs::aws::ec2::{Ec2, FleetEvent, SpotFleetSpec, SpotMarket};
+    use ds_rs::sim::SimRng;
+    let base = 0.096 * 0.31;
+    let mut table = Table::new(&["bid/base", "mean ready", "p95 ready", "unfulfilled"]);
+    for &mult in &[1.02, 1.1, 1.25, 1.5, 2.0, 3.0] {
+        let mut means = Vec::new();
+        let mut unfulfilled = 0u32;
+        for seed in 0..5u64 {
+            let mut ec2 = Ec2::new(
+                SpotMarket::new(900 + seed, Volatility::Low),
+                SimRng::new(seed),
+            );
+            ec2.request_spot_fleet(SpotFleetSpec {
+                target_capacity: 50,
+                bid_hourly: base * mult,
+                allowed_types: vec!["m5.large".into()],
+            });
+            for ev in ec2.evaluate_fleets(0) {
+                match ev {
+                    FleetEvent::InstanceRequested { ready_at, .. } => {
+                        means.push(ready_at as f64)
+                    }
+                    FleetEvent::CapacityUnavailable { missing, .. } => unfulfilled += missing,
+                    _ => {}
+                }
+            }
+        }
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = means.iter().sum::<f64>() / means.len().max(1) as f64;
+        let p95 = means.get((means.len() as f64 * 0.95) as usize).copied().unwrap_or(0.0);
+        table.row(&[
+            format!("{mult:.2}"),
+            fmt_dur(mean as SimTime),
+            fmt_dur(p95 as SimTime),
+            unfulfilled.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: 'a couple of minutes to several hours' — tight bids wait, comfortable bids boot in ~1-2 min.");
+}
+
+/// T11 (ablation) — how to slice a machine: TASKS_PER_MACHINE x
+/// DOCKER_CORES at constant total parallelism per machine.
+fn t11() {
+    println!("\n== T11 (ablation): tasks/machine x docker cores (4 vCPU machines, 384 jobs) ==");
+    let jobs = JobSpec::plate("P", 96, 4, vec![]);
+    let mut table = Table::new(&[
+        "tasks x cores", "cpu/ctr", "mem/ctr MB", "makespan", "EC2 $", "notes",
+    ]);
+    for &(tasks, cores) in &[(1u32, 4u32), (2, 2), (4, 1), (2, 4), (1, 1)] {
+        let cpu = 4096 / tasks;
+        let mem = 15_000 / u64::from(tasks);
+        let c = AppConfig {
+            cluster_machines: 8,
+            tasks_per_machine: tasks,
+            docker_cores: cores,
+            cpu_shares: cpu,
+            memory_mb: mem,
+            machine_types: vec!["m5.xlarge".into()],
+            machine_price: 0.10,
+            sqs_message_visibility: 10 * MINUTE,
+            ..Default::default()
+        };
+        let r = run(&c, &jobs, model(90.0), RunOptions { seed: 61, ..Default::default() });
+        let note = if tasks * cores > 4 {
+            "oversubscribed"
+        } else if tasks * cores < 4 {
+            "undersubscribed"
+        } else {
+            "matched"
+        };
+        table.row(&[
+            format!("{tasks} x {cores}"),
+            cpu.to_string(),
+            mem.to_string(),
+            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+            format!("{:.4}", r.cost.ec2_usd),
+            note.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape check: any slicing that matches total cores performs alike; undersubscription wastes the machine (cost up, speed down).");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let all = args.is_empty() || args.iter().any(|a| a == "all");
+    let want = |name: &str| all || args.iter().any(|a| a == name);
+    if want("t1") {
+        t1();
+    }
+    if want("t2") {
+        t2();
+    }
+    if want("t3") {
+        t3();
+    }
+    if want("t4") {
+        t4();
+    }
+    if want("t5") {
+        t5();
+    }
+    if want("t6") {
+        t6();
+    }
+    if want("t7") {
+        t7();
+    }
+    if want("t8") {
+        t8();
+    }
+    if want("t9") {
+        t9();
+    }
+    if want("t10") {
+        t10();
+    }
+    if want("t11") {
+        t11();
+    }
+}

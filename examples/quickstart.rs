@@ -1,0 +1,126 @@
+//! Quickstart — Figure 1 end to end (experiment F1).
+//!
+//! The paper's whole pitch in one binary: edit two human-readable files
+//! (we build them in code and print them), then run four single-line
+//! commands that coordinate five AWS services.  Everything below runs on
+//! the simulated account; swap in `--pjrt` via the `ds` CLI for real
+//! compute.
+//!
+//!     cargo run --release --example quickstart
+
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{RunOptions, Simulation};
+use ds_rs::sim::clock::fmt_dur;
+use ds_rs::sim::MINUTE;
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn main() -> anyhow::Result<()> {
+    println!("══════════════════════════════════════════════════════════════");
+    println!(" Distributed-Something quickstart: 96-well plate, 4 sites/well");
+    println!("══════════════════════════════════════════════════════════════\n");
+
+    // ---- The two files you edit per run (paper: "two human-readable
+    // files must be edited to configure individual DS runs") ------------
+    let cfg = AppConfig {
+        app_name: "NuclearSegmentation_Drosophila".into(),
+        workload_id: "cp_256_b1".into(),
+        cluster_machines: 24,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into(), "c5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 8 * MINUTE,
+        sqs_queue_name: "nucseg-queue".into(),
+        sqs_dead_letter_queue: "nucseg-dlq".into(),
+        log_group_name: "nucseg".into(),
+        ..Default::default()
+    };
+    println!("── Config file (config.py analog) ──");
+    println!("{}\n", cfg.to_json().pretty());
+
+    let jobs = JobSpec::plate("BR00117010", 96, 4, vec![]);
+    println!(
+        "── Job file: plate BR00117010, {} groups (96 wells x 4 sites) ──\n",
+        jobs.groups.len()
+    );
+
+    // The Fleet file: account-specific, created once.
+    let fleet_file = FleetSpec::template("us-east-1").unwrap();
+
+    // ---- Command 1: python run.py setup --------------------------------
+    println!("$ ds setup          # task definition + SQS queue/DLQ + ECS service");
+    let mut sim = Simulation::new(cfg.clone(), RunOptions::default())?;
+    println!("  ✓ task definition '{}' registered", cfg.task_family());
+    println!(
+        "  ✓ queue '{}' (+ DLQ '{}') created",
+        cfg.sqs_queue_name, cfg.sqs_dead_letter_queue
+    );
+    println!("  ✓ service '{}' wants {} Dockers\n", cfg.service_name(),
+        cfg.cluster_machines * cfg.tasks_per_machine);
+
+    // ---- Command 2: python run.py submitJob ----------------------------
+    println!("$ ds submit-job     # one SQS message per group");
+    let n = sim.submit(&jobs)?;
+    println!("  ✓ {n} jobs enqueued\n");
+
+    // ---- Command 3: python run.py startCluster -------------------------
+    println!("$ ds start-cluster  # spot fleet request + log groups");
+    sim.start(&fleet_file)?;
+    println!(
+        "  ✓ spot fleet requested: {} machines from {:?} at ≤${}/h",
+        cfg.cluster_machines, cfg.machine_types, cfg.machine_price
+    );
+    println!("  ✓ log groups '{}' and '{}' created\n", cfg.log_group_name,
+        cfg.instance_log_group());
+
+    // ---- Command 4: python run.py monitor (runs inside the event loop) -
+    println!("$ ds monitor        # poll queue, reap alarms, clean up at zero\n");
+    println!("── event loop running (simulated time) ──");
+    let mut executor = ModeledExecutor {
+        model: DurationModel {
+            mean_s: 90.0, // a typical CellProfiler site takes ~1.5 min
+            cv: 0.3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let report = sim.run(&mut executor)?;
+
+    // ---- What happened --------------------------------------------------
+    println!("{}", report.summary());
+    println!("Figure-1 checklist:");
+    println!(
+        "  S3         {} output objects + {} exported log objects",
+        sim.acct.s3.list_prefix("ds-data", "output/").len(),
+        sim.acct.s3.list_prefix("ds-data", "exportedlogs/").len()
+    );
+    println!(
+        "  SQS        queue deleted: {}; DLQ empty: {}",
+        !sim.acct.sqs.queue_exists(&cfg.sqs_queue_name),
+        sim.acct
+            .sqs
+            .approximate_counts(&cfg.sqs_dead_letter_queue, report.ended_at)
+            == (0, 0)
+    );
+    println!(
+        "  EC2        {} instances launched, all terminated: {}",
+        report.stats.instances_launched,
+        sim.acct.ec2.all_instances().iter().all(|i| !i.is_active())
+    );
+    println!(
+        "  ECS        clean (no service, no task def, no containers): {}",
+        sim.acct.ecs.is_clean(&cfg.service_name(), &cfg.task_family())
+    );
+    println!(
+        "  CloudWatch {} metric datapoints published, alarms left: {}",
+        sim.acct.metrics.put_count(),
+        sim.acct.alarms.len()
+    );
+    println!(
+        "\nDone: {} jobs in {} of simulated time for ${:.2}.",
+        report.stats.completed,
+        fmt_dur(report.drained_at.unwrap_or(report.ended_at)),
+        report.cost.total_usd()
+    );
+    Ok(())
+}

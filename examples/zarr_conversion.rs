@@ -1,0 +1,91 @@
+//! Distributed-OmeZarrCreator scenario: convert a directory of images
+//! into chunked multiscale zarr-like stores, with real PJRT pyramids.
+//!
+//!     make artifacts && cargo run --release --example zarr_conversion
+
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{RunOptions, Simulation};
+use ds_rs::json::Value;
+use ds_rs::runtime::PjrtRuntime;
+use ds_rs::sim::MINUTE;
+use ds_rs::workloads::{zarr, PjrtExecutor};
+
+const IMAGES: usize = 24;
+const WORKLOAD: &str = "pyramid_256_l4";
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    println!("== Distributed-OmeZarrCreator: {IMAGES} images -> .ome.zarr-shaped stores ==\n");
+
+    // Each store: 22 chunks + 4 .zarray + 1 .zattrs = 27 objects; that is
+    // exactly what CHECK_IF_DONE should expect.
+    let levels = zarr::pyramid_levels(256, 256, 4);
+    let expected = zarr::expected_objects(&levels) as u32;
+    println!("per-store objects: {expected} (chunks {} + metadata {})",
+        levels.iter().map(zarr::chunk_count).sum::<usize>(), levels.len() + 1);
+
+    let mut cfg = AppConfig {
+        app_name: "OmeZarr".into(),
+        workload_id: WORKLOAD.into(),
+        cluster_machines: 4,
+        tasks_per_machine: 2,
+        docker_cores: 1,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 10 * MINUTE,
+        sqs_queue_name: "zarr-q".into(),
+        sqs_dead_letter_queue: "zarr-dlq".into(),
+        ..Default::default()
+    };
+    cfg.check_if_done.expected_number_files = expected;
+
+    let jobs = JobSpec {
+        shared: vec![
+            ("output_prefix".into(), Value::from("converted")),
+            ("output_bucket".into(), Value::from("ds-data")),
+        ],
+        groups: (0..IMAGES)
+            .map(|i| vec![("Metadata_Image".to_string(), Value::Str(format!("img{i:03}")))])
+            .collect(),
+    };
+
+    let mut sim = Simulation::new(cfg.clone(), RunOptions::default())?;
+    sim.submit(&jobs)?;
+    sim.start(&FleetSpec::template("us-east-1").unwrap())?;
+
+    let runtime = PjrtRuntime::new(&artifacts)?;
+    let mut executor = PjrtExecutor::new(runtime, WORKLOAD)?;
+    executor.time_scale = 1_000.0;
+    let report = sim.run(&mut executor)?;
+
+    println!("{}", report.summary());
+    assert_eq!(report.stats.completed, IMAGES as u64);
+
+    // Verify every store is complete and FAIR-shaped.
+    let mut total_objects = 0;
+    for i in 0..IMAGES {
+        let store = format!("converted/img{i:03}/image.zarr");
+        let objs = sim.acct.s3.list_prefix("ds-data", &store);
+        assert_eq!(objs.len(), expected as usize, "{store}");
+        total_objects += objs.len();
+    }
+    // Multiscales metadata parses and lists 4 datasets.
+    let attrs = sim
+        .acct
+        .s3
+        .get("ds-data", "converted/img000/image.zarr/.zattrs")?;
+    let v = ds_rs::json::parse(std::str::from_utf8(attrs.body.bytes().unwrap())?)?;
+    let datasets = v.get("multiscales").unwrap().as_arr().unwrap()[0]
+        .get("datasets")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .len();
+    println!(
+        "\nstores: {IMAGES} complete ({total_objects} objects, {datasets} scale levels each)"
+    );
+    println!(
+        "rerunning the same Job file would skip everything via CHECK_IF_DONE (EXPECTED_NUMBER_FILES={expected})."
+    );
+    Ok(())
+}

@@ -1,0 +1,159 @@
+"""AOT: lower every workload variant to HLO text + a manifest for Rust.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``); the Rust binary is fully
+self-contained afterwards.  Python is never on the request path.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--only NAME ...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+__all__ = ["WORKLOADS", "lower_to_hlo_text", "build", "WorkloadSpec"]
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """One AOT artifact: a jitted function at a fixed input shape."""
+
+    name: str
+    kind: str  # "cellprofiler" | "stitch" | "pyramid"
+    fn: Callable
+    input_shapes: Tuple[Tuple[int, ...], ...]
+    output_len: int
+    params: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def filename(self) -> str:
+        return f"{self.name}.hlo.txt"
+
+
+def _cp(name: str, batch: int, size: int, sigma: float = 2.0, radius: int = 6):
+    return WorkloadSpec(
+        name=name,
+        kind="cellprofiler",
+        fn=lambda x: model.cellprofiler_pipeline(x, sigma=sigma, radius=radius),
+        input_shapes=((batch, size, size),),
+        output_len=batch * model.CP_NUM_FEATURES,
+        params={"batch": batch, "size": size, "sigma": sigma, "radius": radius},
+    )
+
+
+def _stitch(name: str, grid: int, tile: int, overlap: int):
+    return WorkloadSpec(
+        name=name,
+        kind="stitch",
+        fn=lambda x: model.stitch_pipeline(x, grid=grid, overlap=overlap),
+        input_shapes=((grid * grid, tile, tile),),
+        output_len=model.stitch_output_len(grid, tile, overlap),
+        params={"grid": grid, "tile": tile, "overlap": overlap},
+    )
+
+
+def _pyramid(name: str, size: int, levels: int):
+    return WorkloadSpec(
+        name=name,
+        kind="pyramid",
+        fn=lambda x: model.pyramid_pipeline(x, levels=levels),
+        input_shapes=((size, size),),
+        output_len=model.pyramid_output_len(size, size, levels),
+        params={"size": size, "levels": levels},
+    )
+
+
+#: Every artifact the Rust runtime can load.  Names are stable public API:
+#: the Config file's DOCKERHUB_TAG analog ("workload id") points at one.
+WORKLOADS: List[WorkloadSpec] = [
+    _cp("cp_128_b1", batch=1, size=128),
+    _cp("cp_256_b1", batch=1, size=256),
+    _cp("cp_256_b4", batch=4, size=256),
+    _stitch("stitch_g2_t128_o16", grid=2, tile=128, overlap=16),
+    _stitch("stitch_g3_t128_o16", grid=3, tile=128, overlap=16),
+    _pyramid("pyramid_256_l4", size=256, levels=4),
+    _pyramid("pyramid_512_l5", size=512, levels=5),
+]
+
+
+def lower_to_hlo_text(fn: Callable, input_shapes: Sequence[Tuple[int, ...]]) -> str:
+    """jit -> lower -> stablehlo -> XlaComputation -> HLO text."""
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in input_shapes]
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _source_digest() -> str:
+    """Digest of the compile package: manifest invalidation key."""
+    here = os.path.dirname(__file__)
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def build(out_dir: str, only: Sequence[str] = ()) -> List[str]:
+    """Lower all (or ``only``) workloads into ``out_dir``; write manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+    manifest = {"source_digest": _source_digest(), "workloads": []}
+    for spec in WORKLOADS:
+        if only and spec.name not in only:
+            continue
+        path = os.path.join(out_dir, spec.filename)
+        text = lower_to_hlo_text(spec.fn, spec.input_shapes)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        manifest["workloads"].append(
+            {
+                "name": spec.name,
+                "kind": spec.kind,
+                "file": spec.filename,
+                "input_shapes": [list(s) for s in spec.input_shapes],
+                "dtype": "f32",
+                "output_len": spec.output_len,
+                "params": spec.params,
+            }
+        )
+        print(f"  lowered {spec.name:24s} -> {path} ({len(text)} chars)")
+    if not only:
+        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        print(f"  wrote manifest ({len(manifest['workloads'])} workloads)")
+    return written
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--only", nargs="*", default=[])
+    args = p.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime).
+
+Every kernel runs with ``interpret=True`` so its lowering is plain HLO the
+CPU PJRT plugin can execute (real-TPU Mosaic lowering is compile-only on
+this image — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .downsample import BLOCK_ROWS as DOWNSAMPLE_BLOCK_ROWS
+from .downsample import downsample2x
+from .reduce_stats import BLOCK_ROWS as STATS_BLOCK_ROWS
+from .reduce_stats import STATS_WIDTH, masked_stats
+from .sep_conv2d import gaussian_taps, sep_conv2d
+
+__all__ = [
+    "downsample2x",
+    "masked_stats",
+    "sep_conv2d",
+    "gaussian_taps",
+    "STATS_WIDTH",
+    "DOWNSAMPLE_BLOCK_ROWS",
+    "STATS_BLOCK_ROWS",
+]

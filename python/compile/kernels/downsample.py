@@ -1,0 +1,65 @@
+"""2x2 average-pool downsample as a Pallas kernel.
+
+The hot spot of the OmeZarrCreator-like pyramid pipeline: each pyramid
+level halves both spatial dims by averaging disjoint 2x2 windows.  No halo
+is needed, so the grid tiles the batch dimension and row blocks directly:
+input block (1, 2*bh, W) -> output block (1, bh, W//2).  Row-block tiling
+keeps the VMEM-resident block at 2*bh*W*4 bytes regardless of image height
+(bh=64 -> 0.5 MB for W=1024), demonstrating the HBM<->VMEM schedule the
+paper's per-container workload would express with threads (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["downsample2x", "BLOCK_ROWS"]
+
+# Output rows per grid step.  Heights are required to be multiples of this
+# (the pyramid pipeline only feeds power-of-two images >= 2*BLOCK_ROWS) —
+# smaller inputs fall back to a single full-height block.
+BLOCK_ROWS = 64
+
+
+def _kernel(x_ref, o_ref, *, bh: int, wo: int):
+    """x_ref: (1, 2*bh, 2*wo) -> o_ref: (1, bh, wo) via 2x2 mean."""
+    x = x_ref[0]
+    a = x[0::2, 0::2]
+    b = x[0::2, 1::2]
+    c = x[1::2, 0::2]
+    d = x[1::2, 1::2]
+    o_ref[0] = (a + b + c + d) * jnp.float32(0.25)
+
+
+@jax.jit
+def downsample2x(x: jax.Array) -> jax.Array:
+    """Average-pool ``x`` by 2 in both spatial dims.
+
+    Args:
+      x: (B, H, W) or (H, W) float32 with H, W even.
+
+    Returns:
+      (B, H//2, W//2) (or (H//2, W//2)) float32.
+    """
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    b, h, w = x.shape
+    if h % 2 or w % 2:
+        raise ValueError(f"downsample2x needs even dims, got {(h, w)}")
+    ho, wo = h // 2, w // 2
+    bh = BLOCK_ROWS if ho % BLOCK_ROWS == 0 and ho >= BLOCK_ROWS else ho
+    grid = (b, ho // bh)
+
+    out = pl.pallas_call(
+        partial(_kernel, bh=bh, wo=wo),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 2 * bh, w), lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, bh, wo), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ho, wo), jnp.float32),
+        interpret=True,
+    )(x)
+    return out[0] if squeeze else out

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contracts: pytest asserts allclose between each
+kernel and its oracle across a hypothesis sweep of shapes/params (see
+python/tests/test_kernels.py).  Keep these boring and obviously right.
+"""
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sep_conv2d_ref", "downsample2x_ref", "masked_stats_ref"]
+
+
+def sep_conv2d_ref(x: jax.Array, taps: jax.Array, *, radius: int) -> jax.Array:
+    """Edge-replicate separable conv via explicit shift-and-add."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    b, h, w = x.shape
+    xp = jnp.pad(x, ((0, 0), (radius, radius), (radius, radius)), mode="edge")
+    taps = taps.astype(jnp.float32)
+    rows = jnp.zeros((b, h, w + 2 * radius), jnp.float32)
+    for k in range(2 * radius + 1):
+        rows = rows + taps[k] * xp[:, k : k + h, :]
+    out = jnp.zeros((b, h, w), jnp.float32)
+    for k in range(2 * radius + 1):
+        out = out + taps[k] * rows[:, :, k : k + w]
+    return out[0] if squeeze else out
+
+
+def downsample2x_ref(x: jax.Array) -> jax.Array:
+    """2x2 mean pool via reshape."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    b, h, w = x.shape
+    out = x.reshape(b, h // 2, 2, w // 2, 2).mean(axis=(2, 4))
+    return out[0] if squeeze else out
+
+
+def masked_stats_ref(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """[sum, sum_sq, count, max, min] of masked pixels, per batch entry."""
+    squeeze = x.ndim == 2
+    if squeeze:
+        x, mask = x[None], mask[None]
+    m = mask.astype(jnp.float32)
+    s = jnp.sum(x * m, axis=(1, 2))
+    s2 = jnp.sum(x * x * m, axis=(1, 2))
+    c = jnp.sum(m, axis=(1, 2))
+    mx = jnp.max(jnp.where(m > 0, x, jnp.float32(-3.4e38)), axis=(1, 2))
+    mn = jnp.min(jnp.where(m > 0, x, jnp.float32(3.4e38)), axis=(1, 2))
+    out = jnp.stack([s, s2, c, mx, mn], axis=1)
+    return out[0] if squeeze else out

@@ -1,0 +1,188 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes and kernel parameters; every property asserts
+allclose against ref.py.  Tolerances are f32-accumulation-order loose.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(shape, seed=0, lo=0.0, hi=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# sep_conv2d
+# ---------------------------------------------------------------------------
+
+
+class TestSepConv2d:
+    def test_identity_taps(self):
+        x = rand((32, 48))
+        taps = jnp.array([0.0, 1.0, 0.0], jnp.float32)
+        out = kernels.sep_conv2d(x, taps, radius=1)
+        np.testing.assert_allclose(out, x, rtol=RTOL, atol=ATOL)
+
+    def test_constant_image_invariant(self):
+        x = jnp.full((64, 64), 0.7, jnp.float32)
+        taps = kernels.gaussian_taps(2.0, 5)
+        out = kernels.sep_conv2d(x, taps, radius=5)
+        np.testing.assert_allclose(out, x, rtol=1e-4, atol=1e-4)
+
+    def test_matches_ref_single(self):
+        x = rand((96, 128), seed=1)
+        taps = kernels.gaussian_taps(1.5, 4)
+        out = kernels.sep_conv2d(x, taps, radius=4)
+        exp = ref.sep_conv2d_ref(x, taps, radius=4)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_matches_ref_batched(self):
+        x = rand((3, 64, 80), seed=2)
+        taps = kernels.gaussian_taps(2.0, 6)
+        out = kernels.sep_conv2d(x, taps, radius=6)
+        exp = ref.sep_conv2d_ref(x, taps, radius=6)
+        assert out.shape == (3, 64, 80)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_taps_normalized(self):
+        taps = kernels.gaussian_taps(3.0, 9)
+        assert taps.shape == (19,)
+        np.testing.assert_allclose(float(jnp.sum(taps)), 1.0, rtol=1e-6)
+
+    def test_smoothing_reduces_variance(self):
+        x = rand((128, 128), seed=3)
+        taps = kernels.gaussian_taps(3.0, 8)
+        out = kernels.sep_conv2d(x, taps, radius=8)
+        assert float(jnp.std(out)) < float(jnp.std(x))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.integers(8, 96),
+        w=st.integers(8, 96),
+        b=st.integers(1, 4),
+        radius=st.integers(1, 7),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_matches_ref(self, h, w, b, radius, seed):
+        x = rand((b, h, w), seed=seed)
+        taps = kernels.gaussian_taps(max(radius / 2.0, 0.5), radius)
+        out = kernels.sep_conv2d(x, taps, radius=radius)
+        exp = ref.sep_conv2d_ref(x, taps, radius=radius)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# downsample2x
+# ---------------------------------------------------------------------------
+
+
+class TestDownsample2x:
+    def test_exact_small(self):
+        x = jnp.arange(16, dtype=jnp.float32).reshape(4, 4)
+        out = kernels.downsample2x(x)
+        exp = ref.downsample2x_ref(x)
+        np.testing.assert_allclose(out, exp, rtol=0, atol=0)
+
+    def test_blocked_path(self):
+        # height divisible by BLOCK_ROWS*2 -> multi-block grid exercised
+        x = rand((1, 4 * kernels.DOWNSAMPLE_BLOCK_ROWS, 256), seed=5)
+        out = kernels.downsample2x(x)
+        exp = ref.downsample2x_ref(x)
+        assert out.shape == (1, 2 * kernels.DOWNSAMPLE_BLOCK_ROWS, 128)
+        np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+    def test_odd_dims_rejected(self):
+        with pytest.raises(ValueError):
+            kernels.downsample2x(jnp.zeros((5, 4), jnp.float32))
+
+    def test_mean_preserved(self):
+        x = rand((64, 64), seed=6)
+        out = kernels.downsample2x(x)
+        np.testing.assert_allclose(float(jnp.mean(out)), float(jnp.mean(x)), rtol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h2=st.integers(1, 64),
+        w2=st.integers(1, 64),
+        b=st.integers(1, 3),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_matches_ref(self, h2, w2, b, seed):
+        x = rand((b, 2 * h2, 2 * w2), seed=seed)
+        out = kernels.downsample2x(x)
+        exp = ref.downsample2x_ref(x)
+        np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# masked_stats
+# ---------------------------------------------------------------------------
+
+
+class TestMaskedStats:
+    def test_full_mask(self):
+        x = rand((32, 32), seed=7)
+        m = jnp.ones_like(x)
+        out = kernels.masked_stats(x, m)
+        np.testing.assert_allclose(float(out[0]), float(jnp.sum(x)), rtol=1e-5)
+        np.testing.assert_allclose(float(out[2]), 32 * 32, rtol=0)
+        np.testing.assert_allclose(float(out[3]), float(jnp.max(x)), rtol=1e-6)
+        np.testing.assert_allclose(float(out[4]), float(jnp.min(x)), rtol=1e-6)
+
+    def test_matches_ref(self):
+        x = rand((128, 96), seed=8)
+        m = (rand((128, 96), seed=9) > 0.5).astype(jnp.float32)
+        out = kernels.masked_stats(x, m)
+        exp = ref.masked_stats_ref(x, m)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    def test_blocked_accumulation(self):
+        # multi row-block grid: H = 4 * BLOCK_ROWS
+        h = 4 * kernels.STATS_BLOCK_ROWS
+        x = rand((h, 64), seed=10)
+        m = (rand((h, 64), seed=11) > 0.3).astype(jnp.float32)
+        out = kernels.masked_stats(x, m)
+        exp = ref.masked_stats_ref(x, m)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    def test_batched(self):
+        x = rand((4, 64, 64), seed=12)
+        m = (rand((4, 64, 64), seed=13) > 0.6).astype(jnp.float32)
+        out = kernels.masked_stats(x, m)
+        exp = ref.masked_stats_ref(x, m)
+        assert out.shape == (4, kernels.STATS_WIDTH)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    def test_empty_mask_count_zero(self):
+        x = rand((32, 32), seed=14)
+        out = kernels.masked_stats(x, jnp.zeros_like(x))
+        assert float(out[2]) == 0.0
+        assert float(out[0]) == 0.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.integers(4, 128),
+        w=st.integers(4, 96),
+        b=st.integers(1, 3),
+        thresh=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_matches_ref(self, h, w, b, thresh, seed):
+        x = rand((b, h, w), seed=seed)
+        m = (rand((b, h, w), seed=seed + 1) > thresh).astype(jnp.float32)
+        out = kernels.masked_stats(x, m)
+        exp = ref.masked_stats_ref(x, m)
+        # sentinel max/min for empty masks are equal by construction
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)

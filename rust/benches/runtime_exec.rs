@@ -1,0 +1,63 @@
+//! PJRT workload latency bench (experiment K1): per-artifact compile and
+//! execute timing through the real runtime.  Requires `make artifacts`.
+//!
+//!     cargo bench --bench runtime_exec
+
+use std::time::Instant;
+
+use ds_rs::runtime::PjrtRuntime;
+use ds_rs::sim::SimRng;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(dir).unwrap();
+    let names: Vec<String> = rt.manifest().names().iter().map(|s| s.to_string()).collect();
+    println!("== PJRT workload latency (N=50 runs each) ==\n");
+    println!(
+        "{:<24} {:>10} {:>12} {:>10} {:>10} {:>10} {:>12}",
+        "workload", "in f32s", "compile ms", "mean ms", "p50 ms", "p95 ms", "Mpixel/s"
+    );
+    let mut rng = SimRng::new(1);
+    for name in names {
+        let info = rt.info(&name).unwrap().clone();
+        let inputs: Vec<Vec<f32>> = info
+            .input_lens()
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.f64() as f32).collect())
+            .collect();
+        // First call compiles.
+        let t0 = Instant::now();
+        rt.ensure_compiled(&name).unwrap();
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // Warmup.
+        for _ in 0..3 {
+            let _ = rt.execute(&name, &inputs).unwrap();
+        }
+        let mut times: Vec<f64> = (0..50)
+            .map(|_| rt.execute(&name, &inputs).unwrap().1)
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let pixels: usize = info.input_lens().iter().sum();
+        println!(
+            "{:<24} {:>10} {:>12.0} {:>10.2} {:>10.2} {:>10.2} {:>12.1}",
+            name,
+            pixels,
+            compile_ms,
+            mean,
+            percentile(&times, 0.5),
+            percentile(&times, 0.95),
+            pixels as f64 / (mean * 1e3), // Mpixel/s = pixels / (ms*1000)
+        );
+    }
+    println!("\nNote: interpret-mode Pallas lowers to plain HLO; these CPU timings measure the artifact as shipped, not TPU performance (see DESIGN.md §Perf).");
+}

@@ -1,0 +1,66 @@
+//! End-to-end simulator throughput bench (backs experiment T1 and the L3
+//! perf targets): how fast does the coordinator push simulated work?
+//!
+//!     cargo bench --bench scaling
+
+use std::time::Instant;
+
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{RunOptions, Simulation};
+use ds_rs::sim::MINUTE;
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn run_one(machines: u32, jobs_n: u32) -> (f64, u64, u64) {
+    let cfg = AppConfig {
+        cluster_machines: machines,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 10 * MINUTE,
+        ..Default::default()
+    };
+    let jobs = JobSpec::plate("P", jobs_n, 4, vec![]);
+    let mut sim = Simulation::new(cfg, RunOptions::default()).unwrap();
+    sim.submit(&jobs).unwrap();
+    sim.start(&FleetSpec::template("us-east-1").unwrap()).unwrap();
+    let mut ex = ModeledExecutor {
+        model: DurationModel {
+            mean_s: 90.0,
+            cv: 0.3,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let report = sim.run(&mut ex).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        report.stats.completed + report.stats.skipped_done,
+        u64::from(jobs_n) * 4
+    );
+    (wall, report.stats.events_processed, report.ended_at)
+}
+
+fn main() {
+    println!("== coordinator end-to-end simulation throughput ==\n");
+    println!(
+        "{:>8} {:>8} {:>10} {:>12} {:>14} {:>16}",
+        "machines", "jobs", "wall s", "events", "events/s", "sim-min/wall-s"
+    );
+    for &(machines, jobs) in &[(4u32, 96u32), (16, 96), (64, 96), (16, 384), (64, 384), (128, 384)]
+    {
+        // jobs param = wells; 4 sites each.
+        let (wall, events, ended) = run_one(machines, jobs);
+        println!(
+            "{:>8} {:>8} {:>10.3} {:>12} {:>14.0} {:>16.0}",
+            machines,
+            jobs * 4,
+            wall,
+            events,
+            events as f64 / wall,
+            (ended as f64 / MINUTE as f64) / wall
+        );
+    }
+    println!("\nL3 target: the coordinator must never be the bottleneck — events/s should sit in the millions (each event is one SQS/ECS/EC2 interaction).");
+}

@@ -1,0 +1,141 @@
+//! Substrate micro-benchmarks (hand-rolled harness: the image vendors no
+//! criterion).  Measures the L3 hot-path primitives the perf pass
+//! optimizes: SQS ops, event heap, market price generation, ECS
+//! placement, S3 listing, JSON parsing.
+//!
+//!     cargo bench --bench substrate
+
+use std::time::Instant;
+
+use ds_rs::aws::ec2::{SpotMarket, Volatility};
+use ds_rs::aws::ecs::{Ecs, Service, TaskDefinition};
+use ds_rs::aws::s3::{Body, S3};
+use ds_rs::aws::sqs::Sqs;
+use ds_rs::json;
+use ds_rs::sim::{EventQueue, MINUTE};
+
+/// Run `f` `iters` times, print and return ns/op.
+fn bench(name: &str, iters: u64, mut f: impl FnMut(u64)) -> f64 {
+    for i in 0..(iters / 10).max(1) {
+        f(i); // warmup
+    }
+    let t0 = Instant::now();
+    for i in 0..iters {
+        f(i);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    let throughput = 1e9 / ns;
+    println!("{name:<46} {ns:>12.0} ns/op {throughput:>14.0} op/s");
+    ns
+}
+
+fn main() {
+    println!("== substrate micro-benchmarks ==\n");
+
+    // SQS full cycle: send + receive + delete.
+    {
+        let mut sqs = Sqs::new();
+        sqs.create_queue("q", 5 * MINUTE);
+        bench("sqs send+receive+delete cycle", 200_000, |i| {
+            sqs.send("q", "job-body", i).unwrap();
+            let (_, h) = sqs.receive("q", i).unwrap().unwrap();
+            sqs.delete("q", h, i).unwrap();
+        });
+    }
+
+    // SQS receive from a deep queue (visibility bookkeeping).
+    {
+        let mut sqs = Sqs::new();
+        sqs.create_queue("q", 5 * MINUTE);
+        for i in 0..100_000u64 {
+            sqs.send("q", format!("j{i}"), 0).unwrap();
+        }
+        bench("sqs receive (100k-deep queue)", 100_000, |i| {
+            let _ = sqs.receive("q", i).unwrap();
+        });
+    }
+
+    // Event heap: schedule + pop interleaved at 10k live events.
+    {
+        let mut q: EventQueue<u64> = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule_at(i, i);
+        }
+        bench("event heap schedule+pop (10k live)", 1_000_000, |i| {
+            let (t, _) = q.pop().unwrap();
+            q.schedule_at(t + 10_000 + (i % 97), i);
+        });
+    }
+
+    // Spot market: lazy path extension (per simulated minute of price).
+    {
+        let mut market = SpotMarket::new(7, Volatility::High);
+        let mut t = 0u64;
+        bench("spot market price_at (fresh minute)", 500_000, |_| {
+            t += MINUTE;
+            let _ = market.price_at("m5.xlarge", t);
+        });
+    }
+    {
+        let mut market = SpotMarket::new(7, Volatility::High);
+        let _ = market.price_at("m5.xlarge", 1_000 * MINUTE);
+        bench("spot market price_at (cached)", 1_000_000, |i| {
+            let _ = market.price_at("m5.xlarge", (i % 1_000) * MINUTE);
+        });
+    }
+
+    // ECS placement pass on a 64-instance cluster, service saturated.
+    {
+        let mut ecs = Ecs::new();
+        ecs.register_task_definition(TaskDefinition {
+            family: "app".into(),
+            cpu_shares: 2048,
+            memory_mb: 7_500,
+            env: vec![],
+        });
+        ecs.create_service(Service {
+            name: "svc".into(),
+            cluster: "default".into(),
+            task_family: "app".into(),
+            desired_count: 128,
+        })
+        .unwrap();
+        for i in 0..64u64 {
+            ecs.register_instance("default", i, 4, 16_384).unwrap();
+        }
+        let placed = ecs.place_tasks(0);
+        assert_eq!(placed.len(), 128);
+        bench("ecs place_tasks no-op pass (64in/128ctr)", 20_000, |i| {
+            let _ = ecs.place_tasks(i);
+        });
+    }
+
+    // S3: put synthetic + list a 10k-object prefix.
+    {
+        let mut s3 = S3::new();
+        s3.create_bucket("b");
+        for i in 0..10_000u64 {
+            s3.put("b", &format!("out/{i:06}.csv"), Body::Synthetic { size: 100 }, 0)
+                .unwrap();
+        }
+        bench("s3 list_prefix (narrow, 10k objects)", 100_000, |i| {
+            let _ = s3.list_prefix("b", &format!("out/{:06}", i % 10_000));
+        });
+        bench("s3 put synthetic", 200_000, |i| {
+            s3.put("b", "hot/key", Body::Synthetic { size: 100 }, i).unwrap();
+        });
+    }
+
+    // JSON: parse a typical job message.
+    {
+        let msg = r#"{"input_prefix": "input", "output_prefix": "output",
+            "output_bucket": "ds-data", "pipeline": "segment.cppipe",
+            "Metadata_Plate": "BR00117010", "Metadata_Well": "C07",
+            "Metadata_Site": 3}"#;
+        bench("json parse job message", 200_000, |_| {
+            let _ = json::parse(msg).unwrap();
+        });
+    }
+
+    println!("\ndone.");
+}

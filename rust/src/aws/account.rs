@@ -1,0 +1,106 @@
+//! One AWS account: all five services plus billing inputs, built from a
+//! seed and a market volatility preset.
+
+use crate::sim::{SimRng, SimTime};
+
+use super::billing::{compute_report, CostReport};
+use super::cloudwatch::{Alarms, Logs, Metrics};
+use super::ec2::{Ec2, SpotMarket, Volatility};
+use super::ecs::Ecs;
+use super::s3::S3;
+use super::sqs::Sqs;
+
+/// Everything `aws configure` would point at.
+pub struct AwsAccount {
+    pub s3: S3,
+    pub sqs: Sqs,
+    pub ec2: Ec2,
+    pub ecs: Ecs,
+    pub metrics: Metrics,
+    pub alarms: Alarms,
+    pub logs: Logs,
+    /// Integrated GB-hours of S3 storage (sampled by the event loop).
+    pub s3_gb_hours: f64,
+    last_storage_sample: SimTime,
+}
+
+impl AwsAccount {
+    pub fn new(seed: u64, vol: Volatility) -> Self {
+        let mut root = SimRng::new(seed);
+        let market = SpotMarket::new(root.next_u64(), vol);
+        let ec2 = Ec2::new(market, root.fork(0xEC2));
+        Self {
+            s3: S3::new(),
+            sqs: Sqs::new(),
+            ec2,
+            ecs: Ecs::new(),
+            metrics: Metrics::new(),
+            alarms: Alarms::new(),
+            logs: Logs::new(),
+            s3_gb_hours: 0.0,
+            last_storage_sample: 0,
+        }
+    }
+
+    /// Integrate storage usage up to `now` (call periodically + at end).
+    pub fn sample_storage(&mut self, now: SimTime) {
+        if now <= self.last_storage_sample {
+            return;
+        }
+        let hours = (now - self.last_storage_sample) as f64 / crate::sim::HOUR as f64;
+        let gb = self.s3.total_bytes() as f64 / 1e9;
+        self.s3_gb_hours += gb * hours;
+        self.last_storage_sample = now;
+    }
+
+    /// Full itemized cost report as of `now`.
+    pub fn cost_report(&mut self, now: SimTime) -> CostReport {
+        self.sample_storage(now);
+        let accrued = self.ec2.accrued_cost_of_active(now);
+        compute_report(
+            self.ec2.cost_log(),
+            accrued,
+            self.sqs.total_requests(),
+            self.s3.stats(),
+            self.s3_gb_hours,
+            self.metrics.put_count(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::s3::Body;
+    use crate::sim::HOUR;
+
+    #[test]
+    fn account_composes_services() {
+        let mut acct = AwsAccount::new(42, Volatility::Medium);
+        acct.s3.create_bucket("b");
+        acct.s3
+            .put("b", "k", Body::Synthetic { size: 2_000_000_000 }, 0)
+            .unwrap();
+        acct.sqs.create_queue("q", 60_000);
+        acct.sqs.send("q", "job", 0).unwrap();
+        acct.sample_storage(HOUR);
+        assert!((acct.s3_gb_hours - 2.0).abs() < 0.01);
+        let report = acct.cost_report(HOUR);
+        assert!(report.s3_usd > 0.0);
+        assert!(report.sqs_usd > 0.0);
+        assert_eq!(report.ec2_usd, 0.0);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let p1 = AwsAccount::new(7, Volatility::High)
+            .ec2
+            .market
+            .price_at("m5.large", 5 * HOUR);
+        let p2 = AwsAccount::new(7, Volatility::High)
+            .ec2
+            .market
+            .price_at("m5.large", 5 * HOUR);
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,155 @@
+//! Billing meter: turns service usage into USD line items.
+//!
+//! Powers the cost experiments (T2 spot-vs-on-demand, T3 cheapest mode,
+//! T6 resume savings) and quantifies the paper's "adds negligible costs
+//! to the compute" claim: control-plane requests (SQS + S3 + CloudWatch)
+//! are metered separately from EC2 machine-hours so the coordinator
+//! overhead fraction is reported directly.
+//!
+//! Rates are the 2022-era public price sheet shape: exact values matter
+//! only through the *ratios* experiments report.
+
+use crate::aws::ec2::fleet::CostRecord;
+use crate::aws::s3::S3Stats;
+
+/// $/1M SQS requests (standard queue, after free tier).
+pub const SQS_PER_MILLION_REQ: f64 = 0.40;
+/// $/1k S3 PUT/LIST requests.
+pub const S3_PER_1K_PUT: f64 = 0.005;
+/// $/1k S3 GET requests.
+pub const S3_PER_1K_GET: f64 = 0.0004;
+/// $/GB-month S3 standard storage.
+pub const S3_PER_GB_MONTH: f64 = 0.023;
+/// $/1k CloudWatch metric PutMetricData requests (approximation).
+pub const CW_PER_1K_PUTS: f64 = 0.01;
+
+/// Itemized cost summary of a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostReport {
+    pub ec2_usd: f64,
+    pub sqs_usd: f64,
+    pub s3_usd: f64,
+    pub cloudwatch_usd: f64,
+    /// Machine-hours actually billed (spot).
+    pub machine_hours: f64,
+    /// What the same machine-hours would have cost on-demand.
+    pub on_demand_equivalent_usd: f64,
+}
+
+impl CostReport {
+    pub fn total_usd(&self) -> f64 {
+        self.ec2_usd + self.sqs_usd + self.s3_usd + self.cloudwatch_usd
+    }
+
+    /// Control-plane overhead as a fraction of total ("negligible costs").
+    pub fn overhead_fraction(&self) -> f64 {
+        let t = self.total_usd();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.sqs_usd + self.s3_usd + self.cloudwatch_usd) / t
+        }
+    }
+
+    /// Spot savings vs on-demand for the same machine-hours.
+    pub fn spot_savings_factor(&self) -> f64 {
+        if self.ec2_usd == 0.0 {
+            1.0
+        } else {
+            self.on_demand_equivalent_usd / self.ec2_usd
+        }
+    }
+}
+
+/// Build a report from raw service counters.
+pub fn compute_report(
+    ec2_records: &[CostRecord],
+    ec2_active_accrued_usd: f64,
+    sqs_requests: u64,
+    s3: S3Stats,
+    s3_gb_hours: f64,
+    cw_metric_puts: u64,
+) -> CostReport {
+    let ec2_usd: f64 =
+        ec2_records.iter().map(|r| r.cost_usd).sum::<f64>() + ec2_active_accrued_usd;
+    let machine_hours: f64 = ec2_records
+        .iter()
+        .map(|r| (r.span.1 - r.span.0) as f64 / crate::sim::HOUR as f64)
+        .sum();
+    let on_demand_equivalent_usd: f64 = ec2_records
+        .iter()
+        .map(|r| {
+            let ty = crate::aws::ec2::instance_type(r.itype).unwrap();
+            ty.on_demand_hourly * (r.span.1 - r.span.0) as f64 / crate::sim::HOUR as f64
+        })
+        .sum();
+    CostReport {
+        ec2_usd,
+        sqs_usd: sqs_requests as f64 / 1e6 * SQS_PER_MILLION_REQ,
+        s3_usd: (s3.put_requests + s3.list_requests) as f64 / 1e3 * S3_PER_1K_PUT
+            + s3.get_requests as f64 / 1e3 * S3_PER_1K_GET
+            + s3_gb_hours / 730.0 * S3_PER_GB_MONTH,
+        cloudwatch_usd: cw_metric_puts as f64 / 1e3 * CW_PER_1K_PUTS,
+        machine_hours,
+        on_demand_equivalent_usd,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::TerminationReason;
+    use crate::sim::HOUR;
+
+    fn rec(cost: f64, hours: u64) -> CostRecord {
+        CostRecord {
+            instance: 1,
+            itype: "m5.large",
+            span: (0, hours * HOUR),
+            cost_usd: cost,
+            reason: TerminationReason::FleetCancelled,
+        }
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let r = compute_report(&[rec(0.30, 10)], 0.0, 1_000_000, S3Stats::default(), 0.0, 0);
+        assert!((r.ec2_usd - 0.30).abs() < 1e-12);
+        assert!((r.sqs_usd - 0.40).abs() < 1e-12);
+        assert!((r.total_usd() - 0.70).abs() < 1e-12);
+        assert!((r.machine_hours - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn on_demand_equivalent_uses_catalog() {
+        let r = compute_report(&[rec(0.30, 10)], 0.0, 0, S3Stats::default(), 0.0, 0);
+        // 10h of m5.large on demand = 0.96 -> savings factor 3.2x
+        assert!((r.on_demand_equivalent_usd - 0.96).abs() < 1e-9);
+        assert!((r.spot_savings_factor() - 3.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overhead_fraction_small_for_compute_heavy_run() {
+        // 100 machine-hours at one metric put and a couple of queue/S3
+        // round trips per job-minute.
+        let s3 = S3Stats {
+            put_requests: 5_000,
+            get_requests: 20_000,
+            list_requests: 5_000,
+            bytes_in: 0,
+            bytes_out: 0,
+        };
+        let r = compute_report(&[rec(5.0, 100)], 0.0, 100_000, s3, 10.0, 6_000);
+        assert!(
+            r.overhead_fraction() < 0.05,
+            "overhead={} should be negligible",
+            r.overhead_fraction()
+        );
+    }
+
+    #[test]
+    fn accrued_active_cost_included() {
+        let r = compute_report(&[], 1.25, 0, S3Stats::default(), 0.0, 0);
+        assert!((r.ec2_usd - 1.25).abs() < 1e-12);
+    }
+}

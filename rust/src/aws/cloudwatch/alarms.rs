@@ -1,0 +1,283 @@
+//! Threshold alarms with consecutive-period evaluation and actions.
+//!
+//! The paper places two alarms per instance:
+//! * the *crash reaper*: CPU < 1% for 15 consecutive 1-minute periods →
+//!   terminate (the fleet replaces it);
+//! * the *idle reboot*: placed by the Docker, reboots a machine "sitting
+//!   idle for 15 minutes".
+//!
+//! Missing datapoints are treated as *breaching* (a crashed or
+//! disconnected machine stops publishing, which is exactly the case the
+//! reaper exists for).
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+
+use super::metrics::Metrics;
+use crate::aws::ec2::InstanceId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Comparison {
+    LessThan,
+    GreaterThan,
+}
+
+/// What to do when the alarm fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlarmAction {
+    TerminateInstance(InstanceId),
+    RebootInstance(InstanceId),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlarmState {
+    Ok,
+    Alarm,
+}
+
+/// One alarm definition + current state.
+#[derive(Debug, Clone)]
+pub struct Alarm {
+    pub name: String,
+    pub metric: String,
+    pub dimension: String,
+    pub comparison: Comparison,
+    pub threshold: f64,
+    /// Length of one evaluation period.
+    pub period: SimTime,
+    /// Consecutive breaching periods required to fire.
+    pub eval_periods: u32,
+    pub action: AlarmAction,
+    pub state: AlarmState,
+    /// Consecutive breaching periods observed so far.
+    breaching: u32,
+    /// End of the last evaluated period.
+    last_eval: SimTime,
+}
+
+/// The alarm service.
+#[derive(Debug, Default)]
+pub struct Alarms {
+    alarms: HashMap<String, Alarm>,
+}
+
+impl Alarms {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// PutMetricAlarm (idempotent by name; resets state).
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_alarm(
+        &mut self,
+        name: &str,
+        metric: &str,
+        dimension: &str,
+        comparison: Comparison,
+        threshold: f64,
+        period: SimTime,
+        eval_periods: u32,
+        action: AlarmAction,
+        now: SimTime,
+    ) {
+        self.alarms.insert(
+            name.to_string(),
+            Alarm {
+                name: name.to_string(),
+                metric: metric.to_string(),
+                dimension: dimension.to_string(),
+                comparison,
+                threshold,
+                period,
+                eval_periods,
+                action,
+                state: AlarmState::Ok,
+                breaching: 0,
+                last_eval: now,
+            },
+        );
+    }
+
+    /// DeleteAlarms.
+    pub fn delete_alarm(&mut self, name: &str) {
+        self.alarms.remove(name);
+    }
+
+    /// Delete every alarm whose dimension matches (monitor's hourly reap
+    /// of dead instances' alarms).
+    pub fn delete_for_dimension(&mut self, dimension: &str) -> usize {
+        let before = self.alarms.len();
+        self.alarms.retain(|_, a| a.dimension != dimension);
+        before - self.alarms.len()
+    }
+
+    pub fn delete_all(&mut self) -> usize {
+        let n = self.alarms.len();
+        self.alarms.clear();
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.alarms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.alarms.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Alarm> {
+        self.alarms.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.alarms.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Evaluate all alarms up to `now`; returns actions that newly fired
+    /// (state transition Ok → Alarm), in alarm-name order.
+    pub fn evaluate(&mut self, metrics: &Metrics, now: SimTime) -> Vec<AlarmAction> {
+        let mut fired = Vec::new();
+        let mut names: Vec<String> = self.alarms.keys().cloned().collect();
+        names.sort();
+        for name in names {
+            let a = self.alarms.get_mut(&name).unwrap();
+            // Evaluate each complete period since last_eval.
+            while a.last_eval + a.period <= now {
+                let from = a.last_eval;
+                let to = a.last_eval + a.period;
+                a.last_eval = to;
+                let avg = metrics.avg(&a.metric, &a.dimension, from, to);
+                let breaching = match (avg, a.comparison) {
+                    // Missing data counts as breaching (dead machine).
+                    (None, _) => true,
+                    (Some(v), Comparison::LessThan) => v < a.threshold,
+                    (Some(v), Comparison::GreaterThan) => v > a.threshold,
+                };
+                if breaching {
+                    a.breaching += 1;
+                    if a.breaching >= a.eval_periods && a.state == AlarmState::Ok {
+                        a.state = AlarmState::Alarm;
+                        fired.push(a.action);
+                    }
+                } else {
+                    a.breaching = 0;
+                    a.state = AlarmState::Ok;
+                }
+            }
+        }
+        fired
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MINUTE;
+
+    fn reaper(alarms: &mut Alarms, inst: InstanceId, now: SimTime) {
+        alarms.put_alarm(
+            &format!("cpu-low-i{inst}"),
+            "CPUUtilization",
+            &format!("i-{inst}"),
+            Comparison::LessThan,
+            1.0,
+            MINUTE,
+            15,
+            AlarmAction::TerminateInstance(inst),
+            now,
+        );
+    }
+
+    fn publish(m: &mut Metrics, inst: InstanceId, from_min: u64, to_min: u64, v: f64) {
+        for t in from_min..to_min {
+            m.put("CPUUtilization", &format!("i-{inst}"), t * MINUTE + 1, v);
+        }
+    }
+
+    #[test]
+    fn fires_after_15_idle_minutes() {
+        let mut alarms = Alarms::new();
+        let mut m = Metrics::new();
+        reaper(&mut alarms, 7, 0);
+        publish(&mut m, 7, 0, 5, 80.0); // busy 5 min
+        publish(&mut m, 7, 5, 25, 0.2); // crashed: 20 min idle
+        assert!(alarms.evaluate(&m, 10 * MINUTE).is_empty());
+        // 15 breaching periods complete at minute 20.
+        let fired = alarms.evaluate(&m, 20 * MINUTE);
+        assert_eq!(fired, vec![AlarmAction::TerminateInstance(7)]);
+        // Does not re-fire while still in Alarm state.
+        assert!(alarms.evaluate(&m, 25 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn busy_minute_resets_streak() {
+        let mut alarms = Alarms::new();
+        let mut m = Metrics::new();
+        reaper(&mut alarms, 1, 0);
+        publish(&mut m, 1, 0, 14, 0.2); // 14 idle...
+        publish(&mut m, 1, 14, 15, 50.0); // ...then busy
+        publish(&mut m, 1, 15, 29, 0.2); // 14 idle again
+        assert!(alarms.evaluate(&m, 29 * MINUTE).is_empty());
+        publish(&mut m, 1, 29, 30, 0.2); // 15th consecutive
+        assert_eq!(alarms.evaluate(&m, 30 * MINUTE).len(), 1);
+    }
+
+    #[test]
+    fn missing_data_is_breaching() {
+        let mut alarms = Alarms::new();
+        let m = Metrics::new(); // machine never published at all
+        reaper(&mut alarms, 3, 0);
+        let fired = alarms.evaluate(&m, 15 * MINUTE);
+        assert_eq!(fired, vec![AlarmAction::TerminateInstance(3)]);
+    }
+
+    #[test]
+    fn greater_than_comparison() {
+        let mut alarms = Alarms::new();
+        let mut m = Metrics::new();
+        alarms.put_alarm(
+            "hot",
+            "CPUUtilization",
+            "i-9",
+            Comparison::GreaterThan,
+            90.0,
+            MINUTE,
+            3,
+            AlarmAction::RebootInstance(9),
+            0,
+        );
+        publish(&mut m, 9, 0, 3, 99.0);
+        assert_eq!(
+            alarms.evaluate(&m, 3 * MINUTE),
+            vec![AlarmAction::RebootInstance(9)]
+        );
+    }
+
+    #[test]
+    fn delete_for_dimension_reaps() {
+        let mut alarms = Alarms::new();
+        reaper(&mut alarms, 1, 0);
+        reaper(&mut alarms, 2, 0);
+        assert_eq!(alarms.len(), 2);
+        assert_eq!(alarms.delete_for_dimension("i-1"), 1);
+        assert_eq!(alarms.len(), 1);
+        assert_eq!(alarms.delete_all(), 1);
+        assert!(alarms.is_empty());
+    }
+
+    #[test]
+    fn recovery_returns_to_ok_and_can_refire() {
+        let mut alarms = Alarms::new();
+        let mut m = Metrics::new();
+        reaper(&mut alarms, 4, 0);
+        publish(&mut m, 4, 0, 15, 0.0);
+        assert_eq!(alarms.evaluate(&m, 15 * MINUTE).len(), 1);
+        publish(&mut m, 4, 15, 16, 60.0); // one busy minute -> Ok
+        assert!(alarms.evaluate(&m, 16 * MINUTE).is_empty());
+        publish(&mut m, 4, 16, 31, 0.0); // idle again -> re-fires
+        assert_eq!(alarms.evaluate(&m, 31 * MINUTE).len(), 1);
+    }
+}

@@ -1,0 +1,154 @@
+//! Log groups, streams, and S3 export.
+//!
+//! "Each individual job processed will create a log of the CellProfiler
+//! output, and each Docker container will create a log showing CPU,
+//! memory, and disk usage."  At cleanup the monitor "exports all the logs
+//! from your analysis onto your S3 bucket".
+
+use std::collections::BTreeMap;
+
+use crate::aws::s3::{Body, S3};
+use crate::sim::SimTime;
+
+/// Log groups → streams → timestamped lines.
+#[derive(Debug, Default)]
+pub struct Logs {
+    groups: BTreeMap<String, BTreeMap<String, Vec<(SimTime, String)>>>,
+}
+
+impl Logs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// CreateLogGroup (idempotent).
+    pub fn create_group(&mut self, group: &str) {
+        self.groups.entry(group.to_string()).or_default();
+    }
+
+    pub fn group_exists(&self, group: &str) -> bool {
+        self.groups.contains_key(group)
+    }
+
+    /// PutLogEvents: appends to a stream, creating it on first write.
+    /// The group must exist (DS's startCluster creates groups up front).
+    pub fn put(&mut self, group: &str, stream: &str, t: SimTime, line: impl Into<String>) {
+        if let Some(g) = self.groups.get_mut(group) {
+            g.entry(stream.to_string())
+                .or_default()
+                .push((t, line.into()));
+        }
+    }
+
+    /// All lines of one stream.
+    pub fn stream(&self, group: &str, stream: &str) -> &[(SimTime, String)] {
+        self.groups
+            .get(group)
+            .and_then(|g| g.get(stream))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Stream names in a group (sorted).
+    pub fn streams(&self, group: &str) -> Vec<&str> {
+        self.groups
+            .get(group)
+            .map(|g| g.keys().map(|k| k.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Total line count in a group.
+    pub fn line_count(&self, group: &str) -> usize {
+        self.groups
+            .get(group)
+            .map(|g| g.values().map(Vec::len).sum())
+            .unwrap_or(0)
+    }
+
+    /// CreateExportTask: write every stream of `group` as one S3 object
+    /// under `prefix` (like CloudWatch's S3 export).  Returns object count.
+    pub fn export_to_s3(
+        &self,
+        group: &str,
+        s3: &mut S3,
+        bucket: &str,
+        prefix: &str,
+        now: SimTime,
+    ) -> usize {
+        let Some(g) = self.groups.get(group) else {
+            return 0;
+        };
+        let mut n = 0;
+        for (stream, lines) in g {
+            let mut text = String::new();
+            for (t, line) in lines {
+                text.push_str(&format!("{} {}\n", crate::sim::clock::fmt_time(*t), line));
+            }
+            let key = format!("{prefix}/{group}/{stream}.log");
+            // Export target bucket must exist; DS documents adding the
+            // bucket policy during AWS setup.
+            let _ = s3.put(bucket, &key, Body::Bytes(text.into_bytes()), now);
+            n += 1;
+        }
+        n
+    }
+
+    /// DeleteLogGroup.
+    pub fn delete_group(&mut self, group: &str) {
+        self.groups.remove(group);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_requires_group() {
+        let mut l = Logs::new();
+        l.put("nope", "s", 0, "dropped");
+        assert_eq!(l.line_count("nope"), 0);
+        l.create_group("g");
+        l.put("g", "s", 1, "kept");
+        assert_eq!(l.stream("g", "s"), &[(1, "kept".to_string())]);
+    }
+
+    #[test]
+    fn streams_listed_sorted() {
+        let mut l = Logs::new();
+        l.create_group("g");
+        l.put("g", "zeta", 0, "z");
+        l.put("g", "alpha", 0, "a");
+        assert_eq!(l.streams("g"), vec!["alpha", "zeta"]);
+        assert_eq!(l.line_count("g"), 2);
+    }
+
+    #[test]
+    fn export_writes_one_object_per_stream() {
+        let mut l = Logs::new();
+        let mut s3 = S3::new();
+        s3.create_bucket("bkt");
+        l.create_group("app_perInstance");
+        l.put("app_perInstance", "i-1", 0, "boot");
+        l.put("app_perInstance", "i-1", 60_000, "job done");
+        l.put("app_perInstance", "i-2", 0, "boot");
+        let n = l.export_to_s3("app_perInstance", &mut s3, "bkt", "exportedlogs", 99);
+        assert_eq!(n, 2);
+        let listed = s3.list_prefix("bkt", "exportedlogs/");
+        assert_eq!(listed.len(), 2);
+        let obj = s3.get("bkt", "exportedlogs/app_perInstance/i-1.log").unwrap();
+        let text = String::from_utf8(obj.body.bytes().unwrap().to_vec()).unwrap();
+        assert!(text.contains("boot"));
+        assert!(text.contains("00:01:00.000 job done"));
+    }
+
+    #[test]
+    fn delete_group_removes_streams() {
+        let mut l = Logs::new();
+        l.create_group("g");
+        l.put("g", "s", 0, "x");
+        l.delete_group("g");
+        assert!(!l.group_exists("g"));
+        assert_eq!(l.line_count("g"), 0);
+    }
+}

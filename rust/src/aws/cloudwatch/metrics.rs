@@ -1,0 +1,120 @@
+//! Metric store: named series of (time, value) datapoints per dimension.
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+
+/// Key: (metric name, dimension value) — e.g. ("CPUUtilization", "i-0042").
+type Key = (String, String);
+
+/// Time-ordered datapoints per metric/dimension.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    series: HashMap<Key, Vec<(SimTime, f64)>>,
+    put_count: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// PutMetricData.  Datapoints must arrive in non-decreasing time order
+    /// per series (the simulator always does).
+    pub fn put(&mut self, metric: &str, dimension: &str, t: SimTime, value: f64) {
+        self.put_count += 1;
+        let s = self
+            .series
+            .entry((metric.to_string(), dimension.to_string()))
+            .or_default();
+        debug_assert!(s.last().map(|&(lt, _)| lt <= t).unwrap_or(true));
+        s.push((t, value));
+    }
+
+    /// Datapoints in [from, to).
+    pub fn query(
+        &self,
+        metric: &str,
+        dimension: &str,
+        from: SimTime,
+        to: SimTime,
+    ) -> &[(SimTime, f64)] {
+        let Some(s) = self
+            .series
+            .get(&(metric.to_string(), dimension.to_string()))
+        else {
+            return &[];
+        };
+        let lo = s.partition_point(|&(t, _)| t < from);
+        let hi = s.partition_point(|&(t, _)| t < to);
+        &s[lo..hi]
+    }
+
+    /// Average over [from, to), if any datapoints exist.
+    pub fn avg(&self, metric: &str, dimension: &str, from: SimTime, to: SimTime) -> Option<f64> {
+        let pts = self.query(metric, dimension, from, to);
+        if pts.is_empty() {
+            return None;
+        }
+        Some(pts.iter().map(|&(_, v)| v).sum::<f64>() / pts.len() as f64)
+    }
+
+    /// Most recent datapoint at or before `t`.
+    pub fn latest(&self, metric: &str, dimension: &str, t: SimTime) -> Option<(SimTime, f64)> {
+        let s = self
+            .series
+            .get(&(metric.to_string(), dimension.to_string()))?;
+        let idx = s.partition_point(|&(pt, _)| pt <= t);
+        idx.checked_sub(1).map(|i| s[i])
+    }
+
+    /// Drop all series for a dimension (instance terminated & reaped).
+    pub fn drop_dimension(&mut self, dimension: &str) {
+        self.series.retain(|(_, d), _| d != dimension);
+    }
+
+    pub fn put_count(&self) -> u64 {
+        self.put_count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_query_window() {
+        let mut m = Metrics::new();
+        for t in 0..10u64 {
+            m.put("CPUUtilization", "i-1", t * 60, t as f64);
+        }
+        let pts = m.query("CPUUtilization", "i-1", 120, 300);
+        assert_eq!(pts, &[(120, 2.0), (180, 3.0), (240, 4.0)]);
+        assert!(m.query("CPUUtilization", "i-2", 0, 1_000).is_empty());
+    }
+
+    #[test]
+    fn avg_and_latest() {
+        let mut m = Metrics::new();
+        m.put("CPUUtilization", "i-1", 0, 10.0);
+        m.put("CPUUtilization", "i-1", 60, 20.0);
+        m.put("CPUUtilization", "i-1", 120, 60.0);
+        assert_eq!(m.avg("CPUUtilization", "i-1", 0, 121), Some(30.0));
+        assert_eq!(m.avg("CPUUtilization", "i-1", 500, 600), None);
+        assert_eq!(m.latest("CPUUtilization", "i-1", 119), Some((60, 20.0)));
+        assert_eq!(m.latest("CPUUtilization", "i-1", 120), Some((120, 60.0)));
+    }
+
+    #[test]
+    fn dimensions_independent() {
+        let mut m = Metrics::new();
+        m.put("CPUUtilization", "i-1", 0, 1.0);
+        m.put("CPUUtilization", "i-2", 0, 2.0);
+        m.put("MemoryUtilization", "i-1", 0, 3.0);
+        assert_eq!(m.query("CPUUtilization", "i-1", 0, 1).len(), 1);
+        m.drop_dimension("i-1");
+        assert!(m.query("CPUUtilization", "i-1", 0, 1).is_empty());
+        assert!(m.query("MemoryUtilization", "i-1", 0, 1).is_empty());
+        assert_eq!(m.query("CPUUtilization", "i-2", 0, 1).len(), 1);
+    }
+}

@@ -1,0 +1,19 @@
+//! CloudWatch: metrics, alarms, and logs.
+//!
+//! DS leans on CloudWatch three ways (paper, Step 4):
+//!
+//! * per-instance CPUUtilization metrics feed the crash reaper —
+//!   "if CPU usage dips below 1% for 15 consecutive minutes … the
+//!   instance will be automatically terminated and a new one will take
+//!   its place";
+//! * per-job and per-container logs record progress;
+//! * the monitor deletes alarms of dead instances hourly and exports all
+//!   logs to S3 at the end of the run.
+
+pub mod alarms;
+pub mod logs;
+pub mod metrics;
+
+pub use alarms::{Alarm, AlarmAction, AlarmState, Alarms, Comparison};
+pub use logs::Logs;
+pub use metrics::Metrics;

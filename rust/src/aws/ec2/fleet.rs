@@ -1,0 +1,584 @@
+//! Spot fleet requests: allocation, fulfillment latency, interruption,
+//! replacement.
+//!
+//! Reproduced paper behaviours:
+//!
+//! * "depending on current AWS capacity and the price that you bid, it can
+//!   take anywhere from a couple of minutes to several hours for your
+//!   machines to be ready" — fulfillment latency grows as the bid
+//!   approaches the spot price and collapses to "wait for the next
+//!   evaluation" when the pool has no free capacity.
+//! * Interruption: any running instance whose pool price rises above its
+//!   fleet's bid is reclaimed.
+//! * Replacement: an active fleet relaunches toward its target capacity
+//!   whenever instances die (crash reaper, self-shutdown, interruption) —
+//!   which is also the paper's cost leak that `monitor` exists to close.
+//! * Cheapest mode: `modify_target` lowers the *requested* capacity
+//!   without terminating running machines.
+
+use std::collections::HashMap;
+
+use crate::sim::clock::{SimTime, SECOND};
+use crate::sim::SimRng;
+
+use super::instance::{Instance, InstanceId, InstanceState, TerminationReason};
+use super::market::SpotMarket;
+use super::pricing::instance_type;
+
+/// Fleet request identifier (`sfr-0007`).
+pub type FleetId = u64;
+
+/// A spot fleet request: what `startCluster` submits.
+#[derive(Debug, Clone)]
+pub struct SpotFleetSpec {
+    /// CLUSTER_MACHINES from the Config file.
+    pub target_capacity: u32,
+    /// MACHINE_PRICE: max USD/h per machine.
+    pub bid_hourly: f64,
+    /// MACHINE_TYPE list; allocation picks the cheapest eligible pool.
+    pub allowed_types: Vec<String>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FleetState {
+    Active,
+    Cancelled,
+}
+
+#[derive(Debug)]
+struct Fleet {
+    spec: SpotFleetSpec,
+    state: FleetState,
+}
+
+/// What happened during a fleet evaluation tick.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetEvent {
+    /// A new instance was requested; it becomes Running at `ready_at`.
+    InstanceRequested {
+        id: InstanceId,
+        ready_at: SimTime,
+        itype: &'static str,
+        price: f64,
+    },
+    /// A running instance was reclaimed (spot price exceeded the bid).
+    InstanceInterrupted { id: InstanceId, price: f64 },
+    /// Deficit that could not be fulfilled this tick (no eligible pool).
+    CapacityUnavailable { fleet: FleetId, missing: u32 },
+}
+
+/// One billed instance lifetime: written on termination.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostRecord {
+    pub instance: InstanceId,
+    pub itype: &'static str,
+    pub span: (SimTime, SimTime),
+    pub cost_usd: f64,
+    pub reason: TerminationReason,
+}
+
+/// The EC2 service: spot market + instances + fleets.
+pub struct Ec2 {
+    pub market: SpotMarket,
+    instances: HashMap<InstanceId, Instance>,
+    fleets: HashMap<FleetId, Fleet>,
+    next_instance: InstanceId,
+    next_fleet: FleetId,
+    rng: SimRng,
+    cost_log: Vec<CostRecord>,
+}
+
+impl Ec2 {
+    pub fn new(market: SpotMarket, rng: SimRng) -> Self {
+        Self {
+            market,
+            instances: HashMap::new(),
+            fleets: HashMap::new(),
+            next_instance: 0,
+            next_fleet: 0,
+            rng,
+            cost_log: Vec::new(),
+        }
+    }
+
+    /// RequestSpotFleet: returns the fleet id; instances appear on the
+    /// next `evaluate_fleets` call.
+    pub fn request_spot_fleet(&mut self, spec: SpotFleetSpec) -> FleetId {
+        for t in &spec.allowed_types {
+            assert!(
+                instance_type(t).is_some(),
+                "unknown instance type in fleet spec: {t}"
+            );
+        }
+        self.next_fleet += 1;
+        let id = self.next_fleet;
+        self.fleets.insert(
+            id,
+            Fleet {
+                spec,
+                state: FleetState::Active,
+            },
+        );
+        id
+    }
+
+    /// ModifySpotFleetRequest: change target capacity.  Never terminates
+    /// running instances (cheapest mode relies on this).
+    pub fn modify_target(&mut self, fleet: FleetId, target: u32) {
+        if let Some(f) = self.fleets.get_mut(&fleet) {
+            f.spec.target_capacity = target;
+        }
+    }
+
+    /// CancelSpotFleetRequests with TerminateInstances: end of run.
+    pub fn cancel_fleet(&mut self, fleet: FleetId, now: SimTime) -> Vec<InstanceId> {
+        let Some(f) = self.fleets.get_mut(&fleet) else {
+            return Vec::new();
+        };
+        f.state = FleetState::Cancelled;
+        let ids: Vec<InstanceId> = self
+            .instances
+            .values()
+            .filter(|i| i.fleet == fleet && i.is_active())
+            .map(|i| i.id)
+            .collect();
+        let mut ids = ids;
+        ids.sort_unstable();
+        for &id in &ids {
+            self.terminate(id, TerminationReason::FleetCancelled, now);
+        }
+        ids
+    }
+
+    pub fn fleet_target(&self, fleet: FleetId) -> u32 {
+        self.fleets
+            .get(&fleet)
+            .map(|f| f.spec.target_capacity)
+            .unwrap_or(0)
+    }
+
+    pub fn fleet_is_active(&self, fleet: FleetId) -> bool {
+        self.fleets
+            .get(&fleet)
+            .map(|f| f.state == FleetState::Active)
+            .unwrap_or(false)
+    }
+
+    /// Number of non-terminated instances in a fleet.
+    pub fn active_count(&self, fleet: FleetId) -> u32 {
+        self.instances
+            .values()
+            .filter(|i| i.fleet == fleet && i.is_active())
+            .count() as u32
+    }
+
+    /// All instance ids in a fleet in a given state, sorted.
+    pub fn instances_in_state(&self, fleet: FleetId, state: InstanceState) -> Vec<InstanceId> {
+        let mut v: Vec<InstanceId> = self
+            .instances
+            .values()
+            .filter(|i| i.fleet == fleet && i.state == state)
+            .map(|i| i.id)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Option<&Instance> {
+        self.instances.get(&id)
+    }
+
+    pub fn instance_mut(&mut self, id: InstanceId) -> Option<&mut Instance> {
+        self.instances.get_mut(&id)
+    }
+
+    /// Fulfillment latency model.  Boot floor plus a "bid headroom" term:
+    /// bidding barely above the price means waiting for capacity to turn
+    /// over ("a couple of minutes to several hours").
+    fn fulfillment_delay(rng: &mut SimRng, bid: f64, price: f64) -> SimTime {
+        let boot = rng.range_u64(45 * SECOND, 120 * SECOND);
+        let headroom = (bid / price - 1.0).max(0.0);
+        if headroom > 0.5 {
+            return boot; // comfortably above market: near-immediate
+        }
+        // Headroom 0..0.5 maps to an extra expected 0..~45 min wait.
+        let tight = 1.0 - headroom / 0.5;
+        let extra_mean = tight * tight * 45.0 * 60.0; // seconds
+        let extra = rng.exp(extra_mean.max(1.0)).min(4.0 * 3_600.0);
+        boot + (extra * 1_000.0) as SimTime
+    }
+
+    /// One evaluation tick: interrupt out-bid instances, then fill any
+    /// deficit from the cheapest eligible pool.  The coordinator calls
+    /// this on every market tick (once per simulated minute).
+    pub fn evaluate_fleets(&mut self, now: SimTime) -> Vec<FleetEvent> {
+        let mut events = Vec::new();
+
+        // 1. Interruptions: price > bid.
+        let mut to_interrupt: Vec<(InstanceId, f64)> = Vec::new();
+        for inst in self.instances.values() {
+            if !inst.is_active() {
+                continue;
+            }
+            let price = self.market.price_at(inst.itype.name, now);
+            if price > inst.bid {
+                to_interrupt.push((inst.id, price));
+            }
+        }
+        to_interrupt.sort_unstable_by_key(|&(id, _)| id);
+        for (id, price) in to_interrupt {
+            self.terminate(id, TerminationReason::SpotInterruption, now);
+            events.push(FleetEvent::InstanceInterrupted { id, price });
+        }
+
+        // 2. Fulfillment toward target, cheapest-eligible-pool-first.
+        let fleet_ids: Vec<FleetId> = {
+            let mut v: Vec<FleetId> = self
+                .fleets
+                .iter()
+                .filter(|(_, f)| f.state == FleetState::Active)
+                .map(|(&id, _)| id)
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        for fid in fleet_ids {
+            let (target, bid, types) = {
+                let f = &self.fleets[&fid];
+                (
+                    f.spec.target_capacity,
+                    f.spec.bid_hourly,
+                    f.spec.allowed_types.clone(),
+                )
+            };
+            let active = self.active_count(fid);
+            if active >= target {
+                continue;
+            }
+            let mut deficit = target - active;
+            // Rank eligible pools by current price.
+            let mut pools: Vec<(&'static str, f64, u32)> = types
+                .iter()
+                .filter_map(|t| {
+                    let ty = instance_type(t)?;
+                    let price = self.market.price_at(ty.name, now);
+                    let free = self.market.free_capacity(ty.name, now);
+                    (price <= bid && free > 0).then_some((ty.name, price, free))
+                })
+                .collect();
+            pools.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            for (tname, price, free) in pools {
+                if deficit == 0 {
+                    break;
+                }
+                let take = deficit.min(free);
+                for _ in 0..take {
+                    self.next_instance += 1;
+                    let id = self.next_instance;
+                    let ready_at =
+                        now + Self::fulfillment_delay(&mut self.rng, bid, price);
+                    self.instances.insert(
+                        id,
+                        Instance {
+                            id,
+                            itype: instance_type(tname).unwrap(),
+                            fleet: fid,
+                            state: InstanceState::Pending,
+                            requested_at: now,
+                            running_at: None,
+                            terminated_at: None,
+                            termination_reason: None,
+                            crashed: false,
+                            bid,
+                            name_tag: None,
+                        },
+                    );
+                    events.push(FleetEvent::InstanceRequested {
+                        id,
+                        ready_at,
+                        itype: tname,
+                        price,
+                    });
+                }
+                deficit -= take;
+            }
+            if deficit > 0 {
+                events.push(FleetEvent::CapacityUnavailable {
+                    fleet: fid,
+                    missing: deficit,
+                });
+            }
+        }
+        events
+    }
+
+    /// Boot complete: Pending → Running.  No-op if it died while booting.
+    pub fn mark_running(&mut self, id: InstanceId, now: SimTime) -> bool {
+        match self.instances.get_mut(&id) {
+            Some(i) if i.state == InstanceState::Pending => {
+                i.state = InstanceState::Running;
+                i.running_at = Some(now);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// TerminateInstances: bill and mark.  Idempotent.
+    pub fn terminate(&mut self, id: InstanceId, reason: TerminationReason, now: SimTime) {
+        let Some(inst) = self.instances.get_mut(&id) else {
+            return;
+        };
+        if inst.state == InstanceState::Terminated {
+            return;
+        }
+        inst.state = InstanceState::Terminated;
+        inst.terminated_at = Some(now);
+        inst.termination_reason = Some(reason);
+        let itype = inst.itype.name;
+        // AWS bills Linux spot per-second with a 60-second minimum: even
+        // a boot-poll-shutdown instance costs a billing minute (this is
+        // what makes unmonitored churn expensive — experiment T3/T7).
+        if let Some(start) = inst.running_at {
+            let end = now.max(start + crate::sim::MINUTE);
+            let cost = self.market.cost_integral(itype, start, end);
+            self.cost_log.push(CostRecord {
+                instance: id,
+                itype,
+                span: (start, end),
+                cost_usd: cost,
+                reason,
+            });
+        }
+    }
+
+    /// Billed instance lifetimes so far.
+    pub fn cost_log(&self) -> &[CostRecord] {
+        &self.cost_log
+    }
+
+    /// Bill any still-running instances up to `now` (end-of-run report for
+    /// scenarios that never tear down).
+    pub fn accrued_cost_of_active(&mut self, now: SimTime) -> f64 {
+        let spans: Vec<(&'static str, SimTime, SimTime)> = self
+            .instances
+            .values()
+            .filter(|i| i.is_active())
+            .filter_map(|i| i.billable_span(now).map(|(s, e)| (i.itype.name, s, e)))
+            .collect();
+        spans
+            .into_iter()
+            .map(|(t, s, e)| self.market.cost_integral(t, s, e))
+            .sum()
+    }
+
+    /// All instances (sorted by id) — used by reports and tests.
+    pub fn all_instances(&self) -> Vec<&Instance> {
+        let mut v: Vec<&Instance> = self.instances.values().collect();
+        v.sort_by_key(|i| i.id);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::market::Volatility;
+    use crate::sim::{HOUR, MINUTE};
+
+    fn ec2(vol: Volatility, seed: u64) -> Ec2 {
+        Ec2::new(SpotMarket::new(seed, vol), SimRng::new(seed ^ 0xEC2))
+    }
+
+    fn spec(n: u32, bid: f64) -> SpotFleetSpec {
+        SpotFleetSpec {
+            target_capacity: n,
+            bid_hourly: bid,
+            allowed_types: vec!["m5.large".into()],
+        }
+    }
+
+    #[test]
+    fn fleet_fulfills_to_target() {
+        let mut e = ec2(Volatility::Low, 1);
+        let fid = e.request_spot_fleet(spec(8, 0.09));
+        let evs = e.evaluate_fleets(0);
+        let launched = evs
+            .iter()
+            .filter(|ev| matches!(ev, FleetEvent::InstanceRequested { .. }))
+            .count();
+        assert_eq!(launched, 8);
+        assert_eq!(e.active_count(fid), 8);
+        // Second tick: no extra launches.
+        assert!(e.evaluate_fleets(MINUTE).is_empty());
+    }
+
+    #[test]
+    fn low_bid_gets_no_machines() {
+        let mut e = ec2(Volatility::Low, 2);
+        let fid = e.request_spot_fleet(spec(4, 0.001)); // far below base
+        let evs = e.evaluate_fleets(0);
+        assert!(matches!(
+            evs.as_slice(),
+            [FleetEvent::CapacityUnavailable { missing: 4, .. }]
+        ));
+        assert_eq!(e.active_count(fid), 0);
+    }
+
+    #[test]
+    fn high_bid_fulfills_faster_than_tight_bid() {
+        // Statistical: mean ready_at over many instances.
+        let mean_delay = |bid: f64, seed: u64| -> f64 {
+            let mut e = ec2(Volatility::Low, seed);
+            e.request_spot_fleet(SpotFleetSpec {
+                target_capacity: 50,
+                bid_hourly: bid,
+                allowed_types: vec!["m5.large".into()],
+            });
+            let evs = e.evaluate_fleets(0);
+            let delays: Vec<f64> = evs
+                .iter()
+                .filter_map(|ev| match ev {
+                    FleetEvent::InstanceRequested { ready_at, .. } => {
+                        Some(*ready_at as f64)
+                    }
+                    _ => None,
+                })
+                .collect();
+            delays.iter().sum::<f64>() / delays.len() as f64
+        };
+        let base = 0.096 * 0.31;
+        let tight = mean_delay(base * 1.02, 3);
+        let comfy = mean_delay(base * 2.0, 3);
+        assert!(
+            tight > comfy * 2.0,
+            "tight bid should wait longer: tight={tight} comfy={comfy}"
+        );
+    }
+
+    #[test]
+    fn interruption_when_price_exceeds_bid() {
+        // High volatility + bid at base: must eventually interrupt.
+        let mut e = ec2(Volatility::High, 5);
+        let base = 0.096 * 0.31;
+        let fid = e.request_spot_fleet(spec(4, base * 1.05));
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        let mut interrupted = 0;
+        for k in 1..(48 * 60) {
+            let evs = e.evaluate_fleets(k * MINUTE);
+            interrupted += evs
+                .iter()
+                .filter(|ev| matches!(ev, FleetEvent::InstanceInterrupted { .. }))
+                .count();
+            for ev in &evs {
+                if let FleetEvent::InstanceRequested { id, .. } = ev {
+                    e.mark_running(*id, k * MINUTE + 1);
+                }
+            }
+        }
+        assert!(interrupted > 0, "48h of high volatility, no interruptions?");
+        // Fleet kept replacing: still near target at the end.
+        assert!(e.active_count(fid) >= 3);
+    }
+
+    #[test]
+    fn terminate_bills_once() {
+        let mut e = ec2(Volatility::Low, 7);
+        let _fid = e.request_spot_fleet(spec(1, 0.09));
+        let evs = e.evaluate_fleets(0);
+        let id = match &evs[0] {
+            FleetEvent::InstanceRequested { id, .. } => *id,
+            _ => panic!(),
+        };
+        e.mark_running(id, MINUTE);
+        e.terminate(id, TerminationReason::SelfShutdown, HOUR);
+        e.terminate(id, TerminationReason::SelfShutdown, 2 * HOUR); // no double bill
+        assert_eq!(e.cost_log().len(), 1);
+        let rec = &e.cost_log()[0];
+        assert_eq!(rec.reason, TerminationReason::SelfShutdown);
+        // ~59 minutes of m5.large spot ≈ base price
+        assert!(rec.cost_usd > 0.0 && rec.cost_usd < 0.096);
+    }
+
+    #[test]
+    fn modify_target_does_not_kill_running() {
+        let mut e = ec2(Volatility::Low, 9);
+        let fid = e.request_spot_fleet(spec(6, 0.09));
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        e.modify_target(fid, 1); // cheapest mode
+        e.evaluate_fleets(2 * MINUTE);
+        assert_eq!(e.active_count(fid), 6, "cheapest mode must not terminate");
+        // But a death is not replaced.
+        let victim = e.instances_in_state(fid, InstanceState::Running)[0];
+        e.terminate(victim, TerminationReason::Crash, 3 * MINUTE);
+        e.evaluate_fleets(4 * MINUTE);
+        assert_eq!(e.active_count(fid), 5);
+    }
+
+    #[test]
+    fn cancel_fleet_terminates_everything() {
+        let mut e = ec2(Volatility::Low, 11);
+        let fid = e.request_spot_fleet(spec(5, 0.09));
+        e.evaluate_fleets(0);
+        let killed = e.cancel_fleet(fid, 10 * MINUTE);
+        assert_eq!(killed.len(), 5);
+        assert_eq!(e.active_count(fid), 0);
+        // Cancelled fleet never relaunches.
+        assert!(e.evaluate_fleets(11 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn replacement_after_alarm_termination() {
+        let mut e = ec2(Volatility::Low, 13);
+        let fid = e.request_spot_fleet(spec(3, 0.09));
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        let victim = e.instances_in_state(fid, InstanceState::Running)[0];
+        e.terminate(victim, TerminationReason::AlarmAction, 5 * MINUTE);
+        assert_eq!(e.active_count(fid), 2);
+        let evs = e.evaluate_fleets(6 * MINUTE);
+        assert_eq!(
+            evs.iter()
+                .filter(|ev| matches!(ev, FleetEvent::InstanceRequested { .. }))
+                .count(),
+            1
+        );
+        assert_eq!(e.active_count(fid), 3);
+    }
+
+    #[test]
+    fn allocation_prefers_cheapest_pool() {
+        let mut e = ec2(Volatility::Low, 15);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 2,
+            bid_hourly: 0.50,
+            allowed_types: vec!["m5.2xlarge".into(), "m5.large".into()],
+        });
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            let t = e.instance(id).unwrap().itype.name;
+            assert_eq!(t, "m5.large", "should pick the cheaper pool");
+        }
+    }
+
+    #[test]
+    fn unknown_type_panics() {
+        let mut e = ec2(Volatility::Low, 17);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            e.request_spot_fleet(SpotFleetSpec {
+                target_capacity: 1,
+                bid_hourly: 1.0,
+                allowed_types: vec!["quantum.9000xl".into()],
+            })
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Instance lifecycle: pending → running → terminated.
+
+use crate::sim::SimTime;
+
+use super::pricing::InstanceType;
+
+/// Opaque instance identifier (`i-000042` in logs).
+pub type InstanceId = u64;
+
+/// Why an instance stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TerminationReason {
+    /// Spot price rose above the fleet's bid.
+    SpotInterruption,
+    /// CloudWatch alarm action (the CPU<1%-for-15-min crash reaper).
+    AlarmAction,
+    /// Fleet target capacity reduced (monitor downscale / cheapest mode).
+    FleetDownscale,
+    /// Fleet cancelled at end of run.
+    FleetCancelled,
+    /// The instance's workers found the queue empty and shut it down
+    /// (paper: "If SQS tells them there are no visible jobs then they
+    /// shut themselves down").
+    SelfShutdown,
+    /// Simulated hardware/OS crash (stops doing work; stays "running"
+    /// until the alarm reaper notices, unless replaced).
+    Crash,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Fleet request fulfilled; machine booting (ECS agent not yet up).
+    Pending,
+    Running,
+    Terminated,
+}
+
+/// One EC2 instance.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub itype: &'static InstanceType,
+    pub fleet: super::fleet::FleetId,
+    pub state: InstanceState,
+    pub requested_at: SimTime,
+    /// When the machine became Running (boot complete).
+    pub running_at: Option<SimTime>,
+    pub terminated_at: Option<SimTime>,
+    pub termination_reason: Option<TerminationReason>,
+    /// Set when a simulated crash has made the machine a zombie: it still
+    /// bills but its containers stop publishing work/CPU.
+    pub crashed: bool,
+    /// The bid this instance was launched under (USD/h).
+    pub bid: f64,
+    /// Name tag assigned by the first Docker placed on it (paper: "When a
+    /// Docker container gets placed it gives the instance it's on its own
+    /// name").
+    pub name_tag: Option<String>,
+}
+
+impl Instance {
+    /// Billable lifetime [requested_at, terminated_at or `now`).
+    /// Real AWS bills spot from launch to termination; we bill from
+    /// `running_at` (boot time is seconds in-sim and free-ish either way).
+    pub fn billable_span(&self, now: SimTime) -> Option<(SimTime, SimTime)> {
+        let start = self.running_at?;
+        let end = self.terminated_at.unwrap_or(now);
+        (end > start).then_some((start, end))
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, InstanceState::Pending | InstanceState::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::pricing::instance_type;
+
+    fn inst() -> Instance {
+        Instance {
+            id: 1,
+            itype: instance_type("m5.large").unwrap(),
+            fleet: 0,
+            state: InstanceState::Pending,
+            requested_at: 100,
+            running_at: None,
+            terminated_at: None,
+            termination_reason: None,
+            crashed: false,
+            bid: 0.05,
+            name_tag: None,
+        }
+    }
+
+    #[test]
+    fn billable_span_requires_running() {
+        let mut i = inst();
+        assert_eq!(i.billable_span(1_000), None);
+        i.running_at = Some(200);
+        assert_eq!(i.billable_span(1_000), Some((200, 1_000)));
+        i.terminated_at = Some(700);
+        assert_eq!(i.billable_span(1_000), Some((200, 700)));
+    }
+
+    #[test]
+    fn zero_length_span_is_none() {
+        let mut i = inst();
+        i.running_at = Some(500);
+        i.terminated_at = Some(500);
+        assert_eq!(i.billable_span(9_999), None);
+    }
+
+    #[test]
+    fn active_states() {
+        let mut i = inst();
+        assert!(i.is_active());
+        i.state = InstanceState::Running;
+        assert!(i.is_active());
+        i.state = InstanceState::Terminated;
+        assert!(!i.is_active());
+    }
+}

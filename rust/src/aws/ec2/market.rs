@@ -1,0 +1,275 @@
+//! Spot market: deterministic per-type price paths + capacity pools.
+//!
+//! Each instance type gets an independent price path: a mean-reverting
+//! random walk in log-price around `spot_base_fraction × on_demand`, with
+//! occasional demand spikes that multiply the price for a while (these
+//! are what interrupt fleets bidding near the base).  Paths are generated
+//! lazily in fixed 60-second steps from a per-type forked RNG, so
+//! `price_at(type, t)` is O(1) amortized, identical across replays, and
+//! independent of query order.
+//!
+//! Capacity pools model the "if there is limited capacity for your
+//! requested configuration" behaviour: a pool's free capacity shrinks
+//! during spikes (other bidders took the machines), which delays fleet
+//! fulfillment even when the bid clears the price.
+
+use std::collections::HashMap;
+
+use crate::sim::clock::{SimTime, MINUTE};
+use crate::sim::SimRng;
+
+use super::pricing::{instance_type, InstanceType};
+
+/// Price-path step length.
+pub const STEP: SimTime = MINUTE;
+
+/// Volatility presets used by the experiments (T5 sweeps these).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Volatility {
+    /// Quiet market: rare, small spikes.  Interruptions are uncommon.
+    Low,
+    /// 2022-typical: occasional spikes above 0.5x on-demand.
+    Medium,
+    /// Contended AZ: frequent spikes past on-demand parity.
+    High,
+}
+
+impl Volatility {
+    /// (per-step spike probability, spike multiplier range, step sigma)
+    fn params(self) -> (f64, (f64, f64), f64) {
+        match self {
+            Volatility::Low => (0.0005, (1.3, 1.8), 0.004),
+            Volatility::Medium => (0.002, (1.5, 2.8), 0.010),
+            Volatility::High => (0.008, (1.8, 4.0), 0.022),
+        }
+    }
+}
+
+struct Path {
+    /// Published (spike-inclusive) price per STEP, extended lazily.
+    steps: Vec<f64>,
+    /// The underlying mean-reverting walk, WITHOUT spike multipliers.
+    /// Kept separate so a long spike multiplies the base level once,
+    /// not compoundingly per step.
+    walk: f64,
+    /// Fraction of the pool consumed by outside demand, per STEP.
+    pool_used: Vec<f64>,
+    rng: SimRng,
+    /// Remaining steps of an active spike and its multiplier.
+    spike_left: u32,
+    spike_mult: f64,
+    base: f64,
+}
+
+impl Path {
+    fn extend_to(&mut self, step_idx: usize, vol: Volatility) {
+        let (p_spike, (m_lo, m_hi), sigma) = vol.params();
+        while self.steps.len() <= step_idx {
+            // Mean-revert the un-spiked walk in log space.
+            let log_last = (self.walk / self.base).ln();
+            let drift = -0.05 * log_last;
+            let noise = self.rng.normal() * sigma;
+            self.walk = (self.base * (log_last + drift + noise).exp())
+                .max(self.base * 0.2);
+            // Spikes: start with prob p_spike, last 10-120 steps, and
+            // multiply the walk level while active.
+            if self.spike_left == 0 && self.rng.chance(p_spike) {
+                self.spike_left = self.rng.range_u64(10, 120) as u32;
+                self.spike_mult = self.rng.range_f64(m_lo, m_hi);
+            }
+            let mut used = 0.25 + 0.1 * self.rng.normal().clamp(-2.0, 2.0);
+            let price = if self.spike_left > 0 {
+                self.spike_left -= 1;
+                // During a spike most of the pool is taken.
+                used = (used + 0.6).min(0.98);
+                self.walk * self.spike_mult
+            } else {
+                self.walk
+            };
+            self.steps.push(price);
+            self.pool_used.push(used.clamp(0.0, 0.98));
+        }
+    }
+}
+
+/// The spot market for all instance types.
+pub struct SpotMarket {
+    vol: Volatility,
+    paths: HashMap<&'static str, Path>,
+    seed: u64,
+}
+
+impl SpotMarket {
+    pub fn new(seed: u64, vol: Volatility) -> Self {
+        Self {
+            vol,
+            paths: HashMap::new(),
+            seed,
+        }
+    }
+
+    pub fn volatility(&self) -> Volatility {
+        self.vol
+    }
+
+    fn path(&mut self, ty: &'static InstanceType) -> &mut Path {
+        let seed = self.seed;
+        self.paths.entry(ty.name).or_insert_with(|| {
+            // Stable per-type stream: seed ^ hash(name).
+            let tag = ty
+                .name
+                .bytes()
+                .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+                    (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3)
+                });
+            let mut rng = SimRng::new(seed ^ tag);
+            let base = ty.on_demand_hourly * ty.spot_base_fraction;
+            // Warm start: ±5% of base.
+            let p0 = base * rng.range_f64(0.95, 1.05);
+            Path {
+                steps: vec![p0],
+                walk: p0,
+                pool_used: vec![0.25],
+                rng,
+                spike_left: 0,
+                spike_mult: 1.0,
+                base,
+            }
+        })
+    }
+
+    /// Spot price (USD/h) of `type_name` at simulated time `t`.
+    pub fn price_at(&mut self, type_name: &str, t: SimTime) -> f64 {
+        let ty = instance_type(type_name).expect("unknown instance type");
+        let vol = self.vol;
+        let idx = (t / STEP) as usize;
+        let path = self.path(ty);
+        path.extend_to(idx, vol);
+        path.steps[idx]
+    }
+
+    /// Free machines of this type at time `t` (pool minus outside demand).
+    pub fn free_capacity(&mut self, type_name: &str, t: SimTime) -> u32 {
+        let ty = instance_type(type_name).expect("unknown instance type");
+        let vol = self.vol;
+        let idx = (t / STEP) as usize;
+        let path = self.path(ty);
+        path.extend_to(idx, vol);
+        let used = path.pool_used[idx];
+        ((f64::from(ty.pool_capacity)) * (1.0 - used)).floor().max(0.0) as u32
+    }
+
+    /// Integrate the price path over [start, end): instance-hours × $/h.
+    /// This is what a terminated instance gets billed.
+    pub fn cost_integral(&mut self, type_name: &str, start: SimTime, end: SimTime) -> f64 {
+        if end <= start {
+            return 0.0;
+        }
+        let mut total = 0.0;
+        let mut t = start;
+        while t < end {
+            let step_end = ((t / STEP) + 1) * STEP;
+            let seg_end = step_end.min(end);
+            let price = self.price_at(type_name, t);
+            total += price * (seg_end - t) as f64 / crate::sim::HOUR as f64;
+            t = seg_end;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::HOUR;
+
+    #[test]
+    fn deterministic_and_order_independent() {
+        let mut a = SpotMarket::new(1, Volatility::Medium);
+        let mut b = SpotMarket::new(1, Volatility::Medium);
+        // Query b in reverse order; prices must match a's.
+        let times: Vec<SimTime> = (0..50).map(|i| i * 7 * MINUTE).collect();
+        let pa: Vec<f64> = times.iter().map(|&t| a.price_at("m5.xlarge", t)).collect();
+        let pb: Vec<f64> = times
+            .iter()
+            .rev()
+            .map(|&t| b.price_at("m5.xlarge", t))
+            .collect();
+        let pb_rev: Vec<f64> = pb.into_iter().rev().collect();
+        assert_eq!(pa, pb_rev);
+    }
+
+    #[test]
+    fn price_near_base_in_quiet_market() {
+        let mut m = SpotMarket::new(7, Volatility::Low);
+        let ty = instance_type("m5.large").unwrap();
+        let base = ty.on_demand_hourly * ty.spot_base_fraction;
+        let mean: f64 = (0..500)
+            .map(|i| m.price_at("m5.large", i * STEP))
+            .sum::<f64>()
+            / 500.0;
+        assert!((mean / base - 1.0).abs() < 0.25, "mean={mean} base={base}");
+    }
+
+    #[test]
+    fn high_volatility_spikes_above_on_demand_sometimes() {
+        let mut m = SpotMarket::new(3, Volatility::High);
+        let ty = instance_type("m5.xlarge").unwrap();
+        let max = (0..5_000)
+            .map(|i| m.price_at("m5.xlarge", i * STEP))
+            .fold(0.0f64, f64::max);
+        assert!(
+            max > ty.on_demand_hourly * 0.8,
+            "high vol never spiked: max={max}"
+        );
+    }
+
+    #[test]
+    fn types_have_independent_paths() {
+        let mut m = SpotMarket::new(11, Volatility::Medium);
+        let a: Vec<f64> = (0..20).map(|i| m.price_at("m5.large", i * STEP)).collect();
+        let b: Vec<f64> = (0..20).map(|i| m.price_at("c5.xlarge", i * STEP)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cost_integral_flat_region() {
+        let mut m = SpotMarket::new(13, Volatility::Low);
+        let p = m.price_at("m5.large", 0);
+        // Within a single step the price is constant.
+        let c = m.cost_integral("m5.large", 0, STEP);
+        assert!((c - p * (STEP as f64 / HOUR as f64)).abs() < 1e-12);
+        assert_eq!(m.cost_integral("m5.large", 100, 100), 0.0);
+    }
+
+    #[test]
+    fn cost_integral_additive() {
+        let mut m = SpotMarket::new(17, Volatility::Medium);
+        let whole = m.cost_integral("m5.2xlarge", 0, 3 * HOUR);
+        let parts = m.cost_integral("m5.2xlarge", 0, HOUR)
+            + m.cost_integral("m5.2xlarge", HOUR, 2 * HOUR)
+            + m.cost_integral("m5.2xlarge", 2 * HOUR, 3 * HOUR);
+        assert!((whole - parts).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_drops_during_spikes() {
+        let mut m = SpotMarket::new(19, Volatility::High);
+        let ty = instance_type("m5.large").unwrap();
+        let caps: Vec<u32> = (0..5_000)
+            .map(|i| m.free_capacity("m5.large", i * STEP))
+            .collect();
+        let min = *caps.iter().min().unwrap();
+        let max = *caps.iter().max().unwrap();
+        assert!(min < ty.pool_capacity / 4, "min={min}");
+        assert!(max > ty.pool_capacity / 2, "max={max}");
+    }
+
+    #[test]
+    fn prices_always_positive() {
+        let mut m = SpotMarket::new(23, Volatility::High);
+        for i in 0..2_000 {
+            assert!(m.price_at("r5.xlarge", i * STEP) > 0.0);
+        }
+    }
+}

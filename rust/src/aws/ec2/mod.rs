@@ -1,0 +1,25 @@
+//! Elastic Compute Cloud: instance catalog, spot market, spot fleets.
+//!
+//! The paper's compute substrate is a *spot fleet*: a bid price, a list of
+//! acceptable machine types, and a target capacity; AWS fills it from
+//! whichever pools are cheap, takes "anywhere from a couple of minutes to
+//! several hours" to fulfill depending on bid vs. capacity, and reclaims
+//! instances whenever the spot price rises above the bid.  This module
+//! reproduces each of those behaviours:
+//!
+//! * [`pricing`]  — the instance-type catalog (vCPU / memory / on-demand $)
+//! * [`market`]   — deterministic per-type spot price paths (mean-reverting
+//!   log-walk with spikes) and finite capacity pools
+//! * [`instance`] — instance lifecycle (pending → running → terminated)
+//! * [`fleet`]    — SpotFleetRequest evaluation: allocation, fulfillment
+//!   latency, interruption, replacement, target-capacity modification
+
+pub mod fleet;
+pub mod instance;
+pub mod market;
+pub mod pricing;
+
+pub use fleet::{Ec2, FleetEvent, FleetId, SpotFleetSpec};
+pub use instance::{Instance, InstanceId, InstanceState, TerminationReason};
+pub use market::{SpotMarket, Volatility};
+pub use pricing::{instance_type, InstanceType, INSTANCE_TYPES};

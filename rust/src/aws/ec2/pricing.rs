@@ -1,0 +1,75 @@
+//! Instance-type catalog: shapes and on-demand prices.
+//!
+//! A representative slice of the m5/c5/r5 families (the paper's docs use
+//! the ECS-optimized AMI on general-purpose instances; Distributed-Fiji's
+//! stitching example wants one big machine, hence the 12xlarge).  Prices
+//! are 2022-era us-east-1 on-demand USD/hour — absolute values only anchor
+//! the cost *ratios* the experiments report.
+
+/// Static description of an EC2 instance type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceType {
+    pub name: &'static str,
+    pub vcpus: u32,
+    pub memory_mb: u64,
+    /// On-demand price, USD per hour.
+    pub on_demand_hourly: f64,
+    /// Long-run average spot discount (spot base ≈ this × on-demand).
+    pub spot_base_fraction: f64,
+    /// Nominal pool capacity (instances available to this account/region).
+    pub pool_capacity: u32,
+}
+
+/// The catalog.  Ordered roughly by size within family.
+pub const INSTANCE_TYPES: &[InstanceType] = &[
+    InstanceType { name: "m5.large",    vcpus: 2,  memory_mb: 8_192,   on_demand_hourly: 0.096, spot_base_fraction: 0.31, pool_capacity: 400 },
+    InstanceType { name: "m5.xlarge",   vcpus: 4,  memory_mb: 16_384,  on_demand_hourly: 0.192, spot_base_fraction: 0.30, pool_capacity: 300 },
+    InstanceType { name: "m5.2xlarge",  vcpus: 8,  memory_mb: 32_768,  on_demand_hourly: 0.384, spot_base_fraction: 0.31, pool_capacity: 200 },
+    InstanceType { name: "m5.4xlarge",  vcpus: 16, memory_mb: 65_536,  on_demand_hourly: 0.768, spot_base_fraction: 0.33, pool_capacity: 120 },
+    InstanceType { name: "m5.12xlarge", vcpus: 48, memory_mb: 196_608, on_demand_hourly: 2.304, spot_base_fraction: 0.35, pool_capacity: 24 },
+    InstanceType { name: "c5.xlarge",   vcpus: 4,  memory_mb: 8_192,   on_demand_hourly: 0.170, spot_base_fraction: 0.32, pool_capacity: 250 },
+    InstanceType { name: "c5.2xlarge",  vcpus: 8,  memory_mb: 16_384,  on_demand_hourly: 0.340, spot_base_fraction: 0.33, pool_capacity: 160 },
+    InstanceType { name: "r5.xlarge",   vcpus: 4,  memory_mb: 32_768,  on_demand_hourly: 0.252, spot_base_fraction: 0.32, pool_capacity: 150 },
+];
+
+/// Look up a type by name.
+pub fn instance_type(name: &str) -> Option<&'static InstanceType> {
+    INSTANCE_TYPES.iter().find(|t| t.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_known_types() {
+        let t = instance_type("m5.xlarge").unwrap();
+        assert_eq!(t.vcpus, 4);
+        assert_eq!(t.memory_mb, 16_384);
+        assert!(instance_type("x1e.nope").is_none());
+    }
+
+    #[test]
+    fn names_unique() {
+        let mut names: Vec<_> = INSTANCE_TYPES.iter().map(|t| t.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), INSTANCE_TYPES.len());
+    }
+
+    #[test]
+    fn prices_scale_with_size_within_family() {
+        let l = instance_type("m5.large").unwrap();
+        let xl = instance_type("m5.xlarge").unwrap();
+        let xxl = instance_type("m5.2xlarge").unwrap();
+        assert!((xl.on_demand_hourly / l.on_demand_hourly - 2.0).abs() < 0.01);
+        assert!((xxl.on_demand_hourly / xl.on_demand_hourly - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn spot_base_is_big_discount() {
+        for t in INSTANCE_TYPES {
+            assert!(t.spot_base_fraction > 0.2 && t.spot_base_fraction < 0.5);
+        }
+    }
+}

@@ -1,0 +1,473 @@
+//! Elastic Container Service: task definitions, services, bin-packing
+//! placement of containers onto instances.
+//!
+//! Reproduced paper behaviours (Summary step 3, orange text):
+//!
+//! * "ECS puts Docker containers onto EC2 instances.  If there is a
+//!   mismatch within your Config file and the Docker is larger than the
+//!   instance it will not be placed."
+//! * "ECS will keep placing Dockers onto an instance until it is full, so
+//!   if you accidentally create instances that are too large you may end
+//!   up with more Dockers placed on it than intended."  (Experiment T9.)
+//! * Distinct clusters isolate concurrent analyses (the
+//!   NuclearSegmentation_Drosophila vs _HeLa example).
+//!
+//! CPU is in CPU shares (1024 = one vCPU) and memory in MB, exactly the
+//! units of the Config file's CPU_SHARES and MEMORY knobs.
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+
+use super::ec2::InstanceId;
+
+/// Container identifier.
+pub type ContainerId = u64;
+
+/// ECS task definition: the shape of one Docker container.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDefinition {
+    pub family: String,
+    /// CPU_SHARES (1024 = 1 vCPU).
+    pub cpu_shares: u32,
+    /// MEMORY in MB.
+    pub memory_mb: u64,
+    /// Environment passed to the container (DS passes its whole Config).
+    pub env: Vec<(String, String)>,
+}
+
+/// An ECS service: "how many Dockers you want".
+#[derive(Debug, Clone)]
+pub struct Service {
+    pub name: String,
+    pub cluster: String,
+    pub task_family: String,
+    pub desired_count: u32,
+}
+
+/// A placed container.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Container {
+    pub id: ContainerId,
+    pub service: String,
+    pub task_family: String,
+    pub instance: InstanceId,
+    pub placed_at: SimTime,
+    pub stopped: bool,
+}
+
+#[derive(Debug, Default)]
+struct Cluster {
+    /// Registered container instances (EC2 ids) in registration order.
+    instances: Vec<InstanceId>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum EcsError {
+    #[error("ClusterNotFound: {0}")]
+    NoSuchCluster(String),
+    #[error("TaskDefinitionNotFound: {0}")]
+    NoSuchTaskDef(String),
+    #[error("ServiceNotFound: {0}")]
+    NoSuchService(String),
+}
+
+/// The ECS control plane.
+#[derive(Debug, Default)]
+pub struct Ecs {
+    clusters: HashMap<String, Cluster>,
+    task_defs: HashMap<String, TaskDefinition>,
+    services: HashMap<String, Service>,
+    containers: HashMap<ContainerId, Container>,
+    /// vCPU shares and memory capacity per registered instance.
+    capacity: HashMap<InstanceId, (u32, u64)>,
+    /// Per-instance container index (ids ascending) and consumed
+    /// (cpu_shares, memory) — keeps `containers_on`/`free_on` O(k)
+    /// instead of O(all containers) (perf pass).
+    by_instance: HashMap<InstanceId, Vec<ContainerId>>,
+    used: HashMap<InstanceId, (u32, u64)>,
+    /// Running container count per service (placement bookkeeping).
+    per_service: HashMap<String, u32>,
+    next_container: ContainerId,
+}
+
+impl Ecs {
+    pub fn new() -> Self {
+        let mut ecs = Self::default();
+        // Every AWS account comes with a "default" cluster.
+        ecs.create_cluster("default");
+        ecs
+    }
+
+    pub fn create_cluster(&mut self, name: &str) {
+        self.clusters.entry(name.to_string()).or_default();
+    }
+
+    /// RegisterTaskDefinition (idempotent by family: revisions collapse).
+    pub fn register_task_definition(&mut self, def: TaskDefinition) {
+        self.task_defs.insert(def.family.clone(), def);
+    }
+
+    pub fn task_definition(&self, family: &str) -> Option<&TaskDefinition> {
+        self.task_defs.get(family)
+    }
+
+    pub fn deregister_task_definition(&mut self, family: &str) {
+        self.task_defs.remove(family);
+    }
+
+    /// CreateService / UpdateService.
+    pub fn create_service(&mut self, svc: Service) -> Result<(), EcsError> {
+        if !self.clusters.contains_key(&svc.cluster) {
+            return Err(EcsError::NoSuchCluster(svc.cluster.clone()));
+        }
+        if !self.task_defs.contains_key(&svc.task_family) {
+            return Err(EcsError::NoSuchTaskDef(svc.task_family.clone()));
+        }
+        self.services.insert(svc.name.clone(), svc);
+        Ok(())
+    }
+
+    /// UpdateService desiredCount (monitor downscales this to 0).
+    pub fn set_desired_count(&mut self, service: &str, n: u32) -> Result<(), EcsError> {
+        self.services
+            .get_mut(service)
+            .map(|s| s.desired_count = n)
+            .ok_or_else(|| EcsError::NoSuchService(service.into()))
+    }
+
+    pub fn service(&self, name: &str) -> Option<&Service> {
+        self.services.get(name)
+    }
+
+    /// DeleteService.
+    pub fn delete_service(&mut self, name: &str) {
+        self.services.remove(name);
+        // Containers of a deleted service stop (and are dropped: stopped
+        // containers are never queried again, and keeping them would make
+        // placement scans O(all containers ever)).
+        let victims: Vec<ContainerId> = self
+            .containers
+            .values()
+            .filter(|c| c.service == name)
+            .map(|c| c.id)
+            .collect();
+        for id in victims {
+            self.remove_container(id);
+        }
+    }
+
+    /// An EC2 instance's ECS agent comes up: join the cluster.
+    pub fn register_instance(
+        &mut self,
+        cluster: &str,
+        id: InstanceId,
+        vcpus: u32,
+        memory_mb: u64,
+    ) -> Result<(), EcsError> {
+        let c = self
+            .clusters
+            .get_mut(cluster)
+            .ok_or_else(|| EcsError::NoSuchCluster(cluster.into()))?;
+        if !c.instances.contains(&id) {
+            c.instances.push(id);
+        }
+        self.capacity.insert(id, (vcpus * 1024, memory_mb));
+        Ok(())
+    }
+
+    /// Instance died: remove from cluster, stop its containers.
+    /// Returns ids of stopped containers.
+    pub fn deregister_instance(&mut self, id: InstanceId) -> Vec<ContainerId> {
+        for c in self.clusters.values_mut() {
+            c.instances.retain(|&i| i != id);
+        }
+        self.capacity.remove(&id);
+        let stopped = self.by_instance.remove(&id).unwrap_or_default();
+        self.used.remove(&id);
+        for &cid in &stopped {
+            if let Some(c) = self.containers.remove(&cid) {
+                if let Some(n) = self.per_service.get_mut(&c.service) {
+                    *n = n.saturating_sub(1);
+                }
+            }
+        }
+        stopped
+    }
+
+    /// Drop one container record, maintaining all indexes.
+    fn remove_container(&mut self, id: ContainerId) {
+        let Some(c) = self.containers.remove(&id) else {
+            return;
+        };
+        if let Some(v) = self.by_instance.get_mut(&c.instance) {
+            v.retain(|&x| x != id);
+        }
+        if let Some(td) = self.task_defs.get(&c.task_family) {
+            if let Some(u) = self.used.get_mut(&c.instance) {
+                u.0 = u.0.saturating_sub(td.cpu_shares);
+                u.1 = u.1.saturating_sub(td.memory_mb);
+            }
+        }
+        if let Some(n) = self.per_service.get_mut(&c.service) {
+            *n = n.saturating_sub(1);
+        }
+    }
+
+    /// Free (cpu_shares, memory) on an instance — O(1) via the used map.
+    fn free_on(&self, id: InstanceId) -> (u32, u64) {
+        let Some(&(cap_cpu, cap_mem)) = self.capacity.get(&id) else {
+            return (0, 0);
+        };
+        let (used_cpu, used_mem) = self.used.get(&id).copied().unwrap_or((0, 0));
+        (
+            cap_cpu.saturating_sub(used_cpu),
+            cap_mem.saturating_sub(used_mem),
+        )
+    }
+
+    /// The ECS scheduler pass: place containers for every service that is
+    /// below its desired count, packing each registered instance until it
+    /// is full.  Returns newly placed containers.
+    pub fn place_tasks(&mut self, now: SimTime) -> Vec<Container> {
+        let mut placed = Vec::new();
+        let service_names: Vec<String> = {
+            let mut v: Vec<String> = self.services.keys().cloned().collect();
+            v.sort();
+            v
+        };
+        for sname in service_names {
+            let (cluster, family, desired) = {
+                let s = &self.services[&sname];
+                (s.cluster.clone(), s.task_family.clone(), s.desired_count)
+            };
+            let Some(td) = self.task_defs.get(&family).cloned() else {
+                continue;
+            };
+            let mut running = self.per_service.get(&sname).copied().unwrap_or(0);
+            if running >= desired {
+                continue;
+            }
+            let instance_ids = self
+                .clusters
+                .get(&cluster)
+                .map(|c| c.instances.clone())
+                .unwrap_or_default();
+            'outer: for iid in instance_ids {
+                loop {
+                    if running >= desired {
+                        break 'outer;
+                    }
+                    let (free_cpu, free_mem) = self.free_on(iid);
+                    if free_cpu < td.cpu_shares || free_mem < td.memory_mb {
+                        break; // this instance is full; next one
+                    }
+                    self.next_container += 1;
+                    let c = Container {
+                        id: self.next_container,
+                        service: sname.clone(),
+                        task_family: family.clone(),
+                        instance: iid,
+                        placed_at: now,
+                        stopped: false,
+                    };
+                    self.containers.insert(c.id, c.clone());
+                    // Ids ascend, so push keeps the index sorted.
+                    self.by_instance.entry(iid).or_default().push(c.id);
+                    let u = self.used.entry(iid).or_insert((0, 0));
+                    u.0 += td.cpu_shares;
+                    u.1 += td.memory_mb;
+                    *self.per_service.entry(sname.clone()).or_insert(0) += 1;
+                    placed.push(c);
+                    running += 1;
+                }
+            }
+        }
+        placed
+    }
+
+    /// Stop one container (worker self-stop or service scale-in).  The
+    /// record is dropped immediately: its capacity frees up and it never
+    /// counts toward a service again.
+    pub fn stop_container(&mut self, id: ContainerId) {
+        self.remove_container(id);
+    }
+
+    pub fn container(&self, id: ContainerId) -> Option<&Container> {
+        self.containers.get(&id)
+    }
+
+    /// Running containers on an instance, sorted by id (O(k) via index).
+    pub fn containers_on(&self, id: InstanceId) -> Vec<&Container> {
+        self.by_instance
+            .get(&id)
+            .map(|ids| ids.iter().filter_map(|c| self.containers.get(c)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Running containers of a service (O(1)).
+    pub fn running_count(&self, service: &str) -> u32 {
+        self.per_service.get(service).copied().unwrap_or(0)
+    }
+
+    /// All resources gone?  (Monitor cleanup invariant.)
+    pub fn is_clean(&self, service: &str, family: &str) -> bool {
+        !self.services.contains_key(service)
+            && !self.task_defs.contains_key(family)
+            && self.running_count(service) == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn td(cpu: u32, mem: u64) -> TaskDefinition {
+        TaskDefinition {
+            family: "app".into(),
+            cpu_shares: cpu,
+            memory_mb: mem,
+            env: vec![],
+        }
+    }
+
+    fn ecs_with(cpu: u32, mem: u64, desired: u32) -> Ecs {
+        let mut e = Ecs::new();
+        e.register_task_definition(td(cpu, mem));
+        e.create_service(Service {
+            name: "app-svc".into(),
+            cluster: "default".into(),
+            task_family: "app".into(),
+            desired_count: desired,
+        })
+        .unwrap();
+        e
+    }
+
+    #[test]
+    fn packs_until_instance_full() {
+        // 4 vCPU, 16 GB instance; 1024-share 4 GB containers -> fits 4.
+        let mut e = ecs_with(1024, 4_096, 10);
+        e.register_instance("default", 1, 4, 16_384).unwrap();
+        let placed = e.place_tasks(0);
+        assert_eq!(placed.len(), 4);
+        assert!(placed.iter().all(|c| c.instance == 1));
+    }
+
+    #[test]
+    fn too_big_docker_never_placed() {
+        // Paper: "the Docker is larger than the instance it will not be placed".
+        let mut e = ecs_with(8 * 1024, 4_096, 2);
+        e.register_instance("default", 1, 4, 16_384).unwrap();
+        assert!(e.place_tasks(0).is_empty());
+    }
+
+    #[test]
+    fn oversized_instance_gets_overpacked() {
+        // Paper: intend 2 Dockers/machine but give it a 16-vCPU machine ->
+        // ECS packs 16 (memory-permitting).
+        let mut e = ecs_with(1024, 1_024, 100);
+        e.register_instance("default", 1, 16, 65_536).unwrap();
+        let placed = e.place_tasks(0);
+        assert_eq!(placed.len(), 16, "ECS blindly fills the big instance");
+    }
+
+    #[test]
+    fn respects_desired_count() {
+        let mut e = ecs_with(1024, 2_048, 3);
+        e.register_instance("default", 1, 16, 65_536).unwrap();
+        assert_eq!(e.place_tasks(0).len(), 3);
+        assert_eq!(e.place_tasks(1), vec![]);
+        assert_eq!(e.running_count("app-svc"), 3);
+    }
+
+    #[test]
+    fn memory_limits_placement() {
+        // Plenty of CPU, tight memory: 16 GB / 7 GB -> 2 per machine.
+        let mut e = ecs_with(256, 7_000, 10);
+        e.register_instance("default", 1, 16, 16_384).unwrap();
+        assert_eq!(e.place_tasks(0).len(), 2);
+    }
+
+    #[test]
+    fn spreads_to_later_instances_after_fill() {
+        let mut e = ecs_with(1024, 4_096, 6);
+        e.register_instance("default", 1, 4, 16_384).unwrap();
+        e.register_instance("default", 2, 4, 16_384).unwrap();
+        let placed = e.place_tasks(0);
+        assert_eq!(placed.len(), 6);
+        let on1 = placed.iter().filter(|c| c.instance == 1).count();
+        let on2 = placed.iter().filter(|c| c.instance == 2).count();
+        assert_eq!((on1, on2), (4, 2), "fills instance 1 before spilling");
+    }
+
+    #[test]
+    fn deregister_stops_containers_and_frees_slots() {
+        let mut e = ecs_with(1024, 4_096, 4);
+        e.register_instance("default", 1, 4, 16_384).unwrap();
+        e.place_tasks(0);
+        let stopped = e.deregister_instance(1);
+        assert_eq!(stopped.len(), 4);
+        assert_eq!(e.running_count("app-svc"), 0);
+        // Replacement instance gets the containers back.
+        e.register_instance("default", 2, 4, 16_384).unwrap();
+        assert_eq!(e.place_tasks(1).len(), 4);
+    }
+
+    #[test]
+    fn distinct_clusters_isolate_placement() {
+        let mut e = Ecs::new();
+        e.create_cluster("hela");
+        e.register_task_definition(td(1024, 2_048));
+        e.create_service(Service {
+            name: "svc".into(),
+            cluster: "hela".into(),
+            task_family: "app".into(),
+            desired_count: 4,
+        })
+        .unwrap();
+        // Instance registered in *default*, service wants *hela* -> nothing.
+        e.register_instance("default", 1, 8, 32_768).unwrap();
+        assert!(e.place_tasks(0).is_empty());
+        e.register_instance("hela", 2, 8, 32_768).unwrap();
+        assert_eq!(e.place_tasks(1).len(), 4);
+    }
+
+    #[test]
+    fn service_requires_cluster_and_taskdef() {
+        let mut e = Ecs::new();
+        let err = e
+            .create_service(Service {
+                name: "s".into(),
+                cluster: "missing".into(),
+                task_family: "app".into(),
+                desired_count: 1,
+            })
+            .unwrap_err();
+        assert!(matches!(err, EcsError::NoSuchCluster(_)));
+        e.create_cluster("c");
+        let err = e
+            .create_service(Service {
+                name: "s".into(),
+                cluster: "c".into(),
+                task_family: "app".into(),
+                desired_count: 1,
+            })
+            .unwrap_err();
+        assert!(matches!(err, EcsError::NoSuchTaskDef(_)));
+    }
+
+    #[test]
+    fn scale_to_zero_then_delete_is_clean() {
+        let mut e = ecs_with(1024, 2_048, 2);
+        e.register_instance("default", 1, 4, 8_192).unwrap();
+        let placed = e.place_tasks(0);
+        e.set_desired_count("app-svc", 0).unwrap();
+        for c in &placed {
+            e.stop_container(c.id);
+        }
+        e.delete_service("app-svc");
+        e.deregister_task_definition("app");
+        assert!(e.is_clean("app-svc", "app"));
+    }
+}

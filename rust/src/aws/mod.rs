@@ -1,0 +1,21 @@
+//! Simulated AWS substrate — the five services Distributed-Something
+//! coordinates, plus billing.
+//!
+//! Each service is a *passive*, synchronous state machine: all mutating
+//! calls take the current [`crate::sim::SimTime`] and the event loop in
+//! [`crate::coordinator::run`] decides when things happen.  That keeps
+//! every service unit-testable in isolation and the whole-account
+//! simulation deterministic.
+//!
+//! Fidelity notes per service live in their module docs; the
+//! paper-behaviour each one must reproduce is indexed in DESIGN.md §2.
+
+pub mod account;
+pub mod billing;
+pub mod cloudwatch;
+pub mod ec2;
+pub mod ecs;
+pub mod s3;
+pub mod sqs;
+
+pub use account::AwsAccount;

@@ -1,0 +1,282 @@
+//! Simple Storage Service: buckets of key -> object.
+//!
+//! DS uses S3 four ways (paper, Online Methods): input data lives in a
+//! bucket; workers download inputs and upload results; `CHECK_IF_DONE`
+//! lists the output prefix and counts qualifying files; the monitor
+//! exports CloudWatch logs into the bucket at the end of a run.  So the
+//! simulator implements exactly: put / get / list-prefix / size metadata,
+//! with request and byte accounting for the billing meter.
+//!
+//! Object bodies are either real bytes (PJRT inputs/outputs in the
+//! end-to-end examples) or synthetic sizes (scale benchmarks that model
+//! thousands of jobs without holding gigabytes in RAM).  Both carry the
+//! same metadata so `CHECK_IF_DONE` logic cannot tell them apart.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::sim::SimTime;
+
+/// An object body: real bytes or a size-only placeholder.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Body {
+    Bytes(Vec<u8>),
+    Synthetic { size: u64 },
+}
+
+impl Body {
+    pub fn len(&self) -> u64 {
+        match self {
+            Body::Bytes(b) => b.len() as u64,
+            Body::Synthetic { size } => *size,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Real bytes, if present.
+    pub fn bytes(&self) -> Option<&[u8]> {
+        match self {
+            Body::Bytes(b) => Some(b),
+            Body::Synthetic { .. } => None,
+        }
+    }
+}
+
+/// A stored object.
+#[derive(Debug, Clone)]
+pub struct Object {
+    pub body: Body,
+    pub last_modified: SimTime,
+}
+
+#[derive(Debug, Default)]
+struct Bucket {
+    // BTreeMap: list-prefix is a range scan, like real S3's sorted keyspace.
+    objects: BTreeMap<String, Object>,
+}
+
+/// Request counters for the billing meter (real S3 bills per request
+/// class and per byte-month stored).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct S3Stats {
+    pub put_requests: u64,
+    pub get_requests: u64,
+    pub list_requests: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// The S3 control plane: named buckets.
+#[derive(Debug, Default)]
+pub struct S3 {
+    buckets: HashMap<String, Bucket>,
+    stats: S3Stats,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum S3Error {
+    #[error("NoSuchBucket: {0}")]
+    NoSuchBucket(String),
+    #[error("NoSuchKey: {0}")]
+    NoSuchKey(String),
+}
+
+impl S3 {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a bucket (idempotent, like CreateBucket on an owned name).
+    pub fn create_bucket(&mut self, name: &str) {
+        self.buckets.entry(name.to_string()).or_default();
+    }
+
+    pub fn bucket_exists(&self, name: &str) -> bool {
+        self.buckets.contains_key(name)
+    }
+
+    /// PutObject.
+    pub fn put(
+        &mut self,
+        bucket: &str,
+        key: &str,
+        body: Body,
+        now: SimTime,
+    ) -> Result<(), S3Error> {
+        self.stats.put_requests += 1;
+        self.stats.bytes_in += body.len();
+        let b = self
+            .buckets
+            .get_mut(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.into()))?;
+        b.objects.insert(
+            key.to_string(),
+            Object {
+                body,
+                last_modified: now,
+            },
+        );
+        Ok(())
+    }
+
+    /// GetObject.
+    pub fn get(&mut self, bucket: &str, key: &str) -> Result<&Object, S3Error> {
+        self.stats.get_requests += 1;
+        let b = self
+            .buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.into()))?;
+        let obj = b
+            .objects
+            .get(key)
+            .ok_or_else(|| S3Error::NoSuchKey(key.into()))?;
+        self.stats.bytes_out += obj.body.len();
+        Ok(obj)
+    }
+
+    /// HeadObject: metadata without a byte transfer.
+    pub fn head(&mut self, bucket: &str, key: &str) -> Option<(u64, SimTime)> {
+        self.stats.get_requests += 1;
+        self.buckets
+            .get(bucket)?
+            .objects
+            .get(key)
+            .map(|o| (o.body.len(), o.last_modified))
+    }
+
+    /// ListObjectsV2 with a prefix: returns (key, size) pairs in key order.
+    pub fn list_prefix(&mut self, bucket: &str, prefix: &str) -> Vec<(String, u64)> {
+        self.stats.list_requests += 1;
+        let Some(b) = self.buckets.get(bucket) else {
+            return Vec::new();
+        };
+        b.objects
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, o)| (k.clone(), o.body.len()))
+            .collect()
+    }
+
+    /// DeleteObject (idempotent).
+    pub fn delete(&mut self, bucket: &str, key: &str) {
+        self.stats.put_requests += 1;
+        if let Some(b) = self.buckets.get_mut(bucket) {
+            b.objects.remove(key);
+        }
+    }
+
+    /// Total bytes stored across all buckets (for storage billing).
+    pub fn total_bytes(&self) -> u64 {
+        self.buckets
+            .values()
+            .flat_map(|b| b.objects.values())
+            .map(|o| o.body.len())
+            .sum()
+    }
+
+    /// Number of objects under a prefix (cheap CHECK_IF_DONE helper).
+    pub fn count_prefix(&mut self, bucket: &str, prefix: &str) -> usize {
+        self.list_prefix(bucket, prefix).len()
+    }
+
+    pub fn stats(&self) -> S3Stats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s3_with_bucket() -> S3 {
+        let mut s3 = S3::new();
+        s3.create_bucket("data");
+        s3
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s3 = s3_with_bucket();
+        s3.put("data", "a/b.bin", Body::Bytes(vec![1, 2, 3]), 5).unwrap();
+        let obj = s3.get("data", "a/b.bin").unwrap();
+        assert_eq!(obj.body.bytes(), Some(&[1u8, 2, 3][..]));
+        assert_eq!(obj.last_modified, 5);
+    }
+
+    #[test]
+    fn missing_bucket_and_key() {
+        let mut s3 = s3_with_bucket();
+        assert_eq!(
+            s3.put("nope", "k", Body::Synthetic { size: 1 }, 0),
+            Err(S3Error::NoSuchBucket("nope".into()))
+        );
+        assert!(matches!(s3.get("data", "k"), Err(S3Error::NoSuchKey(_))));
+    }
+
+    #[test]
+    fn overwrite_updates_mtime_and_body() {
+        let mut s3 = s3_with_bucket();
+        s3.put("data", "k", Body::Synthetic { size: 10 }, 1).unwrap();
+        s3.put("data", "k", Body::Synthetic { size: 20 }, 2).unwrap();
+        let obj = s3.get("data", "k").unwrap();
+        assert_eq!(obj.body.len(), 20);
+        assert_eq!(obj.last_modified, 2);
+    }
+
+    #[test]
+    fn list_prefix_sorted_and_scoped() {
+        let mut s3 = s3_with_bucket();
+        for k in ["out/1.csv", "out/2.csv", "out/10.csv", "other/x"] {
+            s3.put("data", k, Body::Synthetic { size: 7 }, 0).unwrap();
+        }
+        let listed = s3.list_prefix("data", "out/");
+        let keys: Vec<&str> = listed.iter().map(|(k, _)| k.as_str()).collect();
+        assert_eq!(keys, vec!["out/1.csv", "out/10.csv", "out/2.csv"]);
+        assert!(listed.iter().all(|&(_, sz)| sz == 7));
+        assert!(s3.list_prefix("data", "missing/").is_empty());
+    }
+
+    #[test]
+    fn prefix_is_string_prefix_not_dir() {
+        let mut s3 = s3_with_bucket();
+        s3.put("data", "out", Body::Synthetic { size: 1 }, 0).unwrap();
+        s3.put("data", "out/1", Body::Synthetic { size: 1 }, 0).unwrap();
+        s3.put("data", "outlier", Body::Synthetic { size: 1 }, 0).unwrap();
+        assert_eq!(s3.count_prefix("data", "out"), 3);
+        assert_eq!(s3.count_prefix("data", "out/"), 1);
+    }
+
+    #[test]
+    fn delete_idempotent() {
+        let mut s3 = s3_with_bucket();
+        s3.put("data", "k", Body::Synthetic { size: 3 }, 0).unwrap();
+        s3.delete("data", "k");
+        s3.delete("data", "k");
+        assert!(s3.get("data", "k").is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s3 = s3_with_bucket();
+        s3.put("data", "k", Body::Bytes(vec![0; 100]), 0).unwrap();
+        let _ = s3.get("data", "k");
+        let _ = s3.list_prefix("data", "");
+        let st = s3.stats();
+        assert_eq!(st.put_requests, 1);
+        assert_eq!(st.get_requests, 1);
+        assert_eq!(st.list_requests, 1);
+        assert_eq!(st.bytes_in, 100);
+        assert_eq!(st.bytes_out, 100);
+    }
+
+    #[test]
+    fn total_bytes_sums_buckets() {
+        let mut s3 = s3_with_bucket();
+        s3.create_bucket("logs");
+        s3.put("data", "a", Body::Synthetic { size: 30 }, 0).unwrap();
+        s3.put("logs", "b", Body::Bytes(vec![0; 12]), 0).unwrap();
+        assert_eq!(s3.total_bytes(), 42);
+    }
+}

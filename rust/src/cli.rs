@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (no clap in the vendored crate set).
+//!
+//! Supports `ds <command> [positionals] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key value | --key=value | --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), Some(v.to_string()));
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), Some(v));
+                } else {
+                    out.flags.insert(name.to_string(), None);
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name)?.as_deref()
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn command_and_positionals() {
+        let a = parse("submit-job files/job.json extra");
+        assert_eq!(a.command.as_deref(), Some("submit-job"));
+        assert_eq!(a.positionals, vec!["files/job.json", "extra"]);
+    }
+
+    #[test]
+    fn flags_all_forms() {
+        let a = parse("run --cheapest --seed 7 --bucket=my-bkt trailing");
+        assert!(a.flag("cheapest"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.get("bucket"), Some("my-bkt"));
+        assert_eq!(a.positionals, vec!["trailing"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("region", "us-east-1"), "us-east-1");
+        assert_eq!(a.get_f64("price", 0.1), 0.1);
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.command.is_none());
+    }
+}

@@ -1,0 +1,390 @@
+//! `config.py` analog: every knob the paper's Step 1 documents, same
+//! names, same semantics, JSON instead of Python.
+
+use crate::json::{parse, Value};
+use crate::sim::clock::{from_secs_f64, SimTime};
+
+use super::{invalid, ConfigError};
+
+/// The CHECK_IF_DONE block: "whether or not to check the output folder
+/// before proceeding" plus the three qualifiers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckIfDone {
+    pub enabled: bool,
+    /// EXPECTED_NUMBER_FILES: files required to call a job complete.
+    pub expected_number_files: u32,
+    /// MIN_FILE_SIZE_BYTES: smaller objects don't count (corruption guard).
+    pub min_file_size_bytes: u64,
+    /// NECESSARY_STRING: must appear in the key to count ("" = any).
+    pub necessary_string: String,
+}
+
+impl Default for CheckIfDone {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            expected_number_files: 1,
+            min_file_size_bytes: 0,
+            necessary_string: String::new(),
+        }
+    }
+}
+
+/// The Config file.  Field names mirror the paper's config.py variables.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AppConfig {
+    /// APP_NAME: ties clusters, tasks, services, logs, alarms together.
+    pub app_name: String,
+    /// DOCKERHUB_TAG analog: which AOT workload artifact to run.
+    pub workload_id: String,
+
+    // EC2 AND ECS INFORMATION
+    /// ECS_CLUSTER.
+    pub ecs_cluster: String,
+    /// CLUSTER_MACHINES: EC2 instances in the spot fleet.
+    pub cluster_machines: u32,
+    /// TASKS_PER_MACHINE: Docker containers per machine.
+    pub tasks_per_machine: u32,
+    /// MACHINE_TYPE: acceptable instance types, cheapest-first allocation.
+    pub machine_types: Vec<String>,
+    /// MACHINE_PRICE: spot bid, USD/hour.
+    pub machine_price: f64,
+    /// EBS_VOL_SIZE in GB (minimum 22, per the paper).
+    pub ebs_vol_size_gb: u32,
+
+    // DOCKER INSTANCE RUNNING ENVIRONMENT
+    /// DOCKER_CORES: copies of the worker per container.
+    pub docker_cores: u32,
+    /// CPU_SHARES: 1024 = one vCPU.
+    pub cpu_shares: u32,
+    /// MEMORY: MB per container.
+    pub memory_mb: u64,
+    /// SECONDS_TO_START: stagger between core startups.
+    pub seconds_to_start: SimTime,
+
+    // SQS QUEUE INFORMATION
+    /// SQS_QUEUE_NAME.
+    pub sqs_queue_name: String,
+    /// SQS_MESSAGE_VISIBILITY.
+    pub sqs_message_visibility: SimTime,
+    /// SQS_DEAD_LETTER_QUEUE.
+    pub sqs_dead_letter_queue: String,
+    /// Receives before dead-lettering (AWS redrive maxReceiveCount).
+    pub max_receive_count: u32,
+
+    // LOG GROUP INFORMATION
+    /// LOG_GROUP_NAME.
+    pub log_group_name: String,
+
+    // REDUNDANCY CHECKS
+    pub check_if_done: CheckIfDone,
+
+    /// VARIABLE: extra env passed through to the worker, verbatim.
+    pub variables: Vec<(String, String)>,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        Self {
+            app_name: "MyApp".into(),
+            workload_id: "cp_256_b1".into(),
+            ecs_cluster: "default".into(),
+            cluster_machines: 4,
+            tasks_per_machine: 2,
+            machine_types: vec!["m5.xlarge".into()],
+            machine_price: 0.10,
+            ebs_vol_size_gb: 22,
+            docker_cores: 2,
+            cpu_shares: 2048,
+            memory_mb: 7_500,
+            seconds_to_start: 0,
+            sqs_queue_name: "MyApp-queue".into(),
+            sqs_message_visibility: 10 * crate::sim::MINUTE,
+            sqs_dead_letter_queue: "MyApp-deadletter".into(),
+            max_receive_count: 5,
+            log_group_name: "MyApp".into(),
+            check_if_done: CheckIfDone::default(),
+            variables: vec![],
+        }
+    }
+}
+
+fn req<'v>(v: &'v Value, key: &'static str) -> Result<&'v Value, ConfigError> {
+    v.get(key).ok_or(ConfigError::Missing(key))
+}
+
+fn req_str(v: &Value, key: &'static str) -> Result<String, ConfigError> {
+    req(v, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| invalid(key, "expected string"))
+}
+
+fn req_u32(v: &Value, key: &'static str) -> Result<u32, ConfigError> {
+    req(v, key)?
+        .as_u64()
+        .and_then(|n| u32::try_from(n).ok())
+        .ok_or_else(|| invalid(key, "expected non-negative integer"))
+}
+
+fn req_f64(v: &Value, key: &'static str) -> Result<f64, ConfigError> {
+    req(v, key)?
+        .as_f64()
+        .ok_or_else(|| invalid(key, "expected number"))
+}
+
+impl AppConfig {
+    /// Parse and validate a Config file.
+    pub fn from_json(text: &str) -> Result<Self, ConfigError> {
+        let v = parse(text)?;
+        let cid = v.get("CHECK_IF_DONE");
+        let check_if_done = match cid {
+            Some(c) => CheckIfDone {
+                enabled: c.get("ENABLED").and_then(Value::as_bool).unwrap_or(true),
+                expected_number_files: c
+                    .get("EXPECTED_NUMBER_FILES")
+                    .and_then(Value::as_u64)
+                    .unwrap_or(1) as u32,
+                min_file_size_bytes: c
+                    .get("MIN_FILE_SIZE_BYTES")
+                    .and_then(Value::as_u64)
+                    .unwrap_or(0),
+                necessary_string: c
+                    .get("NECESSARY_STRING")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+            },
+            None => CheckIfDone::default(),
+        };
+        let machine_types = req(&v, "MACHINE_TYPE")?
+            .as_arr()
+            .ok_or_else(|| invalid("MACHINE_TYPE", "expected array"))?
+            .iter()
+            .map(|t| {
+                t.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| invalid("MACHINE_TYPE", "expected strings"))
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let variables = v
+            .get("VARIABLES")
+            .and_then(Value::as_obj)
+            .map(|fields| {
+                fields
+                    .iter()
+                    .filter_map(|(k, val)| val.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        let cfg = Self {
+            app_name: req_str(&v, "APP_NAME")?,
+            workload_id: req_str(&v, "WORKLOAD_ID")?,
+            ecs_cluster: v
+                .get("ECS_CLUSTER")
+                .and_then(Value::as_str)
+                .unwrap_or("default")
+                .to_string(),
+            cluster_machines: req_u32(&v, "CLUSTER_MACHINES")?,
+            tasks_per_machine: req_u32(&v, "TASKS_PER_MACHINE")?,
+            machine_types,
+            machine_price: req_f64(&v, "MACHINE_PRICE")?,
+            ebs_vol_size_gb: v.get("EBS_VOL_SIZE").and_then(Value::as_u64).unwrap_or(22) as u32,
+            docker_cores: req_u32(&v, "DOCKER_CORES")?,
+            cpu_shares: req_u32(&v, "CPU_SHARES")?,
+            memory_mb: req(&v, "MEMORY")?
+                .as_u64()
+                .ok_or_else(|| invalid("MEMORY", "expected MB integer"))?,
+            seconds_to_start: from_secs_f64(
+                v.get("SECONDS_TO_START").and_then(Value::as_f64).unwrap_or(0.0),
+            ),
+            sqs_queue_name: req_str(&v, "SQS_QUEUE_NAME")?,
+            sqs_message_visibility: from_secs_f64(req_f64(&v, "SQS_MESSAGE_VISIBILITY")?),
+            sqs_dead_letter_queue: req_str(&v, "SQS_DEAD_LETTER_QUEUE")?,
+            max_receive_count: v
+                .get("MAX_RECEIVE_COUNT")
+                .and_then(Value::as_u64)
+                .unwrap_or(5) as u32,
+            log_group_name: req_str(&v, "LOG_GROUP_NAME")?,
+            check_if_done,
+            variables,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize back to the Config file format.
+    pub fn to_json(&self) -> Value {
+        let mut vars = Value::obj();
+        for (k, val) in &self.variables {
+            vars = vars.with(k, val.as_str());
+        }
+        Value::obj()
+            .with("APP_NAME", self.app_name.as_str())
+            .with("WORKLOAD_ID", self.workload_id.as_str())
+            .with("ECS_CLUSTER", self.ecs_cluster.as_str())
+            .with("CLUSTER_MACHINES", u64::from(self.cluster_machines))
+            .with("TASKS_PER_MACHINE", u64::from(self.tasks_per_machine))
+            .with(
+                "MACHINE_TYPE",
+                Value::Arr(self.machine_types.iter().map(|t| Value::from(t.as_str())).collect()),
+            )
+            .with("MACHINE_PRICE", self.machine_price)
+            .with("EBS_VOL_SIZE", u64::from(self.ebs_vol_size_gb))
+            .with("DOCKER_CORES", u64::from(self.docker_cores))
+            .with("CPU_SHARES", u64::from(self.cpu_shares))
+            .with("MEMORY", self.memory_mb)
+            .with("SECONDS_TO_START", self.seconds_to_start as f64 / 1000.0)
+            .with("SQS_QUEUE_NAME", self.sqs_queue_name.as_str())
+            .with(
+                "SQS_MESSAGE_VISIBILITY",
+                self.sqs_message_visibility as f64 / 1000.0,
+            )
+            .with("SQS_DEAD_LETTER_QUEUE", self.sqs_dead_letter_queue.as_str())
+            .with("MAX_RECEIVE_COUNT", u64::from(self.max_receive_count))
+            .with("LOG_GROUP_NAME", self.log_group_name.as_str())
+            .with(
+                "CHECK_IF_DONE",
+                Value::obj()
+                    .with("ENABLED", self.check_if_done.enabled)
+                    .with(
+                        "EXPECTED_NUMBER_FILES",
+                        u64::from(self.check_if_done.expected_number_files),
+                    )
+                    .with(
+                        "MIN_FILE_SIZE_BYTES",
+                        self.check_if_done.min_file_size_bytes,
+                    )
+                    .with(
+                        "NECESSARY_STRING",
+                        self.check_if_done.necessary_string.as_str(),
+                    ),
+            )
+            .with("VARIABLES", vars)
+    }
+
+    /// Cross-field validation, mirroring the paper's documented limits.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.app_name.is_empty() {
+            return Err(invalid("APP_NAME", "must be non-empty"));
+        }
+        if self.cluster_machines == 0 {
+            return Err(invalid("CLUSTER_MACHINES", "must be >= 1"));
+        }
+        if self.tasks_per_machine == 0 {
+            return Err(invalid("TASKS_PER_MACHINE", "must be >= 1"));
+        }
+        if self.docker_cores == 0 {
+            return Err(invalid("DOCKER_CORES", "must be >= 1"));
+        }
+        if self.machine_types.is_empty() {
+            return Err(invalid("MACHINE_TYPE", "need at least one type"));
+        }
+        for t in &self.machine_types {
+            if crate::aws::ec2::instance_type(t).is_none() {
+                return Err(invalid("MACHINE_TYPE", format!("unknown type '{t}'")));
+            }
+        }
+        if self.machine_price <= 0.0 {
+            return Err(invalid("MACHINE_PRICE", "bid must be positive"));
+        }
+        if self.ebs_vol_size_gb < 22 {
+            return Err(invalid("EBS_VOL_SIZE", "minimum allowed is 22 GB"));
+        }
+        if self.sqs_message_visibility == 0 {
+            return Err(invalid("SQS_MESSAGE_VISIBILITY", "must be positive"));
+        }
+        if self.sqs_queue_name == self.sqs_dead_letter_queue {
+            return Err(invalid(
+                "SQS_DEAD_LETTER_QUEUE",
+                "must differ from SQS_QUEUE_NAME",
+            ));
+        }
+        if self.max_receive_count == 0 {
+            return Err(invalid("MAX_RECEIVE_COUNT", "must be >= 1"));
+        }
+        Ok(())
+    }
+
+    /// Derived names, matching DS's conventions.
+    pub fn task_family(&self) -> String {
+        format!("{}-taskdef", self.app_name)
+    }
+    pub fn service_name(&self) -> String {
+        format!("{}-service", self.app_name)
+    }
+    /// Per-instance log group ("perinstance logs in CloudWatch").
+    pub fn instance_log_group(&self) -> String {
+        format!("{}_perInstance", self.log_group_name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        AppConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_json() {
+        let mut cfg = AppConfig::default();
+        cfg.app_name = "NuclearSegmentation_Drosophila".into();
+        cfg.variables = vec![("MY_FLAG".into(), "on".into())];
+        cfg.check_if_done.expected_number_files = 5;
+        let text = cfg.to_json().pretty();
+        let back = AppConfig::from_json(&text).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn missing_field_reported() {
+        let err = AppConfig::from_json(r#"{"APP_NAME": "x"}"#).unwrap_err();
+        assert!(matches!(err, ConfigError::Missing(_)));
+    }
+
+    #[test]
+    fn rejects_unknown_machine_type() {
+        let mut cfg = AppConfig::default();
+        cfg.machine_types = vec!["warp9.mega".into()];
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_small_ebs() {
+        let mut cfg = AppConfig::default();
+        cfg.ebs_vol_size_gb = 10;
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("22"));
+    }
+
+    #[test]
+    fn rejects_queue_same_as_dlq() {
+        let mut cfg = AppConfig::default();
+        cfg.sqs_dead_letter_queue = cfg.sqs_queue_name.clone();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn derived_names() {
+        let cfg = AppConfig::default();
+        assert_eq!(cfg.task_family(), "MyApp-taskdef");
+        assert_eq!(cfg.service_name(), "MyApp-service");
+        assert_eq!(cfg.instance_log_group(), "MyApp_perInstance");
+    }
+
+    #[test]
+    fn check_if_done_defaults_when_absent() {
+        let mut cfg = AppConfig::default();
+        cfg.check_if_done = CheckIfDone::default();
+        let mut v = cfg.to_json();
+        // Remove the CHECK_IF_DONE key entirely.
+        if let Value::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| k != "CHECK_IF_DONE");
+        }
+        let back = AppConfig::from_json(&v.pretty()).unwrap();
+        assert_eq!(back.check_if_done, CheckIfDone::default());
+    }
+}

@@ -1,0 +1,186 @@
+//! `exampleFleet.json` analog: account-specific spot-fleet boilerplate.
+//!
+//! "exampleFleet.json does not need to be changed depending on your
+//! implementation … each AWS account … will need to update the Fleet file
+//! with configuration specific to their account."  In simulation these
+//! fields are inert, but they are parsed and validated with the same
+//! shape so the four-command UX (and its failure modes: missing role ARN,
+//! wrong region AMI) is preserved.
+
+use crate::json::{parse, Value};
+
+use super::{invalid, ConfigError};
+
+/// Region-keyed AMI template table ("We provide templates for multiple
+/// regions").
+pub const REGION_AMIS: &[(&str, &str, &str)] = &[
+    ("us-east-1", "ami-0ds00000000000001", "snap-0ds0000000000001"),
+    ("us-west-2", "ami-0ds00000000000002", "snap-0ds0000000000002"),
+    ("eu-west-1", "ami-0ds00000000000003", "snap-0ds0000000000003"),
+];
+
+/// The Fleet file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub iam_fleet_role: String,
+    pub iam_instance_profile: String,
+    pub key_name: String,
+    pub subnet_id: String,
+    pub security_groups: Vec<String>,
+    pub image_id: String,
+    pub snapshot_id: String,
+    pub region: String,
+}
+
+impl FleetSpec {
+    /// A ready-to-edit template for `region` (run `ds make-fleet-file`).
+    pub fn template(region: &str) -> Option<Self> {
+        let (_, ami, snap) = REGION_AMIS.iter().find(|(r, _, _)| *r == region)?;
+        Some(Self {
+            iam_fleet_role: "arn:aws:iam::123456789012:role/aws-ec2-spot-fleet-tagging-role"
+                .into(),
+            iam_instance_profile: "arn:aws:iam::123456789012:instance-profile/ecsInstanceRole"
+                .into(),
+            key_name: "your-key".into(),
+            subnet_id: "subnet-REPLACE".into(),
+            security_groups: vec!["sg-REPLACE".into()],
+            image_id: (*ami).into(),
+            snapshot_id: (*snap).into(),
+            region: region.into(),
+        })
+    }
+
+    pub fn from_json(text: &str) -> Result<Self, ConfigError> {
+        let v = parse(text)?;
+        let s = |key: &'static str| -> Result<String, ConfigError> {
+            v.get(key)
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .ok_or(ConfigError::Missing(key))
+        };
+        let groups = v
+            .get("Groups")
+            .and_then(Value::as_arr)
+            .ok_or(ConfigError::Missing("Groups"))?
+            .iter()
+            .filter_map(|g| g.as_str().map(str::to_string))
+            .collect();
+        let spec = Self {
+            iam_fleet_role: s("IamFleetRole")?,
+            iam_instance_profile: s("IamInstanceProfile")?,
+            key_name: s("KeyName")?,
+            subnet_id: s("SubnetId")?,
+            security_groups: groups,
+            image_id: s("ImageId")?,
+            snapshot_id: s("SnapshotId")?,
+            region: s("Region")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("IamFleetRole", self.iam_fleet_role.as_str())
+            .with("IamInstanceProfile", self.iam_instance_profile.as_str())
+            .with("KeyName", self.key_name.as_str())
+            .with("SubnetId", self.subnet_id.as_str())
+            .with(
+                "Groups",
+                Value::Arr(
+                    self.security_groups
+                        .iter()
+                        .map(|g| Value::from(g.as_str()))
+                        .collect(),
+                ),
+            )
+            .with("ImageId", self.image_id.as_str())
+            .with("SnapshotId", self.snapshot_id.as_str())
+            .with("Region", self.region.as_str())
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if !self.iam_fleet_role.starts_with("arn:aws:iam::") {
+            return Err(invalid("IamFleetRole", "must be an IAM role ARN"));
+        }
+        if !self.iam_instance_profile.starts_with("arn:aws:iam::") {
+            return Err(invalid("IamInstanceProfile", "must be an IAM ARN"));
+        }
+        if self.key_name.is_empty() || self.key_name.ends_with(".pem") {
+            return Err(invalid(
+                "KeyName",
+                "key name without the .pem extension (per the paper)",
+            ));
+        }
+        if !self.subnet_id.starts_with("subnet-") {
+            return Err(invalid("SubnetId", "expected subnet-…"));
+        }
+        if self.security_groups.is_empty()
+            || !self.security_groups.iter().all(|g| g.starts_with("sg-"))
+        {
+            return Err(invalid("Groups", "expected sg-… ids"));
+        }
+        if !self.image_id.starts_with("ami-") {
+            return Err(invalid("ImageId", "expected ami-…"));
+        }
+        if !self.snapshot_id.starts_with("snap-") {
+            return Err(invalid("SnapshotId", "expected snap-…"));
+        }
+        // AMIs are region-specific: a known region must use its template AMI.
+        if let Some((_, ami, _)) = REGION_AMIS.iter().find(|(r, _, _)| *r == self.region) {
+            if &self.image_id != ami {
+                return Err(invalid(
+                    "ImageId",
+                    format!("AMI is region-specific; expected {ami} for {}", self.region),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn template_regions_valid() {
+        for (region, _, _) in REGION_AMIS {
+            let t = FleetSpec::template(region).unwrap();
+            t.validate().unwrap();
+        }
+        assert!(FleetSpec::template("mars-north-1").is_none());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = FleetSpec::template("us-east-1").unwrap();
+        let back = FleetSpec::from_json(&t.to_json().pretty()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn rejects_pem_suffix() {
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.key_name = "mykey.pem".into();
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_region_ami() {
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.image_id = "ami-0ds00000000000002".into(); // us-west-2's AMI
+        let err = t.validate().unwrap_err();
+        assert!(err.to_string().contains("region-specific"));
+    }
+
+    #[test]
+    fn rejects_malformed_ids() {
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.subnet_id = "net-123".into();
+        assert!(t.validate().is_err());
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.security_groups = vec![];
+        assert!(t.validate().is_err());
+    }
+}

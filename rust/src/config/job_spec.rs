@@ -1,0 +1,157 @@
+//! `exampleJob.json` analog: shared keys + `groups`.
+//!
+//! "When you submit your jobs … DS adds a job to your SQS queue for each
+//! item in `groups`.  Each job contains the shared variables common to
+//! all jobs, listed … above the `groups` key."
+
+use crate::json::{parse, Value};
+
+use super::{invalid, ConfigError};
+
+/// A parsed Job file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Keys shared by every job (input/output locations, pipeline name…).
+    pub shared: Vec<(String, Value)>,
+    /// One entry per parallel task; each is an object of job-specific keys.
+    pub groups: Vec<Vec<(String, Value)>>,
+}
+
+impl JobSpec {
+    pub fn from_json(text: &str) -> Result<Self, ConfigError> {
+        let v = parse(text)?;
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| invalid("job file", "expected an object"))?;
+        let mut shared = Vec::new();
+        let mut groups = None;
+        for (k, val) in obj {
+            if k == "groups" {
+                let arr = val
+                    .as_arr()
+                    .ok_or_else(|| invalid("groups", "expected an array"))?;
+                let mut gs = Vec::with_capacity(arr.len());
+                for g in arr {
+                    let fields = g
+                        .as_obj()
+                        .ok_or_else(|| invalid("groups", "each group must be an object"))?;
+                    gs.push(fields.to_vec());
+                }
+                groups = Some(gs);
+            } else {
+                shared.push((k.clone(), val.clone()));
+            }
+        }
+        let groups = groups.ok_or(ConfigError::Missing("groups"))?;
+        if groups.is_empty() {
+            return Err(invalid("groups", "must list at least one group"));
+        }
+        Ok(Self { shared, groups })
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut fields = self.shared.clone();
+        fields.push((
+            "groups".to_string(),
+            Value::Arr(self.groups.iter().map(|g| Value::Obj(g.clone())).collect()),
+        ));
+        Value::Obj(fields)
+    }
+
+    /// Expand into one message body per group: shared keys merged with the
+    /// group's keys (group wins on conflict), serialized as JSON.
+    pub fn to_messages(&self) -> Vec<String> {
+        self.groups
+            .iter()
+            .map(|g| {
+                let mut fields: Vec<(String, Value)> = self
+                    .shared
+                    .iter()
+                    .filter(|(k, _)| !g.iter().any(|(gk, _)| gk == k))
+                    .cloned()
+                    .collect();
+                fields.extend(g.iter().cloned());
+                Value::Obj(fields).pretty()
+            })
+            .collect()
+    }
+
+    /// Convenience builder: a plate of `wells` × `sites` imaging jobs (the
+    /// canonical Distributed-CellProfiler grouping).
+    pub fn plate(plate: &str, wells: u32, sites: u32, shared: Vec<(String, Value)>) -> Self {
+        let mut groups = Vec::new();
+        for w in 0..wells {
+            let row = char::from(b'A' + (w / 12) as u8);
+            let col = w % 12 + 1;
+            let well = format!("{row}{col:02}");
+            for s in 0..sites {
+                groups.push(vec![
+                    ("Metadata_Plate".to_string(), Value::from(plate)),
+                    ("Metadata_Well".to_string(), Value::from(well.as_str())),
+                    ("Metadata_Site".to_string(), Value::from(u64::from(s))),
+                ]);
+            }
+        }
+        Self { shared, groups }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const JOB: &str = r#"{
+        "pipeline": "segment.cppipe",
+        "input": "s3://bkt/images",
+        "output": "s3://bkt/results",
+        "groups": [
+            {"Metadata_Well": "A01"},
+            {"Metadata_Well": "A02", "pipeline": "special.cppipe"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_shared_and_groups() {
+        let j = JobSpec::from_json(JOB).unwrap();
+        assert_eq!(j.shared.len(), 3);
+        assert_eq!(j.groups.len(), 2);
+    }
+
+    #[test]
+    fn messages_merge_shared_with_group_winning() {
+        let j = JobSpec::from_json(JOB).unwrap();
+        let msgs = j.to_messages();
+        assert_eq!(msgs.len(), 2);
+        let m0 = parse(&msgs[0]).unwrap();
+        assert_eq!(m0.get("pipeline").unwrap().as_str(), Some("segment.cppipe"));
+        assert_eq!(m0.get("Metadata_Well").unwrap().as_str(), Some("A01"));
+        let m1 = parse(&msgs[1]).unwrap();
+        // group key overrides shared
+        assert_eq!(m1.get("pipeline").unwrap().as_str(), Some("special.cppipe"));
+    }
+
+    #[test]
+    fn requires_groups() {
+        assert!(JobSpec::from_json(r#"{"a": 1}"#).is_err());
+        assert!(JobSpec::from_json(r#"{"groups": []}"#).is_err());
+        assert!(JobSpec::from_json(r#"{"groups": [1]}"#).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let j = JobSpec::from_json(JOB).unwrap();
+        let back = JobSpec::from_json(&j.to_json().pretty()).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn plate_builder_layout() {
+        let j = JobSpec::plate("P1", 96, 4, vec![]);
+        assert_eq!(j.groups.len(), 384);
+        // Well names span A01..H12.
+        let first = &j.groups[0];
+        assert_eq!(first[1].1.as_str(), Some("A01"));
+        let last = &j.groups[383];
+        assert_eq!(last[1].1.as_str(), Some("H12"));
+    }
+}

@@ -1,0 +1,38 @@
+//! The three human-readable files a DS run is configured by.
+//!
+//! * [`AppConfig`] — `config.py` analog: app name, machine shapes and
+//!   counts, bid price, queue names, CHECK_IF_DONE policy, workload knobs.
+//! * [`JobSpec`] — `exampleJob.json` analog: shared keys + a `groups`
+//!   list; `submitJob` expands one SQS message per group.
+//! * [`FleetSpec`] — `exampleFleet.json` analog: account-specific ARNs and
+//!   network config; validated but functionally inert in simulation, kept
+//!   because the paper's UX contract is "edit these files, run four
+//!   commands".
+
+pub mod app_config;
+pub mod fleet_spec;
+pub mod job_spec;
+
+pub use app_config::AppConfig;
+pub use fleet_spec::FleetSpec;
+pub use job_spec::JobSpec;
+
+/// Error for any of the three files.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("invalid json: {0}")]
+    Json(#[from] crate::json::ParseError),
+    #[error("missing field: {0}")]
+    Missing(&'static str),
+    #[error("invalid value for {field}: {why}")]
+    Invalid { field: &'static str, why: String },
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub(crate) fn invalid(field: &'static str, why: impl Into<String>) -> ConfigError {
+    ConfigError::Invalid {
+        field,
+        why: why.into(),
+    }
+}

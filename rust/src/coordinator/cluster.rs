@@ -1,0 +1,65 @@
+//! Step 3: `python run.py startCluster files/fleet.json`.
+//!
+//! "it passes account-specific configuration from the Fleet file and the
+//! number and size of EC2 instances you want from the Config to launch a
+//! spot fleet of instances. … Once the spot fleet is ready, DS will
+//! create the log groups (if they don't already exist)."
+
+use anyhow::{Context, Result};
+
+use crate::aws::ec2::{FleetId, SpotFleetSpec};
+use crate::aws::AwsAccount;
+use crate::config::{AppConfig, FleetSpec};
+use crate::sim::SimTime;
+
+/// Submit the spot fleet request and create log groups.  Instances are
+/// fulfilled asynchronously by the event loop's market ticks.  Returns
+/// the fleet request id (DS writes `APP_NAMESpotFleetRequestId.json`; the
+/// same id is what the monitor command consumes).
+pub fn start_cluster(
+    acct: &mut AwsAccount,
+    cfg: &AppConfig,
+    fleet_file: &FleetSpec,
+    now: SimTime,
+) -> Result<FleetId> {
+    fleet_file.validate().context("invalid Fleet file")?;
+    cfg.validate().context("invalid Config file")?;
+    let fleet = acct.ec2.request_spot_fleet(SpotFleetSpec {
+        target_capacity: cfg.cluster_machines,
+        bid_hourly: cfg.machine_price,
+        allowed_types: cfg.machine_types.clone(),
+    });
+    acct.logs.create_group(&cfg.log_group_name);
+    acct.logs.create_group(&cfg.instance_log_group());
+    let _ = now;
+    Ok(fleet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::Volatility;
+
+    #[test]
+    fn start_cluster_requests_fleet_and_logs() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        let fleet_file = FleetSpec::template("us-east-1").unwrap();
+        let fid = start_cluster(&mut acct, &cfg, &fleet_file, 0).unwrap();
+        assert!(acct.ec2.fleet_is_active(fid));
+        assert_eq!(acct.ec2.fleet_target(fid), cfg.cluster_machines);
+        assert!(acct.logs.group_exists(&cfg.log_group_name));
+        assert!(acct.logs.group_exists(&cfg.instance_log_group()));
+        // No instances until the event loop ticks the market.
+        assert_eq!(acct.ec2.active_count(fid), 0);
+    }
+
+    #[test]
+    fn invalid_fleet_file_rejected() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        let mut fleet_file = FleetSpec::template("us-east-1").unwrap();
+        fleet_file.key_name = "key.pem".into();
+        assert!(start_cluster(&mut acct, &cfg, &fleet_file, 0).is_err());
+    }
+}

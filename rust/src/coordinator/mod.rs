@@ -1,0 +1,22 @@
+//! The paper's system: four single-line commands over five services.
+//!
+//! * [`setup`]   — `python run.py setup` (Step 1): task definition, SQS
+//!   queue + dead-letter queue, ECS service.
+//! * [`submit`]  — `python run.py submitJob files/job.json` (Step 2): one
+//!   SQS message per group.
+//! * [`cluster`] — `python run.py startCluster files/fleet.json` (Step 3):
+//!   spot fleet request + log groups.
+//! * [`monitor`] — `python run.py monitor …` (Step 4, optional): queue
+//!   polling, alarm reaping, downscaling, cleanup, log export, cheapest
+//!   mode.
+//! * [`run`]     — the discrete-event loop that advances everything
+//!   (boot, placement, worker polls, job completions, crashes,
+//!   interruptions, alarms).
+
+pub mod cluster;
+pub mod monitor;
+pub mod run;
+pub mod setup;
+pub mod submit;
+
+pub use run::{RunOptions, Simulation};

@@ -1,0 +1,216 @@
+//! Step 4 (optional): `python run.py monitor files/…SpotFleetRequestId.json [True]`.
+//!
+//! "While your analysis is running, monitor checks your queue once per
+//! minute … Once per hour, it deletes the alarms for any instances that
+//! have been terminated in the last 24 hours … When the number of jobs in
+//! your queue goes to 0, monitor downscales the ECS service … deletes all
+//! the alarms … shuts down your spot fleet … gets rid of the queue,
+//! service, and task definition … exports all the logs … onto your S3
+//! bucket."
+//!
+//! Cheapest mode: "downscale the number of requested machines (but not
+//! RUNNING machines) to one 15 minutes after the monitor is engaged."
+
+use crate::aws::ec2::{FleetId, InstanceState};
+use crate::aws::AwsAccount;
+use crate::config::AppConfig;
+use crate::sim::clock::{SimTime, HOUR, MINUTE};
+
+/// Monitor state machine, ticked once per simulated minute.
+#[derive(Debug)]
+pub struct MonitorState {
+    pub fleet: FleetId,
+    pub cheapest: bool,
+    engaged_at: SimTime,
+    last_alarm_reap: SimTime,
+    cheapest_downscaled: bool,
+    pub cleanup_done: bool,
+    /// Where to export logs at cleanup.
+    pub export_bucket: String,
+}
+
+/// Time after engagement at which cheapest mode downsizes the fleet.
+pub const CHEAPEST_DELAY: SimTime = 15 * MINUTE;
+
+impl MonitorState {
+    pub fn new(fleet: FleetId, cheapest: bool, export_bucket: &str, now: SimTime) -> Self {
+        Self {
+            fleet,
+            cheapest,
+            engaged_at: now,
+            last_alarm_reap: now,
+            cheapest_downscaled: false,
+            cleanup_done: false,
+            export_bucket: export_bucket.to_string(),
+        }
+    }
+
+    /// One monitor tick.  Returns true if cleanup ran (run is over).
+    pub fn tick(&mut self, acct: &mut AwsAccount, cfg: &AppConfig, now: SimTime) -> bool {
+        if self.cleanup_done {
+            return true;
+        }
+
+        // Cheapest mode: downscale *requested* capacity to 1 after 15 min.
+        if self.cheapest && !self.cheapest_downscaled && now >= self.engaged_at + CHEAPEST_DELAY
+        {
+            acct.ec2.modify_target(self.fleet, 1);
+            self.cheapest_downscaled = true;
+            acct.logs.put(
+                &cfg.log_group_name,
+                "monitor",
+                now,
+                "cheapest mode: fleet target -> 1 (running machines kept)",
+            );
+        }
+
+        // Hourly: delete alarms of instances terminated in the last 24 h.
+        if now >= self.last_alarm_reap + HOUR {
+            self.last_alarm_reap = now;
+            let dead: Vec<String> = acct
+                .ec2
+                .all_instances()
+                .iter()
+                .filter(|i| {
+                    i.state == InstanceState::Terminated
+                        && i.terminated_at
+                            .map(|t| now.saturating_sub(t) <= 24 * HOUR)
+                            .unwrap_or(false)
+                })
+                .map(|i| format!("i-{}", i.id))
+                .collect();
+            let mut reaped = 0;
+            for d in dead {
+                reaped += acct.alarms.delete_for_dimension(&d);
+            }
+            if reaped > 0 {
+                acct.logs.put(
+                    &cfg.log_group_name,
+                    "monitor",
+                    now,
+                    format!("reaped {reaped} alarms of terminated instances"),
+                );
+            }
+        }
+
+        // Per-minute queue check.
+        let (visible, in_flight) = acct.sqs.approximate_counts(&cfg.sqs_queue_name, now);
+        acct.logs.put(
+            &cfg.log_group_name,
+            "monitor",
+            now,
+            format!("queue: {visible} waiting, {in_flight} in process"),
+        );
+        if visible == 0 && in_flight == 0 {
+            self.cleanup(acct, cfg, now);
+            return true;
+        }
+        false
+    }
+
+    /// End-of-run teardown, in the paper's order.
+    fn cleanup(&mut self, acct: &mut AwsAccount, cfg: &AppConfig, now: SimTime) {
+        // Downscale the ECS service.
+        let _ = acct.ecs.set_desired_count(&cfg.service_name(), 0);
+        // Delete all alarms associated with the fleet.
+        acct.alarms.delete_all();
+        // Shut down the spot fleet.
+        let killed = acct.ec2.cancel_fleet(self.fleet, now);
+        for id in &killed {
+            acct.ecs.deregister_instance(*id);
+        }
+        // Get rid of the queue, service, and task definition.
+        acct.sqs.delete_queue(&cfg.sqs_queue_name);
+        acct.ecs.delete_service(&cfg.service_name());
+        acct.ecs.deregister_task_definition(&cfg.task_family());
+        // Export all logs to S3.
+        acct.s3.create_bucket(&self.export_bucket);
+        acct.logs.put(
+            &cfg.log_group_name,
+            "monitor",
+            now,
+            format!("cleanup: terminated {} instances, exporting logs", killed.len()),
+        );
+        acct.logs.export_to_s3(
+            &cfg.log_group_name,
+            &mut acct.s3,
+            &self.export_bucket,
+            "exportedlogs",
+            now,
+        );
+        acct.logs.export_to_s3(
+            &cfg.instance_log_group(),
+            &mut acct.s3,
+            &self.export_bucket,
+            "exportedlogs",
+            now,
+        );
+        self.cleanup_done = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::Volatility;
+    use crate::config::FleetSpec;
+    use crate::coordinator::cluster::start_cluster;
+    use crate::coordinator::setup::setup;
+
+    fn rig() -> (AwsAccount, AppConfig, MonitorState) {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        setup(&mut acct, &cfg, 0).unwrap();
+        let fleet =
+            start_cluster(&mut acct, &cfg, &FleetSpec::template("us-east-1").unwrap(), 0)
+                .unwrap();
+        acct.s3.create_bucket("ds-data");
+        let mon = MonitorState::new(fleet, false, "ds-data", 0);
+        (acct, cfg, mon)
+    }
+
+    #[test]
+    fn empty_queue_triggers_cleanup() {
+        let (mut acct, cfg, mut mon) = rig();
+        acct.ec2.evaluate_fleets(0);
+        assert!(acct.ec2.active_count(mon.fleet) > 0);
+        let done = mon.tick(&mut acct, &cfg, MINUTE);
+        assert!(done);
+        assert!(mon.cleanup_done);
+        assert_eq!(acct.ec2.active_count(mon.fleet), 0);
+        assert!(!acct.sqs.queue_exists(&cfg.sqs_queue_name));
+        assert!(acct.ecs.is_clean(&cfg.service_name(), &cfg.task_family()));
+        assert!(acct.alarms.is_empty());
+        // Logs exported.
+        assert!(!acct.s3.list_prefix("ds-data", "exportedlogs/").is_empty());
+    }
+
+    #[test]
+    fn nonempty_queue_keeps_running() {
+        let (mut acct, cfg, mut mon) = rig();
+        acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
+        assert!(!mon.tick(&mut acct, &cfg, MINUTE));
+        assert!(acct.sqs.queue_exists(&cfg.sqs_queue_name));
+    }
+
+    #[test]
+    fn cheapest_downscales_after_15m_only() {
+        let (mut acct, cfg, _) = rig();
+        acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
+        let fleet = 1;
+        let mut mon = MonitorState::new(fleet, true, "ds-data", 0);
+        mon.tick(&mut acct, &cfg, 5 * MINUTE);
+        assert_eq!(acct.ec2.fleet_target(fleet), AppConfig::default().cluster_machines);
+        mon.tick(&mut acct, &cfg, 16 * MINUTE);
+        assert_eq!(acct.ec2.fleet_target(fleet), 1);
+    }
+
+    #[test]
+    fn in_flight_messages_defer_cleanup() {
+        let (mut acct, cfg, mut mon) = rig();
+        acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
+        let _ = acct.sqs.receive(&cfg.sqs_queue_name, MINUTE).unwrap();
+        // visible=0 but in_flight=1 -> not done.
+        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+    }
+}

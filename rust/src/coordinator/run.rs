@@ -1,0 +1,816 @@
+//! The discrete-event run driver: everything that "happens automatically"
+//! in Figure 1's orange text, plus the optional monitor.
+//!
+//! One [`Simulation`] owns the AWS account and an event heap.  Events:
+//!
+//! * `MarketTick`    (1/min) — spot prices move, fleets fulfill/interrupt,
+//!   ECS places containers, instances publish CPU metrics.
+//! * `InstanceReady` — boot finished: register with ECS, arm the crash
+//!   clock.
+//! * `CoreWake`      — one worker core polls SQS: CHECK_IF_DONE → run →
+//!   (empty queue → instance self-shutdown).
+//! * `JobDone`       — a job attempt finished: upload outputs, delete the
+//!   message, next poll.
+//! * `InstanceCrash` — machine wedges: stops working, keeps billing,
+//!   stops publishing CPU (the alarm reaper's prey).
+//! * `AlarmEval`     (1/min) — CloudWatch alarm evaluation + actions.
+//! * `MonitorTick`   (1/min, optional) — the paper's Step 4.
+//!
+//! All randomness flows from one seeded RNG: identical runs replay
+//! bit-identically.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::aws::ec2::{FleetEvent, FleetId, InstanceId, InstanceState, TerminationReason, Volatility};
+use crate::aws::ecs::ContainerId;
+use crate::aws::s3::Body;
+use crate::aws::sqs::ReceiptHandle;
+use crate::aws::AwsAccount;
+use crate::aws::cloudwatch::{AlarmAction, Comparison};
+use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::metrics::{RunReport, RunStats};
+use crate::sim::clock::{SimTime, HOUR, MINUTE};
+use crate::sim::{EventQueue, SimRng};
+use crate::worker::{check_if_done, parse_message};
+use crate::workloads::drivers::{job_output_prefix, output_bucket, JobCtx, JobExecutor, JobOutcome};
+
+use super::monitor::MonitorState;
+use super::{cluster, setup, submit};
+
+/// Knobs for one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunOptions {
+    pub seed: u64,
+    pub volatility: Volatility,
+    /// Run the optional Step-4 monitor.
+    pub monitor: bool,
+    /// Cheapest mode (monitor's optional `True` flag).
+    pub cheapest: bool,
+    /// Mean time to instance crash (None = reliable machines).
+    pub crash_mttf: Option<SimTime>,
+    /// Hard stop for the simulation.
+    pub max_sim_time: SimTime,
+    /// Without a monitor, keep simulating this long after the queue
+    /// drains — measures the paper's "keep incurring charges" leak.
+    pub overrun_after_drain: SimTime,
+    /// Bucket that receives outputs and exported logs.
+    pub data_bucket: String,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            volatility: Volatility::Low,
+            monitor: true,
+            cheapest: false,
+            crash_mttf: None,
+            max_sim_time: 7 * 24 * HOUR,
+            overrun_after_drain: 0,
+            data_bucket: "ds-data".into(),
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Event {
+    MarketTick,
+    InstanceReady(InstanceId),
+    CoreWake {
+        container: ContainerId,
+        core: u32,
+    },
+    JobDone {
+        container: ContainerId,
+        core: u32,
+        receipt: ReceiptHandle,
+        success: bool,
+        bucket: String,
+        outputs: Vec<(String, Body)>,
+        log: String,
+    },
+    InstanceCrash(InstanceId),
+    AlarmEval,
+    MonitorTick,
+}
+
+/// A full DS run over the simulated account.
+pub struct Simulation {
+    pub acct: AwsAccount,
+    pub cfg: AppConfig,
+    opts: RunOptions,
+    events: EventQueue<Event>,
+    rng: SimRng,
+    fleet: Option<FleetId>,
+    monitor: Option<MonitorState>,
+    stats: RunStats,
+    jobs_submitted: u64,
+    /// Busy cores per container (jobs in flight).
+    busy: HashMap<ContainerId, u32>,
+    /// Cores that saw an empty queue and exited, per container.
+    cores_done: HashMap<ContainerId, u32>,
+    drained_at: Option<SimTime>,
+    finished: bool,
+}
+
+impl Simulation {
+    /// Create the account and run Step 1 (`setup`).
+    pub fn new(cfg: AppConfig, opts: RunOptions) -> Result<Self> {
+        let mut acct = AwsAccount::new(opts.seed, opts.volatility);
+        acct.s3.create_bucket(&opts.data_bucket);
+        setup::setup(&mut acct, &cfg, 0)?;
+        let rng = SimRng::new(opts.seed ^ 0xD15C);
+        Ok(Self {
+            acct,
+            cfg,
+            opts,
+            events: EventQueue::new(),
+            rng,
+            fleet: None,
+            monitor: None,
+            stats: RunStats::default(),
+            jobs_submitted: 0,
+            busy: HashMap::new(),
+            cores_done: HashMap::new(),
+            drained_at: None,
+            finished: false,
+        })
+    }
+
+    /// Stage data or otherwise mutate the account before the run (e.g.
+    /// upload input images to S3).
+    pub fn stage(&mut self, f: impl FnOnce(&mut AwsAccount)) {
+        f(&mut self.acct);
+    }
+
+    /// Step 2: `submitJob`.
+    pub fn submit(&mut self, jobs: &JobSpec) -> Result<u64> {
+        let n = submit::submit_job(&mut self.acct, &self.cfg, jobs, self.events.now())?;
+        self.jobs_submitted += n;
+        Ok(n)
+    }
+
+    /// Step 3 (+4): `startCluster` and optionally `monitor`.
+    pub fn start(&mut self, fleet_file: &FleetSpec) -> Result<()> {
+        ensure!(self.jobs_submitted > 0, "submit jobs before starting the cluster");
+        let fleet =
+            cluster::start_cluster(&mut self.acct, &self.cfg, fleet_file, self.events.now())?;
+        self.fleet = Some(fleet);
+        self.events.schedule_in(0, Event::MarketTick);
+        self.events.schedule_in(0, Event::AlarmEval);
+        if self.opts.monitor {
+            self.monitor = Some(MonitorState::new(
+                fleet,
+                self.opts.cheapest,
+                &self.opts.data_bucket,
+                self.events.now(),
+            ));
+            self.events.schedule_in(0, Event::MonitorTick);
+        }
+        Ok(())
+    }
+
+    /// Drive the event loop to completion.  `executor` is the inside of
+    /// the Docker container (modeled or PJRT).
+    pub fn run(&mut self, executor: &mut dyn JobExecutor) -> Result<RunReport> {
+        ensure!(self.fleet.is_some(), "start the cluster before running");
+        while let Some((now, ev)) = self.events.pop() {
+            self.stats.events_processed += 1;
+            if now >= self.opts.max_sim_time || self.finished {
+                break;
+            }
+            self.handle(now, ev, executor);
+            if self.should_stop(now) {
+                break;
+            }
+        }
+        Ok(self.report())
+    }
+
+    fn should_stop(&mut self, now: SimTime) -> bool {
+        if self.finished {
+            return true;
+        }
+        // Without a monitor the run "ends" for reporting purposes after
+        // the queue has drained and the configured overrun has elapsed.
+        if self.monitor.is_none() {
+            if let Some(d) = self.drained_at {
+                if now >= d + self.opts.overrun_after_drain {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    // -- event handlers ----------------------------------------------------
+
+    fn handle(&mut self, now: SimTime, ev: Event, executor: &mut dyn JobExecutor) {
+        match ev {
+            Event::MarketTick => self.on_market_tick(now),
+            Event::InstanceReady(id) => self.on_instance_ready(now, id),
+            Event::CoreWake { container, core } => {
+                self.on_core_wake(now, container, core, executor)
+            }
+            Event::JobDone {
+                container,
+                core,
+                receipt,
+                success,
+                bucket,
+                outputs,
+                log,
+            } => self.on_job_done(now, container, core, receipt, success, bucket, outputs, log),
+            Event::InstanceCrash(id) => self.on_instance_crash(now, id),
+            Event::AlarmEval => self.on_alarm_eval(now),
+            Event::MonitorTick => self.on_monitor_tick(now),
+        }
+    }
+
+    fn on_market_tick(&mut self, now: SimTime) {
+        // Publish per-instance CPU from busy-core counts.
+        let fleet = self.fleet.unwrap();
+        let running = self.acct.ec2.instances_in_state(fleet, InstanceState::Running);
+        for id in &running {
+            let crashed = self.acct.ec2.instance(*id).map(|i| i.crashed).unwrap_or(false);
+            let containers = self.acct.ecs.containers_on(*id);
+            let total_cores = (containers.len() as u32 * self.cfg.docker_cores).max(1);
+            let busy: u32 = containers
+                .iter()
+                .map(|c| self.busy.get(&c.id).copied().unwrap_or(0))
+                .sum();
+            let cpu = if crashed {
+                0.1
+            } else {
+                f64::from(busy) / f64::from(total_cores) * 100.0
+            };
+            self.acct
+                .metrics
+                .put("CPUUtilization", &format!("i-{id}"), now, cpu);
+        }
+
+        // Fleet evaluation: interruptions + fulfillment.
+        let evs = self.acct.ec2.evaluate_fleets(now);
+        for ev in evs {
+            match ev {
+                FleetEvent::InstanceRequested { id, ready_at, .. } => {
+                    self.stats.instances_launched += 1;
+                    self.events.schedule_at(ready_at, Event::InstanceReady(id));
+                }
+                FleetEvent::InstanceInterrupted { id, price } => {
+                    self.stats.interruptions += 1;
+                    self.log_instance(now, id, &format!("spot interruption at ${price:.3}/h"));
+                    self.instance_died(now, id);
+                }
+                FleetEvent::CapacityUnavailable { .. } => {}
+            }
+        }
+
+        // ECS placement pass.
+        self.place_and_start_containers(now);
+
+        // Storage billing integration.
+        self.acct.sample_storage(now);
+
+        self.events.schedule_in(MINUTE, Event::MarketTick);
+    }
+
+    fn on_instance_ready(&mut self, now: SimTime, id: InstanceId) {
+        if !self.acct.ec2.mark_running(id, now) {
+            return; // died while booting
+        }
+        let (vcpus, mem) = {
+            let i = self.acct.ec2.instance(id).unwrap();
+            (i.itype.vcpus, i.itype.memory_mb)
+        };
+        let _ = self.acct.ecs.register_instance(&self.cfg.ecs_cluster, id, vcpus, mem);
+        self.log_instance(now, id, "boot complete, ECS agent registered");
+        // Arm the crash clock.
+        if let Some(mttf) = self.opts.crash_mttf {
+            let dt = crate::sim::clock::from_secs_f64(
+                self.rng.exp(mttf as f64 / 1000.0),
+            )
+            .max(1);
+            self.events.schedule_in(dt, Event::InstanceCrash(id));
+        }
+        self.place_and_start_containers(now);
+    }
+
+    /// ECS placement + container startup (naming, alarms, core wakes).
+    fn place_and_start_containers(&mut self, now: SimTime) {
+        let placed = self.acct.ecs.place_tasks(now);
+        for c in placed {
+            // "When a Docker container gets placed it gives the instance
+            // it's on its own name" + per-instance alarm.
+            let inst_id = c.instance;
+            let needs_alarm = {
+                let inst = self.acct.ec2.instance_mut(inst_id).unwrap();
+                if inst.name_tag.is_none() {
+                    inst.name_tag = Some(format!("{}Instance{}", self.cfg.app_name, inst_id));
+                    true
+                } else {
+                    false
+                }
+            };
+            if needs_alarm {
+                self.acct.alarms.put_alarm(
+                    &format!("{}_cpu_low_i-{}", self.cfg.app_name, inst_id),
+                    "CPUUtilization",
+                    &format!("i-{inst_id}"),
+                    Comparison::LessThan,
+                    1.0,
+                    MINUTE,
+                    15,
+                    AlarmAction::TerminateInstance(inst_id),
+                    now,
+                );
+            }
+            self.log_instance(
+                now,
+                inst_id,
+                &format!("container {} placed ({})", c.id, c.task_family),
+            );
+            self.busy.insert(c.id, 0);
+            self.cores_done.insert(c.id, 0);
+            // SECONDS_TO_START staggers core startup.
+            for core in 0..self.cfg.docker_cores {
+                self.events.schedule_in(
+                    u64::from(core) * self.cfg.seconds_to_start,
+                    Event::CoreWake {
+                        container: c.id,
+                        core,
+                    },
+                );
+            }
+        }
+    }
+
+    fn container_alive(&self, container: ContainerId) -> Option<InstanceId> {
+        let c = self.acct.ecs.container(container)?;
+        if c.stopped {
+            return None;
+        }
+        let inst = self.acct.ec2.instance(c.instance)?;
+        (inst.state == InstanceState::Running && !inst.crashed).then_some(c.instance)
+    }
+
+    fn on_core_wake(
+        &mut self,
+        now: SimTime,
+        container: ContainerId,
+        core: u32,
+        executor: &mut dyn JobExecutor,
+    ) {
+        let Some(inst_id) = self.container_alive(container) else {
+            return;
+        };
+        let received = match self.acct.sqs.receive(&self.cfg.sqs_queue_name, now) {
+            Ok(r) => r,
+            Err(_) => return, // queue deleted: run is over
+        };
+        let Some((msg, receipt)) = received else {
+            // "If SQS tells them there are no visible jobs then they shut
+            // themselves down."
+            self.core_exit(now, container, inst_id);
+            return;
+        };
+        let Some(parsed) = parse_message(&msg.body) else {
+            // Malformed message: fail it (leave in flight -> DLQ path).
+            self.stats.failed_attempts += 1;
+            self.log_instance(now, inst_id, "unparseable job message, exit 1");
+            self.events.schedule_in(1_000, Event::CoreWake { container, core });
+            return;
+        };
+
+        // CHECK_IF_DONE: skip already-complete jobs.
+        let bucket = output_bucket(&parsed).to_string();
+        let prefix = job_output_prefix(&parsed);
+        if check_if_done(&mut self.acct.s3, &self.cfg.check_if_done, &bucket, &prefix) {
+            let _ = self.acct.sqs.delete(&self.cfg.sqs_queue_name, receipt, now);
+            self.stats.skipped_done += 1;
+            self.log_job(now, &prefix, "already done, skipping (CHECK_IF_DONE)");
+            self.mark_drained_if_empty(now);
+            self.events.schedule_in(0, Event::CoreWake { container, core });
+            return;
+        }
+
+        // Run the tool.
+        let mut ctx = JobCtx {
+            s3: &mut self.acct.s3,
+            rng: &mut self.rng,
+            now,
+        };
+        match executor.execute(&parsed, &mut ctx) {
+            JobOutcome::Done {
+                duration,
+                outputs,
+                log,
+            } => {
+                *self.busy.entry(container).or_insert(0) += 1;
+                self.events.schedule_in(
+                    duration,
+                    Event::JobDone {
+                        container,
+                        core,
+                        receipt,
+                        success: true,
+                        bucket,
+                        outputs,
+                        log,
+                    },
+                );
+            }
+            JobOutcome::Failed { duration, log } => {
+                *self.busy.entry(container).or_insert(0) += 1;
+                self.events.schedule_in(
+                    duration,
+                    Event::JobDone {
+                        container,
+                        core,
+                        receipt,
+                        success: false,
+                        bucket,
+                        outputs: Vec::new(),
+                        log,
+                    },
+                );
+            }
+            JobOutcome::Stalled => {
+                // Wedged core: never completes, never polls again.  The
+                // message resurfaces via the visibility timeout; if every
+                // core wedges, CPU -> 0 and the alarm reaper recovers the
+                // machine.
+                self.stats.stalled += 1;
+                self.log_instance(now, inst_id, "worker stalled (no exit)");
+            }
+        }
+    }
+
+    /// A core saw an empty queue: exit.  When all of a container's cores
+    /// have exited the container stops; when the *last* container on the
+    /// machine stops, the machine shuts itself down (paper: "If SQS tells
+    /// them there are no visible jobs then they shut themselves down").
+    /// Sibling containers still running jobs keep the machine alive, so a
+    /// fast-exiting container cannot murder a sibling's in-flight work.
+    /// The fleet replaces shut-down machines while the run is live and
+    /// the ECS service re-places containers there, so late redeliveries
+    /// (visibility timeouts, poison retries) always find a poller again.
+    fn core_exit(&mut self, now: SimTime, container: ContainerId, inst_id: InstanceId) {
+        let done = self.cores_done.entry(container).or_insert(0);
+        *done += 1;
+        if *done < self.cfg.docker_cores {
+            return;
+        }
+        self.acct.ecs.stop_container(container);
+        self.busy.remove(&container);
+        self.cores_done.remove(&container);
+        if self.acct.ecs.containers_on(inst_id).is_empty() {
+            self.stats.self_shutdowns += 1;
+            self.log_instance(now, inst_id, "queue empty: shutting down");
+            self.acct
+                .ec2
+                .terminate(inst_id, TerminationReason::SelfShutdown, now);
+            self.acct.ecs.deregister_instance(inst_id);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_job_done(
+        &mut self,
+        now: SimTime,
+        container: ContainerId,
+        core: u32,
+        receipt: ReceiptHandle,
+        success: bool,
+        bucket: String,
+        outputs: Vec<(String, Body)>,
+        log: String,
+    ) {
+        if let Some(b) = self.busy.get_mut(&container) {
+            *b = b.saturating_sub(1);
+        }
+        let Some(inst_id) = self.container_alive(container) else {
+            // Machine died mid-job: work lost, message redelivers.
+            self.stats.lost_to_death += 1;
+            return;
+        };
+        if success {
+            for (key, body) in outputs {
+                let _ = self.acct.s3.put(&bucket, &key, body, now);
+            }
+            match self.acct.sqs.delete(&self.cfg.sqs_queue_name, receipt, now) {
+                Ok(()) => {
+                    self.stats.completed += 1;
+                    self.log_job(now, &log, "");
+                }
+                Err(_) => {
+                    // Receipt went stale: the message timed out mid-run
+                    // and someone else will (or did) redo it.
+                    self.stats.duplicates += 1;
+                    self.log_job(now, &log, " [duplicate: visibility expired mid-job]");
+                }
+            }
+            self.mark_drained_if_empty(now);
+        } else {
+            self.stats.failed_attempts += 1;
+            self.log_instance(now, inst_id, &log);
+        }
+        self.events.schedule_in(0, Event::CoreWake { container, core });
+    }
+
+    fn on_instance_crash(&mut self, now: SimTime, id: InstanceId) {
+        let Some(inst) = self.acct.ec2.instance_mut(id) else {
+            return;
+        };
+        if inst.state != InstanceState::Running || inst.crashed {
+            return;
+        }
+        inst.crashed = true;
+        self.stats.crashes += 1;
+        self.log_instance(now, id, "machine crash (CPU flatlines)");
+        // Its containers stop making progress; busy counts stay (the
+        // pending JobDone events will see the crash and drop the work).
+    }
+
+    fn on_alarm_eval(&mut self, now: SimTime) {
+        let actions = self.acct.alarms.evaluate(&self.acct.metrics, now);
+        for a in actions {
+            match a {
+                AlarmAction::TerminateInstance(id) => {
+                    let active = self
+                        .acct
+                        .ec2
+                        .instance(id)
+                        .map(|i| i.is_active())
+                        .unwrap_or(false);
+                    if active {
+                        self.stats.alarm_terminations += 1;
+                        self.log_instance(now, id, "CPU<1% for 15 min: alarm terminating");
+                        self.acct
+                            .ec2
+                            .terminate(id, TerminationReason::AlarmAction, now);
+                        self.acct.ecs.deregister_instance(id);
+                        self.acct.metrics.drop_dimension(&format!("i-{id}"));
+                    }
+                }
+                AlarmAction::RebootInstance(_) => {}
+            }
+        }
+        self.events.schedule_in(MINUTE, Event::AlarmEval);
+    }
+
+    fn on_monitor_tick(&mut self, now: SimTime) {
+        let Some(mut mon) = self.monitor.take() else {
+            return;
+        };
+        let done = mon.tick(&mut self.acct, &self.cfg, now);
+        self.monitor = Some(mon);
+        if done {
+            self.finished = true;
+        } else {
+            self.events.schedule_in(MINUTE, Event::MonitorTick);
+        }
+    }
+
+    fn instance_died(&mut self, now: SimTime, id: InstanceId) {
+        let _ = now;
+        self.acct.ecs.deregister_instance(id);
+        self.acct.metrics.drop_dimension(&format!("i-{id}"));
+    }
+
+    fn mark_drained_if_empty(&mut self, now: SimTime) {
+        if self.drained_at.is_none() {
+            let (v, f) = self.acct.sqs.approximate_counts(&self.cfg.sqs_queue_name, now);
+            if v == 0 && f == 0 {
+                self.drained_at = Some(now);
+            }
+        }
+    }
+
+    fn log_instance(&mut self, now: SimTime, id: InstanceId, line: &str) {
+        let group = self.cfg.instance_log_group();
+        self.acct.logs.put(&group, &format!("i-{id}"), now, line);
+    }
+
+    fn log_job(&mut self, now: SimTime, line: &str, suffix: &str) {
+        self.acct.logs.put(
+            &self.cfg.log_group_name,
+            "jobs",
+            now,
+            format!("{line}{suffix}"),
+        );
+    }
+
+    // -- reporting ----------------------------------------------------------
+
+    fn report(&mut self) -> RunReport {
+        let ended_at = self.events.now();
+        let mut stats = self.stats.clone();
+        stats.dead_lettered = self
+            .acct
+            .sqs
+            .approximate_counts(&self.cfg.sqs_dead_letter_queue, ended_at)
+            .0 as u64;
+        let cost = self.acct.cost_report(ended_at);
+        RunReport {
+            stats,
+            drained_at: self.drained_at,
+            ended_at,
+            cleaned_up: self
+                .monitor
+                .as_ref()
+                .map(|m| m.cleanup_done)
+                .unwrap_or(false),
+            cost,
+            jobs_submitted: self.jobs_submitted,
+        }
+    }
+
+    /// Events processed so far (perf telemetry).
+    pub fn events_processed(&self) -> u64 {
+        self.stats.events_processed
+    }
+}
+
+/// Convenience wrapper: the full four-command flow with defaults.
+pub fn run_full(
+    cfg: &AppConfig,
+    jobs: &JobSpec,
+    fleet_file: &FleetSpec,
+    executor: &mut dyn JobExecutor,
+    opts: RunOptions,
+) -> Result<RunReport> {
+    let mut sim = Simulation::new(cfg.clone(), opts)?;
+    sim.submit(jobs)?;
+    sim.start(fleet_file)?;
+    sim.run(executor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{DurationModel, ModeledExecutor};
+
+    fn quick_cfg() -> AppConfig {
+        AppConfig {
+            cluster_machines: 3,
+            tasks_per_machine: 2,
+            docker_cores: 2,
+            machine_types: vec!["m5.xlarge".into()],
+            machine_price: 0.10,
+            sqs_message_visibility: 5 * MINUTE,
+            ..Default::default()
+        }
+    }
+
+    fn modeled(mean_s: f64) -> ModeledExecutor {
+        ModeledExecutor {
+            model: DurationModel {
+                mean_s,
+                cv: 0.2,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn full_run_completes_all_jobs_and_cleans_up() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 8, 4, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(60.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert_eq!(report.stats.completed, 32, "{}", report.summary());
+        assert!(report.cleaned_up);
+        assert!(report.fully_accounted());
+        assert!(report.drained_at.is_some());
+        assert!(report.cost.total_usd() > 0.0);
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let run = || {
+            let mut ex = modeled(30.0);
+            run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.drained_at, b.drained_at);
+        assert_eq!(a.cost, b.cost);
+    }
+
+    #[test]
+    fn check_if_done_skips_preexisting_outputs() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut sim = Simulation::new(cfg, RunOptions::default()).unwrap();
+        // Pre-stage outputs for half the jobs (first 4 of 8).
+        sim.stage(|acct| {
+            for g in jobs.to_messages().iter().take(4) {
+                let msg = crate::json::parse(g).unwrap();
+                let prefix = job_output_prefix(&msg);
+                acct.s3
+                    .put(
+                        "ds-data",
+                        &format!("{prefix}/out_0.csv"),
+                        Body::Synthetic { size: 4096 },
+                        0,
+                    )
+                    .unwrap();
+            }
+        });
+        sim.submit(&jobs).unwrap();
+        sim.start(&fleet).unwrap();
+        let mut ex = modeled(30.0);
+        let report = sim.run(&mut ex).unwrap();
+        assert_eq!(report.stats.skipped_done, 4, "{}", report.summary());
+        assert_eq!(report.stats.completed, 4);
+    }
+
+    #[test]
+    fn no_monitor_leaves_resources_and_costs_more() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mk_opts = |monitor| RunOptions {
+            monitor,
+            overrun_after_drain: 2 * HOUR,
+            ..Default::default()
+        };
+        let mut ex = modeled(30.0);
+        let with = run_full(&cfg, &jobs, &fleet, &mut ex, mk_opts(true)).unwrap();
+        let mut ex = modeled(30.0);
+        let without = run_full(&cfg, &jobs, &fleet, &mut ex, mk_opts(false)).unwrap();
+        assert!(with.cleaned_up);
+        assert!(!without.cleaned_up);
+        assert_eq!(without.stats.completed, 8);
+        // The unmonitored fleet keeps replacing self-shutdown instances
+        // for two extra hours: strictly more EC2 spend.
+        assert!(
+            without.cost.ec2_usd > with.cost.ec2_usd * 1.5,
+            "with=${:.4} without=${:.4}",
+            with.cost.ec2_usd,
+            without.cost.ec2_usd
+        );
+    }
+
+    #[test]
+    fn poison_jobs_go_to_dlq_and_run_still_ends() {
+        let cfg = quick_cfg();
+        let mut jobs = JobSpec::plate("P1", 4, 2, vec![]);
+        // Poison two of the eight jobs.
+        for g in jobs.groups.iter_mut().take(2) {
+            g.push(("poison".into(), crate::json::Value::Bool(true)));
+        }
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(30.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert_eq!(report.stats.completed, 6, "{}", report.summary());
+        assert_eq!(report.stats.dead_lettered, 2);
+        assert!(report.cleaned_up, "DLQ keeps the cluster from spinning forever");
+        assert!(report.fully_accounted());
+    }
+
+    #[test]
+    fn crashes_are_reaped_and_work_completes() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 12, 4, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let opts = RunOptions {
+            crash_mttf: Some(40 * MINUTE),
+            ..Default::default()
+        };
+        let mut ex = modeled(60.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap();
+        assert!(report.stats.crashes > 0, "{}", report.summary());
+        assert!(report.stats.alarm_terminations > 0);
+        assert!(report.fully_accounted(), "{}", report.summary());
+        assert!(report.cleaned_up);
+    }
+
+    #[test]
+    fn short_visibility_causes_duplicates() {
+        let mut cfg = quick_cfg();
+        // Jobs take ~120 s, visibility only 30 s: rampant redelivery.
+        cfg.sqs_message_visibility = 30 * crate::sim::SECOND;
+        cfg.check_if_done.enabled = false; // make duplicates maximally likely
+        let jobs = JobSpec::plate("P1", 6, 2, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(120.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert!(
+            report.stats.duplicates > 0,
+            "expected duplicate work: {}",
+            report.summary()
+        );
+        assert!(report.fully_accounted());
+    }
+}

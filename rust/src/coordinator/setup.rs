@@ -1,0 +1,124 @@
+//! Step 1: `python run.py setup`.
+//!
+//! "When you run 'python3 run.py setup' to execute the Config, it does
+//! three major things: 1) Creates task definitions in ECS … 2) Makes a
+//! queue in SQS (it is empty at this point) and sets a dead-letter
+//! queue.  3) Makes a service in ECS which defines how many Dockers you
+//! want."
+
+use anyhow::{Context, Result};
+
+use crate::aws::ecs::{Service, TaskDefinition};
+use crate::aws::sqs::RedrivePolicy;
+use crate::aws::AwsAccount;
+use crate::config::AppConfig;
+use crate::sim::SimTime;
+
+/// Execute the Config: task definition + queues + service.
+pub fn setup(acct: &mut AwsAccount, cfg: &AppConfig, now: SimTime) -> Result<()> {
+    cfg.validate().context("invalid Config file")?;
+
+    // 1) Task definition: Docker shape + the whole Config as env (DS
+    //    passes CHECK_IF_DONE_BOOL, DOCKER_CORES, EXPECTED_NUMBER_FILES,
+    //    MEMORY and user VARIABLEs into the container).
+    let mut env = vec![
+        ("APP_NAME".to_string(), cfg.app_name.clone()),
+        ("WORKLOAD_ID".to_string(), cfg.workload_id.clone()),
+        ("SQS_QUEUE_NAME".to_string(), cfg.sqs_queue_name.clone()),
+        (
+            "CHECK_IF_DONE_BOOL".to_string(),
+            cfg.check_if_done.enabled.to_string(),
+        ),
+        (
+            "EXPECTED_NUMBER_FILES".to_string(),
+            cfg.check_if_done.expected_number_files.to_string(),
+        ),
+        ("DOCKER_CORES".to_string(), cfg.docker_cores.to_string()),
+        ("MEMORY".to_string(), cfg.memory_mb.to_string()),
+    ];
+    env.extend(cfg.variables.iter().cloned());
+    acct.ecs.register_task_definition(TaskDefinition {
+        family: cfg.task_family(),
+        cpu_shares: cfg.cpu_shares,
+        memory_mb: cfg.memory_mb,
+        env,
+    });
+
+    // 2) Queue + DLQ with redrive.
+    acct.sqs
+        .create_queue(&cfg.sqs_queue_name, cfg.sqs_message_visibility);
+    acct.sqs
+        .create_queue(&cfg.sqs_dead_letter_queue, cfg.sqs_message_visibility);
+    acct.sqs
+        .set_redrive(
+            &cfg.sqs_queue_name,
+            &cfg.sqs_dead_letter_queue,
+            RedrivePolicy {
+                max_receive_count: cfg.max_receive_count,
+            },
+        )
+        .context("setting redrive policy")?;
+
+    // 3) Service: how many Dockers.
+    acct.ecs.create_cluster(&cfg.ecs_cluster);
+    acct.ecs
+        .create_service(Service {
+            name: cfg.service_name(),
+            cluster: cfg.ecs_cluster.clone(),
+            task_family: cfg.task_family(),
+            desired_count: cfg.cluster_machines * cfg.tasks_per_machine,
+        })
+        .context("creating ECS service")?;
+
+    let _ = now;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::Volatility;
+
+    #[test]
+    fn setup_creates_all_three() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        setup(&mut acct, &cfg, 0).unwrap();
+        assert!(acct.ecs.task_definition(&cfg.task_family()).is_some());
+        assert!(acct.sqs.queue_exists(&cfg.sqs_queue_name));
+        assert!(acct.sqs.queue_exists(&cfg.sqs_dead_letter_queue));
+        let svc = acct.ecs.service(&cfg.service_name()).unwrap();
+        assert_eq!(
+            svc.desired_count,
+            cfg.cluster_machines * cfg.tasks_per_machine
+        );
+    }
+
+    #[test]
+    fn setup_idempotent() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        setup(&mut acct, &cfg, 0).unwrap();
+        setup(&mut acct, &cfg, 10).unwrap();
+        assert!(acct.ecs.service(&cfg.service_name()).is_some());
+    }
+
+    #[test]
+    fn env_carries_config() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let mut cfg = AppConfig::default();
+        cfg.variables = vec![("MY_VAR".into(), "7".into())];
+        setup(&mut acct, &cfg, 0).unwrap();
+        let td = acct.ecs.task_definition(&cfg.task_family()).unwrap();
+        assert!(td.env.iter().any(|(k, v)| k == "MY_VAR" && v == "7"));
+        assert!(td.env.iter().any(|(k, _)| k == "CHECK_IF_DONE_BOOL"));
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let mut cfg = AppConfig::default();
+        cfg.cluster_machines = 0;
+        assert!(setup(&mut acct, &cfg, 0).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! Step 2: `python run.py submitJob files/job.json`.
+//!
+//! "it adds that list of tasks to the queue in SQS (which you made in the
+//! previous step)."
+
+use anyhow::{bail, Context, Result};
+
+use crate::aws::AwsAccount;
+use crate::config::{AppConfig, JobSpec};
+use crate::sim::SimTime;
+
+/// Expand the Job file into one SQS message per group.  Returns the
+/// number of jobs enqueued.
+pub fn submit_job(
+    acct: &mut AwsAccount,
+    cfg: &AppConfig,
+    jobs: &JobSpec,
+    now: SimTime,
+) -> Result<u64> {
+    if !acct.sqs.queue_exists(&cfg.sqs_queue_name) {
+        bail!(
+            "queue '{}' does not exist — run setup first",
+            cfg.sqs_queue_name
+        );
+    }
+    let msgs = jobs.to_messages();
+    let n = msgs.len() as u64;
+    for m in msgs {
+        acct.sqs
+            .send(&cfg.sqs_queue_name, m, now)
+            .context("sending job message")?;
+    }
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::Volatility;
+    use crate::coordinator::setup::setup;
+
+    #[test]
+    fn submit_enqueues_one_per_group() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        setup(&mut acct, &cfg, 0).unwrap();
+        let jobs = JobSpec::plate("P1", 8, 4, vec![]);
+        let n = submit_job(&mut acct, &cfg, &jobs, 0).unwrap();
+        assert_eq!(n, 32);
+        assert_eq!(acct.sqs.approximate_counts(&cfg.sqs_queue_name, 0), (32, 0));
+    }
+
+    #[test]
+    fn submit_requires_setup() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default();
+        let jobs = JobSpec::plate("P1", 1, 1, vec![]);
+        assert!(submit_job(&mut acct, &cfg, &jobs, 0).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! # ds-rs — Distributed-Something, reproduced as a Rust + XLA stack
+//!
+//! A reproduction of Weisbart & Cimini, *"Distributed-Something: scripts to
+//! leverage AWS storage and computing for distributed workflows at scale"*
+//! (2022).  The paper's system coordinates five AWS services — S3, SQS,
+//! EC2 Spot Fleet, ECS, and CloudWatch — so that any containerized
+//! workload can be fanned out over cheap preemptible machines with four
+//! single-line commands (`setup`, `submitJob`, `startCluster`, `monitor`).
+//!
+//! Here the AWS control plane is a faithful discrete-event simulation
+//! ([`aws`], driven by [`sim`]), the "Dockerized workload" is an
+//! AOT-compiled XLA executable run via PJRT ([`runtime`], [`workloads`]),
+//! and the paper's four commands are [`coordinator`].  See DESIGN.md for
+//! the substitution table and experiment index.
+
+pub mod aws;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod worker;
+pub mod workloads;

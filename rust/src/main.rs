@@ -1,0 +1,230 @@
+//! `ds` — the run.py analog: four single-line commands (plus helpers).
+//!
+//! ```text
+//! ds make-config  --out files/config.json            # template Config
+//! ds make-fleet-file --region us-east-1 --out files/fleet.json
+//! ds make-job     --plate P1 --wells 96 --sites 4 --out files/job.json
+//! ds run          --config files/config.json --job files/job.json \
+//!                 --fleet files/fleet.json [--monitor] [--cheapest] \
+//!                 [--pjrt artifacts/] [--seed N] [--volatility low|medium|high]
+//! ds describe     --config files/config.json         # validate + print
+//! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
+//! ```
+//!
+//! `run` performs setup → submitJob → startCluster → (monitor) over the
+//! simulated account and prints the run report.  With `--pjrt` the jobs
+//! execute the real AOT-compiled pipeline through PJRT.
+
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use ds_rs::aws::ec2::Volatility;
+use ds_rs::cli::Args;
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::runtime::{Manifest, PjrtRuntime};
+use ds_rs::sim::clock::from_secs_f64;
+use ds_rs::workloads::{DurationModel, ModeledExecutor, PjrtExecutor};
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("make-config") => make_config(args),
+        Some("make-fleet-file") => make_fleet_file(args),
+        Some("make-job") => make_job(args),
+        Some("describe") => describe(args),
+        Some("workloads") => workloads(args),
+        Some("run") => run(args),
+        Some(other) => bail!(
+            "unknown command '{other}' (try: make-config, make-fleet-file, make-job, describe, workloads, run)"
+        ),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "ds — Distributed-Something, reproduced\n\n\
+         commands:\n\
+         \x20 make-config      write a template Config file\n\
+         \x20 make-fleet-file  write a region-specific Fleet file template\n\
+         \x20 make-job         write a plate-layout Job file\n\
+         \x20 describe         validate and print a Config file\n\
+         \x20 workloads        list available AOT workload artifacts\n\
+         \x20 run              setup + submitJob + startCluster (+ monitor)\n\n\
+         see README.md for the full walkthrough"
+    );
+}
+
+fn write_or_print(path: Option<&str>, text: &str) -> Result<()> {
+    match path {
+        Some(p) => {
+            if let Some(dir) = std::path::Path::new(p).parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            std::fs::write(p, text).with_context(|| format!("writing {p}"))?;
+            println!("wrote {p}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
+fn make_config(args: &Args) -> Result<()> {
+    let cfg = AppConfig {
+        app_name: args.get_or("app-name", "MyApp").to_string(),
+        workload_id: args.get_or("workload", "cp_256_b1").to_string(),
+        cluster_machines: args.get_u64("machines", 4) as u32,
+        machine_price: args.get_f64("price", 0.10),
+        ..Default::default()
+    };
+    cfg.validate()?;
+    write_or_print(args.get("out"), &cfg.to_json().pretty())
+}
+
+fn make_fleet_file(args: &Args) -> Result<()> {
+    let region = args.get_or("region", "us-east-1");
+    let spec = FleetSpec::template(region)
+        .with_context(|| format!("no template for region '{region}'"))?;
+    write_or_print(args.get("out"), &spec.to_json().pretty())
+}
+
+fn make_job(args: &Args) -> Result<()> {
+    let plate = args.get_or("plate", "Plate1");
+    let wells = args.get_u64("wells", 96) as u32;
+    let sites = args.get_u64("sites", 4) as u32;
+    let jobs = JobSpec::plate(
+        plate,
+        wells,
+        sites,
+        vec![
+            ("input_prefix".into(), "input".into()),
+            ("output_prefix".into(), "output".into()),
+            ("output_bucket".into(), "ds-data".into()),
+        ],
+    );
+    write_or_print(args.get("out"), &jobs.to_json().pretty())
+}
+
+fn load_config(args: &Args) -> Result<AppConfig> {
+    let path = args
+        .get("config")
+        .context("--config files/config.json required")?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    AppConfig::from_json(&text).context("parsing Config file")
+}
+
+fn describe(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!("{}", cfg.to_json().pretty());
+    println!(
+        "\nderived: task_family={} service={} instance_log_group={}",
+        cfg.task_family(),
+        cfg.service_name(),
+        cfg.instance_log_group()
+    );
+    Ok(())
+}
+
+fn workloads(args: &Args) -> Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let man = Manifest::load(dir)?;
+    println!(
+        "{:<24} {:<14} {:>12} {:>10}",
+        "name", "kind", "input f32s", "out f32s"
+    );
+    for name in man.names() {
+        let w = man.get(name)?;
+        println!(
+            "{:<24} {:<14} {:>12} {:>10}",
+            w.name,
+            format!("{:?}", w.kind),
+            w.input_lens().iter().sum::<usize>(),
+            w.output_len
+        );
+    }
+    Ok(())
+}
+
+fn parse_volatility(s: &str) -> Result<Volatility> {
+    Ok(match s {
+        "low" => Volatility::Low,
+        "medium" => Volatility::Medium,
+        "high" => Volatility::High,
+        other => bail!("volatility must be low|medium|high, got '{other}'"),
+    })
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let job_path = args.get("job").context("--job files/job.json required")?;
+    let jobs = JobSpec::from_json(
+        &std::fs::read_to_string(job_path).with_context(|| format!("reading {job_path}"))?,
+    )
+    .context("parsing Job file")?;
+    let fleet_path = args
+        .get("fleet")
+        .context("--fleet files/fleet.json required")?;
+    let fleet = FleetSpec::from_json(
+        &std::fs::read_to_string(fleet_path)
+            .with_context(|| format!("reading {fleet_path}"))?,
+    )
+    .context("parsing Fleet file")?;
+
+    let opts = RunOptions {
+        seed: args.get_u64("seed", 42),
+        volatility: parse_volatility(args.get_or("volatility", "low"))?,
+        monitor: !args.flag("no-monitor"),
+        cheapest: args.flag("cheapest"),
+        crash_mttf: args
+            .get("crash-mttf-min")
+            .and_then(|v| v.parse::<f64>().ok())
+            .map(|m| from_secs_f64(m * 60.0)),
+        ..Default::default()
+    };
+
+    println!(
+        "run: app={} jobs={} machines={} bid=${}/h monitor={} cheapest={}",
+        cfg.app_name,
+        jobs.groups.len(),
+        cfg.cluster_machines,
+        cfg.machine_price,
+        opts.monitor,
+        opts.cheapest
+    );
+
+    let report = if let Some(artifacts) = args.get("pjrt") {
+        let runtime = PjrtRuntime::new(artifacts)?;
+        let mut ex = PjrtExecutor::new(runtime, &cfg.workload_id)?;
+        ex.time_scale = args.get_f64("time-scale", 1.0);
+        run_full(&cfg, &jobs, &fleet, &mut ex, opts)?
+    } else {
+        let mut ex = ModeledExecutor {
+            model: DurationModel {
+                mean_s: args.get_f64("job-mean-s", 90.0),
+                cv: args.get_f64("job-cv", 0.3),
+                stall_prob: args.get_f64("stall-prob", 0.0),
+                fail_prob: args.get_f64("fail-prob", 0.0),
+            },
+            ..Default::default()
+        };
+        run_full(&cfg, &jobs, &fleet, &mut ex, opts)?
+    };
+
+    println!("\n{}", report.summary());
+    Ok(())
+}

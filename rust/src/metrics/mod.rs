@@ -1,0 +1,226 @@
+//! Run statistics and reporting.
+
+use crate::aws::billing::CostReport;
+use crate::sim::clock::{fmt_dur, SimTime, HOUR};
+
+/// Raw counters accumulated by the event loop.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct RunStats {
+    /// Jobs completed successfully (message deleted).
+    pub completed: u64,
+    /// Jobs skipped because CHECK_IF_DONE found existing outputs.
+    pub skipped_done: u64,
+    /// Completed work whose receipt had gone stale (visibility expired
+    /// mid-run): the job ran twice — pure waste.
+    pub duplicates: u64,
+    /// Attempts that failed (tool exit != 0); message retried.
+    pub failed_attempts: u64,
+    /// Attempts that stalled (worker wedged until timeout).
+    pub stalled: u64,
+    /// Work lost because the instance died mid-job.
+    pub lost_to_death: u64,
+    /// Messages parked in the dead-letter queue at the end.
+    pub dead_lettered: u64,
+    /// Instance lifecycle.
+    pub instances_launched: u64,
+    pub interruptions: u64,
+    pub crashes: u64,
+    pub alarm_terminations: u64,
+    pub self_shutdowns: u64,
+    /// Events processed (perf telemetry).
+    pub events_processed: u64,
+}
+
+/// The full end-of-run report.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub stats: RunStats,
+    /// When the queue drained (all messages consumed), if it did.
+    pub drained_at: Option<SimTime>,
+    /// When the run ended (monitor cleanup or max time).
+    pub ended_at: SimTime,
+    /// Whether monitor cleanup completed (all resources torn down).
+    pub cleaned_up: bool,
+    pub cost: CostReport,
+    /// Jobs submitted initially.
+    pub jobs_submitted: u64,
+}
+
+impl RunReport {
+    /// Makespan: submit → queue drained (None if never drained).
+    pub fn makespan(&self) -> Option<SimTime> {
+        self.drained_at
+    }
+
+    /// Throughput in jobs per simulated hour, over the drain window.
+    pub fn jobs_per_hour(&self) -> f64 {
+        match self.drained_at {
+            Some(t) if t > 0 => self.stats.completed as f64 / (t as f64 / HOUR as f64),
+            _ => 0.0,
+        }
+    }
+
+    /// Fraction of finished attempts that were wasted duplicates.  A job
+    /// whose receipt went stale can still be *finished* by a later
+    /// attempt completing or by CHECK_IF_DONE recognizing the duplicate's
+    /// own outputs, so both count in the denominator.
+    pub fn duplicate_fraction(&self) -> f64 {
+        let total = self.stats.completed + self.stats.skipped_done + self.stats.duplicates;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.duplicates as f64 / total as f64
+        }
+    }
+
+    /// Did every submitted job end up completed (or parked in the DLQ)?
+    pub fn fully_accounted(&self) -> bool {
+        self.stats.completed + self.stats.skipped_done + self.stats.dead_lettered
+            >= self.jobs_submitted
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "jobs: {}/{} completed ({} skipped-done, {} dead-lettered)\n",
+            self.stats.completed,
+            self.jobs_submitted,
+            self.stats.skipped_done,
+            self.stats.dead_lettered
+        ));
+        s.push_str(&format!(
+            "attempts: {} duplicates, {} failures, {} stalled, {} lost-to-death\n",
+            self.stats.duplicates,
+            self.stats.failed_attempts,
+            self.stats.stalled,
+            self.stats.lost_to_death
+        ));
+        s.push_str(&format!(
+            "fleet: {} launched, {} interrupted, {} crashed, {} alarm-reaped, {} self-shutdown\n",
+            self.stats.instances_launched,
+            self.stats.interruptions,
+            self.stats.crashes,
+            self.stats.alarm_terminations,
+            self.stats.self_shutdowns
+        ));
+        match self.drained_at {
+            Some(t) => s.push_str(&format!(
+                "makespan: {} ({:.1} jobs/h)\n",
+                fmt_dur(t),
+                self.jobs_per_hour()
+            )),
+            None => s.push_str("makespan: queue never drained\n"),
+        }
+        s.push_str(&format!(
+            "ended: {} cleaned_up={}\n",
+            fmt_dur(self.ended_at),
+            self.cleaned_up
+        ));
+        s.push_str(&format!(
+            "cost: ${:.4} total (EC2 ${:.4}, {:.2} machine-h; on-demand would be ${:.4}, {:.1}x); overhead {:.2}%\n",
+            self.cost.total_usd(),
+            self.cost.ec2_usd,
+            self.cost.machine_hours,
+            self.cost.on_demand_equivalent_usd,
+            self.cost.spot_savings_factor(),
+            self.cost.overhead_fraction() * 100.0
+        ));
+        s
+    }
+}
+
+/// Simple fixed-width table printer for experiment outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        RunReport {
+            stats: RunStats {
+                completed: 100,
+                duplicates: 5,
+                ..Default::default()
+            },
+            drained_at: Some(2 * HOUR),
+            ended_at: 2 * HOUR + 10 * 60_000,
+            cleaned_up: true,
+            cost: CostReport::default(),
+            jobs_submitted: 100,
+        }
+    }
+
+    #[test]
+    fn throughput_and_duplicates() {
+        let r = report();
+        assert!((r.jobs_per_hour() - 50.0).abs() < 1e-9);
+        assert!((r.duplicate_fraction() - 5.0 / 105.0).abs() < 1e-9);
+        assert!(r.fully_accounted());
+    }
+
+    #[test]
+    fn summary_mentions_key_numbers() {
+        let s = report().summary();
+        assert!(s.contains("100/100 completed"));
+        assert!(s.contains("5 duplicates"));
+        assert!(s.contains("2.00h"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["machines", "jobs/h"]);
+        t.row(&["1".into(), "11.5".into()]);
+        t.row(&["128".into(), "1472.0".into()]);
+        let s = t.render();
+        assert!(s.contains("machines"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+}

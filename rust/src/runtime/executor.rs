@@ -1,0 +1,141 @@
+//! Compile-once/execute-many wrapper over the `xla` crate's PJRT client.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile`.  Executables are
+//! cached by workload name; compilation happens at most once per process.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Manifest, WorkloadInfo};
+
+/// A PJRT CPU client plus a cache of compiled workload executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// (compile_ms, execute_count, total_execute_ms) per workload.
+    stats: HashMap<String, (f64, u64, f64)>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            stats: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn info(&self, workload: &str) -> Result<&WorkloadInfo> {
+        self.manifest.get(workload)
+    }
+
+    /// Compile (or fetch cached) executable for `workload`.
+    pub fn ensure_compiled(&mut self, workload: &str) -> Result<()> {
+        if self.cache.contains_key(workload) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(workload)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling workload {workload}"))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.cache.insert(workload.to_string(), exe);
+        self.stats
+            .entry(workload.to_string())
+            .or_insert((compile_ms, 0, 0.0))
+            .0 = compile_ms;
+        Ok(())
+    }
+
+    /// Execute `workload` on flat f32 inputs (one Vec per argument, sizes
+    /// per the manifest).  Returns the flat f32 output and wall time (ms).
+    pub fn execute(&mut self, workload: &str, inputs: &[Vec<f32>]) -> Result<(Vec<f32>, f64)> {
+        self.ensure_compiled(workload)?;
+        let info = self.manifest.get(workload)?.clone();
+        let expected = info.input_lens();
+        if inputs.len() != expected.len() {
+            bail!(
+                "workload {workload} wants {} inputs, got {}",
+                expected.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (inp, shape)) in inputs.iter().zip(&info.input_shapes).enumerate() {
+            if inp.len() != expected[i] {
+                bail!(
+                    "workload {workload} input {i}: expected {} f32s, got {}",
+                    expected[i],
+                    inp.len()
+                );
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(
+                xla::Literal::vec1(inp)
+                    .reshape(&dims)
+                    .with_context(|| format!("reshaping input {i}"))?,
+            );
+        }
+        let exe = self.cache.get(workload).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {workload}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = lit.to_tuple1().context("unwrapping 1-tuple result")?;
+        let values = out.to_vec::<f32>().context("result to_vec")?;
+        if values.len() != info.output_len {
+            bail!(
+                "workload {workload}: expected {} outputs, got {}",
+                info.output_len,
+                values.len()
+            );
+        }
+        let st = self.stats.entry(workload.to_string()).or_insert((0.0, 0, 0.0));
+        st.1 += 1;
+        st.2 += ms;
+        Ok((values, ms))
+    }
+
+    /// (compile_ms, execute_count, total_execute_ms) for a workload.
+    pub fn stats(&self, workload: &str) -> Option<(f64, u64, f64)> {
+        self.stats.get(workload).copied()
+    }
+
+    /// Mean execute latency (ms) observed so far.
+    pub fn mean_latency_ms(&self, workload: &str) -> Option<f64> {
+        self.stats
+            .get(workload)
+            .filter(|(_, n, _)| *n > 0)
+            .map(|(_, n, total)| total / *n as f64)
+    }
+}
+
+// No unit tests here: PJRT needs the artifacts on disk, which exist only
+// after `make artifacts`; rust/tests/runtime_roundtrip.rs covers the real
+// load/compile/execute path end-to-end (including golden numerics vs the
+// python oracle).

@@ -1,0 +1,231 @@
+//! `artifacts/manifest.json`: what the AOT step produced.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{parse, Value};
+
+/// Which pipeline family an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// Distributed-CellProfiler analogue: images -> feature vectors.
+    CellProfiler,
+    /// Distributed-Fiji analogue: tile stack -> montage + seam scores.
+    Stitch,
+    /// Distributed-OmeZarrCreator analogue: image -> pyramid levels.
+    Pyramid,
+}
+
+impl WorkloadKind {
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "cellprofiler" => Self::CellProfiler,
+            "stitch" => Self::Stitch,
+            "pyramid" => Self::Pyramid,
+            other => bail!("unknown workload kind '{other}'"),
+        })
+    }
+}
+
+/// One AOT artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct WorkloadInfo {
+    pub name: String,
+    pub kind: WorkloadKind,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// f32 input shapes, in argument order.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Flat f32 output length.
+    pub output_len: usize,
+    /// Pipeline parameters (batch, size, grid, levels, …).
+    pub params: BTreeMap<String, f64>,
+}
+
+impl WorkloadInfo {
+    /// Total f32 elements expected per input argument.
+    pub fn input_lens(&self) -> Vec<usize> {
+        self.input_shapes
+            .iter()
+            .map(|s| s.iter().product())
+            .collect()
+    }
+
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.get(key).copied()
+    }
+
+    pub fn param_usize(&self, key: &str) -> Option<usize> {
+        self.param(key).map(|v| v as usize)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub source_digest: String,
+    workloads: BTreeMap<String, WorkloadInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::from_json(&text, dir)
+    }
+
+    pub fn from_json(text: &str, dir: PathBuf) -> Result<Self> {
+        let v = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let source_digest = v
+            .get("source_digest")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string();
+        let mut workloads = BTreeMap::new();
+        for w in v
+            .get("workloads")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'workloads'"))?
+        {
+            let name = w
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("workload missing name"))?
+                .to_string();
+            let kind = WorkloadKind::from_str(
+                w.get("kind").and_then(Value::as_str).unwrap_or_default(),
+            )?;
+            let file = w
+                .get("file")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("workload {name} missing file"))?
+                .to_string();
+            let input_shapes = w
+                .get("input_shapes")
+                .and_then(Value::as_arr)
+                .ok_or_else(|| anyhow!("workload {name} missing input_shapes"))?
+                .iter()
+                .map(|s| {
+                    s.as_arr()
+                        .map(|dims| {
+                            dims.iter()
+                                .filter_map(Value::as_u64)
+                                .map(|d| d as usize)
+                                .collect::<Vec<usize>>()
+                        })
+                        .ok_or_else(|| anyhow!("bad shape in {name}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let output_len = w
+                .get("output_len")
+                .and_then(Value::as_u64)
+                .ok_or_else(|| anyhow!("workload {name} missing output_len"))?
+                as usize;
+            let params = w
+                .get("params")
+                .and_then(Value::as_obj)
+                .map(|fields| {
+                    fields
+                        .iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            workloads.insert(
+                name.clone(),
+                WorkloadInfo {
+                    name,
+                    kind,
+                    file,
+                    input_shapes,
+                    output_len,
+                    params,
+                },
+            );
+        }
+        Ok(Self {
+            dir,
+            source_digest,
+            workloads,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&WorkloadInfo> {
+        self.workloads.get(name).ok_or_else(|| {
+            anyhow!(
+                "unknown workload '{name}'; available: {:?}",
+                self.names()
+            )
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.workloads.keys().map(String::as_str).collect()
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "source_digest": "abc123",
+      "workloads": [
+        {"name": "cp_128_b1", "kind": "cellprofiler", "file": "cp_128_b1.hlo.txt",
+         "input_shapes": [[1, 128, 128]], "dtype": "f32", "output_len": 16,
+         "params": {"batch": 1, "size": 128, "sigma": 2.0, "radius": 6}},
+        {"name": "pyramid_256_l4", "kind": "pyramid", "file": "pyramid_256_l4.hlo.txt",
+         "input_shapes": [[256, 256]], "dtype": "f32", "output_len": 87040,
+         "params": {"size": 256, "levels": 4}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.source_digest, "abc123");
+        assert_eq!(m.names(), vec!["cp_128_b1", "pyramid_256_l4"]);
+        let w = m.get("cp_128_b1").unwrap();
+        assert_eq!(w.kind, WorkloadKind::CellProfiler);
+        assert_eq!(w.input_lens(), vec![128 * 128]);
+        assert_eq!(w.param_usize("size"), Some(128));
+        assert_eq!(
+            m.hlo_path("pyramid_256_l4").unwrap(),
+            PathBuf::from("/tmp/pyramid_256_l4.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn unknown_workload_lists_available() {
+        let m = Manifest::from_json(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("cp_128_b1"));
+    }
+
+    #[test]
+    fn rejects_bad_kind() {
+        let bad = SAMPLE.replace("cellprofiler", "quantum");
+        assert!(Manifest::from_json(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_built() {
+        // Exercised fully in integration tests; here just check wiring.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.get("cp_256_b1").is_ok());
+            assert!(m.hlo_path("cp_256_b1").unwrap().exists());
+        }
+    }
+}

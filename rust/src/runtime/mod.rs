@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot
+//! path.
+//!
+//! The "Dockerized workload" of the paper is, here, an HLO module lowered
+//! at build time by `python/compile/aot.py` (`make artifacts`).  This
+//! module is the only place that touches the `xla` crate; everything
+//! above it sees plain `Vec<f32>` in/out.  Python never runs at request
+//! time.
+
+pub mod executor;
+pub mod manifest;
+
+pub use executor::PjrtRuntime;
+pub use manifest::{Manifest, WorkloadInfo, WorkloadKind};

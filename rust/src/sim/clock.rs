@@ -1,0 +1,88 @@
+//! Simulated time: integer milliseconds since run start.
+//!
+//! Integer time makes event ordering exact (no f64 ties drifting across
+//! platforms) and hashes/compares trivially.  Helper constants keep call
+//! sites readable: `3 * MINUTE + 30 * SECOND`.
+
+/// Simulated timestamp / duration in milliseconds.
+pub type SimTime = u64;
+
+/// One simulated second.
+pub const SECOND: SimTime = 1_000;
+/// One simulated minute.
+pub const MINUTE: SimTime = 60 * SECOND;
+/// One simulated hour.
+pub const HOUR: SimTime = 60 * MINUTE;
+
+/// Render a [`SimTime`] as `HH:MM:SS.mmm` for logs and reports.
+pub fn fmt_time(t: SimTime) -> String {
+    let ms = t % 1000;
+    let s = (t / SECOND) % 60;
+    let m = (t / MINUTE) % 60;
+    let h = t / HOUR;
+    format!("{h:02}:{m:02}:{s:02}.{ms:03}")
+}
+
+/// Render a duration compactly: `90s`, `2.5m`, `3.2h`.
+pub fn fmt_dur(t: SimTime) -> String {
+    if t >= HOUR {
+        format!("{:.2}h", t as f64 / HOUR as f64)
+    } else if t >= MINUTE {
+        format!("{:.1}m", t as f64 / MINUTE as f64)
+    } else {
+        format!("{:.1}s", t as f64 / SECOND as f64)
+    }
+}
+
+/// Convert fractional seconds to [`SimTime`], saturating at 0.
+pub fn from_secs_f64(secs: f64) -> SimTime {
+    if secs <= 0.0 {
+        0
+    } else {
+        (secs * 1000.0).round() as SimTime
+    }
+}
+
+/// Convert [`SimTime`] to fractional seconds.
+pub fn to_secs_f64(t: SimTime) -> f64 {
+    t as f64 / 1000.0
+}
+
+/// Convert [`SimTime`] to fractional hours (billing granularity).
+pub fn to_hours_f64(t: SimTime) -> f64 {
+    t as f64 / HOUR as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_compose() {
+        assert_eq!(HOUR, 3_600_000);
+        assert_eq!(MINUTE, 60_000);
+        assert_eq!(2 * MINUTE + 30 * SECOND, 150_000);
+    }
+
+    #[test]
+    fn fmt_time_renders() {
+        assert_eq!(fmt_time(0), "00:00:00.000");
+        assert_eq!(fmt_time(HOUR + 2 * MINUTE + 3 * SECOND + 45), "01:02:03.045");
+        assert_eq!(fmt_time(25 * HOUR), "25:00:00.000");
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert_eq!(fmt_dur(500), "0.5s");
+        assert_eq!(fmt_dur(90 * SECOND), "1.5m");
+        assert_eq!(fmt_dur(2 * HOUR + 30 * MINUTE), "2.50h");
+    }
+
+    #[test]
+    fn secs_roundtrip() {
+        assert_eq!(from_secs_f64(1.5), 1500);
+        assert_eq!(from_secs_f64(-3.0), 0);
+        assert!((to_secs_f64(2500) - 2.5).abs() < 1e-12);
+        assert!((to_hours_f64(HOUR / 2) - 0.5).abs() < 1e-12);
+    }
+}

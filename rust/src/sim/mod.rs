@@ -1,0 +1,19 @@
+//! Discrete-event simulation core.
+//!
+//! Everything in the AWS substrate runs on a simulated clock so that a
+//! multi-hour spot-fleet run (the paper's "walk away and let things run")
+//! replays in milliseconds, deterministically, under a fixed seed.  The
+//! design is a classic DES: a monotone virtual clock plus a binary heap of
+//! timestamped events with FIFO tie-breaking.
+//!
+//! Real compute (PJRT execution of the AOT artifacts) happens *inline*
+//! during an event; its measured wall-time is charged to the simulated
+//! clock by the worker's duration model (see [`crate::workloads`]).
+
+pub mod clock;
+pub mod events;
+pub mod rng;
+
+pub use clock::{SimTime, HOUR, MINUTE, SECOND};
+pub use events::EventQueue;
+pub use rng::SimRng;

@@ -1,0 +1,108 @@
+//! The generic worker (`worker/generic-worker.py` analog).
+//!
+//! Each Docker container runs DOCKER_CORES copies of this loop:
+//! poll SQS → CHECK_IF_DONE → run the tool → upload outputs → delete the
+//! message → log.  The loop itself is event-driven inside
+//! [`crate::coordinator::run`]; this module holds the pure pieces:
+//! CHECK_IF_DONE and message parsing.
+
+use crate::aws::s3::S3;
+use crate::config::app_config::CheckIfDone;
+use crate::json::{parse, Value};
+
+/// CHECK_IF_DONE: "If your software determines the correct number of
+/// files are already in the output folder it will designate that job as
+/// completed and move onto the next one."
+///
+/// A file counts iff its size ≥ MIN_FILE_SIZE_BYTES and its key contains
+/// NECESSARY_STRING; the job is done iff ≥ EXPECTED_NUMBER_FILES count.
+pub fn check_if_done(
+    s3: &mut S3,
+    check: &CheckIfDone,
+    bucket: &str,
+    output_prefix: &str,
+) -> bool {
+    if !check.enabled {
+        return false;
+    }
+    let qualifying = s3
+        .list_prefix(bucket, output_prefix)
+        .into_iter()
+        .filter(|(key, size)| {
+            *size >= check.min_file_size_bytes
+                && (check.necessary_string.is_empty() || key.contains(&check.necessary_string))
+        })
+        .count();
+    qualifying >= check.expected_number_files as usize
+}
+
+/// Parse a job message body; malformed messages are the classic poison
+/// pill, so they surface as `None` (worker fails the job, SQS redrives
+/// to the DLQ).
+pub fn parse_message(body: &str) -> Option<Value> {
+    parse(body).ok().filter(|v| v.as_obj().is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::s3::Body;
+
+    fn s3_with(files: &[(&str, u64)]) -> S3 {
+        let mut s3 = S3::new();
+        s3.create_bucket("b");
+        for (k, sz) in files {
+            s3.put("b", k, Body::Synthetic { size: *sz }, 0).unwrap();
+        }
+        s3
+    }
+
+    fn check(n: u32, min: u64, nec: &str) -> CheckIfDone {
+        CheckIfDone {
+            enabled: true,
+            expected_number_files: n,
+            min_file_size_bytes: min,
+            necessary_string: nec.into(),
+        }
+    }
+
+    #[test]
+    fn disabled_never_done() {
+        let mut s3 = s3_with(&[("out/j1/a.csv", 100)]);
+        let mut c = check(1, 0, "");
+        c.enabled = false;
+        assert!(!check_if_done(&mut s3, &c, "b", "out/j1"));
+    }
+
+    #[test]
+    fn counts_files_under_prefix() {
+        let mut s3 = s3_with(&[
+            ("out/j1/a.csv", 100),
+            ("out/j1/b.csv", 100),
+            ("out/j2/c.csv", 100),
+        ]);
+        assert!(check_if_done(&mut s3, &check(2, 0, ""), "b", "out/j1"));
+        assert!(!check_if_done(&mut s3, &check(3, 0, ""), "b", "out/j1"));
+    }
+
+    #[test]
+    fn min_size_filters_corrupt_files() {
+        let mut s3 = s3_with(&[("out/j/a.csv", 10), ("out/j/b.csv", 5_000)]);
+        assert!(!check_if_done(&mut s3, &check(2, 1_000, ""), "b", "out/j"));
+        assert!(check_if_done(&mut s3, &check(1, 1_000, ""), "b", "out/j"));
+    }
+
+    #[test]
+    fn necessary_string_filters() {
+        let mut s3 = s3_with(&[("out/j/image.png", 9_999), ("out/j/data.csv", 9_999)]);
+        assert!(check_if_done(&mut s3, &check(1, 0, ".csv"), "b", "out/j"));
+        assert!(!check_if_done(&mut s3, &check(2, 0, ".csv"), "b", "out/j"));
+    }
+
+    #[test]
+    fn parse_message_rejects_garbage() {
+        assert!(parse_message("{\"a\": 1}").is_some());
+        assert!(parse_message("not json").is_none());
+        assert!(parse_message("[1,2]").is_none());
+    }
+}

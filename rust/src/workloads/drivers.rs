@@ -1,0 +1,478 @@
+//! Job executors: turn a DS job message into work.
+//!
+//! The event loop is executor-agnostic: [`ModeledExecutor`] draws
+//! durations from a distribution and writes placeholder outputs (scale
+//! experiments); [`PjrtExecutor`] runs the real AOT-compiled pipeline via
+//! PJRT and writes real feature CSVs / montages / zarr pyramids
+//! (end-to-end examples).  Both see the same message schema, S3, and
+//! CHECK_IF_DONE logic, so coordination behaviour is identical.
+
+use anyhow::Result;
+
+use crate::aws::s3::{Body, S3};
+use crate::json::Value;
+use crate::runtime::{PjrtRuntime, WorkloadKind};
+use crate::sim::clock::SimTime;
+use crate::sim::SimRng;
+
+use super::duration::{Attempt, DurationModel};
+use super::synth::{f32_to_bytes, image_seed, SynthImage};
+use super::zarr;
+
+/// Feature names, mirroring python/compile/model.py::CP_FEATURE_NAMES.
+pub const CP_FEATURE_NAMES: [&str; 16] = [
+    "fg_mean",
+    "fg_std",
+    "fg_fraction",
+    "fg_max",
+    "fg_min",
+    "bg_mean",
+    "bg_std",
+    "otsu_threshold",
+    "edge_mean",
+    "edge_max",
+    "illum_scale",
+    "raw_mean",
+    "raw_std",
+    "smooth_mean",
+    "granularity",
+    "object_count_proxy",
+];
+
+/// What one job attempt produced.
+#[derive(Debug)]
+pub enum JobOutcome {
+    /// Success: outputs land in S3 at completion time; message deleted.
+    Done {
+        duration: SimTime,
+        /// (key, body) pairs, written under the job's output bucket.
+        outputs: Vec<(String, Body)>,
+        log: String,
+    },
+    /// The tool exited non-zero: no outputs, message not deleted.
+    Failed { duration: SimTime, log: String },
+    /// Wedged: never returns; the message resurfaces via the visibility
+    /// timeout and the idle machine trips the CPU alarm.
+    Stalled,
+}
+
+/// Read-only job context handed to executors.
+pub struct JobCtx<'a> {
+    pub s3: &'a mut S3,
+    pub rng: &'a mut SimRng,
+    pub now: SimTime,
+}
+
+/// A job executor: the inside of the Docker container.
+pub trait JobExecutor {
+    fn execute(&mut self, msg: &Value, ctx: &mut JobCtx) -> JobOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// Message-schema helpers (shared with the worker's CHECK_IF_DONE).
+// ---------------------------------------------------------------------------
+
+/// Stable tag for a job: all `Metadata_*` values joined with '/', in the
+/// order they appear in the message.
+pub fn job_tag(msg: &Value) -> String {
+    let mut parts = Vec::new();
+    if let Some(fields) = msg.as_obj() {
+        for (k, v) in fields {
+            if let Some(stripped) = k.strip_prefix("Metadata_") {
+                let _ = stripped;
+                match v {
+                    Value::Str(s) => parts.push(s.clone()),
+                    Value::Num(n) => parts.push(crate::json::Value::Num(*n).pretty()),
+                    _ => {}
+                }
+            }
+        }
+    }
+    if parts.is_empty() {
+        parts.push("job".to_string());
+    }
+    parts.join("/")
+}
+
+/// Output bucket for a job (shared key `output_bucket`).
+pub fn output_bucket(msg: &Value) -> &str {
+    msg.get("output_bucket")
+        .and_then(Value::as_str)
+        .unwrap_or("ds-data")
+}
+
+/// Output key prefix for a job: `{output_prefix}/{job_tag}`.
+pub fn job_output_prefix(msg: &Value) -> String {
+    let base = msg
+        .get("output_prefix")
+        .and_then(Value::as_str)
+        .unwrap_or("output");
+    format!("{}/{}", base, job_tag(msg))
+}
+
+fn is_poison(msg: &Value) -> bool {
+    msg.get("poison").and_then(Value::as_bool).unwrap_or(false)
+}
+
+// ---------------------------------------------------------------------------
+// Modeled executor
+// ---------------------------------------------------------------------------
+
+/// Draws durations from a [`DurationModel`]; writes `n_outputs`
+/// placeholder objects of `output_size` bytes.
+pub struct ModeledExecutor {
+    pub model: DurationModel,
+    pub n_outputs: u32,
+    pub output_size: u64,
+}
+
+impl Default for ModeledExecutor {
+    fn default() -> Self {
+        Self {
+            model: DurationModel::default(),
+            n_outputs: 1,
+            output_size: 4_096,
+        }
+    }
+}
+
+impl JobExecutor for ModeledExecutor {
+    fn execute(&mut self, msg: &Value, ctx: &mut JobCtx) -> JobOutcome {
+        if is_poison(msg) {
+            // Poison pill: fails quickly, forever.
+            return JobOutcome::Failed {
+                duration: 5_000,
+                log: format!("job {}: poison input, exit 1", job_tag(msg)),
+            };
+        }
+        match self.model.sample(ctx.rng) {
+            Attempt::Stalls => JobOutcome::Stalled,
+            Attempt::Fails(d) => JobOutcome::Failed {
+                duration: d,
+                log: format!("job {}: exit 1 after {}ms", job_tag(msg), d),
+            },
+            Attempt::Completes(d) => {
+                let prefix = job_output_prefix(msg);
+                let outputs = (0..self.n_outputs)
+                    .map(|i| {
+                        (
+                            format!("{prefix}/out_{i}.csv"),
+                            Body::Synthetic {
+                                size: self.output_size,
+                            },
+                        )
+                    })
+                    .collect();
+                JobOutcome::Done {
+                    duration: d,
+                    outputs,
+                    log: format!("job {}: ok in {}ms", job_tag(msg), d),
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT executor
+// ---------------------------------------------------------------------------
+
+/// Runs the real AOT workload.  Inputs come from S3 if staged
+/// (`{input_prefix}/{tag}.f32`, little-endian f32), else are synthesized
+/// deterministically from the job metadata — both paths exercise the same
+/// downstream code.
+pub struct PjrtExecutor {
+    pub runtime: PjrtRuntime,
+    pub workload: String,
+    pub synth: SynthImage,
+    /// Multiply measured wall-clock before charging sim time (1.0 = as
+    /// measured; >1 emulates the paper's minutes-long CellProfiler jobs
+    /// with our milliseconds-long kernels without changing any behaviour).
+    pub time_scale: f64,
+}
+
+impl PjrtExecutor {
+    pub fn new(runtime: PjrtRuntime, workload: &str) -> Result<Self> {
+        let info = runtime.info(workload)?;
+        let size = info.param_usize("size").or(info.param_usize("tile")).unwrap_or(256);
+        Ok(Self {
+            runtime,
+            workload: workload.to_string(),
+            synth: SynthImage {
+                size,
+                ..Default::default()
+            },
+            time_scale: 1.0,
+        })
+    }
+
+    fn fetch_or_synth(&self, ctx: &mut JobCtx, msg: &Value, seed: u64, len: usize) -> Vec<f32> {
+        let bucket = msg
+            .get("input_bucket")
+            .and_then(Value::as_str)
+            .unwrap_or("ds-data");
+        let key = format!(
+            "{}/{}.f32",
+            msg.get("input_prefix").and_then(Value::as_str).unwrap_or("input"),
+            job_tag(msg)
+        );
+        if let Ok(obj) = ctx.s3.get(bucket, &key) {
+            if let Some(bytes) = obj.body.bytes() {
+                let vals = super::synth::bytes_to_f32(bytes);
+                if vals.len() == len {
+                    return vals;
+                }
+            }
+        }
+        let img = self.synth.render(seed);
+        debug_assert_eq!(img.len(), self.synth.size * self.synth.size);
+        img
+    }
+
+    fn run_cellprofiler(&mut self, msg: &Value, ctx: &mut JobCtx) -> Result<JobOutcome> {
+        let info = self.runtime.info(&self.workload)?.clone();
+        let batch = info.param_usize("batch").unwrap_or(1);
+        let size = info.param_usize("size").unwrap_or(256);
+        let plate = msg
+            .get("Metadata_Plate")
+            .and_then(Value::as_str)
+            .unwrap_or("P0")
+            .to_string();
+        let well = msg
+            .get("Metadata_Well")
+            .and_then(Value::as_str)
+            .unwrap_or("A01")
+            .to_string();
+        let site = msg
+            .get("Metadata_Site")
+            .and_then(Value::as_u64)
+            .unwrap_or(0);
+        // Batch b processes sites [site*b, site*b+b).
+        let mut input = Vec::with_capacity(batch * size * size);
+        for i in 0..batch {
+            let seed = image_seed(&plate, &well, site * batch as u64 + i as u64);
+            input.extend(self.fetch_or_synth(ctx, msg, seed, size * size));
+        }
+        let (out, ms) = self.runtime.execute(&self.workload, &[input])?;
+        // CSV: header + one row per site in the batch.
+        let mut csv = String::from("site,");
+        csv.push_str(&CP_FEATURE_NAMES.join(","));
+        csv.push('\n');
+        for (i, row) in out.chunks(CP_FEATURE_NAMES.len()).enumerate() {
+            csv.push_str(&format!("{}", site * batch as u64 + i as u64));
+            for v in row {
+                csv.push_str(&format!(",{v:.6}"));
+            }
+            csv.push('\n');
+        }
+        let prefix = job_output_prefix(msg);
+        Ok(JobOutcome::Done {
+            duration: ((ms * self.time_scale).max(1.0)) as SimTime,
+            outputs: vec![(format!("{prefix}/measurements.csv"), Body::Bytes(csv.into_bytes()))],
+            log: format!("cellprofiler {plate}/{well}/{site}: {batch} site(s) in {ms:.1}ms"),
+        })
+    }
+
+    fn run_stitch(&mut self, msg: &Value, ctx: &mut JobCtx) -> Result<JobOutcome> {
+        let info = self.runtime.info(&self.workload)?.clone();
+        let grid = info.param_usize("grid").unwrap_or(2);
+        let tile = info.param_usize("tile").unwrap_or(128);
+        let overlap = info.param_usize("overlap").unwrap_or(16);
+        let tag = job_tag(msg);
+        let seed = image_seed("stitch", &tag, 0);
+        let tiles = self.synth.render_tiles(seed, grid, tile, overlap);
+        let mut input = Vec::with_capacity(grid * grid * tile * tile);
+        for t in &tiles {
+            input.extend_from_slice(t);
+        }
+        let _ = ctx;
+        let (out, ms) = self.runtime.execute(&self.workload, &[input])?;
+        let side = grid * tile - (grid - 1) * overlap;
+        let montage = &out[..side * side];
+        let scores = &out[side * side..];
+        let mut csv = String::from("seam,ncc\n");
+        for (i, s) in scores.iter().enumerate() {
+            csv.push_str(&format!("{i},{s:.6}\n"));
+        }
+        let prefix = job_output_prefix(msg);
+        Ok(JobOutcome::Done {
+            duration: ((ms * self.time_scale).max(1.0)) as SimTime,
+            outputs: vec![
+                (
+                    format!("{prefix}/montage_{side}x{side}.f32"),
+                    Body::Bytes(f32_to_bytes(montage)),
+                ),
+                (format!("{prefix}/seam_scores.csv"), Body::Bytes(csv.into_bytes())),
+            ],
+            log: format!("stitch {tag}: {grid}x{grid} grid in {ms:.1}ms, {} seams", scores.len()),
+        })
+    }
+
+    fn run_pyramid(&mut self, msg: &Value, ctx: &mut JobCtx) -> Result<JobOutcome> {
+        let info = self.runtime.info(&self.workload)?.clone();
+        let size = info.param_usize("size").unwrap_or(256);
+        let levels = info.param_usize("levels").unwrap_or(4);
+        let tag = job_tag(msg);
+        let seed = image_seed("zarr", &tag, 0);
+        let input = self.fetch_or_synth(ctx, msg, seed, size * size);
+        let (out, ms) = self.runtime.execute(&self.workload, &[input])?;
+        // Slice the flat pyramid into levels and chunk each into the store.
+        let lvls = zarr::pyramid_levels(size, size, levels);
+        let prefix = job_output_prefix(msg);
+        let store = format!("{prefix}/image.zarr");
+        let mut outputs = Vec::new();
+        outputs.push((
+            format!("{store}/.zattrs"),
+            Body::Bytes(zarr::zattrs_metadata(&tag, &lvls).into_bytes()),
+        ));
+        let mut off = 0usize;
+        for lvl in &lvls {
+            let n = lvl.height * lvl.width;
+            let data = &out[off..off + n];
+            off += n;
+            outputs.push((
+                format!("{store}/{}/.zarray", lvl.index),
+                Body::Bytes(zarr::zarray_metadata(lvl).into_bytes()),
+            ));
+            for (suffix, bytes) in zarr::chunk_level(lvl, data) {
+                outputs.push((format!("{store}/{suffix}"), Body::Bytes(bytes)));
+            }
+        }
+        let n_out = outputs.len();
+        Ok(JobOutcome::Done {
+            duration: ((ms * self.time_scale).max(1.0)) as SimTime,
+            outputs,
+            log: format!("omezarr {tag}: {levels} levels, {n_out} objects in {ms:.1}ms"),
+        })
+    }
+}
+
+impl JobExecutor for PjrtExecutor {
+    fn execute(&mut self, msg: &Value, ctx: &mut JobCtx) -> JobOutcome {
+        if is_poison(msg) {
+            return JobOutcome::Failed {
+                duration: 5_000,
+                log: format!("job {}: poison input, exit 1", job_tag(msg)),
+            };
+        }
+        let kind = match self.runtime.info(&self.workload) {
+            Ok(i) => i.kind,
+            Err(e) => {
+                return JobOutcome::Failed {
+                    duration: 1_000,
+                    log: format!("unknown workload: {e}"),
+                }
+            }
+        };
+        let result = match kind {
+            WorkloadKind::CellProfiler => self.run_cellprofiler(msg, ctx),
+            WorkloadKind::Stitch => self.run_stitch(msg, ctx),
+            WorkloadKind::Pyramid => self.run_pyramid(msg, ctx),
+        };
+        match result {
+            Ok(outcome) => outcome,
+            Err(e) => JobOutcome::Failed {
+                duration: 1_000,
+                log: format!("job {}: error: {e:#}", job_tag(msg)),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    fn msg(text: &str) -> Value {
+        parse(text).unwrap()
+    }
+
+    #[test]
+    fn job_tag_joins_metadata_in_order() {
+        let m = msg(
+            r#"{"output_prefix": "o", "Metadata_Plate": "P1",
+                "Metadata_Well": "B03", "Metadata_Site": 2, "x": 1}"#,
+        );
+        assert_eq!(job_tag(&m), "P1/B03/2");
+        assert_eq!(job_output_prefix(&m), "o/P1/B03/2");
+        assert_eq!(output_bucket(&m), "ds-data");
+    }
+
+    #[test]
+    fn job_tag_fallback() {
+        assert_eq!(job_tag(&msg(r#"{"a": 1}"#)), "job");
+    }
+
+    #[test]
+    fn modeled_executor_success_writes_outputs() {
+        let mut ex = ModeledExecutor {
+            model: DurationModel {
+                mean_s: 10.0,
+                cv: 0.0,
+                ..Default::default()
+            },
+            n_outputs: 3,
+            output_size: 100,
+        };
+        let mut s3 = S3::new();
+        let mut rng = SimRng::new(1);
+        let mut ctx = JobCtx {
+            s3: &mut s3,
+            rng: &mut rng,
+            now: 0,
+        };
+        let m = msg(r#"{"Metadata_Well": "A01"}"#);
+        match ex.execute(&m, &mut ctx) {
+            JobOutcome::Done {
+                duration, outputs, ..
+            } => {
+                assert_eq!(duration, 10_000);
+                assert_eq!(outputs.len(), 3);
+                assert!(outputs[0].0.starts_with("output/A01/"));
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn poison_always_fails() {
+        let mut ex = ModeledExecutor::default();
+        let mut s3 = S3::new();
+        let mut rng = SimRng::new(2);
+        let mut ctx = JobCtx {
+            s3: &mut s3,
+            rng: &mut rng,
+            now: 0,
+        };
+        let m = msg(r#"{"poison": true, "Metadata_Well": "A01"}"#);
+        for _ in 0..5 {
+            assert!(matches!(
+                ex.execute(&m, &mut ctx),
+                JobOutcome::Failed { .. }
+            ));
+        }
+    }
+
+    #[test]
+    fn stall_prob_one_always_stalls() {
+        let mut ex = ModeledExecutor {
+            model: DurationModel {
+                stall_prob: 1.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut s3 = S3::new();
+        let mut rng = SimRng::new(3);
+        let mut ctx = JobCtx {
+            s3: &mut s3,
+            rng: &mut rng,
+            now: 0,
+        };
+        assert!(matches!(
+            ex.execute(&msg("{}"), &mut ctx),
+            JobOutcome::Stalled
+        ));
+    }
+}

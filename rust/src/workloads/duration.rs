@@ -1,0 +1,137 @@
+//! Modeled job durations for at-scale simulation.
+//!
+//! Scale experiments (T1, T3–T8) simulate thousands of jobs across
+//! hundreds of machines; running PJRT for each would make the benchmark
+//! about CPU floor time, not coordination.  Instead durations draw from a
+//! log-normal calibrated by (mean, cv) — the canonical heavy-ish-tailed
+//! shape of bioimage batch jobs — optionally anchored to a *measured*
+//! PJRT latency from the end-to-end example (see EXPERIMENTS.md).
+
+use crate::sim::clock::{from_secs_f64, SimTime};
+use crate::sim::SimRng;
+
+/// Log-normal duration model with optional stall and failure modes.
+#[derive(Debug, Clone)]
+pub struct DurationModel {
+    /// Mean job duration, seconds.
+    pub mean_s: f64,
+    /// Coefficient of variation (0 = constant).
+    pub cv: f64,
+    /// Probability a job stalls: it never completes; its message returns
+    /// via the visibility timeout (models wedged software, T4).
+    pub stall_prob: f64,
+    /// Probability a job fails fast (non-zero exit): message not deleted.
+    pub fail_prob: f64,
+}
+
+impl Default for DurationModel {
+    fn default() -> Self {
+        Self {
+            mean_s: 90.0,
+            cv: 0.3,
+            stall_prob: 0.0,
+            fail_prob: 0.0,
+        }
+    }
+}
+
+/// What the model decided for one job attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Attempt {
+    /// Completes after the duration.
+    Completes(SimTime),
+    /// Runs for the duration, then fails (message left in flight).
+    Fails(SimTime),
+    /// Never completes (worker wedged until externally recovered).
+    Stalls,
+}
+
+impl DurationModel {
+    pub fn sample(&self, rng: &mut SimRng) -> Attempt {
+        if rng.chance(self.stall_prob) {
+            return Attempt::Stalls;
+        }
+        let d = from_secs_f64(rng.lognormal_mean_cv(self.mean_s, self.cv)).max(1);
+        if rng.chance(self.fail_prob) {
+            Attempt::Fails(d)
+        } else {
+            Attempt::Completes(d)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_tracks_parameter() {
+        let m = DurationModel {
+            mean_s: 120.0,
+            cv: 0.25,
+            ..Default::default()
+        };
+        let mut rng = SimRng::new(1);
+        let n = 20_000;
+        let total: f64 = (0..n)
+            .map(|_| match m.sample(&mut rng) {
+                Attempt::Completes(d) => d as f64 / 1000.0,
+                _ => panic!("no failures configured"),
+            })
+            .sum();
+        let mean = total / n as f64;
+        assert!((mean - 120.0).abs() < 2.0, "mean={mean}");
+    }
+
+    #[test]
+    fn zero_cv_constant() {
+        let m = DurationModel {
+            mean_s: 10.0,
+            cv: 0.0,
+            ..Default::default()
+        };
+        let mut rng = SimRng::new(2);
+        assert_eq!(m.sample(&mut rng), Attempt::Completes(10_000));
+    }
+
+    #[test]
+    fn stall_and_fail_rates_approximate() {
+        let m = DurationModel {
+            mean_s: 5.0,
+            cv: 0.1,
+            stall_prob: 0.1,
+            fail_prob: 0.2,
+            ..Default::default()
+        };
+        let mut rng = SimRng::new(3);
+        let n = 50_000;
+        let (mut stalls, mut fails) = (0, 0);
+        for _ in 0..n {
+            match m.sample(&mut rng) {
+                Attempt::Stalls => stalls += 1,
+                Attempt::Fails(_) => fails += 1,
+                Attempt::Completes(_) => {}
+            }
+        }
+        let stall_rate = stalls as f64 / n as f64;
+        // fail applies to the non-stalled 90%
+        let fail_rate = fails as f64 / n as f64;
+        assert!((stall_rate - 0.1).abs() < 0.01, "{stall_rate}");
+        assert!((fail_rate - 0.18).abs() < 0.01, "{fail_rate}");
+    }
+
+    #[test]
+    fn duration_never_zero() {
+        let m = DurationModel {
+            mean_s: 0.0005,
+            cv: 2.0,
+            ..Default::default()
+        };
+        let mut rng = SimRng::new(4);
+        for _ in 0..1000 {
+            if let Attempt::Completes(d) = m.sample(&mut rng) {
+                assert!(d >= 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The "Something": workload data generation, drivers, and timing models.
+//!
+//! * [`synth`]    — deterministic synthetic microscopy images (the paper's
+//!   input data, which we cannot download, simulated per DESIGN.md §2).
+//! * [`drivers`]  — per-kind job drivers: turn a DS job message into PJRT
+//!   inputs and the PJRT output into S3 objects (feature CSVs, stitched
+//!   montages, zarr-like pyramid stores).
+//! * [`duration`] — modeled job-duration distributions for scale
+//!   experiments that simulate thousands of jobs without running PJRT.
+//! * [`zarr`]     — minimal chunked, multiscale store layout (the
+//!   Distributed-OmeZarrCreator output format).
+
+pub mod drivers;
+pub mod duration;
+pub mod synth;
+pub mod zarr;
+
+pub use drivers::{JobExecutor, JobOutcome, ModeledExecutor, PjrtExecutor};
+pub use duration::DurationModel;
+pub use synth::SynthImage;

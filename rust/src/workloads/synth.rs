@@ -1,0 +1,202 @@
+//! Synthetic microscopy image generator.
+//!
+//! Deterministic per (plate, well, site): Gaussian-blob "cells" over a
+//! vignetting illumination field plus background and sensor noise — the
+//! same qualitative structure as the python test generator
+//! (python/tests/test_model.py::synth_image), so the feature pipeline
+//! behaves the same on both sides.  Used by the end-to-end examples to
+//! stage input data into simulated S3 and by the quickstart to keep
+//! everything self-contained.
+
+use crate::sim::SimRng;
+
+/// Parameters for one synthetic field of view.
+#[derive(Debug, Clone)]
+pub struct SynthImage {
+    pub size: usize,
+    pub n_blobs: u32,
+    /// Vignetting strength 0..1 (0.4 matches the python generator).
+    pub vignette: f64,
+    pub background: f32,
+    pub noise_sd: f32,
+}
+
+impl Default for SynthImage {
+    fn default() -> Self {
+        Self {
+            size: 256,
+            n_blobs: 24,
+            vignette: 0.4,
+            background: 0.05,
+            noise_sd: 0.01,
+        }
+    }
+}
+
+/// Stable seed for a (plate, well, site) triple.
+pub fn image_seed(plate: &str, well: &str, site: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in plate.bytes().chain([0]).chain(well.bytes()).chain([0]) {
+        h = (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3);
+    }
+    h ^ site.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+impl SynthImage {
+    /// Render the field for `seed` as a flat row-major f32 image in [0, 2].
+    pub fn render(&self, seed: u64) -> Vec<f32> {
+        let n = self.size;
+        let mut rng = SimRng::new(seed);
+        let mut img = vec![0f32; n * n];
+        // Blobs: amplitude 0.4-1.0, sigma 2-5 px, inside an 8 px margin.
+        for _ in 0..self.n_blobs {
+            let cy = rng.range_f64(8.0, (n - 8) as f64);
+            let cx = rng.range_f64(8.0, (n - 8) as f64);
+            let s = rng.range_f64(2.0, 5.0);
+            let amp = rng.range_f64(0.4, 1.0) as f32;
+            let r = (4.0 * s).ceil() as i64;
+            let inv2s2 = 1.0 / (2.0 * s * s);
+            let y0 = ((cy as i64) - r).max(0) as usize;
+            let y1 = (((cy as i64) + r) as usize).min(n - 1);
+            let x0 = ((cx as i64) - r).max(0) as usize;
+            let x1 = (((cx as i64) + r) as usize).min(n - 1);
+            for y in y0..=y1 {
+                let dy = y as f64 - cy;
+                for x in x0..=x1 {
+                    let dx = x as f64 - cx;
+                    img[y * n + x] += amp * (-((dy * dy + dx * dx) * inv2s2)).exp() as f32;
+                }
+            }
+        }
+        // Vignetting + background + noise, clamped to [0, 2].
+        let c = n as f64 / 2.0;
+        let denom = 2.0 * c * c;
+        for y in 0..n {
+            let dy = y as f64 - c;
+            for x in 0..n {
+                let dx = x as f64 - c;
+                let illum = 1.0 - self.vignette * ((dy * dy + dx * dx) / denom);
+                let v = img[y * n + x] * illum as f32
+                    + self.background
+                    + (rng.normal() as f32) * self.noise_sd;
+                img[y * n + x] = v.clamp(0.0, 2.0);
+            }
+        }
+        img
+    }
+
+    /// Render a tile grid cut from one larger field, with `overlap` shared
+    /// pixels between neighbours — ground truth for the stitch workload.
+    pub fn render_tiles(
+        &self,
+        seed: u64,
+        grid: usize,
+        tile: usize,
+        overlap: usize,
+    ) -> Vec<Vec<f32>> {
+        let side = grid * tile - (grid - 1) * overlap;
+        let big = SynthImage {
+            size: side,
+            n_blobs: (self.n_blobs as usize * side * side / (self.size * self.size))
+                .max(4) as u32,
+            ..self.clone()
+        }
+        .render(seed);
+        let step = tile - overlap;
+        let mut tiles = Vec::with_capacity(grid * grid);
+        for r in 0..grid {
+            for c in 0..grid {
+                let mut t = Vec::with_capacity(tile * tile);
+                for y in 0..tile {
+                    let row = (r * step + y) * side + c * step;
+                    t.extend_from_slice(&big[row..row + tile]);
+                }
+                tiles.push(t);
+            }
+        }
+        tiles
+    }
+}
+
+/// f32 slice → little-endian bytes (S3 object body).
+pub fn f32_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Little-endian bytes → f32 vec.
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let gen = SynthImage::default();
+        let a = gen.render(image_seed("P1", "A01", 0));
+        let b = gen.render(image_seed("P1", "A01", 0));
+        assert_eq!(a, b);
+        let c = gen.render(image_seed("P1", "A01", 1));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn seeds_distinct_across_metadata() {
+        let s1 = image_seed("P1", "A01", 0);
+        let s2 = image_seed("P1", "A02", 0);
+        let s3 = image_seed("P2", "A01", 0);
+        // "P1","A01" vs "P1A","01" must differ too (separator byte).
+        let s4 = image_seed("P1A", "01", 0);
+        assert!(s1 != s2 && s1 != s3 && s1 != s4);
+    }
+
+    #[test]
+    fn values_in_range_and_blobs_visible() {
+        let gen = SynthImage {
+            size: 128,
+            ..Default::default()
+        };
+        let img = gen.render(42);
+        assert_eq!(img.len(), 128 * 128);
+        assert!(img.iter().all(|&v| (0.0..=2.0).contains(&v)));
+        let max = img.iter().cloned().fold(0.0f32, f32::max);
+        let mean = img.iter().sum::<f32>() / img.len() as f32;
+        assert!(max > 0.3, "blobs should rise above background: {max}");
+        assert!(mean < 0.5, "mostly background: {mean}");
+    }
+
+    #[test]
+    fn tiles_share_overlap_pixels() {
+        let gen = SynthImage {
+            size: 128,
+            noise_sd: 0.0,
+            ..Default::default()
+        };
+        let (grid, tile, overlap) = (2, 64, 16);
+        let tiles = gen.render_tiles(7, grid, tile, overlap);
+        assert_eq!(tiles.len(), 4);
+        // Right edge of tile (0,0) == left edge of tile (0,1).
+        for y in 0..tile {
+            for k in 0..overlap {
+                let a = tiles[0][y * tile + (tile - overlap + k)];
+                let b = tiles[1][y * tile + k];
+                assert_eq!(a, b, "overlap mismatch at y={y} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32(&f32_to_bytes(&xs)), xs);
+    }
+}

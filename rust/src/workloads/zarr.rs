@@ -1,0 +1,197 @@
+//! Minimal zarr-like chunked multiscale store layout.
+//!
+//! Distributed-OmeZarrCreator converts images into `.ome.zarr`: a
+//! directory tree of fixed-size chunks per resolution level plus JSON
+//! metadata.  This module reproduces the *layout contract* (keys,
+//! chunking, metadata) over simulated S3 — enough for the conversion
+//! workload to produce a browsable, FAIR-shaped output and for
+//! CHECK_IF_DONE to count its files.
+//!
+//! Layout, for store prefix `out/img0.zarr`:
+//!   out/img0.zarr/.zattrs                 multiscales metadata
+//!   out/img0.zarr/<level>/.zarray         per-level array metadata
+//!   out/img0.zarr/<level>/<cy>.<cx>       raw f32 LE chunk
+
+use crate::json::Value;
+
+/// Chunk edge length (pixels).
+pub const CHUNK: usize = 64;
+
+/// One resolution level to write.
+#[derive(Debug, Clone)]
+pub struct Level {
+    pub index: usize,
+    pub height: usize,
+    pub width: usize,
+}
+
+/// Compute the levels of a `levels`-deep pyramid over (h, w).
+pub fn pyramid_levels(h: usize, w: usize, levels: usize) -> Vec<Level> {
+    let mut out = Vec::with_capacity(levels);
+    let (mut ch, mut cw) = (h, w);
+    for index in 0..levels {
+        out.push(Level {
+            index,
+            height: ch,
+            width: cw,
+        });
+        ch /= 2;
+        cw /= 2;
+    }
+    out
+}
+
+/// Number of chunk objects a level needs.
+pub fn chunk_count(level: &Level) -> usize {
+    level.height.div_ceil(CHUNK) * level.width.div_ceil(CHUNK)
+}
+
+/// Total objects a full store will contain (chunks + per-level .zarray +
+/// one .zattrs) — what EXPECTED_NUMBER_FILES should be set to.
+pub fn expected_objects(levels: &[Level]) -> usize {
+    levels.iter().map(chunk_count).sum::<usize>() + levels.len() + 1
+}
+
+/// Split one level's flat image into (key_suffix, chunk_bytes) pairs.
+/// Edge chunks are zero-padded to CHUNK×CHUNK (zarr pads partial chunks).
+pub fn chunk_level(level: &Level, data: &[f32]) -> Vec<(String, Vec<u8>)> {
+    assert_eq!(data.len(), level.height * level.width);
+    let mut out = Vec::with_capacity(chunk_count(level));
+    let rows = level.height.div_ceil(CHUNK);
+    let cols = level.width.div_ceil(CHUNK);
+    for cy in 0..rows {
+        for cx in 0..cols {
+            let mut chunk = vec![0f32; CHUNK * CHUNK];
+            for y in 0..CHUNK {
+                let sy = cy * CHUNK + y;
+                if sy >= level.height {
+                    break;
+                }
+                for x in 0..CHUNK {
+                    let sx = cx * CHUNK + x;
+                    if sx >= level.width {
+                        break;
+                    }
+                    chunk[y * CHUNK + x] = data[sy * level.width + sx];
+                }
+            }
+            out.push((
+                format!("{}/{cy}.{cx}", level.index),
+                super::synth::f32_to_bytes(&chunk),
+            ));
+        }
+    }
+    out
+}
+
+/// `.zarray` metadata for a level.
+pub fn zarray_metadata(level: &Level) -> String {
+    Value::obj()
+        .with("zarr_format", 2u64)
+        .with(
+            "shape",
+            Value::Arr(vec![level.height.into(), level.width.into()]),
+        )
+        .with("chunks", Value::Arr(vec![CHUNK.into(), CHUNK.into()]))
+        .with("dtype", "<f4")
+        .with("compressor", Value::Null)
+        .with("fill_value", 0.0)
+        .with("order", "C")
+        .pretty()
+}
+
+/// `.zattrs` multiscales metadata (OME-NGFF shaped).
+pub fn zattrs_metadata(name: &str, levels: &[Level]) -> String {
+    let datasets: Vec<Value> = levels
+        .iter()
+        .map(|l| Value::obj().with("path", l.index.to_string().as_str()))
+        .collect();
+    Value::obj()
+        .with(
+            "multiscales",
+            Value::Arr(vec![Value::obj()
+                .with("version", "0.4")
+                .with("name", name)
+                .with("datasets", Value::Arr(datasets))
+                .with("type", "mean")]),
+        )
+        .pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pyramid_levels_halve() {
+        let ls = pyramid_levels(256, 256, 4);
+        let dims: Vec<(usize, usize)> = ls.iter().map(|l| (l.height, l.width)).collect();
+        assert_eq!(dims, vec![(256, 256), (128, 128), (64, 64), (32, 32)]);
+    }
+
+    #[test]
+    fn chunk_counts() {
+        let ls = pyramid_levels(256, 256, 4);
+        let counts: Vec<usize> = ls.iter().map(chunk_count).collect();
+        assert_eq!(counts, vec![16, 4, 1, 1]);
+        // 22 chunks + 4 .zarray + 1 .zattrs
+        assert_eq!(expected_objects(&ls), 27);
+    }
+
+    #[test]
+    fn chunks_cover_data_exactly() {
+        let level = Level {
+            index: 0,
+            height: 128,
+            width: 128,
+        };
+        let data: Vec<f32> = (0..128 * 128).map(|i| i as f32).collect();
+        let chunks = chunk_level(&level, &data);
+        assert_eq!(chunks.len(), 4);
+        // Reassemble and compare.
+        let mut back = vec![0f32; 128 * 128];
+        for (key, bytes) in &chunks {
+            let parts: Vec<usize> = key
+                .split('/')
+                .nth(1)
+                .unwrap()
+                .split('.')
+                .map(|p| p.parse().unwrap())
+                .collect();
+            let vals = super::super::synth::bytes_to_f32(bytes);
+            for y in 0..CHUNK {
+                for x in 0..CHUNK {
+                    back[(parts[0] * CHUNK + y) * 128 + parts[1] * CHUNK + x] =
+                        vals[y * CHUNK + x];
+                }
+            }
+        }
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn edge_chunks_padded() {
+        let level = Level {
+            index: 1,
+            height: 96,
+            width: 70,
+        };
+        let data = vec![1f32; 96 * 70];
+        let chunks = chunk_level(&level, &data);
+        assert_eq!(chunks.len(), 2 * 2);
+        // Every chunk is exactly CHUNK*CHUNK f32s.
+        for (_, bytes) in &chunks {
+            assert_eq!(bytes.len(), CHUNK * CHUNK * 4);
+        }
+    }
+
+    #[test]
+    fn metadata_parses() {
+        let ls = pyramid_levels(256, 256, 3);
+        let za = crate::json::parse(&zarray_metadata(&ls[1])).unwrap();
+        assert_eq!(za.get("dtype").unwrap().as_str(), Some("<f4"));
+        let attrs = crate::json::parse(&zattrs_metadata("img0", &ls)).unwrap();
+        let ms = &attrs.get("multiscales").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ms.get("datasets").unwrap().as_arr().unwrap().len(), 3);
+    }
+}

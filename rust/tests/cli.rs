@@ -1,0 +1,123 @@
+//! Integration: the `ds` binary — the run.py-shaped UX itself.
+
+use std::process::Command;
+
+fn ds() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_ds"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = ds().args(args).output().expect("spawn ds");
+    assert!(
+        out.status.success(),
+        "ds {args:?} failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn usage_lists_commands() {
+    let out = run_ok(&[]);
+    for cmd in ["make-config", "make-fleet-file", "make-job", "describe", "run"] {
+        assert!(out.contains(cmd), "usage missing {cmd}: {out}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_hint() {
+    let out = ds().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn make_files_then_full_run() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = |name: &str| dir.join(name).to_str().unwrap().to_string();
+
+    run_ok(&[
+        "make-config",
+        "--app-name",
+        "CliTest",
+        "--machines",
+        "2",
+        "--out",
+        &p("config.json"),
+    ]);
+    run_ok(&["make-fleet-file", "--region", "us-east-1", "--out", &p("fleet.json")]);
+    run_ok(&[
+        "make-job",
+        "--plate",
+        "P1",
+        "--wells",
+        "4",
+        "--sites",
+        "2",
+        "--out",
+        &p("job.json"),
+    ]);
+
+    // describe validates and echoes the config.
+    let desc = run_ok(&["describe", "--config", &p("config.json")]);
+    assert!(desc.contains("\"APP_NAME\": \"CliTest\""));
+    assert!(desc.contains("task_family=CliTest-taskdef"));
+
+    // Full modeled run: 8 jobs, monitor cleanup, deterministic seed.
+    let out = run_ok(&[
+        "run",
+        "--config",
+        &p("config.json"),
+        "--job",
+        &p("job.json"),
+        "--fleet",
+        &p("fleet.json"),
+        "--seed",
+        "5",
+        "--job-mean-s",
+        "30",
+    ]);
+    assert!(out.contains("8/8 completed"), "{out}");
+    assert!(out.contains("cleaned_up=true"), "{out}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_rejects_bad_files() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-bad-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("config.json");
+    std::fs::write(&cfg, "{\"APP_NAME\": \"x\"}").unwrap();
+    let out = ds()
+        .args(["describe", "--config", cfg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("missing field"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn make_fleet_file_unknown_region_fails() {
+    let out = ds()
+        .args(["make-fleet-file", "--region", "mars-north-1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("no template"));
+}
+
+#[test]
+fn workloads_lists_artifacts_when_built() {
+    let art = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(art).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = run_ok(&["workloads", "--artifacts", art]);
+    assert!(out.contains("cp_256_b1"));
+    assert!(out.contains("Pyramid"));
+}

@@ -1,0 +1,244 @@
+//! Integration: failure-mode experiments — crashes, stalls, interruption
+//! storms, poison jobs, visibility-timeout pathologies (T4/T5/T7/T8).
+
+use ds_rs::aws::ec2::Volatility;
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::json::Value;
+use ds_rs::sim::clock::SimTime;
+use ds_rs::sim::{HOUR, MINUTE, SECOND};
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn cfg(machines: u32, visibility: SimTime) -> AppConfig {
+    AppConfig {
+        cluster_machines: machines,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: visibility,
+        ..Default::default()
+    }
+}
+
+fn fleet_file() -> FleetSpec {
+    FleetSpec::template("us-east-1").unwrap()
+}
+
+fn executor(model: DurationModel) -> ModeledExecutor {
+    ModeledExecutor {
+        model,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn interruption_storm_work_survives() {
+    // T5: high volatility + bid barely above base -> repeated
+    // interruptions; SQS redelivery still finishes every job.
+    // Long enough (multi-hour) that high-volatility spikes hit the run.
+    let mut c = cfg(4, 10 * MINUTE);
+    c.machine_price = 0.192 * 0.31 * 1.10; // 10% above spot base
+    let jobs = JobSpec::plate("P", 96, 4, vec![]); // 384 jobs
+    let opts = RunOptions {
+        volatility: Volatility::High,
+        seed: 3,
+        max_sim_time: 3 * 24 * HOUR,
+        ..Default::default()
+    };
+    let mut ex = executor(DurationModel {
+        mean_s: 240.0,
+        cv: 0.3,
+        ..Default::default()
+    });
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert!(
+        report.stats.interruptions > 0,
+        "storm should interrupt: {}",
+        report.summary()
+    );
+    assert!(report.fully_accounted(), "{}", report.summary());
+    assert_eq!(report.stats.dead_lettered, 0);
+    assert_eq!(
+        report.stats.completed + report.stats.skipped_done,
+        384,
+        "{}",
+        report.summary()
+    );
+}
+
+#[test]
+fn stalled_workers_recovered_by_alarm_reaper() {
+    // T8: 10% of jobs wedge the worker.  The CPU<1%/15min alarm reaps
+    // fully-wedged machines; redelivery finishes the work.
+    let c = cfg(4, 8 * MINUTE);
+    let jobs = JobSpec::plate("P", 16, 2, vec![]); // 32 jobs
+    let opts = RunOptions {
+        seed: 5,
+        max_sim_time: 2 * 24 * HOUR,
+        ..Default::default()
+    };
+    let mut ex = executor(DurationModel {
+        mean_s: 60.0,
+        cv: 0.2,
+        stall_prob: 0.10,
+        ..Default::default()
+    });
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert!(report.stats.stalled > 0, "{}", report.summary());
+    assert!(report.fully_accounted(), "{}", report.summary());
+    assert!(report.cleaned_up);
+}
+
+#[test]
+fn crashes_with_reaper_keep_throughput() {
+    // Run must outlast crash-mttf + the 15-min alarm window several times
+    // over so reaping demonstrably happens mid-run.
+    let c = cfg(6, 10 * MINUTE);
+    let jobs = JobSpec::plate("P", 96, 4, vec![]); // 384 jobs
+    let opts = RunOptions {
+        seed: 9,
+        crash_mttf: Some(30 * MINUTE),
+        max_sim_time: 2 * 24 * HOUR,
+        ..Default::default()
+    };
+    let mut ex = executor(DurationModel {
+        mean_s: 150.0,
+        cv: 0.3,
+        ..Default::default()
+    });
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert!(report.stats.crashes > 0, "{}", report.summary());
+    assert!(report.stats.alarm_terminations > 0, "{}", report.summary());
+    assert!(report.fully_accounted(), "{}", report.summary());
+}
+
+#[test]
+fn visibility_tradeoff_short_duplicates_long_waits() {
+    // T4: sweep visibility around the mean job time.  Short -> duplicate
+    // work; long -> slow recovery from stalls (longer makespan).
+    let jobs = JobSpec::plate("P", 24, 2, vec![]); // 48 jobs
+    let run_vis = |vis: SimTime, stall: f64, seed: u64| {
+        let c = cfg(4, vis);
+        let mut ex = executor(DurationModel {
+            mean_s: 120.0,
+            cv: 0.2,
+            stall_prob: stall,
+            ..Default::default()
+        });
+        run_full(
+            &c,
+            &jobs,
+            &fleet_file(),
+            &mut ex,
+            RunOptions {
+                seed,
+                max_sim_time: 2 * 24 * HOUR,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    // Too short (30 s << 120 s mean): rampant duplicates.
+    let short = run_vis(30 * SECOND, 0.0, 1);
+    assert!(
+        short.stats.duplicates > 5,
+        "short visibility must duplicate: {}",
+        short.summary()
+    );
+    // Sane (2x mean): almost none.
+    let sane = run_vis(4 * MINUTE, 0.0, 1);
+    assert!(
+        sane.stats.duplicates <= 1,
+        "sane visibility: {}",
+        sane.summary()
+    );
+    // With stalls, a very long visibility means waiting much longer for
+    // redelivery than a sane one.
+    let sane_stall = run_vis(4 * MINUTE, 0.08, 2);
+    let long_stall = run_vis(60 * MINUTE, 0.08, 2);
+    assert!(sane_stall.fully_accounted());
+    assert!(long_stall.fully_accounted());
+    assert!(
+        long_stall.makespan().unwrap() > sane_stall.makespan().unwrap(),
+        "long vis {:?} should wait longer than sane {:?}",
+        long_stall.makespan(),
+        sane_stall.makespan()
+    );
+}
+
+#[test]
+fn dlq_bounds_poison_job_damage() {
+    // T7: with a DLQ, a poison job is parked after max_receive_count
+    // attempts and the cluster winds down; every good job completes.
+    let c = cfg(3, 3 * MINUTE);
+    let mut jobs = JobSpec::plate("P", 10, 2, vec![]); // 20 jobs
+    jobs.groups[0].push(("poison".into(), Value::Bool(true)));
+    jobs.groups[7].push(("poison".into(), Value::Bool(true)));
+    let opts = RunOptions {
+        seed: 13,
+        max_sim_time: 24 * HOUR,
+        ..Default::default()
+    };
+    let mut ex = executor(DurationModel {
+        mean_s: 45.0,
+        cv: 0.2,
+        ..Default::default()
+    });
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert_eq!(report.stats.completed, 18, "{}", report.summary());
+    assert_eq!(report.stats.dead_lettered, 2);
+    assert!(report.cleaned_up, "cluster must not spin forever");
+    // Each poison job was attempted exactly max_receive_count times.
+    assert!(report.stats.failed_attempts >= 2 * 5);
+    // And the whole thing ended in bounded time.
+    assert!(report.ended_at < 12 * HOUR, "{}", report.summary());
+}
+
+#[test]
+fn without_dlq_poison_job_keeps_cluster_alive() {
+    // Anti-test for T7: crank max_receive_count so high the poison job
+    // effectively never dead-letters; the run only ends at max_sim_time
+    // and the fleet keeps burning money the whole time.
+    let mut c = cfg(2, 2 * MINUTE);
+    c.max_receive_count = 100_000;
+    let mut jobs = JobSpec::plate("P", 6, 1, vec![]);
+    jobs.groups[0].push(("poison".into(), Value::Bool(true)));
+    let opts = RunOptions {
+        seed: 17,
+        max_sim_time: 12 * HOUR,
+        ..Default::default()
+    };
+    let mut ex = executor(DurationModel {
+        mean_s: 30.0,
+        cv: 0.1,
+        ..Default::default()
+    });
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert_eq!(report.stats.completed, 5);
+    assert!(!report.cleaned_up, "{}", report.summary());
+    assert_eq!(report.stats.dead_lettered, 0);
+    // The cluster churned for ~12 simulated hours on one bad job.
+    assert!(report.cost.ec2_usd > 0.05, "{}", report.summary());
+}
+
+#[test]
+fn low_bid_run_waits_for_capacity_but_finishes() {
+    // T10 shape: bid barely above base in a quiet market still fulfills,
+    // just slower (fulfillment latency model).
+    let mut c = cfg(4, 10 * MINUTE);
+    c.machine_price = 0.192 * 0.31 * 1.02;
+    let jobs = JobSpec::plate("P", 8, 2, vec![]);
+    let opts = RunOptions {
+        seed: 19,
+        max_sim_time: 24 * HOUR,
+        ..Default::default()
+    };
+    let mut ex = executor(DurationModel {
+        mean_s: 60.0,
+        cv: 0.2,
+        ..Default::default()
+    });
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert!(report.fully_accounted(), "{}", report.summary());
+}

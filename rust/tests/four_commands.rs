@@ -1,0 +1,230 @@
+//! Integration: the paper's four-command flow over the full account sim
+//! (Figure 1 / experiment F1), with modeled job durations.
+
+use ds_rs::aws::ec2::Volatility;
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions, Simulation};
+use ds_rs::sim::{HOUR, MINUTE};
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn cfg(machines: u32) -> AppConfig {
+    AppConfig {
+        app_name: "NuclearSegmentation_Drosophila".into(),
+        cluster_machines: machines,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 10 * MINUTE,
+        sqs_queue_name: "nucseg-queue".into(),
+        sqs_dead_letter_queue: "nucseg-dlq".into(),
+        log_group_name: "nucseg".into(),
+        ..Default::default()
+    }
+}
+
+fn executor(mean_s: f64) -> ModeledExecutor {
+    ModeledExecutor {
+        model: DurationModel {
+            mean_s,
+            cv: 0.3,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn fleet_file() -> FleetSpec {
+    FleetSpec::template("us-east-1").unwrap()
+}
+
+#[test]
+fn figure1_full_plate_run() {
+    // 96-well plate, 4 sites: 384 jobs over 8 machines (32 worker cores).
+    let cfg = cfg(8);
+    let jobs = JobSpec::plate("BR00117010", 96, 4, vec![]);
+    let mut ex = executor(90.0);
+    let report = run_full(&cfg, &jobs, &fleet_file(), &mut ex, RunOptions::default()).unwrap();
+
+    assert_eq!(report.jobs_submitted, 384);
+    assert_eq!(report.stats.completed, 384, "{}", report.summary());
+    assert!(report.cleaned_up, "monitor must tear everything down");
+    assert_eq!(report.stats.dead_lettered, 0);
+    // 384 jobs * 90 s / 32 cores ≈ 18 min of work; makespan under 2 h
+    // even with boot time and tail effects.
+    let makespan = report.makespan().unwrap();
+    assert!(makespan < 2 * HOUR, "makespan {makespan}");
+    assert!(makespan > 10 * MINUTE);
+    // Spot is a real discount.
+    assert!(report.cost.spot_savings_factor() > 2.0);
+    // Coordinator overhead is negligible vs compute (paper's claim).
+    assert!(
+        report.cost.overhead_fraction() < 0.10,
+        "overhead {}",
+        report.cost.overhead_fraction()
+    );
+}
+
+#[test]
+fn all_five_services_touched() {
+    let cfg = cfg(2);
+    let jobs = JobSpec::plate("P", 4, 2, vec![]);
+    let mut sim = Simulation::new(cfg.clone(), RunOptions::default()).unwrap();
+    sim.submit(&jobs).unwrap();
+    sim.start(&fleet_file()).unwrap();
+    let mut ex = executor(30.0);
+    let report = sim.run(&mut ex).unwrap();
+    assert_eq!(report.stats.completed, 8);
+
+    // S3: outputs + exported logs present.
+    assert!(!sim.acct.s3.list_prefix("ds-data", "output/").is_empty());
+    assert!(!sim.acct.s3.list_prefix("ds-data", "exportedlogs/").is_empty());
+    // SQS: queue deleted by cleanup, DLQ still there and empty.
+    assert!(!sim.acct.sqs.queue_exists(&cfg.sqs_queue_name));
+    assert_eq!(
+        sim.acct
+            .sqs
+            .approximate_counts(&cfg.sqs_dead_letter_queue, report.ended_at),
+        (0, 0)
+    );
+    // EC2: every instance terminated, at least 2 launched.
+    assert!(report.stats.instances_launched >= 2);
+    assert!(sim.acct.ec2.all_instances().iter().all(|i| !i.is_active()));
+    // ECS: fully clean.
+    assert!(sim.acct.ecs.is_clean(&cfg.service_name(), &cfg.task_family()));
+    // CloudWatch: metrics were published, alarms all deleted.
+    assert!(sim.acct.metrics.put_count() > 0);
+    assert!(sim.acct.alarms.is_empty());
+}
+
+#[test]
+fn seconds_to_start_staggers_but_completes() {
+    let mut c = cfg(2);
+    c.seconds_to_start = 30_000; // 30 s between core launches
+    let jobs = JobSpec::plate("P", 6, 2, vec![]);
+    let mut ex = executor(45.0);
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, RunOptions::default()).unwrap();
+    assert_eq!(report.stats.completed, 12, "{}", report.summary());
+}
+
+#[test]
+fn non_default_cluster_works_end_to_end() {
+    // The paper's NuclearSegmentation_Drosophila vs _HeLa isolation story
+    // rests on distinct ECS clusters; verify a non-default cluster works.
+    let mut c = cfg(2);
+    c.ecs_cluster = "drosophila".into();
+    let jobs = JobSpec::plate("P", 4, 1, vec![]);
+    let mut ex = executor(20.0);
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, RunOptions::default()).unwrap();
+    assert_eq!(report.stats.completed, 4);
+}
+
+#[test]
+fn resume_after_interrupted_run_skips_done_work() {
+    // Experiment T6: first run killed at ~50%, resubmit with
+    // CHECK_IF_DONE on; only the unfinished half reruns.
+    let c = cfg(4);
+    let jobs = JobSpec::plate("P", 24, 2, vec![]); // 48 jobs
+    let opts1 = RunOptions {
+        max_sim_time: 6 * MINUTE,
+        ..Default::default()
+    };
+    let mut sim1 = Simulation::new(c.clone(), opts1).unwrap();
+    sim1.submit(&jobs).unwrap();
+    sim1.start(&fleet_file()).unwrap();
+    let mut ex = executor(120.0);
+    let r1 = sim1.run(&mut ex).unwrap();
+    assert!(
+        r1.stats.completed > 0 && r1.stats.completed < 48,
+        "{}",
+        r1.summary()
+    );
+    // Carry the outputs into a fresh account (same S3 contents) and rerun.
+    let done_keys: Vec<(String, u64)> = sim1.acct.s3.list_prefix("ds-data", "output/");
+    let mut sim2 = Simulation::new(c.clone(), RunOptions::default()).unwrap();
+    sim2.stage(|acct| {
+        for (k, sz) in &done_keys {
+            acct.s3
+                .put("ds-data", k, ds_rs::aws::s3::Body::Synthetic { size: *sz }, 0)
+                .unwrap();
+        }
+    });
+    sim2.submit(&jobs).unwrap();
+    sim2.start(&fleet_file()).unwrap();
+    let mut ex2 = executor(120.0);
+    let r2 = sim2.run(&mut ex2).unwrap();
+    assert_eq!(
+        r2.stats.completed + r2.stats.skipped_done,
+        48,
+        "{}",
+        r2.summary()
+    );
+    assert_eq!(r2.stats.skipped_done, r1.stats.completed);
+    assert!(r2.stats.completed < 48);
+}
+
+#[test]
+fn large_machine_single_task_stitching_shape() {
+    // "a large machine to perform a single task on many images (such as
+    // stitching)": one m5.12xlarge, one fat container.
+    let c = AppConfig {
+        app_name: "Stitch".into(),
+        cluster_machines: 1,
+        tasks_per_machine: 1,
+        docker_cores: 1,
+        machine_types: vec!["m5.12xlarge".into()],
+        machine_price: 1.00,
+        cpu_shares: 48 * 1024,
+        memory_mb: 180_000,
+        sqs_queue_name: "stitch-q".into(),
+        sqs_dead_letter_queue: "stitch-dlq".into(),
+        ..Default::default()
+    };
+    let jobs = JobSpec::plate("Montage", 3, 1, vec![]);
+    let mut ex = executor(300.0);
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, RunOptions::default()).unwrap();
+    assert_eq!(report.stats.completed, 3, "{}", report.summary());
+    assert!(report.cleaned_up);
+}
+
+#[test]
+fn medium_volatility_still_completes() {
+    let c = cfg(4);
+    let jobs = JobSpec::plate("P", 24, 2, vec![]);
+    let opts = RunOptions {
+        volatility: Volatility::Medium,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut ex = executor(120.0);
+    let report = run_full(&c, &jobs, &fleet_file(), &mut ex, opts).unwrap();
+    assert!(report.fully_accounted(), "{}", report.summary());
+    assert_eq!(report.stats.dead_lettered, 0);
+}
+
+#[test]
+fn cheapest_mode_cheaper_but_not_faster() {
+    let c = cfg(6);
+    let jobs = JobSpec::plate("P", 48, 4, vec![]); // 192 jobs
+    let run_mode = |cheapest: bool| {
+        let mut ex = executor(120.0);
+        run_full(
+            &c,
+            &jobs,
+            &fleet_file(),
+            &mut ex,
+            RunOptions {
+                cheapest,
+                seed: 11,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    };
+    let normal = run_mode(false);
+    let cheap = run_mode(true);
+    assert_eq!(normal.stats.completed, 192, "{}", normal.summary());
+    assert_eq!(cheap.stats.completed, 192, "{}", cheap.summary());
+    // Cheapest mode must never beat normal on makespan (no replacement).
+    assert!(cheap.makespan().unwrap() >= normal.makespan().unwrap());
+}

@@ -1,0 +1,262 @@
+//! Property-based invariants over the substrates and the whole run
+//! (DESIGN.md §6), using the in-house forall harness.
+
+use ds_rs::aws::ec2::{SpotMarket, Volatility};
+use ds_rs::aws::sqs::{RedrivePolicy, Sqs};
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::json;
+use ds_rs::sim::{EventQueue, SimRng, HOUR, MINUTE};
+use ds_rs::testutil::{forall, forall_r};
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+#[test]
+fn prop_sqs_conservation() {
+    // Under any interleaving of send/receive/delete/expiry, every message
+    // is exactly one of: visible, in-flight, deleted, or dead-lettered.
+    forall_r(
+        "sqs-conservation",
+        60,
+        0xABCD,
+        |rng| {
+            // op stream: (kind, arg) pairs
+            let n_ops = 200;
+            let ops: Vec<(u8, u64)> = (0..n_ops)
+                .map(|_| (rng.below(4) as u8, rng.next_u64()))
+                .collect();
+            ops
+        },
+        |ops| {
+            let mut sqs = Sqs::new();
+            sqs.create_queue("q", 2 * MINUTE);
+            sqs.create_queue("dlq", 2 * MINUTE);
+            sqs.set_redrive("q", "dlq", RedrivePolicy { max_receive_count: 3 })
+                .unwrap();
+            let mut now = 0u64;
+            let mut sent = 0u64;
+            let mut deleted = 0u64;
+            let mut handles: Vec<u64> = Vec::new();
+            for (kind, arg) in ops {
+                now += arg % (3 * MINUTE);
+                match kind {
+                    0 => {
+                        sqs.send("q", format!("m{sent}"), now).unwrap();
+                        sent += 1;
+                    }
+                    1 => {
+                        if let Some((_, h)) = sqs.receive("q", now).unwrap() {
+                            handles.push(h);
+                        }
+                    }
+                    2 => {
+                        if !handles.is_empty() {
+                            let h = handles.remove((arg % handles.len() as u64) as usize);
+                            if sqs.delete("q", h, now).is_ok() {
+                                deleted += 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        // pure time passage
+                    }
+                }
+            }
+            // Settle all visibility timeouts.
+            now += HOUR;
+            let (vis, inflight) = sqs.approximate_counts("q", now);
+            let (dlq_vis, dlq_inflight) = sqs.approximate_counts("dlq", now);
+            if inflight != 0 {
+                return Err(format!("in-flight after settle: {inflight}"));
+            }
+            let accounted = vis as u64 + deleted + dlq_vis as u64 + dlq_inflight as u64;
+            if accounted != sent {
+                return Err(format!(
+                    "lost/duplicated messages: sent={sent} accounted={accounted} \
+                     (vis={vis} deleted={deleted} dlq={dlq_vis})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_event_queue_monotone_fifo() {
+    forall(
+        "event-queue-monotone",
+        50,
+        0xEEE,
+        |rng| {
+            let n = 300;
+            (0..n).map(|_| rng.below(10_000)).collect::<Vec<u64>>()
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.schedule_at(t, i);
+            }
+            let mut last: Option<(u64, usize)> = None;
+            while let Some((t, i)) = q.pop() {
+                if let Some((lt, li)) = last {
+                    if t < lt {
+                        return false;
+                    }
+                    // FIFO within a timestamp: indices increase.
+                    if t == lt && i < li {
+                        return false;
+                    }
+                }
+                last = Some((t, i));
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_market_cost_integral_consistent() {
+    // Integral over [a,c) == [a,b) + [b,c) for arbitrary split points,
+    // across volatilities and seeds.
+    forall_r(
+        "market-integral-additive",
+        40,
+        0x7777,
+        |rng| {
+            let seed = rng.next_u64();
+            let a = rng.below(48 * HOUR);
+            let b = a + rng.below(12 * HOUR);
+            let c = b + rng.below(12 * HOUR);
+            let vol = match rng.below(3) {
+                0 => Volatility::Low,
+                1 => Volatility::Medium,
+                _ => Volatility::High,
+            };
+            (seed, a, b, c, vol)
+        },
+        |&(seed, a, b, c, vol)| {
+            let mut m = SpotMarket::new(seed, vol);
+            let whole = m.cost_integral("m5.xlarge", a, c);
+            let parts =
+                m.cost_integral("m5.xlarge", a, b) + m.cost_integral("m5.xlarge", b, c);
+            if (whole - parts).abs() > 1e-9 * whole.abs().max(1.0) {
+                return Err(format!("whole={whole} parts={parts}"));
+            }
+            if whole < 0.0 {
+                return Err("negative cost".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    // Arbitrary generated values survive pretty -> parse.
+    fn gen_value(rng: &mut SimRng, depth: u32) -> json::Value {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.chance(0.5)),
+            2 => {
+                // Round-trippable finite numbers.
+                json::Value::Num((rng.next_u64() % 1_000_000) as f64 / 64.0)
+            }
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' {
+                            c as char
+                        } else {
+                            '\\'
+                        }
+                    })
+                    .collect();
+                json::Value::Str(s)
+            }
+            4 => {
+                let n = rng.below(5);
+                json::Value::Arr((0..n).map(|_| gen_value(rng, depth + 1)).collect())
+            }
+            _ => {
+                let n = rng.below(5);
+                json::Value::Obj(
+                    (0..n)
+                        .map(|i| (format!("k{i}"), gen_value(rng, depth + 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+    forall(
+        "json-roundtrip",
+        100,
+        0x15AC,
+        |rng| gen_value(rng, 0),
+        |v| json::parse(&v.pretty()).map(|p| p == *v).unwrap_or(false),
+    );
+}
+
+#[test]
+fn prop_every_job_accounted_across_configs() {
+    // The big one: for random (machines, tasks, cores, visibility, mean
+    // duration, stall/fail rates, volatility) configurations, every
+    // submitted job ends completed, skipped, or dead-lettered, and the
+    // monitor always cleans up within the time cap.
+    forall_r(
+        "run-accounting",
+        12,
+        0xC0FFEE,
+        |rng| {
+            let machines = 1 + rng.below(6) as u32;
+            let tasks = 1 + rng.below(3) as u32;
+            let cores = 1 + rng.below(3) as u32;
+            let vis_min = 2 + rng.below(10);
+            let mean_s = 20.0 + rng.f64() * 160.0;
+            let stall = if rng.chance(0.3) { 0.05 } else { 0.0 };
+            let fail = if rng.chance(0.3) { 0.10 } else { 0.0 };
+            let jobs = 8 + rng.below(40);
+            let seed = rng.next_u64();
+            (machines, tasks, cores, vis_min, mean_s, stall, fail, jobs, seed)
+        },
+        |&(machines, tasks, cores, vis_min, mean_s, stall, fail, jobs_n, seed)| {
+            let cfg = AppConfig {
+                cluster_machines: machines,
+                tasks_per_machine: tasks,
+                docker_cores: cores,
+                machine_types: vec!["m5.xlarge".into()],
+                machine_price: 0.10,
+                sqs_message_visibility: vis_min * MINUTE,
+                ..Default::default()
+            };
+            let jobs = JobSpec::plate("P", jobs_n as u32, 1, vec![]);
+            let fleet = FleetSpec::template("us-east-1").unwrap();
+            let mut ex = ModeledExecutor {
+                model: DurationModel {
+                    mean_s,
+                    cv: 0.4,
+                    stall_prob: stall,
+                    fail_prob: fail,
+                },
+                ..Default::default()
+            };
+            let opts = RunOptions {
+                seed,
+                max_sim_time: 3 * 24 * HOUR,
+                ..Default::default()
+            };
+            let report = run_full(&cfg, &jobs, &fleet, &mut ex, opts)
+                .map_err(|e| e.to_string())?;
+            if !report.fully_accounted() {
+                return Err(format!("jobs unaccounted: {}", report.summary()));
+            }
+            if !report.cleaned_up {
+                return Err(format!("no cleanup: {}", report.summary()));
+            }
+            if report.cost.total_usd() <= 0.0 {
+                return Err("zero cost for a real run".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,207 @@
+//! End-to-end AOT bridge test: load every artifact through PJRT and check
+//! numerics against pure-Rust oracles / golden values from the python
+//! side (python/tests/test_aot.py::TestNumericGroundTruth).
+//!
+//! Requires `make artifacts` (skips politely otherwise).
+
+use ds_rs::runtime::{PjrtRuntime, WorkloadKind};
+use ds_rs::workloads::synth::SynthImage;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(dir)
+        .join("manifest.json")
+        .exists()
+        .then(|| dir.to_string())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_lists_all_seven_workloads() {
+    let dir = require_artifacts!();
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let names = rt.manifest().names();
+    for expected in [
+        "cp_128_b1",
+        "cp_256_b1",
+        "cp_256_b4",
+        "stitch_g2_t128_o16",
+        "stitch_g3_t128_o16",
+        "pyramid_256_l4",
+        "pyramid_512_l5",
+    ] {
+        assert!(names.contains(&expected), "missing {expected} in {names:?}");
+    }
+}
+
+#[test]
+fn pyramid_golden_numerics() {
+    // Mirrors python/tests/test_aot.py::test_pyramid_ramp_golden: a ramp
+    // image through the AOT pyramid must keep exact structure.
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let n = 256 * 256;
+    let img: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+    let (out, ms) = rt.execute("pyramid_256_l4", &[img.clone()]).unwrap();
+    assert!(ms > 0.0);
+    // Level 0 is the input verbatim.
+    assert_eq!(&out[..n], &img[..]);
+    // Every level preserves the global mean (average pooling).
+    let mean0: f64 = img.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+    let mut off = n;
+    for size in [128usize, 64, 32] {
+        let lvl = &out[off..off + size * size];
+        let m: f64 = lvl.iter().map(|&v| v as f64).sum::<f64>() / lvl.len() as f64;
+        assert!(
+            (m - mean0).abs() < 1e-4,
+            "level {size}: mean {m} vs {mean0}"
+        );
+        off += size * size;
+    }
+    assert_eq!(off, out.len());
+}
+
+#[test]
+fn pyramid_level1_is_2x2_mean() {
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let img = SynthImage {
+        size: 256,
+        ..Default::default()
+    }
+    .render(7);
+    let (out, _) = rt.execute("pyramid_256_l4", &[img.clone()]).unwrap();
+    let l1 = &out[256 * 256..256 * 256 + 128 * 128];
+    // Check a handful of positions against a direct 2x2 mean.
+    for &(y, x) in &[(0usize, 0usize), (10, 50), (63, 127), (127, 0)] {
+        let expect = (img[(2 * y) * 256 + 2 * x]
+            + img[(2 * y) * 256 + 2 * x + 1]
+            + img[(2 * y + 1) * 256 + 2 * x]
+            + img[(2 * y + 1) * 256 + 2 * x + 1])
+            / 4.0;
+        let got = l1[y * 128 + x];
+        assert!(
+            (got - expect).abs() < 1e-5,
+            "level1[{y},{x}] = {got}, want {expect}"
+        );
+    }
+}
+
+#[test]
+fn cellprofiler_features_sane_on_synthetic_field() {
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let img = SynthImage {
+        size: 256,
+        n_blobs: 24,
+        ..Default::default()
+    }
+    .render(42);
+    let (out, _) = rt.execute("cp_256_b1", &[img]).unwrap();
+    assert_eq!(out.len(), 16);
+    let feat = |i: usize| out[i];
+    let (fg_mean, fg_frac, bg_mean) = (feat(0), feat(2), feat(5));
+    assert!(out.iter().all(|v| v.is_finite()), "{out:?}");
+    assert!(
+        fg_mean > bg_mean,
+        "foreground should be brighter: fg={fg_mean} bg={bg_mean}"
+    );
+    assert!(
+        fg_frac > 0.0 && fg_frac < 0.6,
+        "plausible foreground fraction: {fg_frac}"
+    );
+}
+
+#[test]
+fn cellprofiler_batch4_matches_four_singles() {
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let gen = SynthImage {
+        size: 256,
+        ..Default::default()
+    };
+    let imgs: Vec<Vec<f32>> = (0..4).map(|i| gen.render(100 + i)).collect();
+    let mut batched_input = Vec::new();
+    for img in &imgs {
+        batched_input.extend_from_slice(img);
+    }
+    let (batched, _) = rt.execute("cp_256_b4", &[batched_input]).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        let (single, _) = rt.execute("cp_256_b1", &[img.clone()]).unwrap();
+        let row = &batched[i * 16..(i + 1) * 16];
+        for (a, b) in row.iter().zip(&single) {
+            assert!(
+                (a - b).abs() < 1e-3 * b.abs().max(1.0),
+                "batch row {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn stitch_montage_and_scores() {
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let gen = SynthImage {
+        size: 128,
+        noise_sd: 0.002,
+        ..Default::default()
+    };
+    let tiles = gen.render_tiles(11, 2, 128, 16);
+    let mut input = Vec::new();
+    for t in &tiles {
+        input.extend_from_slice(t);
+    }
+    let (out, _) = rt.execute("stitch_g2_t128_o16", &[input]).unwrap();
+    let side = 2 * 128 - 16;
+    assert_eq!(out.len(), side * side + 4);
+    let scores = &out[side * side..];
+    // Tiles cut from one field: seams must correlate strongly.
+    for (i, s) in scores.iter().enumerate() {
+        assert!(*s > 0.8, "seam {i} NCC too low: {s}");
+    }
+    // Montage pixel range sane.
+    let montage = &out[..side * side];
+    assert!(montage.iter().all(|v| v.is_finite() && *v >= 0.0 && *v <= 2.5));
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let img = SynthImage {
+        size: 128,
+        ..Default::default()
+    }
+    .render(1);
+    let _ = rt.execute("cp_128_b1", &[img.clone()]).unwrap();
+    let (compile_ms_1, n1, _) = rt.stats("cp_128_b1").unwrap();
+    let _ = rt.execute("cp_128_b1", &[img]).unwrap();
+    let (compile_ms_2, n2, _) = rt.stats("cp_128_b1").unwrap();
+    assert_eq!(compile_ms_1, compile_ms_2, "no recompilation");
+    assert_eq!(n2, n1 + 1);
+    assert!(rt.mean_latency_ms("cp_128_b1").unwrap() > 0.0);
+}
+
+#[test]
+fn wrong_input_shape_is_rejected() {
+    let dir = require_artifacts!();
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let err = rt
+        .execute("cp_128_b1", &[vec![0.0; 10]])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("expected"), "{err}");
+    assert!(rt.execute("cp_128_b1", &[]).is_err());
+}
