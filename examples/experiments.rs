@@ -1,20 +1,52 @@
-//! Experiment harness: regenerates every table in DESIGN.md §4 (T1–T10).
+//! Experiment harness: regenerates every table in DESIGN.md §4 (T1–T11).
 //!
 //!     cargo run --release --example experiments [t1 t2 … | all]
 //!
-//! Each experiment prints the table EXPERIMENTS.md records.  All runs use
-//! modeled job durations (calibrated against the measured PJRT latency —
-//! see EXPERIMENTS.md §E2E) so hundreds of cluster-hours simulate in
-//! seconds, deterministically.
+//! Each experiment prints the table DESIGN.md records.  All runs use
+//! modeled job durations so hundreds of cluster-hours simulate in
+//! seconds, deterministically.  The single-axis studies (T1 scaling, T4
+//! visibility, T5 volatility) run through the parallel sweep engine
+//! (`coordinator::sweep`), replicated over several seeds, so the tables
+//! report cross-seed mean/p50/p95 instead of one arbitrary seed's draw.
 
 use ds_rs::aws::ec2::Volatility;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::coordinator::sweep::{default_threads, run_sweep, ScenarioMatrix, SweepPlan};
 use ds_rs::json::Value;
-use ds_rs::metrics::{RunReport, Table};
+use ds_rs::metrics::{RunReport, ScenarioSummary, SweepReport, Table};
 use ds_rs::sim::clock::{fmt_dur, SimTime};
 use ds_rs::sim::{HOUR, MINUTE, SECOND};
 use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+/// Zip a hand-labelled axis against a sweep's scenario summaries,
+/// asserting the lengths line up so a matrix edit can never silently
+/// mislabel rows.
+fn labelled<'a, A>(
+    axis: &'a [A],
+    report: &'a SweepReport,
+) -> impl Iterator<Item = (&'a A, &'a ScenarioSummary)> {
+    assert_eq!(
+        axis.len(),
+        report.scenarios.len(),
+        "axis labels out of sync with the scenario matrix"
+    );
+    axis.iter().zip(&report.scenarios)
+}
+
+/// Run a matrix over the default fleet and return its aggregation; the
+/// cells run in parallel but the report is bit-identical at any thread
+/// count.
+fn sweep_report(
+    base: AppConfig,
+    jobs: JobSpec,
+    matrix: ScenarioMatrix,
+    opts: RunOptions,
+) -> SweepReport {
+    let mut plan = SweepPlan::new(base, jobs, matrix);
+    plan.base_opts = opts;
+    run_sweep(&plan, default_threads()).expect("sweep failed").report
+}
 
 fn cfg(machines: u32, visibility: SimTime) -> AppConfig {
     AppConfig {
@@ -53,23 +85,35 @@ fn model(mean_s: f64) -> DurationModel {
     }
 }
 
-/// T1 — scaling: jobs/hour vs CLUSTER_MACHINES.
+/// T1 — scaling: jobs/hour vs CLUSTER_MACHINES, 3 seeds per point,
+/// driven through the sweep engine.
 fn t1() {
-    println!("\n== T1: throughput vs cluster size (2000 jobs, 90 s mean) ==");
+    println!("\n== T1: throughput vs cluster size (2000 jobs, 90 s mean, 3 seeds) ==");
+    let machine_axis = vec![1u32, 2, 4, 8, 16, 32, 64, 128];
+    let matrix = ScenarioMatrix {
+        seeds: vec![42, 43, 44],
+        cluster_machines: machine_axis.clone(),
+        models: vec![model(90.0)],
+        ..Default::default()
+    };
     let jobs = JobSpec::plate("P", 96, 21, vec![]); // 2016 jobs
-    let mut table = Table::new(&["machines", "cores", "makespan", "jobs/h", "ideal jobs/h", "efficiency"]);
-    for &m in &[1u32, 2, 4, 8, 16, 32, 64, 128] {
-        let c = cfg(m, 10 * MINUTE);
-        let r = run(&c, &jobs, model(90.0), RunOptions::default());
+    let report = sweep_report(cfg(1, 10 * MINUTE), jobs, matrix, RunOptions::default());
+    let mut table = Table::new(&[
+        "machines", "cores", "drained", "makespan p50", "makespan p95", "jobs/h", "ideal jobs/h", "efficiency",
+    ]);
+    // Scenario order follows the machines axis (the only multi-value axis).
+    for (m, s) in labelled(&machine_axis, &report) {
         let cores = m * 4;
         let ideal = f64::from(cores) * 3600.0 / 90.0;
         table.row(&[
             m.to_string(),
             cores.to_string(),
-            fmt_dur(r.makespan().unwrap_or(0)),
-            format!("{:.0}", r.jobs_per_hour()),
+            format!("{}/{}", s.drained, s.cells),
+            s.makespan_cell(s.makespan_s.p50),
+            s.makespan_cell(s.makespan_s.p95),
+            format!("{:.0}", s.jobs_per_hour.mean),
             format!("{ideal:.0}"),
-            format!("{:.2}", r.jobs_per_hour() / ideal),
+            format!("{:.2}", s.jobs_per_hour.mean / ideal),
         ]);
     }
     println!("{}", table.render());
@@ -155,14 +199,11 @@ fn t3() {
     println!("shape check: cheapest ≤ normal on cost, ≥ on makespan; gap widens with crashes (no replacement).");
 }
 
-/// T4 — visibility timeout trade-off.
+/// T4 — visibility timeout trade-off, 4 seeds per point through the
+/// sweep engine (duplicate counts are rare events; one seed lies).
 fn t4() {
-    println!("\n== T4: SQS visibility timeout sweep (mean job 120 s, 5% stalls) ==");
-    let jobs = JobSpec::plate("P", 48, 2, vec![]); // 96 jobs
-    let mut table = Table::new(&[
-        "visibility", "x mean", "makespan", "duplicates", "dup %", "EC2 $",
-    ]);
-    for &(vis, label) in &[
+    println!("\n== T4: SQS visibility timeout sweep (mean job 120 s, 5% stalls, 4 seeds) ==");
+    let axis: Vec<(SimTime, &str)> = vec![
         (30 * SECOND, "0.25x"),
         (MINUTE, "0.5x"),
         (2 * MINUTE, "1x"),
@@ -170,68 +211,88 @@ fn t4() {
         (8 * MINUTE, "4x"),
         (16 * MINUTE, "8x"),
         (48 * MINUTE, "24x"),
-    ] {
-        let c = cfg(4, vis);
-        let r = run(
-            &c,
-            &jobs,
-            DurationModel {
-                mean_s: 120.0,
-                cv: 0.3,
-                stall_prob: 0.05,
-                ..Default::default()
-            },
-            RunOptions {
-                seed: 41,
-                max_sim_time: 3 * 24 * HOUR,
-                ..Default::default()
-            },
-        );
+    ];
+    let matrix = ScenarioMatrix {
+        seeds: vec![41, 42, 43, 44],
+        visibilities: axis.iter().map(|&(v, _)| v).collect(),
+        models: vec![DurationModel {
+            mean_s: 120.0,
+            cv: 0.3,
+            stall_prob: 0.05,
+            ..Default::default()
+        }],
+        cluster_machines: vec![4],
+        ..Default::default()
+    };
+    let jobs = JobSpec::plate("P", 48, 2, vec![]); // 96 jobs
+    let report = sweep_report(
+        cfg(4, 10 * MINUTE),
+        jobs,
+        matrix,
+        RunOptions {
+            max_sim_time: 3 * 24 * HOUR,
+            ..Default::default()
+        },
+    );
+    let mut table = Table::new(&[
+        "visibility", "x mean", "drained", "makespan p50", "duplicates", "dup % mean", "cost $ mean",
+    ]);
+    for ((vis, label), s) in labelled(&axis, &report) {
         table.row(&[
-            fmt_dur(vis),
+            fmt_dur(*vis),
             label.to_string(),
-            r.makespan().map(fmt_dur).unwrap_or("-".into()),
-            r.stats.duplicates.to_string(),
-            format!("{:.1}", r.duplicate_fraction() * 100.0),
-            format!("{:.4}", r.cost.ec2_usd),
+            format!("{}/{}", s.drained, s.cells),
+            s.makespan_cell(s.makespan_s.p50),
+            s.duplicates.to_string(),
+            format!("{:.1}", s.duplicate_rate.mean * 100.0),
+            format!("{:.4}", s.cost_usd.mean),
         ]);
     }
     println!("{}", table.render());
     println!("shape check: short -> duplicate-work waste; long -> stall recovery dominates makespan; sweet spot ~1-2x mean (paper: 'slightly longer than the average').");
 }
 
-/// T5 — interruption tolerance vs market volatility.
+/// T5 — interruption tolerance vs market volatility, 4 seeds per level
+/// through the sweep engine.
 fn t5() {
-    println!("\n== T5: spot interruption tolerance (384 jobs, tight 10% bid headroom) ==");
-    let jobs = JobSpec::plate("P", 96, 4, vec![]);
-    let mut table = Table::new(&[
-        "volatility", "interruptions", "completed", "duplicates", "lost-to-death", "makespan",
-    ]);
-    for (name, vol) in [
+    println!("\n== T5: spot interruption tolerance (384 jobs, tight 10% bid headroom, 4 seeds) ==");
+    let levels = [
         ("low", Volatility::Low),
         ("medium", Volatility::Medium),
         ("high", Volatility::High),
-    ] {
-        let mut c = cfg(6, 10 * MINUTE);
-        c.machine_price = 0.192 * 0.30 * 1.10;
-        let r = run(
-            &c,
-            &jobs,
-            model(240.0),
-            RunOptions {
-                volatility: vol,
-                seed: 51,
-                max_sim_time: 7 * 24 * HOUR,
-                ..Default::default()
-            },
-        );
+    ];
+    let mut base = cfg(6, 10 * MINUTE);
+    base.machine_price = 0.192 * 0.30 * 1.10;
+    let matrix = ScenarioMatrix {
+        seeds: vec![51, 52, 53, 54],
+        volatilities: levels.iter().map(|&(_, v)| v).collect(),
+        cluster_machines: vec![6],
+        models: vec![model(240.0)],
+        ..Default::default()
+    };
+    let jobs = JobSpec::plate("P", 96, 4, vec![]);
+    let report = sweep_report(
+        base,
+        jobs,
+        matrix,
+        RunOptions {
+            max_sim_time: 7 * 24 * HOUR,
+            ..Default::default()
+        },
+    );
+    let mut table = Table::new(&[
+        "volatility", "drained", "interruptions", "completed", "duplicates", "lost-to-death", "makespan p50", "makespan p95",
+    ]);
+    for ((name, _), s) in labelled(&levels, &report) {
         table.row(&[
             name.to_string(),
-            r.stats.interruptions.to_string(),
-            format!("{}/{}", r.stats.completed, r.jobs_submitted),
-            r.stats.duplicates.to_string(),
-            r.stats.lost_to_death.to_string(),
-            r.makespan().map(fmt_dur).unwrap_or("-".into()),
+            format!("{}/{}", s.drained, s.cells),
+            s.interruptions.to_string(),
+            format!("{}/{}", s.completed, s.jobs_submitted),
+            s.duplicates.to_string(),
+            s.lost_to_death.to_string(),
+            s.makespan_cell(s.makespan_s.p50),
+            s.makespan_cell(s.makespan_s.p95),
         ]);
     }
     println!("{}", table.render());

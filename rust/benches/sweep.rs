@@ -1,0 +1,85 @@
+//! Sweep-engine thread-scaling bench (acceptance gate: a 64-cell sweep
+//! at 8 threads must beat 1 thread by >= 3x wall-clock).
+//!
+//!     cargo bench --bench sweep
+//!
+//! Each cell is an independent discrete-event simulation, so the engine
+//! is embarrassingly parallel; the only serial parts are plan expansion
+//! and the final aggregation.  The bench also cross-checks that every
+//! thread count produced the bit-identical SweepReport — perf must never
+//! buy nondeterminism.
+
+use std::time::Instant;
+
+use ds_rs::aws::ec2::Volatility;
+use ds_rs::config::{AppConfig, JobSpec};
+use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
+use ds_rs::sim::MINUTE;
+use ds_rs::workloads::DurationModel;
+
+fn plan_64_cells() -> SweepPlan {
+    let cfg = AppConfig {
+        cluster_machines: 4,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 10 * MINUTE,
+        ..Default::default()
+    };
+    // 8 seeds x (2 machines x 2 visibilities x 2 models) = 64 cells.
+    let matrix = ScenarioMatrix {
+        seeds: (0..8).collect(),
+        volatilities: vec![Volatility::Low],
+        visibilities: vec![5 * MINUTE, 10 * MINUTE],
+        cluster_machines: vec![4, 8],
+        models: vec![
+            DurationModel {
+                mean_s: 60.0,
+                cv: 0.3,
+                ..Default::default()
+            },
+            DurationModel {
+                mean_s: 120.0,
+                cv: 0.3,
+                ..Default::default()
+            },
+        ],
+    };
+    let jobs = JobSpec::plate("P", 96, 4, vec![]); // 384 jobs per cell
+    SweepPlan::new(cfg, jobs, matrix)
+}
+
+fn main() {
+    let plan = plan_64_cells();
+    println!(
+        "== sweep thread scaling: {} cells x {} jobs ==\n",
+        plan.matrix.cell_count(),
+        plan.jobs.groups.len()
+    );
+    println!("{:>7} {:>10} {:>9} {:>12}", "threads", "wall s", "speedup", "cells/s");
+
+    let mut serial_wall = 0.0;
+    let mut reference = None;
+    for &threads in &[1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let run = run_sweep(&plan, threads).expect("sweep failed");
+        let wall = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            serial_wall = wall;
+        }
+        match &reference {
+            None => reference = Some(run.report.clone()),
+            Some(r) => assert_eq!(
+                *r, run.report,
+                "thread count changed the report — determinism broken"
+            ),
+        }
+        println!(
+            "{threads:>7} {wall:>10.2} {:>8.2}x {:>12.1}",
+            serial_wall / wall,
+            run.cells.len() as f64 / wall
+        );
+    }
+    println!("\ngate: speedup at 8 threads should be >= 3x (near-linear up to the core count).");
+}

@@ -68,6 +68,55 @@ impl Args {
             .and_then(|v| v.parse().ok())
             .unwrap_or(default)
     }
+
+    /// Comma-separated list value (`--machines 2,4,8`).  Empty items are
+    /// dropped, so trailing commas are harmless.  `None` if the flag is
+    /// absent or valueless.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
+
+    /// Strict scalar parse: absent flag -> `default`; present with no
+    /// value or with garbage -> `Err` (never a silent fallback — a
+    /// malformed invocation must not run a different study than the one
+    /// asked for).
+    pub fn try_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.get(name) {
+            None if self.flag(name) => Err(format!("missing value for --{name}")),
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| format!("bad value '{s}' for --{name}")),
+        }
+    }
+
+    /// Strict comma-list parse: absent flag -> `Ok(None)`; present with
+    /// no value or any unparseable item -> `Err`.
+    pub fn try_parse_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+    ) -> Result<Option<Vec<T>>, String> {
+        match self.get_list(name) {
+            None if self.flag(name) => Err(format!("missing value for --{name}")),
+            None => Ok(None),
+            // A value of only commas/whitespace is a forgotten value too.
+            Some(items) if items.is_empty() => Err(format!("missing value for --{name}")),
+            Some(items) => items
+                .iter()
+                .map(|s| {
+                    s.parse::<T>()
+                        .map_err(|_| format!("bad value '{s}' for --{name}"))
+                })
+                .collect::<Result<Vec<T>, String>>()
+                .map(Some),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -106,5 +155,50 @@ mod tests {
     fn empty() {
         let a = parse("");
         assert!(a.command.is_none());
+    }
+
+    #[test]
+    fn strict_parsing() {
+        let a = parse("sweep --seeds 8 --machines 2,4,x");
+        assert_eq!(a.try_parse("seeds", 4u64), Ok(8));
+        assert_eq!(a.try_parse("missing", 4u64), Ok(4));
+        assert_eq!(
+            a.try_parse::<u64>("machines", 0),
+            Err("bad value '2,4,x' for --machines".to_string())
+        );
+        assert_eq!(
+            a.try_parse_list::<u32>("machines"),
+            Err("bad value 'x' for --machines".to_string())
+        );
+        assert_eq!(a.try_parse_list::<u32>("missing"), Ok(None));
+        let b = parse("sweep --machines 2,4");
+        assert_eq!(b.try_parse_list::<u32>("machines"), Ok(Some(vec![2, 4])));
+        // A flag whose value was forgotten must error, not default.
+        let c = parse("sweep --seeds --json");
+        assert_eq!(
+            c.try_parse("seeds", 4u64),
+            Err("missing value for --seeds".to_string())
+        );
+        assert_eq!(
+            c.try_parse_list::<u64>("seeds"),
+            Err("missing value for --seeds".to_string())
+        );
+        let d = parse("sweep --machines ,");
+        assert_eq!(
+            d.try_parse_list::<u32>("machines"),
+            Err("missing value for --machines".to_string())
+        );
+    }
+
+    #[test]
+    fn list_values() {
+        let a = parse("sweep --machines 2,4,8 --volatility low, --empty");
+        assert_eq!(
+            a.get_list("machines"),
+            Some(vec!["2".to_string(), "4".to_string(), "8".to_string()])
+        );
+        assert_eq!(a.get_list("volatility"), Some(vec!["low".to_string()]));
+        assert_eq!(a.get_list("empty"), None);
+        assert_eq!(a.get_list("missing"), None);
     }
 }

@@ -12,11 +12,16 @@
 //! * [`run`]     — the discrete-event loop that advances everything
 //!   (boot, placement, worker polls, job completions, crashes,
 //!   interruptions, alarms).
+//! * [`sweep`]   — the parallel scenario-sweep engine: a configuration
+//!   matrix of independent simulations on a thread pool, aggregated into
+//!   a [`SweepReport`](crate::metrics::SweepReport).
 
 pub mod cluster;
 pub mod monitor;
 pub mod run;
 pub mod setup;
 pub mod submit;
+pub mod sweep;
 
 pub use run::{RunOptions, Simulation};
+pub use sweep::{run_sweep, Scenario, ScenarioMatrix, SweepPlan, SweepRun};

@@ -1,0 +1,395 @@
+//! Parallel scenario-sweep engine (DESIGN.md §5).
+//!
+//! The paper's promise is scale: "neither computing power nor data
+//! storage are limited by local availability."  The serial [`run_full`]
+//! driver evaluates one configuration at a time; this module evaluates a
+//! whole configuration *matrix* — the cartesian product of seeds ×
+//! [`Volatility`] × `SQS_MESSAGE_VISIBILITY` × `CLUSTER_MACHINES` ×
+//! [`DurationModel`] — on a pool of OS threads, one independent
+//! [`Simulation`](super::Simulation) per cell.
+//!
+//! Determinism is the load-bearing property: each cell is a pure function
+//! of `(scenario, seed)` — it owns its account, event heap, and
+//! [`SimRng`](crate::sim::SimRng); threads share *nothing mutable* except
+//! the work counter and the result slots, and results land in
+//! cell-index order regardless of which thread ran them.  A sweep
+//! therefore produces a bit-identical [`SweepReport`] at any worker
+//! count, which is what lets experiment tables double as regression
+//! gates (see `rust/tests/determinism.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::aws::ec2::Volatility;
+use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::metrics::{RunReport, ScenarioSummary, SweepReport};
+use crate::sim::clock::fmt_dur;
+use crate::sim::{SimTime, MINUTE};
+use crate::workloads::{DurationModel, ModeledExecutor};
+
+use super::run::{run_full, RunOptions};
+
+/// Default worker count for a sweep: one per available core, falling
+/// back to 4 when parallelism cannot be queried.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Stable display name for a volatility level.
+pub fn volatility_name(v: Volatility) -> &'static str {
+    match v {
+        Volatility::Low => "low",
+        Volatility::Medium => "medium",
+        Volatility::High => "high",
+    }
+}
+
+/// One point in the configuration matrix.  Seeds are *not* part of a
+/// scenario: they replicate it, and aggregation reduces across them.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub volatility: Volatility,
+    /// `SQS_MESSAGE_VISIBILITY` for this cell's config.
+    pub visibility: SimTime,
+    /// `CLUSTER_MACHINES` for this cell's config.
+    pub machines: u32,
+    pub model: DurationModel,
+}
+
+impl Scenario {
+    /// Stable human-readable label (also the aggregation key in reports).
+    pub fn label(&self) -> String {
+        format!(
+            "m={} vis={} vol={} mean={:.0}s",
+            self.machines,
+            fmt_dur(self.visibility),
+            volatility_name(self.volatility),
+            self.model.mean_s
+        )
+    }
+}
+
+/// Axes of the sweep: the scenario list is their cartesian product.
+#[derive(Debug, Clone)]
+pub struct ScenarioMatrix {
+    /// Replicate seeds applied to every scenario.
+    pub seeds: Vec<u64>,
+    pub volatilities: Vec<Volatility>,
+    pub visibilities: Vec<SimTime>,
+    pub cluster_machines: Vec<u32>,
+    pub models: Vec<DurationModel>,
+}
+
+impl Default for ScenarioMatrix {
+    fn default() -> Self {
+        Self {
+            seeds: vec![1],
+            volatilities: vec![Volatility::Low],
+            visibilities: vec![10 * MINUTE],
+            cluster_machines: vec![4],
+            models: vec![DurationModel::default()],
+        }
+    }
+}
+
+impl ScenarioMatrix {
+    /// Expand the cartesian product in a fixed order: machines outermost,
+    /// then visibility, then volatility, then duration model.  Axis
+    /// element order is preserved, so single-axis sweeps read like the
+    /// input list.
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(
+            self.cluster_machines.len()
+                * self.visibilities.len()
+                * self.volatilities.len()
+                * self.models.len(),
+        );
+        for &machines in &self.cluster_machines {
+            for &visibility in &self.visibilities {
+                for &volatility in &self.volatilities {
+                    for model in &self.models {
+                        out.push(Scenario {
+                            volatility,
+                            visibility,
+                            machines,
+                            model: model.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total cells the sweep will run (scenarios × seeds).
+    pub fn cell_count(&self) -> usize {
+        self.scenarios().len() * self.seeds.len()
+    }
+}
+
+/// Everything a sweep needs besides the matrix: the base config the
+/// scenario knobs are overlaid on, the job list every cell replays, the
+/// fleet file, and the base run options (seed and volatility are
+/// overridden per cell).
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub base_cfg: AppConfig,
+    pub jobs: JobSpec,
+    pub fleet: FleetSpec,
+    pub base_opts: RunOptions,
+    pub matrix: ScenarioMatrix,
+}
+
+impl SweepPlan {
+    /// Plan over the built-in us-east-1 template fleet with default run
+    /// options.
+    pub fn new(base_cfg: AppConfig, jobs: JobSpec, matrix: ScenarioMatrix) -> Self {
+        Self {
+            base_cfg,
+            jobs,
+            fleet: FleetSpec::template("us-east-1").expect("builtin fleet template"),
+            base_opts: RunOptions::default(),
+            matrix,
+        }
+    }
+}
+
+/// One finished cell, tagged by its scenario index and seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    /// Index into [`SweepRun::scenarios`].
+    pub scenario: usize,
+    pub seed: u64,
+    pub report: RunReport,
+}
+
+/// A completed sweep: the expanded scenario list, every cell's full
+/// report (scenario-major, seed order within a scenario), and the
+/// cross-seed aggregation.
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    pub scenarios: Vec<Scenario>,
+    pub cells: Vec<CellResult>,
+    pub report: SweepReport,
+}
+
+/// The base config with one scenario's knobs overlaid.
+fn scenario_cfg(base: &AppConfig, scenario: &Scenario) -> AppConfig {
+    let mut cfg = base.clone();
+    cfg.cluster_machines = scenario.machines;
+    cfg.sqs_message_visibility = scenario.visibility;
+    cfg
+}
+
+/// Run one `(scenario, seed)` cell: overlay the scenario knobs on the
+/// base config and drive a fresh, fully independent simulation.
+pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunReport> {
+    let cfg = scenario_cfg(&plan.base_cfg, scenario);
+    cfg.validate()?;
+    let opts = RunOptions {
+        seed,
+        volatility: scenario.volatility,
+        ..plan.base_opts.clone()
+    };
+    let mut ex = ModeledExecutor {
+        model: scenario.model.clone(),
+        ..Default::default()
+    };
+    run_full(&cfg, &plan.jobs, &plan.fleet, &mut ex, opts)
+}
+
+/// Run the whole matrix on `threads` worker threads (clamped to
+/// `[1, cells]`).  Cells are claimed from a shared atomic counter —
+/// classic work stealing, no per-thread partitioning imbalance — and each
+/// result is written to its cell's slot, so the output order (and every
+/// aggregate computed from it) is independent of scheduling.
+pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
+    let scenarios = plan.matrix.scenarios();
+    ensure!(!scenarios.is_empty(), "sweep matrix has no scenarios");
+    ensure!(!plan.matrix.seeds.is_empty(), "sweep matrix has no seeds");
+    // Fail fast: one bad scenario must not cost a full sweep's worth of
+    // simulation before its config error surfaces.
+    for sc in &scenarios {
+        scenario_cfg(&plan.base_cfg, sc)
+            .validate()
+            .with_context(|| format!("invalid scenario '{}'", sc.label()))?;
+    }
+
+    let cells: Vec<(usize, u64)> = scenarios
+        .iter()
+        .enumerate()
+        .flat_map(|(i, _)| plan.matrix.seeds.iter().map(move |&s| (i, s)))
+        .collect();
+    let threads = threads.max(1).min(cells.len());
+
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<RunReport>>>> =
+        Mutex::new((0..cells.len()).map(|_| None).collect());
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let (scenario, seed) = cells[i];
+                let report = run_cell(plan, &scenarios[scenario], seed);
+                slots.lock().unwrap()[i] = Some(report);
+            });
+        }
+    });
+
+    let slots = slots.into_inner().unwrap();
+    let mut results = Vec::with_capacity(cells.len());
+    for (&(scenario, seed), slot) in cells.iter().zip(slots) {
+        let report = slot
+            .ok_or_else(|| anyhow!("sweep cell never ran (worker died?)"))?
+            .with_context(|| {
+                format!("sweep cell '{}' seed={seed}", scenarios[scenario].label())
+            })?;
+        results.push(CellResult {
+            scenario,
+            seed,
+            report,
+        });
+    }
+
+    let summaries = scenarios
+        .iter()
+        .enumerate()
+        .map(|(i, sc)| {
+            let reports: Vec<&RunReport> = results
+                .iter()
+                .filter(|c| c.scenario == i)
+                .map(|c| &c.report)
+                .collect();
+            ScenarioSummary::from_reports(&sc.label(), &reports)
+        })
+        .collect();
+
+    Ok(SweepRun {
+        scenarios,
+        cells: results,
+        report: SweepReport {
+            scenarios: summaries,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_plan() -> SweepPlan {
+        let cfg = AppConfig {
+            cluster_machines: 2,
+            tasks_per_machine: 2,
+            docker_cores: 2,
+            machine_types: vec!["m5.xlarge".into()],
+            machine_price: 0.10,
+            sqs_message_visibility: 5 * MINUTE,
+            ..Default::default()
+        };
+        let jobs = JobSpec::plate("P", 4, 2, vec![]);
+        let matrix = ScenarioMatrix {
+            seeds: vec![1, 2],
+            cluster_machines: vec![1, 2],
+            models: vec![DurationModel {
+                mean_s: 30.0,
+                cv: 0.2,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        SweepPlan::new(cfg, jobs, matrix)
+    }
+
+    #[test]
+    fn matrix_cartesian_product_order() {
+        let m = ScenarioMatrix {
+            seeds: vec![0, 1, 2],
+            volatilities: vec![Volatility::Low, Volatility::High],
+            visibilities: vec![MINUTE],
+            cluster_machines: vec![1, 4],
+            models: vec![DurationModel::default()],
+        };
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 4);
+        assert_eq!(m.cell_count(), 12);
+        // Machines outermost, then volatility.
+        assert_eq!(scs[0].machines, 1);
+        assert_eq!(scs[0].volatility, Volatility::Low);
+        assert_eq!(scs[1].volatility, Volatility::High);
+        assert_eq!(scs[2].machines, 4);
+    }
+
+    #[test]
+    fn sweep_runs_every_cell_and_aggregates() {
+        let plan = small_plan();
+        let run = run_sweep(&plan, 2).unwrap();
+        assert_eq!(run.cells.len(), 4);
+        assert_eq!(run.report.scenarios.len(), 2);
+        for s in &run.report.scenarios {
+            assert_eq!(s.cells, 2);
+            // 8 jobs per cell, 2 cells per scenario, all accounted for
+            // (redeliveries can add skipped-done on top).
+            assert!(s.completed + s.skipped_done + s.dead_lettered >= 16);
+        }
+        // Cells are scenario-major, seed order preserved.
+        assert_eq!(
+            run.cells.iter().map(|c| (c.scenario, c.seed)).collect::<Vec<_>>(),
+            vec![(0, 1), (0, 2), (1, 1), (1, 2)]
+        );
+    }
+
+    #[test]
+    fn sweep_identical_across_thread_counts() {
+        let plan = small_plan();
+        let one = run_sweep(&plan, 1).unwrap();
+        let four = run_sweep(&plan, 4).unwrap();
+        assert_eq!(one.report, four.report);
+        assert_eq!(one.cells, four.cells);
+    }
+
+    #[test]
+    fn oversized_thread_count_clamps() {
+        let plan = small_plan();
+        let run = run_sweep(&plan, 64).unwrap();
+        assert_eq!(run.cells.len(), 4);
+    }
+
+    #[test]
+    fn empty_matrix_rejected() {
+        let mut plan = small_plan();
+        plan.matrix.cluster_machines.clear();
+        assert!(run_sweep(&plan, 1).is_err());
+        let mut plan = small_plan();
+        plan.matrix.seeds.clear();
+        assert!(run_sweep(&plan, 1).is_err());
+    }
+
+    #[test]
+    fn invalid_scenario_config_surfaces_label() {
+        let mut plan = small_plan();
+        plan.matrix.cluster_machines = vec![0]; // CLUSTER_MACHINES must be >= 1
+        let err = run_sweep(&plan, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("m=0"), "{err:#}");
+    }
+
+    #[test]
+    fn scenario_labels_are_stable() {
+        let sc = Scenario {
+            volatility: Volatility::Medium,
+            visibility: 5 * MINUTE,
+            machines: 8,
+            model: DurationModel {
+                mean_s: 120.0,
+                ..Default::default()
+            },
+        };
+        assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s");
+    }
+}

@@ -10,8 +10,11 @@
 //! Here the AWS control plane is a faithful discrete-event simulation
 //! ([`aws`], driven by [`sim`]), the "Dockerized workload" is an
 //! AOT-compiled XLA executable run via PJRT ([`runtime`], [`workloads`]),
-//! and the paper's four commands are [`coordinator`].  See DESIGN.md for
-//! the substitution table and experiment index.
+//! and the paper's four commands are [`coordinator`].  Whole
+//! configuration matrices replay in parallel through the scenario-sweep
+//! engine ([`coordinator::sweep`]) with cross-seed aggregation in
+//! [`metrics`].  See DESIGN.md for the substitution table, experiment
+//! index, and sweep-engine design.
 
 pub mod aws;
 pub mod cli;

@@ -7,24 +7,33 @@
 //! ds run          --config files/config.json --job files/job.json \
 //!                 --fleet files/fleet.json [--monitor] [--cheapest] \
 //!                 [--pjrt artifacts/] [--seed N] [--volatility low|medium|high]
+//! ds sweep        [--config files/config.json] [--job files/job.json] \
+//!                 [--fleet files/fleet.json] \
+//!                 --seeds 8 --machines 2,4,8 --visibility-s 120,600 \
+//!                 --volatility low,medium --job-mean-s 90,240 \
+//!                 [--threads N] [--json]
 //! ds describe     --config files/config.json         # validate + print
 //! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
 //! ```
 //!
 //! `run` performs setup → submitJob → startCluster → (monitor) over the
 //! simulated account and prints the run report.  With `--pjrt` the jobs
-//! execute the real AOT-compiled pipeline through PJRT.
+//! execute the real AOT-compiled pipeline through PJRT.  `sweep` replays
+//! the whole cartesian matrix of scenarios on a worker-thread pool and
+//! prints per-scenario aggregates (mean/p50/p95 across seeds).
 
 use std::process::ExitCode;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use ds_rs::aws::ec2::Volatility;
 use ds_rs::cli::Args;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::coordinator::sweep::{default_threads, run_sweep, ScenarioMatrix, SweepPlan};
 use ds_rs::runtime::{Manifest, PjrtRuntime};
 use ds_rs::sim::clock::from_secs_f64;
+use ds_rs::sim::SimTime;
 use ds_rs::workloads::{DurationModel, ModeledExecutor, PjrtExecutor};
 
 fn main() -> ExitCode {
@@ -46,8 +55,9 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("describe") => describe(args),
         Some("workloads") => workloads(args),
         Some("run") => run(args),
+        Some("sweep") => sweep(args),
         Some(other) => bail!(
-            "unknown command '{other}' (try: make-config, make-fleet-file, make-job, describe, workloads, run)"
+            "unknown command '{other}' (try: make-config, make-fleet-file, make-job, describe, workloads, run, sweep)"
         ),
         None => {
             print_usage();
@@ -65,7 +75,8 @@ fn print_usage() {
          \x20 make-job         write a plate-layout Job file\n\
          \x20 describe         validate and print a Config file\n\
          \x20 workloads        list available AOT workload artifacts\n\
-         \x20 run              setup + submitJob + startCluster (+ monitor)\n\n\
+         \x20 run              setup + submitJob + startCluster (+ monitor)\n\
+         \x20 sweep            parallel scenario matrix with aggregate analytics\n\n\
          see README.md for the full walkthrough"
     );
 }
@@ -88,8 +99,8 @@ fn make_config(args: &Args) -> Result<()> {
     let cfg = AppConfig {
         app_name: args.get_or("app-name", "MyApp").to_string(),
         workload_id: args.get_or("workload", "cp_256_b1").to_string(),
-        cluster_machines: args.get_u64("machines", 4) as u32,
-        machine_price: args.get_f64("price", 0.10),
+        cluster_machines: parse_scalar(args, "machines", 4u32)?,
+        machine_price: parse_scalar(args, "price", 0.10f64)?,
         ..Default::default()
     };
     cfg.validate()?;
@@ -105,8 +116,8 @@ fn make_fleet_file(args: &Args) -> Result<()> {
 
 fn make_job(args: &Args) -> Result<()> {
     let plate = args.get_or("plate", "Plate1");
-    let wells = args.get_u64("wells", 96) as u32;
-    let sites = args.get_u64("sites", 4) as u32;
+    let wells = parse_scalar(args, "wells", 96u32)?;
+    let sites = parse_scalar(args, "sites", 4u32)?;
     let jobs = JobSpec::plate(
         plate,
         wells,
@@ -160,6 +171,16 @@ fn workloads(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Strict scalar flag (anyhow-flavored wrapper over [`Args::try_parse`]).
+fn parse_scalar<T: std::str::FromStr>(args: &Args, name: &str, default: T) -> Result<T> {
+    args.try_parse(name, default).map_err(|e| anyhow!(e))
+}
+
+/// Strict comma-separated flag; `None` when absent.
+fn parse_list<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<Vec<T>>> {
+    args.try_parse_list(name).map_err(|e| anyhow!(e))
+}
+
 fn parse_volatility(s: &str) -> Result<Volatility> {
     Ok(match s {
         "low" => Volatility::Low,
@@ -186,14 +207,17 @@ fn run(args: &Args) -> Result<()> {
     .context("parsing Fleet file")?;
 
     let opts = RunOptions {
-        seed: args.get_u64("seed", 42),
+        seed: parse_scalar(args, "seed", 42u64)?,
         volatility: parse_volatility(args.get_or("volatility", "low"))?,
         monitor: !args.flag("no-monitor"),
         cheapest: args.flag("cheapest"),
-        crash_mttf: args
-            .get("crash-mttf-min")
-            .and_then(|v| v.parse::<f64>().ok())
-            .map(|m| from_secs_f64(m * 60.0)),
+        crash_mttf: if args.flag("crash-mttf-min") {
+            Some(from_secs_f64(
+                parse_scalar(args, "crash-mttf-min", 0.0f64)? * 60.0,
+            ))
+        } else {
+            None
+        },
         ..Default::default()
     };
 
@@ -210,15 +234,15 @@ fn run(args: &Args) -> Result<()> {
     let report = if let Some(artifacts) = args.get("pjrt") {
         let runtime = PjrtRuntime::new(artifacts)?;
         let mut ex = PjrtExecutor::new(runtime, &cfg.workload_id)?;
-        ex.time_scale = args.get_f64("time-scale", 1.0);
+        ex.time_scale = parse_scalar(args, "time-scale", 1.0f64)?;
         run_full(&cfg, &jobs, &fleet, &mut ex, opts)?
     } else {
         let mut ex = ModeledExecutor {
             model: DurationModel {
-                mean_s: args.get_f64("job-mean-s", 90.0),
-                cv: args.get_f64("job-cv", 0.3),
-                stall_prob: args.get_f64("stall-prob", 0.0),
-                fail_prob: args.get_f64("fail-prob", 0.0),
+                mean_s: parse_scalar(args, "job-mean-s", 90.0f64)?,
+                cv: parse_scalar(args, "job-cv", 0.3f64)?,
+                stall_prob: parse_scalar(args, "stall-prob", 0.0f64)?,
+                fail_prob: parse_scalar(args, "fail-prob", 0.0f64)?,
             },
             ..Default::default()
         };
@@ -226,5 +250,119 @@ fn run(args: &Args) -> Result<()> {
     };
 
     println!("\n{}", report.summary());
+    Ok(())
+}
+
+/// `ds sweep` — the scenario-matrix front door.  Every axis flag is a
+/// comma-separated list, so `ds sweep --machines 2,4,8 --seeds 8` is a
+/// plain one-axis scaling study with per-scenario mean/p50/p95 across 8
+/// seeds.  Absent axes collapse to a single value: machines and
+/// visibility inherit from the (base) config, while volatility and the
+/// duration model fall back to fixed defaults (low, 90 s mean) since the
+/// Config file does not carry them.  `--fleet` is optional; without it
+/// the builtin us-east-1 template fleet is used.
+fn sweep(args: &Args) -> Result<()> {
+    // A stray positional is almost always a space where a comma belonged
+    // (`--machines 2 4`); running the shrunken matrix silently would be
+    // exactly the wrong-study failure the strict flag parsing prevents.
+    if let Some(stray) = args.positionals.first() {
+        bail!("unexpected argument '{stray}' (list flags take comma-separated values, e.g. --machines 2,4,8)");
+    }
+    let cfg = match args.get("config") {
+        Some(_) => load_config(args)?,
+        None => AppConfig::default(),
+    };
+    let jobs = match args.get("job") {
+        Some(p) => JobSpec::from_json(
+            &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+        )
+        .context("parsing Job file")?,
+        None => JobSpec::plate(
+            args.get_or("plate", "P1"),
+            parse_scalar(args, "wells", 24u32)?,
+            parse_scalar(args, "sites", 2u32)?,
+            vec![],
+        ),
+    };
+
+    let seed_base = parse_scalar(args, "seed-base", 0u64)?;
+    let n_seeds = parse_scalar(args, "seeds", 4u64)?.max(1);
+    let seeds: Vec<u64> = (0..n_seeds).map(|i| seed_base + i).collect();
+
+    let machines: Vec<u32> =
+        parse_list(args, "machines")?.unwrap_or_else(|| vec![cfg.cluster_machines]);
+    let visibilities: Vec<SimTime> = parse_list::<f64>(args, "visibility-s")?
+        .map(|secs| secs.into_iter().map(from_secs_f64).collect())
+        .unwrap_or_else(|| vec![cfg.sqs_message_visibility]);
+    let volatilities: Vec<Volatility> = match args.get_list("volatility") {
+        Some(items) if !items.is_empty() => items
+            .iter()
+            .map(|s| parse_volatility(s))
+            .collect::<Result<Vec<_>>>()?,
+        // Flag present with no (or an empty) value: error like every
+        // other axis rather than silently running a low-volatility study.
+        Some(_) => bail!("missing value for --volatility"),
+        None if args.flag("volatility") => bail!("missing value for --volatility"),
+        None => vec![Volatility::Low],
+    };
+    let cv = parse_scalar(args, "job-cv", 0.3f64)?;
+    let stall_prob = parse_scalar(args, "stall-prob", 0.0f64)?;
+    let fail_prob = parse_scalar(args, "fail-prob", 0.0f64)?;
+    let models: Vec<DurationModel> = parse_list::<f64>(args, "job-mean-s")?
+        .unwrap_or_else(|| vec![90.0])
+        .into_iter()
+        .map(|mean_s| DurationModel {
+            mean_s,
+            cv,
+            stall_prob,
+            fail_prob,
+        })
+        .collect();
+
+    let matrix = ScenarioMatrix {
+        seeds,
+        volatilities,
+        visibilities,
+        cluster_machines: machines,
+        models,
+    };
+    let threads = parse_scalar(args, "threads", default_threads())?.max(1);
+
+    let mut plan = SweepPlan::new(cfg, jobs, matrix);
+    if let Some(p) = args.get("fleet") {
+        plan.fleet = FleetSpec::from_json(
+            &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+        )
+        .context("parsing Fleet file")?;
+    }
+    let preamble = format!(
+        "sweep: {} scenarios x {} seeds = {} cells on {} threads ({} jobs/cell)",
+        plan.matrix.scenarios().len(),
+        plan.matrix.seeds.len(),
+        plan.matrix.cell_count(),
+        threads,
+        plan.jobs.groups.len(),
+    );
+    // Keep stdout machine-parseable under --json: chatter goes to stderr.
+    if args.flag("json") {
+        eprintln!("{preamble}");
+    } else {
+        println!("{preamble}");
+    }
+
+    let t0 = std::time::Instant::now();
+    let run = run_sweep(&plan, threads)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    if args.flag("json") {
+        println!("{}", run.report.to_json().pretty());
+    } else {
+        println!("\n{}", run.report.table().render());
+    }
+    eprintln!(
+        "{} cells ({} simulated jobs) in {wall:.2}s wall",
+        run.cells.len(),
+        run.report.total_completed(),
+    );
     Ok(())
 }

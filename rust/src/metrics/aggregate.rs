@@ -1,0 +1,337 @@
+//! Cross-seed aggregation for scenario sweeps (DESIGN.md §5).
+//!
+//! One sweep cell is one independent [`RunReport`]; a *scenario* is the
+//! set of cells that share a configuration and differ only by seed.  The
+//! types here reduce a scenario's cells into distribution summaries
+//! (mean/p50/p95 makespan, jobs/hour, cost, duplicate-work rate,
+//! dead-letter rate) plus summed fleet counters, and render the whole
+//! sweep as a [`Table`] or as JSON.
+//!
+//! Everything is computed in a fixed order from already-deterministic
+//! per-cell reports, so a [`SweepReport`] is bit-identical regardless of
+//! how many worker threads produced the cells — the determinism tests
+//! pin exactly that.
+
+use crate::json::Value;
+use crate::sim::clock::fmt_dur;
+use crate::sim::SimTime;
+
+use super::{RunReport, Table};
+
+/// Distribution summary over a sample of f64s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Aggregate {
+    /// Sample size.
+    pub n: usize,
+    pub mean: f64,
+    /// Nearest-rank median.
+    pub p50: f64,
+    /// Nearest-rank 95th percentile.
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Aggregate {
+    /// Summarize a sample.  An empty sample yields all-zero fields — never
+    /// NaN, so reports stay bit-comparable with `==`.
+    pub fn from_values(values: &[f64]) -> Self {
+        if values.is_empty() {
+            return Self {
+                n: 0,
+                mean: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                min: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let nearest_rank = |p: f64| {
+            let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+            sorted[idx]
+        };
+        Self {
+            n: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: nearest_rank(0.50),
+            p95: nearest_rank(0.95),
+            min: sorted[0],
+            max: sorted[sorted.len() - 1],
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("n", self.n)
+            .with("mean", self.mean)
+            .with("p50", self.p50)
+            .with("p95", self.p95)
+            .with("min", self.min)
+            .with("max", self.max)
+    }
+}
+
+/// Aggregated view of one scenario: all its seeds' [`RunReport`]s reduced
+/// to distribution summaries plus summed counters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSummary {
+    pub label: String,
+    /// Cells (seeds) aggregated.
+    pub cells: usize,
+    /// Cells whose queue drained (makespan/jobs-per-hour aggregates cover
+    /// only these; undrained cells would poison the sample with zeros).
+    pub drained: usize,
+    // Summed job counters across all cells.
+    pub jobs_submitted: u64,
+    pub completed: u64,
+    pub skipped_done: u64,
+    pub dead_lettered: u64,
+    pub duplicates: u64,
+    // Summed fleet counters across all cells.
+    pub instances_launched: u64,
+    pub interruptions: u64,
+    pub lost_to_death: u64,
+    /// Makespan in seconds, over drained cells.
+    pub makespan_s: Aggregate,
+    /// Throughput in jobs per simulated hour, over drained cells.
+    pub jobs_per_hour: Aggregate,
+    /// Total (EC2 + control-plane) cost in USD, over all cells.
+    pub cost_usd: Aggregate,
+    /// Wasted-duplicate fraction of finished attempts, over all cells.
+    pub duplicate_rate: Aggregate,
+    /// Dead-lettered fraction of submitted jobs, over all cells.
+    pub dead_letter_rate: Aggregate,
+}
+
+impl ScenarioSummary {
+    /// Reduce one scenario's per-seed reports.  Aggregation is positional
+    /// and order-independent only through sorting inside [`Aggregate`], so
+    /// callers should still pass reports in a fixed order to keep summed
+    /// f64 fields bit-stable.
+    pub fn from_reports(label: &str, reports: &[&RunReport]) -> Self {
+        let drained: Vec<&&RunReport> = reports.iter().filter(|r| r.drained_at.is_some()).collect();
+        let makespans: Vec<f64> = drained
+            .iter()
+            .filter_map(|r| r.makespan())
+            .map(|t| t as f64 / 1000.0)
+            .collect();
+        let throughputs: Vec<f64> = drained.iter().map(|r| r.jobs_per_hour()).collect();
+        let costs: Vec<f64> = reports.iter().map(|r| r.cost.total_usd()).collect();
+        let dup_rates: Vec<f64> = reports.iter().map(|r| r.duplicate_fraction()).collect();
+        let dlq_rates: Vec<f64> = reports
+            .iter()
+            .map(|r| {
+                if r.jobs_submitted == 0 {
+                    0.0
+                } else {
+                    r.stats.dead_lettered as f64 / r.jobs_submitted as f64
+                }
+            })
+            .collect();
+        let sum = |f: fn(&RunReport) -> u64| -> u64 { reports.iter().map(|r| f(r)).sum() };
+        Self {
+            label: label.to_string(),
+            cells: reports.len(),
+            drained: drained.len(),
+            jobs_submitted: sum(|r| r.jobs_submitted),
+            completed: sum(|r| r.stats.completed),
+            skipped_done: sum(|r| r.stats.skipped_done),
+            dead_lettered: sum(|r| r.stats.dead_lettered),
+            duplicates: sum(|r| r.stats.duplicates),
+            instances_launched: sum(|r| r.stats.instances_launched),
+            interruptions: sum(|r| r.stats.interruptions),
+            lost_to_death: sum(|r| r.stats.lost_to_death),
+            makespan_s: Aggregate::from_values(&makespans),
+            jobs_per_hour: Aggregate::from_values(&throughputs),
+            cost_usd: Aggregate::from_values(&costs),
+            duplicate_rate: Aggregate::from_values(&dup_rates),
+            dead_letter_rate: Aggregate::from_values(&dlq_rates),
+        }
+    }
+
+    /// Render one of this scenario's makespan aggregate values (seconds)
+    /// for a table cell: "-" when no seed drained (the empty aggregate is
+    /// all zeros, which would otherwise read as instant completion).
+    pub fn makespan_cell(&self, secs: f64) -> String {
+        if self.drained == 0 {
+            "-".to_string()
+        } else {
+            fmt_dur((secs * 1000.0) as SimTime)
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("label", self.label.as_str())
+            .with("cells", self.cells)
+            .with("drained", self.drained)
+            .with("jobs_submitted", self.jobs_submitted)
+            .with("completed", self.completed)
+            .with("skipped_done", self.skipped_done)
+            .with("dead_lettered", self.dead_lettered)
+            .with("duplicates", self.duplicates)
+            .with("instances_launched", self.instances_launched)
+            .with("interruptions", self.interruptions)
+            .with("lost_to_death", self.lost_to_death)
+            .with("makespan_s", self.makespan_s.to_json())
+            .with("jobs_per_hour", self.jobs_per_hour.to_json())
+            .with("cost_usd", self.cost_usd.to_json())
+            .with("duplicate_rate", self.duplicate_rate.to_json())
+            .with("dead_letter_rate", self.dead_letter_rate.to_json())
+    }
+}
+
+/// The whole sweep: one [`ScenarioSummary`] per scenario, in matrix order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SweepReport {
+    pub scenarios: Vec<ScenarioSummary>,
+}
+
+impl SweepReport {
+    /// Cells across every scenario.
+    pub fn total_cells(&self) -> usize {
+        self.scenarios.iter().map(|s| s.cells).sum()
+    }
+
+    /// Jobs completed across every scenario.
+    pub fn total_completed(&self) -> u64 {
+        self.scenarios.iter().map(|s| s.completed).sum()
+    }
+
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "scenario",
+            "seeds",
+            "drained",
+            "makespan p50",
+            "makespan p95",
+            "jobs/h",
+            "cost $",
+            "dup %",
+            "dlq %",
+            "done/sub",
+        ]);
+        for s in &self.scenarios {
+            t.row(&[
+                s.label.clone(),
+                s.cells.to_string(),
+                s.drained.to_string(),
+                s.makespan_cell(s.makespan_s.p50),
+                s.makespan_cell(s.makespan_s.p95),
+                format!("{:.0}", s.jobs_per_hour.mean),
+                format!("{:.4}", s.cost_usd.mean),
+                format!("{:.1}", s.duplicate_rate.mean * 100.0),
+                format!("{:.1}", s.dead_letter_rate.mean * 100.0),
+                format!("{}/{}", s.completed, s.jobs_submitted),
+            ]);
+        }
+        t
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("total_cells", self.total_cells())
+            .with("total_completed", self.total_completed())
+            .with(
+                "scenarios",
+                Value::Arr(self.scenarios.iter().map(ScenarioSummary::to_json).collect()),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::billing::CostReport;
+    use crate::metrics::RunStats;
+    use crate::sim::HOUR;
+
+    fn report(completed: u64, drained: Option<SimTime>, cost: f64) -> RunReport {
+        RunReport {
+            stats: RunStats {
+                completed,
+                duplicates: 1,
+                dead_lettered: 2,
+                ..Default::default()
+            },
+            drained_at: drained,
+            ended_at: drained.unwrap_or(4 * HOUR),
+            cleaned_up: true,
+            cost: CostReport {
+                ec2_usd: cost,
+                ..Default::default()
+            },
+            jobs_submitted: completed + 2,
+        }
+    }
+
+    #[test]
+    fn aggregate_five_numbers() {
+        let a = Aggregate::from_values(&[3.0, 1.0, 2.0, 4.0]);
+        assert_eq!(a.n, 4);
+        assert_eq!(a.min, 1.0);
+        assert_eq!(a.max, 4.0);
+        assert!((a.mean - 2.5).abs() < 1e-12);
+        assert!(a.p50 <= a.p95);
+    }
+
+    #[test]
+    fn aggregate_empty_is_zero_not_nan() {
+        let a = Aggregate::from_values(&[]);
+        assert_eq!(a, Aggregate::from_values(&[]));
+        assert_eq!(a.n, 0);
+        assert_eq!(a.mean, 0.0);
+    }
+
+    #[test]
+    fn aggregate_order_independent() {
+        let a = Aggregate::from_values(&[5.0, 1.0, 9.0, 3.0, 7.0]);
+        let b = Aggregate::from_values(&[9.0, 7.0, 5.0, 3.0, 1.0]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn summary_sums_and_rates() {
+        let r1 = report(10, Some(HOUR), 0.5);
+        let r2 = report(20, Some(2 * HOUR), 1.5);
+        let r3 = report(5, None, 0.25);
+        let s = ScenarioSummary::from_reports("s", &[&r1, &r2, &r3]);
+        assert_eq!(s.cells, 3);
+        assert_eq!(s.drained, 2);
+        assert_eq!(s.completed, 35);
+        assert_eq!(s.jobs_submitted, 41);
+        assert_eq!(s.dead_lettered, 6);
+        assert_eq!(s.makespan_s.n, 2);
+        assert!((s.makespan_s.max - 7200.0).abs() < 1e-9);
+        assert!((s.cost_usd.mean - 0.75).abs() < 1e-12);
+        assert!(s.dead_letter_rate.mean > 0.0);
+    }
+
+    #[test]
+    fn sweep_report_table_and_json() {
+        let r = report(10, Some(HOUR), 0.5);
+        let rep = SweepReport {
+            scenarios: vec![ScenarioSummary::from_reports("m=4", &[&r])],
+        };
+        assert_eq!(rep.total_cells(), 1);
+        assert_eq!(rep.total_completed(), 10);
+        let rendered = rep.table().render();
+        assert!(rendered.contains("m=4"), "{rendered}");
+        assert!(rendered.contains("10/12"), "{rendered}");
+        let j = rep.to_json();
+        assert_eq!(j.get("total_cells").and_then(Value::as_u64), Some(1));
+        let parsed = crate::json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn undrained_scenario_renders_dashes() {
+        let r = report(0, None, 0.1);
+        let rep = SweepReport {
+            scenarios: vec![ScenarioSummary::from_reports("stuck", &[&r])],
+        };
+        assert!(rep.table().render().contains("-"));
+    }
+}

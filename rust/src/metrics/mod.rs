@@ -1,5 +1,9 @@
 //! Run statistics and reporting.
 
+pub mod aggregate;
+
+pub use aggregate::{Aggregate, ScenarioSummary, SweepReport};
+
 use crate::aws::billing::CostReport;
 use crate::sim::clock::{fmt_dur, SimTime, HOUR};
 
@@ -32,7 +36,7 @@ pub struct RunStats {
 }
 
 /// The full end-of-run report.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunReport {
     pub stats: RunStats,
     /// When the queue drained (all messages consumed), if it did.

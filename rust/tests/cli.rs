@@ -86,6 +86,67 @@ fn make_files_then_full_run() {
 }
 
 #[test]
+fn sweep_prints_scenario_table() {
+    // 2 scenarios x 2 seeds over a tiny synthetic plate, in parallel.
+    let out = run_ok(&[
+        "sweep",
+        "--seeds",
+        "2",
+        "--machines",
+        "1,2",
+        "--wells",
+        "2",
+        "--sites",
+        "1",
+        "--job-mean-s",
+        "30",
+        "--threads",
+        "2",
+    ]);
+    assert!(out.contains("2 scenarios x 2 seeds = 4 cells"), "{out}");
+    assert!(out.contains("scenario"), "{out}");
+    assert!(out.contains("m=1"), "{out}");
+    assert!(out.contains("m=2"), "{out}");
+    // Every cell completes its 2 jobs: 8 total across the sweep.
+    assert!(out.contains("4/4"), "{out}");
+}
+
+#[test]
+fn sweep_json_output_parses() {
+    let out = run_ok(&[
+        "sweep", "--seeds", "2", "--machines", "1", "--wells", "2", "--sites", "1", "--json",
+    ]);
+    // With --json, stdout is exactly one JSON object (chatter goes to
+    // stderr), so the output pipes straight into jq and friends.
+    let v = ds_rs::json::parse(out.trim()).unwrap();
+    assert_eq!(v.get("total_cells").and_then(ds_rs::json::Value::as_u64), Some(2));
+    let scenarios = v.get("scenarios").and_then(ds_rs::json::Value::as_arr).unwrap();
+    assert_eq!(scenarios.len(), 1);
+}
+
+#[test]
+fn sweep_rejects_bad_axis_value() {
+    let out = ds()
+        .args(["sweep", "--machines", "two"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad value"));
+}
+
+#[test]
+fn sweep_rejects_bad_scalar_value() {
+    // Scalar flags are strict too: a typo'd --seeds must not silently
+    // fall back to the default and run a wrong-sized study.
+    let out = ds()
+        .args(["sweep", "--seeds", "banana"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad value 'banana' for --seeds"));
+}
+
+#[test]
 fn run_rejects_bad_files() {
     let dir = std::env::temp_dir().join(format!("ds-cli-bad-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

@@ -1,0 +1,116 @@
+//! Determinism regression gates (DESIGN.md §6).
+//!
+//! The whole experiment methodology rests on two facts: (1) one seed
+//! replays one run bit-identically, and (2) the parallel sweep engine is
+//! a pure function of its plan — worker-thread count affects wall-clock
+//! only, never a single bit of the output.  These tests pin both.
+
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
+use ds_rs::metrics::RunReport;
+use ds_rs::sim::MINUTE;
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn cfg() -> AppConfig {
+    AppConfig {
+        cluster_machines: 3,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 5 * MINUTE,
+        ..Default::default()
+    }
+}
+
+fn serial_run(seed: u64) -> RunReport {
+    let jobs = JobSpec::plate("P1", 8, 2, vec![]);
+    let fleet = FleetSpec::template("us-east-1").unwrap();
+    let mut ex = ModeledExecutor {
+        model: DurationModel {
+            mean_s: 45.0,
+            cv: 0.3,
+            stall_prob: 0.02,
+            fail_prob: 0.05,
+        },
+        ..Default::default()
+    };
+    let opts = RunOptions {
+        seed,
+        ..Default::default()
+    };
+    run_full(&cfg(), &jobs, &fleet, &mut ex, opts).unwrap()
+}
+
+#[test]
+fn same_seed_replays_bit_identical_runreport() {
+    // Full-struct equality: stats, drain/end times, cleanup flag, every
+    // cost line item, and the submitted count.
+    let a = serial_run(7);
+    let b = serial_run(7);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn different_seeds_diverge() {
+    // Guards against the seed being silently ignored (which would make
+    // the bit-identity test above vacuous).
+    let a = serial_run(7);
+    let b = serial_run(8);
+    assert_ne!(a, b);
+}
+
+fn sweep_plan() -> SweepPlan {
+    let jobs = JobSpec::plate("P1", 6, 2, vec![]); // 12 jobs per cell
+    let matrix = ScenarioMatrix {
+        seeds: (0..8).collect(),
+        cluster_machines: vec![2, 4],
+        models: vec![DurationModel {
+            mean_s: 40.0,
+            cv: 0.3,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    SweepPlan::new(cfg(), jobs, matrix)
+}
+
+#[test]
+fn sweep_report_identical_at_1_2_and_8_threads() {
+    let plan = sweep_plan();
+    let one = run_sweep(&plan, 1).unwrap();
+    let two = run_sweep(&plan, 2).unwrap();
+    let eight = run_sweep(&plan, 8).unwrap();
+    // Aggregates are bit-identical...
+    assert_eq!(one.report, two.report);
+    assert_eq!(one.report, eight.report);
+    // ...because every underlying cell is, in the same order.
+    assert_eq!(one.cells, two.cells);
+    assert_eq!(one.cells, eight.cells);
+}
+
+#[test]
+fn sweep_cell_matches_standalone_run() {
+    // A sweep cell is exactly run_full with the scenario knobs overlaid —
+    // no hidden coupling between cells.
+    let plan = sweep_plan();
+    let run = run_sweep(&plan, 4).unwrap();
+    let cell = &run.cells[0];
+    let sc = &run.scenarios[cell.scenario];
+
+    let mut cfg = plan.base_cfg.clone();
+    cfg.cluster_machines = sc.machines;
+    cfg.sqs_message_visibility = sc.visibility;
+    let mut ex = ModeledExecutor {
+        model: sc.model.clone(),
+        ..Default::default()
+    };
+    let opts = RunOptions {
+        seed: cell.seed,
+        volatility: sc.volatility,
+        ..Default::default()
+    };
+    let standalone = run_full(&cfg, &plan.jobs, &plan.fleet, &mut ex, opts).unwrap();
+    assert_eq!(cell.report, standalone);
+}

@@ -1,11 +1,13 @@
 //! Property-based invariants over the substrates and the whole run
 //! (DESIGN.md §6), using the in-house forall harness.
 
+use ds_rs::aws::billing::CostReport;
 use ds_rs::aws::ec2::{SpotMarket, Volatility};
 use ds_rs::aws::sqs::{RedrivePolicy, Sqs};
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::json;
+use ds_rs::metrics::{Aggregate, RunReport, RunStats, ScenarioSummary};
 use ds_rs::sim::{EventQueue, SimRng, HOUR, MINUTE};
 use ds_rs::testutil::{forall, forall_r};
 use ds_rs::workloads::{DurationModel, ModeledExecutor};
@@ -255,6 +257,188 @@ fn prop_every_job_accounted_across_configs() {
             }
             if report.cost.total_usd() <= 0.0 {
                 return Err("zero cost for a real run".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Sweep-aggregation invariants (DESIGN.md §5/§6)
+// ---------------------------------------------------------------------------
+
+/// Random synthetic RunReport: non-negative counters and cost, sometimes
+/// drained, sometimes not.
+fn gen_report(rng: &mut SimRng) -> RunReport {
+    let submitted = 1 + rng.below(500);
+    let completed = rng.below(submitted + 1);
+    let dead_lettered = rng.below(submitted - completed + 1);
+    let drained_at = rng.chance(0.8).then(|| 1 + rng.below(48 * HOUR));
+    let machine_hours = rng.f64() * 100.0;
+    RunReport {
+        stats: RunStats {
+            completed,
+            skipped_done: rng.below(50),
+            duplicates: rng.below(20),
+            dead_lettered,
+            instances_launched: rng.below(64),
+            interruptions: rng.below(16),
+            lost_to_death: rng.below(8),
+            ..Default::default()
+        },
+        drained_at,
+        ended_at: drained_at.unwrap_or(0) + rng.below(12 * HOUR),
+        cleaned_up: rng.chance(0.9),
+        cost: CostReport {
+            ec2_usd: machine_hours * 0.03,
+            sqs_usd: rng.f64() * 0.01,
+            s3_usd: rng.f64() * 0.01,
+            cloudwatch_usd: rng.f64() * 0.01,
+            machine_hours,
+            on_demand_equivalent_usd: machine_hours * 0.096,
+        },
+        jobs_submitted: submitted,
+    }
+}
+
+#[test]
+fn prop_aggregate_order_statistics() {
+    // For any sample: n matches, min <= p50 <= p95 <= max, mean within
+    // [min, max], and the summary is permutation-invariant bit-for-bit.
+    forall_r(
+        "aggregate-order-statistics",
+        80,
+        0xA66,
+        |rng| {
+            let n = rng.below(40) as usize;
+            (0..n).map(|_| rng.lognormal_mean_cv(100.0, 1.0)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let a = Aggregate::from_values(xs);
+            if a.n != xs.len() {
+                return Err(format!("n={} len={}", a.n, xs.len()));
+            }
+            if xs.is_empty() {
+                return (a == Aggregate::from_values(&[]))
+                    .then_some(())
+                    .ok_or_else(|| "empty aggregate not canonical".into());
+            }
+            if !(a.min <= a.p50 && a.p50 <= a.p95 && a.p95 <= a.max) {
+                return Err(format!("order violated: {a:?}"));
+            }
+            if !(a.min <= a.mean && a.mean <= a.max) {
+                return Err(format!("mean outside range: {a:?}"));
+            }
+            let mut rev = xs.clone();
+            rev.reverse();
+            if Aggregate::from_values(&rev) != a {
+                return Err("not permutation-invariant".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scenario_summary_conserves_totals() {
+    // Aggregate job totals equal the sum of per-cell totals, rates stay
+    // in [0, 1], cost is non-negative, and p50 <= p95 on every aggregate.
+    forall_r(
+        "scenario-summary-totals",
+        60,
+        0x5CE,
+        |rng| {
+            let n = 1 + rng.below(8) as usize;
+            (0..n).map(|_| gen_report(rng)).collect::<Vec<RunReport>>()
+        },
+        |reports| {
+            let refs: Vec<&RunReport> = reports.iter().collect();
+            let s = ScenarioSummary::from_reports("p", &refs);
+            let sum = |f: fn(&RunReport) -> u64| -> u64 { reports.iter().map(f).sum() };
+            if s.jobs_submitted != sum(|r| r.jobs_submitted)
+                || s.completed != sum(|r| r.stats.completed)
+                || s.skipped_done != sum(|r| r.stats.skipped_done)
+                || s.dead_lettered != sum(|r| r.stats.dead_lettered)
+                || s.duplicates != sum(|r| r.stats.duplicates)
+                || s.instances_launched != sum(|r| r.stats.instances_launched)
+                || s.interruptions != sum(|r| r.stats.interruptions)
+            {
+                return Err(format!("summed counters drifted: {s:?}"));
+            }
+            if s.cells != reports.len() {
+                return Err(format!("cells={} != {}", s.cells, reports.len()));
+            }
+            if s.drained != reports.iter().filter(|r| r.drained_at.is_some()).count() {
+                return Err("drained count wrong".into());
+            }
+            if s.makespan_s.n != s.drained || s.jobs_per_hour.n != s.drained {
+                return Err("drained-only aggregates cover wrong sample".into());
+            }
+            for (name, a) in [
+                ("makespan", &s.makespan_s),
+                ("jobs/h", &s.jobs_per_hour),
+                ("cost", &s.cost_usd),
+                ("dup-rate", &s.duplicate_rate),
+                ("dlq-rate", &s.dead_letter_rate),
+            ] {
+                if a.p50 > a.p95 {
+                    return Err(format!("{name}: p50 > p95: {a:?}"));
+                }
+                if a.min < 0.0 {
+                    return Err(format!("{name}: negative: {a:?}"));
+                }
+            }
+            if s.duplicate_rate.max > 1.0 || s.dead_letter_rate.max > 1.0 {
+                return Err("rate above 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cost_nonnegative_and_monotone_in_billed_hours() {
+    // Scaling every cell's billed machine-hours (at a fixed hourly rate)
+    // by lambda >= 1 never decreases any cost aggregate; cost is never
+    // negative.
+    forall_r(
+        "cost-monotone-in-hours",
+        60,
+        0xC057,
+        |rng| {
+            let n = 1 + rng.below(6) as usize;
+            let reports: Vec<RunReport> = (0..n).map(|_| gen_report(rng)).collect();
+            let lambda = 1.0 + rng.f64() * 4.0;
+            (reports, lambda)
+        },
+        |(reports, lambda)| {
+            let refs: Vec<&RunReport> = reports.iter().collect();
+            let base = ScenarioSummary::from_reports("c", &refs);
+            let scaled_reports: Vec<RunReport> = reports
+                .iter()
+                .map(|r| {
+                    let mut r = r.clone();
+                    r.cost.machine_hours *= lambda;
+                    r.cost.ec2_usd *= lambda; // same $/hour, more hours
+                    r
+                })
+                .collect();
+            let scaled_refs: Vec<&RunReport> = scaled_reports.iter().collect();
+            let scaled = ScenarioSummary::from_reports("c", &scaled_refs);
+            if base.cost_usd.min < 0.0 {
+                return Err(format!("negative cost: {:?}", base.cost_usd));
+            }
+            for (name, b, s) in [
+                ("mean", base.cost_usd.mean, scaled.cost_usd.mean),
+                ("p50", base.cost_usd.p50, scaled.cost_usd.p50),
+                ("p95", base.cost_usd.p95, scaled.cost_usd.p95),
+                ("max", base.cost_usd.max, scaled.cost_usd.max),
+            ] {
+                if s < b {
+                    return Err(format!(
+                        "cost {name} decreased with more billed hours: {b} -> {s} (lambda={lambda})"
+                    ));
+                }
             }
             Ok(())
         },
