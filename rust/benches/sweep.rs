@@ -45,6 +45,7 @@ fn plan_64_cells() -> SweepPlan {
                 ..Default::default()
             },
         ],
+        ..Default::default()
     };
     let jobs = JobSpec::plate("P", 96, 4, vec![]); // 384 jobs per cell
     SweepPlan::new(cfg, jobs, matrix)

@@ -30,9 +30,11 @@ pub struct CostReport {
     pub sqs_usd: f64,
     pub s3_usd: f64,
     pub cloudwatch_usd: f64,
-    /// Machine-hours actually billed (spot).
+    /// Machine-hours actually billed (spot + on-demand base).
     pub machine_hours: f64,
-    /// What the same machine-hours would have cost on-demand.
+    /// What the same machine-hours would have cost entirely on-demand.
+    /// For instances the fleet's `ON_DEMAND_BASE` already bought
+    /// on-demand, equivalent equals actual — only the spot slice saves.
     pub on_demand_equivalent_usd: f64,
 }
 
@@ -105,6 +107,7 @@ mod tests {
         CostRecord {
             instance: 1,
             itype: "m5.large",
+            lifecycle: crate::aws::ec2::Lifecycle::Spot,
             span: (0, hours * HOUR),
             cost_usd: cost,
             reason: TerminationReason::FleetCancelled,

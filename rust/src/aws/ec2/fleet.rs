@@ -1,5 +1,5 @@
-//! Spot fleet requests: allocation, fulfillment latency, interruption,
-//! replacement.
+//! Spot fleet requests: allocation strategies, weighted capacity,
+//! fulfillment latency, interruption, replacement, on-demand base.
 //!
 //! Reproduced paper behaviours:
 //!
@@ -8,35 +8,204 @@
 //!   machines to be ready" — fulfillment latency grows as the bid
 //!   approaches the spot price and collapses to "wait for the next
 //!   evaluation" when the pool has no free capacity.
-//! * Interruption: any running instance whose pool price rises above its
-//!   fleet's bid is reclaimed.
+//! * Interruption: any running spot instance whose pool price rises above
+//!   its fleet's effective bid (`bid × weight`) is reclaimed.
 //! * Replacement: an active fleet relaunches toward its target capacity
 //!   whenever instances die (crash reaper, self-shutdown, interruption) —
 //!   which is also the paper's cost leak that `monitor` exists to close.
 //! * Cheapest mode: `modify_target` lowers the *requested* capacity
 //!   without terminating running machines.
+//!
+//! Beyond the paper's single-type fleet, this module reproduces the full
+//! Spot Fleet request surface the paper's `exampleFleet.json` rides on:
+//!
+//! * **Heterogeneous pools** — a fleet names several instance types
+//!   ([`InstanceSlot`]), each a separate capacity pool with its own
+//!   independent price walk (see [`super::market`]).
+//! * **Weighted capacity** — each slot contributes `weight` units toward
+//!   `target_capacity`, and bids are per *unit*, so one bid can be tight
+//!   across differently-sized machines.
+//! * **[`AllocationStrategy`]** — how the deficit is split across
+//!   eligible pools: `LowestPrice` (greedy cheapest-per-unit),
+//!   `Diversified` (round-robin across all eligible pools), or
+//!   `CapacityOptimized` (deepest pools first, fewest interruptions).
+//! * **On-demand base** — the first `on_demand_base` units are bought
+//!   on-demand: flat-billed, never interrupted (AWS's
+//!   `OnDemandBaseCapacity`).
+//!
+//! # Example: a diversified heterogeneous fleet
+//!
+//! ```
+//! use ds_rs::aws::ec2::{AllocationStrategy, Ec2, InstanceSlot, SpotFleetSpec,
+//!                       SpotMarket, Volatility};
+//! use ds_rs::sim::SimRng;
+//!
+//! let mut ec2 = Ec2::new(SpotMarket::new(7, Volatility::Low), SimRng::new(7));
+//! let fleet = ec2.request_spot_fleet(SpotFleetSpec {
+//!     target_capacity: 4,
+//!     bid_hourly: 0.10,
+//!     slots: vec![InstanceSlot::new("m5.large"), InstanceSlot::new("c5.xlarge")],
+//!     allocation: AllocationStrategy::Diversified,
+//!     on_demand_base: 0,
+//! });
+//! ec2.evaluate_fleets(0);
+//! // Diversified splits the four units across both pools, two each.
+//! assert_eq!(ec2.active_weight(fleet), 4);
+//! let types: Vec<&str> = ec2.all_instances().iter().map(|i| i.itype.name).collect();
+//! assert_eq!(types.iter().filter(|t| *t == "m5.large").count(), 2);
+//! assert_eq!(types.iter().filter(|t| *t == "c5.xlarge").count(), 2);
+//! ```
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::sim::clock::{SimTime, SECOND};
 use crate::sim::SimRng;
 
-use super::instance::{Instance, InstanceId, InstanceState, TerminationReason};
+use super::instance::{Instance, InstanceId, InstanceState, Lifecycle, TerminationReason};
 use super::market::SpotMarket;
 use super::pricing::instance_type;
 
 /// Fleet request identifier (`sfr-0007`).
 pub type FleetId = u64;
 
+/// How a fleet's capacity deficit is split across eligible capacity
+/// pools.  Mirrors AWS Spot Fleet's `AllocationStrategy`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AllocationStrategy {
+    /// Fill greedily from the pool with the lowest per-unit price.
+    /// Cheapest now; concentrated, so one pool spike can take the whole
+    /// fleet at once.
+    #[default]
+    LowestPrice,
+    /// Round-robin one instance at a time across every eligible pool.
+    /// Spreads interruption risk: a spike in one pool costs only that
+    /// pool's share.
+    Diversified,
+    /// Fill greedily from the pool with the most free capacity (ties:
+    /// cheaper per-unit first).  Deep pools spike less often than
+    /// drained ones.
+    CapacityOptimized,
+}
+
+impl AllocationStrategy {
+    /// All strategies, in a stable order (sweep axes iterate this).
+    pub const ALL: [AllocationStrategy; 3] = [
+        AllocationStrategy::LowestPrice,
+        AllocationStrategy::Diversified,
+        AllocationStrategy::CapacityOptimized,
+    ];
+
+    /// Stable kebab-case name (config-file and CLI syntax).
+    pub fn name(self) -> &'static str {
+        match self {
+            AllocationStrategy::LowestPrice => "lowest-price",
+            AllocationStrategy::Diversified => "diversified",
+            AllocationStrategy::CapacityOptimized => "capacity-optimized",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|a| a.name() == s)
+    }
+}
+
+/// One launch specification inside a fleet: an instance type plus the
+/// weighted-capacity units each such instance contributes.
+///
+/// The config-file / CLI syntax is `"name"` (weight 1) or `"name:weight"`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InstanceSlot {
+    pub name: String,
+    /// Capacity units per instance (AWS `WeightedCapacity`), >= 1.
+    pub weight: u32,
+}
+
+impl InstanceSlot {
+    /// A weight-1 slot (the paper's original one-machine-one-unit shape).
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            weight: 1,
+        }
+    }
+
+    /// Parse `"name"` or `"name:weight"`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (name, weight) = match s.split_once(':') {
+            Some((n, w)) => (
+                n.trim(),
+                w.trim()
+                    .parse::<u32>()
+                    .map_err(|_| format!("bad weight in instance slot '{s}'"))?,
+            ),
+            None => (s.trim(), 1),
+        };
+        if name.is_empty() {
+            return Err(format!("empty instance type in slot '{s}'"));
+        }
+        if weight == 0 {
+            return Err(format!("weight must be >= 1 in instance slot '{s}'"));
+        }
+        Ok(Self {
+            name: name.to_string(),
+            weight,
+        })
+    }
+
+    /// Inverse of [`parse`](Self::parse): `"name"` when the weight is 1,
+    /// `"name:weight"` otherwise.
+    pub fn render(&self) -> String {
+        if self.weight == 1 {
+            self.name.clone()
+        } else {
+            format!("{}:{}", self.name, self.weight)
+        }
+    }
+}
+
 /// A spot fleet request: what `startCluster` submits.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SpotFleetSpec {
-    /// CLUSTER_MACHINES from the Config file.
+    /// CLUSTER_MACHINES from the Config file, in *weighted units* (equal
+    /// to machine count when every slot has weight 1).
     pub target_capacity: u32,
-    /// MACHINE_PRICE: max USD/h per machine.
+    /// MACHINE_PRICE: max USD/h per weighted unit.  An instance's
+    /// effective bid is `bid_hourly × slot.weight`.
     pub bid_hourly: f64,
-    /// MACHINE_TYPE list; allocation picks the cheapest eligible pool.
-    pub allowed_types: Vec<String>,
+    /// The fleet's launch specifications; each distinct type is one
+    /// capacity pool.
+    pub slots: Vec<InstanceSlot>,
+    /// How the deficit is split across eligible pools.
+    pub allocation: AllocationStrategy,
+    /// Units (not instances) to keep on-demand: flat-billed, never
+    /// interrupted.  Clamped to `target_capacity`.
+    pub on_demand_base: u32,
+}
+
+impl Default for SpotFleetSpec {
+    fn default() -> Self {
+        Self {
+            target_capacity: 1,
+            bid_hourly: 0.10,
+            slots: vec![InstanceSlot::new("m5.xlarge")],
+            allocation: AllocationStrategy::LowestPrice,
+            on_demand_base: 0,
+        }
+    }
+}
+
+impl SpotFleetSpec {
+    /// The paper's original shape: one weight-1 instance type, lowest
+    /// price, no on-demand base.
+    pub fn homogeneous(target_capacity: u32, bid_hourly: f64, type_name: &str) -> Self {
+        Self {
+            target_capacity,
+            bid_hourly,
+            slots: vec![InstanceSlot::new(type_name)],
+            ..Self::default()
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,7 +232,8 @@ pub enum FleetEvent {
     },
     /// A running instance was reclaimed (spot price exceeded the bid).
     InstanceInterrupted { id: InstanceId, price: f64 },
-    /// Deficit that could not be fulfilled this tick (no eligible pool).
+    /// Weighted units that could not be fulfilled this tick (no eligible
+    /// pool).
     CapacityUnavailable { fleet: FleetId, missing: u32 },
 }
 
@@ -72,9 +242,72 @@ pub enum FleetEvent {
 pub struct CostRecord {
     pub instance: InstanceId,
     pub itype: &'static str,
+    /// Spot records are integrated over the pool's price walk; on-demand
+    /// records bill flat at the catalog hourly price.
+    pub lifecycle: Lifecycle,
     pub span: (SimTime, SimTime),
     pub cost_usd: f64,
     pub reason: TerminationReason,
+}
+
+/// Per-pool slice of a run's fleet activity: launches, interruptions,
+/// billed machine-hours and dollars.  On-demand usage of a type is a
+/// separate pool labelled `"<type>/on-demand"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolBreakdown {
+    /// Pool label: the instance type, with `"/on-demand"` appended for
+    /// the on-demand slice.
+    pub pool: String,
+    /// Instances ever launched into this pool.
+    pub launched: u64,
+    /// Spot interruptions suffered by this pool.
+    pub interrupted: u64,
+    /// Billed machine-hours (terminated + still-running accrual).
+    pub machine_hours: f64,
+    /// Billed dollars (terminated + still-running accrual).
+    pub cost_usd: f64,
+}
+
+impl PoolBreakdown {
+    fn empty(pool: String) -> Self {
+        Self {
+            pool,
+            launched: 0,
+            interrupted: 0,
+            machine_hours: 0.0,
+            cost_usd: 0.0,
+        }
+    }
+}
+
+fn pool_label(itype: &str, lifecycle: Lifecycle) -> String {
+    match lifecycle {
+        Lifecycle::Spot => itype.to_string(),
+        Lifecycle::OnDemand => format!("{itype}/on-demand"),
+    }
+}
+
+/// A pool's price per weighted unit.
+fn per_unit(price: f64, weight: u32) -> f64 {
+    price / f64::from(weight)
+}
+
+/// What one billable span costs: the single place the spot-vs-on-demand
+/// billing rule lives (spot integrates the pool's price walk; on-demand
+/// bills flat at the catalog hourly rate).  Used by termination billing,
+/// end-of-run accrual, and the per-pool breakdown.
+fn billed_cost(
+    market: &mut SpotMarket,
+    itype: &'static str,
+    od_hourly: f64,
+    lifecycle: Lifecycle,
+    start: SimTime,
+    end: SimTime,
+) -> f64 {
+    match lifecycle {
+        Lifecycle::Spot => market.cost_integral(itype, start, end),
+        Lifecycle::OnDemand => od_hourly * (end - start) as f64 / crate::sim::HOUR as f64,
+    }
 }
 
 /// The EC2 service: spot market + instances + fleets.
@@ -104,11 +337,17 @@ impl Ec2 {
     /// RequestSpotFleet: returns the fleet id; instances appear on the
     /// next `evaluate_fleets` call.
     pub fn request_spot_fleet(&mut self, spec: SpotFleetSpec) -> FleetId {
-        for t in &spec.allowed_types {
+        assert!(
+            !spec.slots.is_empty(),
+            "fleet spec needs at least one instance slot"
+        );
+        for s in &spec.slots {
             assert!(
-                instance_type(t).is_some(),
-                "unknown instance type in fleet spec: {t}"
+                instance_type(&s.name).is_some(),
+                "unknown instance type in fleet spec: {}",
+                s.name
             );
+            assert!(s.weight >= 1, "slot weight must be >= 1: {}", s.name);
         }
         self.next_fleet += 1;
         let id = self.next_fleet;
@@ -128,6 +367,131 @@ impl Ec2 {
         if let Some(f) = self.fleets.get_mut(&fleet) {
             f.spec.target_capacity = target;
         }
+    }
+
+    /// Active instances of a fleet ranked most-expensive-per-unit first
+    /// (i.e. the cheapest pool comes last), still-booting before running
+    /// within a price tie.  Spot instances rank by the pool's current
+    /// spot price; on-demand instances by what they actually bill — the
+    /// catalog hourly rate.  Tuple: (per-unit price, pending-first rank,
+    /// id, weight, is-on-demand).
+    fn ranked_scale_in_victims(
+        &mut self,
+        fleet: FleetId,
+        now: SimTime,
+    ) -> Vec<(f64, u8, InstanceId, u32, bool)> {
+        let mut actives: Vec<(f64, u8, InstanceId, u32, bool)> = Vec::new();
+        for inst in self.instances.values() {
+            if inst.fleet != fleet || !inst.is_active() {
+                continue;
+            }
+            let hourly = match inst.lifecycle {
+                Lifecycle::Spot => self.market.price_at(inst.itype.name, now),
+                Lifecycle::OnDemand => inst.itype.on_demand_hourly,
+            };
+            let pending = if inst.state == InstanceState::Pending { 0u8 } else { 1 };
+            actives.push((
+                per_unit(hourly, inst.weight),
+                pending,
+                inst.id,
+                inst.weight,
+                inst.lifecycle == Lifecycle::OnDemand,
+            ));
+        }
+        actives.sort_by(|a, b| {
+            b.0.partial_cmp(&a.0)
+                .unwrap()
+                .then(a.1.cmp(&b.1))
+                .then(a.2.cmp(&b.2))
+        });
+        actives
+    }
+
+    /// The fleet's configured on-demand base (0 for unknown fleets).
+    fn od_base_of(&self, fleet: FleetId) -> u32 {
+        self.fleets
+            .get(&fleet)
+            .map(|f| f.spec.on_demand_base)
+            .unwrap_or(0)
+    }
+
+    /// Reduce the fleet to `new_target` weighted units by *terminating*
+    /// excess instances, most-expensive-per-unit pool first — i.e. the
+    /// cheapest pool is downscaled last.  Still-booting instances in a
+    /// pool die before running ones.  Never undershoots the target, and
+    /// never terminates an on-demand instance that the effective floor
+    /// (`on_demand_base.min(new_target)` — exactly what
+    /// `evaluate_fleets` maintains) would immediately rebuy; scaling
+    /// *below* the od base therefore does release on-demand capacity.
+    /// Returns the terminated ids (reason [`TerminationReason::FleetDownscale`]).
+    pub fn scale_in(&mut self, fleet: FleetId, new_target: u32, now: SimTime) -> Vec<InstanceId> {
+        self.modify_target(fleet, new_target);
+        let od_floor = self.od_base_of(fleet).min(new_target);
+        let victims = self.ranked_scale_in_victims(fleet, now);
+        let mut aw = self.active_weight(fleet);
+        let mut od_w = self.active_weight_of(fleet, Lifecycle::OnDemand);
+        let mut killed = Vec::new();
+        for (_, _, id, w, is_od) in victims {
+            if aw <= new_target {
+                break;
+            }
+            if aw - w < new_target {
+                continue; // removing this one would undershoot
+            }
+            if is_od && od_w.saturating_sub(w) < od_floor {
+                continue; // evaluate_fleets would rebuy it next tick
+            }
+            self.terminate(id, TerminationReason::FleetDownscale, now);
+            aw -= w;
+            if is_od {
+                od_w -= w;
+            }
+            killed.push(id);
+        }
+        killed
+    }
+
+    /// Like [`scale_in`](Self::scale_in) but the budget is *machines*
+    /// rather than weighted units — what a throughput-driven caller (the
+    /// monitor's queue-downscale) wants, since a weight-3 machine still
+    /// runs only one machine's worth of containers.  Terminates down to
+    /// at most `machines` active instances (same ranking as `scale_in`),
+    /// then lowers the requested capacity to the surviving weight so
+    /// nothing is relaunched.  The full configured `on_demand_base` is
+    /// protected here (not clamped): the new target is only known after
+    /// the kills, and dropping on-demand weight below the base while
+    /// spot survivors keep the total above it would make
+    /// `evaluate_fleets` rebuy the difference — churn for nothing.
+    pub fn scale_in_to_machines(
+        &mut self,
+        fleet: FleetId,
+        machines: u32,
+        now: SimTime,
+    ) -> Vec<InstanceId> {
+        let od_base = self.od_base_of(fleet);
+        let victims = self.ranked_scale_in_victims(fleet, now);
+        let mut count = self.active_count(fleet);
+        let mut od_w = self.active_weight_of(fleet, Lifecycle::OnDemand);
+        let mut killed = Vec::new();
+        for (_, _, id, w, is_od) in victims {
+            if count <= machines.max(1) {
+                break;
+            }
+            if is_od && od_w.saturating_sub(w) < od_base {
+                continue;
+            }
+            self.terminate(id, TerminationReason::FleetDownscale, now);
+            count -= 1;
+            if is_od {
+                od_w -= w;
+            }
+            killed.push(id);
+        }
+        if !killed.is_empty() {
+            let surviving = self.active_weight(fleet);
+            self.modify_target(fleet, surviving);
+        }
+        killed
     }
 
     /// CancelSpotFleetRequests with TerminateInstances: end of run.
@@ -172,6 +536,26 @@ impl Ec2 {
             .count() as u32
     }
 
+    /// Fulfilled weighted capacity: the sum of active instances' weights.
+    /// Equals [`active_count`](Self::active_count) when every slot has
+    /// weight 1.
+    pub fn active_weight(&self, fleet: FleetId) -> u32 {
+        self.instances
+            .values()
+            .filter(|i| i.fleet == fleet && i.is_active())
+            .map(|i| i.weight)
+            .sum()
+    }
+
+    /// Fulfilled weighted capacity bought with a given lifecycle.
+    fn active_weight_of(&self, fleet: FleetId, lifecycle: Lifecycle) -> u32 {
+        self.instances
+            .values()
+            .filter(|i| i.fleet == fleet && i.is_active() && i.lifecycle == lifecycle)
+            .map(|i| i.weight)
+            .sum()
+    }
+
     /// All instance ids in a fleet in a given state, sorted.
     pub fn instances_in_state(&self, fleet: FleetId, state: InstanceState) -> Vec<InstanceId> {
         let mut v: Vec<InstanceId> = self
@@ -208,20 +592,70 @@ impl Ec2 {
         boot + (extra * 1_000.0) as SimTime
     }
 
-    /// One evaluation tick: interrupt out-bid instances, then fill any
-    /// deficit from the cheapest eligible pool.  The coordinator calls
-    /// this on every market tick (once per simulated minute).
+    /// Launch one instance into a fleet and record the event.
+    #[allow(clippy::too_many_arguments)]
+    fn launch(
+        &mut self,
+        fleet: FleetId,
+        tname: &'static str,
+        weight: u32,
+        bid: f64,
+        lifecycle: Lifecycle,
+        price: f64,
+        now: SimTime,
+        events: &mut Vec<FleetEvent>,
+    ) {
+        self.next_instance += 1;
+        let id = self.next_instance;
+        let ready_at = match lifecycle {
+            Lifecycle::Spot => {
+                now + Self::fulfillment_delay(&mut self.rng, bid * f64::from(weight), price)
+            }
+            // On-demand capacity is always there: boot time only.
+            Lifecycle::OnDemand => now + self.rng.range_u64(45 * SECOND, 120 * SECOND),
+        };
+        self.instances.insert(
+            id,
+            Instance {
+                id,
+                itype: instance_type(tname).unwrap(),
+                fleet,
+                state: InstanceState::Pending,
+                requested_at: now,
+                running_at: None,
+                terminated_at: None,
+                termination_reason: None,
+                crashed: false,
+                bid,
+                weight,
+                lifecycle,
+                name_tag: None,
+            },
+        );
+        events.push(FleetEvent::InstanceRequested {
+            id,
+            ready_at,
+            itype: tname,
+            price,
+        });
+    }
+
+    /// One evaluation tick: interrupt out-bid spot instances, then fill
+    /// any weighted deficit per the fleet's [`AllocationStrategy`].  The
+    /// coordinator calls this on every market tick (once per simulated
+    /// minute).
     pub fn evaluate_fleets(&mut self, now: SimTime) -> Vec<FleetEvent> {
         let mut events = Vec::new();
 
-        // 1. Interruptions: price > bid.
+        // 1. Interruptions: pool price > effective bid.  On-demand
+        //    instances are immune.
         let mut to_interrupt: Vec<(InstanceId, f64)> = Vec::new();
         for inst in self.instances.values() {
-            if !inst.is_active() {
+            if !inst.is_active() || inst.lifecycle != Lifecycle::Spot {
                 continue;
             }
             let price = self.market.price_at(inst.itype.name, now);
-            if price > inst.bid {
+            if price > inst.bid * f64::from(inst.weight) {
                 to_interrupt.push((inst.id, price));
             }
         }
@@ -231,7 +665,7 @@ impl Ec2 {
             events.push(FleetEvent::InstanceInterrupted { id, price });
         }
 
-        // 2. Fulfillment toward target, cheapest-eligible-pool-first.
+        // 2. Fulfillment toward the weighted target.
         let fleet_ids: Vec<FleetId> = {
             let mut v: Vec<FleetId> = self
                 .fleets
@@ -243,64 +677,156 @@ impl Ec2 {
             v
         };
         for fid in fleet_ids {
-            let (target, bid, types) = {
+            let (target, bid, slots, allocation, od_base) = {
                 let f = &self.fleets[&fid];
                 (
                     f.spec.target_capacity,
                     f.spec.bid_hourly,
-                    f.spec.allowed_types.clone(),
+                    f.spec.slots.clone(),
+                    f.spec.allocation,
+                    f.spec.on_demand_base,
                 )
             };
-            let active = self.active_count(fid);
+            // Distinct pools in slot order (first occurrence's weight wins).
+            let mut pools_spec: Vec<InstanceSlot> = Vec::new();
+            for s in slots {
+                if !pools_spec.iter().any(|p| p.name == s.name) {
+                    pools_spec.push(s);
+                }
+            }
+
+            // 2a. On-demand base floor: fill from the cheapest per-unit
+            //     on-demand pool; capacity is unconstrained.
+            let od_floor = od_base.min(target);
+            let od_active = self.active_weight_of(fid, Lifecycle::OnDemand);
+            if od_active < od_floor {
+                let mut od_deficit = od_floor - od_active;
+                let pick = pools_spec
+                    .iter()
+                    .min_by(|a, b| {
+                        let pa = per_unit(
+                            instance_type(&a.name).unwrap().on_demand_hourly,
+                            a.weight,
+                        );
+                        let pb = per_unit(
+                            instance_type(&b.name).unwrap().on_demand_hourly,
+                            b.weight,
+                        );
+                        pa.partial_cmp(&pb).unwrap().then(a.name.cmp(&b.name))
+                    })
+                    .cloned();
+                if let Some(slot) = pick {
+                    let ty = instance_type(&slot.name).unwrap();
+                    while od_deficit > 0 {
+                        self.launch(
+                            fid,
+                            ty.name,
+                            slot.weight,
+                            bid,
+                            Lifecycle::OnDemand,
+                            ty.on_demand_hourly,
+                            now,
+                            &mut events,
+                        );
+                        od_deficit = od_deficit.saturating_sub(slot.weight);
+                    }
+                }
+            }
+
+            // 2b. Spot deficit per the allocation strategy.
+            let active = self.active_weight(fid);
             if active >= target {
                 continue;
             }
             let mut deficit = target - active;
-            // Rank eligible pools by current price.
-            let mut pools: Vec<(&'static str, f64, u32)> = types
+            struct Pool {
+                name: &'static str,
+                weight: u32,
+                price: f64,
+                free: u32,
+            }
+            let mut pools: Vec<Pool> = pools_spec
                 .iter()
-                .filter_map(|t| {
-                    let ty = instance_type(t)?;
-                    let price = self.market.price_at(ty.name, now);
-                    let free = self.market.free_capacity(ty.name, now);
-                    (price <= bid && free > 0).then_some((ty.name, price, free))
+                .filter_map(|s| {
+                    let ty = instance_type(&s.name)?;
+                    let snap = self.market.snapshot(ty.name, now);
+                    (snap.price <= bid * f64::from(s.weight) && snap.free > 0).then_some(
+                        Pool {
+                            name: ty.name,
+                            weight: s.weight,
+                            price: snap.price,
+                            free: snap.free,
+                        },
+                    )
                 })
                 .collect();
-            pools.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            for (tname, price, free) in pools {
-                if deficit == 0 {
-                    break;
-                }
-                let take = deficit.min(free);
-                for _ in 0..take {
-                    self.next_instance += 1;
-                    let id = self.next_instance;
-                    let ready_at =
-                        now + Self::fulfillment_delay(&mut self.rng, bid, price);
-                    self.instances.insert(
-                        id,
-                        Instance {
-                            id,
-                            itype: instance_type(tname).unwrap(),
-                            fleet: fid,
-                            state: InstanceState::Pending,
-                            requested_at: now,
-                            running_at: None,
-                            terminated_at: None,
-                            termination_reason: None,
-                            crashed: false,
+            match allocation {
+                AllocationStrategy::LowestPrice => pools.sort_by(|a, b| {
+                    per_unit(a.price, a.weight)
+                        .partial_cmp(&per_unit(b.price, b.weight))
+                        .unwrap()
+                        .then(a.name.cmp(b.name))
+                }),
+                AllocationStrategy::CapacityOptimized => pools.sort_by(|a, b| {
+                    b.free
+                        .cmp(&a.free)
+                        .then(
+                            per_unit(a.price, a.weight)
+                                .partial_cmp(&per_unit(b.price, b.weight))
+                                .unwrap(),
+                        )
+                        .then(a.name.cmp(b.name))
+                }),
+                // Diversified keeps slot order and spreads below.
+                AllocationStrategy::Diversified => {}
+            }
+            if allocation == AllocationStrategy::Diversified {
+                let mut progressed = true;
+                while deficit > 0 && progressed {
+                    progressed = false;
+                    for p in pools.iter_mut() {
+                        if deficit == 0 {
+                            break;
+                        }
+                        if p.free == 0 {
+                            continue;
+                        }
+                        p.free -= 1;
+                        self.launch(
+                            fid,
+                            p.name,
+                            p.weight,
                             bid,
-                            name_tag: None,
-                        },
-                    );
-                    events.push(FleetEvent::InstanceRequested {
-                        id,
-                        ready_at,
-                        itype: tname,
-                        price,
-                    });
+                            Lifecycle::Spot,
+                            p.price,
+                            now,
+                            &mut events,
+                        );
+                        deficit = deficit.saturating_sub(p.weight);
+                        progressed = true;
+                    }
                 }
-                deficit -= take;
+            } else {
+                for p in &pools {
+                    if deficit == 0 {
+                        break;
+                    }
+                    let need = (deficit + p.weight - 1) / p.weight;
+                    let take = need.min(p.free);
+                    for _ in 0..take {
+                        self.launch(
+                            fid,
+                            p.name,
+                            p.weight,
+                            bid,
+                            Lifecycle::Spot,
+                            p.price,
+                            now,
+                            &mut events,
+                        );
+                    }
+                    deficit = deficit.saturating_sub(take * p.weight);
+                }
             }
             if deficit > 0 {
                 events.push(FleetEvent::CapacityUnavailable {
@@ -336,15 +862,18 @@ impl Ec2 {
         inst.terminated_at = Some(now);
         inst.termination_reason = Some(reason);
         let itype = inst.itype.name;
+        let od_hourly = inst.itype.on_demand_hourly;
+        let lifecycle = inst.lifecycle;
         // AWS bills Linux spot per-second with a 60-second minimum: even
         // a boot-poll-shutdown instance costs a billing minute (this is
         // what makes unmonitored churn expensive — experiment T3/T7).
         if let Some(start) = inst.running_at {
             let end = now.max(start + crate::sim::MINUTE);
-            let cost = self.market.cost_integral(itype, start, end);
+            let cost = billed_cost(&mut self.market, itype, od_hourly, lifecycle, start, end);
             self.cost_log.push(CostRecord {
                 instance: id,
                 itype,
+                lifecycle,
                 span: (start, end),
                 cost_usd: cost,
                 reason,
@@ -360,16 +889,73 @@ impl Ec2 {
     /// Bill any still-running instances up to `now` (end-of-run report for
     /// scenarios that never tear down).
     pub fn accrued_cost_of_active(&mut self, now: SimTime) -> f64 {
-        let spans: Vec<(&'static str, SimTime, SimTime)> = self
-            .instances
-            .values()
+        let spans: Vec<(&'static str, Lifecycle, f64, SimTime, SimTime)> = self
+            .all_instances()
+            .into_iter()
             .filter(|i| i.is_active())
-            .filter_map(|i| i.billable_span(now).map(|(s, e)| (i.itype.name, s, e)))
+            .filter_map(|i| {
+                i.billable_span(now)
+                    .map(|(s, e)| (i.itype.name, i.lifecycle, i.itype.on_demand_hourly, s, e))
+            })
             .collect();
         spans
             .into_iter()
-            .map(|(t, s, e)| self.market.cost_integral(t, s, e))
+            .map(|(t, lc, od, s, e)| billed_cost(&mut self.market, t, od, lc, s, e))
             .sum()
+    }
+
+    /// Per-pool slice of everything this account's fleets did: launches,
+    /// interruptions, billed machine-hours and dollars (terminated
+    /// lifetimes plus accrual of still-running instances up to `now`).
+    /// Rows are sorted by pool label, so the output is deterministic.
+    pub fn pool_breakdown(&mut self, now: SimTime) -> Vec<PoolBreakdown> {
+        let mut map: BTreeMap<String, PoolBreakdown> = BTreeMap::new();
+        // One pass over the instance table (sorted by id so f64
+        // accumulation order is replay-stable): launch/interruption
+        // counters, plus the billable spans of still-active instances.
+        let mut active: Vec<(String, &'static str, Lifecycle, f64, SimTime, SimTime)> =
+            Vec::new();
+        for inst in self.all_instances() {
+            let key = pool_label(inst.itype.name, inst.lifecycle);
+            if inst.is_active() {
+                if let Some((s, e)) = inst.billable_span(now) {
+                    active.push((
+                        key.clone(),
+                        inst.itype.name,
+                        inst.lifecycle,
+                        inst.itype.on_demand_hourly,
+                        s,
+                        e,
+                    ));
+                }
+            }
+            let e = map
+                .entry(key.clone())
+                .or_insert_with(|| PoolBreakdown::empty(key));
+            e.launched += 1;
+            if inst.termination_reason == Some(TerminationReason::SpotInterruption) {
+                e.interrupted += 1;
+            }
+        }
+        // Billed lifetimes (insertion order: termination order).
+        for rec in &self.cost_log {
+            let key = pool_label(rec.itype, rec.lifecycle);
+            let e = map
+                .entry(key.clone())
+                .or_insert_with(|| PoolBreakdown::empty(key));
+            e.machine_hours += (rec.span.1 - rec.span.0) as f64 / crate::sim::HOUR as f64;
+            e.cost_usd += rec.cost_usd;
+        }
+        // Accrue the still-running spans collected above.
+        for (key, tname, lc, od, s, e) in active {
+            let cost = billed_cost(&mut self.market, tname, od, lc, s, e);
+            let entry = map
+                .entry(key.clone())
+                .or_insert_with(|| PoolBreakdown::empty(key));
+            entry.machine_hours += (e - s) as f64 / crate::sim::HOUR as f64;
+            entry.cost_usd += cost;
+        }
+        map.into_values().collect()
     }
 
     /// All instances (sorted by id) — used by reports and tests.
@@ -391,11 +977,14 @@ mod tests {
     }
 
     fn spec(n: u32, bid: f64) -> SpotFleetSpec {
-        SpotFleetSpec {
-            target_capacity: n,
-            bid_hourly: bid,
-            allowed_types: vec!["m5.large".into()],
-        }
+        SpotFleetSpec::homogeneous(n, bid, "m5.large")
+    }
+
+    fn count_by_type(e: &Ec2, tname: &str) -> usize {
+        e.all_instances()
+            .iter()
+            .filter(|i| i.itype.name == tname && i.is_active())
+            .count()
     }
 
     #[test]
@@ -409,6 +998,7 @@ mod tests {
             .count();
         assert_eq!(launched, 8);
         assert_eq!(e.active_count(fid), 8);
+        assert_eq!(e.active_weight(fid), 8);
         // Second tick: no extra launches.
         assert!(e.evaluate_fleets(MINUTE).is_empty());
     }
@@ -433,7 +1023,8 @@ mod tests {
             e.request_spot_fleet(SpotFleetSpec {
                 target_capacity: 50,
                 bid_hourly: bid,
-                allowed_types: vec!["m5.large".into()],
+                slots: vec![InstanceSlot::new("m5.large")],
+                ..Default::default()
             });
             let evs = e.evaluate_fleets(0);
             let delays: Vec<f64> = evs
@@ -499,6 +1090,7 @@ mod tests {
         assert_eq!(e.cost_log().len(), 1);
         let rec = &e.cost_log()[0];
         assert_eq!(rec.reason, TerminationReason::SelfShutdown);
+        assert_eq!(rec.lifecycle, Lifecycle::Spot);
         // ~59 minutes of m5.large spot ≈ base price
         assert!(rec.cost_usd > 0.0 && rec.cost_usd < 0.096);
     }
@@ -560,7 +1152,11 @@ mod tests {
         let fid = e.request_spot_fleet(SpotFleetSpec {
             target_capacity: 2,
             bid_hourly: 0.50,
-            allowed_types: vec!["m5.2xlarge".into(), "m5.large".into()],
+            slots: vec![
+                InstanceSlot::new("m5.2xlarge"),
+                InstanceSlot::new("m5.large"),
+            ],
+            ..Default::default()
         });
         e.evaluate_fleets(0);
         for id in e.instances_in_state(fid, InstanceState::Pending) {
@@ -570,13 +1166,303 @@ mod tests {
     }
 
     #[test]
+    fn diversified_spreads_across_pools() {
+        let mut e = ec2(Volatility::Low, 19);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 9,
+            bid_hourly: 0.50,
+            slots: vec![
+                InstanceSlot::new("m5.large"),
+                InstanceSlot::new("c5.xlarge"),
+                InstanceSlot::new("r5.xlarge"),
+            ],
+            allocation: AllocationStrategy::Diversified,
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        assert_eq!(e.active_weight(fid), 9);
+        assert_eq!(count_by_type(&e, "m5.large"), 3);
+        assert_eq!(count_by_type(&e, "c5.xlarge"), 3);
+        assert_eq!(count_by_type(&e, "r5.xlarge"), 3);
+    }
+
+    #[test]
+    fn capacity_optimized_prefers_deep_pools() {
+        // m5.large's pool (400) dwarfs m5.12xlarge's (24): capacity-
+        // optimized allocation must go where the machines are.
+        let mut e = ec2(Volatility::Low, 21);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 4,
+            bid_hourly: 2.50, // both pools eligible
+            slots: vec![
+                InstanceSlot::new("m5.12xlarge"),
+                InstanceSlot::new("m5.large"),
+            ],
+            allocation: AllocationStrategy::CapacityOptimized,
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        assert_eq!(e.active_weight(fid), 4);
+        assert_eq!(count_by_type(&e, "m5.large"), 4);
+        assert_eq!(count_by_type(&e, "m5.12xlarge"), 0);
+    }
+
+    #[test]
+    fn weighted_slots_fulfill_in_units_not_instances() {
+        let mut e = ec2(Volatility::Low, 23);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 5,
+            bid_hourly: 0.10, // per unit; m5.xlarge effective bid 0.20
+            slots: vec![InstanceSlot {
+                name: "m5.xlarge".into(),
+                weight: 2,
+            }],
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        // ceil(5 units / weight 2) = 3 instances = 6 units.
+        assert_eq!(e.active_count(fid), 3);
+        assert_eq!(e.active_weight(fid), 6);
+        // Overshoot is bounded by one slot's weight.
+        assert!(e.active_weight(fid) < 5 + 2);
+        // And stays put on the next tick.
+        assert!(e.evaluate_fleets(MINUTE).is_empty());
+    }
+
+    #[test]
+    fn on_demand_base_survives_any_market() {
+        let mut e = ec2(Volatility::High, 25);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 4,
+            bid_hourly: 0.001, // spot hopeless: only the od base launches
+            slots: vec![InstanceSlot::new("m5.large")],
+            on_demand_base: 2,
+            ..Default::default()
+        });
+        let evs = e.evaluate_fleets(0);
+        let launched: Vec<InstanceId> = evs
+            .iter()
+            .filter_map(|ev| match ev {
+                FleetEvent::InstanceRequested { id, .. } => Some(*id),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(launched.len(), 2);
+        assert!(matches!(
+            evs.last(),
+            Some(FleetEvent::CapacityUnavailable { missing: 2, .. })
+        ));
+        for &id in &launched {
+            assert_eq!(e.instance(id).unwrap().lifecycle, Lifecycle::OnDemand);
+            e.mark_running(id, MINUTE);
+        }
+        // A week of high volatility: the on-demand floor is never
+        // interrupted.
+        for k in 1..(7 * 24 * 60) {
+            let evs = e.evaluate_fleets(k * MINUTE);
+            assert!(
+                !evs.iter()
+                    .any(|ev| matches!(ev, FleetEvent::InstanceInterrupted { .. })),
+                "on-demand instance interrupted at tick {k}"
+            );
+        }
+        assert_eq!(e.active_count(fid), 2);
+    }
+
+    #[test]
+    fn on_demand_bills_flat_catalog_rate() {
+        let mut e = ec2(Volatility::High, 27);
+        let _fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 1,
+            bid_hourly: 0.001,
+            slots: vec![InstanceSlot::new("m5.large")],
+            on_demand_base: 1,
+            ..Default::default()
+        });
+        let evs = e.evaluate_fleets(0);
+        let id = evs
+            .iter()
+            .find_map(|ev| match ev {
+                FleetEvent::InstanceRequested { id, .. } => Some(*id),
+                _ => None,
+            })
+            .unwrap();
+        e.mark_running(id, 0);
+        e.terminate(id, TerminationReason::SelfShutdown, 2 * HOUR);
+        let rec = &e.cost_log()[0];
+        assert_eq!(rec.lifecycle, Lifecycle::OnDemand);
+        // Exactly 2h × $0.096/h, independent of the (spiky) spot path.
+        assert!((rec.cost_usd - 0.192).abs() < 1e-9, "cost={}", rec.cost_usd);
+    }
+
+    #[test]
+    fn scale_in_downscales_cheapest_pool_last() {
+        let mut e = ec2(Volatility::Low, 29);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 4,
+            bid_hourly: 0.50,
+            slots: vec![
+                InstanceSlot::new("m5.large"),  // spot ~0.030/h
+                InstanceSlot::new("c5.xlarge"), // spot ~0.054/h
+            ],
+            allocation: AllocationStrategy::Diversified,
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        assert_eq!(count_by_type(&e, "m5.large"), 2);
+        assert_eq!(count_by_type(&e, "c5.xlarge"), 2);
+        let killed = e.scale_in(fid, 2, 5 * MINUTE);
+        assert_eq!(killed.len(), 2);
+        assert_eq!(e.active_weight(fid), 2);
+        assert_eq!(e.fleet_target(fid), 2);
+        // The expensive pool died; the cheap one survived.
+        assert_eq!(count_by_type(&e, "c5.xlarge"), 0);
+        assert_eq!(count_by_type(&e, "m5.large"), 2);
+        for id in killed {
+            assert_eq!(
+                e.instance(id).unwrap().termination_reason,
+                Some(TerminationReason::FleetDownscale)
+            );
+        }
+        // No relaunch: target was lowered too.
+        assert!(e.evaluate_fleets(6 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn scale_in_preserves_on_demand_floor() {
+        // The od base is the most expensive slice per hour, but killing
+        // it would just make evaluate_fleets rebuy it (churn + a wasted
+        // billing minute), so scale_in must keep it.
+        let mut e = ec2(Volatility::Low, 33);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 4,
+            bid_hourly: 0.50,
+            slots: vec![InstanceSlot::new("m5.large")],
+            on_demand_base: 2,
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        assert_eq!(e.active_weight(fid), 4);
+        let killed = e.scale_in(fid, 2, 5 * MINUTE);
+        // Both spot instances died (od bills $0.096/h > spot ~$0.03/h,
+        // so od would otherwise rank first); the od floor survived.
+        assert_eq!(killed.len(), 2);
+        let survivors: Vec<Lifecycle> = e
+            .all_instances()
+            .iter()
+            .filter(|i| i.is_active())
+            .map(|i| i.lifecycle)
+            .collect();
+        assert_eq!(survivors, vec![Lifecycle::OnDemand, Lifecycle::OnDemand]);
+        // Stable: the next tick neither rebuys nor interrupts.
+        assert!(e.evaluate_fleets(6 * MINUTE).is_empty());
+        // Scaling BELOW the od base clamps the floor to the new target:
+        // one od instance is released (it would not be rebought, since
+        // evaluate's floor is od_base.min(target) = 1).
+        let killed = e.scale_in(fid, 1, 7 * MINUTE);
+        assert_eq!(killed.len(), 1);
+        assert_eq!(e.active_weight(fid), 1);
+        assert!(e.evaluate_fleets(8 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn scale_in_to_machines_budgets_instances_not_units() {
+        // Three weight-3 machines = 9 units.  A machine budget of 2 must
+        // keep 2 machines (6 units), not 2 units.
+        let mut e = ec2(Volatility::Low, 35);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 9,
+            bid_hourly: 0.10, // per unit: m5.xlarge:3 effective bid 0.30
+            slots: vec![InstanceSlot {
+                name: "m5.xlarge".into(),
+                weight: 3,
+            }],
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        assert_eq!(e.active_count(fid), 3);
+        let killed = e.scale_in_to_machines(fid, 2, 5 * MINUTE);
+        assert_eq!(killed.len(), 1);
+        assert_eq!(e.active_count(fid), 2);
+        assert_eq!(e.active_weight(fid), 6);
+        // Requested capacity follows the survivors: no relaunch.
+        assert_eq!(e.fleet_target(fid), 6);
+        assert!(e.evaluate_fleets(6 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn pool_breakdown_slices_by_pool_and_lifecycle() {
+        let mut e = ec2(Volatility::Low, 31);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 4,
+            bid_hourly: 0.50,
+            slots: vec![
+                InstanceSlot::new("m5.large"),
+                InstanceSlot::new("c5.xlarge"),
+            ],
+            allocation: AllocationStrategy::Diversified,
+            on_demand_base: 1,
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        e.cancel_fleet(fid, 2 * HOUR);
+        let pools = e.pool_breakdown(2 * HOUR);
+        let labels: Vec<&str> = pools.iter().map(|p| p.pool.as_str()).collect();
+        assert_eq!(labels, vec!["c5.xlarge", "m5.large", "m5.large/on-demand"]);
+        let total_launched: u64 = pools.iter().map(|p| p.launched).sum();
+        assert_eq!(total_launched, 4);
+        for p in &pools {
+            assert!(p.cost_usd > 0.0, "{p:?}");
+            assert!(p.machine_hours > 0.0, "{p:?}");
+        }
+        // Breakdown total matches the cost log total.
+        let log_total: f64 = e.cost_log().iter().map(|r| r.cost_usd).sum();
+        let pool_total: f64 = pools.iter().map(|p| p.cost_usd).sum();
+        assert!((log_total - pool_total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allocation_strategy_names_roundtrip() {
+        for a in AllocationStrategy::ALL {
+            assert_eq!(AllocationStrategy::parse(a.name()), Some(a));
+        }
+        assert_eq!(AllocationStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn instance_slot_parse_and_render() {
+        let s = InstanceSlot::parse("m5.xlarge").unwrap();
+        assert_eq!((s.name.as_str(), s.weight), ("m5.xlarge", 1));
+        assert_eq!(s.render(), "m5.xlarge");
+        let s = InstanceSlot::parse(" r5.xlarge : 3 ").unwrap();
+        assert_eq!((s.name.as_str(), s.weight), ("r5.xlarge", 3));
+        assert_eq!(s.render(), "r5.xlarge:3");
+        assert!(InstanceSlot::parse("m5.large:0").is_err());
+        assert!(InstanceSlot::parse("m5.large:x").is_err());
+        assert!(InstanceSlot::parse(":2").is_err());
+    }
+
+    #[test]
     fn unknown_type_panics() {
         let mut e = ec2(Volatility::Low, 17);
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             e.request_spot_fleet(SpotFleetSpec {
                 target_capacity: 1,
                 bid_hourly: 1.0,
-                allowed_types: vec!["quantum.9000xl".into()],
+                slots: vec![InstanceSlot::new("quantum.9000xl")],
+                ..Default::default()
             })
         }));
         assert!(r.is_err());

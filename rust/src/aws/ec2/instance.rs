@@ -7,6 +7,18 @@ use super::pricing::InstanceType;
 /// Opaque instance identifier (`i-000042` in logs).
 pub type InstanceId = u64;
 
+/// How an instance is bought, which decides how it is billed and whether
+/// the spot market can reclaim it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lifecycle {
+    /// Spot: billed from the per-pool price walk, interrupted whenever
+    /// the pool price rises above the fleet's per-unit bid × weight.
+    Spot,
+    /// On-demand: billed flat at the catalog hourly price, never
+    /// interrupted (the fleet's `ON_DEMAND_BASE` floor).
+    OnDemand,
+}
+
 /// Why an instance stopped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TerminationReason {
@@ -50,8 +62,13 @@ pub struct Instance {
     /// Set when a simulated crash has made the machine a zombie: it still
     /// bills but its containers stop publishing work/CPU.
     pub crashed: bool,
-    /// The bid this instance was launched under (USD/h).
+    /// The per-unit bid this instance was launched under (USD/h); its
+    /// effective bid is `bid × weight`.
     pub bid: f64,
+    /// Weighted-capacity units this instance contributes to its fleet.
+    pub weight: u32,
+    /// Spot (interruptible, market-billed) or on-demand (flat-billed).
+    pub lifecycle: Lifecycle,
     /// Name tag assigned by the first Docker placed on it (paper: "When a
     /// Docker container gets placed it gives the instance it's on its own
     /// name").
@@ -90,6 +107,8 @@ mod tests {
             termination_reason: None,
             crashed: false,
             bid: 0.05,
+            weight: 1,
+            lifecycle: Lifecycle::Spot,
             name_tag: None,
         }
     }

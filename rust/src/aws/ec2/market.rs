@@ -1,17 +1,27 @@
-//! Spot market: deterministic per-type price paths + capacity pools.
+//! Spot market: deterministic per-pool price paths + capacity pools.
 //!
-//! Each instance type gets an independent price path: a mean-reverting
-//! random walk in log-price around `spot_base_fraction × on_demand`, with
-//! occasional demand spikes that multiply the price for a while (these
-//! are what interrupt fleets bidding near the base).  Paths are generated
-//! lazily in fixed 60-second steps from a per-type forked RNG, so
-//! `price_at(type, t)` is O(1) amortized, identical across replays, and
-//! independent of query order.
+//! A *capacity pool* is one instance type in the Fleet file's single
+//! subnet/AZ — exactly AWS's (type, AZ) pool granularity for a
+//! one-subnet fleet request.  Each pool gets an independent price path: a
+//! mean-reverting random walk in log-price around
+//! `spot_base_fraction × on_demand`, with occasional demand spikes that
+//! multiply the price for a while (these are what interrupt fleets
+//! bidding near the base).  Paths are generated lazily in fixed
+//! 60-second steps from a per-pool forked RNG, so `price_at(type, t)` is
+//! O(1) amortized, identical across replays, and independent of query
+//! order.  Because the walks are independent, volatility hits pools
+//! *unevenly* — which is what makes [`Diversified`] allocation worth
+//! something (see [`super::fleet::AllocationStrategy`]).
 //!
 //! Capacity pools model the "if there is limited capacity for your
 //! requested configuration" behaviour: a pool's free capacity shrinks
 //! during spikes (other bidders took the machines), which delays fleet
-//! fulfillment even when the bid clears the price.
+//! fulfillment even when the bid clears the price.  [`snapshot`] exposes
+//! a pool's joint (price, free capacity) state to the allocation
+//! strategies in one query.
+//!
+//! [`Diversified`]: super::fleet::AllocationStrategy::Diversified
+//! [`snapshot`]: SpotMarket::snapshot
 
 use std::collections::HashMap;
 
@@ -22,6 +32,27 @@ use super::pricing::{instance_type, InstanceType};
 
 /// Price-path step length.
 pub const STEP: SimTime = MINUTE;
+
+/// Machines left in a pool of `capacity` when `used` fraction is taken
+/// by outside demand — the one place the capacity model lives, shared by
+/// [`SpotMarket::free_capacity`] and [`SpotMarket::snapshot`].
+fn free_machines(capacity: u32, used: f64) -> u32 {
+    (f64::from(capacity) * (1.0 - used)).floor().max(0.0) as u32
+}
+
+/// One capacity pool's market state at an instant: everything an
+/// allocation strategy ranks pools by.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolSnapshot {
+    /// The pool's instance type (pool == type for a one-subnet fleet).
+    pub itype: &'static str,
+    /// Published spot price, USD per instance-hour.
+    pub price: f64,
+    /// Machines currently free in the pool.
+    pub free: u32,
+    /// Long-run base price the walk mean-reverts to.
+    pub base: f64,
+}
 
 /// Volatility presets used by the experiments (T5 sweeps these).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -155,8 +186,24 @@ impl SpotMarket {
         let idx = (t / STEP) as usize;
         let path = self.path(ty);
         path.extend_to(idx, vol);
-        let used = path.pool_used[idx];
-        ((f64::from(ty.pool_capacity)) * (1.0 - used)).floor().max(0.0) as u32
+        free_machines(ty.pool_capacity, path.pool_used[idx])
+    }
+
+    /// Joint (price, free-capacity) view of one pool at time `t` — a
+    /// single path access where `price_at` + `free_capacity` would do
+    /// two.  Allocation strategies rank these.
+    pub fn snapshot(&mut self, type_name: &str, t: SimTime) -> PoolSnapshot {
+        let ty = instance_type(type_name).expect("unknown instance type");
+        let vol = self.vol;
+        let idx = (t / STEP) as usize;
+        let path = self.path(ty);
+        path.extend_to(idx, vol);
+        PoolSnapshot {
+            itype: ty.name,
+            price: path.steps[idx],
+            free: free_machines(ty.pool_capacity, path.pool_used[idx]),
+            base: path.base,
+        }
     }
 
     /// Integrate the price path over [start, end): instance-hours × $/h.
@@ -263,6 +310,49 @@ mod tests {
         let max = *caps.iter().max().unwrap();
         assert!(min < ty.pool_capacity / 4, "min={min}");
         assert!(max > ty.pool_capacity / 2, "max={max}");
+    }
+
+    #[test]
+    fn snapshot_agrees_with_scalar_queries() {
+        let mut m = SpotMarket::new(29, Volatility::Medium);
+        for i in 0..200 {
+            let t = i * STEP;
+            let s = m.snapshot("c5.2xlarge", t);
+            assert_eq!(s.price, m.price_at("c5.2xlarge", t));
+            assert_eq!(s.free, m.free_capacity("c5.2xlarge", t));
+            assert_eq!(s.itype, "c5.2xlarge");
+        }
+    }
+
+    #[test]
+    fn pools_spike_unevenly() {
+        // The premise of Diversified allocation: at high volatility, the
+        // instants where one pool is spiking are mostly NOT the instants
+        // where another is.
+        let mut m = SpotMarket::new(31, Volatility::High);
+        let spiking = |m: &mut SpotMarket, ty: &str, t: SimTime| {
+            let ty_ = instance_type(ty).unwrap();
+            m.price_at(ty, t) > ty_.spot_base() * 1.5
+        };
+        let (mut a_only, mut both, mut a_any) = (0u32, 0u32, 0u32);
+        for i in 0..5_000 {
+            let t = i * STEP;
+            let a = spiking(&mut m, "m5.large", t);
+            let b = spiking(&mut m, "c5.xlarge", t);
+            if a {
+                a_any += 1;
+                if b {
+                    both += 1;
+                } else {
+                    a_only += 1;
+                }
+            }
+        }
+        assert!(a_any > 0, "high volatility never spiked");
+        assert!(
+            a_only > both,
+            "independent pools should mostly spike alone: alone={a_only} together={both}"
+        );
     }
 
     #[test]

@@ -8,18 +8,24 @@
 //! reproduces each of those behaviours:
 //!
 //! * [`pricing`]  — the instance-type catalog (vCPU / memory / on-demand $)
-//! * [`market`]   — deterministic per-type spot price paths (mean-reverting
-//!   log-walk with spikes) and finite capacity pools
-//! * [`instance`] — instance lifecycle (pending → running → terminated)
-//! * [`fleet`]    — SpotFleetRequest evaluation: allocation, fulfillment
-//!   latency, interruption, replacement, target-capacity modification
+//! * [`market`]   — deterministic per-pool spot price paths (mean-reverting
+//!   log-walk with spikes) and finite capacity pools; one pool per
+//!   instance type for the Fleet file's single subnet
+//! * [`instance`] — instance lifecycle (pending → running → terminated),
+//!   spot vs. on-demand
+//! * [`fleet`]    — SpotFleetRequest evaluation: heterogeneous pools with
+//!   weighted capacity, [`AllocationStrategy`], on-demand base,
+//!   fulfillment latency, interruption, replacement, target-capacity
+//!   modification, per-pool cost/interruption breakdown
 
 pub mod fleet;
 pub mod instance;
 pub mod market;
 pub mod pricing;
 
-pub use fleet::{Ec2, FleetEvent, FleetId, SpotFleetSpec};
-pub use instance::{Instance, InstanceId, InstanceState, TerminationReason};
-pub use market::{SpotMarket, Volatility};
+pub use fleet::{
+    AllocationStrategy, Ec2, FleetEvent, FleetId, InstanceSlot, PoolBreakdown, SpotFleetSpec,
+};
+pub use instance::{Instance, InstanceId, InstanceState, Lifecycle, TerminationReason};
+pub use market::{PoolSnapshot, SpotMarket, Volatility};
 pub use pricing::{instance_type, InstanceType, INSTANCE_TYPES};

@@ -32,7 +32,22 @@ pub const INSTANCE_TYPES: &[InstanceType] = &[
     InstanceType { name: "r5.xlarge",   vcpus: 4,  memory_mb: 32_768,  on_demand_hourly: 0.252, spot_base_fraction: 0.32, pool_capacity: 150 },
 ];
 
+impl InstanceType {
+    /// Long-run average spot price (USD/h): the level the per-pool price
+    /// walk mean-reverts to.
+    pub fn spot_base(&self) -> f64 {
+        self.on_demand_hourly * self.spot_base_fraction
+    }
+}
+
 /// Look up a type by name.
+///
+/// ```
+/// use ds_rs::aws::ec2::instance_type;
+/// let t = instance_type("m5.xlarge").unwrap();
+/// assert_eq!((t.vcpus, t.memory_mb), (4, 16_384));
+/// assert!(instance_type("warp9.mega").is_none());
+/// ```
 pub fn instance_type(name: &str) -> Option<&'static InstanceType> {
     INSTANCE_TYPES.iter().find(|t| t.name == name)
 }

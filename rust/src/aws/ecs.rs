@@ -19,7 +19,28 @@ use std::collections::HashMap;
 
 use crate::sim::SimTime;
 
-use super::ec2::InstanceId;
+use super::ec2::{InstanceId, InstanceType};
+
+/// Containers of shape (`cpu_shares`, `memory_mb`) that fit on one
+/// instance of `ty` — the per-type bin-packing bound the scheduler
+/// converges to.  With heterogeneous fleets there is no single global
+/// containers-per-machine constant: every pool packs differently, and
+/// `TASKS_PER_MACHINE` is only the *intent* (the paper's T9 caveat).
+///
+/// ```
+/// use ds_rs::aws::ec2::instance_type;
+/// use ds_rs::aws::ecs::containers_that_fit;
+/// // 2048-share / 7.5 GB containers: an m5.xlarge fits 2 (CPU-bound),
+/// // a c5.xlarge only 1 (memory-bound), an m5.large 1.
+/// assert_eq!(containers_that_fit(2048, 7_500, instance_type("m5.xlarge").unwrap()), 2);
+/// assert_eq!(containers_that_fit(2048, 7_500, instance_type("c5.xlarge").unwrap()), 1);
+/// assert_eq!(containers_that_fit(2048, 7_500, instance_type("m5.large").unwrap()), 1);
+/// ```
+pub fn containers_that_fit(cpu_shares: u32, memory_mb: u64, ty: &InstanceType) -> u32 {
+    let by_cpu = (ty.vcpus * 1024) / cpu_shares.max(1);
+    let by_mem = u32::try_from(ty.memory_mb / memory_mb.max(1)).unwrap_or(u32::MAX);
+    by_cpu.min(by_mem)
+}
 
 /// Container identifier.
 pub type ContainerId = u64;
@@ -455,6 +476,28 @@ mod tests {
             })
             .unwrap_err();
         assert!(matches!(err, EcsError::NoSuchTaskDef(_)));
+    }
+
+    #[test]
+    fn containers_that_fit_matches_scheduler() {
+        // The closed-form bound agrees with what place_tasks actually
+        // packs, across container shapes and machine types.
+        use crate::aws::ec2::instance_type;
+        let shapes = [(1024u32, 2_048u64), (2048, 7_500), (4096, 15_360), (512, 1_024)];
+        let machines = ["m5.large", "m5.xlarge", "m5.2xlarge", "c5.xlarge", "r5.xlarge"];
+        for (cpu, mem) in shapes {
+            for m in machines {
+                let ty = instance_type(m).unwrap();
+                let mut e = ecs_with(cpu, mem, 1_000);
+                e.register_instance("default", 1, ty.vcpus, ty.memory_mb).unwrap();
+                let placed = e.place_tasks(0).len() as u32;
+                assert_eq!(
+                    placed,
+                    containers_that_fit(cpu, mem, ty),
+                    "shape ({cpu}, {mem}) on {m}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -96,6 +96,19 @@ impl Args {
         }
     }
 
+    /// Flags present on the command line that are not in `known`, in
+    /// sorted order.  Commands with a declared flag table use this to
+    /// reject typos instead of silently ignoring them — which also
+    /// guarantees the table (and any help text rendered from it) covers
+    /// every flag the command actually reads.
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.flags
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+
     /// Strict comma-list parse: absent flag -> `Ok(None)`; present with
     /// no value or any unparseable item -> `Err`.
     pub fn try_parse_list<T: std::str::FromStr>(
@@ -188,6 +201,13 @@ mod tests {
             d.try_parse_list::<u32>("machines"),
             Err("missing value for --machines".to_string())
         );
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = parse("sweep --seeds 4 --machnies 2 --json");
+        assert_eq!(a.unknown_flags(&["seeds", "machines", "json"]), vec!["machnies"]);
+        assert!(a.unknown_flags(&["seeds", "machnies", "json"]).is_empty());
     }
 
     #[test]

@@ -45,7 +45,9 @@ pub struct AppConfig {
     pub cluster_machines: u32,
     /// TASKS_PER_MACHINE: Docker containers per machine.
     pub tasks_per_machine: u32,
-    /// MACHINE_TYPE: acceptable instance types, cheapest-first allocation.
+    /// MACHINE_TYPE: acceptable instance types (each weight 1).  The
+    /// Fleet file's `INSTANCE_TYPES` key overrides this list when
+    /// non-empty, adding per-type capacity weights.
     pub machine_types: Vec<String>,
     /// MACHINE_PRICE: spot bid, USD/hour.
     pub machine_price: f64,
@@ -280,9 +282,12 @@ impl AppConfig {
         if self.machine_types.is_empty() {
             return Err(invalid("MACHINE_TYPE", "need at least one type"));
         }
-        for t in &self.machine_types {
+        for (i, t) in self.machine_types.iter().enumerate() {
             if crate::aws::ec2::instance_type(t).is_none() {
                 return Err(invalid("MACHINE_TYPE", format!("unknown type '{t}'")));
+            }
+            if self.machine_types[..i].contains(t) {
+                return Err(invalid("MACHINE_TYPE", format!("duplicate type '{t}'")));
             }
         }
         if self.machine_price <= 0.0 {
@@ -350,6 +355,14 @@ mod tests {
         let mut cfg = AppConfig::default();
         cfg.machine_types = vec!["warp9.mega".into()];
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_machine_type() {
+        let mut cfg = AppConfig::default();
+        cfg.machine_types = vec!["m5.xlarge".into(), "m5.large".into(), "m5.xlarge".into()];
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
     }
 
     #[test]

@@ -1,12 +1,25 @@
-//! `exampleFleet.json` analog: account-specific spot-fleet boilerplate.
+//! `exampleFleet.json` analog: account-specific spot-fleet boilerplate
+//! plus the fleet-shaping knobs.
 //!
 //! "exampleFleet.json does not need to be changed depending on your
 //! implementation … each AWS account … will need to update the Fleet file
-//! with configuration specific to their account."  In simulation these
-//! fields are inert, but they are parsed and validated with the same
-//! shape so the four-command UX (and its failure modes: missing role ARN,
-//! wrong region AMI) is preserved.
+//! with configuration specific to their account."  In simulation the
+//! account fields are inert, but they are parsed and validated with the
+//! same shape so the four-command UX (and its failure modes: missing
+//! role ARN, wrong region AMI) is preserved.
+//!
+//! Three keys *do* shape the simulated fleet (see
+//! [`crate::aws::ec2::fleet`]):
+//!
+//! * `INSTANCE_TYPES` — launch specifications, `"name"` or
+//!   `"name:weight"`.  Empty means "inherit the Config file's
+//!   `MACHINE_TYPE` list at weight 1".
+//! * `ALLOCATION_STRATEGY` — `"lowest-price"` (default),
+//!   `"diversified"`, or `"capacity-optimized"`.
+//! * `ON_DEMAND_BASE` — weighted units kept on-demand (flat-billed,
+//!   never interrupted).  Default 0.
 
+use crate::aws::ec2::{instance_type, AllocationStrategy, InstanceSlot};
 use crate::json::{parse, Value};
 
 use super::{invalid, ConfigError};
@@ -30,6 +43,14 @@ pub struct FleetSpec {
     pub image_id: String,
     pub snapshot_id: String,
     pub region: String,
+    /// INSTANCE_TYPES: launch specifications (`"name"` / `"name:weight"`).
+    /// Empty inherits the Config file's MACHINE_TYPE list at weight 1.
+    pub instance_types: Vec<InstanceSlot>,
+    /// ALLOCATION_STRATEGY: how the fleet splits its deficit across
+    /// pools.
+    pub allocation_strategy: AllocationStrategy,
+    /// ON_DEMAND_BASE: weighted units kept on-demand.
+    pub on_demand_base: u32,
 }
 
 impl FleetSpec {
@@ -47,6 +68,9 @@ impl FleetSpec {
             image_id: (*ami).into(),
             snapshot_id: (*snap).into(),
             region: region.into(),
+            instance_types: Vec::new(),
+            allocation_strategy: AllocationStrategy::LowestPrice,
+            on_demand_base: 0,
         })
     }
 
@@ -65,6 +89,43 @@ impl FleetSpec {
             .iter()
             .filter_map(|g| g.as_str().map(str::to_string))
             .collect();
+        // Fleet-shaping keys are optional so pre-heterogeneity Fleet
+        // files keep parsing unchanged.
+        let instance_types = match v.get("INSTANCE_TYPES") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| invalid("INSTANCE_TYPES", "expected array of strings"))?
+                .iter()
+                .map(|t| {
+                    let s = t
+                        .as_str()
+                        .ok_or_else(|| invalid("INSTANCE_TYPES", "expected strings"))?;
+                    InstanceSlot::parse(s).map_err(|e| invalid("INSTANCE_TYPES", e))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+        let allocation_strategy = match v.get("ALLOCATION_STRATEGY") {
+            None => AllocationStrategy::LowestPrice,
+            Some(a) => {
+                let s = a
+                    .as_str()
+                    .ok_or_else(|| invalid("ALLOCATION_STRATEGY", "expected string"))?;
+                AllocationStrategy::parse(s).ok_or_else(|| {
+                    invalid(
+                        "ALLOCATION_STRATEGY",
+                        "expected lowest-price | diversified | capacity-optimized",
+                    )
+                })?
+            }
+        };
+        let on_demand_base = match v.get("ON_DEMAND_BASE") {
+            None => 0,
+            Some(n) => n
+                .as_u64()
+                .and_then(|n| u32::try_from(n).ok())
+                .ok_or_else(|| invalid("ON_DEMAND_BASE", "expected non-negative integer"))?,
+        };
         let spec = Self {
             iam_fleet_role: s("IamFleetRole")?,
             iam_instance_profile: s("IamInstanceProfile")?,
@@ -74,6 +135,9 @@ impl FleetSpec {
             image_id: s("ImageId")?,
             snapshot_id: s("SnapshotId")?,
             region: s("Region")?,
+            instance_types,
+            allocation_strategy,
+            on_demand_base,
         };
         spec.validate()?;
         Ok(spec)
@@ -97,6 +161,17 @@ impl FleetSpec {
             .with("ImageId", self.image_id.as_str())
             .with("SnapshotId", self.snapshot_id.as_str())
             .with("Region", self.region.as_str())
+            .with(
+                "INSTANCE_TYPES",
+                Value::Arr(
+                    self.instance_types
+                        .iter()
+                        .map(|s| Value::from(s.render()))
+                        .collect(),
+                ),
+            )
+            .with("ALLOCATION_STRATEGY", self.allocation_strategy.name())
+            .with("ON_DEMAND_BASE", u64::from(self.on_demand_base))
     }
 
     pub fn validate(&self) -> Result<(), ConfigError> {
@@ -135,6 +210,26 @@ impl FleetSpec {
                 ));
             }
         }
+        for (i, slot) in self.instance_types.iter().enumerate() {
+            if instance_type(&slot.name).is_none() {
+                return Err(invalid(
+                    "INSTANCE_TYPES",
+                    format!("unknown instance type '{}'", slot.name),
+                ));
+            }
+            if slot.weight == 0 {
+                return Err(invalid("INSTANCE_TYPES", "weights must be >= 1"));
+            }
+            // A type may appear only once: duplicates with different
+            // weights would silently run a different fleet than asked
+            // for (first occurrence wins in fulfillment).
+            if self.instance_types[..i].iter().any(|p| p.name == slot.name) {
+                return Err(invalid(
+                    "INSTANCE_TYPES",
+                    format!("duplicate instance type '{}'", slot.name),
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -157,6 +252,72 @@ mod tests {
         let t = FleetSpec::template("us-east-1").unwrap();
         let back = FleetSpec::from_json(&t.to_json().pretty()).unwrap();
         assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_heterogeneous() {
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.instance_types = vec![
+            InstanceSlot::new("m5.large"),
+            InstanceSlot {
+                name: "m5.xlarge".into(),
+                weight: 2,
+            },
+        ];
+        t.allocation_strategy = AllocationStrategy::Diversified;
+        t.on_demand_base = 3;
+        let text = t.to_json().pretty();
+        assert!(text.contains("m5.xlarge:2"), "{text}");
+        assert!(text.contains("diversified"), "{text}");
+        let back = FleetSpec::from_json(&text).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn fleet_keys_optional_for_old_files() {
+        // A pre-heterogeneity Fleet file (no new keys) still parses with
+        // the defaults.
+        let mut v = FleetSpec::template("us-east-1").unwrap().to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.retain(|(k, _)| {
+                k != "INSTANCE_TYPES" && k != "ALLOCATION_STRATEGY" && k != "ON_DEMAND_BASE"
+            });
+        }
+        let back = FleetSpec::from_json(&v.pretty()).unwrap();
+        assert!(back.instance_types.is_empty());
+        assert_eq!(back.allocation_strategy, AllocationStrategy::LowestPrice);
+        assert_eq!(back.on_demand_base, 0);
+    }
+
+    #[test]
+    fn rejects_bad_fleet_keys() {
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.instance_types = vec![InstanceSlot::new("warp9.mega")];
+        assert!(t.validate().is_err());
+
+        // Duplicate types (e.g. conflicting weights) must not silently
+        // run a different fleet than requested.
+        let mut t = FleetSpec::template("us-east-1").unwrap();
+        t.instance_types = vec![
+            InstanceSlot::new("m5.xlarge"),
+            InstanceSlot {
+                name: "m5.xlarge".into(),
+                weight: 3,
+            },
+        ];
+        let err = t.validate().unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+
+        let mut v = FleetSpec::template("us-east-1").unwrap().to_json();
+        if let Value::Obj(fields) = &mut v {
+            for (k, val) in fields.iter_mut() {
+                if k == "ALLOCATION_STRATEGY" {
+                    *val = Value::from("best-effort");
+                }
+            }
+        }
+        let err = FleetSpec::from_json(&v.pretty()).unwrap_err();
+        assert!(err.to_string().contains("lowest-price"), "{err}");
     }
 
     #[test]

@@ -5,9 +5,9 @@
 //! * [`JobSpec`] — `exampleJob.json` analog: shared keys + a `groups`
 //!   list; `submitJob` expands one SQS message per group.
 //! * [`FleetSpec`] — `exampleFleet.json` analog: account-specific ARNs and
-//!   network config; validated but functionally inert in simulation, kept
-//!   because the paper's UX contract is "edit these files, run four
-//!   commands".
+//!   network config (validated but inert in simulation) plus the
+//!   fleet-shaping keys `INSTANCE_TYPES`, `ALLOCATION_STRATEGY`, and
+//!   `ON_DEMAND_BASE` that drive heterogeneous spot fleets.
 
 pub mod app_config;
 pub mod fleet_spec;

@@ -4,13 +4,34 @@
 //! number and size of EC2 instances you want from the Config to launch a
 //! spot fleet of instances. … Once the spot fleet is ready, DS will
 //! create the log groups (if they don't already exist)."
+//!
+//! The fleet request is built from both files: the Config contributes the
+//! weighted capacity target (`CLUSTER_MACHINES`) and the per-unit bid
+//! (`MACHINE_PRICE`); the Fleet file contributes the launch
+//! specifications (`INSTANCE_TYPES`, falling back to the Config's
+//! `MACHINE_TYPE` list at weight 1), the allocation strategy, and the
+//! on-demand base.
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::aws::ec2::{FleetId, SpotFleetSpec};
+use crate::aws::ec2::{FleetId, InstanceSlot, SpotFleetSpec};
 use crate::aws::AwsAccount;
 use crate::config::{AppConfig, FleetSpec};
 use crate::sim::SimTime;
+
+/// The launch specifications a (Config, Fleet-file) pair produces: the
+/// Fleet file's `INSTANCE_TYPES` when given, else the Config's
+/// `MACHINE_TYPE` list at weight 1.
+pub fn fleet_slots(cfg: &AppConfig, fleet_file: &FleetSpec) -> Vec<InstanceSlot> {
+    if fleet_file.instance_types.is_empty() {
+        cfg.machine_types
+            .iter()
+            .map(|t| InstanceSlot::new(t.as_str()))
+            .collect()
+    } else {
+        fleet_file.instance_types.clone()
+    }
+}
 
 /// Submit the spot fleet request and create log groups.  Instances are
 /// fulfilled asynchronously by the event loop's market ticks.  Returns
@@ -24,10 +45,18 @@ pub fn start_cluster(
 ) -> Result<FleetId> {
     fleet_file.validate().context("invalid Fleet file")?;
     cfg.validate().context("invalid Config file")?;
+    ensure!(
+        fleet_file.on_demand_base <= cfg.cluster_machines,
+        "ON_DEMAND_BASE ({}) exceeds CLUSTER_MACHINES ({})",
+        fleet_file.on_demand_base,
+        cfg.cluster_machines
+    );
     let fleet = acct.ec2.request_spot_fleet(SpotFleetSpec {
         target_capacity: cfg.cluster_machines,
         bid_hourly: cfg.machine_price,
-        allowed_types: cfg.machine_types.clone(),
+        slots: fleet_slots(cfg, fleet_file),
+        allocation: fleet_file.allocation_strategy,
+        on_demand_base: fleet_file.on_demand_base,
     });
     acct.logs.create_group(&cfg.log_group_name);
     acct.logs.create_group(&cfg.instance_log_group());
@@ -38,7 +67,7 @@ pub fn start_cluster(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::aws::ec2::Volatility;
+    use crate::aws::ec2::{AllocationStrategy, InstanceState, Lifecycle, Volatility};
 
     #[test]
     fn start_cluster_requests_fleet_and_logs() {
@@ -61,5 +90,56 @@ mod tests {
         let mut fleet_file = FleetSpec::template("us-east-1").unwrap();
         fleet_file.key_name = "key.pem".into();
         assert!(start_cluster(&mut acct, &cfg, &fleet_file, 0).is_err());
+    }
+
+    #[test]
+    fn fleet_file_instance_types_override_config() {
+        let cfg = AppConfig::default(); // MACHINE_TYPE = [m5.xlarge]
+        let mut fleet_file = FleetSpec::template("us-east-1").unwrap();
+        assert_eq!(
+            fleet_slots(&cfg, &fleet_file),
+            vec![InstanceSlot::new("m5.xlarge")]
+        );
+        fleet_file.instance_types = vec![
+            InstanceSlot::new("m5.large"),
+            InstanceSlot {
+                name: "c5.xlarge".into(),
+                weight: 2,
+            },
+        ];
+        assert_eq!(fleet_slots(&cfg, &fleet_file), fleet_file.instance_types);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_with_on_demand_base_fulfills() {
+        let mut acct = AwsAccount::new(3, Volatility::Low);
+        let mut cfg = AppConfig::default();
+        cfg.cluster_machines = 6;
+        cfg.machine_price = 0.20;
+        let mut fleet_file = FleetSpec::template("us-east-1").unwrap();
+        fleet_file.instance_types =
+            vec![InstanceSlot::new("m5.large"), InstanceSlot::new("c5.xlarge")];
+        fleet_file.allocation_strategy = AllocationStrategy::Diversified;
+        fleet_file.on_demand_base = 2;
+        let fid = start_cluster(&mut acct, &cfg, &fleet_file, 0).unwrap();
+        acct.ec2.evaluate_fleets(0);
+        assert_eq!(acct.ec2.active_weight(fid), 6);
+        let od: Vec<_> = acct
+            .ec2
+            .instances_in_state(fid, InstanceState::Pending)
+            .into_iter()
+            .filter(|&id| acct.ec2.instance(id).unwrap().lifecycle == Lifecycle::OnDemand)
+            .collect();
+        assert_eq!(od.len(), 2, "ON_DEMAND_BASE floor honored");
+    }
+
+    #[test]
+    fn on_demand_base_above_target_rejected() {
+        let mut acct = AwsAccount::new(1, Volatility::Low);
+        let cfg = AppConfig::default(); // 4 machines
+        let mut fleet_file = FleetSpec::template("us-east-1").unwrap();
+        fleet_file.on_demand_base = 5;
+        let err = start_cluster(&mut acct, &cfg, &fleet_file, 0).unwrap_err();
+        assert!(err.to_string().contains("ON_DEMAND_BASE"));
     }
 }

@@ -10,8 +10,19 @@
 //!
 //! Cheapest mode: "downscale the number of requested machines (but not
 //! RUNNING machines) to one 15 minutes after the monitor is engaged."
+//!
+//! Queue-downscale mode (opt-in, beyond the paper): once the queue holds
+//! less work than the fleet can chew, the monitor *actively* scales the
+//! fleet in to match — terminating surplus machines from the
+//! most-expensive pool first, so the cheapest pool is downscaled last
+//! (see [`crate::aws::ec2::Ec2::scale_in_to_machines`]).  Any in-flight
+//! job on a terminated machine redelivers via the SQS visibility
+//! timeout, so accounting invariants hold.  Mutually exclusive with
+//! cheapest mode, whose contract is to never terminate running machines
+//! — the run driver rejects the combination.
 
 use crate::aws::ec2::{FleetId, InstanceState};
+use crate::aws::ecs::containers_that_fit;
 use crate::aws::AwsAccount;
 use crate::config::AppConfig;
 use crate::sim::clock::{SimTime, HOUR, MINUTE};
@@ -21,6 +32,8 @@ use crate::sim::clock::{SimTime, HOUR, MINUTE};
 pub struct MonitorState {
     pub fleet: FleetId,
     pub cheapest: bool,
+    /// Scale the fleet in as the queue drains (cheapest pool last).
+    pub queue_downscale: bool,
     engaged_at: SimTime,
     last_alarm_reap: SimTime,
     cheapest_downscaled: bool,
@@ -37,12 +50,19 @@ impl MonitorState {
         Self {
             fleet,
             cheapest,
+            queue_downscale: false,
             engaged_at: now,
             last_alarm_reap: now,
             cheapest_downscaled: false,
             cleanup_done: false,
             export_bucket: export_bucket.to_string(),
         }
+    }
+
+    /// Enable queue-proportional scale-in (see module docs).
+    pub fn with_queue_downscale(mut self) -> Self {
+        self.queue_downscale = true;
+        self
     }
 
     /// One monitor tick.  Returns true if cleanup ran (run is over).
@@ -104,6 +124,55 @@ impl MonitorState {
         if visible == 0 && in_flight == 0 {
             self.cleanup(acct, cfg, now);
             return true;
+        }
+
+        // Queue-downscale mode: shrink the fleet to the *machines* the
+        // remaining work can keep busy, cheapest pool last.  The budget
+        // is in machines, not weighted units — a weight-3 machine still
+        // runs one machine's worth of containers — so this goes through
+        // `scale_in_to_machines`, which also lowers the requested
+        // capacity to the surviving weight.
+        if self.queue_downscale && !self.cheapest {
+            // Per-machine throughput from what actually PACKS, not the
+            // TASKS_PER_MACHINE intent: on a heterogeneous fleet a small
+            // machine may fit fewer containers than configured.  Use the
+            // smallest packing among the fleet's active types —
+            // conservative, so surplus machines are only killed when
+            // even the weakest survivor shape covers the queue.
+            let fit = acct
+                .ec2
+                .all_instances()
+                .iter()
+                .filter(|i| i.fleet == self.fleet && i.is_active())
+                .map(|i| {
+                    containers_that_fit(cfg.cpu_shares, cfg.memory_mb, i.itype)
+                        .min(cfg.tasks_per_machine)
+                })
+                .min()
+                .unwrap_or(cfg.tasks_per_machine);
+            let per_machine = u64::from((fit * cfg.docker_cores).max(1));
+            let remaining = (visible + in_flight) as u64;
+            let machines_worth = remaining.saturating_add(per_machine - 1) / per_machine;
+            let needed = u32::try_from(machines_worth).unwrap_or(u32::MAX).max(1);
+            let current = acct.ec2.active_count(self.fleet);
+            if needed < current {
+                let killed = acct.ec2.scale_in_to_machines(self.fleet, needed, now);
+                for id in &killed {
+                    acct.ecs.deregister_instance(*id);
+                    acct.metrics.drop_dimension(&format!("i-{id}"));
+                }
+                if !killed.is_empty() {
+                    acct.logs.put(
+                        &cfg.log_group_name,
+                        "monitor",
+                        now,
+                        format!(
+                            "queue downscale: {current} -> {needed} machines ({} terminated)",
+                            killed.len()
+                        ),
+                    );
+                }
+            }
         }
         false
     }
@@ -212,5 +281,38 @@ mod tests {
         let _ = acct.sqs.receive(&cfg.sqs_queue_name, MINUTE).unwrap();
         // visible=0 but in_flight=1 -> not done.
         assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+    }
+
+    #[test]
+    fn queue_downscale_shrinks_fleet_to_remaining_work() {
+        let (mut acct, cfg, _) = rig(); // 4 machines, 2 tasks x 2 cores
+        // 5 jobs left: one machine's worth (4/machine) rounds up to 2.
+        for _ in 0..5 {
+            acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
+        }
+        acct.ec2.evaluate_fleets(0);
+        for id in acct.ec2.instances_in_state(1, InstanceState::Pending) {
+            acct.ec2.mark_running(id, MINUTE);
+        }
+        assert_eq!(acct.ec2.active_count(1), 4);
+        let mut mon = MonitorState::new(1, false, "ds-data", 0).with_queue_downscale();
+        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+        assert_eq!(acct.ec2.fleet_target(1), 2);
+        assert_eq!(acct.ec2.active_weight(1), 2);
+        // And it never scales back *up*: target only moves down.
+        assert!(!mon.tick(&mut acct, &cfg, 3 * MINUTE));
+        assert_eq!(acct.ec2.fleet_target(1), 2);
+    }
+
+    #[test]
+    fn queue_downscale_disabled_by_default() {
+        let (mut acct, cfg, mut mon) = rig();
+        acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
+        acct.ec2.evaluate_fleets(0);
+        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+        assert_eq!(
+            acct.ec2.fleet_target(1),
+            AppConfig::default().cluster_machines
+        );
     }
 }

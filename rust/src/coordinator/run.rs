@@ -48,6 +48,9 @@ pub struct RunOptions {
     pub monitor: bool,
     /// Cheapest mode (monitor's optional `True` flag).
     pub cheapest: bool,
+    /// Monitor scales the fleet in as the queue drains (cheapest pool
+    /// last).  Ignored without the monitor.
+    pub queue_downscale: bool,
     /// Mean time to instance crash (None = reliable machines).
     pub crash_mttf: Option<SimTime>,
     /// Hard stop for the simulation.
@@ -66,6 +69,7 @@ impl Default for RunOptions {
             volatility: Volatility::Low,
             monitor: true,
             cheapest: false,
+            queue_downscale: false,
             crash_mttf: None,
             max_sim_time: 7 * 24 * HOUR,
             overrun_after_drain: 0,
@@ -155,18 +159,26 @@ impl Simulation {
     /// Step 3 (+4): `startCluster` and optionally `monitor`.
     pub fn start(&mut self, fleet_file: &FleetSpec) -> Result<()> {
         ensure!(self.jobs_submitted > 0, "submit jobs before starting the cluster");
+        ensure!(
+            !(self.opts.cheapest && self.opts.queue_downscale),
+            "queue_downscale conflicts with cheapest mode (cheapest never terminates running machines)"
+        );
         let fleet =
             cluster::start_cluster(&mut self.acct, &self.cfg, fleet_file, self.events.now())?;
         self.fleet = Some(fleet);
         self.events.schedule_in(0, Event::MarketTick);
         self.events.schedule_in(0, Event::AlarmEval);
         if self.opts.monitor {
-            self.monitor = Some(MonitorState::new(
+            let mut mon = MonitorState::new(
                 fleet,
                 self.opts.cheapest,
                 &self.opts.data_bucket,
                 self.events.now(),
-            ));
+            );
+            if self.opts.queue_downscale {
+                mon = mon.with_queue_downscale();
+            }
+            self.monitor = Some(mon);
             self.events.schedule_in(0, Event::MonitorTick);
         }
         Ok(())
@@ -614,6 +626,7 @@ impl Simulation {
             .approximate_counts(&self.cfg.sqs_dead_letter_queue, ended_at)
             .0 as u64;
         let cost = self.acct.cost_report(ended_at);
+        let pools = self.acct.ec2.pool_breakdown(ended_at);
         RunReport {
             stats,
             drained_at: self.drained_at,
@@ -624,6 +637,7 @@ impl Simulation {
                 .map(|m| m.cleanup_done)
                 .unwrap_or(false),
             cost,
+            pools,
             jobs_submitted: self.jobs_submitted,
         }
     }
@@ -794,6 +808,81 @@ mod tests {
         assert!(report.stats.alarm_terminations > 0);
         assert!(report.fully_accounted(), "{}", report.summary());
         assert!(report.cleaned_up);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_reports_per_pool_costs() {
+        use crate::aws::ec2::{AllocationStrategy, InstanceSlot};
+        let mut cfg = quick_cfg();
+        cfg.cluster_machines = 4;
+        cfg.machine_price = 0.20;
+        let jobs = JobSpec::plate("P1", 8, 4, vec![]);
+        let mut fleet = FleetSpec::template("us-east-1").unwrap();
+        fleet.instance_types =
+            vec![InstanceSlot::new("m5.large"), InstanceSlot::new("c5.xlarge")];
+        fleet.allocation_strategy = AllocationStrategy::Diversified;
+        fleet.on_demand_base = 1;
+        let mut ex = modeled(60.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert_eq!(report.stats.completed, 32, "{}", report.summary());
+        assert!(report.cleaned_up);
+        // Per-pool breakdown: both spot pools plus the on-demand slice.
+        let labels: Vec<&str> = report.pools.iter().map(|p| p.pool.as_str()).collect();
+        assert!(labels.contains(&"m5.large"), "{labels:?}");
+        assert!(labels.contains(&"c5.xlarge"), "{labels:?}");
+        assert!(labels.contains(&"m5.large/on-demand"), "{labels:?}");
+        let pool_cost: f64 = report.pools.iter().map(|p| p.cost_usd).sum();
+        assert!(
+            (pool_cost - report.cost.ec2_usd).abs() < 1e-9,
+            "pool sum {pool_cost} != ec2 {}",
+            report.cost.ec2_usd
+        );
+        // The summary surfaces the per-pool lines.
+        assert!(report.summary().contains("m5.large/on-demand"), "{}", report.summary());
+    }
+
+    #[test]
+    fn queue_downscale_run_completes_and_shrinks_fleet() {
+        use crate::aws::ec2::TerminationReason;
+        let cfg = quick_cfg(); // 3 machines, 4 cores each
+        let jobs = JobSpec::plate("P1", 10, 2, vec![]); // 20 jobs
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let opts = RunOptions {
+            queue_downscale: true,
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(cfg, opts).unwrap();
+        sim.submit(&jobs).unwrap();
+        sim.start(&fleet).unwrap();
+        let mut ex = modeled(300.0); // long jobs: the queue drains slowly
+        let report = sim.run(&mut ex).unwrap();
+        assert!(report.fully_accounted(), "{}", report.summary());
+        assert!(report.cleaned_up);
+        assert!(
+            sim.acct
+                .ec2
+                .all_instances()
+                .iter()
+                .any(|i| i.termination_reason == Some(TerminationReason::FleetDownscale)),
+            "queue downscale never fired: {}",
+            report.summary()
+        );
+    }
+
+    #[test]
+    fn queue_downscale_conflicts_with_cheapest() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 2, 1, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let opts = RunOptions {
+            cheapest: true,
+            queue_downscale: true,
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(cfg, opts).unwrap();
+        sim.submit(&jobs).unwrap();
+        let err = sim.start(&fleet).unwrap_err();
+        assert!(err.to_string().contains("cheapest"), "{err}");
     }
 
     #[test]

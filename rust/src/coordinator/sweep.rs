@@ -5,8 +5,9 @@
 //! driver evaluates one configuration at a time; this module evaluates a
 //! whole configuration *matrix* — the cartesian product of seeds ×
 //! [`Volatility`] × `SQS_MESSAGE_VISIBILITY` × `CLUSTER_MACHINES` ×
-//! [`DurationModel`] — on a pool of OS threads, one independent
-//! [`Simulation`](super::Simulation) per cell.
+//! [`AllocationStrategy`] × instance set × [`DurationModel`] — on a pool
+//! of OS threads, one independent [`Simulation`](super::Simulation) per
+//! cell.
 //!
 //! Determinism is the load-bearing property: each cell is a pure function
 //! of `(scenario, seed)` — it owns its account, event heap, and
@@ -16,6 +17,24 @@
 //! therefore produces a bit-identical [`SweepReport`] at any worker
 //! count, which is what lets experiment tables double as regression
 //! gates (see `rust/tests/determinism.rs`).
+//!
+//! # Example: a two-scenario sweep on two threads
+//!
+//! ```
+//! use ds_rs::config::{AppConfig, JobSpec};
+//! use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
+//!
+//! let cfg = AppConfig::default();
+//! let jobs = JobSpec::plate("P", 2, 1, vec![]); // 2 tiny jobs per cell
+//! let matrix = ScenarioMatrix {
+//!     seeds: vec![1],
+//!     cluster_machines: vec![1, 2],
+//!     ..Default::default()
+//! };
+//! let run = run_sweep(&SweepPlan::new(cfg, jobs, matrix), 2).unwrap();
+//! assert_eq!(run.report.scenarios.len(), 2);
+//! assert_eq!(run.report.total_completed(), 4);
+//! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -23,7 +42,7 @@ use std::thread;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::aws::ec2::Volatility;
+use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
 use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::metrics::{RunReport, ScenarioSummary, SweepReport};
 use crate::sim::clock::fmt_dur;
@@ -54,21 +73,32 @@ pub struct Scenario {
     pub volatility: Volatility,
     /// `SQS_MESSAGE_VISIBILITY` for this cell's config.
     pub visibility: SimTime,
-    /// `CLUSTER_MACHINES` for this cell's config.
+    /// `CLUSTER_MACHINES` for this cell's config (weighted units).
     pub machines: u32,
+    /// `ALLOCATION_STRATEGY` for this cell's fleet.
+    pub allocation: AllocationStrategy,
+    /// `INSTANCE_TYPES` for this cell's fleet; empty inherits the plan's
+    /// fleet file / Config.
+    pub instance_set: Vec<InstanceSlot>,
     pub model: DurationModel,
 }
 
 impl Scenario {
     /// Stable human-readable label (also the aggregation key in reports).
     pub fn label(&self) -> String {
-        format!(
-            "m={} vis={} vol={} mean={:.0}s",
+        let mut label = format!(
+            "m={} vis={} vol={} mean={:.0}s alloc={}",
             self.machines,
             fmt_dur(self.visibility),
             volatility_name(self.volatility),
-            self.model.mean_s
-        )
+            self.model.mean_s,
+            self.allocation.name()
+        );
+        if !self.instance_set.is_empty() {
+            let types: Vec<String> = self.instance_set.iter().map(InstanceSlot::render).collect();
+            label.push_str(&format!(" set={}", types.join("+")));
+        }
+        label
     }
 }
 
@@ -80,6 +110,11 @@ pub struct ScenarioMatrix {
     pub volatilities: Vec<Volatility>,
     pub visibilities: Vec<SimTime>,
     pub cluster_machines: Vec<u32>,
+    /// Fleet allocation strategies to compare.
+    pub allocations: Vec<AllocationStrategy>,
+    /// Instance sets to compare; an empty set inherits the plan's fleet
+    /// file / Config types.
+    pub instance_sets: Vec<Vec<InstanceSlot>>,
     pub models: Vec<DurationModel>,
 }
 
@@ -90,6 +125,8 @@ impl Default for ScenarioMatrix {
             volatilities: vec![Volatility::Low],
             visibilities: vec![10 * MINUTE],
             cluster_machines: vec![4],
+            allocations: vec![AllocationStrategy::LowestPrice],
+            instance_sets: vec![Vec::new()],
             models: vec![DurationModel::default()],
         }
     }
@@ -97,26 +134,34 @@ impl Default for ScenarioMatrix {
 
 impl ScenarioMatrix {
     /// Expand the cartesian product in a fixed order: machines outermost,
-    /// then visibility, then volatility, then duration model.  Axis
-    /// element order is preserved, so single-axis sweeps read like the
-    /// input list.
+    /// then visibility, volatility, allocation strategy, instance set,
+    /// and innermost the duration model.  Axis element order is
+    /// preserved, so single-axis sweeps read like the input list.
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(
             self.cluster_machines.len()
                 * self.visibilities.len()
                 * self.volatilities.len()
+                * self.allocations.len()
+                * self.instance_sets.len()
                 * self.models.len(),
         );
         for &machines in &self.cluster_machines {
             for &visibility in &self.visibilities {
                 for &volatility in &self.volatilities {
-                    for model in &self.models {
-                        out.push(Scenario {
-                            volatility,
-                            visibility,
-                            machines,
-                            model: model.clone(),
-                        });
+                    for &allocation in &self.allocations {
+                        for instance_set in &self.instance_sets {
+                            for model in &self.models {
+                                out.push(Scenario {
+                                    volatility,
+                                    visibility,
+                                    machines,
+                                    allocation,
+                                    instance_set: instance_set.clone(),
+                                    model: model.clone(),
+                                });
+                            }
+                        }
                     }
                 }
             }
@@ -184,11 +229,23 @@ fn scenario_cfg(base: &AppConfig, scenario: &Scenario) -> AppConfig {
     cfg
 }
 
+/// The plan's fleet file with one scenario's fleet knobs overlaid.
+fn scenario_fleet(base: &FleetSpec, scenario: &Scenario) -> FleetSpec {
+    let mut fleet = base.clone();
+    fleet.allocation_strategy = scenario.allocation;
+    if !scenario.instance_set.is_empty() {
+        fleet.instance_types = scenario.instance_set.clone();
+    }
+    fleet
+}
+
 /// Run one `(scenario, seed)` cell: overlay the scenario knobs on the
-/// base config and drive a fresh, fully independent simulation.
+/// base config and fleet file and drive a fresh, fully independent
+/// simulation.
 pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunReport> {
     let cfg = scenario_cfg(&plan.base_cfg, scenario);
     cfg.validate()?;
+    let fleet = scenario_fleet(&plan.fleet, scenario);
     let opts = RunOptions {
         seed,
         volatility: scenario.volatility,
@@ -198,7 +255,7 @@ pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunR
         model: scenario.model.clone(),
         ..Default::default()
     };
-    run_full(&cfg, &plan.jobs, &plan.fleet, &mut ex, opts)
+    run_full(&cfg, &plan.jobs, &fleet, &mut ex, opts)
 }
 
 /// Run the whole matrix on `threads` worker threads (clamped to
@@ -216,6 +273,16 @@ pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
         scenario_cfg(&plan.base_cfg, sc)
             .validate()
             .with_context(|| format!("invalid scenario '{}'", sc.label()))?;
+        scenario_fleet(&plan.fleet, sc)
+            .validate()
+            .with_context(|| format!("invalid scenario '{}'", sc.label()))?;
+        ensure!(
+            plan.fleet.on_demand_base <= sc.machines,
+            "invalid scenario '{}': ON_DEMAND_BASE ({}) exceeds machines ({})",
+            sc.label(),
+            plan.fleet.on_demand_base,
+            sc.machines
+        );
     }
 
     let cells: Vec<(usize, u64)> = scenarios
@@ -314,7 +381,7 @@ mod tests {
             volatilities: vec![Volatility::Low, Volatility::High],
             visibilities: vec![MINUTE],
             cluster_machines: vec![1, 4],
-            models: vec![DurationModel::default()],
+            ..Default::default()
         };
         let scs = m.scenarios();
         assert_eq!(scs.len(), 4);
@@ -324,6 +391,76 @@ mod tests {
         assert_eq!(scs[0].volatility, Volatility::Low);
         assert_eq!(scs[1].volatility, Volatility::High);
         assert_eq!(scs[2].machines, 4);
+    }
+
+    #[test]
+    fn allocation_and_instance_set_axes_expand() {
+        let m = ScenarioMatrix {
+            allocations: AllocationStrategy::ALL.to_vec(),
+            instance_sets: vec![
+                Vec::new(),
+                vec![InstanceSlot::new("m5.large"), InstanceSlot::new("c5.xlarge")],
+            ],
+            ..Default::default()
+        };
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 6);
+        // Allocation is the outer of the two new axes.
+        assert_eq!(scs[0].allocation, AllocationStrategy::LowestPrice);
+        assert!(scs[0].instance_set.is_empty());
+        assert_eq!(scs[1].instance_set.len(), 2);
+        assert_eq!(scs[2].allocation, AllocationStrategy::Diversified);
+        // Labels stay distinct per scenario.
+        let mut labels: Vec<String> = scs.iter().map(Scenario::label).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 6);
+    }
+
+    #[test]
+    fn allocation_sweep_runs_and_reports_pools() {
+        let mut plan = small_plan();
+        plan.base_cfg.machine_price = 0.20;
+        plan.matrix.seeds = vec![1];
+        plan.matrix.cluster_machines = vec![2];
+        plan.matrix.allocations =
+            vec![AllocationStrategy::LowestPrice, AllocationStrategy::Diversified];
+        plan.matrix.instance_sets = vec![vec![
+            InstanceSlot::new("m5.large"),
+            InstanceSlot::new("c5.xlarge"),
+        ]];
+        let run = run_sweep(&plan, 2).unwrap();
+        assert_eq!(run.report.scenarios.len(), 2);
+        // Diversified touches both pools; lowest-price concentrates in
+        // the cheaper one (quiet market, both fit the bid).
+        let lowest = &run.report.scenarios[0];
+        let diversified = &run.report.scenarios[1];
+        assert!(
+            diversified.pools.iter().filter(|p| p.launched > 0).count() >= 2,
+            "{:?}",
+            diversified.pools
+        );
+        let launched = |s: &crate::metrics::ScenarioSummary, pool: &str| {
+            s.pools
+                .iter()
+                .find(|p| p.pool == pool)
+                .map(|p| p.launched)
+                .unwrap_or(0)
+        };
+        assert!(
+            launched(lowest, "m5.large") >= 2,
+            "lowest-price should favor the cheap pool: {:?}",
+            lowest.pools
+        );
+        assert!(launched(lowest, "m5.large") >= launched(lowest, "c5.xlarge"));
+    }
+
+    #[test]
+    fn unknown_type_in_instance_set_fails_fast() {
+        let mut plan = small_plan();
+        plan.matrix.instance_sets = vec![vec![InstanceSlot::new("quantum.9000xl")]];
+        let err = run_sweep(&plan, 1).unwrap_err();
+        assert!(format!("{err:#}").contains("quantum.9000xl"), "{err:#}");
     }
 
     #[test]
@@ -381,15 +518,28 @@ mod tests {
 
     #[test]
     fn scenario_labels_are_stable() {
-        let sc = Scenario {
+        let mut sc = Scenario {
             volatility: Volatility::Medium,
             visibility: 5 * MINUTE,
             machines: 8,
+            allocation: AllocationStrategy::Diversified,
+            instance_set: Vec::new(),
             model: DurationModel {
                 mean_s: 120.0,
                 ..Default::default()
             },
         };
-        assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s");
+        assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
+        sc.instance_set = vec![
+            InstanceSlot::new("m5.large"),
+            InstanceSlot {
+                name: "m5.xlarge".into(),
+                weight: 2,
+            },
+        ];
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified set=m5.large+m5.xlarge:2"
+        );
     }
 }

@@ -11,8 +11,12 @@
 //!                 [--fleet files/fleet.json] \
 //!                 --seeds 8 --machines 2,4,8 --visibility-s 120,600 \
 //!                 --volatility low,medium --job-mean-s 90,240 \
-//!                 [--threads N] [--json]
-//! ds describe     --config files/config.json         # validate + print
+//!                 --allocation lowest-price,diversified,capacity-optimized \
+//!                 --instance-types m5.large+c5.xlarge:2,m5.xlarge \
+//!                 [--on-demand-base N] [--threads N] [--json]
+//! ds describe     --config files/config.json [--fleet files/fleet.json]
+//!                 # validate + print + the per-type container packing
+//!                 # of the machines the run will actually use
 //! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
 //! ```
 //!
@@ -26,15 +30,85 @@ use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use ds_rs::aws::ec2::Volatility;
+use ds_rs::aws::ec2::{instance_type, AllocationStrategy, InstanceSlot, Volatility};
+use ds_rs::aws::ecs::containers_that_fit;
 use ds_rs::cli::Args;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::cluster::fleet_slots;
 use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::coordinator::sweep::{default_threads, run_sweep, ScenarioMatrix, SweepPlan};
 use ds_rs::runtime::{Manifest, PjrtRuntime};
 use ds_rs::sim::clock::from_secs_f64;
 use ds_rs::sim::SimTime;
 use ds_rs::workloads::{DurationModel, ModeledExecutor, PjrtExecutor};
+
+/// One documented flag: name, value placeholder (empty = boolean), help.
+/// `sweep` renders its help from this table *and* rejects flags not in
+/// it, so the documentation and the strict parser cannot drift apart.
+struct Flag {
+    name: &'static str,
+    value: &'static str,
+    help: &'static str,
+}
+
+/// Every flag `sweep` reads — the audit table (`tests/cli.rs` pins that
+/// typos are rejected against it).
+const SWEEP_FLAGS: &[Flag] = &[
+    Flag { name: "config", value: "FILE", help: "base Config file (default: built-in defaults)" },
+    Flag { name: "job", value: "FILE", help: "Job file replayed by every cell (default: synthetic plate)" },
+    Flag { name: "fleet", value: "FILE", help: "Fleet file (default: built-in us-east-1 template)" },
+    Flag { name: "plate", value: "NAME", help: "synthetic plate name when no --job (default P1)" },
+    Flag { name: "wells", value: "N", help: "synthetic plate wells when no --job (default 24)" },
+    Flag { name: "sites", value: "N", help: "synthetic plate sites/well when no --job (default 2)" },
+    Flag { name: "seeds", value: "N", help: "replicate seeds per scenario (default 4)" },
+    Flag { name: "seed-base", value: "N", help: "first seed value (default 0)" },
+    Flag { name: "machines", value: "N,N,..", help: "CLUSTER_MACHINES axis (weighted units)" },
+    Flag { name: "visibility-s", value: "S,S,..", help: "SQS_MESSAGE_VISIBILITY axis, seconds" },
+    Flag { name: "volatility", value: "V,V,..", help: "market axis: low|medium|high" },
+    Flag { name: "allocation", value: "A,A,..", help: "fleet allocation axis: lowest-price|diversified|capacity-optimized" },
+    Flag { name: "instance-types", value: "T+T,..", help: "instance-set axis; sets comma-separated, types '+'-joined, each 'name[:weight]' (e.g. m5.large+c5.xlarge:2)" },
+    Flag { name: "on-demand-base", value: "N", help: "weighted units kept on-demand in every cell (default: Fleet file's)" },
+    Flag { name: "job-mean-s", value: "S,S,..", help: "modeled mean job duration axis, seconds (default 90)" },
+    Flag { name: "job-cv", value: "X", help: "duration coefficient of variation (default 0.3)" },
+    Flag { name: "stall-prob", value: "P", help: "per-job stall probability (default 0)" },
+    Flag { name: "fail-prob", value: "P", help: "per-job fast-failure probability (default 0)" },
+    Flag { name: "threads", value: "N", help: "worker threads (default: available cores)" },
+    Flag { name: "json", value: "", help: "emit the report as JSON on stdout (chatter to stderr)" },
+    Flag { name: "help", value: "", help: "show this help" },
+];
+
+/// Flags `run` reads (help only; run stays permissive for compatibility).
+const RUN_FLAGS: &[Flag] = &[
+    Flag { name: "config", value: "FILE", help: "Config file (required)" },
+    Flag { name: "job", value: "FILE", help: "Job file (required)" },
+    Flag { name: "fleet", value: "FILE", help: "Fleet file (required)" },
+    Flag { name: "seed", value: "N", help: "simulation seed (default 42)" },
+    Flag { name: "volatility", value: "V", help: "market volatility: low|medium|high (default low)" },
+    Flag { name: "no-monitor", value: "", help: "skip the Step-4 monitor (leaks resources, as in the paper)" },
+    Flag { name: "cheapest", value: "", help: "monitor cheapest mode (downscale requested capacity after 15 min; excludes --queue-downscale)" },
+    Flag { name: "queue-downscale", value: "", help: "monitor terminates surplus machines as the queue drains, cheapest pool last (excludes --cheapest)" },
+    Flag { name: "crash-mttf-min", value: "M", help: "mean minutes to instance crash (default: no crashes)" },
+    Flag { name: "pjrt", value: "DIR", help: "run real AOT artifacts from DIR instead of the modeled executor" },
+    Flag { name: "time-scale", value: "X", help: "PJRT wall-time to sim-time scale (default 1.0)" },
+    Flag { name: "job-mean-s", value: "S", help: "modeled mean job duration, seconds (default 90)" },
+    Flag { name: "job-cv", value: "X", help: "duration coefficient of variation (default 0.3)" },
+    Flag { name: "stall-prob", value: "P", help: "per-job stall probability (default 0)" },
+    Flag { name: "fail-prob", value: "P", help: "per-job fast-failure probability (default 0)" },
+    Flag { name: "help", value: "", help: "show this help" },
+];
+
+fn render_flags(flags: &[Flag]) -> String {
+    let mut out = String::new();
+    for f in flags {
+        let lhs = if f.value.is_empty() {
+            format!("--{}", f.name)
+        } else {
+            format!("--{} {}", f.name, f.value)
+        };
+        out.push_str(&format!("  {lhs:<28} {}\n", f.help));
+    }
+    out
+}
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -73,11 +147,15 @@ fn print_usage() {
          \x20 make-config      write a template Config file\n\
          \x20 make-fleet-file  write a region-specific Fleet file template\n\
          \x20 make-job         write a plate-layout Job file\n\
-         \x20 describe         validate and print a Config file\n\
+         \x20 describe         validate and print a Config file (+ per-type packing)\n\
          \x20 workloads        list available AOT workload artifacts\n\
          \x20 run              setup + submitJob + startCluster (+ monitor)\n\
          \x20 sweep            parallel scenario matrix with aggregate analytics\n\n\
-         see README.md for the full walkthrough"
+         run flags (`ds run --help`):\n{}\n\
+         sweep flags (`ds sweep --help`; unknown flags are rejected):\n{}\n\
+         see README.md for the full walkthrough",
+        render_flags(RUN_FLAGS),
+        render_flags(SWEEP_FLAGS)
     );
 }
 
@@ -108,6 +186,23 @@ fn make_config(args: &Args) -> Result<()> {
 }
 
 fn make_fleet_file(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!(
+            "ds make-fleet-file [--region R] [--out FILE]\n\n\
+             Writes a region-specific Fleet file template (regions: us-east-1,\n\
+             us-west-2, eu-west-1).  Edit the account fields (ARNs, key, subnet,\n\
+             security groups) before a real deployment; the AMI must stay the\n\
+             region's template AMI.\n\n\
+             Fleet-shaping keys (drive the simulated spot fleet):\n\
+             \x20 INSTANCE_TYPES       launch specs, \"name\" or \"name:weight\"\n\
+             \x20                      (e.g. [\"m5.large\", \"m5.xlarge:2\"]); empty\n\
+             \x20                      inherits the Config's MACHINE_TYPE at weight 1\n\
+             \x20 ALLOCATION_STRATEGY  lowest-price | diversified | capacity-optimized\n\
+             \x20 ON_DEMAND_BASE       weighted units kept on-demand (flat-billed,\n\
+             \x20                      never interrupted); must be <= CLUSTER_MACHINES"
+        );
+        return Ok(());
+    }
     let region = args.get_or("region", "us-east-1");
     let spec = FleetSpec::template(region)
         .with_context(|| format!("no template for region '{region}'"))?;
@@ -148,6 +243,53 @@ fn describe(args: &Args) -> Result<()> {
         cfg.service_name(),
         cfg.instance_log_group()
     );
+    // With --fleet, describe the machines the run will REALLY use: the
+    // Fleet file's INSTANCE_TYPES override the Config's MACHINE_TYPE.
+    let fleet = match args.get("fleet") {
+        Some(p) => Some(
+            FleetSpec::from_json(
+                &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+            )
+            .context("parsing Fleet file")?,
+        ),
+        None => None,
+    };
+    let slots: Vec<InstanceSlot> = match &fleet {
+        Some(f) => fleet_slots(&cfg, f),
+        None => cfg
+            .machine_types
+            .iter()
+            .map(|t| InstanceSlot::new(t.as_str()))
+            .collect(),
+    };
+    if let Some(f) = &fleet {
+        println!(
+            "fleet: allocation={} on_demand_base={}",
+            f.allocation_strategy.name(),
+            f.on_demand_base
+        );
+    }
+    // Per-type packing: what ECS will actually fit on each allowed
+    // machine (the paper's "too large / too small Docker" caveat).
+    println!(
+        "placement ({} CPU shares, {} MB per container, intent {}/machine):",
+        cfg.cpu_shares, cfg.memory_mb, cfg.tasks_per_machine
+    );
+    for slot in &slots {
+        // Both files' validation guarantees the type exists.
+        let ty = instance_type(&slot.name).expect("validated type");
+        let fit = containers_that_fit(cfg.cpu_shares, cfg.memory_mb, ty);
+        let note = if fit == 0 {
+            "  <- Docker larger than the machine: never placed"
+        } else if fit < cfg.tasks_per_machine {
+            "  <- fewer than TASKS_PER_MACHINE fit"
+        } else if fit > cfg.tasks_per_machine {
+            "  <- ECS will overpack beyond TASKS_PER_MACHINE"
+        } else {
+            ""
+        };
+        println!("  {}: fits {fit}{note}", slot.render());
+    }
     Ok(())
 }
 
@@ -191,6 +333,10 @@ fn parse_volatility(s: &str) -> Result<Volatility> {
 }
 
 fn run(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!("ds run — setup + submitJob + startCluster (+ monitor)\n\nflags:\n{}", render_flags(RUN_FLAGS));
+        return Ok(());
+    }
     let cfg = load_config(args)?;
     let job_path = args.get("job").context("--job files/job.json required")?;
     let jobs = JobSpec::from_json(
@@ -211,6 +357,7 @@ fn run(args: &Args) -> Result<()> {
         volatility: parse_volatility(args.get_or("volatility", "low"))?,
         monitor: !args.flag("no-monitor"),
         cheapest: args.flag("cheapest"),
+        queue_downscale: args.flag("queue-downscale"),
         crash_mttf: if args.flag("crash-mttf-min") {
             Some(from_secs_f64(
                 parse_scalar(args, "crash-mttf-min", 0.0f64)? * 60.0,
@@ -262,11 +409,30 @@ fn run(args: &Args) -> Result<()> {
 /// Config file does not carry them.  `--fleet` is optional; without it
 /// the builtin us-east-1 template fleet is used.
 fn sweep(args: &Args) -> Result<()> {
+    if args.flag("help") {
+        println!(
+            "ds sweep — parallel scenario matrix with aggregate analytics\n\n\
+             Every axis flag takes a comma-separated list; the scenarios are the\n\
+             cartesian product of all axes, replicated over --seeds seeds.\n\n\
+             flags:\n{}",
+            render_flags(SWEEP_FLAGS)
+        );
+        return Ok(());
+    }
     // A stray positional is almost always a space where a comma belonged
     // (`--machines 2 4`); running the shrunken matrix silently would be
     // exactly the wrong-study failure the strict flag parsing prevents.
     if let Some(stray) = args.positionals.first() {
         bail!("unexpected argument '{stray}' (list flags take comma-separated values, e.g. --machines 2,4,8)");
+    }
+    // Same logic for a typo'd flag: reject anything outside the table.
+    let known: Vec<&str> = SWEEP_FLAGS.iter().map(|f| f.name).collect();
+    let unknown = args.unknown_flags(&known);
+    if !unknown.is_empty() {
+        bail!(
+            "unknown flag --{} for sweep (see `ds sweep --help`)",
+            unknown.join(", --")
+        );
     }
     let cfg = match args.get("config") {
         Some(_) => load_config(args)?,
@@ -305,6 +471,43 @@ fn sweep(args: &Args) -> Result<()> {
         None if args.flag("volatility") => bail!("missing value for --volatility"),
         None => vec![Volatility::Low],
     };
+    let allocations: Vec<AllocationStrategy> = match args.get_list("allocation") {
+        Some(items) if !items.is_empty() => items
+            .iter()
+            .map(|s| {
+                AllocationStrategy::parse(s).ok_or_else(|| {
+                    anyhow!(
+                        "allocation must be lowest-price|diversified|capacity-optimized, got '{s}'"
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        Some(_) => bail!("missing value for --allocation"),
+        None if args.flag("allocation") => bail!("missing value for --allocation"),
+        None => vec![AllocationStrategy::LowestPrice],
+    };
+    // Instance sets: comma separates sets, '+' joins the types inside one
+    // (`--instance-types m5.large+c5.xlarge:2,m5.xlarge`).
+    let instance_sets: Vec<Vec<InstanceSlot>> = match args.get_list("instance-types") {
+        Some(items) if !items.is_empty() => items
+            .iter()
+            .map(|set| {
+                let slots = set
+                    .split('+')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .map(|s| InstanceSlot::parse(s).map_err(|e| anyhow!(e)))
+                    .collect::<Result<Vec<InstanceSlot>>>()?;
+                if slots.is_empty() {
+                    bail!("empty instance set in --instance-types");
+                }
+                Ok(slots)
+            })
+            .collect::<Result<Vec<_>>>()?,
+        Some(_) => bail!("missing value for --instance-types"),
+        None if args.flag("instance-types") => bail!("missing value for --instance-types"),
+        None => vec![Vec::new()],
+    };
     let cv = parse_scalar(args, "job-cv", 0.3f64)?;
     let stall_prob = parse_scalar(args, "stall-prob", 0.0f64)?;
     let fail_prob = parse_scalar(args, "fail-prob", 0.0f64)?;
@@ -324,6 +527,8 @@ fn sweep(args: &Args) -> Result<()> {
         volatilities,
         visibilities,
         cluster_machines: machines,
+        allocations,
+        instance_sets,
         models,
     };
     let threads = parse_scalar(args, "threads", default_threads())?.max(1);
@@ -335,6 +540,8 @@ fn sweep(args: &Args) -> Result<()> {
         )
         .context("parsing Fleet file")?;
     }
+    plan.fleet.on_demand_base =
+        parse_scalar(args, "on-demand-base", plan.fleet.on_demand_base)?;
     let preamble = format!(
         "sweep: {} scenarios x {} seeds = {} cells on {} threads ({} jobs/cell)",
         plan.matrix.scenarios().len(),

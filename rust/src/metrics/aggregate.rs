@@ -4,19 +4,31 @@
 //! set of cells that share a configuration and differ only by seed.  The
 //! types here reduce a scenario's cells into distribution summaries
 //! (mean/p50/p95 makespan, jobs/hour, cost, duplicate-work rate,
-//! dead-letter rate) plus summed fleet counters, and render the whole
+//! dead-letter rate) plus summed fleet counters and a merged
+//! per-capacity-pool cost/interruption breakdown, and render the whole
 //! sweep as a [`Table`] or as JSON.
 //!
 //! Everything is computed in a fixed order from already-deterministic
 //! per-cell reports, so a [`SweepReport`] is bit-identical regardless of
 //! how many worker threads produced the cells — the determinism tests
 //! pin exactly that.
+//!
+//! ```
+//! use ds_rs::metrics::Aggregate;
+//!
+//! let a = Aggregate::from_values(&[4.0, 1.0, 3.0, 2.0]);
+//! assert_eq!((a.n, a.min, a.max), (4, 1.0, 4.0));
+//! assert!((a.mean - 2.5).abs() < 1e-12);
+//! assert!(a.min <= a.p50 && a.p50 <= a.p95 && a.p95 <= a.max);
+//! ```
+
+use std::collections::BTreeMap;
 
 use crate::json::Value;
 use crate::sim::clock::fmt_dur;
 use crate::sim::SimTime;
 
-use super::{RunReport, Table};
+use super::{PoolBreakdown, RunReport, Table};
 
 /// Distribution summary over a sample of f64s.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -103,6 +115,10 @@ pub struct ScenarioSummary {
     pub duplicate_rate: Aggregate,
     /// Dead-lettered fraction of submitted jobs, over all cells.
     pub dead_letter_rate: Aggregate,
+    /// Per-capacity-pool activity merged across all cells (launches,
+    /// interruptions, machine-hours, dollars summed by pool label),
+    /// sorted by label.
+    pub pools: Vec<PoolBreakdown>,
 }
 
 impl ScenarioSummary {
@@ -131,6 +147,26 @@ impl ScenarioSummary {
             })
             .collect();
         let sum = |f: fn(&RunReport) -> u64| -> u64 { reports.iter().map(|r| f(r)).sum() };
+        // Merge the per-cell pool breakdowns by pool label.  Cells are
+        // passed in a fixed order, so the f64 sums are bit-stable.
+        let mut pool_map: BTreeMap<String, PoolBreakdown> = BTreeMap::new();
+        for r in reports {
+            for p in &r.pools {
+                let e = pool_map
+                    .entry(p.pool.clone())
+                    .or_insert_with(|| PoolBreakdown {
+                        pool: p.pool.clone(),
+                        launched: 0,
+                        interrupted: 0,
+                        machine_hours: 0.0,
+                        cost_usd: 0.0,
+                    });
+                e.launched += p.launched;
+                e.interrupted += p.interrupted;
+                e.machine_hours += p.machine_hours;
+                e.cost_usd += p.cost_usd;
+            }
+        }
         Self {
             label: label.to_string(),
             cells: reports.len(),
@@ -148,6 +184,7 @@ impl ScenarioSummary {
             cost_usd: Aggregate::from_values(&costs),
             duplicate_rate: Aggregate::from_values(&dup_rates),
             dead_letter_rate: Aggregate::from_values(&dlq_rates),
+            pools: pool_map.into_values().collect(),
         }
     }
 
@@ -180,7 +217,21 @@ impl ScenarioSummary {
             .with("cost_usd", self.cost_usd.to_json())
             .with("duplicate_rate", self.duplicate_rate.to_json())
             .with("dead_letter_rate", self.dead_letter_rate.to_json())
+            .with(
+                "pools",
+                Value::Arr(self.pools.iter().map(pool_to_json).collect()),
+            )
     }
+}
+
+/// JSON shape of one merged [`PoolBreakdown`] row.
+fn pool_to_json(p: &PoolBreakdown) -> Value {
+    Value::obj()
+        .with("pool", p.pool.as_str())
+        .with("launched", p.launched)
+        .with("interrupted", p.interrupted)
+        .with("machine_hours", p.machine_hours)
+        .with("cost_usd", p.cost_usd)
 }
 
 /// The whole sweep: one [`ScenarioSummary`] per scenario, in matrix order.
@@ -263,6 +314,13 @@ mod tests {
                 ec2_usd: cost,
                 ..Default::default()
             },
+            pools: vec![PoolBreakdown {
+                pool: "m5.xlarge".into(),
+                launched: 3,
+                interrupted: 1,
+                machine_hours: 2.0,
+                cost_usd: cost,
+            }],
             jobs_submitted: completed + 2,
         }
     }
@@ -307,6 +365,13 @@ mod tests {
         assert!((s.makespan_s.max - 7200.0).abs() < 1e-9);
         assert!((s.cost_usd.mean - 0.75).abs() < 1e-12);
         assert!(s.dead_letter_rate.mean > 0.0);
+        // Pool rows merge by label across cells.
+        assert_eq!(s.pools.len(), 1);
+        assert_eq!(s.pools[0].pool, "m5.xlarge");
+        assert_eq!(s.pools[0].launched, 9);
+        assert_eq!(s.pools[0].interrupted, 3);
+        assert!((s.pools[0].machine_hours - 6.0).abs() < 1e-12);
+        assert!((s.pools[0].cost_usd - 2.25).abs() < 1e-12);
     }
 
     #[test]
@@ -322,6 +387,11 @@ mod tests {
         assert!(rendered.contains("10/12"), "{rendered}");
         let j = rep.to_json();
         assert_eq!(j.get("total_cells").and_then(Value::as_u64), Some(1));
+        // Per-pool cost/interruption rows ride along in the JSON.
+        let scenario = &j.get("scenarios").and_then(Value::as_arr).unwrap()[0];
+        let pools = scenario.get("pools").and_then(Value::as_arr).unwrap();
+        assert_eq!(pools[0].get("pool").and_then(Value::as_str), Some("m5.xlarge"));
+        assert_eq!(pools[0].get("interrupted").and_then(Value::as_u64), Some(1));
         let parsed = crate::json::parse(&j.pretty()).unwrap();
         assert_eq!(parsed, j);
     }

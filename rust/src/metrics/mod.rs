@@ -3,6 +3,7 @@
 pub mod aggregate;
 
 pub use aggregate::{Aggregate, ScenarioSummary, SweepReport};
+pub use crate::aws::ec2::PoolBreakdown;
 
 use crate::aws::billing::CostReport;
 use crate::sim::clock::{fmt_dur, SimTime, HOUR};
@@ -46,6 +47,10 @@ pub struct RunReport {
     /// Whether monitor cleanup completed (all resources torn down).
     pub cleaned_up: bool,
     pub cost: CostReport,
+    /// Per-capacity-pool slice of the EC2 activity (launches,
+    /// interruptions, machine-hours, dollars), sorted by pool label.
+    /// On-demand usage of a type is its own `"<type>/on-demand"` row.
+    pub pools: Vec<PoolBreakdown>,
     /// Jobs submitted initially.
     pub jobs_submitted: u64,
 }
@@ -130,6 +135,12 @@ impl RunReport {
             self.cost.spot_savings_factor(),
             self.cost.overhead_fraction() * 100.0
         ));
+        for p in &self.pools {
+            s.push_str(&format!(
+                "  pool {}: {} launched, {} interrupted, {:.2} machine-h, ${:.4}\n",
+                p.pool, p.launched, p.interrupted, p.machine_hours, p.cost_usd
+            ));
+        }
         s
     }
 }
@@ -196,6 +207,7 @@ mod tests {
             ended_at: 2 * HOUR + 10 * 60_000,
             cleaned_up: true,
             cost: CostReport::default(),
+            pools: vec![],
             jobs_submitted: 100,
         }
     }

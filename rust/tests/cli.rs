@@ -26,6 +26,46 @@ fn usage_lists_commands() {
 }
 
 #[test]
+fn usage_and_help_list_full_sweep_flag_set() {
+    // The usage text and `ds sweep --help` document every sweep flag —
+    // including the allocation-strategy and instance-set axes — so the
+    // docs can't drift from the strict parser (typos are rejected
+    // against the same table).
+    let flags = [
+        "--config", "--job", "--fleet", "--plate", "--wells", "--sites", "--seeds",
+        "--seed-base", "--machines", "--visibility-s", "--volatility", "--allocation",
+        "--instance-types", "--on-demand-base", "--job-mean-s", "--job-cv", "--stall-prob",
+        "--fail-prob", "--threads", "--json",
+    ];
+    for out in [run_ok(&[]), run_ok(&["sweep", "--help"])] {
+        for f in flags {
+            assert!(out.contains(f), "sweep flag {f} undocumented in: {out}");
+        }
+    }
+}
+
+#[test]
+fn sweep_rejects_unknown_flag() {
+    let out = ds().args(["sweep", "--machnies", "2,4"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown flag --machnies"), "{err}");
+    assert!(err.contains("sweep --help"), "{err}");
+}
+
+#[test]
+fn run_and_make_fleet_file_have_help() {
+    let run_help = run_ok(&["run", "--help"]);
+    for f in ["--queue-downscale", "--cheapest", "--no-monitor", "--pjrt"] {
+        assert!(run_help.contains(f), "run flag {f} undocumented: {run_help}");
+    }
+    let fleet_help = run_ok(&["make-fleet-file", "--help"]);
+    for key in ["INSTANCE_TYPES", "ALLOCATION_STRATEGY", "ON_DEMAND_BASE"] {
+        assert!(fleet_help.contains(key), "fleet key {key} undocumented: {fleet_help}");
+    }
+}
+
+#[test]
 fn unknown_command_fails_with_hint() {
     let out = ds().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
@@ -122,6 +162,91 @@ fn sweep_json_output_parses() {
     assert_eq!(v.get("total_cells").and_then(ds_rs::json::Value::as_u64), Some(2));
     let scenarios = v.get("scenarios").and_then(ds_rs::json::Value::as_arr).unwrap();
     assert_eq!(scenarios.len(), 1);
+}
+
+#[test]
+fn allocation_strategy_sweep_reports_per_pool_json() {
+    // The acceptance path: a strategy-comparison sweep whose JSON report
+    // carries per-pool cost and interruption counts.
+    let out = run_ok(&[
+        "sweep",
+        "--seeds",
+        "1",
+        "--machines",
+        "2",
+        "--allocation",
+        "lowest-price,diversified,capacity-optimized",
+        "--instance-types",
+        "m5.large+c5.xlarge",
+        "--wells",
+        "2",
+        "--sites",
+        "1",
+        "--job-mean-s",
+        "30",
+        "--json",
+    ]);
+    let v = ds_rs::json::parse(out.trim()).unwrap();
+    let scenarios = v.get("scenarios").and_then(ds_rs::json::Value::as_arr).unwrap();
+    assert_eq!(scenarios.len(), 3, "one scenario per strategy");
+    for s in scenarios {
+        let label = s.get("label").and_then(ds_rs::json::Value::as_str).unwrap();
+        assert!(label.contains("alloc="), "{label}");
+        let pools = s.get("pools").and_then(ds_rs::json::Value::as_arr).unwrap();
+        assert!(!pools.is_empty(), "no pools in {label}");
+        for p in pools {
+            assert!(p.get("cost_usd").and_then(ds_rs::json::Value::as_f64).is_some());
+            assert!(p.get("interrupted").and_then(ds_rs::json::Value::as_u64).is_some());
+        }
+    }
+    // Diversified spread across both pools in its scenario.
+    let diversified = scenarios
+        .iter()
+        .find(|s| {
+            s.get("label")
+                .and_then(ds_rs::json::Value::as_str)
+                .is_some_and(|l| l.contains("alloc=diversified"))
+        })
+        .unwrap();
+    let pools = diversified.get("pools").and_then(ds_rs::json::Value::as_arr).unwrap();
+    assert!(pools.len() >= 2, "diversified used one pool: {pools:?}");
+}
+
+#[test]
+fn describe_reports_per_type_packing() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-desc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("config.json");
+    run_ok(&["make-config", "--out", cfg.to_str().unwrap()]);
+    let out = run_ok(&["describe", "--config", cfg.to_str().unwrap()]);
+    assert!(out.contains("placement ("), "{out}");
+    assert!(out.contains("m5.xlarge: fits"), "{out}");
+
+    // With --fleet, the Fleet file's INSTANCE_TYPES (the machines the
+    // run will actually use) drive the packing table instead.
+    let mut fleet = ds_rs::config::FleetSpec::template("us-east-1").unwrap();
+    fleet.instance_types = vec![
+        ds_rs::aws::ec2::InstanceSlot::new("m5.large"),
+        ds_rs::aws::ec2::InstanceSlot {
+            name: "c5.xlarge".into(),
+            weight: 2,
+        },
+    ];
+    fleet.allocation_strategy = ds_rs::aws::ec2::AllocationStrategy::Diversified;
+    let fleet_path = dir.join("fleet.json");
+    std::fs::write(&fleet_path, fleet.to_json().pretty()).unwrap();
+    let out = run_ok(&[
+        "describe",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--fleet",
+        fleet_path.to_str().unwrap(),
+    ]);
+    assert!(out.contains("m5.large: fits"), "{out}");
+    assert!(out.contains("c5.xlarge:2: fits"), "{out}");
+    assert!(!out.contains("m5.xlarge: fits"), "{out}");
+    assert!(out.contains("allocation=diversified"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]

@@ -5,6 +5,7 @@
 //! a pure function of its plan — worker-thread count affects wall-clock
 //! only, never a single bit of the output.  These tests pin both.
 
+use ds_rs::aws::ec2::{AllocationStrategy, InstanceSlot};
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
@@ -102,6 +103,11 @@ fn sweep_cell_matches_standalone_run() {
     let mut cfg = plan.base_cfg.clone();
     cfg.cluster_machines = sc.machines;
     cfg.sqs_message_visibility = sc.visibility;
+    let mut fleet = plan.fleet.clone();
+    fleet.allocation_strategy = sc.allocation;
+    if !sc.instance_set.is_empty() {
+        fleet.instance_types = sc.instance_set.clone();
+    }
     let mut ex = ModeledExecutor {
         model: sc.model.clone(),
         ..Default::default()
@@ -111,6 +117,59 @@ fn sweep_cell_matches_standalone_run() {
         volatility: sc.volatility,
         ..Default::default()
     };
-    let standalone = run_full(&cfg, &plan.jobs, &plan.fleet, &mut ex, opts).unwrap();
+    let standalone = run_full(&cfg, &plan.jobs, &fleet, &mut ex, opts).unwrap();
     assert_eq!(cell.report, standalone);
+}
+
+/// The heterogeneous-fleet axes (allocation strategy × instance set, with
+/// weighted slots and an on-demand base) must not disturb the
+/// thread-count invariance: one plan, one bit-identical report.
+fn heterogeneous_sweep_plan() -> SweepPlan {
+    let mut base = cfg();
+    base.machine_price = 0.20; // per weighted unit
+    let jobs = JobSpec::plate("P1", 5, 2, vec![]); // 10 jobs per cell
+    let matrix = ScenarioMatrix {
+        seeds: (0..4).collect(),
+        cluster_machines: vec![3],
+        volatilities: vec![ds_rs::aws::ec2::Volatility::Medium],
+        allocations: AllocationStrategy::ALL.to_vec(),
+        instance_sets: vec![
+            vec![
+                InstanceSlot::new("m5.large"),
+                InstanceSlot {
+                    name: "m5.xlarge".into(),
+                    weight: 2,
+                },
+                InstanceSlot::new("c5.xlarge"),
+            ],
+        ],
+        models: vec![DurationModel {
+            mean_s: 40.0,
+            cv: 0.3,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    let mut plan = SweepPlan::new(base, jobs, matrix);
+    plan.fleet.on_demand_base = 1;
+    plan
+}
+
+#[test]
+fn heterogeneous_sweep_identical_at_1_2_and_8_threads() {
+    let plan = heterogeneous_sweep_plan();
+    let one = run_sweep(&plan, 1).unwrap();
+    let two = run_sweep(&plan, 2).unwrap();
+    let eight = run_sweep(&plan, 8).unwrap();
+    assert_eq!(one.report, two.report);
+    assert_eq!(one.report, eight.report);
+    assert_eq!(one.cells, two.cells);
+    assert_eq!(one.cells, eight.cells);
+    // Sanity: the axes actually produced three distinct scenarios with
+    // per-pool activity in every report.
+    assert_eq!(one.report.scenarios.len(), 3);
+    for s in &one.report.scenarios {
+        assert!(!s.pools.is_empty(), "no pool rows for '{}'", s.label);
+        assert!(s.pools.iter().any(|p| p.pool.ends_with("/on-demand")));
+    }
 }

@@ -2,7 +2,9 @@
 //! (DESIGN.md §6), using the in-house forall harness.
 
 use ds_rs::aws::billing::CostReport;
-use ds_rs::aws::ec2::{SpotMarket, Volatility};
+use ds_rs::aws::ec2::{
+    AllocationStrategy, Ec2, FleetEvent, InstanceSlot, SpotFleetSpec, SpotMarket, Volatility,
+};
 use ds_rs::aws::sqs::{RedrivePolicy, Sqs};
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
@@ -202,9 +204,11 @@ fn prop_json_roundtrip() {
 #[test]
 fn prop_every_job_accounted_across_configs() {
     // The big one: for random (machines, tasks, cores, visibility, mean
-    // duration, stall/fail rates, volatility) configurations, every
-    // submitted job ends completed, skipped, or dead-lettered, and the
-    // monitor always cleans up within the time cap.
+    // duration, stall/fail rates, instance set, allocation strategy,
+    // on-demand base) configurations, every submitted job ends completed,
+    // skipped, or dead-lettered; the monitor always cleans up within the
+    // time cap; and the per-pool breakdown conserves the EC2 bill.
+    const TYPE_POOL: &[&str] = &["m5.large", "m5.xlarge", "c5.xlarge", "r5.xlarge"];
     forall_r(
         "run-accounting",
         12,
@@ -218,21 +222,37 @@ fn prop_every_job_accounted_across_configs() {
             let stall = if rng.chance(0.3) { 0.05 } else { 0.0 };
             let fail = if rng.chance(0.3) { 0.10 } else { 0.0 };
             let jobs = 8 + rng.below(40);
+            let n_types = 1 + rng.below(TYPE_POOL.len() as u64) as usize;
+            let first_type = rng.below(TYPE_POOL.len() as u64) as usize;
+            let alloc = AllocationStrategy::ALL[rng.below(3) as usize];
+            let od_base = rng.below(2) as u32; // 0 or 1, always <= machines
             let seed = rng.next_u64();
-            (machines, tasks, cores, vis_min, mean_s, stall, fail, jobs, seed)
+            (
+                (machines, tasks, cores, vis_min, mean_s, stall, fail, jobs, seed),
+                (n_types, first_type, alloc, od_base),
+            )
         },
-        |&(machines, tasks, cores, vis_min, mean_s, stall, fail, jobs_n, seed)| {
+        |&(
+            (machines, tasks, cores, vis_min, mean_s, stall, fail, jobs_n, seed),
+            (n_types, first_type, alloc, od_base),
+        )| {
             let cfg = AppConfig {
                 cluster_machines: machines,
                 tasks_per_machine: tasks,
                 docker_cores: cores,
                 machine_types: vec!["m5.xlarge".into()],
-                machine_price: 0.10,
+                // Generous per-unit bid so every chosen pool is usable.
+                machine_price: 0.30,
                 sqs_message_visibility: vis_min * MINUTE,
                 ..Default::default()
             };
             let jobs = JobSpec::plate("P", jobs_n as u32, 1, vec![]);
-            let fleet = FleetSpec::template("us-east-1").unwrap();
+            let mut fleet = FleetSpec::template("us-east-1").unwrap();
+            fleet.instance_types = (0..n_types)
+                .map(|i| InstanceSlot::new(TYPE_POOL[(first_type + i) % TYPE_POOL.len()]))
+                .collect();
+            fleet.allocation_strategy = alloc;
+            fleet.on_demand_base = od_base;
             let mut ex = ModeledExecutor {
                 model: DurationModel {
                     mean_s,
@@ -257,6 +277,179 @@ fn prop_every_job_accounted_across_configs() {
             }
             if report.cost.total_usd() <= 0.0 {
                 return Err("zero cost for a real run".into());
+            }
+            // Pool conservation: the per-pool slices sum to the EC2 bill.
+            let pool_cost: f64 = report.pools.iter().map(|p| p.cost_usd).sum();
+            if (pool_cost - report.cost.ec2_usd).abs() > 1e-9 * report.cost.ec2_usd.max(1.0) {
+                return Err(format!(
+                    "pool breakdown leaks: pools={pool_cost} ec2={}",
+                    report.cost.ec2_usd
+                ));
+            }
+            let launched: u64 = report.pools.iter().map(|p| p.launched).sum();
+            if launched != report.stats.instances_launched {
+                return Err(format!(
+                    "pool launch counts drifted: {launched} != {}",
+                    report.stats.instances_launched
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Allocation-strategy invariants (DESIGN.md §2: heterogeneous fleets)
+// ---------------------------------------------------------------------------
+
+const ALLOC_TYPES: &[&str] = &["m5.large", "m5.xlarge", "c5.xlarge", "r5.xlarge", "c5.2xlarge"];
+
+/// Launch `target` weight-1 units with `alloc` on a fresh market and
+/// return (per-type launch counts, sum of launch-event prices).
+fn fulfill(
+    seed: u64,
+    types: &[&str],
+    alloc: AllocationStrategy,
+    target: u32,
+) -> (Vec<(String, u32)>, f64) {
+    let mut ec2 = Ec2::new(SpotMarket::new(seed, Volatility::Low), SimRng::new(seed ^ 0xF1EE7));
+    let fid = ec2.request_spot_fleet(SpotFleetSpec {
+        target_capacity: target,
+        bid_hourly: 1.0, // generous: every pool eligible in a quiet market
+        slots: types.iter().map(|t| InstanceSlot::new(*t)).collect(),
+        allocation: alloc,
+        on_demand_base: 0,
+    });
+    let evs = ec2.evaluate_fleets(0);
+    let mut price_sum = 0.0;
+    for ev in &evs {
+        if let FleetEvent::InstanceRequested { price, .. } = ev {
+            price_sum += price;
+        }
+    }
+    assert_eq!(ec2.active_weight(fid), target, "generous bid must fulfill");
+    let counts = types
+        .iter()
+        .map(|t| {
+            let n = ec2
+                .all_instances()
+                .iter()
+                .filter(|i| i.itype.name == *t)
+                .count() as u32;
+            (t.to_string(), n)
+        })
+        .collect();
+    (counts, price_sum)
+}
+
+#[test]
+fn prop_diversified_spreads_capacity_evenly() {
+    // With every pool eligible and deep enough, Diversified's per-pool
+    // counts differ by at most one and sum to the target.
+    forall_r(
+        "diversified-spreads",
+        40,
+        0xD1F,
+        |rng| {
+            let k = 2 + rng.below(ALLOC_TYPES.len() as u64 - 1) as usize;
+            let target = 1 + rng.below(60) as u32;
+            let seed = rng.next_u64();
+            (seed, k, target)
+        },
+        |&(seed, k, target)| {
+            let types = &ALLOC_TYPES[..k];
+            let (counts, _) = fulfill(seed, types, AllocationStrategy::Diversified, target);
+            let total: u32 = counts.iter().map(|(_, n)| n).sum();
+            if total != target {
+                return Err(format!("total {total} != target {target}"));
+            }
+            let max = counts.iter().map(|(_, n)| *n).max().unwrap();
+            let min = counts.iter().map(|(_, n)| *n).min().unwrap();
+            if max - min > 1 {
+                return Err(format!("uneven spread: {counts:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_lowest_price_never_pays_more_at_fulfillment() {
+    // In a quiet market (no spike between the strategies' identical
+    // evaluations), LowestPrice's total launch price is <= any other
+    // strategy's for the same request.
+    forall_r(
+        "lowest-price-is-lowest",
+        40,
+        0x10E5,
+        |rng| {
+            let k = 2 + rng.below(ALLOC_TYPES.len() as u64 - 1) as usize;
+            let target = 1 + rng.below(40) as u32;
+            let seed = rng.next_u64();
+            (seed, k, target)
+        },
+        |&(seed, k, target)| {
+            let types = &ALLOC_TYPES[..k];
+            let (_, lowest) = fulfill(seed, types, AllocationStrategy::LowestPrice, target);
+            for alloc in [
+                AllocationStrategy::Diversified,
+                AllocationStrategy::CapacityOptimized,
+            ] {
+                let (_, other) = fulfill(seed, types, alloc, target);
+                if lowest > other + 1e-9 {
+                    return Err(format!(
+                        "lowest-price paid more: {lowest} > {other} ({})",
+                        alloc.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fulfilled_weight_matches_request() {
+    // With weighted slots and a generous bid, fulfilled weighted capacity
+    // reaches the target and overshoots by less than the largest weight.
+    forall_r(
+        "weighted-fulfillment",
+        40,
+        0x3E16,
+        |rng| {
+            let k = 1 + rng.below(3) as usize;
+            let weights: Vec<u32> = (0..k).map(|_| 1 + rng.below(4) as u32).collect();
+            let target = 1 + rng.below(50) as u32;
+            let alloc = AllocationStrategy::ALL[rng.below(3) as usize];
+            let seed = rng.next_u64();
+            (seed, weights, target, alloc)
+        },
+        |(seed, weights, target, alloc)| {
+            let slots: Vec<InstanceSlot> = weights
+                .iter()
+                .enumerate()
+                .map(|(i, &w)| InstanceSlot {
+                    name: ALLOC_TYPES[i].to_string(),
+                    weight: w,
+                })
+                .collect();
+            let max_w = *weights.iter().max().unwrap();
+            let mut ec2 =
+                Ec2::new(SpotMarket::new(*seed, Volatility::Low), SimRng::new(seed ^ 0xBEEF));
+            let fid = ec2.request_spot_fleet(SpotFleetSpec {
+                target_capacity: *target,
+                bid_hourly: 1.0,
+                slots,
+                allocation: *alloc,
+                on_demand_base: 0,
+            });
+            ec2.evaluate_fleets(0);
+            let got = ec2.active_weight(fid);
+            if got < *target {
+                return Err(format!("underfilled: {got} < {target}"));
+            }
+            if got >= *target + max_w {
+                return Err(format!("overshot by a full slot: {got} >= {target}+{max_w}"));
             }
             Ok(())
         },
@@ -297,6 +490,13 @@ fn gen_report(rng: &mut SimRng) -> RunReport {
             machine_hours,
             on_demand_equivalent_usd: machine_hours * 0.096,
         },
+        pools: vec![ds_rs::metrics::PoolBreakdown {
+            pool: "m5.xlarge".into(),
+            launched: rng.below(64),
+            interrupted: rng.below(16),
+            machine_hours,
+            cost_usd: machine_hours * 0.03,
+        }],
         jobs_submitted: submitted,
     }
 }
