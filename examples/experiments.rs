@@ -1,4 +1,4 @@
-//! Experiment harness: regenerates every table in DESIGN.md §4 (T1–T12).
+//! Experiment harness: regenerates every table in DESIGN.md §4 (T1–T13).
 //!
 //!     cargo run --release --example experiments [t1 t2 … | all]
 //!
@@ -11,6 +11,7 @@
 //! instead of one arbitrary seed's draw.
 
 use ds_rs::aws::ec2::Volatility;
+use ds_rs::aws::s3::dataplane::NetProfile;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::coordinator::sweep::{default_threads, run_sweep, ScenarioMatrix, SweepPlan};
@@ -622,6 +623,67 @@ fn t12() {
               high volatility at comparable cost; capacity-optimized sits between.");
 }
 
+/// T13 — compute-bound → storage-bound: throughput vs CLUSTER_MACHINES
+/// at a fixed per-job data footprint on a narrow (1 Gbit/s) bucket.
+/// Doubling machines stops helping once the fleet's aggregate byte
+/// demand exceeds the bucket's throughput — the knee — and the
+/// bottleneck attribution column says *why* (bucket-bound share of
+/// constrained flow time → ~100%).
+fn t13() {
+    println!("\n== T13: storage-bound knee (384 jobs, 256 MB in / ~32 MB out, narrow bucket, 2 seeds) ==");
+    let machine_axis = vec![2u32, 4, 8, 16, 32];
+    let input_mb = 256.0;
+    let mean_s = 90.0;
+    let profile = NetProfile::narrow();
+    let matrix = ScenarioMatrix {
+        seeds: vec![131, 132],
+        cluster_machines: machine_axis.clone(),
+        input_mbs: vec![input_mb],
+        net_profiles: vec![profile.clone()],
+        models: vec![model(mean_s)],
+        ..Default::default()
+    };
+    let jobs = JobSpec::plate("P", 48, 8, vec![]); // 384 jobs
+    let report = sweep_report(
+        cfg(1, 10 * MINUTE),
+        jobs,
+        matrix,
+        RunOptions {
+            max_sim_time: 3 * 24 * HOUR,
+            ..Default::default()
+        },
+    );
+    // Bucket ceiling in jobs/h: every job moves ~input + input/8 bytes
+    // through the one bucket.
+    let bytes_per_job = input_mb * 1e6 * (1.0 + 1.0 / 8.0);
+    let bucket_ceiling = profile.bucket_bytes_per_ms() * 1000.0 * 3600.0 / bytes_per_job;
+    let mut table = Table::new(&[
+        "machines", "drained", "makespan p50", "jobs/h", "compute ideal", "bucket ceiling",
+        "bucket-bound %", "GB moved", "GB wasted", "egress $",
+    ]);
+    for (m, s) in labelled(&machine_axis, &report) {
+        let ideal = f64::from(m * 4) * 3600.0 / mean_s;
+        table.row(&[
+            m.to_string(),
+            format!("{}/{}", s.drained, s.cells),
+            s.makespan_cell(s.makespan_s.p50),
+            format!("{:.0}", s.jobs_per_hour.mean),
+            format!("{ideal:.0}"),
+            format!("{bucket_ceiling:.0}"),
+            format!("{:.0}", s.data.bucket_bound_fraction() * 100.0),
+            format!("{:.1}", s.data.total_bytes() as f64 / 1e9),
+            format!("{:.1}", s.data.bytes_wasted as f64 / 1e9),
+            format!("{:.4}", s.data.egress_usd),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "shape check: jobs/h tracks min(compute ideal, bucket ceiling): linear while compute-bound, \
+         flat past the knee where the *bucket* (not the fleet) is the bottleneck — the bucket-bound \
+         column pins the attribution."
+    );
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let all = args.is_empty() || args.iter().any(|a| a == "all");
@@ -661,5 +723,8 @@ fn main() {
     }
     if want("t12") {
         t12();
+    }
+    if want("t13") {
+        t13();
     }
 }

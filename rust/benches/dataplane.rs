@@ -1,0 +1,60 @@
+//! Transfer-scheduler throughput: plan/poll events per second vs
+//! concurrent-flow count.
+//!
+//!     cargo bench --bench dataplane
+//!
+//! Every flow start/finish re-plans every rate (max-min progressive
+//! filling is O(links × flows) per boundary), so the interesting number
+//! is how event throughput degrades as the concurrent-flow population
+//! grows.  The run driver keeps populations in the tens-to-hundreds
+//! (cores × machines); this bench sweeps well past that.
+
+use std::time::Instant;
+
+use ds_rs::aws::s3::dataplane::{DataPlane, Direction, NetProfile};
+
+fn episode(flows: usize) -> (u64, u64) {
+    let mut plane = DataPlane::new(NetProfile::standard());
+    let mut events: u64 = 0;
+    // Staggered arrivals: 4 flows per instance, alternating directions,
+    // two buckets, 8 MB each — a busy mid-run fleet in miniature.
+    for i in 0..flows {
+        plane.start(
+            i as u64,
+            (i / 4) as u64,
+            1.25,
+            if i % 2 == 0 { "data" } else { "logs" },
+            if i % 3 == 0 { Direction::Upload } else { Direction::Download },
+            8_000_000,
+        );
+        events += 1;
+    }
+    while let Some(t) = plane.next_event() {
+        events += 1 + plane.poll(t).len() as u64;
+    }
+    let st = plane.stats();
+    assert_eq!(st.flows_completed, flows as u64, "bench must drain");
+    (events, st.bytes_downloaded + st.bytes_uploaded)
+}
+
+fn main() {
+    println!(
+        "{:>8} {:>10} {:>12} {:>12} {:>14}",
+        "flows", "events", "wall ms", "events/s", "GB moved"
+    );
+    for &flows in &[8usize, 32, 128, 512] {
+        // Warm-up pass, then the measured one.
+        let _ = episode(flows);
+        let t0 = Instant::now();
+        let (events, bytes) = episode(flows);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:>8} {:>10} {:>12.2} {:>12.0} {:>14.2}",
+            flows,
+            events,
+            wall * 1e3,
+            events as f64 / wall.max(1e-9),
+            bytes as f64 / 1e9
+        );
+    }
+}

@@ -7,6 +7,7 @@ use super::billing::{compute_report, CostReport};
 use super::cloudwatch::{Alarms, Logs, Metrics};
 use super::ec2::{Ec2, SpotMarket, Volatility};
 use super::ecs::Ecs;
+use super::s3::dataplane::{DataPlane, NetProfile};
 use super::s3::S3;
 use super::sqs::Sqs;
 
@@ -19,6 +20,8 @@ pub struct AwsAccount {
     pub metrics: Metrics,
     pub alarms: Alarms,
     pub logs: Logs,
+    /// Timed S3 transfers (the bandwidth-aware data plane).
+    pub net: DataPlane,
     /// Integrated GB-hours of S3 storage (sampled by the event loop).
     pub s3_gb_hours: f64,
     last_storage_sample: SimTime,
@@ -37,6 +40,7 @@ impl AwsAccount {
             metrics: Metrics::new(),
             alarms: Alarms::new(),
             logs: Logs::new(),
+            net: DataPlane::new(NetProfile::default()),
             s3_gb_hours: 0.0,
             last_storage_sample: 0,
         }
@@ -64,6 +68,7 @@ impl AwsAccount {
             self.s3.stats(),
             self.s3_gb_hours,
             self.metrics.put_count(),
+            self.net.stats(),
         )
     }
 }

@@ -4,22 +4,32 @@
 //! T6 resume savings) and quantifies the paper's "adds negligible costs
 //! to the compute" claim: control-plane requests (SQS + S3 + CloudWatch)
 //! are metered separately from EC2 machine-hours so the coordinator
-//! overhead fraction is reported directly.
+//! overhead fraction is reported directly.  The data plane adds two more
+//! line items: S3 requests issued for timed transfers and egress on
+//! every byte that leaves a bucket (see [`DataBreakdown`]).
 //!
 //! Rates are the 2022-era public price sheet shape: exact values matter
 //! only through the *ratios* experiments report.
 
 use crate::aws::ec2::fleet::CostRecord;
+use crate::aws::s3::dataplane::TransferStats;
 use crate::aws::s3::S3Stats;
 
 /// $/1M SQS requests (standard queue, after free tier).
 pub const SQS_PER_MILLION_REQ: f64 = 0.40;
 /// $/1k S3 PUT/LIST requests.
 pub const S3_PER_1K_PUT: f64 = 0.005;
-/// $/1k S3 GET requests.
+/// $/1k S3 GET requests (HEAD bills in this class too).
 pub const S3_PER_1K_GET: f64 = 0.0004;
 /// $/GB-month S3 standard storage.
 pub const S3_PER_GB_MONTH: f64 = 0.023;
+/// $/GB leaving S3 (cross-AZ/processed-shape rate; in-region raw
+/// transfer is free on the real sheet, but charging the byte flow keeps
+/// storage-bound runs visible in the bill, which is the point).  Metered
+/// only where transfer *time* is modeled — the data plane's flows — so
+/// the store's instantaneous GETs neither re-price pre-data-plane runs
+/// nor double-bill an input a flow already carried.
+pub const S3_PER_GB_EGRESS: f64 = 0.02;
 /// $/1k CloudWatch metric PutMetricData requests (approximation).
 pub const CW_PER_1K_PUTS: f64 = 0.01;
 
@@ -29,6 +39,9 @@ pub struct CostReport {
     pub ec2_usd: f64,
     pub sqs_usd: f64,
     pub s3_usd: f64,
+    /// Egress on the data plane's timed downloads (see
+    /// [`S3_PER_GB_EGRESS`] for why instantaneous GETs are exempt).
+    pub s3_egress_usd: f64,
     pub cloudwatch_usd: f64,
     /// Machine-hours actually billed (spot + on-demand base).
     pub machine_hours: f64,
@@ -40,10 +53,12 @@ pub struct CostReport {
 
 impl CostReport {
     pub fn total_usd(&self) -> f64 {
-        self.ec2_usd + self.sqs_usd + self.s3_usd + self.cloudwatch_usd
+        self.ec2_usd + self.sqs_usd + self.s3_usd + self.s3_egress_usd + self.cloudwatch_usd
     }
 
-    /// Control-plane overhead as a fraction of total ("negligible costs").
+    /// Control-plane overhead as a fraction of total ("negligible
+    /// costs").  Egress is data gravity, not coordination, so it sits in
+    /// the denominator only.
     pub fn overhead_fraction(&self) -> f64 {
         let t = self.total_usd();
         if t == 0.0 {
@@ -63,6 +78,87 @@ impl CostReport {
     }
 }
 
+/// The data-plane slice of a run, the storage analog of the per-pool EC2
+/// breakdown (`PoolBreakdown`): how many bytes moved, what the requests
+/// and egress cost, and *which capacity was the bottleneck* while they
+/// moved.  Threads RunReport → ScenarioSummary → sweep JSON.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DataBreakdown {
+    /// Bytes that flowed S3 → fleet (completed + partial cancelled flows).
+    pub bytes_downloaded: u64,
+    /// Bytes that flowed fleet → S3.
+    pub bytes_uploaded: u64,
+    /// Bytes that flowed and were thrown away (transfers cut short by
+    /// interruption / crash / reaping — the re-download tax).
+    pub bytes_wasted: u64,
+    /// GET requests: instantaneous `GetObject`s plus data-plane downloads.
+    pub get_requests: u64,
+    /// PUT requests: `PutObject`/`DeleteObject` plus data-plane uploads.
+    pub put_requests: u64,
+    /// HEAD probes (billed in the GET class).
+    pub head_requests: u64,
+    /// LIST requests (CHECK_IF_DONE polling; billed in the PUT class).
+    pub list_requests: u64,
+    /// The request slice of `CostReport::s3_usd` (excludes storage).
+    pub request_usd: f64,
+    /// Mirrors `CostReport::s3_egress_usd`.
+    pub egress_usd: f64,
+    /// Flow-milliseconds where the bucket's aggregate throughput was the
+    /// binding constraint — when this dominates, adding machines cannot
+    /// raise throughput (the storage-bound regime).
+    pub bucket_bound_ms: u64,
+    /// Flow-milliseconds where an instance NIC was the binding constraint.
+    pub nic_bound_ms: u64,
+    /// Flow-milliseconds spent waiting on per-request first-byte latency.
+    pub first_byte_wait_ms: u64,
+}
+
+impl DataBreakdown {
+    /// Bytes moved in either direction.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_downloaded + self.bytes_uploaded
+    }
+
+    /// Fraction of constrained flow time the *bucket* (not the fleet's
+    /// NICs) was the bottleneck, in [0, 1].  Near 1 means the fleet is
+    /// waiting on storage: `CLUSTER_MACHINES` has stopped helping.
+    pub fn bucket_bound_fraction(&self) -> f64 {
+        let total = self.bucket_bound_ms + self.nic_bound_ms;
+        if total == 0 {
+            0.0
+        } else {
+            self.bucket_bound_ms as f64 / total as f64
+        }
+    }
+}
+
+/// Reduce raw S3 + transfer counters into the [`DataBreakdown`] view.
+pub fn data_breakdown(s3: S3Stats, net: TransferStats) -> DataBreakdown {
+    let get_requests = s3.get_requests + net.downloads_started;
+    let put_requests = s3.put_requests + net.uploads_started;
+    DataBreakdown {
+        bytes_downloaded: net.bytes_downloaded,
+        bytes_uploaded: net.bytes_uploaded,
+        bytes_wasted: net.bytes_wasted,
+        get_requests,
+        put_requests,
+        head_requests: s3.head_requests,
+        list_requests: s3.list_requests,
+        request_usd: (put_requests + s3.list_requests) as f64 / 1e3 * S3_PER_1K_PUT
+            + (get_requests + s3.head_requests) as f64 / 1e3 * S3_PER_1K_GET,
+        egress_usd: egress_usd(net),
+        bucket_bound_ms: net.bucket_bound_ms,
+        nic_bound_ms: net.nic_bound_ms,
+        first_byte_wait_ms: net.first_byte_wait_ms,
+    }
+}
+
+/// Egress dollars: data-plane download bytes only (see
+/// [`S3_PER_GB_EGRESS`]).
+fn egress_usd(net: TransferStats) -> f64 {
+    net.bytes_downloaded as f64 / 1e9 * S3_PER_GB_EGRESS
+}
+
 /// Build a report from raw service counters.
 pub fn compute_report(
     ec2_records: &[CostRecord],
@@ -71,6 +167,7 @@ pub fn compute_report(
     s3: S3Stats,
     s3_gb_hours: f64,
     cw_metric_puts: u64,
+    net: TransferStats,
 ) -> CostReport {
     let ec2_usd: f64 =
         ec2_records.iter().map(|r| r.cost_usd).sum::<f64>() + ec2_active_accrued_usd;
@@ -88,9 +185,12 @@ pub fn compute_report(
     CostReport {
         ec2_usd,
         sqs_usd: sqs_requests as f64 / 1e6 * SQS_PER_MILLION_REQ,
-        s3_usd: (s3.put_requests + s3.list_requests) as f64 / 1e3 * S3_PER_1K_PUT
-            + s3.get_requests as f64 / 1e3 * S3_PER_1K_GET
+        s3_usd: (s3.put_requests + s3.list_requests + net.uploads_started) as f64 / 1e3
+            * S3_PER_1K_PUT
+            + (s3.get_requests + s3.head_requests + net.downloads_started) as f64 / 1e3
+                * S3_PER_1K_GET
             + s3_gb_hours / 730.0 * S3_PER_GB_MONTH,
+        s3_egress_usd: egress_usd(net),
         cloudwatch_usd: cw_metric_puts as f64 / 1e3 * CW_PER_1K_PUTS,
         machine_hours,
         on_demand_equivalent_usd,
@@ -116,7 +216,15 @@ mod tests {
 
     #[test]
     fn totals_add_up() {
-        let r = compute_report(&[rec(0.30, 10)], 0.0, 1_000_000, S3Stats::default(), 0.0, 0);
+        let r = compute_report(
+            &[rec(0.30, 10)],
+            0.0,
+            1_000_000,
+            S3Stats::default(),
+            0.0,
+            0,
+            TransferStats::default(),
+        );
         assert!((r.ec2_usd - 0.30).abs() < 1e-12);
         assert!((r.sqs_usd - 0.40).abs() < 1e-12);
         assert!((r.total_usd() - 0.70).abs() < 1e-12);
@@ -125,7 +233,15 @@ mod tests {
 
     #[test]
     fn on_demand_equivalent_uses_catalog() {
-        let r = compute_report(&[rec(0.30, 10)], 0.0, 0, S3Stats::default(), 0.0, 0);
+        let r = compute_report(
+            &[rec(0.30, 10)],
+            0.0,
+            0,
+            S3Stats::default(),
+            0.0,
+            0,
+            TransferStats::default(),
+        );
         // 10h of m5.large on demand = 0.96 -> savings factor 3.2x
         assert!((r.on_demand_equivalent_usd - 0.96).abs() < 1e-9);
         assert!((r.spot_savings_factor() - 3.2).abs() < 1e-9);
@@ -138,11 +254,12 @@ mod tests {
         let s3 = S3Stats {
             put_requests: 5_000,
             get_requests: 20_000,
+            head_requests: 0,
             list_requests: 5_000,
             bytes_in: 0,
             bytes_out: 0,
         };
-        let r = compute_report(&[rec(5.0, 100)], 0.0, 100_000, s3, 10.0, 6_000);
+        let r = compute_report(&[rec(5.0, 100)], 0.0, 100_000, s3, 10.0, 6_000, TransferStats::default());
         assert!(
             r.overhead_fraction() < 0.05,
             "overhead={} should be negligible",
@@ -152,7 +269,88 @@ mod tests {
 
     #[test]
     fn accrued_active_cost_included() {
-        let r = compute_report(&[], 1.25, 0, S3Stats::default(), 0.0, 0);
+        let r = compute_report(&[], 1.25, 0, S3Stats::default(), 0.0, 0, TransferStats::default());
         assert!((r.ec2_usd - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn data_plane_bytes_and_requests_reach_the_bill() {
+        let net = TransferStats {
+            bytes_downloaded: 50_000_000_000, // 50 GB out of the bucket
+            bytes_uploaded: 10_000_000_000,
+            downloads_started: 1_000,
+            uploads_started: 1_000,
+            ..Default::default()
+        };
+        let r = compute_report(&[], 0.0, 0, S3Stats::default(), 0.0, 0, net);
+        // Egress: 50 GB x $0.02.
+        assert!((r.s3_egress_usd - 1.0).abs() < 1e-9, "{}", r.s3_egress_usd);
+        // Requests: 1k GETs + 1k PUTs.
+        let want = 1.0 * S3_PER_1K_PUT + 1.0 * S3_PER_1K_GET;
+        assert!((r.s3_usd - want).abs() < 1e-12, "{}", r.s3_usd);
+        assert!((r.total_usd() - (1.0 + want)).abs() < 1e-9);
+        // Egress is not "overhead": a pure-data bill is ~all egress.
+        assert!(r.overhead_fraction() < 0.01, "{}", r.overhead_fraction());
+    }
+
+    #[test]
+    fn head_requests_bill_in_the_get_class() {
+        let with_heads = S3Stats {
+            head_requests: 10_000,
+            ..Default::default()
+        };
+        let as_gets = S3Stats {
+            get_requests: 10_000,
+            ..Default::default()
+        };
+        let a = compute_report(&[], 0.0, 0, with_heads, 0.0, 0, TransferStats::default());
+        let b = compute_report(&[], 0.0, 0, as_gets, 0.0, 0, TransferStats::default());
+        assert_eq!(a.s3_usd, b.s3_usd);
+        assert!(a.s3_usd > 0.0);
+    }
+
+    #[test]
+    fn data_breakdown_merges_store_and_plane_counters() {
+        let s3 = S3Stats {
+            put_requests: 5,
+            get_requests: 7,
+            head_requests: 11,
+            list_requests: 13,
+            bytes_in: 0,
+            bytes_out: 1_000_000_000,
+        };
+        let net = TransferStats {
+            bytes_downloaded: 2_000_000_000,
+            bytes_uploaded: 500_000_000,
+            bytes_wasted: 123,
+            downloads_started: 17,
+            uploads_started: 19,
+            bucket_bound_ms: 300,
+            nic_bound_ms: 100,
+            ..Default::default()
+        };
+        let d = data_breakdown(s3, net);
+        assert_eq!(d.get_requests, 24);
+        assert_eq!(d.put_requests, 24);
+        assert_eq!(d.head_requests, 11);
+        assert_eq!(d.list_requests, 13);
+        assert_eq!(d.total_bytes(), 2_500_000_000);
+        assert_eq!(d.bytes_wasted, 123);
+        // Egress covers the plane's timed downloads only (2 GB x $0.02):
+        // the store's 1 GB of instantaneous GETs stays request-billed,
+        // so pre-data-plane runs keep their exact pre-data-plane bills.
+        assert!((d.egress_usd - 0.04).abs() < 1e-9);
+        assert!((d.bucket_bound_fraction() - 0.75).abs() < 1e-12);
+        // Matches the CostReport line items it mirrors.
+        let r = compute_report(&[], 0.0, 0, s3, 0.0, 0, net);
+        assert_eq!(d.egress_usd, r.s3_egress_usd);
+        assert!((d.request_usd - r.s3_usd).abs() < 1e-12, "no storage term here");
+    }
+
+    #[test]
+    fn empty_breakdown_is_all_zero() {
+        let d = data_breakdown(S3Stats::default(), TransferStats::default());
+        assert_eq!(d, DataBreakdown::default());
+        assert_eq!(d.bucket_bound_fraction(), 0.0);
     }
 }

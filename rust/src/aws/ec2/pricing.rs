@@ -18,18 +18,22 @@ pub struct InstanceType {
     pub spot_base_fraction: f64,
     /// Nominal pool capacity (instances available to this account/region).
     pub pool_capacity: u32,
+    /// Sustainable network bandwidth, Gbit/s (the baseline, not the "up
+    /// to 10 Gbit" burst figure marketing quotes): what the data plane's
+    /// transfer scheduler lets concurrent S3 flows share on this machine.
+    pub nic_gbps: f64,
 }
 
 /// The catalog.  Ordered roughly by size within family.
 pub const INSTANCE_TYPES: &[InstanceType] = &[
-    InstanceType { name: "m5.large",    vcpus: 2,  memory_mb: 8_192,   on_demand_hourly: 0.096, spot_base_fraction: 0.31, pool_capacity: 400 },
-    InstanceType { name: "m5.xlarge",   vcpus: 4,  memory_mb: 16_384,  on_demand_hourly: 0.192, spot_base_fraction: 0.30, pool_capacity: 300 },
-    InstanceType { name: "m5.2xlarge",  vcpus: 8,  memory_mb: 32_768,  on_demand_hourly: 0.384, spot_base_fraction: 0.31, pool_capacity: 200 },
-    InstanceType { name: "m5.4xlarge",  vcpus: 16, memory_mb: 65_536,  on_demand_hourly: 0.768, spot_base_fraction: 0.33, pool_capacity: 120 },
-    InstanceType { name: "m5.12xlarge", vcpus: 48, memory_mb: 196_608, on_demand_hourly: 2.304, spot_base_fraction: 0.35, pool_capacity: 24 },
-    InstanceType { name: "c5.xlarge",   vcpus: 4,  memory_mb: 8_192,   on_demand_hourly: 0.170, spot_base_fraction: 0.32, pool_capacity: 250 },
-    InstanceType { name: "c5.2xlarge",  vcpus: 8,  memory_mb: 16_384,  on_demand_hourly: 0.340, spot_base_fraction: 0.33, pool_capacity: 160 },
-    InstanceType { name: "r5.xlarge",   vcpus: 4,  memory_mb: 32_768,  on_demand_hourly: 0.252, spot_base_fraction: 0.32, pool_capacity: 150 },
+    InstanceType { name: "m5.large",    vcpus: 2,  memory_mb: 8_192,   on_demand_hourly: 0.096, spot_base_fraction: 0.31, pool_capacity: 400, nic_gbps: 0.75 },
+    InstanceType { name: "m5.xlarge",   vcpus: 4,  memory_mb: 16_384,  on_demand_hourly: 0.192, spot_base_fraction: 0.30, pool_capacity: 300, nic_gbps: 1.25 },
+    InstanceType { name: "m5.2xlarge",  vcpus: 8,  memory_mb: 32_768,  on_demand_hourly: 0.384, spot_base_fraction: 0.31, pool_capacity: 200, nic_gbps: 2.5 },
+    InstanceType { name: "m5.4xlarge",  vcpus: 16, memory_mb: 65_536,  on_demand_hourly: 0.768, spot_base_fraction: 0.33, pool_capacity: 120, nic_gbps: 5.0 },
+    InstanceType { name: "m5.12xlarge", vcpus: 48, memory_mb: 196_608, on_demand_hourly: 2.304, spot_base_fraction: 0.35, pool_capacity: 24,  nic_gbps: 12.0 },
+    InstanceType { name: "c5.xlarge",   vcpus: 4,  memory_mb: 8_192,   on_demand_hourly: 0.170, spot_base_fraction: 0.32, pool_capacity: 250, nic_gbps: 1.25 },
+    InstanceType { name: "c5.2xlarge",  vcpus: 8,  memory_mb: 16_384,  on_demand_hourly: 0.340, spot_base_fraction: 0.33, pool_capacity: 160, nic_gbps: 2.5 },
+    InstanceType { name: "r5.xlarge",   vcpus: 4,  memory_mb: 32_768,  on_demand_hourly: 0.252, spot_base_fraction: 0.32, pool_capacity: 150, nic_gbps: 1.25 },
 ];
 
 impl InstanceType {
@@ -79,6 +83,17 @@ mod tests {
         let xxl = instance_type("m5.2xlarge").unwrap();
         assert!((xl.on_demand_hourly / l.on_demand_hourly - 2.0).abs() < 0.01);
         assert!((xxl.on_demand_hourly / xl.on_demand_hourly - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn nic_bandwidth_scales_with_size_within_family() {
+        let l = instance_type("m5.large").unwrap();
+        let xl = instance_type("m5.xlarge").unwrap();
+        let xxxxl = instance_type("m5.4xlarge").unwrap();
+        assert!(l.nic_gbps < xl.nic_gbps && xl.nic_gbps < xxxxl.nic_gbps);
+        for t in INSTANCE_TYPES {
+            assert!(t.nic_gbps > 0.0, "{} needs a NIC", t.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,680 @@
+//! Bandwidth-aware S3 data plane: timed `GetObject`/`PutObject` flows.
+//!
+//! The object store in [`super`] answers every call instantly; this
+//! module adds the part the paper's storage-bound workflows live and die
+//! by — *moving the bytes takes time*.  Each transfer becomes a **flow**
+//! competing for two capacities:
+//!
+//! * the **instance NIC** (per-type, from the EC2 shape sheet's
+//!   `nic_gbps`), shared by every flow on that machine, and
+//! * the **bucket's aggregate throughput** (from the run's
+//!   [`NetProfile`]), shared by every flow touching that bucket, plus a
+//!   per-request first-byte latency before any byte moves.
+//!
+//! Concurrent flows share each capacity **max-min fairly** (progressive
+//! filling): the most contended link is found, its flows frozen at the
+//! fair share, the residual headroom redistributed, repeated until every
+//! flow is rate-assigned.  Rates therefore only change when a flow
+//! starts, activates, finishes, or is cancelled; between those instants
+//! transfers progress linearly, so the plane is a plain discrete-event
+//! process on the run's integer-ms heap:
+//!
+//! * the driver calls [`DataPlane::start`] / [`DataPlane::cancel_instance`]
+//!   as jobs and machines come and go,
+//! * schedules a wake-up at [`DataPlane::next_event`], and
+//! * collects finished transfers with [`DataPlane::poll`].
+//!
+//! Everything is deterministic: no RNG, `BTreeMap` iteration orders, and
+//! f64 arithmetic in fixed order — a data-shaped sweep is bit-identical
+//! at any worker-thread count.
+//!
+//! ```
+//! use ds_rs::aws::s3::dataplane::{DataPlane, Direction, NetProfile};
+//!
+//! let mut plane = DataPlane::new(NetProfile::standard());
+//! // One 10 MB download on instance 1 (1.25 Gbit/s NIC, uncontended):
+//! // 30 ms first byte, then 10e6 B / 156250 B-per-ms = 64 ms on the wire.
+//! let flow = plane.start(0, 1, 1.25, "ds-data", Direction::Download, 10_000_000);
+//! assert_eq!(plane.next_event(), Some(30)); // first byte arrives
+//! assert!(plane.poll(30).is_empty());       // …but nothing finished yet
+//! let eta = plane.next_event().unwrap();
+//! assert_eq!(eta, 30 + 64);
+//! let done = plane.poll(eta);
+//! assert_eq!(done.len(), 1);
+//! assert_eq!(done[0].0, flow);
+//! assert_eq!(plane.stats().bytes_downloaded, 10_000_000);
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::sim::SimTime;
+
+/// Identifier of one in-flight transfer.
+pub type FlowId = u64;
+
+/// A flow below this many bytes remaining is complete (absorbs f64
+/// accumulation error; sub-byte residue is physically meaningless).
+const EPS_BYTES: f64 = 0.5;
+
+/// 1 Gbit/s in bytes per simulated millisecond.
+pub fn gbps_to_bytes_per_ms(gbps: f64) -> f64 {
+    gbps * 125_000.0
+}
+
+/// Transfer direction, from the worker's point of view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// `GetObject`: S3 → instance.
+    Download,
+    /// `PutObject`: instance → S3.
+    Upload,
+}
+
+/// Named network profile: the S3 side of the pipe.  The NIC side comes
+/// per-instance from the EC2 shape sheet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetProfile {
+    /// Stable name (also the sweep-axis label).
+    pub name: &'static str,
+    /// Aggregate throughput budget per bucket, Gbit/s.
+    pub bucket_gbps: f64,
+    /// Per-request first-byte latency, ms (request fan-out tax).
+    pub first_byte_ms: SimTime,
+}
+
+impl Default for NetProfile {
+    fn default() -> Self {
+        Self::standard()
+    }
+}
+
+impl NetProfile {
+    /// A healthy regional bucket: 10 Gbit/s aggregate, 30 ms first byte.
+    pub const fn standard() -> Self {
+        Self { name: "standard", bucket_gbps: 10.0, first_byte_ms: 30 }
+    }
+
+    /// Prefix-sharded / CloudFront-fronted bucket: 40 Gbit/s, 15 ms.
+    pub const fn wide() -> Self {
+        Self { name: "wide", bucket_gbps: 40.0, first_byte_ms: 15 }
+    }
+
+    /// A cold, unsharded prefix: 1 Gbit/s aggregate, 60 ms first byte —
+    /// the profile that makes fleets storage-bound (experiment T13).
+    pub const fn narrow() -> Self {
+        Self { name: "narrow", bucket_gbps: 1.0, first_byte_ms: 60 }
+    }
+
+    /// Every named profile, widest first.
+    pub const ALL: [NetProfile; 3] = [Self::wide(), Self::standard(), Self::narrow()];
+
+    /// Parse a profile name (the `--net-profile` axis).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "standard" => Some(Self::standard()),
+            "wide" => Some(Self::wide()),
+            "narrow" => Some(Self::narrow()),
+            _ => None,
+        }
+    }
+
+    /// Bucket budget in bytes per simulated millisecond.
+    pub fn bucket_bytes_per_ms(&self) -> f64 {
+        gbps_to_bytes_per_ms(self.bucket_gbps)
+    }
+}
+
+/// Byte, request, and bottleneck-attribution counters; feeds the billing
+/// meter and the end-of-run [`DataBreakdown`](crate::aws::billing::DataBreakdown).
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct TransferStats {
+    /// Bytes that actually flowed S3 → fleet (full completed flows plus
+    /// the partial progress of cancelled ones — exactly what egress
+    /// billing sees).
+    pub bytes_downloaded: u64,
+    /// Bytes that actually flowed fleet → S3.
+    pub bytes_uploaded: u64,
+    /// The slice of the above that was thrown away: transfers cancelled
+    /// mid-flight by interruption / crash / reaping (the re-download tax).
+    pub bytes_wasted: u64,
+    /// `GetObject` requests issued by the data plane.
+    pub downloads_started: u64,
+    /// `PutObject` requests issued by the data plane.
+    pub uploads_started: u64,
+    pub flows_completed: u64,
+    pub flows_cancelled: u64,
+    /// Flow-milliseconds where the *bucket* budget was the binding
+    /// constraint — the storage-bound signal.
+    pub bucket_bound_ms: u64,
+    /// Flow-milliseconds where the instance NIC was the binding constraint.
+    pub nic_bound_ms: u64,
+    /// Flow-milliseconds spent waiting on first-byte latency.
+    pub first_byte_wait_ms: u64,
+}
+
+/// What [`DataPlane::poll`] reports about a finished flow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowEnd {
+    pub instance: u64,
+    pub dir: Direction,
+    pub bytes: u64,
+    pub bucket: String,
+}
+
+#[derive(Debug, Clone)]
+struct Flow {
+    instance: u64,
+    nic_bytes_per_ms: f64,
+    bucket: String,
+    dir: Direction,
+    bytes: u64,
+    remaining: f64,
+    /// First byte arrives here; the flow consumes no bandwidth before.
+    active_at: SimTime,
+    /// Bytes/ms under the current plan (0 while latent).
+    rate: f64,
+    /// Which link froze this flow in the current plan.
+    bucket_bound: bool,
+}
+
+/// A capacity constraint in the fairness plan.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum Link {
+    Nic(u64),
+    Bucket(String),
+}
+
+/// The transfer scheduler.  Passive like every other service: the run's
+/// event loop advances it by calling [`poll`](Self::poll) at the times
+/// [`next_event`](Self::next_event) announces.
+#[derive(Debug)]
+pub struct DataPlane {
+    profile: NetProfile,
+    flows: BTreeMap<FlowId, Flow>,
+    /// Completed flows awaiting collection by `poll`.
+    finished: Vec<(FlowId, FlowEnd)>,
+    next_id: FlowId,
+    /// Internal clock: the last instant flows were progressed to.
+    clock: SimTime,
+    stats: TransferStats,
+}
+
+impl Default for DataPlane {
+    fn default() -> Self {
+        Self::new(NetProfile::default())
+    }
+}
+
+impl DataPlane {
+    pub fn new(profile: NetProfile) -> Self {
+        Self {
+            profile,
+            flows: BTreeMap::new(),
+            finished: Vec::new(),
+            next_id: 0,
+            clock: 0,
+            stats: TransferStats::default(),
+        }
+    }
+
+    pub fn profile(&self) -> &NetProfile {
+        &self.profile
+    }
+
+    /// Swap the profile (before the run starts flows).
+    pub fn set_profile(&mut self, profile: NetProfile) {
+        self.profile = profile;
+    }
+
+    /// Begin a transfer of `bytes` between `instance` (whose NIC runs at
+    /// `nic_gbps`) and `bucket`.  The request's first byte arrives after
+    /// the profile latency; the byte flow then shares capacity max-min
+    /// fairly with every concurrent flow.  Bills one GET/PUT request.
+    pub fn start(
+        &mut self,
+        now: SimTime,
+        instance: u64,
+        nic_gbps: f64,
+        bucket: &str,
+        dir: Direction,
+        bytes: u64,
+    ) -> FlowId {
+        self.progress(now);
+        self.next_id += 1;
+        let id = self.next_id;
+        match dir {
+            Direction::Download => self.stats.downloads_started += 1,
+            Direction::Upload => self.stats.uploads_started += 1,
+        }
+        self.flows.insert(
+            id,
+            Flow {
+                instance,
+                nic_bytes_per_ms: gbps_to_bytes_per_ms(nic_gbps),
+                bucket: bucket.to_string(),
+                dir,
+                bytes,
+                remaining: bytes as f64,
+                active_at: now.saturating_add(self.profile.first_byte_ms),
+                rate: 0.0,
+                bucket_bound: false,
+            },
+        );
+        self.replan();
+        id
+    }
+
+    /// Progress every flow to `now` and collect the ones that finished at
+    /// or before it, in completion order (FIFO within an instant).
+    pub fn poll(&mut self, now: SimTime) -> Vec<(FlowId, FlowEnd)> {
+        self.progress(now);
+        std::mem::take(&mut self.finished)
+    }
+
+    /// When the plane next needs attention: completions already awaiting
+    /// collection (a `start`/`cancel_instance` call may progress past
+    /// another flow's finish — those report "now"), else the earliest
+    /// activation or completion under the current plan.  `None` when idle.
+    pub fn next_event(&self) -> Option<SimTime> {
+        if !self.finished.is_empty() {
+            return Some(self.clock);
+        }
+        self.flows
+            .values()
+            .filter_map(|f| self.flow_boundary(f))
+            .min()
+    }
+
+    /// The next instant `f` changes state: activation, or completion at
+    /// the current rate.
+    fn flow_boundary(&self, f: &Flow) -> Option<SimTime> {
+        if f.active_at > self.clock {
+            return Some(f.active_at);
+        }
+        if f.remaining <= EPS_BYTES {
+            // Completed but not yet collected: boundary is "now".
+            return Some(self.clock);
+        }
+        if f.rate <= 0.0 {
+            return None; // unplanned (cannot happen with positive caps)
+        }
+        let dt = ((f.remaining / f.rate).ceil() as SimTime).max(1);
+        Some(self.clock.saturating_add(dt))
+    }
+
+    /// Abort every flow on `instance` (spot interruption, crash, alarm
+    /// reaping, downscale).  Bytes already flowed stay billed and are
+    /// additionally counted as wasted.  Returns the cancelled flow ids.
+    pub fn cancel_instance(&mut self, now: SimTime, instance: u64) -> Vec<FlowId> {
+        self.progress(now);
+        let ids: Vec<FlowId> = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.instance == instance)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &ids {
+            let f = self.flows.remove(id).expect("cancelling a listed flow");
+            let flowed = (f.bytes as f64 - f.remaining).clamp(0.0, f.bytes as f64).round() as u64;
+            self.credit(f.dir, flowed);
+            self.stats.bytes_wasted += flowed;
+            self.stats.flows_cancelled += 1;
+        }
+        if !ids.is_empty() {
+            self.replan();
+        }
+        ids
+    }
+
+    /// Instances that currently have at least one flow, ascending.
+    pub fn instances_with_flows(&self) -> Vec<u64> {
+        let set: BTreeSet<u64> = self.flows.values().map(|f| f.instance).collect();
+        set.into_iter().collect()
+    }
+
+    /// Flows currently in the plane (latent + active).
+    pub fn in_flight(&self) -> usize {
+        self.flows.len()
+    }
+
+    /// Current planned rate of a flow in bytes/ms (0 while latent),
+    /// `None` once finished.  Exposed for the fairness property tests.
+    pub fn rate_of(&self, id: FlowId) -> Option<f64> {
+        self.flows.get(&id).map(|f| f.rate)
+    }
+
+    pub fn stats(&self) -> TransferStats {
+        self.stats
+    }
+
+    /// Internal clock (last progressed instant).
+    pub fn clock(&self) -> SimTime {
+        self.clock
+    }
+
+    fn credit(&mut self, dir: Direction, bytes: u64) {
+        match dir {
+            Direction::Download => self.stats.bytes_downloaded += bytes,
+            Direction::Upload => self.stats.bytes_uploaded += bytes,
+        }
+    }
+
+    /// Advance flows to `to`, segment by segment: rates are constant
+    /// between boundaries (activations/completions), so each segment is
+    /// linear.  Robust to callers that jump past several boundaries.
+    fn progress(&mut self, to: SimTime) {
+        while self.clock < to {
+            let boundary = self
+                .flows
+                .values()
+                .filter_map(|f| self.flow_boundary(f))
+                .min()
+                .map_or(to, |b| b.min(to));
+            let dt = boundary - self.clock;
+            if dt > 0 {
+                for f in self.flows.values_mut() {
+                    if f.active_at > self.clock {
+                        self.stats.first_byte_wait_ms += dt;
+                        continue;
+                    }
+                    f.remaining -= f.rate * dt as f64;
+                    if f.bucket_bound {
+                        self.stats.bucket_bound_ms += dt;
+                    } else {
+                        self.stats.nic_bound_ms += dt;
+                    }
+                }
+                self.clock = boundary;
+            }
+            // Collect completions at the boundary, then re-plan iff the
+            // boundary actually changed the active set (a completion or
+            // an activation) — a final partial segment that merely ran
+            // the clock out needs no new plan.
+            let activated = self.flows.values().any(|f| f.active_at == self.clock);
+            let done: Vec<FlowId> = self
+                .flows
+                .iter()
+                .filter(|(_, f)| f.active_at <= self.clock && f.remaining <= EPS_BYTES)
+                .map(|(&id, _)| id)
+                .collect();
+            let completed_any = !done.is_empty();
+            for id in done {
+                let f = self.flows.remove(&id).expect("completing a listed flow");
+                self.credit(f.dir, f.bytes);
+                self.stats.flows_completed += 1;
+                self.finished.push((
+                    id,
+                    FlowEnd {
+                        instance: f.instance,
+                        dir: f.dir,
+                        bytes: f.bytes,
+                        bucket: f.bucket,
+                    },
+                ));
+            }
+            if activated || completed_any {
+                self.replan();
+            }
+        }
+    }
+
+    /// Max-min fair rate assignment (progressive filling): repeatedly
+    /// find the most contended link (smallest capacity / unfrozen-flow
+    /// count), freeze its flows at that fair share, subtract the share
+    /// from each flow's *other* link, and drop the saturated link.
+    fn replan(&mut self) {
+        for f in self.flows.values_mut() {
+            f.rate = 0.0;
+        }
+        let active: Vec<FlowId> = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.active_at <= self.clock && f.remaining > EPS_BYTES)
+            .map(|(&id, _)| id)
+            .collect();
+        if active.is_empty() {
+            return;
+        }
+        let bucket_cap = self.profile.bucket_bytes_per_ms();
+        let mut cap: BTreeMap<Link, f64> = BTreeMap::new();
+        let mut members: BTreeMap<Link, Vec<FlowId>> = BTreeMap::new();
+        for &id in &active {
+            let f = &self.flows[&id];
+            cap.entry(Link::Nic(f.instance)).or_insert(f.nic_bytes_per_ms);
+            cap.entry(Link::Bucket(f.bucket.clone())).or_insert(bucket_cap);
+            members.entry(Link::Nic(f.instance)).or_default().push(id);
+            members.entry(Link::Bucket(f.bucket.clone())).or_default().push(id);
+        }
+        let mut unfrozen: BTreeSet<FlowId> = active.iter().copied().collect();
+        while !unfrozen.is_empty() {
+            // Bottleneck link: minimal fair share; ties break on link key
+            // so the plan is a pure function of the flow set.
+            let mut best: Option<(f64, Link)> = None;
+            for (link, m) in &members {
+                let n = m.iter().filter(|id| unfrozen.contains(*id)).count();
+                if n == 0 {
+                    continue;
+                }
+                let share = (cap[link] / n as f64).max(0.0);
+                let better = match &best {
+                    None => true,
+                    Some((s, l)) => share < *s || (share == *s && link < l),
+                };
+                if better {
+                    best = Some((share, link.clone()));
+                }
+            }
+            let Some((share, link)) = best else { break };
+            let ids: Vec<FlowId> = members[&link]
+                .iter()
+                .filter(|id| unfrozen.contains(*id))
+                .copied()
+                .collect();
+            for id in ids {
+                let (other, from_bucket) = {
+                    let f = &self.flows[&id];
+                    match link {
+                        Link::Bucket(_) => (Link::Nic(f.instance), true),
+                        Link::Nic(_) => (Link::Bucket(f.bucket.clone()), false),
+                    }
+                };
+                let f = self.flows.get_mut(&id).expect("planning a listed flow");
+                f.rate = share;
+                f.bucket_bound = from_bucket;
+                if let Some(c) = cap.get_mut(&other) {
+                    *c = (*c - share).max(0.0);
+                }
+                unfrozen.remove(&id);
+            }
+            cap.remove(&link);
+            members.remove(&link);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 1.25 Gbit/s NIC = 156 250 bytes/ms.
+    const NIC: f64 = 1.25;
+
+    fn drain(plane: &mut DataPlane) -> Vec<(FlowId, FlowEnd)> {
+        let mut all = Vec::new();
+        while let Some(t) = plane.next_event() {
+            all.extend(plane.poll(t));
+        }
+        all
+    }
+
+    #[test]
+    fn single_flow_latency_plus_wire_time() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        // 1 562 500 bytes at 156 250 B/ms = 10 ms wire + 30 ms latency.
+        let id = p.start(0, 1, NIC, "b", Direction::Download, 1_562_500);
+        assert_eq!(p.next_event(), Some(30));
+        assert!(p.poll(30).is_empty(), "activation is not completion");
+        assert_eq!(p.next_event(), Some(40));
+        let done = p.poll(40);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, id);
+        assert_eq!(done[0].1.bytes, 1_562_500);
+        assert_eq!(p.in_flight(), 0);
+        assert_eq!(p.next_event(), None);
+        let st = p.stats();
+        assert_eq!(st.bytes_downloaded, 1_562_500);
+        assert_eq!(st.first_byte_wait_ms, 30);
+        assert_eq!(st.nic_bound_ms, 10, "uncontended NIC binds before a 10 Gbit bucket");
+    }
+
+    #[test]
+    fn two_flows_share_one_nic_fairly() {
+        let mut p = DataPlane::new(NetProfile::wide());
+        let a = p.start(0, 1, NIC, "b", Direction::Download, 10_000_000);
+        let b = p.start(0, 1, NIC, "b", Direction::Upload, 10_000_000);
+        p.poll(NetProfile::wide().first_byte_ms); // both activate
+        let half = gbps_to_bytes_per_ms(NIC) / 2.0;
+        assert!((p.rate_of(a).unwrap() - half).abs() < 1e-9);
+        assert!((p.rate_of(b).unwrap() - half).abs() < 1e-9);
+        let done = drain(&mut p);
+        assert_eq!(done.len(), 2);
+        let st = p.stats();
+        assert_eq!(st.bytes_downloaded, 10_000_000);
+        assert_eq!(st.bytes_uploaded, 10_000_000);
+    }
+
+    #[test]
+    fn bucket_binds_across_instances() {
+        // narrow bucket: 125 000 B/ms shared by flows on 4 distinct NICs.
+        let mut p = DataPlane::new(NetProfile::narrow());
+        let ids: Vec<FlowId> = (0..4)
+            .map(|i| p.start(0, i, NIC, "b", Direction::Download, 1_000_000))
+            .collect();
+        p.poll(NetProfile::narrow().first_byte_ms);
+        let share = gbps_to_bytes_per_ms(1.0) / 4.0;
+        for id in &ids {
+            assert!((p.rate_of(*id).unwrap() - share).abs() < 1e-9);
+        }
+        drain(&mut p);
+        let st = p.stats();
+        assert!(st.bucket_bound_ms > 0);
+        assert_eq!(st.nic_bound_ms, 0, "the bucket, not any NIC, was binding");
+    }
+
+    #[test]
+    fn leftover_headroom_goes_to_uncontended_flows() {
+        // Instance 1 runs three flows, instance 2 one; bucket is wide.
+        // Max-min: instance-1 flows get cap/3, instance-2 flow its full NIC.
+        let mut p = DataPlane::new(NetProfile::wide());
+        let crowded: Vec<FlowId> = (0..3)
+            .map(|_| p.start(0, 1, NIC, "b", Direction::Download, 5_000_000))
+            .collect();
+        let lone = p.start(0, 2, NIC, "b", Direction::Download, 5_000_000);
+        p.poll(NetProfile::wide().first_byte_ms);
+        let nic = gbps_to_bytes_per_ms(NIC);
+        for id in &crowded {
+            assert!((p.rate_of(*id).unwrap() - nic / 3.0).abs() < 1e-9);
+        }
+        assert!((p.rate_of(lone).unwrap() - nic).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancel_bills_partial_bytes_as_wasted() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        let _ = p.start(0, 7, NIC, "b", Direction::Download, 10_000_000);
+        // 30 ms latency, then 20 ms of wire time at 156 250 B/ms.
+        let cancelled = p.cancel_instance(50, 7);
+        assert_eq!(cancelled.len(), 1);
+        let st = p.stats();
+        assert_eq!(st.bytes_downloaded, 3_125_000);
+        assert_eq!(st.bytes_wasted, 3_125_000);
+        assert_eq!(st.flows_cancelled, 1);
+        assert_eq!(st.flows_completed, 0);
+        assert_eq!(p.next_event(), None);
+    }
+
+    #[test]
+    fn completions_are_exact_and_fifo_within_an_instant() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        let a = p.start(0, 1, NIC, "b", Direction::Download, 1_000_000);
+        let b = p.start(0, 1, NIC, "b", Direction::Download, 1_000_000);
+        // Same size, same NIC, same start: they finish together, and the
+        // earlier-started flow is reported first.
+        let done = drain(&mut p);
+        assert_eq!(done.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![a, b]);
+        let st = p.stats();
+        assert_eq!(st.bytes_downloaded, 2_000_000);
+        assert_eq!(st.flows_completed, 2);
+    }
+
+    #[test]
+    fn completions_buffered_by_a_later_start_are_reported_now() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        // A finishes at 40; the start() at t=100 progresses past that
+        // boundary, so A waits in the collection buffer — next_event
+        // must say "now", not go quiet.
+        let a = p.start(0, 1, NIC, "b", Direction::Download, 1_562_500);
+        let _b = p.start(100, 2, NIC, "b", Direction::Download, 1_562_500);
+        assert_eq!(p.next_event(), Some(100));
+        let done = p.poll(100);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, a);
+        // And the plane goes back to planned boundaries afterwards.
+        assert_eq!(p.next_event(), Some(140));
+    }
+
+    #[test]
+    fn staggered_arrival_replans_mid_flow() {
+        let mut p = DataPlane::new(NetProfile::wide());
+        // Flow A alone for a while, then B joins the same NIC: A's total
+        // time is strictly between the solo and the always-shared case.
+        let solo_ms = (10_000_000.0 / gbps_to_bytes_per_ms(NIC)).ceil() as SimTime;
+        let a = p.start(0, 1, NIC, "b", Direction::Download, 10_000_000);
+        let _b = p.start(20, 1, NIC, "b", Direction::Download, 10_000_000);
+        let mut a_done_at = 0;
+        while let Some(t) = p.next_event() {
+            for (id, _) in p.poll(t) {
+                if id == a {
+                    a_done_at = t;
+                }
+            }
+        }
+        let first_byte = NetProfile::wide().first_byte_ms;
+        assert!(a_done_at > first_byte + solo_ms, "sharing must slow A down");
+        assert!(a_done_at < first_byte + 2 * solo_ms, "A had a head start");
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut p = DataPlane::new(NetProfile::standard());
+            for i in 0..20u64 {
+                p.start(
+                    i * 3,
+                    i % 4,
+                    NIC,
+                    if i % 2 == 0 { "a" } else { "b" },
+                    if i % 3 == 0 { Direction::Upload } else { Direction::Download },
+                    1 + i * 777_777,
+                );
+            }
+            let mut trace = Vec::new();
+            while let Some(t) = p.next_event() {
+                for (id, end) in p.poll(t) {
+                    trace.push((t, id, end.bytes));
+                }
+            }
+            (trace, p.stats())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn profile_parse_roundtrip() {
+        for prof in NetProfile::ALL {
+            assert_eq!(NetProfile::parse(prof.name), Some(prof.clone()));
+        }
+        assert_eq!(NetProfile::parse("adsl"), None);
+        assert_eq!(NetProfile::default(), NetProfile::standard());
+    }
+}

@@ -11,6 +11,12 @@
 //! end-to-end examples) or synthetic sizes (scale benchmarks that model
 //! thousands of jobs without holding gigabytes in RAM).  Both carry the
 //! same metadata so `CHECK_IF_DONE` logic cannot tell them apart.
+//!
+//! The object store itself is instantaneous; *timed* transfers (bytes
+//! competing for instance NIC and bucket throughput) live in the
+//! [`dataplane`] submodule and are driven by the run's event loop.
+
+pub mod dataplane;
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -63,6 +69,10 @@ struct Bucket {
 pub struct S3Stats {
     pub put_requests: u64,
     pub get_requests: u64,
+    /// HeadObject calls: no byte transfer, but real S3 bills them in the
+    /// GET request class — the data plane's size-the-input probes (one
+    /// per download attempt) show up in the bill.
+    pub head_requests: u64,
     pub list_requests: u64,
     pub bytes_in: u64,
     pub bytes_out: u64,
@@ -136,9 +146,10 @@ impl S3 {
         Ok(obj)
     }
 
-    /// HeadObject: metadata without a byte transfer.
+    /// HeadObject: metadata without a byte transfer — but still a
+    /// billable request (GET class), metered separately.
     pub fn head(&mut self, bucket: &str, key: &str) -> Option<(u64, SimTime)> {
-        self.stats.get_requests += 1;
+        self.stats.head_requests += 1;
         self.buckets
             .get(bucket)?
             .objects
@@ -269,6 +280,20 @@ mod tests {
         assert_eq!(st.list_requests, 1);
         assert_eq!(st.bytes_in, 100);
         assert_eq!(st.bytes_out, 100);
+    }
+
+    #[test]
+    fn head_is_metered_without_bytes() {
+        let mut s3 = s3_with_bucket();
+        s3.put("data", "k", Body::Bytes(vec![0; 64]), 0).unwrap();
+        let before = s3.stats();
+        assert_eq!(s3.head("data", "k"), Some((64, 0)));
+        assert_eq!(s3.head("data", "missing"), None);
+        let st = s3.stats();
+        // Both probes billed, neither moved a byte.
+        assert_eq!(st.head_requests, before.head_requests + 2);
+        assert_eq!(st.get_requests, before.get_requests);
+        assert_eq!(st.bytes_out, before.bytes_out);
     }
 
     #[test]

@@ -76,6 +76,57 @@ impl JobSpec {
             .collect()
     }
 
+    /// Look up a numeric key in one group, falling back to the shared
+    /// keys (the same merge [`to_messages`](Self::to_messages) performs).
+    fn merged_u64(&self, group: &[(String, Value)], key: &str) -> u64 {
+        group
+            .iter()
+            .find(|(k, _)| k == key)
+            .or_else(|| self.shared.iter().find(|(k, _)| k == key))
+            .and_then(|(_, v)| v.as_u64())
+            .unwrap_or(0)
+    }
+
+    /// Total `(input_bytes, output_bytes)` across all groups — the job
+    /// file's data footprint, printed by `ds describe --job`.
+    pub fn data_footprint(&self) -> (u64, u64) {
+        self.groups.iter().fold((0, 0), |(i, o), g| {
+            (
+                i + self.merged_u64(g, "input_bytes"),
+                o + self.merged_u64(g, "output_bytes"),
+            )
+        })
+    }
+
+    /// Give every group the same `input_bytes`/`output_bytes` (exact
+    /// sizes, no distribution) — the building block for property tests
+    /// and hand-written storage studies.
+    pub fn with_uniform_data(mut self, input_bytes: u64, output_bytes: u64) -> Self {
+        for g in &mut self.groups {
+            g.retain(|(k, _)| k != "input_bytes" && k != "output_bytes");
+            g.push(("input_bytes".to_string(), Value::from(input_bytes)));
+            g.push(("output_bytes".to_string(), Value::from(output_bytes)));
+        }
+        self
+    }
+
+    /// Give every group a realistic data shape: per-job sizes drawn from
+    /// [`crate::workloads::synth::job_data_shape`] around
+    /// `mean_input_bytes` (log-normal inputs, ~8:1 reductions out),
+    /// deterministic in `(seed, group index)`.
+    pub fn with_data_shape(mut self, mean_input_bytes: u64, seed: u64) -> Self {
+        for (i, g) in self.groups.iter_mut().enumerate() {
+            let (input, output) = crate::workloads::synth::job_data_shape(
+                seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                mean_input_bytes,
+            );
+            g.retain(|(k, _)| k != "input_bytes" && k != "output_bytes");
+            g.push(("input_bytes".to_string(), Value::from(input)));
+            g.push(("output_bytes".to_string(), Value::from(output)));
+        }
+        self
+    }
+
     /// Convenience builder: a plate of `wells` × `sites` imaging jobs (the
     /// canonical Distributed-CellProfiler grouping).
     pub fn plate(plate: &str, wells: u32, sites: u32, shared: Vec<(String, Value)>) -> Self {
@@ -142,6 +193,36 @@ mod tests {
         let j = JobSpec::from_json(JOB).unwrap();
         let back = JobSpec::from_json(&j.to_json().pretty()).unwrap();
         assert_eq!(j, back);
+    }
+
+    #[test]
+    fn uniform_data_shape_and_footprint() {
+        let j = JobSpec::plate("P", 2, 2, vec![]).with_uniform_data(1_000, 100);
+        assert_eq!(j.data_footprint(), (4_000, 400));
+        // Survives the JSON round trip and lands in every message.
+        let back = JobSpec::from_json(&j.to_json().pretty()).unwrap();
+        assert_eq!(back.data_footprint(), (4_000, 400));
+        for m in j.to_messages() {
+            let v = parse(&m).unwrap();
+            assert_eq!(v.get("input_bytes").and_then(Value::as_u64), Some(1_000));
+            assert_eq!(v.get("output_bytes").and_then(Value::as_u64), Some(100));
+        }
+        // Re-shaping replaces, never duplicates.
+        let j2 = j.with_uniform_data(500, 50);
+        assert_eq!(j2.data_footprint(), (2_000, 200));
+    }
+
+    #[test]
+    fn data_shape_deterministic_and_shared_fallback() {
+        let a = JobSpec::plate("P", 4, 2, vec![]).with_data_shape(64_000_000, 9);
+        let b = JobSpec::plate("P", 4, 2, vec![]).with_data_shape(64_000_000, 9);
+        assert_eq!(a, b);
+        let (input, output) = a.data_footprint();
+        assert!(input > 0 && output > 0 && output < input);
+        // Shared keys count when a group doesn't override them.
+        let shared = vec![("input_bytes".to_string(), Value::from(7u64))];
+        let s = JobSpec::plate("P", 1, 3, shared);
+        assert_eq!(s.data_footprint(), (21, 0));
     }
 
     #[test]

@@ -11,10 +11,22 @@
 //!   (empty queue → instance self-shutdown).
 //! * `JobDone`       — a job attempt finished: upload outputs, delete the
 //!   message, next poll.
+//! * `NetTick`       — the S3 data plane's next flow boundary: collect
+//!   finished downloads/uploads, re-plan shared bandwidth.
 //! * `InstanceCrash` — machine wedges: stops working, keeps billing,
 //!   stops publishing CPU (the alarm reaper's prey).
 //! * `AlarmEval`     (1/min) — CloudWatch alarm evaluation + actions.
 //! * `MonitorTick`   (1/min, optional) — the paper's Step 4.
+//!
+//! Jobs whose message carries `input_bytes`/`output_bytes` are
+//! **three-phase**: download (a timed flow on the data plane) → compute
+//! (the executor) → upload (another flow); the message is only deleted
+//! once the output bytes have flowed.  A core moving bytes is *not*
+//! compute-busy, so its CPU metric stays low — big-enough transfers can
+//! trip the paper's CPU-flatline reaper, exactly the failure mode real
+//! storage-bound fleets hit.  Zero-data jobs take the duration-model
+//! path unchanged (same events, same RNG draws), so pre-data-plane
+//! experiments replay bit-identically.
 //!
 //! All randomness flows from one seeded RNG: identical runs replay
 //! bit-identically.
@@ -23,13 +35,16 @@ use std::collections::HashMap;
 
 use anyhow::{ensure, Result};
 
+use crate::aws::billing::data_breakdown;
 use crate::aws::ec2::{FleetEvent, FleetId, InstanceId, InstanceState, TerminationReason, Volatility};
 use crate::aws::ecs::ContainerId;
+use crate::aws::s3::dataplane::{Direction, FlowId, NetProfile};
 use crate::aws::s3::Body;
 use crate::aws::sqs::ReceiptHandle;
 use crate::aws::AwsAccount;
 use crate::aws::cloudwatch::{AlarmAction, Comparison};
 use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::json::Value;
 use crate::metrics::{RunReport, RunStats};
 use crate::sim::clock::{SimTime, HOUR, MINUTE};
 use crate::sim::{EventQueue, SimRng};
@@ -60,6 +75,9 @@ pub struct RunOptions {
     pub overrun_after_drain: SimTime,
     /// Bucket that receives outputs and exported logs.
     pub data_bucket: String,
+    /// S3 side of the data plane: per-bucket aggregate throughput and
+    /// first-byte latency (only matters for jobs that declare bytes).
+    pub net: NetProfile,
 }
 
 impl Default for RunOptions {
@@ -74,6 +92,7 @@ impl Default for RunOptions {
             max_sim_time: 7 * 24 * HOUR,
             overrun_after_drain: 0,
             data_bucket: "ds-data".into(),
+            net: NetProfile::default(),
         }
     }
 }
@@ -94,10 +113,41 @@ enum Event {
         bucket: String,
         outputs: Vec<(String, Body)>,
         log: String,
+        /// Declared output footprint: non-zero routes the finish through
+        /// an upload flow before the message is deleted.
+        output_bytes: u64,
+    },
+    /// The data plane's next flow boundary.  `epoch` invalidates ticks
+    /// scheduled before the flow set last changed.
+    NetTick {
+        epoch: u64,
     },
     InstanceCrash(InstanceId),
     AlarmEval,
     MonitorTick,
+}
+
+/// A job waiting on a data-plane flow (the state between phases).
+#[derive(Debug)]
+enum Xfer {
+    /// Phase 1: the input download; compute starts when it lands.
+    Download {
+        container: ContainerId,
+        core: u32,
+        receipt: ReceiptHandle,
+        bucket: String,
+        msg: Value,
+    },
+    /// Phase 3: the output upload; the message is deleted (and the job
+    /// counted) only once the bytes have flowed.
+    Upload {
+        container: ContainerId,
+        core: u32,
+        receipt: ReceiptHandle,
+        bucket: String,
+        outputs: Vec<(String, Body)>,
+        log: String,
+    },
 }
 
 /// A full DS run over the simulated account.
@@ -111,10 +161,15 @@ pub struct Simulation {
     monitor: Option<MonitorState>,
     stats: RunStats,
     jobs_submitted: u64,
-    /// Busy cores per container (jobs in flight).
+    /// Busy cores per container (jobs in *compute*; a core moving bytes
+    /// is not CPU-busy — that's what the reaper sees).
     busy: HashMap<ContainerId, u32>,
     /// Cores that saw an empty queue and exited, per container.
     cores_done: HashMap<ContainerId, u32>,
+    /// Jobs parked on a data-plane flow, by flow id.
+    xfers: HashMap<FlowId, Xfer>,
+    /// Bumped whenever the flow set changes; stale `NetTick`s no-op.
+    net_epoch: u64,
     drained_at: Option<SimTime>,
     finished: bool,
 }
@@ -124,6 +179,7 @@ impl Simulation {
     pub fn new(cfg: AppConfig, opts: RunOptions) -> Result<Self> {
         let mut acct = AwsAccount::new(opts.seed, opts.volatility);
         acct.s3.create_bucket(&opts.data_bucket);
+        acct.net.set_profile(opts.net.clone());
         setup::setup(&mut acct, &cfg, 0)?;
         let rng = SimRng::new(opts.seed ^ 0xD15C);
         Ok(Self {
@@ -138,6 +194,8 @@ impl Simulation {
             jobs_submitted: 0,
             busy: HashMap::new(),
             cores_done: HashMap::new(),
+            xfers: HashMap::new(),
+            net_epoch: 0,
             drained_at: None,
             finished: false,
         })
@@ -234,7 +292,19 @@ impl Simulation {
                 bucket,
                 outputs,
                 log,
-            } => self.on_job_done(now, container, core, receipt, success, bucket, outputs, log),
+                output_bytes,
+            } => self.on_job_done(
+                now,
+                container,
+                core,
+                receipt,
+                success,
+                bucket,
+                outputs,
+                log,
+                output_bytes,
+            ),
+            Event::NetTick { epoch } => self.on_net_tick(now, epoch, executor),
             Event::InstanceCrash(id) => self.on_instance_crash(now, id),
             Event::AlarmEval => self.on_alarm_eval(now),
             Event::MonitorTick => self.on_monitor_tick(now),
@@ -408,13 +478,69 @@ impl Simulation {
             return;
         }
 
-        // Run the tool.
+        // Phase 1, if the job declares input bytes: a timed download on
+        // the data plane; compute starts when the flow lands.  Zero-data
+        // jobs take the exact pre-data-plane path (same events, same RNG
+        // draws), so old experiments replay bit-identically.
+        let input_bytes = parsed.get("input_bytes").and_then(Value::as_u64).unwrap_or(0);
+        if input_bytes > 0 {
+            let input_bucket = parsed
+                .get("input_bucket")
+                .and_then(Value::as_str)
+                .unwrap_or("ds-data")
+                .to_string();
+            // Size the input first (HeadObject, like a worker does before
+            // `aws s3 cp`): a billable request even when the object only
+            // exists as a declared size.
+            let input_key = crate::workloads::drivers::input_key(&parsed);
+            let _ = self.acct.s3.head(&input_bucket, &input_key);
+            let flow = self.acct.net.start(
+                now,
+                inst_id,
+                self.nic_gbps(inst_id),
+                &input_bucket,
+                Direction::Download,
+                input_bytes,
+            );
+            self.xfers.insert(
+                flow,
+                Xfer::Download {
+                    container,
+                    core,
+                    receipt,
+                    bucket,
+                    msg: parsed,
+                },
+            );
+            self.schedule_net_tick();
+            return;
+        }
+        self.start_compute(now, container, core, receipt, bucket, &parsed, executor);
+    }
+
+    /// Phase 2: run the tool.  Entered directly for zero-input jobs and
+    /// at download completion for data-shaped ones.
+    #[allow(clippy::too_many_arguments)]
+    fn start_compute(
+        &mut self,
+        now: SimTime,
+        container: ContainerId,
+        core: u32,
+        receipt: ReceiptHandle,
+        bucket: String,
+        msg: &Value,
+        executor: &mut dyn JobExecutor,
+    ) {
+        let Some(inst_id) = self.container_alive(container) else {
+            return;
+        };
+        let output_bytes = msg.get("output_bytes").and_then(Value::as_u64).unwrap_or(0);
         let mut ctx = JobCtx {
             s3: &mut self.acct.s3,
             rng: &mut self.rng,
             now,
         };
-        match executor.execute(&parsed, &mut ctx) {
+        match executor.execute(msg, &mut ctx) {
             JobOutcome::Done {
                 duration,
                 outputs,
@@ -431,6 +557,7 @@ impl Simulation {
                         bucket,
                         outputs,
                         log,
+                        output_bytes,
                     },
                 );
             }
@@ -446,6 +573,7 @@ impl Simulation {
                         bucket,
                         outputs: Vec::new(),
                         log,
+                        output_bytes: 0,
                     },
                 );
             }
@@ -457,6 +585,117 @@ impl Simulation {
                 self.stats.stalled += 1;
                 self.log_instance(now, inst_id, "worker stalled (no exit)");
             }
+        }
+    }
+
+    /// The instance's NIC bandwidth from the shape sheet (Gbit/s).
+    fn nic_gbps(&self, id: InstanceId) -> f64 {
+        self.acct
+            .ec2
+            .instance(id)
+            .map(|i| i.itype.nic_gbps)
+            .unwrap_or(1.0)
+    }
+
+    /// (Re)arm the single outstanding `NetTick` after any change to the
+    /// flow set.  The epoch bump invalidates previously scheduled ticks.
+    fn schedule_net_tick(&mut self) {
+        self.net_epoch += 1;
+        if let Some(at) = self.acct.net.next_event() {
+            let epoch = self.net_epoch;
+            self.events.schedule_at(at, Event::NetTick { epoch });
+        }
+    }
+
+    /// Collect flows that finished by `now` and advance their jobs to
+    /// the next phase.
+    fn on_net_tick(&mut self, now: SimTime, epoch: u64, executor: &mut dyn JobExecutor) {
+        if epoch != self.net_epoch {
+            return; // superseded by a later re-plan
+        }
+        let done = self.acct.net.poll(now);
+        for (flow, _end) in done {
+            let Some(xfer) = self.xfers.remove(&flow) else {
+                continue;
+            };
+            match xfer {
+                Xfer::Download {
+                    container,
+                    core,
+                    receipt,
+                    bucket,
+                    msg,
+                } => {
+                    // A flow can finish in the same instant its machine
+                    // dies (the death event pops first and cancellation
+                    // finds the flow already complete): lost work, like
+                    // the upload arm — the message redelivers.
+                    if self.container_alive(container).is_none() {
+                        self.stats.lost_to_death += 1;
+                        continue;
+                    }
+                    self.start_compute(now, container, core, receipt, bucket, &msg, executor);
+                }
+                Xfer::Upload {
+                    container,
+                    core,
+                    receipt,
+                    bucket,
+                    outputs,
+                    log,
+                } => {
+                    if self.container_alive(container).is_none() {
+                        self.stats.lost_to_death += 1;
+                        continue;
+                    }
+                    self.finish_job(now, container, core, receipt, bucket, outputs, log);
+                }
+            }
+        }
+        self.schedule_net_tick();
+    }
+
+    /// Land outputs, delete the message, count the job, poll again —
+    /// the common tail of the zero-data and the post-upload paths.
+    #[allow(clippy::too_many_arguments)]
+    fn finish_job(
+        &mut self,
+        now: SimTime,
+        container: ContainerId,
+        core: u32,
+        receipt: ReceiptHandle,
+        bucket: String,
+        outputs: Vec<(String, Body)>,
+        log: String,
+    ) {
+        for (key, body) in outputs {
+            let _ = self.acct.s3.put(&bucket, &key, body, now);
+        }
+        match self.acct.sqs.delete(&self.cfg.sqs_queue_name, receipt, now) {
+            Ok(()) => {
+                self.stats.completed += 1;
+                self.log_job(now, &log, "");
+            }
+            Err(_) => {
+                // Receipt went stale: the message timed out mid-run
+                // and someone else will (or did) redo it.
+                self.stats.duplicates += 1;
+                self.log_job(now, &log, " [duplicate: visibility expired mid-job]");
+            }
+        }
+        self.mark_drained_if_empty(now);
+        self.events.schedule_in(0, Event::CoreWake { container, core });
+    }
+
+    /// Abort every flow on a dead or wedged machine.  Bytes already
+    /// flowed stay billed (the re-download tax in `DataBreakdown`).
+    fn cancel_transfers(&mut self, now: SimTime, id: InstanceId) {
+        let cancelled = self.acct.net.cancel_instance(now, id);
+        if !cancelled.is_empty() {
+            for flow in &cancelled {
+                self.xfers.remove(flow);
+            }
+            self.schedule_net_tick();
         }
     }
 
@@ -499,6 +738,7 @@ impl Simulation {
         bucket: String,
         outputs: Vec<(String, Body)>,
         log: String,
+        output_bytes: u64,
     ) {
         if let Some(b) = self.busy.get_mut(&container) {
             *b = b.saturating_sub(1);
@@ -509,27 +749,38 @@ impl Simulation {
             return;
         };
         if success {
-            for (key, body) in outputs {
-                let _ = self.acct.s3.put(&bucket, &key, body, now);
+            // Phase 3, if the job declares output bytes: the results
+            // only land (and the message is only deleted) after the
+            // upload flow drains.
+            if output_bytes > 0 {
+                let flow = self.acct.net.start(
+                    now,
+                    inst_id,
+                    self.nic_gbps(inst_id),
+                    &bucket,
+                    Direction::Upload,
+                    output_bytes,
+                );
+                self.xfers.insert(
+                    flow,
+                    Xfer::Upload {
+                        container,
+                        core,
+                        receipt,
+                        bucket,
+                        outputs,
+                        log,
+                    },
+                );
+                self.schedule_net_tick();
+                return;
             }
-            match self.acct.sqs.delete(&self.cfg.sqs_queue_name, receipt, now) {
-                Ok(()) => {
-                    self.stats.completed += 1;
-                    self.log_job(now, &log, "");
-                }
-                Err(_) => {
-                    // Receipt went stale: the message timed out mid-run
-                    // and someone else will (or did) redo it.
-                    self.stats.duplicates += 1;
-                    self.log_job(now, &log, " [duplicate: visibility expired mid-job]");
-                }
-            }
-            self.mark_drained_if_empty(now);
+            self.finish_job(now, container, core, receipt, bucket, outputs, log);
         } else {
             self.stats.failed_attempts += 1;
             self.log_instance(now, inst_id, &log);
+            self.events.schedule_in(0, Event::CoreWake { container, core });
         }
-        self.events.schedule_in(0, Event::CoreWake { container, core });
     }
 
     fn on_instance_crash(&mut self, now: SimTime, id: InstanceId) {
@@ -544,6 +795,8 @@ impl Simulation {
         self.log_instance(now, id, "machine crash (CPU flatlines)");
         // Its containers stop making progress; busy counts stay (the
         // pending JobDone events will see the crash and drop the work).
+        // In-flight transfers die with the machine: partial bytes billed.
+        self.cancel_transfers(now, id);
     }
 
     fn on_alarm_eval(&mut self, now: SimTime) {
@@ -565,6 +818,10 @@ impl Simulation {
                             .terminate(id, TerminationReason::AlarmAction, now);
                         self.acct.ecs.deregister_instance(id);
                         self.acct.metrics.drop_dimension(&format!("i-{id}"));
+                        // A machine that was only *network*-busy looks
+                        // idle to the CPU alarm; its transfers are lost
+                        // with it (the re-download tax).
+                        self.cancel_transfers(now, id);
                     }
                 }
                 AlarmAction::RebootInstance(_) => {}
@@ -579,6 +836,20 @@ impl Simulation {
         };
         let done = mon.tick(&mut self.acct, &self.cfg, now);
         self.monitor = Some(mon);
+        // The monitor terminates machines on its own (queue downscale,
+        // final cleanup): abort transfers stranded on machines that are
+        // no longer alive.
+        for id in self.acct.net.instances_with_flows() {
+            let alive = self
+                .acct
+                .ec2
+                .instance(id)
+                .map(|i| i.state == InstanceState::Running && !i.crashed)
+                .unwrap_or(false);
+            if !alive {
+                self.cancel_transfers(now, id);
+            }
+        }
         if done {
             self.finished = true;
         } else {
@@ -587,9 +858,9 @@ impl Simulation {
     }
 
     fn instance_died(&mut self, now: SimTime, id: InstanceId) {
-        let _ = now;
         self.acct.ecs.deregister_instance(id);
         self.acct.metrics.drop_dimension(&format!("i-{id}"));
+        self.cancel_transfers(now, id);
     }
 
     fn mark_drained_if_empty(&mut self, now: SimTime) {
@@ -627,6 +898,7 @@ impl Simulation {
             .0 as u64;
         let cost = self.acct.cost_report(ended_at);
         let pools = self.acct.ec2.pool_breakdown(ended_at);
+        let data = data_breakdown(self.acct.s3.stats(), self.acct.net.stats());
         RunReport {
             stats,
             drained_at: self.drained_at,
@@ -638,6 +910,7 @@ impl Simulation {
                 .unwrap_or(false),
             cost,
             pools,
+            data,
             jobs_submitted: self.jobs_submitted,
         }
     }
@@ -883,6 +1156,118 @@ mod tests {
         sim.submit(&jobs).unwrap();
         let err = sim.start(&fleet).unwrap_err();
         assert!(err.to_string().contains("cheapest"), "{err}");
+    }
+
+    #[test]
+    fn zero_byte_data_fields_take_the_legacy_path() {
+        // Jobs that *declare* input_bytes/output_bytes = 0 must replay
+        // bit-identically to jobs that never heard of the data plane —
+        // the acceptance gate for every pre-data-plane experiment.
+        let cfg = quick_cfg();
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(45.0);
+        let plain = run_full(
+            &cfg,
+            &JobSpec::plate("P1", 4, 2, vec![]),
+            &fleet,
+            &mut ex,
+            RunOptions::default(),
+        )
+        .unwrap();
+        let mut ex = modeled(45.0);
+        let zeroed = run_full(
+            &cfg,
+            &JobSpec::plate("P1", 4, 2, vec![]).with_uniform_data(0, 0),
+            &fleet,
+            &mut ex,
+            RunOptions::default(),
+        )
+        .unwrap();
+        assert_eq!(plain, zeroed);
+        assert_eq!(zeroed.data.bytes_downloaded, 0);
+    }
+
+    #[test]
+    fn data_shaped_jobs_run_three_phases() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]).with_uniform_data(64_000_000, 8_000_000);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(60.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert_eq!(report.stats.completed, 8, "{}", report.summary());
+        assert!(report.cleaned_up);
+        assert!(report.fully_accounted());
+        // Every job pulled its input and pushed its output at least once,
+        // and the transfers reached the bill.
+        assert!(report.data.bytes_downloaded >= 8 * 64_000_000, "{:?}", report.data);
+        assert!(report.data.bytes_uploaded >= 8 * 8_000_000, "{:?}", report.data);
+        assert!(report.data.get_requests >= 8 && report.data.put_requests >= 8);
+        // One HeadObject size probe per download attempt.
+        assert!(report.data.head_requests >= 8, "{:?}", report.data);
+        assert!(report.cost.s3_egress_usd > 0.0);
+        assert!(report.data.bucket_bound_ms + report.data.nic_bound_ms > 0);
+        // Moving ~576 MB through the pipes costs wall-clock: the drain is
+        // strictly later than the identical zero-data run's.
+        let mut ex = modeled(60.0);
+        let zero = run_full(
+            &cfg,
+            &JobSpec::plate("P1", 4, 2, vec![]),
+            &fleet,
+            &mut ex,
+            RunOptions::default(),
+        )
+        .unwrap();
+        assert!(report.drained_at.unwrap() > zero.drained_at.unwrap());
+    }
+
+    #[test]
+    fn reaper_eats_network_bound_machines() {
+        // A machine that is only *network*-busy publishes ~0% CPU; on a
+        // narrow bucket a big-enough download outlives the 15-minute
+        // flatline alarm and the machine is reaped mid-transfer — the
+        // partial bytes are wasted (the re-download tax).
+        let cfg = quick_cfg();
+        // 15 GB inputs on a 1 Gbit/s bucket shared by 12 cores: ~24 min
+        // per attempt, reaped at ~16-17 min.
+        let jobs = JobSpec::plate("P1", 6, 2, vec![]).with_uniform_data(15_000_000_000, 1_000);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let opts = RunOptions {
+            net: crate::aws::s3::dataplane::NetProfile::narrow(),
+            max_sim_time: 3 * HOUR,
+            ..Default::default()
+        };
+        let mut ex = modeled(30.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap();
+        assert!(
+            report.stats.alarm_terminations > 0,
+            "storage-bound machines should flatline: {}",
+            report.summary()
+        );
+        assert!(report.data.bytes_wasted > 0, "{:?}", report.data);
+        assert!(
+            report.data.bucket_bound_fraction() > 0.5,
+            "the bucket, not the NICs, is the bottleneck: {:?}",
+            report.data
+        );
+    }
+
+    #[test]
+    fn data_runs_replay_bit_identically() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]).with_data_shape(32_000_000, 5);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let opts = RunOptions {
+            net: crate::aws::s3::dataplane::NetProfile::narrow(),
+            ..Default::default()
+        };
+        let run = || {
+            let mut ex = modeled(30.0);
+            run_full(&cfg, &jobs, &fleet, &mut ex, opts.clone()).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert!(a.data.total_bytes() > 0);
     }
 
     #[test]

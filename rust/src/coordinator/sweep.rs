@@ -5,9 +5,14 @@
 //! driver evaluates one configuration at a time; this module evaluates a
 //! whole configuration *matrix* — the cartesian product of seeds ×
 //! [`Volatility`] × `SQS_MESSAGE_VISIBILITY` × `CLUSTER_MACHINES` ×
-//! [`AllocationStrategy`] × instance set × [`DurationModel`] — on a pool
-//! of OS threads, one independent [`Simulation`](super::Simulation) per
-//! cell.
+//! [`AllocationStrategy`] × instance set × mean input MB ×
+//! [`NetProfile`] × [`DurationModel`] — on a pool of OS threads, one
+//! independent [`Simulation`](super::Simulation) per cell.
+//!
+//! The two data axes make every study a compute-vs-storage trade-off: a
+//! non-zero `input_mb` overlays a per-job data shape on the plan's Job
+//! file (via [`JobSpec::with_data_shape`]) and the net profile sets the
+//! bucket's aggregate throughput + first-byte latency for the cell.
 //!
 //! Determinism is the load-bearing property: each cell is a pure function
 //! of `(scenario, seed)` — it owns its account, event heap, and
@@ -43,6 +48,7 @@ use std::thread;
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
+use crate::aws::s3::dataplane::NetProfile;
 use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::metrics::{RunReport, ScenarioSummary, SweepReport};
 use crate::sim::clock::fmt_dur;
@@ -80,6 +86,11 @@ pub struct Scenario {
     /// `INSTANCE_TYPES` for this cell's fleet; empty inherits the plan's
     /// fleet file / Config.
     pub instance_set: Vec<InstanceSlot>,
+    /// Mean input MB per job; 0 leaves the plan's Job file untouched
+    /// (zero-data cells take the pre-data-plane path).
+    pub input_mb: f64,
+    /// Network profile for this cell's data plane.
+    pub net: NetProfile,
     pub model: DurationModel,
 }
 
@@ -98,6 +109,14 @@ impl Scenario {
             let types: Vec<String> = self.instance_set.iter().map(InstanceSlot::render).collect();
             label.push_str(&format!(" set={}", types.join("+")));
         }
+        // Data axes only label cells that use them, so zero-data sweeps
+        // keep their historical labels.
+        if self.input_mb > 0.0 {
+            label.push_str(&format!(" in={}MB", self.input_mb));
+        }
+        if self.net != NetProfile::default() {
+            label.push_str(&format!(" net={}", self.net.name));
+        }
         label
     }
 }
@@ -115,6 +134,10 @@ pub struct ScenarioMatrix {
     /// Instance sets to compare; an empty set inherits the plan's fleet
     /// file / Config types.
     pub instance_sets: Vec<Vec<InstanceSlot>>,
+    /// Mean input MB per job (`--input-mb`); 0 = no data plane.
+    pub input_mbs: Vec<f64>,
+    /// Network profiles (`--net-profile`).
+    pub net_profiles: Vec<NetProfile>,
     pub models: Vec<DurationModel>,
 }
 
@@ -127,6 +150,8 @@ impl Default for ScenarioMatrix {
             cluster_machines: vec![4],
             allocations: vec![AllocationStrategy::LowestPrice],
             instance_sets: vec![Vec::new()],
+            input_mbs: vec![0.0],
+            net_profiles: vec![NetProfile::default()],
             models: vec![DurationModel::default()],
         }
     }
@@ -135,8 +160,9 @@ impl Default for ScenarioMatrix {
 impl ScenarioMatrix {
     /// Expand the cartesian product in a fixed order: machines outermost,
     /// then visibility, volatility, allocation strategy, instance set,
-    /// and innermost the duration model.  Axis element order is
-    /// preserved, so single-axis sweeps read like the input list.
+    /// input MB, net profile, and innermost the duration model.  Axis
+    /// element order is preserved, so single-axis sweeps read like the
+    /// input list.
     pub fn scenarios(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(
             self.cluster_machines.len()
@@ -144,6 +170,8 @@ impl ScenarioMatrix {
                 * self.volatilities.len()
                 * self.allocations.len()
                 * self.instance_sets.len()
+                * self.input_mbs.len()
+                * self.net_profiles.len()
                 * self.models.len(),
         );
         for &machines in &self.cluster_machines {
@@ -151,15 +179,21 @@ impl ScenarioMatrix {
                 for &volatility in &self.volatilities {
                     for &allocation in &self.allocations {
                         for instance_set in &self.instance_sets {
-                            for model in &self.models {
-                                out.push(Scenario {
-                                    volatility,
-                                    visibility,
-                                    machines,
-                                    allocation,
-                                    instance_set: instance_set.clone(),
-                                    model: model.clone(),
-                                });
+                            for &input_mb in &self.input_mbs {
+                                for net in &self.net_profiles {
+                                    for model in &self.models {
+                                        out.push(Scenario {
+                                            volatility,
+                                            visibility,
+                                            machines,
+                                            allocation,
+                                            instance_set: instance_set.clone(),
+                                            input_mb,
+                                            net: net.clone(),
+                                            model: model.clone(),
+                                        });
+                                    }
+                                }
                             }
                         }
                     }
@@ -241,7 +275,9 @@ fn scenario_fleet(base: &FleetSpec, scenario: &Scenario) -> FleetSpec {
 
 /// Run one `(scenario, seed)` cell: overlay the scenario knobs on the
 /// base config and fleet file and drive a fresh, fully independent
-/// simulation.
+/// simulation.  A non-zero `input_mb` overlays a per-job data shape on
+/// the plan's Job file (re-drawn per seed, like a fresh dataset), and
+/// the scenario's net profile drives the cell's data plane.
 pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunReport> {
     let cfg = scenario_cfg(&plan.base_cfg, scenario);
     cfg.validate()?;
@@ -249,13 +285,22 @@ pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunR
     let opts = RunOptions {
         seed,
         volatility: scenario.volatility,
+        net: scenario.net.clone(),
         ..plan.base_opts.clone()
     };
     let mut ex = ModeledExecutor {
         model: scenario.model.clone(),
         ..Default::default()
     };
-    run_full(&cfg, &plan.jobs, &fleet, &mut ex, opts)
+    if scenario.input_mb > 0.0 {
+        let jobs = plan
+            .jobs
+            .clone()
+            .with_data_shape((scenario.input_mb * 1e6) as u64, seed);
+        run_full(&cfg, &jobs, &fleet, &mut ex, opts)
+    } else {
+        run_full(&cfg, &plan.jobs, &fleet, &mut ex, opts)
+    }
 }
 
 /// Run the whole matrix on `threads` worker threads (clamped to
@@ -524,6 +569,8 @@ mod tests {
             machines: 8,
             allocation: AllocationStrategy::Diversified,
             instance_set: Vec::new(),
+            input_mb: 0.0,
+            net: NetProfile::default(),
             model: DurationModel {
                 mean_s: 120.0,
                 ..Default::default()
@@ -541,5 +588,51 @@ mod tests {
             sc.label(),
             "m=8 vis=5.0m vol=medium mean=120s alloc=diversified set=m5.large+m5.xlarge:2"
         );
+        // Data axes only show up when used — zero-data labels unchanged.
+        sc.instance_set = Vec::new();
+        sc.input_mb = 64.0;
+        sc.net = NetProfile::narrow();
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow"
+        );
+    }
+
+    #[test]
+    fn data_axes_expand_and_label_distinctly() {
+        let m = ScenarioMatrix {
+            input_mbs: vec![0.0, 64.0],
+            net_profiles: vec![NetProfile::standard(), NetProfile::narrow()],
+            ..Default::default()
+        };
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 4);
+        // input_mb is the outer of the two data axes.
+        assert_eq!(scs[0].input_mb, 0.0);
+        assert_eq!(scs[0].net, NetProfile::standard());
+        assert_eq!(scs[1].net, NetProfile::narrow());
+        assert_eq!(scs[2].input_mb, 64.0);
+        let mut labels: Vec<String> = scs.iter().map(Scenario::label).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), 4);
+    }
+
+    #[test]
+    fn data_sweep_runs_and_reports_bytes() {
+        let mut plan = small_plan();
+        plan.matrix.seeds = vec![1];
+        plan.matrix.cluster_machines = vec![2];
+        plan.matrix.input_mbs = vec![0.0, 32.0];
+        let run = run_sweep(&plan, 2).unwrap();
+        assert_eq!(run.report.scenarios.len(), 2);
+        let zero = &run.report.scenarios[0];
+        let data = &run.report.scenarios[1];
+        assert_eq!(zero.data.bytes_downloaded, 0);
+        assert!(data.data.bytes_downloaded > 0, "{:?}", data.data);
+        assert!(data.data.egress_usd > 0.0);
+        // All 8 jobs still complete; moving bytes costs makespan.
+        assert_eq!(data.completed, 8);
+        assert!(data.makespan_s.mean > zero.makespan_s.mean);
     }
 }

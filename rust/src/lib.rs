@@ -10,11 +10,14 @@
 //! Here the AWS control plane is a faithful discrete-event simulation
 //! ([`aws`], driven by [`sim`]), the "Dockerized workload" is an
 //! AOT-compiled XLA executable run via PJRT ([`runtime`], [`workloads`]),
-//! and the paper's four commands are [`coordinator`].  Whole
+//! and the paper's four commands are [`coordinator`].  Storage is not
+//! free: jobs that declare byte sizes move them through a
+//! bandwidth-aware S3 data plane ([`aws::s3::dataplane`]) that shares
+//! instance NICs and bucket throughput max-min fairly.  Whole
 //! configuration matrices replay in parallel through the scenario-sweep
 //! engine ([`coordinator::sweep`]) with cross-seed aggregation in
 //! [`metrics`].  See DESIGN.md for the substitution table, experiment
-//! index, and sweep-engine design.
+//! index, sweep-engine design, and the data-plane flow model (§7).
 
 pub mod aws;
 pub mod cli;

@@ -13,10 +13,13 @@
 //!                 --volatility low,medium --job-mean-s 90,240 \
 //!                 --allocation lowest-price,diversified,capacity-optimized \
 //!                 --instance-types m5.large+c5.xlarge:2,m5.xlarge \
+//!                 --input-mb 0,64,256 --net-profile standard,narrow \
 //!                 [--on-demand-base N] [--threads N] [--json]
 //! ds describe     --config files/config.json [--fleet files/fleet.json]
+//!                 [--job files/job.json]
 //!                 # validate + print + the per-type container packing
-//!                 # of the machines the run will actually use
+//!                 # of the machines the run will actually use, and the
+//!                 # Job file's data footprint (GB in/out)
 //! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
 //! ```
 //!
@@ -32,6 +35,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use ds_rs::aws::ec2::{instance_type, AllocationStrategy, InstanceSlot, Volatility};
 use ds_rs::aws::ecs::containers_that_fit;
+use ds_rs::aws::s3::dataplane::NetProfile;
 use ds_rs::cli::Args;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::cluster::fleet_slots;
@@ -72,6 +76,8 @@ const SWEEP_FLAGS: &[Flag] = &[
     Flag { name: "job-cv", value: "X", help: "duration coefficient of variation (default 0.3)" },
     Flag { name: "stall-prob", value: "P", help: "per-job stall probability (default 0)" },
     Flag { name: "fail-prob", value: "P", help: "per-job fast-failure probability (default 0)" },
+    Flag { name: "input-mb", value: "MB,MB,..", help: "mean input MB per job axis; non-zero adds download/compute/upload phases on the S3 data plane (default 0)" },
+    Flag { name: "net-profile", value: "P,P,..", help: "network profile axis: wide|standard|narrow (bucket throughput + first-byte latency)" },
     Flag { name: "threads", value: "N", help: "worker threads (default: available cores)" },
     Flag { name: "json", value: "", help: "emit the report as JSON on stdout (chatter to stderr)" },
     Flag { name: "help", value: "", help: "show this help" },
@@ -94,6 +100,8 @@ const RUN_FLAGS: &[Flag] = &[
     Flag { name: "job-cv", value: "X", help: "duration coefficient of variation (default 0.3)" },
     Flag { name: "stall-prob", value: "P", help: "per-job stall probability (default 0)" },
     Flag { name: "fail-prob", value: "P", help: "per-job fast-failure probability (default 0)" },
+    Flag { name: "input-mb", value: "MB", help: "mean input MB per job; non-zero adds download/compute/upload phases on the S3 data plane (default 0)" },
+    Flag { name: "net-profile", value: "P", help: "network profile: wide|standard|narrow (default standard)" },
     Flag { name: "help", value: "", help: "show this help" },
 ];
 
@@ -237,6 +245,25 @@ fn load_config(args: &Args) -> Result<AppConfig> {
 fn describe(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     println!("{}", cfg.to_json().pretty());
+    // With --job, describe the data footprint the run will move through
+    // the S3 data plane (0 GB = pure duration-model jobs).
+    if let Some(p) = args.get("job") {
+        let jobs = JobSpec::from_json(
+            &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
+        )
+        .context("parsing Job file")?;
+        let (input, output) = jobs.data_footprint();
+        let n = jobs.groups.len().max(1) as f64;
+        println!(
+            "\njob data footprint: {} groups, {:.2} GB in / {:.2} GB out total \
+             ({:.1} MB in / {:.1} MB out per group mean)",
+            jobs.groups.len(),
+            input as f64 / 1e9,
+            output as f64 / 1e9,
+            input as f64 / n / 1e6,
+            output as f64 / n / 1e6,
+        );
+    }
     println!(
         "\nderived: task_family={} service={} instance_log_group={}",
         cfg.task_family(),
@@ -332,6 +359,11 @@ fn parse_volatility(s: &str) -> Result<Volatility> {
     })
 }
 
+fn parse_net_profile(s: &str) -> Result<NetProfile> {
+    NetProfile::parse(s)
+        .ok_or_else(|| anyhow!("net-profile must be wide|standard|narrow, got '{s}'"))
+}
+
 fn run(args: &Args) -> Result<()> {
     if args.flag("help") {
         println!("ds run — setup + submitJob + startCluster (+ monitor)\n\nflags:\n{}", render_flags(RUN_FLAGS));
@@ -365,7 +397,16 @@ fn run(args: &Args) -> Result<()> {
         } else {
             None
         },
+        net: parse_net_profile(args.get_or("net-profile", "standard"))?,
         ..Default::default()
+    };
+    // --input-mb overlays a data shape on the Job file: every job gains
+    // download + upload phases on the S3 data plane.
+    let input_mb = parse_scalar(args, "input-mb", 0.0f64)?;
+    let jobs = if input_mb > 0.0 {
+        jobs.with_data_shape((input_mb * 1e6) as u64, opts.seed)
+    } else {
+        jobs
     };
 
     println!(
@@ -521,6 +562,16 @@ fn sweep(args: &Args) -> Result<()> {
             fail_prob,
         })
         .collect();
+    let input_mbs: Vec<f64> = parse_list(args, "input-mb")?.unwrap_or_else(|| vec![0.0]);
+    let net_profiles: Vec<NetProfile> = match args.get_list("net-profile") {
+        Some(items) if !items.is_empty() => items
+            .iter()
+            .map(|s| parse_net_profile(s))
+            .collect::<Result<Vec<_>>>()?,
+        Some(_) => bail!("missing value for --net-profile"),
+        None if args.flag("net-profile") => bail!("missing value for --net-profile"),
+        None => vec![NetProfile::default()],
+    };
 
     let matrix = ScenarioMatrix {
         seeds,
@@ -529,6 +580,8 @@ fn sweep(args: &Args) -> Result<()> {
         cluster_machines: machines,
         allocations,
         instance_sets,
+        input_mbs,
+        net_profiles,
         models,
     };
     let threads = parse_scalar(args, "threads", default_threads())?.max(1);

@@ -28,7 +28,7 @@ use crate::json::Value;
 use crate::sim::clock::fmt_dur;
 use crate::sim::SimTime;
 
-use super::{PoolBreakdown, RunReport, Table};
+use super::{DataBreakdown, PoolBreakdown, RunReport, Table};
 
 /// Distribution summary over a sample of f64s.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -119,6 +119,9 @@ pub struct ScenarioSummary {
     /// interruptions, machine-hours, dollars summed by pool label),
     /// sorted by label.
     pub pools: Vec<PoolBreakdown>,
+    /// Data-plane activity summed across all cells: bytes moved/wasted,
+    /// request + egress dollars, bucket-vs-NIC bottleneck attribution.
+    pub data: DataBreakdown,
 }
 
 impl ScenarioSummary {
@@ -167,6 +170,23 @@ impl ScenarioSummary {
                 e.cost_usd += p.cost_usd;
             }
         }
+        // Sum the per-cell data breakdowns (fixed report order keeps the
+        // f64 dollar sums bit-stable).
+        let mut data = DataBreakdown::default();
+        for r in reports {
+            data.bytes_downloaded += r.data.bytes_downloaded;
+            data.bytes_uploaded += r.data.bytes_uploaded;
+            data.bytes_wasted += r.data.bytes_wasted;
+            data.get_requests += r.data.get_requests;
+            data.put_requests += r.data.put_requests;
+            data.head_requests += r.data.head_requests;
+            data.list_requests += r.data.list_requests;
+            data.request_usd += r.data.request_usd;
+            data.egress_usd += r.data.egress_usd;
+            data.bucket_bound_ms += r.data.bucket_bound_ms;
+            data.nic_bound_ms += r.data.nic_bound_ms;
+            data.first_byte_wait_ms += r.data.first_byte_wait_ms;
+        }
         Self {
             label: label.to_string(),
             cells: reports.len(),
@@ -185,6 +205,7 @@ impl ScenarioSummary {
             duplicate_rate: Aggregate::from_values(&dup_rates),
             dead_letter_rate: Aggregate::from_values(&dlq_rates),
             pools: pool_map.into_values().collect(),
+            data,
         }
     }
 
@@ -221,6 +242,7 @@ impl ScenarioSummary {
                 "pools",
                 Value::Arr(self.pools.iter().map(pool_to_json).collect()),
             )
+            .with("data", data_to_json(&self.data))
     }
 }
 
@@ -232,6 +254,26 @@ fn pool_to_json(p: &PoolBreakdown) -> Value {
         .with("interrupted", p.interrupted)
         .with("machine_hours", p.machine_hours)
         .with("cost_usd", p.cost_usd)
+}
+
+/// JSON shape of the merged [`DataBreakdown`] (the sweep's data axis
+/// lands here: byte totals, request/egress dollars, and the
+/// bucket-vs-NIC bottleneck attribution).
+fn data_to_json(d: &DataBreakdown) -> Value {
+    Value::obj()
+        .with("bytes_downloaded", d.bytes_downloaded)
+        .with("bytes_uploaded", d.bytes_uploaded)
+        .with("bytes_wasted", d.bytes_wasted)
+        .with("get_requests", d.get_requests)
+        .with("put_requests", d.put_requests)
+        .with("head_requests", d.head_requests)
+        .with("list_requests", d.list_requests)
+        .with("request_usd", d.request_usd)
+        .with("egress_usd", d.egress_usd)
+        .with("bucket_bound_ms", d.bucket_bound_ms)
+        .with("nic_bound_ms", d.nic_bound_ms)
+        .with("first_byte_wait_ms", d.first_byte_wait_ms)
+        .with("bucket_bound_fraction", d.bucket_bound_fraction())
 }
 
 /// The whole sweep: one [`ScenarioSummary`] per scenario, in matrix order.
@@ -321,6 +363,14 @@ mod tests {
                 machine_hours: 2.0,
                 cost_usd: cost,
             }],
+            data: DataBreakdown {
+                bytes_downloaded: 1_000,
+                bytes_uploaded: 100,
+                egress_usd: 0.25,
+                bucket_bound_ms: 30,
+                nic_bound_ms: 10,
+                ..Default::default()
+            },
             jobs_submitted: completed + 2,
         }
     }
@@ -372,6 +422,11 @@ mod tests {
         assert_eq!(s.pools[0].interrupted, 3);
         assert!((s.pools[0].machine_hours - 6.0).abs() < 1e-12);
         assert!((s.pools[0].cost_usd - 2.25).abs() < 1e-12);
+        // Data breakdowns sum across cells.
+        assert_eq!(s.data.bytes_downloaded, 3_000);
+        assert_eq!(s.data.bytes_uploaded, 300);
+        assert!((s.data.egress_usd - 0.75).abs() < 1e-12);
+        assert!((s.data.bucket_bound_fraction() - 0.75).abs() < 1e-12);
     }
 
     #[test]
@@ -392,6 +447,13 @@ mod tests {
         let pools = scenario.get("pools").and_then(Value::as_arr).unwrap();
         assert_eq!(pools[0].get("pool").and_then(Value::as_str), Some("m5.xlarge"));
         assert_eq!(pools[0].get("interrupted").and_then(Value::as_u64), Some(1));
+        // The data breakdown rides along in the JSON.
+        let data = scenario.get("data").unwrap();
+        assert_eq!(data.get("bytes_downloaded").and_then(Value::as_u64), Some(1_000));
+        assert_eq!(
+            data.get("bucket_bound_fraction").and_then(Value::as_f64),
+            Some(0.75)
+        );
         let parsed = crate::json::parse(&j.pretty()).unwrap();
         assert_eq!(parsed, j);
     }

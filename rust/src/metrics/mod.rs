@@ -3,6 +3,7 @@
 pub mod aggregate;
 
 pub use aggregate::{Aggregate, ScenarioSummary, SweepReport};
+pub use crate::aws::billing::DataBreakdown;
 pub use crate::aws::ec2::PoolBreakdown;
 
 use crate::aws::billing::CostReport;
@@ -51,6 +52,14 @@ pub struct RunReport {
     /// interruptions, machine-hours, dollars), sorted by pool label.
     /// On-demand usage of a type is its own `"<type>/on-demand"` row.
     pub pools: Vec<PoolBreakdown>,
+    /// The data-plane slice: bytes moved (`bytes_downloaded` /
+    /// `bytes_uploaded` totals), S3 request/egress dollars, and the
+    /// bucket-vs-NIC bottleneck attribution.  The byte counters and
+    /// bottleneck clocks are zero for zero-data runs; the request
+    /// counters also fold in the control-plane's instantaneous S3 calls
+    /// (output PUTs, CHECK_IF_DONE LISTs), so they are nonzero whenever
+    /// the run touched the store at all.
+    pub data: DataBreakdown,
     /// Jobs submitted initially.
     pub jobs_submitted: u64,
 }
@@ -141,6 +150,18 @@ impl RunReport {
                 p.pool, p.launched, p.interrupted, p.machine_hours, p.cost_usd
             ));
         }
+        if self.data.total_bytes() > 0 {
+            s.push_str(&format!(
+                "data: {:.2} GB down, {:.2} GB up ({:.2} GB wasted); bottleneck {:.0}% bucket / {:.0}% NIC; requests ${:.4}, egress ${:.4}\n",
+                self.data.bytes_downloaded as f64 / 1e9,
+                self.data.bytes_uploaded as f64 / 1e9,
+                self.data.bytes_wasted as f64 / 1e9,
+                self.data.bucket_bound_fraction() * 100.0,
+                (1.0 - self.data.bucket_bound_fraction()) * 100.0,
+                self.data.request_usd,
+                self.data.egress_usd,
+            ));
+        }
         s
     }
 }
@@ -208,6 +229,7 @@ mod tests {
             cleaned_up: true,
             cost: CostReport::default(),
             pools: vec![],
+            data: DataBreakdown::default(),
             jobs_submitted: 100,
         }
     }
@@ -226,6 +248,20 @@ mod tests {
         assert!(s.contains("100/100 completed"));
         assert!(s.contains("5 duplicates"));
         assert!(s.contains("2.00h"));
+    }
+
+    #[test]
+    fn summary_shows_data_line_only_for_data_runs() {
+        let zero = report();
+        assert!(!zero.summary().contains("bottleneck"));
+        let mut data_run = report();
+        data_run.data.bytes_downloaded = 3_000_000_000;
+        data_run.data.bytes_uploaded = 1_000_000_000;
+        data_run.data.bucket_bound_ms = 900;
+        data_run.data.nic_bound_ms = 100;
+        let s = data_run.summary();
+        assert!(s.contains("3.00 GB down"), "{s}");
+        assert!(s.contains("90% bucket"), "{s}");
     }
 
     #[test]

@@ -110,6 +110,17 @@ pub fn job_output_prefix(msg: &Value) -> String {
     format!("{}/{}", base, job_tag(msg))
 }
 
+/// Input object key for a job: `{input_prefix}/{job_tag}.f32` — shared
+/// by the executor's fetch and the run driver's HeadObject size probe so
+/// metering and data access can never address different objects.
+pub fn input_key(msg: &Value) -> String {
+    format!(
+        "{}/{}.f32",
+        msg.get("input_prefix").and_then(Value::as_str).unwrap_or("input"),
+        job_tag(msg)
+    )
+}
+
 fn is_poison(msg: &Value) -> bool {
     msg.get("poison").and_then(Value::as_bool).unwrap_or(false)
 }
@@ -211,11 +222,7 @@ impl PjrtExecutor {
             .get("input_bucket")
             .and_then(Value::as_str)
             .unwrap_or("ds-data");
-        let key = format!(
-            "{}/{}.f32",
-            msg.get("input_prefix").and_then(Value::as_str).unwrap_or("input"),
-            job_tag(msg)
-        );
+        let key = input_key(msg);
         if let Ok(obj) = ctx.s3.get(bucket, &key) {
             if let Some(bytes) = obj.body.bytes() {
                 let vals = super::synth::bytes_to_f32(bytes);
@@ -397,6 +404,10 @@ mod tests {
         assert_eq!(job_tag(&m), "P1/B03/2");
         assert_eq!(job_output_prefix(&m), "o/P1/B03/2");
         assert_eq!(output_bucket(&m), "ds-data");
+        // The executor's fetch and the driver's HEAD probe share this.
+        assert_eq!(input_key(&m), "input/P1/B03/2.f32");
+        let with_prefix = msg(r#"{"input_prefix": "raw", "Metadata_Well": "A01"}"#);
+        assert_eq!(input_key(&with_prefix), "raw/A01.f32");
     }
 
     #[test]

@@ -118,6 +118,22 @@ impl SynthImage {
     }
 }
 
+/// Data shape of one job for the S3 data plane: `(input_bytes,
+/// output_bytes)`.  Inputs draw log-normally around `mean_input_bytes`
+/// (cv 0.35 — microscopy fields compress unevenly); outputs follow at
+/// roughly an 8:1 reduction (cv 0.2) — the raw-images-in,
+/// measurement-tables-out shape of a CellProfiler batch.  Deterministic
+/// per seed, so a Job file built from it replays bit-identically.
+pub fn job_data_shape(seed: u64, mean_input_bytes: u64) -> (u64, u64) {
+    if mean_input_bytes == 0 {
+        return (0, 0);
+    }
+    let mut rng = SimRng::new(seed ^ 0xDA7A_5EED);
+    let input = rng.lognormal_mean_cv(mean_input_bytes as f64, 0.35).max(1.0);
+    let output = rng.lognormal_mean_cv(input / 8.0, 0.2).max(1.0);
+    (input.round() as u64, output.round() as u64)
+}
+
 /// f32 slice → little-endian bytes (S3 object body).
 pub fn f32_to_bytes(xs: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(xs.len() * 4);
@@ -198,5 +214,23 @@ mod tests {
     fn f32_bytes_roundtrip() {
         let xs = vec![0.0f32, -1.5, 3.25e7, f32::MIN_POSITIVE];
         assert_eq!(bytes_to_f32(&f32_to_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn job_data_shape_distribution() {
+        let mean = 64_000_000u64;
+        let shapes: Vec<(u64, u64)> = (0..2_000u64).map(|i| job_data_shape(i, mean)).collect();
+        // Deterministic per seed; zero mean means zero data.
+        assert_eq!(shapes[7], job_data_shape(7, mean));
+        assert_eq!(job_data_shape(1, 0), (0, 0));
+        let in_mean = shapes.iter().map(|s| s.0 as f64).sum::<f64>() / shapes.len() as f64;
+        assert!(
+            (in_mean - mean as f64).abs() < mean as f64 * 0.05,
+            "input mean {in_mean} should track {mean}"
+        );
+        for &(input, output) in &shapes {
+            assert!(input >= 1 && output >= 1);
+            assert!(output < input, "outputs are reductions of inputs");
+        }
     }
 }

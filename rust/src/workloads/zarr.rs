@@ -84,6 +84,24 @@ pub fn chunk_level(level: &Level, data: &[f32]) -> Vec<(String, Vec<u8>)> {
     out
 }
 
+/// Exact byte footprint of a full store named `name`: every chunk is a
+/// padded CHUNK×CHUNK f32 object, plus the per-level `.zarray` and the
+/// one `.zattrs` JSON.  This is the realistic `output_bytes` for an
+/// OME-Zarr conversion job in the S3 data plane — unlike a flat
+/// "images/8" guess it grows with pyramid depth and chunk padding.
+pub fn store_bytes(name: &str, levels: &[Level]) -> u64 {
+    let chunk_bytes: u64 = levels
+        .iter()
+        .map(|l| chunk_count(l) as u64 * (CHUNK * CHUNK * 4) as u64)
+        .sum();
+    let meta_bytes: u64 = levels
+        .iter()
+        .map(|l| zarray_metadata(l).len() as u64)
+        .sum::<u64>()
+        + zattrs_metadata(name, levels).len() as u64;
+    chunk_bytes + meta_bytes
+}
+
 /// `.zarray` metadata for a level.
 pub fn zarray_metadata(level: &Level) -> String {
     Value::obj()
@@ -183,6 +201,22 @@ mod tests {
         for (_, bytes) in &chunks {
             assert_eq!(bytes.len(), CHUNK * CHUNK * 4);
         }
+    }
+
+    #[test]
+    fn store_bytes_matches_materialized_objects() {
+        // Build the store the pyramid driver would and sum its bodies.
+        let ls = pyramid_levels(192, 160, 3);
+        let mut total = zattrs_metadata("img0", &ls).len() as u64;
+        for l in &ls {
+            total += zarray_metadata(l).len() as u64;
+            let data = vec![0.5f32; l.height * l.width];
+            for (_, bytes) in chunk_level(l, &data) {
+                total += bytes.len() as u64;
+            }
+        }
+        assert_eq!(store_bytes("img0", &ls), total);
+        assert!(total > (192 * 160 * 4) as u64, "padding + metadata overhead");
     }
 
     #[test]

@@ -35,7 +35,7 @@ fn usage_and_help_list_full_sweep_flag_set() {
         "--config", "--job", "--fleet", "--plate", "--wells", "--sites", "--seeds",
         "--seed-base", "--machines", "--visibility-s", "--volatility", "--allocation",
         "--instance-types", "--on-demand-base", "--job-mean-s", "--job-cv", "--stall-prob",
-        "--fail-prob", "--threads", "--json",
+        "--fail-prob", "--input-mb", "--net-profile", "--threads", "--json",
     ];
     for out in [run_ok(&[]), run_ok(&["sweep", "--help"])] {
         for f in flags {
@@ -246,6 +246,85 @@ fn describe_reports_per_type_packing() {
     assert!(out.contains("c5.xlarge:2: fits"), "{out}");
     assert!(!out.contains("m5.xlarge: fits"), "{out}");
     assert!(out.contains("allocation=diversified"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn data_sweep_json_carries_the_data_breakdown() {
+    // The --input-mb / --net-profile axes: jobs gain byte sizes, the
+    // JSON report gains per-scenario byte totals, egress dollars, and
+    // the bucket-vs-NIC bottleneck attribution.
+    let out = run_ok(&[
+        "sweep",
+        "--seeds",
+        "1",
+        "--machines",
+        "1",
+        "--wells",
+        "2",
+        "--sites",
+        "1",
+        "--job-mean-s",
+        "30",
+        "--input-mb",
+        "32",
+        "--net-profile",
+        "narrow",
+        "--json",
+    ]);
+    let v = ds_rs::json::parse(out.trim()).unwrap();
+    let scenarios = v.get("scenarios").and_then(ds_rs::json::Value::as_arr).unwrap();
+    assert_eq!(scenarios.len(), 1);
+    let s = &scenarios[0];
+    let label = s.get("label").and_then(ds_rs::json::Value::as_str).unwrap();
+    assert!(label.contains("in=32MB") && label.contains("net=narrow"), "{label}");
+    let data = s.get("data").unwrap();
+    let down = data
+        .get("bytes_downloaded")
+        .and_then(ds_rs::json::Value::as_u64)
+        .unwrap();
+    assert!(down > 0, "{data:?}");
+    assert!(
+        data.get("egress_usd")
+            .and_then(ds_rs::json::Value::as_f64)
+            .unwrap()
+            > 0.0
+    );
+    assert!(data
+        .get("bucket_bound_fraction")
+        .and_then(ds_rs::json::Value::as_f64)
+        .is_some());
+}
+
+#[test]
+fn sweep_rejects_bad_net_profile() {
+    let out = ds()
+        .args(["sweep", "--net-profile", "adsl"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("net-profile"));
+}
+
+#[test]
+fn describe_prints_job_data_footprint() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-foot-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("config.json");
+    run_ok(&["make-config", "--out", cfg.to_str().unwrap()]);
+    let jobs = ds_rs::config::JobSpec::plate("P1", 2, 2, vec![])
+        .with_uniform_data(250_000_000, 25_000_000);
+    let job_path = dir.join("job.json");
+    std::fs::write(&job_path, jobs.to_json().pretty()).unwrap();
+    let out = run_ok(&[
+        "describe",
+        "--config",
+        cfg.to_str().unwrap(),
+        "--job",
+        job_path.to_str().unwrap(),
+    ]);
+    assert!(out.contains("job data footprint: 4 groups"), "{out}");
+    assert!(out.contains("1.00 GB in / 0.10 GB out"), "{out}");
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -1,0 +1,271 @@
+//! Data-plane invariants (DESIGN.md §7): byte conservation, max-min
+//! fairness bounds, makespan monotonicity in `input_bytes`, and replay
+//! of data-shaped runs and sweeps at any thread count.
+
+use ds_rs::aws::s3::dataplane::{gbps_to_bytes_per_ms, DataPlane, Direction, NetProfile};
+use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::sim::MINUTE;
+use ds_rs::testutil::forall_r;
+use ds_rs::workloads::{DurationModel, ModeledExecutor};
+
+fn quick_cfg() -> AppConfig {
+    AppConfig {
+        cluster_machines: 2,
+        tasks_per_machine: 2,
+        docker_cores: 2,
+        machine_types: vec!["m5.xlarge".into()],
+        machine_price: 0.10,
+        sqs_message_visibility: 10 * MINUTE,
+        ..Default::default()
+    }
+}
+
+fn modeled(mean_s: f64) -> ModeledExecutor {
+    ModeledExecutor {
+        model: DurationModel {
+            mean_s,
+            cv: 0.2,
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// One random data-plane episode: flows arriving on random instances and
+/// buckets, random advances, random instance cancellations.
+#[derive(Debug, Clone)]
+struct Episode {
+    /// (start_gap_ms, instance, bucket_idx, upload, bytes)
+    arrivals: Vec<(u64, u64, u8, bool, u64)>,
+    /// Instances cancelled at the end, before draining.
+    cancels: Vec<u64>,
+}
+
+#[test]
+fn prop_byte_conservation() {
+    // Bytes billed == bytes of completed flows + bytes wasted on
+    // cancelled ones, and wasted never exceeds what the cancelled flows
+    // could have moved — under arbitrary arrival/advance/cancel orders.
+    forall_r(
+        "dataplane-byte-conservation",
+        40,
+        0xB17E,
+        |rng| Episode {
+            arrivals: (0..(1 + rng.below(30)))
+                .map(|_| {
+                    (
+                        rng.below(5_000),
+                        rng.below(4),
+                        rng.below(2) as u8,
+                        rng.chance(0.4),
+                        1 + rng.below(50_000_000),
+                    )
+                })
+                .collect(),
+            cancels: (0..rng.below(4)).map(|_| rng.below(4)).collect(),
+        },
+        |ep| {
+            let mut plane = DataPlane::new(NetProfile::standard());
+            let mut now = 0u64;
+            let mut started: u64 = 0;
+            let mut completed_bytes: u64 = 0;
+            for &(gap, inst, bucket, upload, bytes) in &ep.arrivals {
+                now += gap;
+                let dir = if upload { Direction::Upload } else { Direction::Download };
+                let bucket = if bucket == 0 { "a" } else { "b" };
+                plane.start(now, inst, 1.25, bucket, dir, bytes);
+                started += bytes;
+                // Interleave: drain anything that finished on the way.
+                for (_, end) in plane.poll(now) {
+                    completed_bytes += end.bytes;
+                }
+            }
+            let mut cancelled_possible: u64 = 0;
+            for &inst in &ep.cancels {
+                // Upper bound on what the cancelled flows could bill.
+                cancelled_possible += plane
+                    .cancel_instance(now, inst)
+                    .len() as u64
+                    * 50_000_001;
+            }
+            while let Some(t) = plane.next_event() {
+                for (_, end) in plane.poll(t) {
+                    completed_bytes += end.bytes;
+                }
+            }
+            let st = plane.stats();
+            let billed = st.bytes_downloaded + st.bytes_uploaded;
+            if billed != completed_bytes + st.bytes_wasted {
+                return Err(format!(
+                    "billed {billed} != completed {completed_bytes} + wasted {}",
+                    st.bytes_wasted
+                ));
+            }
+            if billed > started {
+                return Err(format!("billed {billed} > started {started}"));
+            }
+            if st.bytes_wasted > cancelled_possible {
+                return Err(format!(
+                    "wasted {} exceeds cancelled flows' bytes (≤ {cancelled_possible})",
+                    st.bytes_wasted
+                ));
+            }
+            if plane.in_flight() != 0 {
+                return Err(format!("{} flows never finished", plane.in_flight()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_max_min_fair_share_lower_bound() {
+    // With every flow backlogged, no flow's planned rate falls below the
+    // global fair share min(cap_link / members_link) — the max-min
+    // guarantee — and no link's total allocation exceeds its capacity.
+    forall_r(
+        "dataplane-fair-share",
+        40,
+        0xFA1A,
+        |rng| {
+            let n = 2 + rng.below(12);
+            (0..n)
+                .map(|_| (rng.below(3), rng.below(2) as u8))
+                .collect::<Vec<(u64, u8)>>()
+        },
+        |flows| {
+            let profile = NetProfile::standard();
+            let mut plane = DataPlane::new(profile.clone());
+            let nic = 1.25f64;
+            let ids: Vec<u64> = flows
+                .iter()
+                .map(|&(inst, bucket)| {
+                    plane.start(
+                        0,
+                        inst,
+                        nic,
+                        if bucket == 0 { "a" } else { "b" },
+                        Direction::Download,
+                        1_000_000_000, // 1 GB: backlogged throughout
+                    )
+                })
+                .collect();
+            // Activate everything, then inspect the plan.
+            plane.poll(profile.first_byte_ms);
+            // Global fair share: the most contended link's cap / members.
+            let nic_cap = gbps_to_bytes_per_ms(nic);
+            let bucket_cap = profile.bucket_bytes_per_ms();
+            let mut min_share = f64::INFINITY;
+            for inst in 0..3u64 {
+                let members = flows.iter().filter(|&&(i, _)| i == inst).count();
+                if members > 0 {
+                    min_share = min_share.min(nic_cap / members as f64);
+                }
+            }
+            for bucket in 0..2u8 {
+                let members = flows.iter().filter(|&&(_, b)| b == bucket).count();
+                if members > 0 {
+                    min_share = min_share.min(bucket_cap / members as f64);
+                }
+            }
+            for (&id, &(inst, bucket)) in ids.iter().zip(flows) {
+                let rate = plane
+                    .rate_of(id)
+                    .ok_or_else(|| format!("flow {id} vanished"))?;
+                if rate < min_share - 1e-6 {
+                    return Err(format!(
+                        "flow {id} (inst {inst}, bucket {bucket}) at {rate} below fair share {min_share}"
+                    ));
+                }
+            }
+            // Capacity conservation per link.
+            for inst in 0..3u64 {
+                let total: f64 = ids
+                    .iter()
+                    .zip(flows)
+                    .filter(|&(_, &(i, _))| i == inst)
+                    .map(|(&id, _)| plane.rate_of(id).unwrap_or(0.0))
+                    .sum();
+                if total > nic_cap + 1e-6 {
+                    return Err(format!("NIC {inst} oversubscribed: {total} > {nic_cap}"));
+                }
+            }
+            for bucket in 0..2u8 {
+                let total: f64 = ids
+                    .iter()
+                    .zip(flows)
+                    .filter(|&(_, &(_, b))| b == bucket)
+                    .map(|(&id, _)| plane.rate_of(id).unwrap_or(0.0))
+                    .sum();
+                if total > bucket_cap + 1e-6 {
+                    return Err(format!("bucket {bucket} oversubscribed: {total}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn makespan_monotone_in_input_bytes() {
+    // Same seed, same bandwidth: more bytes per job can only push the
+    // drain later.
+    let cfg = quick_cfg();
+    let fleet = FleetSpec::template("us-east-1").unwrap();
+    let mut last = 0u64;
+    for &mb in &[0u64, 16, 64, 256] {
+        let jobs = JobSpec::plate("P", 4, 2, vec![]).with_uniform_data(mb * 1_000_000, mb * 125_000);
+        let mut ex = modeled(60.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        let makespan = report
+            .drained_at
+            .unwrap_or_else(|| panic!("undrained at {mb} MB: {}", report.summary()));
+        assert!(
+            makespan >= last,
+            "makespan shrank when inputs grew to {mb} MB: {makespan} < {last}"
+        );
+        assert_eq!(report.stats.completed, 8, "{}", report.summary());
+        last = makespan;
+    }
+    assert!(last > 0);
+}
+
+#[test]
+fn data_sweep_bit_identical_at_1_2_8_threads() {
+    use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
+    let matrix = ScenarioMatrix {
+        seeds: vec![11, 12],
+        cluster_machines: vec![1, 2],
+        input_mbs: vec![0.0, 48.0],
+        net_profiles: vec![NetProfile::standard(), NetProfile::narrow()],
+        models: vec![DurationModel {
+            mean_s: 30.0,
+            cv: 0.2,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    let plan = SweepPlan::new(quick_cfg(), JobSpec::plate("P", 4, 1, vec![]), matrix);
+    let one = run_sweep(&plan, 1).unwrap();
+    let two = run_sweep(&plan, 2).unwrap();
+    let eight = run_sweep(&plan, 8).unwrap();
+    assert_eq!(one.report, two.report);
+    assert_eq!(one.report, eight.report);
+    assert_eq!(one.cells, two.cells);
+    assert_eq!(one.cells, eight.cells);
+    // The data axes actually exercised the plane somewhere.
+    assert!(
+        one.report
+            .scenarios
+            .iter()
+            .any(|s| s.data.bytes_downloaded > 0),
+        "no scenario moved bytes"
+    );
+    // And zero-data scenarios stayed zero.
+    assert!(one
+        .report
+        .scenarios
+        .iter()
+        .any(|s| s.data.bytes_downloaded == 0));
+}

@@ -486,6 +486,7 @@ fn gen_report(rng: &mut SimRng) -> RunReport {
             ec2_usd: machine_hours * 0.03,
             sqs_usd: rng.f64() * 0.01,
             s3_usd: rng.f64() * 0.01,
+            s3_egress_usd: rng.f64() * 0.01,
             cloudwatch_usd: rng.f64() * 0.01,
             machine_hours,
             on_demand_equivalent_usd: machine_hours * 0.096,
@@ -497,6 +498,15 @@ fn gen_report(rng: &mut SimRng) -> RunReport {
             machine_hours,
             cost_usd: machine_hours * 0.03,
         }],
+        data: ds_rs::metrics::DataBreakdown {
+            bytes_downloaded: rng.below(1u64 << 32),
+            bytes_uploaded: rng.below(1u64 << 30),
+            bytes_wasted: rng.below(1u64 << 24),
+            egress_usd: rng.f64() * 0.1,
+            bucket_bound_ms: rng.below(1u64 << 20),
+            nic_bound_ms: rng.below(1u64 << 20),
+            ..Default::default()
+        },
         jobs_submitted: submitted,
     }
 }
