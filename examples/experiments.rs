@@ -575,25 +575,23 @@ fn t12() {
         .collect();
     let mut base = cfg(8, 10 * MINUTE);
     base.machine_price = 0.033; // per weighted unit
-    let matrix = ScenarioMatrix {
-        seeds: vec![121, 122, 123, 124],
-        volatilities: vols.iter().map(|&(_, v)| v).collect(),
-        allocations: strategies.to_vec(),
-        instance_sets: vec![set],
-        cluster_machines: vec![8],
-        models: vec![model(240.0)],
-        ..Default::default()
-    };
-    let jobs = JobSpec::plate("P", 96, 4, vec![]); // 384 jobs
-    let report = sweep_report(
-        base,
-        jobs,
-        matrix,
-        RunOptions {
+    // Scenario API v2: the fluent builder replaces the struct literal —
+    // unset axes inherit the config-aware defaults.
+    let plan = SweepPlan::builder()
+        .config(base)
+        .jobs(JobSpec::plate("P", 96, 4, vec![])) // 384 jobs
+        .options(RunOptions {
             max_sim_time: 7 * 24 * HOUR,
             ..Default::default()
-        },
-    );
+        })
+        .seeds([121, 122, 123, 124])
+        .volatilities(vols.iter().map(|&(_, v)| v))
+        .allocations(strategies.iter().copied())
+        .instance_sets([set])
+        .models([model(240.0)])
+        .build()
+        .expect("T12 plan");
+    let report = run_sweep(&plan, default_threads()).expect("sweep failed").report;
     // Scenario order: volatility outer, allocation inner.
     let axis: Vec<(&str, &str)> = vols
         .iter()
@@ -635,24 +633,21 @@ fn t13() {
     let input_mb = 256.0;
     let mean_s = 90.0;
     let profile = NetProfile::narrow();
-    let matrix = ScenarioMatrix {
-        seeds: vec![131, 132],
-        cluster_machines: machine_axis.clone(),
-        input_mbs: vec![input_mb],
-        net_profiles: vec![profile.clone()],
-        models: vec![model(mean_s)],
-        ..Default::default()
-    };
-    let jobs = JobSpec::plate("P", 48, 8, vec![]); // 384 jobs
-    let report = sweep_report(
-        cfg(1, 10 * MINUTE),
-        jobs,
-        matrix,
-        RunOptions {
+    let plan = SweepPlan::builder()
+        .config(cfg(1, 10 * MINUTE))
+        .jobs(JobSpec::plate("P", 48, 8, vec![])) // 384 jobs
+        .options(RunOptions {
             max_sim_time: 3 * 24 * HOUR,
             ..Default::default()
-        },
-    );
+        })
+        .seeds([131, 132])
+        .machines(machine_axis.iter().copied())
+        .input_mbs([input_mb])
+        .net_profiles([profile.clone()])
+        .models([model(mean_s)])
+        .build()
+        .expect("T13 plan");
+    let report = run_sweep(&plan, default_threads()).expect("sweep failed").report;
     // Bucket ceiling in jobs/h: every job moves ~input + input/8 bytes
     // through the one bucket.
     let bytes_per_job = input_mb * 1e6 * (1.0 + 1.0 / 8.0);

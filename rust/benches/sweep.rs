@@ -1,5 +1,7 @@
 //! Sweep-engine thread-scaling bench (acceptance gate: a 64-cell sweep
-//! at 8 threads must beat 1 thread by >= 3x wall-clock).
+//! at 8 threads must beat 1 thread by >= 3x wall-clock), plus a
+//! plan-expansion bench for the Scenario API v2 layer (Sweep-file parse
+//! + cartesian expansion of a 1000-scenario matrix).
 //!
 //!     cargo bench --bench sweep
 //!
@@ -14,6 +16,7 @@ use std::time::Instant;
 use ds_rs::aws::ec2::Volatility;
 use ds_rs::config::{AppConfig, JobSpec};
 use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
+use ds_rs::scenario::SweepFile;
 use ds_rs::sim::MINUTE;
 use ds_rs::workloads::DurationModel;
 
@@ -51,6 +54,47 @@ fn plan_64_cells() -> SweepPlan {
     SweepPlan::new(cfg, jobs, matrix)
 }
 
+/// A 1000-scenario plan (10 machines × 10 visibilities × 10 means) with
+/// a real Job file, rendered to a Sweep file — the declarative-layer
+/// baseline: how fast a committed experiment file turns back into an
+/// expanded scenario list.
+fn plan_expansion_bench() {
+    let plan = SweepPlan::builder()
+        .jobs(JobSpec::plate("P", 24, 2, vec![]))
+        .seeds([1])
+        .machines((1..=10).map(|m| m * 2))
+        .visibilities((1..=10).map(|v| v * MINUTE))
+        .job_mean_s((1..=10).map(|s| s as f64 * 30.0))
+        .build()
+        .expect("bench plan");
+    let text = SweepFile::render(&plan);
+    let scenario_count = plan.matrix.scenarios().len();
+    assert_eq!(scenario_count, 1000);
+    println!(
+        "\n== plan expansion: {}-byte Sweep file -> {} scenarios ==\n",
+        text.len(),
+        scenario_count
+    );
+
+    let iters = 50u32;
+    let t0 = Instant::now();
+    let mut expanded = 0usize;
+    for _ in 0..iters {
+        let parsed = SweepFile::from_text(&text)
+            .expect("render must parse")
+            .to_plan()
+            .expect("file must plan");
+        expanded += parsed.matrix.scenarios().len();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(expanded, scenario_count * iters as usize);
+    println!(
+        "{iters} parse+expand iterations in {wall:.3}s  ({:.0} scenarios/s, {:.2} ms/iteration)",
+        expanded as f64 / wall,
+        wall * 1000.0 / f64::from(iters)
+    );
+}
+
 fn main() {
     let plan = plan_64_cells();
     println!(
@@ -83,4 +127,6 @@ fn main() {
         );
     }
     println!("\ngate: speedup at 8 threads should be >= 3x (near-linear up to the core count).");
+
+    plan_expansion_bench();
 }

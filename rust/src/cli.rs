@@ -1,6 +1,10 @@
 //! Tiny CLI argument parser (no clap in the vendored crate set).
 //!
 //! Supports `ds <command> [positionals] [--flag] [--key value]`.
+//! Numeric access is strict-only ([`Args::try_parse`] /
+//! [`Args::try_parse_list`]): a malformed value is an error, never a
+//! silent fallback to the default — `--machines 8x` must not run a
+//! different study than the one asked for.
 
 use std::collections::BTreeMap;
 
@@ -55,18 +59,6 @@ impl Args {
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
-    }
-
-    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
-    }
-
-    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(default)
     }
 
     /// Comma-separated list value (`--machines 2,4,8`).  Empty items are
@@ -152,7 +144,7 @@ mod tests {
         let a = parse("run --cheapest --seed 7 --bucket=my-bkt trailing");
         assert!(a.flag("cheapest"));
         assert!(!a.flag("missing"));
-        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.try_parse("seed", 0u64), Ok(7));
         assert_eq!(a.get("bucket"), Some("my-bkt"));
         assert_eq!(a.positionals, vec!["trailing"]);
     }
@@ -161,7 +153,7 @@ mod tests {
     fn defaults() {
         let a = parse("x");
         assert_eq!(a.get_or("region", "us-east-1"), "us-east-1");
-        assert_eq!(a.get_f64("price", 0.1), 0.1);
+        assert_eq!(a.try_parse("price", 0.1f64), Ok(0.1));
     }
 
     #[test]

@@ -3,16 +3,19 @@
 //! The paper's promise is scale: "neither computing power nor data
 //! storage are limited by local availability."  The serial [`run_full`]
 //! driver evaluates one configuration at a time; this module evaluates a
-//! whole configuration *matrix* — the cartesian product of seeds ×
-//! [`Volatility`] × `SQS_MESSAGE_VISIBILITY` × `CLUSTER_MACHINES` ×
-//! [`AllocationStrategy`] × instance set × mean input MB ×
-//! [`NetProfile`] × [`DurationModel`] — on a pool of OS threads, one
-//! independent [`Simulation`](super::Simulation) per cell.
+//! whole configuration *matrix* — the cartesian product of the typed
+//! axes registered in [`crate::scenario`] (seeds × volatility ×
+//! visibility × machines × allocation × instance set × input MB × net
+//! profile × duration model) — on a pool of OS threads, one independent
+//! [`Simulation`](super::Simulation) per cell.
 //!
-//! The two data axes make every study a compute-vs-storage trade-off: a
-//! non-zero `input_mb` overlays a per-job data shape on the plan's Job
-//! file (via [`JobSpec::with_data_shape`]) and the net profile sets the
-//! bucket's aggregate throughput + first-byte latency for the cell.
+//! The types describing *what* to sweep — [`Scenario`],
+//! [`ScenarioMatrix`], [`SweepPlan`], and the axis registry they hang
+//! off — live in [`crate::scenario`] and are re-exported here; this
+//! module owns *executing* the plan.  Each axis overlays its own knob
+//! on the cell's config, fleet file, job file, or run options
+//! ([`Scenario::cell_inputs`]), so adding an axis never touches this
+//! file.
 //!
 //! Determinism is the load-bearing property: each cell is a pure function
 //! of `(scenario, seed)` — it owns its account, event heap, and
@@ -47,193 +50,17 @@ use std::thread;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
-use crate::aws::s3::dataplane::NetProfile;
-use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::metrics::{RunReport, ScenarioSummary, SweepReport};
-use crate::sim::clock::fmt_dur;
-use crate::sim::{SimTime, MINUTE};
-use crate::workloads::{DurationModel, ModeledExecutor};
+use crate::workloads::ModeledExecutor;
 
-use super::run::{run_full, RunOptions};
+pub use crate::scenario::{volatility_name, Scenario, ScenarioMatrix, SweepPlan};
+
+use super::run::run_full;
 
 /// Default worker count for a sweep: one per available core, falling
 /// back to 4 when parallelism cannot be queried.
 pub fn default_threads() -> usize {
     thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-}
-
-/// Stable display name for a volatility level.
-pub fn volatility_name(v: Volatility) -> &'static str {
-    match v {
-        Volatility::Low => "low",
-        Volatility::Medium => "medium",
-        Volatility::High => "high",
-    }
-}
-
-/// One point in the configuration matrix.  Seeds are *not* part of a
-/// scenario: they replicate it, and aggregation reduces across them.
-#[derive(Debug, Clone)]
-pub struct Scenario {
-    pub volatility: Volatility,
-    /// `SQS_MESSAGE_VISIBILITY` for this cell's config.
-    pub visibility: SimTime,
-    /// `CLUSTER_MACHINES` for this cell's config (weighted units).
-    pub machines: u32,
-    /// `ALLOCATION_STRATEGY` for this cell's fleet.
-    pub allocation: AllocationStrategy,
-    /// `INSTANCE_TYPES` for this cell's fleet; empty inherits the plan's
-    /// fleet file / Config.
-    pub instance_set: Vec<InstanceSlot>,
-    /// Mean input MB per job; 0 leaves the plan's Job file untouched
-    /// (zero-data cells take the pre-data-plane path).
-    pub input_mb: f64,
-    /// Network profile for this cell's data plane.
-    pub net: NetProfile,
-    pub model: DurationModel,
-}
-
-impl Scenario {
-    /// Stable human-readable label (also the aggregation key in reports).
-    pub fn label(&self) -> String {
-        let mut label = format!(
-            "m={} vis={} vol={} mean={:.0}s alloc={}",
-            self.machines,
-            fmt_dur(self.visibility),
-            volatility_name(self.volatility),
-            self.model.mean_s,
-            self.allocation.name()
-        );
-        if !self.instance_set.is_empty() {
-            let types: Vec<String> = self.instance_set.iter().map(InstanceSlot::render).collect();
-            label.push_str(&format!(" set={}", types.join("+")));
-        }
-        // Data axes only label cells that use them, so zero-data sweeps
-        // keep their historical labels.
-        if self.input_mb > 0.0 {
-            label.push_str(&format!(" in={}MB", self.input_mb));
-        }
-        if self.net != NetProfile::default() {
-            label.push_str(&format!(" net={}", self.net.name));
-        }
-        label
-    }
-}
-
-/// Axes of the sweep: the scenario list is their cartesian product.
-#[derive(Debug, Clone)]
-pub struct ScenarioMatrix {
-    /// Replicate seeds applied to every scenario.
-    pub seeds: Vec<u64>,
-    pub volatilities: Vec<Volatility>,
-    pub visibilities: Vec<SimTime>,
-    pub cluster_machines: Vec<u32>,
-    /// Fleet allocation strategies to compare.
-    pub allocations: Vec<AllocationStrategy>,
-    /// Instance sets to compare; an empty set inherits the plan's fleet
-    /// file / Config types.
-    pub instance_sets: Vec<Vec<InstanceSlot>>,
-    /// Mean input MB per job (`--input-mb`); 0 = no data plane.
-    pub input_mbs: Vec<f64>,
-    /// Network profiles (`--net-profile`).
-    pub net_profiles: Vec<NetProfile>,
-    pub models: Vec<DurationModel>,
-}
-
-impl Default for ScenarioMatrix {
-    fn default() -> Self {
-        Self {
-            seeds: vec![1],
-            volatilities: vec![Volatility::Low],
-            visibilities: vec![10 * MINUTE],
-            cluster_machines: vec![4],
-            allocations: vec![AllocationStrategy::LowestPrice],
-            instance_sets: vec![Vec::new()],
-            input_mbs: vec![0.0],
-            net_profiles: vec![NetProfile::default()],
-            models: vec![DurationModel::default()],
-        }
-    }
-}
-
-impl ScenarioMatrix {
-    /// Expand the cartesian product in a fixed order: machines outermost,
-    /// then visibility, volatility, allocation strategy, instance set,
-    /// input MB, net profile, and innermost the duration model.  Axis
-    /// element order is preserved, so single-axis sweeps read like the
-    /// input list.
-    pub fn scenarios(&self) -> Vec<Scenario> {
-        let mut out = Vec::with_capacity(
-            self.cluster_machines.len()
-                * self.visibilities.len()
-                * self.volatilities.len()
-                * self.allocations.len()
-                * self.instance_sets.len()
-                * self.input_mbs.len()
-                * self.net_profiles.len()
-                * self.models.len(),
-        );
-        for &machines in &self.cluster_machines {
-            for &visibility in &self.visibilities {
-                for &volatility in &self.volatilities {
-                    for &allocation in &self.allocations {
-                        for instance_set in &self.instance_sets {
-                            for &input_mb in &self.input_mbs {
-                                for net in &self.net_profiles {
-                                    for model in &self.models {
-                                        out.push(Scenario {
-                                            volatility,
-                                            visibility,
-                                            machines,
-                                            allocation,
-                                            instance_set: instance_set.clone(),
-                                            input_mb,
-                                            net: net.clone(),
-                                            model: model.clone(),
-                                        });
-                                    }
-                                }
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        out
-    }
-
-    /// Total cells the sweep will run (scenarios × seeds).
-    pub fn cell_count(&self) -> usize {
-        self.scenarios().len() * self.seeds.len()
-    }
-}
-
-/// Everything a sweep needs besides the matrix: the base config the
-/// scenario knobs are overlaid on, the job list every cell replays, the
-/// fleet file, and the base run options (seed and volatility are
-/// overridden per cell).
-#[derive(Debug, Clone)]
-pub struct SweepPlan {
-    pub base_cfg: AppConfig,
-    pub jobs: JobSpec,
-    pub fleet: FleetSpec,
-    pub base_opts: RunOptions,
-    pub matrix: ScenarioMatrix,
-}
-
-impl SweepPlan {
-    /// Plan over the built-in us-east-1 template fleet with default run
-    /// options.
-    pub fn new(base_cfg: AppConfig, jobs: JobSpec, matrix: ScenarioMatrix) -> Self {
-        Self {
-            base_cfg,
-            jobs,
-            fleet: FleetSpec::template("us-east-1").expect("builtin fleet template"),
-            base_opts: RunOptions::default(),
-            matrix,
-        }
-    }
 }
 
 /// One finished cell, tagged by its scenario index and seed.
@@ -255,51 +82,28 @@ pub struct SweepRun {
     pub report: SweepReport,
 }
 
-/// The base config with one scenario's knobs overlaid.
-fn scenario_cfg(base: &AppConfig, scenario: &Scenario) -> AppConfig {
-    let mut cfg = base.clone();
-    cfg.cluster_machines = scenario.machines;
-    cfg.sqs_message_visibility = scenario.visibility;
-    cfg
-}
-
-/// The plan's fleet file with one scenario's fleet knobs overlaid.
-fn scenario_fleet(base: &FleetSpec, scenario: &Scenario) -> FleetSpec {
-    let mut fleet = base.clone();
-    fleet.allocation_strategy = scenario.allocation;
-    if !scenario.instance_set.is_empty() {
-        fleet.instance_types = scenario.instance_set.clone();
-    }
-    fleet
-}
-
-/// Run one `(scenario, seed)` cell: overlay the scenario knobs on the
-/// base config and fleet file and drive a fresh, fully independent
-/// simulation.  A non-zero `input_mb` overlays a per-job data shape on
-/// the plan's Job file (re-drawn per seed, like a fresh dataset), and
-/// the scenario's net profile drives the cell's data plane.
+/// Run one `(scenario, seed)` cell: every registered axis overlays its
+/// knob on the base config, fleet file, and run options
+/// ([`Scenario::cell_inputs`]), and a fresh, fully independent
+/// simulation replays the plan's jobs.  A non-zero input-MB axis value
+/// overlays a per-job data shape on the plan's Job file (re-drawn per
+/// seed, like a fresh dataset).
 pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunReport> {
-    let cfg = scenario_cfg(&plan.base_cfg, scenario);
-    cfg.validate()?;
-    let fleet = scenario_fleet(&plan.fleet, scenario);
-    let opts = RunOptions {
-        seed,
-        volatility: scenario.volatility,
-        net: scenario.net.clone(),
-        ..plan.base_opts.clone()
-    };
+    let mut cell = scenario.cell_inputs(&plan.base_cfg, &plan.fleet, &plan.base_opts);
+    cell.cfg.validate()?;
+    cell.opts.seed = seed;
     let mut ex = ModeledExecutor {
-        model: scenario.model.clone(),
+        model: cell.model.clone(),
         ..Default::default()
     };
-    if scenario.input_mb > 0.0 {
+    if cell.input_mb > 0.0 {
         let jobs = plan
             .jobs
             .clone()
-            .with_data_shape((scenario.input_mb * 1e6) as u64, seed);
-        run_full(&cfg, &jobs, &fleet, &mut ex, opts)
+            .with_data_shape((cell.input_mb * 1e6) as u64, seed);
+        run_full(&cell.cfg, &jobs, &cell.fleet, &mut ex, cell.opts)
     } else {
-        run_full(&cfg, &plan.jobs, &fleet, &mut ex, opts)
+        run_full(&cell.cfg, &plan.jobs, &cell.fleet, &mut ex, cell.opts)
     }
 }
 
@@ -315,10 +119,11 @@ pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
     // Fail fast: one bad scenario must not cost a full sweep's worth of
     // simulation before its config error surfaces.
     for sc in &scenarios {
-        scenario_cfg(&plan.base_cfg, sc)
+        let cell = sc.cell_inputs(&plan.base_cfg, &plan.fleet, &plan.base_opts);
+        cell.cfg
             .validate()
             .with_context(|| format!("invalid scenario '{}'", sc.label()))?;
-        scenario_fleet(&plan.fleet, sc)
+        cell.fleet
             .validate()
             .with_context(|| format!("invalid scenario '{}'", sc.label()))?;
         ensure!(
@@ -378,7 +183,10 @@ pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
                 .filter(|c| c.scenario == i)
                 .map(|c| &c.report)
                 .collect();
-            ScenarioSummary::from_reports(&sc.label(), &reports)
+            // The label and the machine-readable axis coordinates both
+            // come from the registry — aggregation never hand-formats a
+            // scenario identity.
+            ScenarioSummary::from_reports(&sc.label(), &reports).with_axes(sc.axis_json())
         })
         .collect();
 
@@ -394,6 +202,12 @@ pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
+    use crate::aws::s3::dataplane::NetProfile;
+    use crate::config::{AppConfig, JobSpec};
+    use crate::json::Value;
+    use crate::sim::MINUTE;
+    use crate::workloads::DurationModel;
 
     fn small_plan() -> SweepPlan {
         let cfg = AppConfig {
@@ -525,6 +339,13 @@ mod tests {
             run.cells.iter().map(|c| (c.scenario, c.seed)).collect::<Vec<_>>(),
             vec![(0, 1), (0, 2), (1, 1), (1, 2)]
         );
+        // Every summary carries its registry-keyed axis coordinates.
+        for (s, sc) in run.report.scenarios.iter().zip(&run.scenarios) {
+            assert_eq!(
+                s.axes.get("MACHINES").and_then(Value::as_u64),
+                Some(u64::from(sc.machines))
+            );
+        }
     }
 
     #[test]

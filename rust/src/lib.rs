@@ -16,8 +16,11 @@
 //! instance NICs and bucket throughput max-min fairly.  Whole
 //! configuration matrices replay in parallel through the scenario-sweep
 //! engine ([`coordinator::sweep`]) with cross-seed aggregation in
-//! [`metrics`].  See DESIGN.md for the substitution table, experiment
-//! index, sweep-engine design, and the data-plane flow model (§7).
+//! [`metrics`]; the sweep surface itself — CLI flags, the declarative
+//! Sweep file, the plan builder, labels, and the report's axis keys —
+//! is generated from one typed axis registry ([`scenario`]).  See
+//! DESIGN.md for the substitution table, experiment index, sweep-engine
+//! design, and the data-plane flow model (§7).
 
 pub mod aws;
 pub mod cli;
@@ -26,6 +29,7 @@ pub mod coordinator;
 pub mod json;
 pub mod metrics;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testutil;
 pub mod worker;

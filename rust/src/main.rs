@@ -5,9 +5,10 @@
 //! ds make-fleet-file --region us-east-1 --out files/fleet.json
 //! ds make-job     --plate P1 --wells 96 --sites 4 --out files/job.json
 //! ds run          --config files/config.json --job files/job.json \
-//!                 --fleet files/fleet.json [--monitor] [--cheapest] \
+//!                 --fleet files/fleet.json [--no-monitor] [--cheapest] \
 //!                 [--pjrt artifacts/] [--seed N] [--volatility low|medium|high]
-//! ds sweep        [--config files/config.json] [--job files/job.json] \
+//! ds sweep        [--plan files/sweep.json] [--dry-run] \
+//!                 [--config files/config.json] [--job files/job.json] \
 //!                 [--fleet files/fleet.json] \
 //!                 --seeds 8 --machines 2,4,8 --visibility-s 120,600 \
 //!                 --volatility low,medium --job-mean-s 90,240 \
@@ -28,95 +29,32 @@
 //! execute the real AOT-compiled pipeline through PJRT.  `sweep` replays
 //! the whole cartesian matrix of scenarios on a worker-thread pool and
 //! prints per-scenario aggregates (mean/p50/p95 across seeds).
+//!
+//! Every sweep axis, its flag, its Sweep-file key, and its help line
+//! come from the typed axis registry (`ds_rs::scenario`): the help
+//! text, the strict unknown-flag rejection, and the `--plan` file
+//! schema are three projections of the same table, so none of them can
+//! drift from the parser.
 
 use std::process::ExitCode;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use ds_rs::aws::ec2::{instance_type, AllocationStrategy, InstanceSlot, Volatility};
+use ds_rs::aws::ec2::{instance_type, InstanceSlot};
 use ds_rs::aws::ecs::containers_that_fit;
-use ds_rs::aws::s3::dataplane::NetProfile;
 use ds_rs::cli::Args;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::cluster::fleet_slots;
 use ds_rs::coordinator::run::{run_full, RunOptions};
-use ds_rs::coordinator::sweep::{default_threads, run_sweep, ScenarioMatrix, SweepPlan};
+use ds_rs::coordinator::sweep::{default_threads, run_sweep};
+use ds_rs::json::Value;
 use ds_rs::runtime::{Manifest, PjrtRuntime};
+use ds_rs::scenario::{
+    describe_matrix, plan_from_cli, render_flag_specs, render_matrix_entries, run_flags,
+    sweep_flags, Axis, ScenarioMatrix, SweepFile, AXES,
+};
 use ds_rs::sim::clock::from_secs_f64;
-use ds_rs::sim::SimTime;
-use ds_rs::workloads::{DurationModel, ModeledExecutor, PjrtExecutor};
-
-/// One documented flag: name, value placeholder (empty = boolean), help.
-/// `sweep` renders its help from this table *and* rejects flags not in
-/// it, so the documentation and the strict parser cannot drift apart.
-struct Flag {
-    name: &'static str,
-    value: &'static str,
-    help: &'static str,
-}
-
-/// Every flag `sweep` reads — the audit table (`tests/cli.rs` pins that
-/// typos are rejected against it).
-const SWEEP_FLAGS: &[Flag] = &[
-    Flag { name: "config", value: "FILE", help: "base Config file (default: built-in defaults)" },
-    Flag { name: "job", value: "FILE", help: "Job file replayed by every cell (default: synthetic plate)" },
-    Flag { name: "fleet", value: "FILE", help: "Fleet file (default: built-in us-east-1 template)" },
-    Flag { name: "plate", value: "NAME", help: "synthetic plate name when no --job (default P1)" },
-    Flag { name: "wells", value: "N", help: "synthetic plate wells when no --job (default 24)" },
-    Flag { name: "sites", value: "N", help: "synthetic plate sites/well when no --job (default 2)" },
-    Flag { name: "seeds", value: "N", help: "replicate seeds per scenario (default 4)" },
-    Flag { name: "seed-base", value: "N", help: "first seed value (default 0)" },
-    Flag { name: "machines", value: "N,N,..", help: "CLUSTER_MACHINES axis (weighted units)" },
-    Flag { name: "visibility-s", value: "S,S,..", help: "SQS_MESSAGE_VISIBILITY axis, seconds" },
-    Flag { name: "volatility", value: "V,V,..", help: "market axis: low|medium|high" },
-    Flag { name: "allocation", value: "A,A,..", help: "fleet allocation axis: lowest-price|diversified|capacity-optimized" },
-    Flag { name: "instance-types", value: "T+T,..", help: "instance-set axis; sets comma-separated, types '+'-joined, each 'name[:weight]' (e.g. m5.large+c5.xlarge:2)" },
-    Flag { name: "on-demand-base", value: "N", help: "weighted units kept on-demand in every cell (default: Fleet file's)" },
-    Flag { name: "job-mean-s", value: "S,S,..", help: "modeled mean job duration axis, seconds (default 90)" },
-    Flag { name: "job-cv", value: "X", help: "duration coefficient of variation (default 0.3)" },
-    Flag { name: "stall-prob", value: "P", help: "per-job stall probability (default 0)" },
-    Flag { name: "fail-prob", value: "P", help: "per-job fast-failure probability (default 0)" },
-    Flag { name: "input-mb", value: "MB,MB,..", help: "mean input MB per job axis; non-zero adds download/compute/upload phases on the S3 data plane (default 0)" },
-    Flag { name: "net-profile", value: "P,P,..", help: "network profile axis: wide|standard|narrow (bucket throughput + first-byte latency)" },
-    Flag { name: "threads", value: "N", help: "worker threads (default: available cores)" },
-    Flag { name: "json", value: "", help: "emit the report as JSON on stdout (chatter to stderr)" },
-    Flag { name: "help", value: "", help: "show this help" },
-];
-
-/// Flags `run` reads (help only; run stays permissive for compatibility).
-const RUN_FLAGS: &[Flag] = &[
-    Flag { name: "config", value: "FILE", help: "Config file (required)" },
-    Flag { name: "job", value: "FILE", help: "Job file (required)" },
-    Flag { name: "fleet", value: "FILE", help: "Fleet file (required)" },
-    Flag { name: "seed", value: "N", help: "simulation seed (default 42)" },
-    Flag { name: "volatility", value: "V", help: "market volatility: low|medium|high (default low)" },
-    Flag { name: "no-monitor", value: "", help: "skip the Step-4 monitor (leaks resources, as in the paper)" },
-    Flag { name: "cheapest", value: "", help: "monitor cheapest mode (downscale requested capacity after 15 min; excludes --queue-downscale)" },
-    Flag { name: "queue-downscale", value: "", help: "monitor terminates surplus machines as the queue drains, cheapest pool last (excludes --cheapest)" },
-    Flag { name: "crash-mttf-min", value: "M", help: "mean minutes to instance crash (default: no crashes)" },
-    Flag { name: "pjrt", value: "DIR", help: "run real AOT artifacts from DIR instead of the modeled executor" },
-    Flag { name: "time-scale", value: "X", help: "PJRT wall-time to sim-time scale (default 1.0)" },
-    Flag { name: "job-mean-s", value: "S", help: "modeled mean job duration, seconds (default 90)" },
-    Flag { name: "job-cv", value: "X", help: "duration coefficient of variation (default 0.3)" },
-    Flag { name: "stall-prob", value: "P", help: "per-job stall probability (default 0)" },
-    Flag { name: "fail-prob", value: "P", help: "per-job fast-failure probability (default 0)" },
-    Flag { name: "input-mb", value: "MB", help: "mean input MB per job; non-zero adds download/compute/upload phases on the S3 data plane (default 0)" },
-    Flag { name: "net-profile", value: "P", help: "network profile: wide|standard|narrow (default standard)" },
-    Flag { name: "help", value: "", help: "show this help" },
-];
-
-fn render_flags(flags: &[Flag]) -> String {
-    let mut out = String::new();
-    for f in flags {
-        let lhs = if f.value.is_empty() {
-            format!("--{}", f.name)
-        } else {
-            format!("--{} {}", f.name, f.value)
-        };
-        out.push_str(&format!("  {lhs:<28} {}\n", f.help));
-    }
-    out
-}
+use ds_rs::workloads::{ModeledExecutor, PjrtExecutor};
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -162,8 +100,8 @@ fn print_usage() {
          run flags (`ds run --help`):\n{}\n\
          sweep flags (`ds sweep --help`; unknown flags are rejected):\n{}\n\
          see README.md for the full walkthrough",
-        render_flags(RUN_FLAGS),
-        render_flags(SWEEP_FLAGS)
+        render_flag_specs(&run_flags()),
+        render_flag_specs(&sweep_flags())
     );
 }
 
@@ -345,29 +283,30 @@ fn parse_scalar<T: std::str::FromStr>(args: &Args, name: &str, default: T) -> Re
     args.try_parse(name, default).map_err(|e| anyhow!(e))
 }
 
-/// Strict comma-separated flag; `None` when absent.
-fn parse_list<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<Vec<T>>> {
-    args.try_parse_list(name).map_err(|e| anyhow!(e))
-}
-
-fn parse_volatility(s: &str) -> Result<Volatility> {
-    Ok(match s {
-        "low" => Volatility::Low,
-        "medium" => Volatility::Medium,
-        "high" => Volatility::High,
-        other => bail!("volatility must be low|medium|high, got '{other}'"),
-    })
-}
-
-fn parse_net_profile(s: &str) -> Result<NetProfile> {
-    NetProfile::parse(s)
-        .ok_or_else(|| anyhow!("net-profile must be wide|standard|narrow, got '{s}'"))
-}
-
+/// `ds run`: the four-command flow for one configuration.  The axis
+/// flags it shares with `ds sweep` (volatility, duration model, input
+/// MB, net profile) parse through the same registry but must carry a
+/// single value; machines, visibility, and the fleet shape come from
+/// the Config and Fleet files, as in the paper.
 fn run(args: &Args) -> Result<()> {
     if args.flag("help") {
-        println!("ds run — setup + submitJob + startCluster (+ monitor)\n\nflags:\n{}", render_flags(RUN_FLAGS));
+        println!(
+            "ds run — setup + submitJob + startCluster (+ monitor)\n\n\
+             Axis flags shared with `ds sweep` take a single value here.\n\n\
+             flags:\n{}",
+            render_flag_specs(&run_flags())
+        );
         return Ok(());
+    }
+    // Same strictness as sweep: a typo'd or sweep-only flag (--machines,
+    // --allocation…) must not silently run a different study.
+    let known: Vec<&str> = run_flags().iter().map(|f| f.flag).collect();
+    let unknown = args.unknown_flags(&known);
+    if !unknown.is_empty() {
+        bail!(
+            "unknown flag --{} for run (see `ds run --help`)",
+            unknown.join(", --")
+        );
     }
     let cfg = load_config(args)?;
     let job_path = args.get("job").context("--job files/job.json required")?;
@@ -384,9 +323,24 @@ fn run(args: &Args) -> Result<()> {
     )
     .context("parsing Fleet file")?;
 
-    let opts = RunOptions {
+    // Parse the shared axes into a one-scenario matrix.
+    let mut matrix = ScenarioMatrix::defaults_from(&cfg);
+    for ax in AXES {
+        if ax.in_run() {
+            ax.parse_cli(args, &mut matrix)?;
+        }
+    }
+    let scenarios = matrix.scenarios();
+    if scenarios.len() != 1 {
+        bail!(
+            "ds run takes a single value per axis flag (got {} combinations); \
+             use `ds sweep` for matrices",
+            scenarios.len()
+        );
+    }
+
+    let base_opts = RunOptions {
         seed: parse_scalar(args, "seed", 42u64)?,
-        volatility: parse_volatility(args.get_or("volatility", "low"))?,
         monitor: !args.flag("no-monitor"),
         cheapest: args.flag("cheapest"),
         queue_downscale: args.flag("queue-downscale"),
@@ -397,44 +351,38 @@ fn run(args: &Args) -> Result<()> {
         } else {
             None
         },
-        net: parse_net_profile(args.get_or("net-profile", "standard"))?,
         ..Default::default()
     };
-    // --input-mb overlays a data shape on the Job file: every job gains
-    // download + upload phases on the S3 data plane.
-    let input_mb = parse_scalar(args, "input-mb", 0.0f64)?;
-    let jobs = if input_mb > 0.0 {
-        jobs.with_data_shape((input_mb * 1e6) as u64, opts.seed)
+    let cell = scenarios[0].run_inputs(&cfg, &fleet, &base_opts);
+    // A non-zero input-MB axis overlays a data shape on the Job file:
+    // every job gains download + upload phases on the S3 data plane.
+    let jobs = if cell.input_mb > 0.0 {
+        jobs.with_data_shape((cell.input_mb * 1e6) as u64, cell.opts.seed)
     } else {
         jobs
     };
 
     println!(
         "run: app={} jobs={} machines={} bid=${}/h monitor={} cheapest={}",
-        cfg.app_name,
+        cell.cfg.app_name,
         jobs.groups.len(),
-        cfg.cluster_machines,
-        cfg.machine_price,
-        opts.monitor,
-        opts.cheapest
+        cell.cfg.cluster_machines,
+        cell.cfg.machine_price,
+        cell.opts.monitor,
+        cell.opts.cheapest
     );
 
     let report = if let Some(artifacts) = args.get("pjrt") {
         let runtime = PjrtRuntime::new(artifacts)?;
-        let mut ex = PjrtExecutor::new(runtime, &cfg.workload_id)?;
+        let mut ex = PjrtExecutor::new(runtime, &cell.cfg.workload_id)?;
         ex.time_scale = parse_scalar(args, "time-scale", 1.0f64)?;
-        run_full(&cfg, &jobs, &fleet, &mut ex, opts)?
+        run_full(&cell.cfg, &jobs, &cell.fleet, &mut ex, cell.opts)?
     } else {
         let mut ex = ModeledExecutor {
-            model: DurationModel {
-                mean_s: parse_scalar(args, "job-mean-s", 90.0f64)?,
-                cv: parse_scalar(args, "job-cv", 0.3f64)?,
-                stall_prob: parse_scalar(args, "stall-prob", 0.0f64)?,
-                fail_prob: parse_scalar(args, "fail-prob", 0.0f64)?,
-            },
+            model: cell.model.clone(),
             ..Default::default()
         };
-        run_full(&cfg, &jobs, &fleet, &mut ex, opts)?
+        run_full(&cell.cfg, &jobs, &cell.fleet, &mut ex, cell.opts)?
     };
 
     println!("\n{}", report.summary());
@@ -444,19 +392,24 @@ fn run(args: &Args) -> Result<()> {
 /// `ds sweep` — the scenario-matrix front door.  Every axis flag is a
 /// comma-separated list, so `ds sweep --machines 2,4,8 --seeds 8` is a
 /// plain one-axis scaling study with per-scenario mean/p50/p95 across 8
-/// seeds.  Absent axes collapse to a single value: machines and
-/// visibility inherit from the (base) config, while volatility and the
-/// duration model fall back to fixed defaults (low, 90 s mean) since the
-/// Config file does not carry them.  `--fleet` is optional; without it
-/// the builtin us-east-1 template fleet is used.
+/// seeds.  A `--plan` Sweep file declares the same matrix as a fourth
+/// paper-style KEY-value file, with CLI flags overriding file keys.
+/// Absent axes collapse to a single value: machines and visibility
+/// inherit from the (base) config, while volatility and the duration
+/// model fall back to fixed defaults (low, 90 s mean) since the Config
+/// file does not carry them.  `--fleet` is optional; without it the
+/// builtin us-east-1 template fleet is used.
 fn sweep(args: &Args) -> Result<()> {
     if args.flag("help") {
         println!(
             "ds sweep — parallel scenario matrix with aggregate analytics\n\n\
              Every axis flag takes a comma-separated list; the scenarios are the\n\
-             cartesian product of all axes, replicated over --seeds seeds.\n\n\
+             cartesian product of all axes, replicated over --seeds seeds.  With\n\
+             --plan FILE the same matrix comes from a Sweep file (KEY-value JSON,\n\
+             keys = the flags below in SCREAMING_CASE); CLI flags override file\n\
+             keys, and --dry-run prints the expanded matrix without running.\n\n\
              flags:\n{}",
-            render_flags(SWEEP_FLAGS)
+            render_flag_specs(&sweep_flags())
         );
         return Ok(());
     }
@@ -466,8 +419,8 @@ fn sweep(args: &Args) -> Result<()> {
     if let Some(stray) = args.positionals.first() {
         bail!("unexpected argument '{stray}' (list flags take comma-separated values, e.g. --machines 2,4,8)");
     }
-    // Same logic for a typo'd flag: reject anything outside the table.
-    let known: Vec<&str> = SWEEP_FLAGS.iter().map(|f| f.name).collect();
+    // Same logic for a typo'd flag: reject anything outside the registry.
+    let known: Vec<&str> = sweep_flags().iter().map(|f| f.flag).collect();
     let unknown = args.unknown_flags(&known);
     if !unknown.is_empty() {
         bail!(
@@ -475,129 +428,65 @@ fn sweep(args: &Args) -> Result<()> {
             unknown.join(", --")
         );
     }
-    let cfg = match args.get("config") {
-        Some(_) => load_config(args)?,
-        None => AppConfig::default(),
-    };
-    let jobs = match args.get("job") {
-        Some(p) => JobSpec::from_json(
-            &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
-        )
-        .context("parsing Job file")?,
-        None => JobSpec::plate(
-            args.get_or("plate", "P1"),
-            parse_scalar(args, "wells", 24u32)?,
-            parse_scalar(args, "sites", 2u32)?,
-            vec![],
-        ),
-    };
 
-    let seed_base = parse_scalar(args, "seed-base", 0u64)?;
-    let n_seeds = parse_scalar(args, "seeds", 4u64)?.max(1);
-    let seeds: Vec<u64> = (0..n_seeds).map(|i| seed_base + i).collect();
-
-    let machines: Vec<u32> =
-        parse_list(args, "machines")?.unwrap_or_else(|| vec![cfg.cluster_machines]);
-    let visibilities: Vec<SimTime> = parse_list::<f64>(args, "visibility-s")?
-        .map(|secs| secs.into_iter().map(from_secs_f64).collect())
-        .unwrap_or_else(|| vec![cfg.sqs_message_visibility]);
-    let volatilities: Vec<Volatility> = match args.get_list("volatility") {
-        Some(items) if !items.is_empty() => items
-            .iter()
-            .map(|s| parse_volatility(s))
-            .collect::<Result<Vec<_>>>()?,
-        // Flag present with no (or an empty) value: error like every
-        // other axis rather than silently running a low-volatility study.
-        Some(_) => bail!("missing value for --volatility"),
-        None if args.flag("volatility") => bail!("missing value for --volatility"),
-        None => vec![Volatility::Low],
+    let file = match args.get("plan") {
+        Some(path) => Some(SweepFile::load(path)?),
+        // A forgotten value must not silently run a default study.
+        None if args.flag("plan") => bail!("missing value for --plan"),
+        None => None,
     };
-    let allocations: Vec<AllocationStrategy> = match args.get_list("allocation") {
-        Some(items) if !items.is_empty() => items
-            .iter()
-            .map(|s| {
-                AllocationStrategy::parse(s).ok_or_else(|| {
-                    anyhow!(
-                        "allocation must be lowest-price|diversified|capacity-optimized, got '{s}'"
-                    )
-                })
-            })
-            .collect::<Result<Vec<_>>>()?,
-        Some(_) => bail!("missing value for --allocation"),
-        None if args.flag("allocation") => bail!("missing value for --allocation"),
-        None => vec![AllocationStrategy::LowestPrice],
-    };
-    // Instance sets: comma separates sets, '+' joins the types inside one
-    // (`--instance-types m5.large+c5.xlarge:2,m5.xlarge`).
-    let instance_sets: Vec<Vec<InstanceSlot>> = match args.get_list("instance-types") {
-        Some(items) if !items.is_empty() => items
-            .iter()
-            .map(|set| {
-                let slots = set
-                    .split('+')
-                    .map(str::trim)
-                    .filter(|s| !s.is_empty())
-                    .map(|s| InstanceSlot::parse(s).map_err(|e| anyhow!(e)))
-                    .collect::<Result<Vec<InstanceSlot>>>()?;
-                if slots.is_empty() {
-                    bail!("empty instance set in --instance-types");
-                }
-                Ok(slots)
-            })
-            .collect::<Result<Vec<_>>>()?,
-        Some(_) => bail!("missing value for --instance-types"),
-        None if args.flag("instance-types") => bail!("missing value for --instance-types"),
-        None => vec![Vec::new()],
-    };
-    let cv = parse_scalar(args, "job-cv", 0.3f64)?;
-    let stall_prob = parse_scalar(args, "stall-prob", 0.0f64)?;
-    let fail_prob = parse_scalar(args, "fail-prob", 0.0f64)?;
-    let models: Vec<DurationModel> = parse_list::<f64>(args, "job-mean-s")?
-        .unwrap_or_else(|| vec![90.0])
-        .into_iter()
-        .map(|mean_s| DurationModel {
-            mean_s,
-            cv,
-            stall_prob,
-            fail_prob,
-        })
-        .collect();
-    let input_mbs: Vec<f64> = parse_list(args, "input-mb")?.unwrap_or_else(|| vec![0.0]);
-    let net_profiles: Vec<NetProfile> = match args.get_list("net-profile") {
-        Some(items) if !items.is_empty() => items
-            .iter()
-            .map(|s| parse_net_profile(s))
-            .collect::<Result<Vec<_>>>()?,
-        Some(_) => bail!("missing value for --net-profile"),
-        None if args.flag("net-profile") => bail!("missing value for --net-profile"),
-        None => vec![NetProfile::default()],
-    };
-
-    let matrix = ScenarioMatrix {
-        seeds,
-        volatilities,
-        visibilities,
-        cluster_machines: machines,
-        allocations,
-        instance_sets,
-        input_mbs,
-        net_profiles,
-        models,
-    };
+    let plan = plan_from_cli(args, file.as_ref())?;
     let threads = parse_scalar(args, "threads", default_threads())?.max(1);
 
-    let mut plan = SweepPlan::new(cfg, jobs, matrix);
-    if let Some(p) = args.get("fleet") {
-        plan.fleet = FleetSpec::from_json(
-            &std::fs::read_to_string(p).with_context(|| format!("reading {p}"))?,
-        )
-        .context("parsing Fleet file")?;
+    // Counts come from the registry's per-axis lengths, not from
+    // expanding the product — a dry run of a 10^8-scenario file must
+    // not allocate 10^8 scenarios.
+    let scenario_count = plan.matrix.scenario_count();
+    if args.flag("dry-run") {
+        if args.flag("json") {
+            // --json keeps stdout machine-parseable in the dry path too.
+            let mut axes = Value::obj();
+            for (key, val) in render_matrix_entries(&plan.matrix) {
+                axes = axes.with(key, val);
+            }
+            let out = Value::obj()
+                .with("scenarios", scenario_count)
+                .with("cells", plan.matrix.cell_count())
+                .with("seeds", plan.matrix.seeds.len())
+                .with("jobs_per_cell", plan.jobs.groups.len())
+                .with("axes", axes);
+            println!("{}", out.pretty());
+            return Ok(());
+        }
+        let seeds = &plan.matrix.seeds;
+        // Summarize big seed lists instead of flooding the terminal.
+        let seeds_desc = if seeds.len() <= 16 {
+            format!("{seeds:?}")
+        } else {
+            format!(
+                "[{} .. {}] ({} values)",
+                seeds.first().unwrap(),
+                seeds.last().unwrap(),
+                seeds.len()
+            )
+        };
+        println!(
+            "sweep plan (dry run):\n{}\
+             \x20 seeds: {} ({})\n\
+             \x20 scenarios: {}  cells: {} (scenarios x seeds)  jobs/cell: {}",
+            describe_matrix(&plan.matrix),
+            seeds.len(),
+            seeds_desc,
+            scenario_count,
+            plan.matrix.cell_count(),
+            plan.jobs.groups.len(),
+        );
+        return Ok(());
     }
-    plan.fleet.on_demand_base =
-        parse_scalar(args, "on-demand-base", plan.fleet.on_demand_base)?;
+
     let preamble = format!(
         "sweep: {} scenarios x {} seeds = {} cells on {} threads ({} jobs/cell)",
-        plan.matrix.scenarios().len(),
+        scenario_count,
         plan.matrix.seeds.len(),
         plan.matrix.cell_count(),
         threads,

@@ -90,6 +90,11 @@ impl Aggregate {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioSummary {
     pub label: String,
+    /// The scenario's machine-readable coordinates, keyed by the axis
+    /// registry's Sweep-file keys (`Scenario::axis_json`); empty for
+    /// summaries built outside a sweep.  Downstream tooling reads this
+    /// instead of parsing the label.
+    pub axes: Value,
     /// Cells (seeds) aggregated.
     pub cells: usize,
     /// Cells whose queue drained (makespan/jobs-per-hour aggregates cover
@@ -189,6 +194,7 @@ impl ScenarioSummary {
         }
         Self {
             label: label.to_string(),
+            axes: Value::obj(),
             cells: reports.len(),
             drained: drained.len(),
             jobs_submitted: sum(|r| r.jobs_submitted),
@@ -209,6 +215,13 @@ impl ScenarioSummary {
         }
     }
 
+    /// Attach the scenario's registry-keyed axis coordinates (the sweep
+    /// engine calls this with `Scenario::axis_json`).
+    pub fn with_axes(mut self, axes: Value) -> Self {
+        self.axes = axes;
+        self
+    }
+
     /// Render one of this scenario's makespan aggregate values (seconds)
     /// for a table cell: "-" when no seed drained (the empty aggregate is
     /// all zeros, which would otherwise read as instant completion).
@@ -223,6 +236,7 @@ impl ScenarioSummary {
     pub fn to_json(&self) -> Value {
         Value::obj()
             .with("label", self.label.as_str())
+            .with("axes", self.axes.clone())
             .with("cells", self.cells)
             .with("drained", self.drained)
             .with("jobs_submitted", self.jobs_submitted)

@@ -1,0 +1,1257 @@
+//! The typed axis registry: one [`Axis`] impl per sweep axis, and the
+//! flag tables every sweep surface is generated from.
+//!
+//! An axis owns its whole vertical slice — CLI flag(s) + parser,
+//! Sweep-file key + parser + renderer, per-cell overlay, label
+//! fragment, and JSON identity — so adding an axis is one impl plus one
+//! entry in [`AXES`].  The registry order is the **label order**
+//! (machines, visibility, volatility, duration, allocation, instance
+//! set, input MB, net profile), chosen so registry-assembled labels are
+//! byte-identical to the historical hand-formatted ones; the cartesian
+//! *expansion* order lives in
+//! [`ScenarioMatrix::scenarios`](super::ScenarioMatrix::scenarios).
+//!
+//! `ds sweep --help`, the strict unknown-flag rejection, and the
+//! Sweep-file schema are all projections of [`sweep_flags`]; the
+//! consistency test in `rust/tests/scenario_api.rs` pins that nothing
+//! else defines them.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
+use crate::aws::s3::dataplane::NetProfile;
+use crate::cli::Args;
+use crate::json::Value;
+use crate::sim::clock::{fmt_dur, from_secs_f64};
+use crate::workloads::DurationModel;
+
+use super::{volatility_name, CellInputs, Scenario, ScenarioMatrix};
+
+/// One documented command-line flag: name, value placeholder (empty =
+/// boolean), help text, and the Sweep-file key it corresponds to
+/// (`None` = CLI-only, never a file key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlagSpec {
+    pub flag: &'static str,
+    pub value: &'static str,
+    pub help: &'static str,
+    pub file_key: Option<&'static str>,
+}
+
+/// One sweep axis: a typed slice through every layer of the scenario
+/// surface.  All methods read/write the axis's own fields of
+/// [`ScenarioMatrix`] / [`Scenario`] / [`CellInputs`] and nothing else.
+pub trait Axis: Sync {
+    /// Primary Sweep-file key (also the scenario-JSON key).
+    fn key(&self) -> &'static str;
+    /// CLI flags this axis owns (the first is the axis list flag;
+    /// extras, like the duration model's scalar knobs, follow).
+    fn flags(&self) -> &'static [FlagSpec];
+    /// Whether `ds run` exposes this axis.  Fleet- and Config-file-owned
+    /// axes (machines, visibility, allocation, instance set) are
+    /// sweep-only: a single run reads them from its files.
+    fn in_run(&self) -> bool {
+        true
+    }
+    /// Values this axis contributes to the cartesian product.
+    fn len(&self, m: &ScenarioMatrix) -> usize;
+    /// Human-readable rendering of the axis values (`--dry-run`).
+    fn describe(&self, m: &ScenarioMatrix) -> String;
+    /// Overlay CLI flags onto the matrix (absent flags leave it as-is,
+    /// so file keys and defaults show through).
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()>;
+    /// Overlay this axis's Sweep-file keys onto the matrix (absent keys
+    /// leave it as-is).
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()>;
+    /// Render the matrix's values for this axis as Sweep-file keys.
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)>;
+    /// Overlay one scenario's value for this axis onto a cell's inputs.
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs);
+    /// Label fragment for `sc`; `None` when the axis is unused (the
+    /// only-label-when-used rule keeps historical labels byte-stable).
+    fn label(&self, sc: &Scenario) -> Option<String>;
+    /// JSON value of the scenario's coordinate on this axis (same
+    /// only-when-used rule as [`Self::label`]).
+    fn json_value(&self, sc: &Scenario) -> Option<Value>;
+}
+
+/// The registry, in label order.  Everything that enumerates axes —
+/// help text, Sweep-file schema, labels, scenario JSON, overlays —
+/// walks this slice.
+pub static AXES: &[&dyn Axis] = &[
+    &MachinesAxis,
+    &VisibilityAxis,
+    &VolatilityAxis,
+    &DurationAxis,
+    &AllocationAxis,
+    &InstanceSetAxis,
+    &InputMbAxis,
+    &NetProfileAxis,
+];
+
+// ---------------------------------------------------------------------------
+// Shared parsing helpers
+// ---------------------------------------------------------------------------
+
+/// Strict string-list flag: absent -> `None`; present with no value or
+/// only separators -> error (a forgotten value must never run a
+/// different study than asked for).  `String: FromStr` is infallible,
+/// so this is exactly [`Args::try_parse_list`]'s contract — one
+/// implementation of strictness, not two.
+fn cli_list(args: &Args, name: &str) -> Result<Option<Vec<String>>> {
+    cli_typed_list::<String>(args, name)
+}
+
+/// Strict typed-list flag via [`Args::try_parse_list`].
+fn cli_typed_list<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<Vec<T>>> {
+    args.try_parse_list(name).map_err(|e| anyhow!(e))
+}
+
+/// A Sweep-file axis value's items: an array, or a bare scalar treated
+/// as a one-element axis.
+fn file_items(v: &Value) -> Vec<&Value> {
+    match v.as_arr() {
+        Some(items) => items.iter().collect(),
+        None => vec![v],
+    }
+}
+
+/// Non-empty items of a Sweep-file axis value.
+fn file_list(file: &Value, key: &'static str) -> Result<Option<Vec<&Value>>> {
+    let Some(v) = file.get(key) else {
+        return Ok(None);
+    };
+    let items = file_items(v);
+    ensure!(!items.is_empty(), "{key} must list at least one value");
+    Ok(Some(items))
+}
+
+fn item_f64(v: &Value, key: &'static str) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow!("bad value for {key} (expected a number)"))
+}
+
+fn item_u32(v: &Value, key: &'static str) -> Result<u32> {
+    v.as_u64()
+        .and_then(|n| u32::try_from(n).ok())
+        .ok_or_else(|| anyhow!("bad value for {key} (expected a non-negative integer)"))
+}
+
+fn item_str<'v>(v: &'v Value, key: &'static str) -> Result<&'v str> {
+    v.as_str()
+        .ok_or_else(|| anyhow!("bad value for {key} (expected a string)"))
+}
+
+fn num_arr<I: Into<Value>>(items: impl IntoIterator<Item = I>) -> Value {
+    Value::Arr(items.into_iter().map(Into::into).collect())
+}
+
+fn join<T: std::fmt::Display>(items: impl IntoIterator<Item = T>) -> String {
+    items
+        .into_iter()
+        .map(|i| i.to_string())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Parse a volatility level name.
+pub fn parse_volatility(s: &str) -> Result<Volatility> {
+    Ok(match s {
+        "low" => Volatility::Low,
+        "medium" => Volatility::Medium,
+        "high" => Volatility::High,
+        other => bail!("volatility must be low|medium|high, got '{other}'"),
+    })
+}
+
+/// Parse a network profile name.
+pub fn parse_net_profile(s: &str) -> Result<NetProfile> {
+    NetProfile::parse(s)
+        .ok_or_else(|| anyhow!("net-profile must be wide|standard|narrow, got '{s}'"))
+}
+
+/// Parse an allocation strategy name.
+pub fn parse_allocation(s: &str) -> Result<AllocationStrategy> {
+    AllocationStrategy::parse(s).ok_or_else(|| {
+        anyhow!("allocation must be lowest-price|diversified|capacity-optimized, got '{s}'")
+    })
+}
+
+/// Parse one instance set: types '+'-joined, each `name[:weight]`
+/// (e.g. `m5.large+c5.xlarge:2`).  Empty means "inherit the plan's
+/// fleet file / Config types".
+pub fn parse_instance_set(s: &str) -> Result<Vec<InstanceSlot>> {
+    s.split('+')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| InstanceSlot::parse(t).map_err(|e| anyhow!(e)))
+        .collect()
+}
+
+/// Render one instance set in the same `a+b:2` grammar ("" = inherit).
+pub fn render_instance_set(set: &[InstanceSlot]) -> String {
+    set.iter().map(InstanceSlot::render).collect::<Vec<_>>().join("+")
+}
+
+/// Whether every model shares the first one's shape knobs (cv, stall,
+/// fail) — the predicate that picks the scalar-keys Sweep-file form and
+/// the compact `--dry-run` description.
+fn models_homogeneous(models: &[DurationModel]) -> bool {
+    let proto = models.first().cloned().unwrap_or_default();
+    models.iter().all(|mdl| {
+        mdl.cv == proto.cv
+            && mdl.stall_prob == proto.stall_prob
+            && mdl.fail_prob == proto.fail_prob
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The axes
+// ---------------------------------------------------------------------------
+
+/// `CLUSTER_MACHINES` (weighted units) — `--machines` / `MACHINES`.
+pub struct MachinesAxis;
+
+impl Axis for MachinesAxis {
+    fn key(&self) -> &'static str {
+        "MACHINES"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "machines",
+            value: "N,N,..",
+            help: "CLUSTER_MACHINES axis (weighted units)",
+            file_key: Some("MACHINES"),
+        }]
+    }
+    fn in_run(&self) -> bool {
+        false
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.cluster_machines.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(&m.cluster_machines)
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(machines) = cli_typed_list::<u32>(args, "machines")? {
+            m.cluster_machines = machines;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "MACHINES")? {
+            m.cluster_machines = items
+                .iter()
+                .map(|v| item_u32(v, "MACHINES"))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![("MACHINES", num_arr(m.cluster_machines.iter().copied()))]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.cfg.cluster_machines = sc.machines;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        Some(format!("m={}", sc.machines))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        Some(Value::from(sc.machines))
+    }
+}
+
+/// `SQS_MESSAGE_VISIBILITY` — `--visibility-s` / `VISIBILITY_S`
+/// (seconds in both surfaces, milliseconds internally).
+pub struct VisibilityAxis;
+
+impl Axis for VisibilityAxis {
+    fn key(&self) -> &'static str {
+        "VISIBILITY_S"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "visibility-s",
+            value: "S,S,..",
+            help: "SQS_MESSAGE_VISIBILITY axis, seconds",
+            file_key: Some("VISIBILITY_S"),
+        }]
+    }
+    fn in_run(&self) -> bool {
+        false
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.visibilities.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.visibilities.iter().map(|&v| fmt_dur(v)))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(secs) = cli_typed_list::<f64>(args, "visibility-s")? {
+            m.visibilities = secs.into_iter().map(from_secs_f64).collect();
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "VISIBILITY_S")? {
+            m.visibilities = items
+                .iter()
+                .map(|v| item_f64(v, "VISIBILITY_S").map(from_secs_f64))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "VISIBILITY_S",
+            num_arr(m.visibilities.iter().map(|&v| v as f64 / 1000.0)),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.cfg.sqs_message_visibility = sc.visibility;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        Some(format!("vis={}", fmt_dur(sc.visibility)))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        Some(Value::from(sc.visibility as f64 / 1000.0))
+    }
+}
+
+/// Spot-market volatility — `--volatility` / `VOLATILITY`.
+pub struct VolatilityAxis;
+
+impl Axis for VolatilityAxis {
+    fn key(&self) -> &'static str {
+        "VOLATILITY"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "volatility",
+            value: "V,V,..",
+            help: "market axis: low|medium|high",
+            file_key: Some("VOLATILITY"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.volatilities.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.volatilities.iter().map(|&v| volatility_name(v)))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "volatility")? {
+            m.volatilities = items
+                .iter()
+                .map(|s| parse_volatility(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "VOLATILITY")? {
+            m.volatilities = items
+                .iter()
+                .map(|v| item_str(v, "VOLATILITY").and_then(parse_volatility))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "VOLATILITY",
+            Value::Arr(
+                m.volatilities
+                    .iter()
+                    .map(|&v| Value::from(volatility_name(v)))
+                    .collect(),
+            ),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.volatility = sc.volatility;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        Some(format!("vol={}", volatility_name(sc.volatility)))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        Some(Value::from(volatility_name(sc.volatility)))
+    }
+}
+
+/// Modeled duration distribution — the mean axis `--job-mean-s` /
+/// `JOB_MEAN_S`, plus the scalar shape knobs `--job-cv`, `--stall-prob`,
+/// `--fail-prob` (`JOB_CV` / `STALL_PROB` / `FAIL_PROB`) applied to
+/// every mean.  A `JOB_MEAN_S` file item may also be a full object
+/// (`{"MEAN_S": .., "CV": .., "STALL_PROB": .., "FAIL_PROB": ..}`) for
+/// heterogeneous models, which is how builder plans round-trip.  A
+/// file-level scalar next to object entries is rejected (it would
+/// silently clobber their spelled-out shapes); CLI scalar flags still
+/// override either form — CLI-over-file is the documented layering.
+pub struct DurationAxis;
+
+impl Axis for DurationAxis {
+    fn key(&self) -> &'static str {
+        "JOB_MEAN_S"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[
+            FlagSpec {
+                flag: "job-mean-s",
+                value: "S,S,..",
+                help: "modeled mean job duration axis, seconds (default 90)",
+                file_key: Some("JOB_MEAN_S"),
+            },
+            FlagSpec {
+                flag: "job-cv",
+                value: "X",
+                help: "duration coefficient of variation (default 0.3)",
+                file_key: Some("JOB_CV"),
+            },
+            FlagSpec {
+                flag: "stall-prob",
+                value: "P",
+                help: "per-job stall probability (default 0)",
+                file_key: Some("STALL_PROB"),
+            },
+            FlagSpec {
+                flag: "fail-prob",
+                value: "P",
+                help: "per-job fast-failure probability (default 0)",
+                file_key: Some("FAIL_PROB"),
+            },
+        ]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.models.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        let proto = m.models.first().cloned().unwrap_or_default();
+        if models_homogeneous(&m.models) {
+            let means = join(m.models.iter().map(|mdl| format!("{:.0}s", mdl.mean_s)));
+            format!(
+                "{means} (cv {:.2}, stall {:.2}, fail {:.2})",
+                proto.cv, proto.stall_prob, proto.fail_prob
+            )
+        } else {
+            // Heterogeneous models: show each model's own shape so a
+            // --dry-run never misrepresents the matrix.
+            join(m.models.iter().map(|mdl| {
+                format!(
+                    "{:.0}s(cv {:.2}, stall {:.2}, fail {:.2})",
+                    mdl.mean_s, mdl.cv, mdl.stall_prob, mdl.fail_prob
+                )
+            }))
+        }
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(means) = cli_typed_list::<f64>(args, "job-mean-s")? {
+            let proto = m.models.first().cloned().unwrap_or_default();
+            m.models = means
+                .into_iter()
+                .map(|mean_s| DurationModel {
+                    mean_s,
+                    ..proto.clone()
+                })
+                .collect();
+        }
+        let scalars: [(&str, fn(&mut DurationModel, f64)); 3] = [
+            ("job-cv", |mdl, x| mdl.cv = x),
+            ("stall-prob", |mdl, x| mdl.stall_prob = x),
+            ("fail-prob", |mdl, x| mdl.fail_prob = x),
+        ];
+        for (flag, set) in scalars {
+            if args.flag(flag) {
+                let x = args.try_parse(flag, 0.0f64).map_err(|e| anyhow!(e))?;
+                for mdl in &mut m.models {
+                    set(mdl, x);
+                }
+            }
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        let mut object_form = false;
+        if let Some(items) = file_list(file, "JOB_MEAN_S")? {
+            object_form = items.iter().any(|v| v.as_f64().is_none());
+            let proto = m.models.first().cloned().unwrap_or_default();
+            m.models = items
+                .iter()
+                .map(|v| match v.as_f64() {
+                    Some(mean_s) => Ok(DurationModel {
+                        mean_s,
+                        ..proto.clone()
+                    }),
+                    None => {
+                        // Object entries are as strict as the top-level
+                        // schema: unknown inner keys and non-numeric
+                        // values must not silently fall back to
+                        // defaults.
+                        let fields = v.as_obj().ok_or_else(|| {
+                            anyhow!("JOB_MEAN_S items must be numbers or objects with MEAN_S")
+                        })?;
+                        for (k, _) in fields {
+                            ensure!(
+                                matches!(k.as_str(), "MEAN_S" | "CV" | "STALL_PROB" | "FAIL_PROB"),
+                                "unknown key '{k}' in JOB_MEAN_S object (valid: MEAN_S, CV, STALL_PROB, FAIL_PROB)"
+                            );
+                        }
+                        let field = |key: &'static str, default: f64| -> Result<f64> {
+                            match v.get(key) {
+                                None => Ok(default),
+                                Some(x) => item_f64(x, key),
+                            }
+                        };
+                        let mean_s = item_f64(
+                            v.get("MEAN_S").ok_or_else(|| {
+                                anyhow!("JOB_MEAN_S object missing MEAN_S")
+                            })?,
+                            "MEAN_S",
+                        )?;
+                        Ok(DurationModel {
+                            mean_s,
+                            cv: field("CV", proto.cv)?,
+                            stall_prob: field("STALL_PROB", proto.stall_prob)?,
+                            fail_prob: field("FAIL_PROB", proto.fail_prob)?,
+                        })
+                    }
+                })
+                .collect::<Result<_>>()?;
+        }
+        let scalars: [(&'static str, fn(&mut DurationModel, f64)); 3] = [
+            ("JOB_CV", |mdl, x| mdl.cv = x),
+            ("STALL_PROB", |mdl, x| mdl.stall_prob = x),
+            ("FAIL_PROB", |mdl, x| mdl.fail_prob = x),
+        ];
+        for (key, set) in scalars {
+            if let Some(v) = file.get(key) {
+                // A file-level scalar would silently clobber the CVs the
+                // object entries spelled out — reject the conflict.
+                ensure!(
+                    !object_form,
+                    "{key} has no effect when JOB_MEAN_S entries are objects — set it inside each object"
+                );
+                let x = item_f64(v, key)?;
+                for mdl in &mut m.models {
+                    set(mdl, x);
+                }
+            }
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        let proto = m.models.first().cloned().unwrap_or_default();
+        if models_homogeneous(&m.models) {
+            vec![
+                ("JOB_MEAN_S", num_arr(m.models.iter().map(|mdl| mdl.mean_s))),
+                ("JOB_CV", Value::from(proto.cv)),
+                ("STALL_PROB", Value::from(proto.stall_prob)),
+                ("FAIL_PROB", Value::from(proto.fail_prob)),
+            ]
+        } else {
+            vec![(
+                "JOB_MEAN_S",
+                Value::Arr(
+                    m.models
+                        .iter()
+                        .map(|mdl| {
+                            Value::obj()
+                                .with("MEAN_S", mdl.mean_s)
+                                .with("CV", mdl.cv)
+                                .with("STALL_PROB", mdl.stall_prob)
+                                .with("FAIL_PROB", mdl.fail_prob)
+                        })
+                        .collect(),
+                ),
+            )]
+        }
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.model = sc.model.clone();
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        Some(format!("mean={:.0}s", sc.model.mean_s))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        Some(Value::from(sc.model.mean_s))
+    }
+}
+
+/// Fleet allocation strategy — `--allocation` / `ALLOCATION`.
+pub struct AllocationAxis;
+
+impl Axis for AllocationAxis {
+    fn key(&self) -> &'static str {
+        "ALLOCATION"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "allocation",
+            value: "A,A,..",
+            help: "fleet allocation axis: lowest-price|diversified|capacity-optimized",
+            file_key: Some("ALLOCATION"),
+        }]
+    }
+    fn in_run(&self) -> bool {
+        false
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.allocations.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.allocations.iter().map(|a| a.name()))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "allocation")? {
+            m.allocations = items
+                .iter()
+                .map(|s| parse_allocation(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "ALLOCATION")? {
+            m.allocations = items
+                .iter()
+                .map(|v| item_str(v, "ALLOCATION").and_then(parse_allocation))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "ALLOCATION",
+            Value::Arr(m.allocations.iter().map(|a| Value::from(a.name())).collect()),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.fleet.allocation_strategy = sc.allocation;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        Some(format!("alloc={}", sc.allocation.name()))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        Some(Value::from(sc.allocation.name()))
+    }
+}
+
+/// Instance sets — `--instance-types` / `INSTANCE_TYPES`.  Sets are
+/// comma-separated on the CLI and array items in the file; inside a set
+/// types are '+'-joined `name[:weight]` specs.  An empty set (`""` in
+/// the file) inherits the plan's fleet file / Config types.
+pub struct InstanceSetAxis;
+
+impl Axis for InstanceSetAxis {
+    fn key(&self) -> &'static str {
+        "INSTANCE_TYPES"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "instance-types",
+            value: "T+T,..",
+            help: "instance-set axis; sets comma-separated, types '+'-joined, each 'name[:weight]' (e.g. m5.large+c5.xlarge:2)",
+            file_key: Some("INSTANCE_TYPES"),
+        }]
+    }
+    fn in_run(&self) -> bool {
+        false
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.instance_sets.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.instance_sets.iter().map(|set| {
+            if set.is_empty() {
+                "(inherit)".to_string()
+            } else {
+                render_instance_set(set)
+            }
+        }))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "instance-types")? {
+            m.instance_sets = items
+                .iter()
+                .map(|set| {
+                    let slots = parse_instance_set(set)?;
+                    ensure!(!slots.is_empty(), "empty instance set in --instance-types");
+                    Ok(slots)
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "INSTANCE_TYPES")? {
+            m.instance_sets = items
+                .iter()
+                .map(|v| item_str(v, "INSTANCE_TYPES").and_then(parse_instance_set))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "INSTANCE_TYPES",
+            Value::Arr(
+                m.instance_sets
+                    .iter()
+                    .map(|set| Value::from(render_instance_set(set)))
+                    .collect(),
+            ),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        if !sc.instance_set.is_empty() {
+            cell.fleet.instance_types = sc.instance_set.clone();
+        }
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        if sc.instance_set.is_empty() {
+            None
+        } else {
+            Some(format!("set={}", render_instance_set(&sc.instance_set)))
+        }
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        if sc.instance_set.is_empty() {
+            None
+        } else {
+            Some(Value::Arr(
+                sc.instance_set
+                    .iter()
+                    .map(|s| Value::from(s.render()))
+                    .collect(),
+            ))
+        }
+    }
+}
+
+/// Mean input MB per job — `--input-mb` / `INPUT_MB`.  Non-zero values
+/// overlay a per-job data shape on the plan's Job file.
+pub struct InputMbAxis;
+
+impl Axis for InputMbAxis {
+    fn key(&self) -> &'static str {
+        "INPUT_MB"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "input-mb",
+            value: "MB,MB,..",
+            help: "mean input MB per job axis; non-zero adds download/compute/upload phases on the S3 data plane (default 0)",
+            file_key: Some("INPUT_MB"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.input_mbs.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(&m.input_mbs)
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(mbs) = cli_typed_list::<f64>(args, "input-mb")? {
+            m.input_mbs = mbs;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "INPUT_MB")? {
+            m.input_mbs = items
+                .iter()
+                .map(|v| item_f64(v, "INPUT_MB"))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![("INPUT_MB", num_arr(m.input_mbs.iter().copied()))]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.input_mb = sc.input_mb;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        // Data axes only label cells that use them, so zero-data sweeps
+        // keep their historical labels.
+        (sc.input_mb > 0.0).then(|| format!("in={}MB", sc.input_mb))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.input_mb > 0.0).then(|| Value::from(sc.input_mb))
+    }
+}
+
+/// Bucket network profile — `--net-profile` / `NET_PROFILE`.
+pub struct NetProfileAxis;
+
+impl Axis for NetProfileAxis {
+    fn key(&self) -> &'static str {
+        "NET_PROFILE"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "net-profile",
+            value: "P,P,..",
+            help: "network profile axis: wide|standard|narrow (bucket throughput + first-byte latency)",
+            file_key: Some("NET_PROFILE"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.net_profiles.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.net_profiles.iter().map(|p| p.name))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "net-profile")? {
+            m.net_profiles = items
+                .iter()
+                .map(|s| parse_net_profile(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "NET_PROFILE")? {
+            m.net_profiles = items
+                .iter()
+                .map(|v| item_str(v, "NET_PROFILE").and_then(parse_net_profile))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "NET_PROFILE",
+            Value::Arr(m.net_profiles.iter().map(|p| Value::from(p.name)).collect()),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.net = sc.net.clone();
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        (sc.net != NetProfile::default()).then(|| format!("net={}", sc.net.name))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.net != NetProfile::default()).then(|| Value::from(sc.net.name))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The flag tables (generated surfaces)
+// ---------------------------------------------------------------------------
+
+/// Plan-level sweep flags rendered before the axis flags.
+static SWEEP_PLAN_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "config",
+        value: "FILE",
+        help: "base Config file (default: built-in defaults)",
+        file_key: Some("CONFIG"),
+    },
+    FlagSpec {
+        flag: "job",
+        value: "FILE",
+        help: "Job file replayed by every cell (default: synthetic plate)",
+        file_key: Some("JOB"),
+    },
+    FlagSpec {
+        flag: "fleet",
+        value: "FILE",
+        help: "Fleet file (default: built-in us-east-1 template)",
+        file_key: Some("FLEET"),
+    },
+    FlagSpec {
+        flag: "plan",
+        value: "FILE",
+        help: "Sweep file declaring the whole matrix (KEY-value JSON, like Config/Job/Fleet); CLI flags override file keys",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "dry-run",
+        value: "",
+        help: "print the expanded matrix (axes, scenarios, cells) and exit without running",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "plate",
+        value: "NAME",
+        help: "synthetic plate name when no --job (default P1)",
+        file_key: Some("PLATE"),
+    },
+    FlagSpec {
+        flag: "wells",
+        value: "N",
+        help: "synthetic plate wells when no --job (default 24)",
+        file_key: Some("WELLS"),
+    },
+    FlagSpec {
+        flag: "sites",
+        value: "N",
+        help: "synthetic plate sites/well when no --job (default 2)",
+        file_key: Some("SITES"),
+    },
+    FlagSpec {
+        flag: "seeds",
+        value: "N",
+        help: "replicate seeds per scenario (default 4; Sweep-file SEEDS also accepts an explicit seed list)",
+        file_key: Some("SEEDS"),
+    },
+    FlagSpec {
+        flag: "seed-base",
+        value: "N",
+        help: "first seed value (default 0)",
+        file_key: Some("SEED_BASE"),
+    },
+    FlagSpec {
+        flag: "on-demand-base",
+        value: "N",
+        help: "weighted units kept on-demand in every cell (default: Fleet file's)",
+        file_key: Some("ON_DEMAND_BASE"),
+    },
+];
+
+/// Sweep flags rendered after the axis flags (execution/output knobs —
+/// never Sweep-file keys, since the plan is thread- and format-agnostic).
+static SWEEP_EXEC_FLAGS: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "threads",
+        value: "N",
+        help: "worker threads (default: available cores)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "json",
+        value: "",
+        help: "emit the report as JSON on stdout (chatter to stderr)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "help",
+        value: "",
+        help: "show this help",
+        file_key: None,
+    },
+];
+
+/// `ds run` flags rendered before the shared axis flags.
+static RUN_ONLY_PRE: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "config",
+        value: "FILE",
+        help: "Config file (required)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "job",
+        value: "FILE",
+        help: "Job file (required)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "fleet",
+        value: "FILE",
+        help: "Fleet file (required)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "seed",
+        value: "N",
+        help: "simulation seed (default 42)",
+        file_key: None,
+    },
+];
+
+/// `ds run` flags rendered after the shared axis flags.
+static RUN_ONLY_POST: &[FlagSpec] = &[
+    FlagSpec {
+        flag: "no-monitor",
+        value: "",
+        help: "skip the Step-4 monitor (leaks resources, as in the paper)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "cheapest",
+        value: "",
+        help: "monitor cheapest mode (downscale requested capacity after 15 min; excludes --queue-downscale)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "queue-downscale",
+        value: "",
+        help: "monitor terminates surplus machines as the queue drains, cheapest pool last (excludes --cheapest)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "crash-mttf-min",
+        value: "M",
+        help: "mean minutes to instance crash (default: no crashes)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "pjrt",
+        value: "DIR",
+        help: "run real AOT artifacts from DIR instead of the modeled executor",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "time-scale",
+        value: "X",
+        help: "PJRT wall-time to sim-time scale (default 1.0)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "help",
+        value: "",
+        help: "show this help",
+        file_key: None,
+    },
+];
+
+/// Every flag `ds sweep` reads, generated from the registry: plan-level
+/// flags, then each axis's flags in registry order, then execution
+/// flags.  The help text, the unknown-flag rejection, and the Sweep-file
+/// key set are all projections of this one list.
+pub fn sweep_flags() -> Vec<&'static FlagSpec> {
+    let mut out: Vec<&'static FlagSpec> = SWEEP_PLAN_FLAGS.iter().collect();
+    for ax in AXES {
+        out.extend(ax.flags());
+    }
+    out.extend(SWEEP_EXEC_FLAGS.iter());
+    out
+}
+
+/// Every flag `ds run` documents: run-only flags plus the axes `ds run`
+/// shares with `ds sweep` ([`Axis::in_run`]), which accept a single
+/// value there.
+pub fn run_flags() -> Vec<&'static FlagSpec> {
+    let mut out: Vec<&'static FlagSpec> = RUN_ONLY_PRE.iter().collect();
+    for ax in AXES {
+        if ax.in_run() {
+            out.extend(ax.flags());
+        }
+    }
+    out.extend(RUN_ONLY_POST.iter());
+    out
+}
+
+/// The keys a Sweep file may contain (the `file_key` projection of
+/// [`sweep_flags`]).
+pub fn sweep_file_keys() -> Vec<&'static str> {
+    sweep_flags().iter().filter_map(|f| f.file_key).collect()
+}
+
+/// Every axis's Sweep-file entries for `m`, in registry order — the
+/// shared body of `SweepFile::render`, the `--json` dry run, and the
+/// round-trip tests, so the serialized axis schema cannot drift between
+/// surfaces.
+pub fn render_matrix_entries(m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+    AXES.iter().flat_map(|ax| ax.render_file(m)).collect()
+}
+
+/// Render a flag table for help text.
+pub fn render_flag_specs(flags: &[&FlagSpec]) -> String {
+    let mut out = String::new();
+    for f in flags {
+        let lhs = if f.value.is_empty() {
+            format!("--{}", f.flag)
+        } else {
+            format!("--{} {}", f.flag, f.value)
+        };
+        out.push_str(&format!("  {lhs:<28} {}\n", f.help));
+    }
+    out
+}
+
+/// Render the matrix one axis per line (the `--dry-run` body): Sweep-file
+/// key, CLI flag, and the axis's values.
+pub fn describe_matrix(m: &ScenarioMatrix) -> String {
+    let mut out = String::new();
+    for ax in AXES {
+        out.push_str(&format!(
+            "  {:<14} {:<18} [{}] {}\n",
+            ax.key(),
+            format!("(--{})", ax.flags()[0].flag),
+            ax.len(m),
+            ax.describe(m)
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn registry_covers_every_matrix_axis() {
+        // The product of per-axis lengths is the scenario count: no
+        // matrix field escapes the registry.
+        let m = ScenarioMatrix {
+            cluster_machines: vec![1, 2, 4],
+            volatilities: vec![Volatility::Low, Volatility::High],
+            input_mbs: vec![0.0, 64.0],
+            ..Default::default()
+        };
+        let product: usize = AXES.iter().map(|ax| ax.len(&m)).product();
+        assert_eq!(product, m.scenarios().len());
+        // The allocation-free count agrees with the expansion.
+        assert_eq!(m.scenario_count(), m.scenarios().len());
+        assert_eq!(m.cell_count(), m.scenarios().len() * m.seeds.len());
+    }
+
+    #[test]
+    fn axis_keys_and_flags_are_unique() {
+        let mut keys: Vec<&str> = AXES.iter().map(|ax| ax.key()).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), AXES.len());
+        let mut flags: Vec<&str> = sweep_flags().iter().map(|f| f.flag).collect();
+        flags.sort_unstable();
+        flags.dedup();
+        assert_eq!(flags.len(), sweep_flags().len(), "duplicate sweep flag");
+    }
+
+    #[test]
+    fn cli_overlay_only_touches_present_flags() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --machines 2,4 --volatility high");
+        for ax in AXES {
+            ax.parse_cli(&args, &mut m).unwrap();
+        }
+        assert_eq!(m.cluster_machines, vec![2, 4]);
+        assert_eq!(m.volatilities, vec![Volatility::High]);
+        // Untouched axes keep their defaults.
+        assert_eq!(m.visibilities, ScenarioMatrix::default().visibilities);
+        assert_eq!(m.input_mbs, vec![0.0]);
+    }
+
+    #[test]
+    fn cli_rejects_bad_and_valueless_axis_values() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --machines 8x");
+        let err = MachinesAxis.parse_cli(&args, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("bad value '8x' for --machines"), "{err:#}");
+        let args = parse("sweep --volatility --json");
+        let err = VolatilityAxis.parse_cli(&args, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("missing value for --volatility"), "{err:#}");
+    }
+
+    #[test]
+    fn duration_scalars_apply_to_every_mean() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --job-mean-s 60,120 --job-cv 0.5 --fail-prob 0.1");
+        DurationAxis.parse_cli(&args, &mut m).unwrap();
+        assert_eq!(m.models.len(), 2);
+        for mdl in &m.models {
+            assert_eq!(mdl.cv, 0.5);
+            assert_eq!(mdl.fail_prob, 0.1);
+            assert_eq!(mdl.stall_prob, 0.0);
+        }
+        assert_eq!(m.models[0].mean_s, 60.0);
+        assert_eq!(m.models[1].mean_s, 120.0);
+    }
+
+    #[test]
+    fn file_round_trips_every_axis() {
+        let m = ScenarioMatrix {
+            seeds: vec![1, 2],
+            cluster_machines: vec![2, 8],
+            visibilities: vec![90_000, 600_000],
+            volatilities: vec![Volatility::Medium],
+            allocations: vec![AllocationStrategy::Diversified],
+            instance_sets: vec![
+                Vec::new(),
+                vec![
+                    InstanceSlot::new("m5.large"),
+                    InstanceSlot {
+                        name: "c5.xlarge".into(),
+                        weight: 2,
+                    },
+                ],
+            ],
+            input_mbs: vec![0.0, 64.0],
+            net_profiles: vec![NetProfile::narrow()],
+            models: vec![DurationModel {
+                mean_s: 45.0,
+                cv: 0.5,
+                stall_prob: 0.01,
+                fail_prob: 0.02,
+            }],
+        };
+        let mut file = Value::obj();
+        for (k, v) in render_matrix_entries(&m) {
+            file = file.with(k, v);
+        }
+        // Parse into a fresh default matrix: every axis must come back.
+        let mut back = ScenarioMatrix {
+            seeds: m.seeds.clone(),
+            ..Default::default()
+        };
+        for ax in AXES {
+            ax.parse_file(&file, &mut back).unwrap();
+        }
+        assert_eq!(format!("{m:?}"), format!("{back:?}"));
+        let labels: Vec<String> = m.scenarios().iter().map(Scenario::label).collect();
+        let back_labels: Vec<String> = back.scenarios().iter().map(Scenario::label).collect();
+        assert_eq!(labels, back_labels);
+    }
+
+    #[test]
+    fn heterogeneous_models_render_as_objects() {
+        let m = ScenarioMatrix {
+            models: vec![
+                DurationModel {
+                    mean_s: 30.0,
+                    cv: 0.1,
+                    ..Default::default()
+                },
+                DurationModel {
+                    mean_s: 60.0,
+                    cv: 0.9,
+                    ..Default::default()
+                },
+            ],
+            ..Default::default()
+        };
+        let rendered = DurationAxis.render_file(&m);
+        assert_eq!(rendered.len(), 1, "heterogeneous models use the object form");
+        let mut back = ScenarioMatrix::default();
+        let mut file = Value::obj();
+        for (k, v) in rendered {
+            file = file.with(k, v);
+        }
+        DurationAxis.parse_file(&file, &mut back).unwrap();
+        assert_eq!(format!("{:?}", m.models), format!("{:?}", back.models));
+    }
+
+    #[test]
+    fn job_mean_s_object_entries_are_strict() {
+        // Inner typos and non-numeric values must error, not silently
+        // fall back to the default shape.
+        let mut m = ScenarioMatrix::default();
+        let file = crate::json::parse(r#"{"JOB_MEAN_S": [{"MEAN_S": 60, "CVV": 0.9}]}"#).unwrap();
+        let err = DurationAxis.parse_file(&file, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("CVV"), "{err:#}");
+        let file = crate::json::parse(r#"{"JOB_MEAN_S": [{"MEAN_S": 60, "CV": "0.9"}]}"#).unwrap();
+        let err = DurationAxis.parse_file(&file, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("CV"), "{err:#}");
+        let file = crate::json::parse(r#"{"JOB_MEAN_S": [{"CV": 0.9}]}"#).unwrap();
+        let err = DurationAxis.parse_file(&file, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("MEAN_S"), "{err:#}");
+    }
+
+    #[test]
+    fn instance_set_grammar_round_trips() {
+        let set = parse_instance_set("m5.large+c5.xlarge:2").unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(render_instance_set(&set), "m5.large+c5.xlarge:2");
+        assert!(parse_instance_set("").unwrap().is_empty());
+        assert!(parse_instance_set("bad::::").is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! Fluent [`SweepPlan`] construction for library users.
+//!
+//! The builder mirrors the CLI's layering: *axes* you don't set
+//! collapse to the same single-value defaults
+//! (`ScenarioMatrix::defaults_from` on the plan's config), so a builder
+//! plan, a flag-built plan, and a Sweep-file plan with the same axis
+//! inputs are the same plan — the round-trip property test in
+//! `rust/tests/scenario_api.rs` pins this against
+//! [`SweepFile`](super::SweepFile).  One deliberate difference:
+//! *seeds* left unset default to the matrix's single seed `[1]`, not
+//! the CLI's four replicates — library studies choose their replication
+//! explicitly ([`SweepPlanBuilder::seeds`] /
+//! [`SweepPlanBuilder::seed_count`]).
+//!
+//! ```
+//! use ds_rs::aws::ec2::Volatility;
+//! use ds_rs::config::JobSpec;
+//! use ds_rs::coordinator::sweep::SweepPlan;
+//!
+//! let plan = SweepPlan::builder()
+//!     .jobs(JobSpec::plate("P", 4, 2, vec![]))
+//!     .seeds([41, 42, 43])
+//!     .machines([2, 4, 8])
+//!     .volatilities([Volatility::Low, Volatility::High])
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(plan.matrix.scenarios().len(), 6);
+//! assert_eq!(plan.matrix.cell_count(), 18);
+//! ```
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
+use crate::aws::s3::dataplane::NetProfile;
+use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::coordinator::run::RunOptions;
+use crate::sim::SimTime;
+use crate::workloads::DurationModel;
+
+use super::{ScenarioMatrix, SweepPlan};
+
+/// Builder returned by [`SweepPlan::builder`].  Unset axes inherit the
+/// defaults the CLI would use; `jobs(…)` is the only required call.
+#[derive(Debug, Default)]
+pub struct SweepPlanBuilder {
+    cfg: Option<AppConfig>,
+    jobs: Option<JobSpec>,
+    fleet: Option<FleetSpec>,
+    opts: Option<RunOptions>,
+    seeds: Option<Vec<u64>>,
+    machines: Option<Vec<u32>>,
+    visibilities: Option<Vec<SimTime>>,
+    volatilities: Option<Vec<Volatility>>,
+    allocations: Option<Vec<AllocationStrategy>>,
+    instance_sets: Option<Vec<Vec<InstanceSlot>>>,
+    input_mbs: Option<Vec<f64>>,
+    net_profiles: Option<Vec<NetProfile>>,
+    models: Option<Vec<DurationModel>>,
+}
+
+impl SweepPlanBuilder {
+    /// Base Config the scenario knobs are overlaid on (default:
+    /// `AppConfig::default()`).
+    pub fn config(mut self, cfg: AppConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// The Job file every cell replays (required).
+    pub fn jobs(mut self, jobs: JobSpec) -> Self {
+        self.jobs = Some(jobs);
+        self
+    }
+
+    /// The Fleet file (default: built-in us-east-1 template).
+    pub fn fleet(mut self, fleet: FleetSpec) -> Self {
+        self.fleet = Some(fleet);
+        self
+    }
+
+    /// Base run options; seed, volatility, and net profile are
+    /// overridden per cell by the corresponding axes.
+    pub fn options(mut self, opts: RunOptions) -> Self {
+        self.opts = Some(opts);
+        self
+    }
+
+    /// Explicit replicate seeds (default: `[1]`, like the matrix).
+    pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = Some(seeds.into_iter().collect());
+        self
+    }
+
+    /// `n` consecutive seeds starting at `base` (the CLI's
+    /// `--seeds/--seed-base` shape).
+    pub fn seed_count(self, n: u64, base: u64) -> Self {
+        self.seeds((0..n.max(1)).map(|i| base + i))
+    }
+
+    /// `CLUSTER_MACHINES` axis (default: the config's value).
+    pub fn machines(mut self, machines: impl IntoIterator<Item = u32>) -> Self {
+        self.machines = Some(machines.into_iter().collect());
+        self
+    }
+
+    /// `SQS_MESSAGE_VISIBILITY` axis in sim-time ms (default: the
+    /// config's value).
+    pub fn visibilities(mut self, visibilities: impl IntoIterator<Item = SimTime>) -> Self {
+        self.visibilities = Some(visibilities.into_iter().collect());
+        self
+    }
+
+    /// Market volatility axis (default: low).
+    pub fn volatilities(mut self, volatilities: impl IntoIterator<Item = Volatility>) -> Self {
+        self.volatilities = Some(volatilities.into_iter().collect());
+        self
+    }
+
+    /// Fleet allocation-strategy axis (default: lowest-price).
+    pub fn allocations(mut self, allocations: impl IntoIterator<Item = AllocationStrategy>) -> Self {
+        self.allocations = Some(allocations.into_iter().collect());
+        self
+    }
+
+    /// Instance-set axis; an empty set inherits the plan's fleet file /
+    /// Config types (default: one empty set).
+    pub fn instance_sets(
+        mut self,
+        sets: impl IntoIterator<Item = Vec<InstanceSlot>>,
+    ) -> Self {
+        self.instance_sets = Some(sets.into_iter().collect());
+        self
+    }
+
+    /// Mean-input-MB axis; 0 = no data plane (default: `[0.0]`).
+    pub fn input_mbs(mut self, input_mbs: impl IntoIterator<Item = f64>) -> Self {
+        self.input_mbs = Some(input_mbs.into_iter().collect());
+        self
+    }
+
+    /// Network-profile axis (default: standard).
+    pub fn net_profiles(mut self, profiles: impl IntoIterator<Item = NetProfile>) -> Self {
+        self.net_profiles = Some(profiles.into_iter().collect());
+        self
+    }
+
+    /// Duration-model axis (default: one `DurationModel::default()`).
+    pub fn models(mut self, models: impl IntoIterator<Item = DurationModel>) -> Self {
+        self.models = Some(models.into_iter().collect());
+        self
+    }
+
+    /// Convenience for the common case: one model per mean, sharing the
+    /// default cv and failure knobs.
+    pub fn job_mean_s(self, means: impl IntoIterator<Item = f64>) -> Self {
+        self.models(means.into_iter().map(|mean_s| DurationModel {
+            mean_s,
+            ..Default::default()
+        }))
+    }
+
+    /// Assemble the plan.  Errors on missing jobs or any explicitly
+    /// empty axis (an empty axis would silently erase the whole matrix).
+    pub fn build(self) -> Result<SweepPlan> {
+        let cfg = self.cfg.unwrap_or_default();
+        let jobs = self
+            .jobs
+            .ok_or_else(|| anyhow!("SweepPlan::builder() requires jobs(…)"))?;
+        let fleet = match self.fleet {
+            Some(f) => f,
+            None => FleetSpec::template("us-east-1").expect("builtin fleet template"),
+        };
+        let mut matrix = ScenarioMatrix::defaults_from(&cfg);
+        macro_rules! set_axis {
+            ($field:ident, $target:ident) => {
+                if let Some(values) = self.$field {
+                    ensure!(!values.is_empty(), "{} axis is empty", stringify!($field));
+                    matrix.$target = values;
+                }
+            };
+        }
+        set_axis!(seeds, seeds);
+        set_axis!(machines, cluster_machines);
+        set_axis!(visibilities, visibilities);
+        set_axis!(volatilities, volatilities);
+        set_axis!(allocations, allocations);
+        set_axis!(instance_sets, instance_sets);
+        set_axis!(input_mbs, input_mbs);
+        set_axis!(net_profiles, net_profiles);
+        set_axis!(models, models);
+        Ok(SweepPlan {
+            base_cfg: cfg,
+            jobs,
+            fleet,
+            base_opts: self.opts.unwrap_or_default(),
+            matrix,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MINUTE;
+
+    #[test]
+    fn builder_defaults_match_the_cli_defaults() {
+        let cfg = AppConfig {
+            cluster_machines: 7,
+            sqs_message_visibility: 3 * MINUTE,
+            ..Default::default()
+        };
+        let plan = SweepPlan::builder()
+            .config(cfg.clone())
+            .jobs(JobSpec::plate("P", 2, 1, vec![]))
+            .build()
+            .unwrap();
+        // Machines and visibility inherit the config, like `ds sweep`
+        // without those flags.
+        assert_eq!(plan.matrix.cluster_machines, vec![7]);
+        assert_eq!(plan.matrix.visibilities, vec![3 * MINUTE]);
+        assert_eq!(plan.matrix.scenarios().len(), 1);
+    }
+
+    #[test]
+    fn builder_requires_jobs_and_rejects_empty_axes() {
+        assert!(SweepPlan::builder().build().is_err());
+        let err = SweepPlan::builder()
+            .jobs(JobSpec::plate("P", 2, 1, vec![]))
+            .machines(Vec::new())
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("machines"), "{err:#}");
+    }
+
+    #[test]
+    fn seed_count_matches_cli_shape() {
+        let plan = SweepPlan::builder()
+            .jobs(JobSpec::plate("P", 2, 1, vec![]))
+            .seed_count(4, 10)
+            .build()
+            .unwrap();
+        assert_eq!(plan.matrix.seeds, vec![10, 11, 12, 13]);
+    }
+}

@@ -1,0 +1,499 @@
+//! The Sweep file: the fourth paper-style configuration file.
+//!
+//! Config, Job, and Fleet files describe *one* run; the Sweep file
+//! describes a whole experiment matrix in the same human-readable
+//! `KEY value` JSON shape, so a multi-day study is a committable,
+//! re-runnable artifact instead of a 10-flag incantation:
+//!
+//! ```json
+//! {
+//!   "CONFIG": "files/config.json",
+//!   "SEEDS": 8,
+//!   "MACHINES": [2, 4, 8],
+//!   "VOLATILITY": ["low", "medium"],
+//!   "JOB_MEAN_S": [90, 240]
+//! }
+//! ```
+//!
+//! `CONFIG` / `JOB` / `FLEET` take a path (resolved relative to the
+//! Sweep file) *or* the whole file inlined as an object — the inline
+//! form is what [`SweepFile::render`] emits, so a rendered plan is
+//! self-contained.  `SEEDS` takes a replicate count (paired with
+//! `SEED_BASE`) or an explicit seed array.  Every axis key comes from
+//! the registry ([`super::AXES`]); unknown keys are rejected against
+//! the same registry that generates `ds sweep --help`, so file schema,
+//! parser, and documentation cannot drift.  CLI flags override file
+//! keys ([`plan_from_cli`]), mirroring how the paper's `run.py` flags
+//! override its config files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cli::Args;
+use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::json::{parse, Value};
+
+use super::axis::{render_matrix_entries, sweep_file_keys, Axis, AXES};
+use super::{ScenarioMatrix, SweepPlan};
+
+/// A parsed Sweep file: validated JSON plus the directory its relative
+/// `CONFIG`/`JOB`/`FLEET` paths resolve against.
+#[derive(Debug, Clone)]
+pub struct SweepFile {
+    value: Value,
+    dir: Option<PathBuf>,
+}
+
+impl SweepFile {
+    /// Read and validate a Sweep file from disk.  Relative
+    /// `CONFIG`/`JOB`/`FLEET` paths resolve against the file's
+    /// directory.
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let dir = Path::new(path).parent().map(PathBuf::from);
+        Self::parse_with_dir(&text, dir).with_context(|| format!("parsing Sweep file {path}"))
+    }
+
+    /// Parse a Sweep file from a string (relative paths resolve against
+    /// the working directory).
+    pub fn from_text(text: &str) -> Result<Self> {
+        Self::parse_with_dir(text, None)
+    }
+
+    fn parse_with_dir(text: &str, dir: Option<PathBuf>) -> Result<Self> {
+        let value = parse(text).context("invalid JSON")?;
+        let obj = value
+            .as_obj()
+            .ok_or_else(|| anyhow!("a Sweep file must be a JSON object"))?;
+        // Strict schema from the registry: a typo'd key must not
+        // silently run a different study than the one asked for.
+        let known = sweep_file_keys();
+        for (k, _) in obj {
+            if !known.contains(&k.as_str()) {
+                bail!(
+                    "unknown key '{k}' in Sweep file (valid keys: {})",
+                    known.join(", ")
+                );
+            }
+        }
+        Ok(Self { value, dir })
+    }
+
+    /// Build the plan this file alone describes (no CLI overrides).
+    pub fn to_plan(&self) -> Result<SweepPlan> {
+        plan_from_cli(&Args::default(), Some(self))
+    }
+
+    /// Render a plan as a self-contained Sweep file (inline
+    /// `CONFIG`/`JOB`/`FLEET`, explicit `SEEDS` array, every axis key).
+    /// `SweepFile::from_text(&render(p))?.to_plan()?` reproduces `p`
+    /// exactly — the round-trip gate in `rust/tests/scenario_api.rs`.
+    ///
+    /// The plan's `base_opts` are *not* part of the file: a Sweep file
+    /// captures the experiment (files + matrix), not the host-side run
+    /// options, which stay at their defaults when loaded.  Seeds, like
+    /// every number in these files, are JSON doubles — exact only up to
+    /// 2^53.
+    pub fn render(plan: &SweepPlan) -> String {
+        let mut v = Value::obj()
+            .with("CONFIG", plan.base_cfg.to_json())
+            .with("JOB", plan.jobs.to_json())
+            .with("FLEET", plan.fleet.to_json())
+            .with(
+                "SEEDS",
+                Value::Arr(plan.matrix.seeds.iter().map(|&s| Value::from(s)).collect()),
+            );
+        for (key, val) in render_matrix_entries(&plan.matrix) {
+            v = v.with(key, val);
+        }
+        v.pretty()
+    }
+
+    fn get(&self, key: &str) -> Option<&Value> {
+        self.value.get(key)
+    }
+
+    fn resolve(&self, path: &str) -> PathBuf {
+        match &self.dir {
+            Some(dir) => dir.join(path),
+            None => PathBuf::from(path),
+        }
+    }
+}
+
+fn read_to_string(path: &Path) -> Result<String> {
+    std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))
+}
+
+/// A `CONFIG`/`JOB`/`FLEET` value: a path string (read the file) or an
+/// inline object (parse it directly).
+fn file_or_inline<T>(
+    file: &SweepFile,
+    key: &'static str,
+    parse: impl Fn(&str) -> Result<T>,
+) -> Result<Option<T>> {
+    match file.get(key) {
+        None => Ok(None),
+        Some(Value::Str(path)) => {
+            let text = read_to_string(&file.resolve(path))?;
+            parse(&text)
+                .map(Some)
+                .with_context(|| format!("parsing Sweep file {key} ({path})"))
+        }
+        Some(v @ Value::Obj(_)) => parse(&v.pretty())
+            .map(Some)
+            .with_context(|| format!("parsing inline {key} in Sweep file")),
+        Some(_) => bail!("{key} must be a path string or an inline object"),
+    }
+}
+
+/// Strict optional string flag: absent -> `None`; present with no value
+/// -> error (`ds sweep --job --seeds 8` must not silently sweep the
+/// default synthetic plate instead of the forgotten Job file).
+fn cli_str<'a>(args: &'a Args, name: &str) -> Result<Option<&'a str>> {
+    match args.get(name) {
+        Some(v) => Ok(Some(v)),
+        None if args.flag(name) => bail!("missing value for --{name}"),
+        None => Ok(None),
+    }
+}
+
+fn file_u64(file: Option<&SweepFile>, key: &'static str) -> Result<Option<u64>> {
+    match file.and_then(|f| f.get(key)) {
+        None => Ok(None),
+        Some(v) => v
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("{key} must be a non-negative integer")),
+    }
+}
+
+/// Scalar CLI flag that overrides a Sweep-file key, with a final
+/// default: CLI > file > `default`.
+fn layered_u64(
+    args: &Args,
+    flag: &str,
+    file: Option<&SweepFile>,
+    key: &'static str,
+    default: u64,
+) -> Result<u64> {
+    if args.flag(flag) {
+        return args.try_parse(flag, default).map_err(|e| anyhow!(e));
+    }
+    Ok(file_u64(file, key)?.unwrap_or(default))
+}
+
+/// Resolve the layered sweep surface into one plan: CLI flags beat
+/// Sweep-file keys beat defaults, per key.  `ds sweep` calls this with
+/// its parsed arguments; [`SweepFile::to_plan`] calls it with empty
+/// ones.
+pub fn plan_from_cli(args: &Args, file: Option<&SweepFile>) -> Result<SweepPlan> {
+    let cli_config = cli_str(args, "config")?;
+    let cli_job = cli_str(args, "job")?;
+    let cli_fleet = cli_str(args, "fleet")?;
+    let cli_plate = cli_str(args, "plate")?;
+
+    // Base config: CLI path > file CONFIG (path or inline) > defaults.
+    let cfg = match cli_config {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            AppConfig::from_json(&text).context("parsing Config file")?
+        }
+        None => match file {
+            Some(f) => file_or_inline(f, "CONFIG", |t| {
+                AppConfig::from_json(t).map_err(Into::into)
+            })?
+            .unwrap_or_default(),
+            None => AppConfig::default(),
+        },
+    };
+
+    // Jobs: CLI path > file JOB > synthetic plate (whose shape layers
+    // the same way: CLI --plate/--wells/--sites > file keys > defaults).
+    // A known-but-dead knob must not silently run a different study
+    // than the author believes: the synthetic-plate keys (and flags) do
+    // nothing next to a real Job file.
+    if cli_job.is_some() || file.is_some_and(|f| f.get("JOB").is_some()) {
+        for (flag, key) in [("plate", "PLATE"), ("wells", "WELLS"), ("sites", "SITES")] {
+            if args.flag(flag) {
+                bail!("--{flag} has no effect when a Job file is given");
+            }
+            if file.is_some_and(|f| f.get(key).is_some()) {
+                bail!("{key} has no effect when JOB is given — remove it or drop JOB");
+            }
+        }
+    }
+    let jobs = match cli_job {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            JobSpec::from_json(&text).context("parsing Job file")?
+        }
+        None => {
+            let from_file = match file {
+                Some(f) => file_or_inline(f, "JOB", |t| JobSpec::from_json(t).map_err(Into::into))?,
+                None => None,
+            };
+            match from_file {
+                Some(jobs) => jobs,
+                None => {
+                    let plate = match cli_plate {
+                        Some(p) => p.to_string(),
+                        None => match file.and_then(|f| f.get("PLATE")) {
+                            Some(v) => v
+                                .as_str()
+                                .ok_or_else(|| anyhow!("PLATE must be a string"))?
+                                .to_string(),
+                            None => "P1".to_string(),
+                        },
+                    };
+                    let wells = layered_u64(args, "wells", file, "WELLS", 24)?;
+                    let sites = layered_u64(args, "sites", file, "SITES", 2)?;
+                    JobSpec::plate(
+                        &plate,
+                        u32::try_from(wells).context("WELLS out of range")?,
+                        u32::try_from(sites).context("SITES out of range")?,
+                        vec![],
+                    )
+                }
+            }
+        }
+    };
+
+    // Fleet: CLI path > file FLEET > built-in template.
+    let fleet = match cli_fleet {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+            FleetSpec::from_json(&text).context("parsing Fleet file")?
+        }
+        None => {
+            let from_file = match file {
+                Some(f) => {
+                    file_or_inline(f, "FLEET", |t| FleetSpec::from_json(t).map_err(Into::into))?
+                }
+                None => None,
+            };
+            match from_file {
+                Some(fleet) => fleet,
+                None => FleetSpec::template("us-east-1").expect("builtin fleet template"),
+            }
+        }
+    };
+
+    // Seeds: CLI --seeds/--seed-base > file SEEDS (count or explicit
+    // array, with SEED_BASE) > 4 seeds from 0.
+    let seed_base = layered_u64(args, "seed-base", file, "SEED_BASE", 0)?;
+    let seeds: Vec<u64> = if args.flag("seeds") {
+        let n = args.try_parse("seeds", 4u64).map_err(|e| anyhow!(e))?.max(1);
+        (0..n).map(|i| seed_base + i).collect()
+    } else {
+        match file.and_then(|f| f.get("SEEDS")) {
+            Some(Value::Arr(items)) => {
+                ensure!(!items.is_empty(), "SEEDS must list at least one seed");
+                // An explicit seed list makes SEED_BASE dead — reject it
+                // rather than silently ignoring half the file.
+                ensure!(
+                    !args.flag("seed-base")
+                        && !file.is_some_and(|f| f.get("SEED_BASE").is_some()),
+                    "SEED_BASE has no effect with an explicit SEEDS list — use a SEEDS count"
+                );
+                items
+                    .iter()
+                    .map(|v| {
+                        v.as_u64()
+                            .ok_or_else(|| anyhow!("SEEDS must be non-negative integers"))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            Some(v) => {
+                let n = v
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("SEEDS must be a count or an array of seeds"))?
+                    .max(1);
+                (0..n).map(|i| seed_base + i).collect()
+            }
+            None => (0..4).map(|i| seed_base + i).collect(),
+        }
+    };
+
+    // Axes: defaults from the resolved config, then file keys, then CLI
+    // flags — each layer only touching the axes it names.
+    let mut matrix = ScenarioMatrix::defaults_from(&cfg);
+    matrix.seeds = seeds;
+    if let Some(f) = file {
+        for ax in AXES {
+            ax.parse_file(&f.value, &mut matrix)?;
+        }
+    }
+    for ax in AXES {
+        ax.parse_cli(args, &mut matrix)?;
+    }
+
+    let mut plan = SweepPlan {
+        base_cfg: cfg,
+        jobs,
+        fleet,
+        base_opts: Default::default(),
+        matrix,
+    };
+    plan.fleet.on_demand_base = u32::try_from(layered_u64(
+        args,
+        "on-demand-base",
+        file,
+        "ON_DEMAND_BASE",
+        u64::from(plan.fleet.on_demand_base),
+    )?)
+    .context("ON_DEMAND_BASE out of range")?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::aws::ec2::Volatility;
+    use crate::sim::MINUTE;
+
+    fn cli(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn minimal_file_gets_cli_defaults() {
+        let plan = SweepFile::from_text("{}").unwrap().to_plan().unwrap();
+        assert_eq!(plan.matrix.seeds, vec![0, 1, 2, 3]);
+        assert_eq!(plan.matrix.cluster_machines, vec![4]);
+        assert_eq!(plan.jobs.groups.len(), 48); // 24 wells x 2 sites
+    }
+
+    #[test]
+    fn file_keys_shape_the_matrix() {
+        let f = SweepFile::from_text(
+            r#"{
+                "SEEDS": 2,
+                "SEED_BASE": 10,
+                "MACHINES": [2, 4],
+                "VISIBILITY_S": [120, 600],
+                "VOLATILITY": ["low", "high"],
+                "JOB_MEAN_S": [45],
+                "JOB_CV": 0.5,
+                "WELLS": 2,
+                "SITES": 1
+            }"#,
+        )
+        .unwrap();
+        let plan = f.to_plan().unwrap();
+        assert_eq!(plan.matrix.seeds, vec![10, 11]);
+        assert_eq!(plan.matrix.cluster_machines, vec![2, 4]);
+        assert_eq!(plan.matrix.visibilities, vec![2 * MINUTE, 10 * MINUTE]);
+        assert_eq!(
+            plan.matrix.volatilities,
+            vec![Volatility::Low, Volatility::High]
+        );
+        assert_eq!(plan.matrix.models.len(), 1);
+        assert_eq!(plan.matrix.models[0].mean_s, 45.0);
+        assert_eq!(plan.matrix.models[0].cv, 0.5);
+        assert_eq!(plan.jobs.groups.len(), 2);
+        assert_eq!(plan.matrix.scenarios().len(), 8);
+    }
+
+    #[test]
+    fn cli_flags_override_file_keys() {
+        let f = SweepFile::from_text(r#"{"MACHINES": [2, 4], "SEEDS": 8, "WELLS": 2, "SITES": 1}"#)
+            .unwrap();
+        let plan = plan_from_cli(&cli("sweep --machines 16 --seeds 2"), Some(&f)).unwrap();
+        assert_eq!(plan.matrix.cluster_machines, vec![16]);
+        assert_eq!(plan.matrix.seeds, vec![0, 1]);
+        // Keys the CLI never named survive from the file.
+        assert_eq!(plan.jobs.groups.len(), 2);
+    }
+
+    #[test]
+    fn unknown_keys_rejected_against_the_registry() {
+        let err = SweepFile::from_text(r#"{"MACHNIES": [2]}"#).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown key 'MACHNIES'"), "{msg}");
+        assert!(msg.contains("MACHINES"), "the error lists valid keys: {msg}");
+    }
+
+    #[test]
+    fn inline_config_and_explicit_seed_array() {
+        let cfg = AppConfig {
+            cluster_machines: 6,
+            ..Default::default()
+        };
+        let text = Value::obj()
+            .with("CONFIG", cfg.to_json())
+            .with("SEEDS", Value::Arr(vec![Value::from(7u64), Value::from(9u64)]))
+            .with("WELLS", 2u64)
+            .with("SITES", 1u64)
+            .pretty();
+        let plan = SweepFile::from_text(&text).unwrap().to_plan().unwrap();
+        assert_eq!(plan.base_cfg.cluster_machines, 6);
+        // Machines default follows the inline config.
+        assert_eq!(plan.matrix.cluster_machines, vec![6]);
+        assert_eq!(plan.matrix.seeds, vec![7, 9]);
+    }
+
+    #[test]
+    fn render_is_self_contained_and_round_trips() {
+        let plan = SweepPlan::builder()
+            .jobs(JobSpec::plate("P", 4, 2, vec![]))
+            .seeds([3, 5])
+            .machines([1, 2])
+            .volatilities([Volatility::Medium])
+            .input_mbs([0.0, 32.0])
+            .build()
+            .unwrap();
+        let text = SweepFile::render(&plan);
+        let back = SweepFile::from_text(&text).unwrap().to_plan().unwrap();
+        assert_eq!(plan.base_cfg, back.base_cfg);
+        assert_eq!(plan.jobs, back.jobs);
+        assert_eq!(plan.fleet, back.fleet);
+        assert_eq!(plan.matrix.seeds, back.matrix.seeds);
+        let labels: Vec<String> = plan.matrix.scenarios().iter().map(|s| s.label()).collect();
+        let back_labels: Vec<String> = back.matrix.scenarios().iter().map(|s| s.label()).collect();
+        assert_eq!(labels, back_labels);
+    }
+
+    #[test]
+    fn valueless_path_flags_are_rejected() {
+        // `--job` with the path forgotten must not silently sweep the
+        // default synthetic plate — same rule as every axis flag.
+        for flag in ["config", "job", "fleet", "plate"] {
+            let err = plan_from_cli(&cli(&format!("sweep --{flag} --seeds 2")), None).unwrap_err();
+            assert!(
+                format!("{err:#}").contains(&format!("missing value for --{flag}")),
+                "--{flag}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_keys_next_to_their_replacement_are_rejected() {
+        // Synthetic-plate keys do nothing next to a real JOB; an
+        // explicit SEEDS list makes SEED_BASE dead.  Both must error
+        // instead of silently running a different study.
+        let text = Value::obj()
+            .with("JOB", JobSpec::plate("P", 2, 1, vec![]).to_json())
+            .with("WELLS", 96u64)
+            .pretty();
+        let err = SweepFile::from_text(&text).unwrap().to_plan().unwrap_err();
+        assert!(format!("{err:#}").contains("WELLS has no effect"), "{err:#}");
+
+        let err = SweepFile::from_text(r#"{"SEEDS": [1, 2], "SEED_BASE": 5}"#)
+            .unwrap()
+            .to_plan()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("SEED_BASE has no effect"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_inline_value_reports_the_key() {
+        let err = SweepFile::from_text(r#"{"CONFIG": 42}"#)
+            .unwrap()
+            .to_plan()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("CONFIG"), "{err:#}");
+    }
+}

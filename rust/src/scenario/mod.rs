@@ -1,0 +1,400 @@
+//! Scenario API v2 (DESIGN.md §5): the typed axis registry behind every
+//! sweep surface.
+//!
+//! The paper's whole pitch is configuration through a handful of
+//! human-readable files; this module keeps the *experiment* surface
+//! honest the same way.  Every sweep axis — machines, visibility,
+//! volatility, duration model, allocation strategy, instance set, input
+//! MB, net profile — is one [`Axis`] implementation declaring its CLI
+//! flag(s), its Sweep-file key, its per-cell config/fleet/job overlay,
+//! its label fragment, and its JSON identity.  The registry ([`AXES`])
+//! is the single source of truth: `ds sweep --help`, the strict
+//! unknown-flag rejection, the Sweep-file schema, scenario labels, and
+//! the report's per-scenario `axes` object are all generated from it,
+//! so adding an axis touches exactly this module (plus the knob it
+//! drives) instead of seven call sites.
+//!
+//! Three front doors build the same [`SweepPlan`], and
+//! [`run_sweep`](crate::coordinator::sweep::run_sweep) executes it:
+//!
+//! * **CLI flags** — `ds sweep --machines 2,4 --volatility low,high`
+//! * **Sweep file** — a fourth paper-style `KEY value` JSON file
+//!   ([`SweepFile`]): `ds sweep --plan sweep.json`, with CLI flags
+//!   overriding file keys
+//! * **Builder** — [`SweepPlan::builder`] for library users
+//!
+//! ```
+//! use ds_rs::config::JobSpec;
+//! use ds_rs::coordinator::sweep::SweepPlan;
+//!
+//! let plan = SweepPlan::builder()
+//!     .jobs(JobSpec::plate("P", 2, 1, vec![]))
+//!     .machines([1, 2])
+//!     .seeds([1, 2])
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(plan.matrix.cell_count(), 4);
+//! ```
+
+pub mod axis;
+pub mod builder;
+pub mod file;
+
+pub use axis::{
+    describe_matrix, render_flag_specs, render_matrix_entries, run_flags, sweep_flags, Axis,
+    FlagSpec, AXES,
+};
+pub use builder::SweepPlanBuilder;
+pub use file::{plan_from_cli, SweepFile};
+
+use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
+use crate::aws::s3::dataplane::NetProfile;
+use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::coordinator::run::RunOptions;
+use crate::json::Value;
+use crate::sim::{SimTime, MINUTE};
+use crate::workloads::DurationModel;
+
+/// Stable display name for a volatility level.
+pub fn volatility_name(v: Volatility) -> &'static str {
+    match v {
+        Volatility::Low => "low",
+        Volatility::Medium => "medium",
+        Volatility::High => "high",
+    }
+}
+
+/// One point in the configuration matrix.  Seeds are *not* part of a
+/// scenario: they replicate it, and aggregation reduces across them.
+///
+/// Every field is owned by exactly one [`Axis`] in [`AXES`]; the axis,
+/// not the scenario, knows how to overlay the field onto a cell, label
+/// it, and render it as JSON.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub volatility: Volatility,
+    /// `SQS_MESSAGE_VISIBILITY` for this cell's config.
+    pub visibility: SimTime,
+    /// `CLUSTER_MACHINES` for this cell's config (weighted units).
+    pub machines: u32,
+    /// `ALLOCATION_STRATEGY` for this cell's fleet.
+    pub allocation: AllocationStrategy,
+    /// `INSTANCE_TYPES` for this cell's fleet; empty inherits the plan's
+    /// fleet file / Config.
+    pub instance_set: Vec<InstanceSlot>,
+    /// Mean input MB per job; 0 leaves the plan's Job file untouched
+    /// (zero-data cells take the pre-data-plane path).
+    pub input_mb: f64,
+    /// Network profile for this cell's data plane.
+    pub net: NetProfile,
+    pub model: DurationModel,
+}
+
+impl Scenario {
+    /// Stable human-readable label (also the aggregation key in
+    /// reports), assembled from each axis's registry-declared fragment.
+    /// Axes follow the only-label-when-used rule, so historical labels
+    /// stay byte-stable as new axes land.
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        for ax in AXES {
+            if let Some(fragment) = ax.label(self) {
+                parts.push(fragment);
+            }
+        }
+        parts.join(" ")
+    }
+
+    /// The scenario's coordinates as a JSON object keyed by the axes'
+    /// Sweep-file keys (same only-when-used rule as [`Self::label`]) —
+    /// what `metrics::aggregate` attaches to each `ScenarioSummary` so
+    /// downstream tooling never parses labels.
+    pub fn axis_json(&self) -> Value {
+        let mut obj = Value::obj();
+        for ax in AXES {
+            if let Some(v) = ax.json_value(self) {
+                obj = obj.with(ax.key(), v);
+            }
+        }
+        obj
+    }
+
+    /// One cell's fully-overlaid inputs: the base config, fleet file,
+    /// and run options with every axis's value applied (the sweep
+    /// path).  The caller still owns the seed and the Job file overlay
+    /// (see `coordinator::sweep::run_cell`).
+    pub fn cell_inputs(
+        &self,
+        base_cfg: &AppConfig,
+        base_fleet: &FleetSpec,
+        base_opts: &RunOptions,
+    ) -> CellInputs {
+        self.overlaid(base_cfg, base_fleet, base_opts, |_| true)
+    }
+
+    /// Like [`Self::cell_inputs`] but applying only the axes `ds run`
+    /// exposes ([`Axis::in_run`]): a single run's machines, visibility,
+    /// allocation strategy, and instance set come from its Config and
+    /// Fleet files, never from axis defaults.
+    pub fn run_inputs(
+        &self,
+        base_cfg: &AppConfig,
+        base_fleet: &FleetSpec,
+        base_opts: &RunOptions,
+    ) -> CellInputs {
+        self.overlaid(base_cfg, base_fleet, base_opts, |ax| ax.in_run())
+    }
+
+    fn overlaid(
+        &self,
+        base_cfg: &AppConfig,
+        base_fleet: &FleetSpec,
+        base_opts: &RunOptions,
+        want: impl Fn(&dyn Axis) -> bool,
+    ) -> CellInputs {
+        // Every field an axis owns starts at its base/neutral value —
+        // the axis overlay (filtered by `want`) is the only writer, so
+        // `run_inputs` excluding an axis really does exclude it.
+        let mut cell = CellInputs {
+            cfg: base_cfg.clone(),
+            fleet: base_fleet.clone(),
+            opts: base_opts.clone(),
+            model: DurationModel::default(),
+            input_mb: 0.0,
+        };
+        for ax in AXES {
+            if want(*ax) {
+                ax.overlay(self, &mut cell);
+            }
+        }
+        cell
+    }
+}
+
+/// One `(scenario, seed)` cell's inputs after every axis overlay: what
+/// `run_full` consumes, minus the Job file (whose data-shape overlay
+/// needs the seed).
+#[derive(Debug, Clone)]
+pub struct CellInputs {
+    pub cfg: AppConfig,
+    pub fleet: FleetSpec,
+    pub opts: RunOptions,
+    /// The cell's modeled duration distribution.
+    pub model: DurationModel,
+    /// Mean input MB overlaid on the Job file (0 = untouched).
+    pub input_mb: f64,
+}
+
+/// Axes of the sweep: the scenario list is their cartesian product.
+/// Each field is owned by one [`Axis`] in [`AXES`], which parses it
+/// from the CLI and the Sweep file and renders it back.
+#[derive(Debug, Clone)]
+pub struct ScenarioMatrix {
+    /// Replicate seeds applied to every scenario.
+    pub seeds: Vec<u64>,
+    pub volatilities: Vec<Volatility>,
+    pub visibilities: Vec<SimTime>,
+    pub cluster_machines: Vec<u32>,
+    /// Fleet allocation strategies to compare.
+    pub allocations: Vec<AllocationStrategy>,
+    /// Instance sets to compare; an empty set inherits the plan's fleet
+    /// file / Config types.
+    pub instance_sets: Vec<Vec<InstanceSlot>>,
+    /// Mean input MB per job (`--input-mb`); 0 = no data plane.
+    pub input_mbs: Vec<f64>,
+    /// Network profiles (`--net-profile`).
+    pub net_profiles: Vec<NetProfile>,
+    pub models: Vec<DurationModel>,
+}
+
+impl Default for ScenarioMatrix {
+    fn default() -> Self {
+        Self {
+            seeds: vec![1],
+            volatilities: vec![Volatility::Low],
+            visibilities: vec![10 * MINUTE],
+            cluster_machines: vec![4],
+            allocations: vec![AllocationStrategy::LowestPrice],
+            instance_sets: vec![Vec::new()],
+            input_mbs: vec![0.0],
+            net_profiles: vec![NetProfile::default()],
+            models: vec![DurationModel::default()],
+        }
+    }
+}
+
+impl ScenarioMatrix {
+    /// The matrix every front door starts from: single-valued axes, with
+    /// machines and visibility inheriting the base config (they are the
+    /// two axes the Config file carries).
+    pub fn defaults_from(cfg: &AppConfig) -> Self {
+        Self {
+            cluster_machines: vec![cfg.cluster_machines],
+            visibilities: vec![cfg.sqs_message_visibility],
+            ..Default::default()
+        }
+    }
+
+    /// Expand the cartesian product in a fixed order: machines outermost,
+    /// then visibility, volatility, allocation strategy, instance set,
+    /// input MB, net profile, and innermost the duration model.  Axis
+    /// element order is preserved, so single-axis sweeps read like the
+    /// input list.  (This expansion order is pinned by historical
+    /// reports; the registry's order is the *label* order, which differs
+    /// only in where the duration model sits.)
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(
+            self.cluster_machines.len()
+                * self.visibilities.len()
+                * self.volatilities.len()
+                * self.allocations.len()
+                * self.instance_sets.len()
+                * self.input_mbs.len()
+                * self.net_profiles.len()
+                * self.models.len(),
+        );
+        for &machines in &self.cluster_machines {
+            for &visibility in &self.visibilities {
+                for &volatility in &self.volatilities {
+                    for &allocation in &self.allocations {
+                        for instance_set in &self.instance_sets {
+                            for &input_mb in &self.input_mbs {
+                                for net in &self.net_profiles {
+                                    for model in &self.models {
+                                        out.push(Scenario {
+                                            volatility,
+                                            visibility,
+                                            machines,
+                                            allocation,
+                                            instance_set: instance_set.clone(),
+                                            input_mb,
+                                            net: net.clone(),
+                                            model: model.clone(),
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Scenarios the matrix will expand to, computed from the
+    /// registry's per-axis lengths *without* materializing the product
+    /// — what lets `--dry-run` size an absurdly large matrix without
+    /// allocating it.  Saturates at `usize::MAX`.
+    pub fn scenario_count(&self) -> usize {
+        AXES.iter()
+            .map(|ax| ax.len(self))
+            .fold(1, usize::saturating_mul)
+    }
+
+    /// Total cells the sweep will run (scenarios × seeds), computed
+    /// without expanding the matrix.
+    pub fn cell_count(&self) -> usize {
+        self.scenario_count().saturating_mul(self.seeds.len())
+    }
+}
+
+/// Everything a sweep needs besides the matrix: the base config the
+/// scenario knobs are overlaid on, the job list every cell replays, the
+/// fleet file, and the base run options (seed and volatility are
+/// overridden per cell).
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    pub base_cfg: AppConfig,
+    pub jobs: JobSpec,
+    pub fleet: FleetSpec,
+    pub base_opts: RunOptions,
+    pub matrix: ScenarioMatrix,
+}
+
+impl SweepPlan {
+    /// Plan over the built-in us-east-1 template fleet with default run
+    /// options.
+    pub fn new(base_cfg: AppConfig, jobs: JobSpec, matrix: ScenarioMatrix) -> Self {
+        Self {
+            base_cfg,
+            jobs,
+            fleet: FleetSpec::template("us-east-1").expect("builtin fleet template"),
+            base_opts: RunOptions::default(),
+            matrix,
+        }
+    }
+
+    /// Fluent construction for library users (see [`SweepPlanBuilder`]).
+    pub fn builder() -> SweepPlanBuilder {
+        SweepPlanBuilder::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_assembles_in_registry_order() {
+        let mut sc = Scenario {
+            volatility: Volatility::Medium,
+            visibility: 5 * MINUTE,
+            machines: 8,
+            allocation: AllocationStrategy::Diversified,
+            instance_set: Vec::new(),
+            input_mb: 0.0,
+            net: NetProfile::default(),
+            model: DurationModel {
+                mean_s: 120.0,
+                ..Default::default()
+            },
+        };
+        assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
+        sc.input_mb = 64.0;
+        sc.net = NetProfile::narrow();
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow"
+        );
+    }
+
+    #[test]
+    fn axis_json_mirrors_the_label_rule() {
+        let mut sc = ScenarioMatrix::default().scenarios().remove(0);
+        let j = sc.axis_json();
+        assert_eq!(j.get("MACHINES").and_then(Value::as_u64), Some(4));
+        assert_eq!(j.get("VOLATILITY").and_then(Value::as_str), Some("low"));
+        // Unused optional axes stay out of the JSON, like the label.
+        assert!(j.get("INPUT_MB").is_none());
+        assert!(j.get("NET_PROFILE").is_none());
+        assert!(j.get("INSTANCE_TYPES").is_none());
+        sc.input_mb = 32.0;
+        sc.net = NetProfile::narrow();
+        sc.instance_set = vec![InstanceSlot::new("m5.large")];
+        let j = sc.axis_json();
+        assert_eq!(j.get("INPUT_MB").and_then(Value::as_f64), Some(32.0));
+        assert_eq!(j.get("NET_PROFILE").and_then(Value::as_str), Some("narrow"));
+        assert_eq!(
+            j.get("INSTANCE_TYPES").and_then(Value::as_arr).map(<[Value]>::len),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn run_inputs_leave_fleet_shaping_to_the_files() {
+        // `ds run` must not let axis *defaults* clobber the Fleet file:
+        // a diversified fleet stays diversified through run_inputs.
+        let cfg = AppConfig::default();
+        let mut fleet = FleetSpec::template("us-east-1").unwrap();
+        fleet.allocation_strategy = AllocationStrategy::Diversified;
+        fleet.instance_types = vec![InstanceSlot::new("m5.large")];
+        let sc = ScenarioMatrix::defaults_from(&cfg).scenarios().remove(0);
+        let cell = sc.run_inputs(&cfg, &fleet, &RunOptions::default());
+        assert_eq!(cell.fleet.allocation_strategy, AllocationStrategy::Diversified);
+        assert_eq!(cell.fleet.instance_types.len(), 1);
+        // The sweep path, by contrast, owns those axes.
+        let cell = sc.cell_inputs(&cfg, &fleet, &RunOptions::default());
+        assert_eq!(cell.fleet.allocation_strategy, AllocationStrategy::LowestPrice);
+    }
+}

@@ -27,19 +27,18 @@ fn usage_lists_commands() {
 
 #[test]
 fn usage_and_help_list_full_sweep_flag_set() {
-    // The usage text and `ds sweep --help` document every sweep flag —
-    // including the allocation-strategy and instance-set axes — so the
-    // docs can't drift from the strict parser (typos are rejected
-    // against the same table).
-    let flags = [
-        "--config", "--job", "--fleet", "--plate", "--wells", "--sites", "--seeds",
-        "--seed-base", "--machines", "--visibility-s", "--volatility", "--allocation",
-        "--instance-types", "--on-demand-base", "--job-mean-s", "--job-cv", "--stall-prob",
-        "--fail-prob", "--input-mb", "--net-profile", "--threads", "--json",
-    ];
+    // The usage text and `ds sweep --help` document every *registered*
+    // sweep flag: the assertion iterates the axis registry itself, so a
+    // new axis that forgets its flag spec (or a help renderer that
+    // drops one) fails here, and the docs can't drift from the strict
+    // parser (typos are rejected against the same registry).
     for out in [run_ok(&[]), run_ok(&["sweep", "--help"])] {
-        for f in flags {
-            assert!(out.contains(f), "sweep flag {f} undocumented in: {out}");
+        for f in ds_rs::scenario::sweep_flags() {
+            assert!(
+                out.contains(&format!("--{}", f.flag)),
+                "sweep flag --{} undocumented in: {out}",
+                f.flag
+            );
         }
     }
 }
@@ -56,8 +55,12 @@ fn sweep_rejects_unknown_flag() {
 #[test]
 fn run_and_make_fleet_file_have_help() {
     let run_help = run_ok(&["run", "--help"]);
-    for f in ["--queue-downscale", "--cheapest", "--no-monitor", "--pjrt"] {
-        assert!(run_help.contains(f), "run flag {f} undocumented: {run_help}");
+    for f in ds_rs::scenario::run_flags() {
+        assert!(
+            run_help.contains(&format!("--{}", f.flag)),
+            "run flag --{} undocumented: {run_help}",
+            f.flag
+        );
     }
     let fleet_help = run_ok(&["make-fleet-file", "--help"]);
     for key in ["INSTANCE_TYPES", "ALLOCATION_STRATEGY", "ON_DEMAND_BASE"] {
@@ -373,6 +376,135 @@ fn make_fleet_file_unknown_region_fails() {
         .unwrap();
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("no template"));
+}
+
+#[test]
+fn sweep_dry_run_prints_matrix_without_running() {
+    let out = run_ok(&[
+        "sweep",
+        "--seeds",
+        "5",
+        "--machines",
+        "2,4,8",
+        "--volatility",
+        "low,high",
+        "--wells",
+        "2",
+        "--sites",
+        "1",
+        "--dry-run",
+    ]);
+    assert!(out.contains("dry run"), "{out}");
+    // Every axis line shows its Sweep-file key and CLI flag.
+    assert!(out.contains("MACHINES"), "{out}");
+    assert!(out.contains("(--machines)"), "{out}");
+    assert!(out.contains("2, 4, 8"), "{out}");
+    // The headline numbers: 6 scenarios x 5 seeds = 30 cells.
+    assert!(out.contains("scenarios: 6"), "{out}");
+    assert!(out.contains("cells: 30"), "{out}");
+    // Nothing ran: no scenario table, no report.
+    assert!(!out.contains("makespan"), "{out}");
+
+    // Under --json the dry run stays machine-parseable on stdout.
+    let out = run_ok(&[
+        "sweep", "--seeds", "5", "--machines", "2,4,8", "--volatility", "low,high",
+        "--wells", "2", "--sites", "1", "--dry-run", "--json",
+    ]);
+    let v = ds_rs::json::parse(out.trim()).unwrap();
+    assert_eq!(v.get("scenarios").and_then(ds_rs::json::Value::as_u64), Some(6));
+    assert_eq!(v.get("cells").and_then(ds_rs::json::Value::as_u64), Some(30));
+    assert!(v.get("axes").and_then(|a| a.get("MACHINES")).is_some());
+}
+
+#[test]
+fn run_rejects_unknown_and_sweep_only_flags() {
+    // `ds run` shares the registry's strictness: a sweep-only axis flag
+    // (or a typo) must not silently run a different study.
+    let out = ds().args(["run", "--machines", "16"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown flag --machines"), "{err}");
+    assert!(err.contains("run --help"), "{err}");
+}
+
+#[test]
+fn sweep_plan_file_runs_with_cli_overrides() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-plan-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("sweep.json");
+    std::fs::write(
+        &plan_path,
+        r#"{
+            "SEEDS": 2,
+            "MACHINES": [1, 2],
+            "JOB_MEAN_S": [30],
+            "WELLS": 2,
+            "SITES": 1
+        }"#,
+    )
+    .unwrap();
+    // File alone: 2 scenarios x 2 seeds.
+    let out = run_ok(&["sweep", "--plan", plan_path.to_str().unwrap(), "--threads", "2"]);
+    assert!(out.contains("2 scenarios x 2 seeds = 4 cells"), "{out}");
+    assert!(out.contains("m=1"), "{out}");
+    assert!(out.contains("m=2"), "{out}");
+    // CLI overrides the file's MACHINES axis, keeps its SEEDS.
+    let out = run_ok(&[
+        "sweep",
+        "--plan",
+        plan_path.to_str().unwrap(),
+        "--machines",
+        "4",
+        "--threads",
+        "2",
+    ]);
+    assert!(out.contains("1 scenarios x 2 seeds = 2 cells"), "{out}");
+    assert!(out.contains("m=4"), "{out}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_plan_file_rejects_unknown_keys() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-plankey-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let plan_path = dir.join("sweep.json");
+    std::fs::write(&plan_path, r#"{"MACHNIES": [2]}"#).unwrap();
+    let out = ds()
+        .args(["sweep", "--plan", plan_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown key 'MACHNIES'"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_rejects_valueless_plan_flag() {
+    // `--plan` with a forgotten value must not silently run the default
+    // study — same strictness rule as every axis flag.
+    let out = ds().args(["sweep", "--plan", "--json"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("missing value for --plan"), "{err}");
+}
+
+#[test]
+fn sweep_json_carries_registry_axes() {
+    // The per-scenario `axes` object: machine-readable coordinates keyed
+    // by the registry's Sweep-file keys, so tooling never parses labels.
+    let out = run_ok(&[
+        "sweep", "--seeds", "1", "--machines", "2", "--input-mb", "8", "--wells", "2",
+        "--sites", "1", "--job-mean-s", "30", "--json",
+    ]);
+    let v = ds_rs::json::parse(out.trim()).unwrap();
+    let scenarios = v.get("scenarios").and_then(ds_rs::json::Value::as_arr).unwrap();
+    let axes = scenarios[0].get("axes").unwrap();
+    assert_eq!(axes.get("MACHINES").and_then(ds_rs::json::Value::as_u64), Some(2));
+    assert_eq!(axes.get("INPUT_MB").and_then(ds_rs::json::Value::as_f64), Some(8.0));
+    assert_eq!(axes.get("VOLATILITY").and_then(ds_rs::json::Value::as_str), Some("low"));
+    // Unused optional axes stay out, mirroring the label rule.
+    assert!(axes.get("NET_PROFILE").is_none());
 }
 
 #[test]

@@ -155,6 +155,47 @@ fn heterogeneous_sweep_plan() -> SweepPlan {
     plan
 }
 
+/// Scenario API v2 gate: the same matrix expressed through the builder
+/// and through a rendered-then-reparsed Sweep file is the *same plan* —
+/// byte-identical labels and a bit-identical report at 1/2/8 threads.
+/// This is what lets a committed Sweep file double as a regression gate.
+#[test]
+fn builder_and_sweep_file_paths_are_bit_identical() {
+    use ds_rs::scenario::SweepFile;
+    let plan = ds_rs::coordinator::sweep::SweepPlan::builder()
+        .config(cfg())
+        .jobs(JobSpec::plate("P1", 6, 2, vec![]))
+        .seeds(0..8)
+        .machines([2, 4])
+        // The builder inherits visibility from the config (like the
+        // CLI); the legacy struct literal used the fixed default.  Pin
+        // it so both plans describe the same matrix.
+        .visibilities([10 * MINUTE])
+        .models([DurationModel {
+            mean_s: 40.0,
+            cv: 0.3,
+            ..Default::default()
+        }])
+        .build()
+        .unwrap();
+    // The builder plan equals the hand-assembled legacy plan.
+    let legacy = sweep_plan();
+    let from_builder = run_sweep(&plan, 2).unwrap();
+    let from_legacy = run_sweep(&legacy, 2).unwrap();
+    assert_eq!(from_builder.report, from_legacy.report);
+    assert_eq!(from_builder.cells, from_legacy.cells);
+    // ...and survives the Sweep-file round trip at every thread count.
+    let reparsed = SweepFile::from_text(&SweepFile::render(&plan))
+        .unwrap()
+        .to_plan()
+        .unwrap();
+    let one = run_sweep(&reparsed, 1).unwrap();
+    let eight = run_sweep(&reparsed, 8).unwrap();
+    assert_eq!(one.report, from_builder.report);
+    assert_eq!(eight.report, from_builder.report);
+    assert_eq!(one.cells, from_builder.cells);
+}
+
 #[test]
 fn heterogeneous_sweep_identical_at_1_2_and_8_threads() {
     let plan = heterogeneous_sweep_plan();

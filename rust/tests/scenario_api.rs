@@ -1,0 +1,256 @@
+//! Scenario API v2 gates: the axis registry is the single source of
+//! truth, and every front door (builder, Sweep file, CLI flags) builds
+//! the same plan.
+//!
+//! Two properties matter:
+//!
+//! 1. **Round-trip**: builder → `SweepFile::render` → parse → the same
+//!    plan, down to a bit-identical `SweepReport` when executed.
+//! 2. **Consistency**: the set of registered flags == the flags in the
+//!    generated help == the keys a Sweep file accepts; nothing else
+//!    defines the sweep surface.
+
+use ds_rs::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
+use ds_rs::aws::s3::dataplane::NetProfile;
+use ds_rs::cli::Args;
+use ds_rs::config::JobSpec;
+use ds_rs::coordinator::sweep::{run_sweep, Scenario, SweepPlan};
+use ds_rs::scenario::{
+    plan_from_cli, render_flag_specs, run_flags, sweep_flags, Axis, SweepFile, AXES,
+};
+use ds_rs::sim::{SimRng, MINUTE};
+use ds_rs::testutil::forall_r;
+use ds_rs::workloads::DurationModel;
+
+fn cli(s: &str) -> Args {
+    Args::parse(s.split_whitespace().map(String::from))
+}
+
+/// A random small-but-varied plan touching every axis with some
+/// probability.  Kept tiny so the executed round-trip cases stay fast.
+fn random_plan(rng: &mut SimRng) -> SweepPlan {
+    let mut b = SweepPlan::builder()
+        .jobs(JobSpec::plate("P", 2, 1, vec![]))
+        .seeds((0..rng.range_u64(1, 3)).map(|i| rng.below(50) + i));
+    if rng.chance(0.7) {
+        b = b.machines((0..rng.range_u64(1, 3)).map(|_| rng.range_u64(1, 3) as u32));
+    }
+    if rng.chance(0.5) {
+        b = b.visibilities((0..rng.range_u64(1, 3)).map(|_| rng.range_u64(1, 12) * MINUTE));
+    }
+    if rng.chance(0.5) {
+        b = b.volatilities(vec![*rng.pick(&[
+            Volatility::Low,
+            Volatility::Medium,
+            Volatility::High,
+        ])]);
+    }
+    if rng.chance(0.5) {
+        b = b.allocations(vec![*rng.pick(&AllocationStrategy::ALL)]);
+    }
+    if rng.chance(0.4) {
+        let sets = vec![
+            Vec::new(),
+            vec![
+                InstanceSlot::new("m5.large"),
+                InstanceSlot {
+                    name: "c5.xlarge".into(),
+                    weight: rng.range_u64(1, 3) as u32,
+                },
+            ],
+        ];
+        b = b.instance_sets(sets);
+    }
+    if rng.chance(0.4) {
+        b = b.input_mbs(vec![0.0, rng.range_u64(1, 8) as f64]);
+    }
+    if rng.chance(0.4) {
+        b = b.net_profiles(vec![rng.pick(&NetProfile::ALL).clone()]);
+    }
+    if rng.chance(0.6) {
+        b = b.models(vec![DurationModel {
+            mean_s: rng.range_u64(10, 40) as f64,
+            cv: 0.2,
+            stall_prob: 0.0,
+            fail_prob: 0.0,
+        }]);
+    }
+    b.build().expect("builder plan")
+}
+
+fn labels(plan: &SweepPlan) -> Vec<String> {
+    plan.matrix.scenarios().iter().map(Scenario::label).collect()
+}
+
+#[test]
+fn prop_builder_renders_and_parses_to_the_same_plan() {
+    forall_r(
+        "sweep-file-round-trip",
+        40,
+        0x5EED,
+        |rng| {
+            let plan = random_plan(rng);
+            let text = SweepFile::render(&plan);
+            (plan, text)
+        },
+        |(plan, text)| {
+            let back = SweepFile::from_text(text)
+                .map_err(|e| format!("render did not parse: {e:#}"))?
+                .to_plan()
+                .map_err(|e| format!("parsed file did not plan: {e:#}"))?;
+            if back.base_cfg != plan.base_cfg {
+                return Err("config drifted through the file".into());
+            }
+            if back.jobs != plan.jobs {
+                return Err("jobs drifted through the file".into());
+            }
+            if back.fleet != plan.fleet {
+                return Err("fleet drifted through the file".into());
+            }
+            if back.matrix.seeds != plan.matrix.seeds {
+                return Err(format!(
+                    "seeds drifted: {:?} vs {:?}",
+                    plan.matrix.seeds, back.matrix.seeds
+                ));
+            }
+            if labels(&back) != labels(plan) {
+                return Err(format!(
+                    "scenario labels drifted:\n  {:?}\nvs\n  {:?}",
+                    labels(plan),
+                    labels(&back)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn round_tripped_plan_executes_bit_identically() {
+    // The expensive half of the property, on a few fixed cases: the
+    // re-parsed plan's SweepReport is bit-identical to the original's,
+    // at more than one thread count.
+    for seed in [1u64, 7, 23] {
+        let mut rng = SimRng::new(seed);
+        let plan = random_plan(&mut rng);
+        let back = SweepFile::from_text(&SweepFile::render(&plan))
+            .unwrap()
+            .to_plan()
+            .unwrap();
+        let a = run_sweep(&plan, 2).unwrap();
+        let b = run_sweep(&back, 2).unwrap();
+        assert_eq!(a.report, b.report, "case seed {seed}");
+        assert_eq!(a.cells, b.cells, "case seed {seed}");
+        let b1 = run_sweep(&back, 1).unwrap();
+        assert_eq!(a.report, b1.report, "case seed {seed} (1 thread)");
+    }
+}
+
+#[test]
+fn registered_flags_equal_help_equal_file_keys() {
+    let flags = sweep_flags();
+    // Every axis registers at least one flag carrying its file key.
+    for ax in AXES {
+        let spec = ax.flags()[0];
+        assert!(
+            flags.iter().any(|f| f.flag == spec.flag),
+            "axis {} missing from sweep_flags()",
+            ax.key()
+        );
+        assert_eq!(
+            spec.file_key,
+            Some(ax.key()),
+            "axis {} primary flag must carry its file key",
+            ax.key()
+        );
+    }
+    // The generated help documents exactly the registered flags.
+    let help = render_flag_specs(&flags);
+    for f in &flags {
+        assert!(
+            help.contains(&format!("--{}", f.flag)),
+            "--{} missing from generated help",
+            f.flag
+        );
+    }
+    // Every declared file key is accepted by the Sweep-file parser: a
+    // known key may fail on its *value*, but never as an unknown key.
+    for f in &flags {
+        let Some(key) = f.file_key else { continue };
+        let text = format!("{{\"{key}\": {{}}}}");
+        if let Err(e) = SweepFile::from_text(&text).and_then(|f| f.to_plan()) {
+            let msg = format!("{e:#}");
+            assert!(
+                !msg.contains("unknown key"),
+                "registered key {key} rejected as unknown: {msg}"
+            );
+        }
+    }
+    // And nothing outside the registry is accepted.
+    let err = SweepFile::from_text(r#"{"NOT_AN_AXIS": 1}"#).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown key"), "{err:#}");
+}
+
+#[test]
+fn run_flags_are_the_registry_subset_plus_run_only() {
+    let run = run_flags();
+    let sweep = sweep_flags();
+    // The shared axes appear in both tables with identical spelling.
+    for shared in ["volatility", "job-mean-s", "job-cv", "stall-prob", "fail-prob", "input-mb", "net-profile"] {
+        assert!(run.iter().any(|f| f.flag == shared), "run missing --{shared}");
+        assert!(sweep.iter().any(|f| f.flag == shared), "sweep missing --{shared}");
+    }
+    // Fleet-shaping axes stay sweep-only: a single run reads them from
+    // its Config/Fleet files.
+    for sweep_only in ["machines", "visibility-s", "allocation", "instance-types"] {
+        assert!(
+            !run.iter().any(|f| f.flag == sweep_only),
+            "--{sweep_only} must not leak into ds run"
+        );
+    }
+}
+
+#[test]
+fn cli_overrides_beat_file_keys_beat_defaults() {
+    let file = SweepFile::from_text(
+        r#"{"MACHINES": [2, 4], "VOLATILITY": ["high"], "SEEDS": 3, "WELLS": 2, "SITES": 1}"#,
+    )
+    .unwrap();
+    let plan = plan_from_cli(&cli("sweep --machines 8 --input-mb 16"), Some(&file)).unwrap();
+    // CLI wins where both spoke.
+    assert_eq!(plan.matrix.cluster_machines, vec![8]);
+    // File wins where only it spoke.
+    assert_eq!(plan.matrix.volatilities, vec![Volatility::High]);
+    assert_eq!(plan.matrix.seeds, vec![0, 1, 2]);
+    // CLI-only axes apply on top of the file.
+    assert_eq!(plan.matrix.input_mbs, vec![16.0]);
+    // Defaults fill the rest.
+    assert_eq!(plan.matrix.allocations, vec![AllocationStrategy::LowestPrice]);
+}
+
+#[test]
+fn cli_only_plan_matches_the_legacy_flag_surface() {
+    // The exact invocation shape PR 2/PR 3 documented, now resolved
+    // through the registry: same matrix, same labels.
+    let plan = plan_from_cli(
+        &cli(
+            "sweep --seeds 2 --machines 2,4 --visibility-s 120,600 --volatility low,medium \
+             --allocation lowest-price,diversified --instance-types m5.large+c5.xlarge:2 \
+             --input-mb 0,64 --net-profile standard,narrow --job-mean-s 90,240 --wells 2 --sites 1",
+        ),
+        None,
+    )
+    .unwrap();
+    let scs = plan.matrix.scenarios();
+    assert_eq!(scs.len(), 2 * 2 * 2 * 2 * 1 * 2 * 2 * 2);
+    assert_eq!(plan.matrix.cell_count(), scs.len() * 2);
+    assert_eq!(
+        scs[0].label(),
+        "m=2 vis=2.0m vol=low mean=90s alloc=lowest-price set=m5.large+c5.xlarge:2"
+    );
+    let last = scs.last().unwrap();
+    assert_eq!(
+        last.label(),
+        "m=4 vis=10.0m vol=medium mean=240s alloc=diversified set=m5.large+c5.xlarge:2 in=64MB net=narrow"
+    );
+}
