@@ -15,7 +15,7 @@ use std::collections::HashMap;
 use crate::sim::SimTime;
 
 use super::metrics::Metrics;
-use crate::aws::ec2::InstanceId;
+use crate::aws::ec2::{FleetId, InstanceId};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Comparison {
@@ -28,6 +28,23 @@ pub enum Comparison {
 pub enum AlarmAction {
     TerminateInstance(InstanceId),
     RebootInstance(InstanceId),
+    /// Grow the fleet per the monitor's scaling policy (the high
+    /// queue-backlog alarm of `coordinator::autoscale`).
+    ScaleOut(FleetId),
+    /// Shrink the fleet per the monitor's scaling policy (the low
+    /// queue-backlog alarm).
+    ScaleIn(FleetId),
+}
+
+impl AlarmAction {
+    /// Scaling actions re-fire on every breaching evaluation period
+    /// (AWS scaling policies keep acting while their alarm stays in
+    /// ALARM), unlike one-shot actions that fire only on the Ok→Alarm
+    /// transition.  The autoscale controller's cooldowns decide how
+    /// often the repeated signal actually moves the fleet.
+    fn refires(&self) -> bool {
+        matches!(self, AlarmAction::ScaleOut(_) | AlarmAction::ScaleIn(_))
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -158,7 +175,9 @@ impl Alarms {
                 };
                 if breaching {
                     a.breaching += 1;
-                    if a.breaching >= a.eval_periods && a.state == AlarmState::Ok {
+                    if a.breaching >= a.eval_periods
+                        && (a.state == AlarmState::Ok || a.action.refires())
+                    {
                         a.state = AlarmState::Alarm;
                         fired.push(a.action);
                     }
@@ -266,6 +285,36 @@ mod tests {
         assert_eq!(alarms.len(), 1);
         assert_eq!(alarms.delete_all(), 1);
         assert!(alarms.is_empty());
+    }
+
+    #[test]
+    fn scaling_alarms_refire_every_breaching_period() {
+        let mut alarms = Alarms::new();
+        let mut m = Metrics::new();
+        alarms.put_alarm(
+            "backlog-high",
+            "QueueBacklogPerUnit",
+            "queue:q",
+            Comparison::GreaterThan,
+            4.0,
+            MINUTE,
+            2,
+            AlarmAction::ScaleOut(1),
+            0,
+        );
+        for t in 0..6u64 {
+            m.put("QueueBacklogPerUnit", "queue:q", t * MINUTE + 1, 40.0);
+        }
+        // Sustained breach: fires at period 2 and on every period after,
+        // unlike a one-shot action (the cooldown throttles downstream).
+        assert!(alarms.evaluate(&m, MINUTE).is_empty());
+        assert_eq!(alarms.evaluate(&m, 2 * MINUTE), vec![AlarmAction::ScaleOut(1)]);
+        assert_eq!(alarms.evaluate(&m, 3 * MINUTE), vec![AlarmAction::ScaleOut(1)]);
+        // Recovery resets the streak like any alarm: periods 3..6 still
+        // breach (3 more fires), the 0.0 point at minute 6 ends it.
+        m.put("QueueBacklogPerUnit", "queue:q", 6 * MINUTE + 1, 0.0);
+        assert_eq!(alarms.evaluate(&m, 7 * MINUTE).len(), 3);
+        assert_eq!(alarms.get("backlog-high").unwrap().state, AlarmState::Ok);
     }
 
     #[test]

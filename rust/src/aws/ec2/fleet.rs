@@ -494,6 +494,35 @@ impl Ec2 {
         killed
     }
 
+    /// Raise an active fleet's requested capacity to `new_target` and
+    /// immediately fill the deficit through the fleet's existing
+    /// [`AllocationStrategy`] (weighted pools, on-demand base) — the
+    /// scale-out half of the elastic loop, the inverse of
+    /// [`scale_in`](Self::scale_in)'s cheapest-pool-last termination.
+    /// Launches appear in the returned events exactly as an
+    /// [`evaluate_fleets`](Self::evaluate_fleets) pass would report
+    /// them; pools that are priced out or drained leave a
+    /// [`FleetEvent::CapacityUnavailable`] residue and the regular
+    /// per-minute evaluation keeps retrying toward the raised target.
+    /// No-op (empty events) for cancelled fleets or non-raising targets.
+    pub fn scale_out(
+        &mut self,
+        fleet: FleetId,
+        new_target: u32,
+        now: SimTime,
+    ) -> Vec<FleetEvent> {
+        let mut events = Vec::new();
+        let Some(f) = self.fleets.get(&fleet) else {
+            return events;
+        };
+        if f.state != FleetState::Active || new_target <= f.spec.target_capacity {
+            return events;
+        }
+        self.modify_target(fleet, new_target);
+        self.fulfill(fleet, now, &mut events);
+        events
+    }
+
     /// CancelSpotFleetRequests with TerminateInstances: end of run.
     pub fn cancel_fleet(&mut self, fleet: FleetId, now: SimTime) -> Vec<InstanceId> {
         let Some(f) = self.fleets.get_mut(&fleet) else {
@@ -677,165 +706,174 @@ impl Ec2 {
             v
         };
         for fid in fleet_ids {
-            let (target, bid, slots, allocation, od_base) = {
-                let f = &self.fleets[&fid];
-                (
-                    f.spec.target_capacity,
-                    f.spec.bid_hourly,
-                    f.spec.slots.clone(),
-                    f.spec.allocation,
-                    f.spec.on_demand_base,
-                )
-            };
-            // Distinct pools in slot order (first occurrence's weight wins).
-            let mut pools_spec: Vec<InstanceSlot> = Vec::new();
-            for s in slots {
-                if !pools_spec.iter().any(|p| p.name == s.name) {
-                    pools_spec.push(s);
-                }
-            }
+            self.fulfill(fid, now, &mut events);
+        }
+        events
+    }
 
-            // 2a. On-demand base floor: fill from the cheapest per-unit
-            //     on-demand pool; capacity is unconstrained.
-            let od_floor = od_base.min(target);
-            let od_active = self.active_weight_of(fid, Lifecycle::OnDemand);
-            if od_active < od_floor {
-                let mut od_deficit = od_floor - od_active;
-                let pick = pools_spec
-                    .iter()
-                    .min_by(|a, b| {
-                        let pa = per_unit(
-                            instance_type(&a.name).unwrap().on_demand_hourly,
-                            a.weight,
-                        );
-                        let pb = per_unit(
-                            instance_type(&b.name).unwrap().on_demand_hourly,
-                            b.weight,
-                        );
-                        pa.partial_cmp(&pb).unwrap().then(a.name.cmp(&b.name))
-                    })
-                    .cloned();
-                if let Some(slot) = pick {
-                    let ty = instance_type(&slot.name).unwrap();
-                    while od_deficit > 0 {
-                        self.launch(
-                            fid,
-                            ty.name,
-                            slot.weight,
-                            bid,
-                            Lifecycle::OnDemand,
-                            ty.on_demand_hourly,
-                            now,
-                            &mut events,
-                        );
-                        od_deficit = od_deficit.saturating_sub(slot.weight);
-                    }
-                }
+    /// Fill one active fleet's weighted deficit: the on-demand base
+    /// floor first, then the spot deficit per the fleet's
+    /// [`AllocationStrategy`].  Shared by the per-minute
+    /// [`evaluate_fleets`](Self::evaluate_fleets) pass and the
+    /// mid-run [`scale_out`](Self::scale_out) path, so elastic
+    /// capacity launches into exactly the same pools a fresh fleet
+    /// would.
+    fn fulfill(&mut self, fid: FleetId, now: SimTime, events: &mut Vec<FleetEvent>) {
+        let (target, bid, slots, allocation, od_base) = {
+            let f = &self.fleets[&fid];
+            (
+                f.spec.target_capacity,
+                f.spec.bid_hourly,
+                f.spec.slots.clone(),
+                f.spec.allocation,
+                f.spec.on_demand_base,
+            )
+        };
+        // Distinct pools in slot order (first occurrence's weight wins).
+        let mut pools_spec: Vec<InstanceSlot> = Vec::new();
+        for s in slots {
+            if !pools_spec.iter().any(|p| p.name == s.name) {
+                pools_spec.push(s);
             }
+        }
 
-            // 2b. Spot deficit per the allocation strategy.
-            let active = self.active_weight(fid);
-            if active >= target {
-                continue;
-            }
-            let mut deficit = target - active;
-            struct Pool {
-                name: &'static str,
-                weight: u32,
-                price: f64,
-                free: u32,
-            }
-            let mut pools: Vec<Pool> = pools_spec
+        // 2a. On-demand base floor: fill from the cheapest per-unit
+        //     on-demand pool; capacity is unconstrained.
+        let od_floor = od_base.min(target);
+        let od_active = self.active_weight_of(fid, Lifecycle::OnDemand);
+        if od_active < od_floor {
+            let mut od_deficit = od_floor - od_active;
+            let pick = pools_spec
                 .iter()
-                .filter_map(|s| {
-                    let ty = instance_type(&s.name)?;
-                    let snap = self.market.snapshot(ty.name, now);
-                    (snap.price <= bid * f64::from(s.weight) && snap.free > 0).then_some(
-                        Pool {
-                            name: ty.name,
-                            weight: s.weight,
-                            price: snap.price,
-                            free: snap.free,
-                        },
-                    )
+                .min_by(|a, b| {
+                    let pa = per_unit(
+                        instance_type(&a.name).unwrap().on_demand_hourly,
+                        a.weight,
+                    );
+                    let pb = per_unit(
+                        instance_type(&b.name).unwrap().on_demand_hourly,
+                        b.weight,
+                    );
+                    pa.partial_cmp(&pb).unwrap().then(a.name.cmp(&b.name))
                 })
-                .collect();
-            match allocation {
-                AllocationStrategy::LowestPrice => pools.sort_by(|a, b| {
-                    per_unit(a.price, a.weight)
-                        .partial_cmp(&per_unit(b.price, b.weight))
-                        .unwrap()
-                        .then(a.name.cmp(b.name))
-                }),
-                AllocationStrategy::CapacityOptimized => pools.sort_by(|a, b| {
-                    b.free
-                        .cmp(&a.free)
-                        .then(
-                            per_unit(a.price, a.weight)
-                                .partial_cmp(&per_unit(b.price, b.weight))
-                                .unwrap(),
-                        )
-                        .then(a.name.cmp(b.name))
-                }),
-                // Diversified keeps slot order and spreads below.
-                AllocationStrategy::Diversified => {}
-            }
-            if allocation == AllocationStrategy::Diversified {
-                let mut progressed = true;
-                while deficit > 0 && progressed {
-                    progressed = false;
-                    for p in pools.iter_mut() {
-                        if deficit == 0 {
-                            break;
-                        }
-                        if p.free == 0 {
-                            continue;
-                        }
-                        p.free -= 1;
-                        self.launch(
-                            fid,
-                            p.name,
-                            p.weight,
-                            bid,
-                            Lifecycle::Spot,
-                            p.price,
-                            now,
-                            &mut events,
-                        );
-                        deficit = deficit.saturating_sub(p.weight);
-                        progressed = true;
-                    }
+                .cloned();
+            if let Some(slot) = pick {
+                let ty = instance_type(&slot.name).unwrap();
+                while od_deficit > 0 {
+                    self.launch(
+                        fid,
+                        ty.name,
+                        slot.weight,
+                        bid,
+                        Lifecycle::OnDemand,
+                        ty.on_demand_hourly,
+                        now,
+                        events,
+                    );
+                    od_deficit = od_deficit.saturating_sub(slot.weight);
                 }
-            } else {
-                for p in &pools {
+            }
+        }
+
+        // 2b. Spot deficit per the allocation strategy.
+        let active = self.active_weight(fid);
+        if active >= target {
+            return;
+        }
+        let mut deficit = target - active;
+        struct Pool {
+            name: &'static str,
+            weight: u32,
+            price: f64,
+            free: u32,
+        }
+        let mut pools: Vec<Pool> = pools_spec
+            .iter()
+            .filter_map(|s| {
+                let ty = instance_type(&s.name)?;
+                let snap = self.market.snapshot(ty.name, now);
+                (snap.price <= bid * f64::from(s.weight) && snap.free > 0).then_some(Pool {
+                    name: ty.name,
+                    weight: s.weight,
+                    price: snap.price,
+                    free: snap.free,
+                })
+            })
+            .collect();
+        match allocation {
+            AllocationStrategy::LowestPrice => pools.sort_by(|a, b| {
+                per_unit(a.price, a.weight)
+                    .partial_cmp(&per_unit(b.price, b.weight))
+                    .unwrap()
+                    .then(a.name.cmp(b.name))
+            }),
+            AllocationStrategy::CapacityOptimized => pools.sort_by(|a, b| {
+                b.free
+                    .cmp(&a.free)
+                    .then(
+                        per_unit(a.price, a.weight)
+                            .partial_cmp(&per_unit(b.price, b.weight))
+                            .unwrap(),
+                    )
+                    .then(a.name.cmp(b.name))
+            }),
+            // Diversified keeps slot order and spreads below.
+            AllocationStrategy::Diversified => {}
+        }
+        if allocation == AllocationStrategy::Diversified {
+            let mut progressed = true;
+            while deficit > 0 && progressed {
+                progressed = false;
+                for p in pools.iter_mut() {
                     if deficit == 0 {
                         break;
                     }
-                    let need = (deficit + p.weight - 1) / p.weight;
-                    let take = need.min(p.free);
-                    for _ in 0..take {
-                        self.launch(
-                            fid,
-                            p.name,
-                            p.weight,
-                            bid,
-                            Lifecycle::Spot,
-                            p.price,
-                            now,
-                            &mut events,
-                        );
+                    if p.free == 0 {
+                        continue;
                     }
-                    deficit = deficit.saturating_sub(take * p.weight);
+                    p.free -= 1;
+                    self.launch(
+                        fid,
+                        p.name,
+                        p.weight,
+                        bid,
+                        Lifecycle::Spot,
+                        p.price,
+                        now,
+                        events,
+                    );
+                    deficit = deficit.saturating_sub(p.weight);
+                    progressed = true;
                 }
             }
-            if deficit > 0 {
-                events.push(FleetEvent::CapacityUnavailable {
-                    fleet: fid,
-                    missing: deficit,
-                });
+        } else {
+            for p in &pools {
+                if deficit == 0 {
+                    break;
+                }
+                let need = (deficit + p.weight - 1) / p.weight;
+                let take = need.min(p.free);
+                for _ in 0..take {
+                    self.launch(
+                        fid,
+                        p.name,
+                        p.weight,
+                        bid,
+                        Lifecycle::Spot,
+                        p.price,
+                        now,
+                        events,
+                    );
+                }
+                deficit = deficit.saturating_sub(take * p.weight);
             }
         }
-        events
+        if deficit > 0 {
+            events.push(FleetEvent::CapacityUnavailable {
+                fleet: fid,
+                missing: deficit,
+            });
+        }
     }
 
     /// Boot complete: Pending → Running.  No-op if it died while booting.
@@ -1397,6 +1435,84 @@ mod tests {
         // Requested capacity follows the survivors: no relaunch.
         assert_eq!(e.fleet_target(fid), 6);
         assert!(e.evaluate_fleets(6 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn scale_out_launches_mid_run_via_allocation_strategy() {
+        let mut e = ec2(Volatility::Low, 37);
+        let fid = e.request_spot_fleet(SpotFleetSpec {
+            target_capacity: 2,
+            bid_hourly: 0.50,
+            slots: vec![
+                InstanceSlot::new("m5.large"),
+                InstanceSlot::new("c5.xlarge"),
+            ],
+            allocation: AllocationStrategy::Diversified,
+            ..Default::default()
+        });
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        assert_eq!(e.active_weight(fid), 2);
+        // Mid-run scale-out: launches immediately, diversified across
+        // both pools, without waiting for the next evaluation tick.
+        let evs = e.scale_out(fid, 6, 5 * MINUTE);
+        assert_eq!(
+            evs.iter()
+                .filter(|ev| matches!(ev, FleetEvent::InstanceRequested { .. }))
+                .count(),
+            4
+        );
+        assert_eq!(e.fleet_target(fid), 6);
+        assert_eq!(e.active_weight(fid), 6);
+        assert_eq!(count_by_type(&e, "m5.large"), 3);
+        assert_eq!(count_by_type(&e, "c5.xlarge"), 3);
+        // Settled: the next tick neither launches nor interrupts.
+        assert!(e.evaluate_fleets(6 * MINUTE).is_empty());
+    }
+
+    #[test]
+    fn scale_out_is_a_noop_when_not_raising() {
+        let mut e = ec2(Volatility::Low, 39);
+        let fid = e.request_spot_fleet(spec(4, 0.09));
+        e.evaluate_fleets(0);
+        assert!(e.scale_out(fid, 4, MINUTE).is_empty(), "same target");
+        assert!(e.scale_out(fid, 2, MINUTE).is_empty(), "lower target");
+        assert_eq!(e.fleet_target(fid), 4, "target untouched");
+        assert!(e.scale_out(999, 8, MINUTE).is_empty(), "unknown fleet");
+        e.cancel_fleet(fid, 2 * MINUTE);
+        assert!(e.scale_out(fid, 8, 3 * MINUTE).is_empty(), "cancelled fleet");
+    }
+
+    #[test]
+    fn scale_out_reports_unavailable_capacity_and_retries() {
+        // A hopeless bid: the raised target is remembered and the next
+        // evaluation keeps trying (the fleet replaces toward target).
+        let mut e = ec2(Volatility::Low, 41);
+        let fid = e.request_spot_fleet(spec(1, 0.09));
+        e.evaluate_fleets(0);
+        // Drop the bid below the market, then scale out.
+        if let Some(f) = e.fleets.get_mut(&fid) {
+            f.spec.bid_hourly = 0.001;
+        }
+        let evs = e.scale_out(fid, 3, MINUTE);
+        assert!(matches!(
+            evs.as_slice(),
+            [FleetEvent::CapacityUnavailable { missing: 2, .. }]
+        ));
+        assert_eq!(e.fleet_target(fid), 3);
+        // Market recovers (bid restored): the regular tick fulfills.
+        if let Some(f) = e.fleets.get_mut(&fid) {
+            f.spec.bid_hourly = 0.09;
+        }
+        let evs = e.evaluate_fleets(2 * MINUTE);
+        assert_eq!(
+            evs.iter()
+                .filter(|ev| matches!(ev, FleetEvent::InstanceRequested { .. }))
+                .count(),
+            2
+        );
     }
 
     #[test]

@@ -305,6 +305,24 @@ impl Sqs {
         }
     }
 
+    /// ApproximateAgeOfOldestMessage: age of the oldest not-yet-deleted
+    /// message (visible or in flight), in sim-time ms.  0 for an empty
+    /// or missing queue.  One of the SQS metrics the monitor publishes
+    /// for the autoscaling alarms.
+    pub fn oldest_message_age(&mut self, name: &str, now: SimTime) -> SimTime {
+        self.run_expiry(name, now);
+        let Some(q) = self.queues.get(name) else {
+            return 0;
+        };
+        q.visible
+            .iter()
+            .map(|m| m.first_enqueued)
+            .chain(q.in_flight.values().map(|f| f.msg.first_enqueued))
+            .min()
+            .map(|t| now.saturating_sub(t))
+            .unwrap_or(0)
+    }
+
     /// Earliest time at which an in-flight message may become visible
     /// again (drives lazy event scheduling in the coordinator).
     pub fn next_visibility_change(&self, name: &str) -> Option<SimTime> {
@@ -441,6 +459,21 @@ mod tests {
         let _ = s.receive("jobs", 0).unwrap();
         let _ = s.receive("jobs", 10 * SECOND).unwrap();
         assert_eq!(s.next_visibility_change("jobs"), Some(MINUTE));
+    }
+
+    #[test]
+    fn oldest_message_age_tracks_head_of_line() {
+        let mut s = sqs_with_queue(MINUTE);
+        assert_eq!(s.oldest_message_age("jobs", 5 * MINUTE), 0);
+        assert_eq!(s.oldest_message_age("nope", 5 * MINUTE), 0);
+        s.send("jobs", "a", MINUTE).unwrap();
+        s.send("jobs", "b", 2 * MINUTE).unwrap();
+        assert_eq!(s.oldest_message_age("jobs", 3 * MINUTE), 2 * MINUTE);
+        // In-flight messages still count (they are not deleted).
+        let (_, h) = s.receive("jobs", 3 * MINUTE).unwrap().unwrap();
+        assert_eq!(s.oldest_message_age("jobs", 3 * MINUTE), 2 * MINUTE);
+        s.delete("jobs", h, 3 * MINUTE).unwrap();
+        assert_eq!(s.oldest_message_age("jobs", 3 * MINUTE), MINUTE);
     }
 
     #[test]

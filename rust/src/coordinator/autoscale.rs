@@ -1,0 +1,732 @@
+//! Closed-loop elastic autoscaling: alarm-driven scaling policies over
+//! the SQS backlog (DESIGN.md §8).
+//!
+//! The paper's monitor only ever *shrinks* a fleet; this module closes
+//! the loop in both directions, the way AWS Application Auto Scaling
+//! does it:
+//!
+//! 1. Every monitor tick publishes the queue's SQS metrics — visible
+//!    depth, in-flight count, oldest-message age, and the derived
+//!    backlog-per-capacity-unit — to CloudWatch.
+//! 2. Two CloudWatch alarms watch the backlog-per-unit series: a *high*
+//!    alarm (backlog per unit above the policy target) whose action is
+//!    [`AlarmAction::ScaleOut`], and a *low* alarm (below half the
+//!    target) whose action is [`AlarmAction::ScaleIn`].  Scaling alarms
+//!    re-fire on every breaching evaluation period, so a sustained
+//!    breach keeps signalling; the controller's cooldowns decide how
+//!    often the fleet actually moves.
+//! 3. The per-minute alarm evaluation delivers those actions to the
+//!    monitor, and on its tick the [`AutoscaleState`] controller turns
+//!    the pending signals into one bounded, cooldown-gated capacity
+//!    decision: [`Ec2::scale_out`](crate::aws::ec2::Ec2::scale_out)
+//!    launches the deficit into the fleet's existing allocation
+//!    strategy mid-run, and
+//!    [`Ec2::scale_in`](crate::aws::ec2::Ec2::scale_in) terminates the
+//!    surplus cheapest-pool-last, exactly like the queue-downscale
+//!    path.
+//!
+//! Everything is a pure function of the queue counters and the policy,
+//! so scaled runs replay bit-identically and sweeps over scaling axes
+//! stay thread-count invariant (`rust/tests/autoscale.rs` pins both).
+
+use crate::aws::cloudwatch::alarms::Alarms;
+use crate::aws::cloudwatch::{AlarmAction, Comparison};
+use crate::aws::cloudwatch::metrics::Metrics;
+use crate::aws::ec2::{FleetEvent, FleetId};
+use crate::aws::AwsAccount;
+use crate::config::AppConfig;
+use crate::sim::clock::{SimTime, HOUR, MINUTE};
+
+/// Metric names the monitor publishes for the scaling alarms (the SQS
+/// CloudWatch names, plus the derived backlog-per-unit series the
+/// policies actually track).
+pub const VISIBLE_METRIC: &str = "ApproximateNumberOfMessagesVisible";
+pub const IN_FLIGHT_METRIC: &str = "ApproximateNumberOfMessagesNotVisible";
+pub const OLDEST_AGE_METRIC: &str = "ApproximateAgeOfOldestMessage";
+pub const BACKLOG_METRIC: &str = "QueueBacklogPerUnit";
+
+/// Which scaling policy a scenario runs (the `--scaling` axis).  `None`
+/// is the paper's fixed fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ScalingMode {
+    #[default]
+    None,
+    TargetTracking,
+    Step,
+}
+
+impl ScalingMode {
+    /// All modes, in a stable order (the sweep axis iterates this).
+    pub const ALL: [ScalingMode; 3] = [
+        ScalingMode::None,
+        ScalingMode::TargetTracking,
+        ScalingMode::Step,
+    ];
+
+    /// Stable kebab-case name (config-file and CLI syntax).
+    pub fn name(self) -> &'static str {
+        match self {
+            ScalingMode::None => "none",
+            ScalingMode::TargetTracking => "target-tracking",
+            ScalingMode::Step => "step",
+        }
+    }
+
+    /// Inverse of [`name`](Self::name).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// The canonical policy for this mode at a given backlog target
+    /// (`None` for the fixed fleet).
+    pub fn policy(self, target_per_unit: f64) -> Option<ScalingPolicy> {
+        match self {
+            ScalingMode::None => None,
+            ScalingMode::TargetTracking => Some(ScalingPolicy::target_tracking(target_per_unit)),
+            ScalingMode::Step => Some(ScalingPolicy::step(target_per_unit)),
+        }
+    }
+}
+
+/// Capacity bounds and rate limits shared by every policy kind.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingLimits {
+    /// Lowest target capacity the controller will ever request, >= 1.
+    pub min_capacity: u32,
+    /// Highest target capacity; 0 means "inherit the fleet's initial
+    /// target" (resolved when the controller engages).
+    pub max_capacity: u32,
+    /// Minimum spacing between two applied scale-outs.
+    pub scale_out_cooldown: SimTime,
+    /// Minimum spacing between two applied scale-ins.
+    pub scale_in_cooldown: SimTime,
+    /// No scale-in within this window after engagement or after a
+    /// scale-out: freshly requested capacity gets a chance to chew the
+    /// backlog before the controller shrinks it again.
+    pub warmup: SimTime,
+}
+
+impl Default for ScalingLimits {
+    fn default() -> Self {
+        Self {
+            min_capacity: 1,
+            max_capacity: 0,
+            scale_out_cooldown: 2 * MINUTE,
+            scale_in_cooldown: 5 * MINUTE,
+            warmup: 5 * MINUTE,
+        }
+    }
+}
+
+/// One step-scaling band: when the breach ratio (backlog-per-unit over
+/// the target, for scale-out; under it, for scale-in) crosses `breach`,
+/// adjust capacity by `delta` units.  The deepest crossed band wins.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepRule {
+    /// Breach ratio threshold: multiples of the target for scale-out
+    /// bands (>= 1.0), fractions of it for scale-in bands (<= 1.0).
+    pub breach: f64,
+    /// Capacity units added (scale-out) or removed (scale-in).
+    pub delta: u32,
+}
+
+/// How the controller computes a new capacity from the backlog.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyKind {
+    /// Hold backlog-per-unit near the target: on a scale-out signal the
+    /// capacity jumps straight to `ceil(backlog / target)`; on a
+    /// scale-in signal it drops straight to the same figure.  One
+    /// decision per breach episode usually suffices.
+    TargetTracking,
+    /// Classic breach-band steps: ± a fixed unit delta per band, so
+    /// capacity ramps instead of jumping.
+    Step {
+        steps_out: Vec<StepRule>,
+        steps_in: Vec<StepRule>,
+    },
+}
+
+/// A typed scaling policy: what `--scaling` / `RunOptions::scaling`
+/// carries and the [`AutoscaleState`] controller executes.
+///
+/// ```
+/// use ds_rs::coordinator::autoscale::ScalingPolicy;
+///
+/// // Hold ~4 queued jobs per capacity unit.
+/// let p = ScalingPolicy::target_tracking(4.0);
+/// // 40 jobs of backlog on 2 units -> jump to ceil(40/4) = 10 units.
+/// assert_eq!(p.desired_out(2, 40), 10);
+/// // Empty queue -> fall to the floor (min_capacity, default 1).
+/// assert_eq!(p.desired_in(10, 0), 1);
+///
+/// // Step scaling ramps instead of jumping.
+/// let p = ScalingPolicy::step(4.0);
+/// assert_eq!(p.desired_out(2, 40), 6); // 5x breach: deepest band, +4
+/// assert_eq!(p.desired_in(10, 0), 8); // deepest in-band, -2
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingPolicy {
+    pub kind: PolicyKind,
+    /// Desired backlog (visible + in-flight messages) per weighted
+    /// capacity unit.  The scale-out alarm breaches above this; the
+    /// scale-in alarm breaches below [`Self::scale_in_threshold`].
+    pub target_per_unit: f64,
+    pub limits: ScalingLimits,
+}
+
+/// Default `--scaling-target` when only `--scaling` is given.
+pub const DEFAULT_TARGET_PER_UNIT: f64 = 4.0;
+
+/// Evaluation periods before the high (scale-out) alarm fires.
+const OUT_EVAL_PERIODS: u32 = 1;
+/// Evaluation periods before the low (scale-in) alarm fires — scale-in
+/// is deliberately more patient than scale-out.
+const IN_EVAL_PERIODS: u32 = 3;
+
+impl ScalingPolicy {
+    /// Target-tracking with default limits.
+    pub fn target_tracking(target_per_unit: f64) -> Self {
+        Self {
+            kind: PolicyKind::TargetTracking,
+            target_per_unit,
+            limits: ScalingLimits::default(),
+        }
+    }
+
+    /// Step scaling with the canonical bands: +1 unit at 1x the target,
+    /// +2 at 2x, +4 at 3x; -1 unit below 0.5x, -2 below 0.25x.
+    pub fn step(target_per_unit: f64) -> Self {
+        Self {
+            kind: PolicyKind::Step {
+                steps_out: vec![
+                    StepRule { breach: 1.0, delta: 1 },
+                    StepRule { breach: 2.0, delta: 2 },
+                    StepRule { breach: 3.0, delta: 4 },
+                ],
+                steps_in: vec![
+                    StepRule { breach: 0.5, delta: 1 },
+                    StepRule { breach: 0.25, delta: 2 },
+                ],
+            },
+            target_per_unit,
+            limits: ScalingLimits::default(),
+        }
+    }
+
+    /// The mode this policy implements.
+    pub fn mode(&self) -> ScalingMode {
+        match self.kind {
+            PolicyKind::TargetTracking => ScalingMode::TargetTracking,
+            PolicyKind::Step { .. } => ScalingMode::Step,
+        }
+    }
+
+    /// Stable policy name (reports, labels).
+    pub fn name(&self) -> &'static str {
+        self.mode().name()
+    }
+
+    /// Backlog-per-unit below which the scale-in alarm breaches.
+    pub fn scale_in_threshold(&self) -> f64 {
+        self.target_per_unit * 0.5
+    }
+
+    fn effective_max(&self) -> u32 {
+        if self.limits.max_capacity == 0 {
+            u32::MAX
+        } else {
+            self.limits.max_capacity
+        }
+    }
+
+    fn clamp(&self, cap: u32) -> u32 {
+        // A floor above the ceiling (possible on a hand-built policy
+        // before the controller normalizes it) collapses to the ceiling
+        // rather than panicking in `u32::clamp`.
+        let hi = self.effective_max();
+        cap.clamp(self.limits.min_capacity.max(1).min(hi), hi)
+    }
+
+    /// Capacity a scale-out signal requests, given the current target
+    /// and the queue backlog.  Never below `current`, always within
+    /// `[min_capacity, max_capacity]`.
+    pub fn desired_out(&self, current: u32, backlog: u64) -> u32 {
+        let raw = match &self.kind {
+            PolicyKind::TargetTracking => units_for(backlog, self.target_per_unit),
+            PolicyKind::Step { steps_out, .. } => {
+                let ratio = backlog_per_unit(backlog, current)
+                    / self.target_per_unit.max(f64::MIN_POSITIVE);
+                let delta = steps_out
+                    .iter()
+                    .filter(|r| ratio >= r.breach)
+                    .map(|r| r.delta)
+                    .max()
+                    .unwrap_or(0);
+                current.saturating_add(delta)
+            }
+        };
+        self.clamp(raw.max(current.min(self.effective_max())))
+    }
+
+    /// Capacity a scale-in signal requests.  Never above `current`,
+    /// always within `[min_capacity, max_capacity]`.
+    pub fn desired_in(&self, current: u32, backlog: u64) -> u32 {
+        let raw = match &self.kind {
+            PolicyKind::TargetTracking => units_for(backlog, self.target_per_unit),
+            PolicyKind::Step { steps_in, .. } => {
+                let ratio = backlog_per_unit(backlog, current)
+                    / self.target_per_unit.max(f64::MIN_POSITIVE);
+                let delta = steps_in
+                    .iter()
+                    .filter(|r| ratio <= r.breach)
+                    .map(|r| r.delta)
+                    .max()
+                    .unwrap_or(0);
+                current.saturating_sub(delta)
+            }
+        };
+        self.clamp(raw.min(current.max(self.limits.min_capacity)))
+    }
+}
+
+/// Tear down the account-side residue of terminated instances: ECS
+/// registration and their CloudWatch metric series.  Shared by every
+/// scale-in authority (the autoscale controller here, the monitor's
+/// queue-downscale), so what a terminated machine leaves behind cannot
+/// diverge between paths.
+pub(crate) fn deregister_killed(acct: &mut AwsAccount, killed: &[crate::aws::ec2::InstanceId]) {
+    for id in killed {
+        acct.ecs.deregister_instance(*id);
+        acct.metrics.drop_dimension(&format!("i-{id}"));
+    }
+}
+
+/// Units needed to hold `backlog` at `target` backlog-per-unit
+/// (`ceil(backlog / target)`, at least 1-unit granularity).
+fn units_for(backlog: u64, target: f64) -> u32 {
+    if backlog == 0 {
+        return 0;
+    }
+    let units = (backlog as f64 / target.max(f64::MIN_POSITIVE)).ceil();
+    if units >= u32::MAX as f64 {
+        u32::MAX
+    } else {
+        units as u32
+    }
+}
+
+fn backlog_per_unit(backlog: u64, units: u32) -> f64 {
+    backlog as f64 / f64::from(units.max(1))
+}
+
+/// One applied capacity mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingDecision {
+    pub at: SimTime,
+    /// Target capacity before and after (weighted units).
+    pub from: u32,
+    pub to: u32,
+    /// Queue backlog (visible + in-flight) at decision time.
+    pub backlog: u64,
+}
+
+/// The scaling slice of a run report, the elasticity analog of
+/// [`PoolBreakdown`](crate::aws::ec2::PoolBreakdown) /
+/// [`DataBreakdown`](crate::aws::billing::DataBreakdown): what the
+/// control loop decided and what it cost in capacity.  Threads
+/// `RunReport` → `ScenarioSummary` → sweep JSON.  Cross-seed summaries
+/// sum the counters and drop the per-decision `timeline` (it is
+/// per-run evidence, not an aggregate).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScalingBreakdown {
+    /// Policy name: `"none"` (fixed fleet), `"target-tracking"`, or
+    /// `"step"`.
+    pub policy: String,
+    /// Applied capacity mutations (scale-outs + scale-ins).
+    pub decisions: u64,
+    pub scale_outs: u64,
+    pub scale_ins: u64,
+    /// Weighted units of capacity added by scale-outs (target deltas).
+    pub units_launched: u64,
+    /// Weighted units released by scale-ins (target deltas).
+    pub units_terminated: u64,
+    /// Highest target capacity held.
+    pub peak_capacity: u32,
+    /// Lowest target capacity held.
+    pub floor_capacity: u32,
+    /// Time-at-capacity: the integral of the target capacity over the
+    /// engaged window, in unit-hours — what elasticity actually saves.
+    pub capacity_unit_hours: f64,
+    /// The capacity timeline, one entry per applied decision.  Empty in
+    /// cross-seed summaries.
+    pub timeline: Vec<ScalingDecision>,
+}
+
+impl Default for ScalingBreakdown {
+    fn default() -> Self {
+        Self {
+            policy: "none".to_string(),
+            decisions: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            units_launched: 0,
+            units_terminated: 0,
+            peak_capacity: 0,
+            floor_capacity: 0,
+            capacity_unit_hours: 0.0,
+            timeline: Vec::new(),
+        }
+    }
+}
+
+/// The controller: owns one policy, one fleet, the pending alarm
+/// signals, and the decision accounting.  Lives inside
+/// [`MonitorState`](super::monitor::MonitorState).
+#[derive(Debug)]
+pub struct AutoscaleState {
+    pub policy: ScalingPolicy,
+    fleet: FleetId,
+    engaged_at: SimTime,
+    last_out: Option<SimTime>,
+    last_in: Option<SimTime>,
+    pending_out: bool,
+    pending_in: bool,
+    timeline: Vec<ScalingDecision>,
+    units_launched: u64,
+    units_terminated: u64,
+    peak: u32,
+    floor: u32,
+    /// Capacity integral bookkeeping: target held since `cap_since`.
+    cap_now: u32,
+    cap_since: SimTime,
+    unit_ms: f64,
+}
+
+impl AutoscaleState {
+    /// Engage a policy on a fleet whose current requested capacity is
+    /// `initial_capacity`.  A zero `max_capacity` resolves to it, so
+    /// the config's `CLUSTER_MACHINES` doubles as the elastic ceiling.
+    pub fn new(
+        mut policy: ScalingPolicy,
+        fleet: FleetId,
+        initial_capacity: u32,
+        now: SimTime,
+    ) -> Self {
+        if policy.limits.max_capacity == 0 {
+            policy.limits.max_capacity = initial_capacity.max(1);
+        }
+        policy.limits.min_capacity = policy
+            .limits
+            .min_capacity
+            .max(1)
+            .min(policy.limits.max_capacity);
+        Self {
+            policy,
+            fleet,
+            engaged_at: now,
+            last_out: None,
+            last_in: None,
+            pending_out: false,
+            pending_in: false,
+            timeline: Vec::new(),
+            units_launched: 0,
+            units_terminated: 0,
+            peak: initial_capacity,
+            floor: initial_capacity,
+            cap_now: initial_capacity,
+            cap_since: now,
+            unit_ms: 0.0,
+        }
+    }
+
+    /// The two alarm names this controller owns.
+    pub fn alarm_names(cfg: &AppConfig) -> (String, String) {
+        (
+            format!("{}_backlog_high", cfg.app_name),
+            format!("{}_backlog_low", cfg.app_name),
+        )
+    }
+
+    fn queue_dimension(cfg: &AppConfig) -> String {
+        format!("queue:{}", cfg.sqs_queue_name)
+    }
+
+    /// Place the high/low backlog alarms (idempotent by name).
+    pub fn arm(&self, alarms: &mut Alarms, cfg: &AppConfig, now: SimTime) {
+        let (high, low) = Self::alarm_names(cfg);
+        let dim = Self::queue_dimension(cfg);
+        alarms.put_alarm(
+            &high,
+            BACKLOG_METRIC,
+            &dim,
+            Comparison::GreaterThan,
+            self.policy.target_per_unit,
+            MINUTE,
+            OUT_EVAL_PERIODS,
+            AlarmAction::ScaleOut(self.fleet),
+            now,
+        );
+        alarms.put_alarm(
+            &low,
+            BACKLOG_METRIC,
+            &dim,
+            Comparison::LessThan,
+            self.policy.scale_in_threshold(),
+            MINUTE,
+            IN_EVAL_PERIODS,
+            AlarmAction::ScaleIn(self.fleet),
+            now,
+        );
+    }
+
+    /// Record an alarm action addressed to this controller's fleet.
+    /// Returns whether the action was consumed.
+    pub fn signal(&mut self, action: &AlarmAction) -> bool {
+        match *action {
+            AlarmAction::ScaleOut(f) if f == self.fleet => {
+                self.pending_out = true;
+                true
+            }
+            AlarmAction::ScaleIn(f) if f == self.fleet => {
+                self.pending_in = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Publish the queue's SQS metrics (and the derived backlog-per-unit
+    /// series the alarms watch) for this tick.
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe(
+        &self,
+        metrics: &mut Metrics,
+        cfg: &AppConfig,
+        visible: u64,
+        in_flight: u64,
+        oldest_age: SimTime,
+        capacity: u32,
+        now: SimTime,
+    ) {
+        let dim = Self::queue_dimension(cfg);
+        metrics.put(VISIBLE_METRIC, &dim, now, visible as f64);
+        metrics.put(IN_FLIGHT_METRIC, &dim, now, in_flight as f64);
+        metrics.put(OLDEST_AGE_METRIC, &dim, now, oldest_age as f64 / 1000.0);
+        metrics.put(
+            BACKLOG_METRIC,
+            &dim,
+            now,
+            backlog_per_unit(visible + in_flight, capacity),
+        );
+    }
+
+    /// Turn the pending alarm signals into at most one applied capacity
+    /// decision, respecting bounds, cooldowns, and warmup.  Returns the
+    /// fleet events of an immediate scale-out launch (the caller
+    /// schedules their `InstanceReady`s).
+    pub fn react(
+        &mut self,
+        acct: &mut AwsAccount,
+        cfg: &AppConfig,
+        now: SimTime,
+    ) -> Vec<FleetEvent> {
+        let out_signal = std::mem::take(&mut self.pending_out);
+        let in_signal = std::mem::take(&mut self.pending_in);
+        if !out_signal && !in_signal {
+            return Vec::new();
+        }
+        let (visible, in_flight) = acct.sqs.approximate_counts(&cfg.sqs_queue_name, now);
+        let backlog = (visible + in_flight) as u64;
+        let current = acct.ec2.fleet_target(self.fleet);
+        let mut events = Vec::new();
+
+        // Scale-out wins when both alarms somehow signalled (a backlog
+        // spike right after a drain): growing is the safe direction.
+        if out_signal && self.cooled(self.last_out, self.policy.limits.scale_out_cooldown, now) {
+            let desired = self.policy.desired_out(current, backlog);
+            if desired > current {
+                events = acct.ec2.scale_out(self.fleet, desired, now);
+                self.record(now, current, desired, backlog);
+                self.units_launched += u64::from(desired - current);
+                self.last_out = Some(now);
+                acct.logs.put(
+                    &cfg.log_group_name,
+                    "monitor",
+                    now,
+                    format!(
+                        "autoscale[{}]: backlog {backlog} -> scale out {current} -> {desired} units",
+                        self.policy.name()
+                    ),
+                );
+                return events;
+            }
+        }
+        if in_signal
+            && self.cooled(self.last_in, self.policy.limits.scale_in_cooldown, now)
+            && self.warmed(now)
+        {
+            let desired = self.policy.desired_in(current, backlog);
+            if desired < current {
+                let killed = acct.ec2.scale_in(self.fleet, desired, now);
+                deregister_killed(acct, &killed);
+                self.record(now, current, desired, backlog);
+                self.units_terminated += u64::from(current - desired);
+                self.last_in = Some(now);
+                acct.logs.put(
+                    &cfg.log_group_name,
+                    "monitor",
+                    now,
+                    format!(
+                        "autoscale[{}]: backlog {backlog} -> scale in {current} -> {desired} units ({} terminated)",
+                        self.policy.name(),
+                        killed.len()
+                    ),
+                );
+            }
+        }
+        events
+    }
+
+    fn cooled(&self, last: Option<SimTime>, cooldown: SimTime, now: SimTime) -> bool {
+        last.map(|t| now.saturating_sub(t) >= cooldown).unwrap_or(true)
+    }
+
+    /// Scale-in is held back within the warmup window after engagement
+    /// or after a scale-out.
+    fn warmed(&self, now: SimTime) -> bool {
+        let w = self.policy.limits.warmup;
+        now.saturating_sub(self.engaged_at) >= w
+            && self
+                .last_out
+                .map(|t| now.saturating_sub(t) >= w)
+                .unwrap_or(true)
+    }
+
+    fn record(&mut self, now: SimTime, from: u32, to: u32, backlog: u64) {
+        self.unit_ms += (now.saturating_sub(self.cap_since)) as f64 * f64::from(self.cap_now);
+        self.cap_now = to;
+        self.cap_since = now;
+        self.peak = self.peak.max(to);
+        self.floor = self.floor.min(to);
+        self.timeline.push(ScalingDecision {
+            at: now,
+            from,
+            to,
+            backlog,
+        });
+    }
+
+    /// Finalize the accounting into the report slice.
+    pub fn breakdown(&self, now: SimTime) -> ScalingBreakdown {
+        let unit_ms =
+            self.unit_ms + (now.saturating_sub(self.cap_since)) as f64 * f64::from(self.cap_now);
+        let outs = self.timeline.iter().filter(|d| d.to > d.from).count() as u64;
+        ScalingBreakdown {
+            policy: self.policy.name().to_string(),
+            decisions: self.timeline.len() as u64,
+            scale_outs: outs,
+            scale_ins: self.timeline.len() as u64 - outs,
+            units_launched: self.units_launched,
+            units_terminated: self.units_terminated,
+            peak_capacity: self.peak,
+            floor_capacity: self.floor,
+            capacity_unit_hours: unit_ms / HOUR as f64,
+            timeline: self.timeline.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in ScalingMode::ALL {
+            assert_eq!(ScalingMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ScalingMode::parse("bogus"), None);
+        assert!(ScalingMode::None.policy(4.0).is_none());
+        assert_eq!(
+            ScalingMode::Step.policy(4.0).unwrap().mode(),
+            ScalingMode::Step
+        );
+    }
+
+    #[test]
+    fn target_tracking_desired_jumps_to_backlog() {
+        let mut p = ScalingPolicy::target_tracking(4.0);
+        p.limits.max_capacity = 16;
+        assert_eq!(p.desired_out(1, 100), 16, "clamped at max");
+        assert_eq!(p.desired_out(1, 10), 3, "ceil(10/4)");
+        assert_eq!(p.desired_out(8, 10), 8, "never below current");
+        assert_eq!(p.desired_in(8, 10), 3);
+        assert_eq!(p.desired_in(2, 100), 2, "never above current");
+        assert_eq!(p.desired_in(8, 0), 1, "floor at min");
+    }
+
+    #[test]
+    fn step_desired_uses_deepest_band() {
+        let mut p = ScalingPolicy::step(4.0);
+        p.limits.max_capacity = 16;
+        // backlog/unit = 40 on 2 units = 20/unit; ratio 5x -> +4.
+        assert_eq!(p.desired_out(2, 40), 6);
+        // ratio exactly 1x -> +1.
+        assert_eq!(p.desired_out(2, 8), 3);
+        // below every band -> no-op.
+        assert_eq!(p.desired_out(4, 2), 4);
+        // empty queue -> deepest in-band, -2.
+        assert_eq!(p.desired_in(10, 0), 8);
+        // half target -> -1.
+        assert_eq!(p.desired_in(10, 20), 9);
+        assert_eq!(p.desired_in(1, 0), 1, "floor");
+    }
+
+    #[test]
+    fn limits_resolve_on_engagement() {
+        let s = AutoscaleState::new(ScalingPolicy::target_tracking(4.0), 1, 8, 0);
+        assert_eq!(s.policy.limits.max_capacity, 8);
+        assert_eq!(s.policy.limits.min_capacity, 1);
+        // Explicit max survives; min clamps to max.
+        let mut p = ScalingPolicy::target_tracking(4.0);
+        p.limits.max_capacity = 4;
+        p.limits.min_capacity = 9;
+        let s = AutoscaleState::new(p, 1, 8, 0);
+        assert_eq!(s.policy.limits.max_capacity, 4);
+        assert_eq!(s.policy.limits.min_capacity, 4);
+    }
+
+    #[test]
+    fn signals_only_consume_matching_fleet() {
+        let mut s = AutoscaleState::new(ScalingPolicy::target_tracking(4.0), 7, 4, 0);
+        assert!(!s.signal(&AlarmAction::ScaleOut(8)));
+        assert!(!s.pending_out);
+        assert!(s.signal(&AlarmAction::ScaleOut(7)));
+        assert!(s.pending_out);
+        assert!(s.signal(&AlarmAction::ScaleIn(7)));
+        assert!(s.pending_in);
+        assert!(!s.signal(&AlarmAction::TerminateInstance(7)));
+    }
+
+    #[test]
+    fn breakdown_integrates_time_at_capacity() {
+        let mut s = AutoscaleState::new(ScalingPolicy::target_tracking(4.0), 1, 4, 0);
+        // 1h at 4 units, then scale in to 1 for 2h.
+        s.record(HOUR, 4, 1, 0);
+        let b = s.breakdown(3 * HOUR);
+        assert_eq!(b.decisions, 1);
+        assert_eq!(b.scale_ins, 1);
+        assert_eq!(b.peak_capacity, 4);
+        assert_eq!(b.floor_capacity, 1);
+        assert!((b.capacity_unit_hours - 6.0).abs() < 1e-9, "{b:?}");
+        assert_eq!(b.timeline.len(), 1);
+    }
+
+    #[test]
+    fn default_breakdown_is_the_fixed_fleet() {
+        let b = ScalingBreakdown::default();
+        assert_eq!(b.policy, "none");
+        assert_eq!(b.decisions, 0);
+        assert!(b.timeline.is_empty());
+    }
+}

@@ -15,7 +15,11 @@
 //! * [`sweep`]   — the parallel scenario-sweep engine: a configuration
 //!   matrix of independent simulations on a thread pool, aggregated into
 //!   a [`SweepReport`](crate::metrics::SweepReport).
+//! * [`autoscale`] — the closed-loop elastic scaling control plane:
+//!   typed [`ScalingPolicy`]s driven by CloudWatch alarms on SQS
+//!   metrics, applied on the monitor tick.
 
+pub mod autoscale;
 pub mod cluster;
 pub mod monitor;
 pub mod run;
@@ -23,5 +27,6 @@ pub mod setup;
 pub mod submit;
 pub mod sweep;
 
+pub use autoscale::{ScalingBreakdown, ScalingMode, ScalingPolicy};
 pub use run::{RunOptions, Simulation};
 pub use sweep::{run_sweep, Scenario, ScenarioMatrix, SweepPlan, SweepRun};

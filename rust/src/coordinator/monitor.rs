@@ -20,12 +20,25 @@
 //! timeout, so accounting invariants hold.  Mutually exclusive with
 //! cheapest mode, whose contract is to never terminate running machines
 //! — the run driver rejects the combination.
+//!
+//! Autoscale mode (opt-in, DESIGN.md §8): the monitor hosts a
+//! [`AutoscaleState`] controller that closes the loop in *both*
+//! directions.  Each tick publishes the queue's SQS metrics; CloudWatch
+//! alarms on the backlog-per-unit series deliver
+//! [`AlarmAction::ScaleOut`]/[`AlarmAction::ScaleIn`] signals through
+//! the per-minute alarm evaluation; the controller turns them into
+//! bounded, cooldown-gated fleet mutations on the monitor tick.
+//! Mutually exclusive with both cheapest mode and queue-downscale (one
+//! scale-in authority at a time).
 
-use crate::aws::ec2::{FleetId, InstanceState};
+use crate::aws::cloudwatch::AlarmAction;
+use crate::aws::ec2::{FleetEvent, FleetId, InstanceState};
 use crate::aws::ecs::containers_that_fit;
 use crate::aws::AwsAccount;
 use crate::config::AppConfig;
 use crate::sim::clock::{SimTime, HOUR, MINUTE};
+
+use super::autoscale::{AutoscaleState, ScalingBreakdown};
 
 /// Monitor state machine, ticked once per simulated minute.
 #[derive(Debug)]
@@ -34,12 +47,23 @@ pub struct MonitorState {
     pub cheapest: bool,
     /// Scale the fleet in as the queue drains (cheapest pool last).
     pub queue_downscale: bool,
+    /// Closed-loop elastic scaling (see [`super::autoscale`]).
+    autoscale: Option<AutoscaleState>,
     engaged_at: SimTime,
     last_alarm_reap: SimTime,
     cheapest_downscaled: bool,
     pub cleanup_done: bool,
     /// Where to export logs at cleanup.
     pub export_bucket: String,
+}
+
+/// What one monitor tick did: whether cleanup ran (run is over) and any
+/// fleet events an autoscale decision produced (the run driver
+/// schedules their `InstanceReady`s).
+#[derive(Debug)]
+pub struct MonitorTick {
+    pub done: bool,
+    pub fleet_events: Vec<FleetEvent>,
 }
 
 /// Time after engagement at which cheapest mode downsizes the fleet.
@@ -51,6 +75,7 @@ impl MonitorState {
             fleet,
             cheapest,
             queue_downscale: false,
+            autoscale: None,
             engaged_at: now,
             last_alarm_reap: now,
             cheapest_downscaled: false,
@@ -65,10 +90,42 @@ impl MonitorState {
         self
     }
 
-    /// One monitor tick.  Returns true if cleanup ran (run is over).
-    pub fn tick(&mut self, acct: &mut AwsAccount, cfg: &AppConfig, now: SimTime) -> bool {
+    /// Attach a closed-loop scaling controller (see module docs).
+    pub fn with_autoscale(mut self, state: AutoscaleState) -> Self {
+        self.autoscale = Some(state);
+        self
+    }
+
+    /// Deliver a fired scaling alarm action to the controller (called
+    /// from the run driver's per-minute alarm evaluation).  Ignored
+    /// without a controller or for a foreign fleet.
+    pub fn scale_signal(&mut self, action: &AlarmAction) {
+        if let Some(ctl) = &mut self.autoscale {
+            ctl.signal(action);
+        }
+    }
+
+    /// The scaling slice of the run report, if a controller is engaged.
+    pub fn scaling_breakdown(&self, now: SimTime) -> Option<ScalingBreakdown> {
+        self.autoscale.as_ref().map(|ctl| ctl.breakdown(now))
+    }
+
+    /// One monitor tick.  `hold_cleanup` defers end-of-run teardown even
+    /// on an empty queue — the run driver sets it while scheduled
+    /// mid-run submissions are still pending, so a gap between arrival
+    /// bursts does not tear the cluster down.
+    pub fn tick(
+        &mut self,
+        acct: &mut AwsAccount,
+        cfg: &AppConfig,
+        now: SimTime,
+        hold_cleanup: bool,
+    ) -> MonitorTick {
         if self.cleanup_done {
-            return true;
+            return MonitorTick {
+                done: true,
+                fleet_events: Vec::new(),
+            };
         }
 
         // Cheapest mode: downscale *requested* capacity to 1 after 15 min.
@@ -121,9 +178,30 @@ impl MonitorState {
             now,
             format!("queue: {visible} waiting, {in_flight} in process"),
         );
-        if visible == 0 && in_flight == 0 {
+
+        // Autoscale: publish the queue's SQS metrics for the scaling
+        // alarms (only when a controller is engaged, so unscaled runs
+        // keep their exact pre-autoscale CloudWatch bills).
+        if let Some(ctl) = &self.autoscale {
+            let oldest = acct.sqs.oldest_message_age(&cfg.sqs_queue_name, now);
+            let capacity = acct.ec2.fleet_target(self.fleet);
+            ctl.observe(
+                &mut acct.metrics,
+                cfg,
+                visible as u64,
+                in_flight as u64,
+                oldest,
+                capacity,
+                now,
+            );
+        }
+
+        if visible == 0 && in_flight == 0 && !hold_cleanup {
             self.cleanup(acct, cfg, now);
-            return true;
+            return MonitorTick {
+                done: true,
+                fleet_events: Vec::new(),
+            };
         }
 
         // Queue-downscale mode: shrink the fleet to the *machines* the
@@ -157,10 +235,7 @@ impl MonitorState {
             let current = acct.ec2.active_count(self.fleet);
             if needed < current {
                 let killed = acct.ec2.scale_in_to_machines(self.fleet, needed, now);
-                for id in &killed {
-                    acct.ecs.deregister_instance(*id);
-                    acct.metrics.drop_dimension(&format!("i-{id}"));
-                }
+                super::autoscale::deregister_killed(acct, &killed);
                 if !killed.is_empty() {
                     acct.logs.put(
                         &cfg.log_group_name,
@@ -174,7 +249,17 @@ impl MonitorState {
                 }
             }
         }
-        false
+
+        // Autoscale: turn pending alarm signals into at most one
+        // bounded, cooldown-gated capacity decision.
+        let fleet_events = match &mut self.autoscale {
+            Some(ctl) => ctl.react(acct, cfg, now),
+            None => Vec::new(),
+        };
+        MonitorTick {
+            done: false,
+            fleet_events,
+        }
     }
 
     /// End-of-run teardown, in the paper's order.
@@ -243,8 +328,8 @@ mod tests {
         let (mut acct, cfg, mut mon) = rig();
         acct.ec2.evaluate_fleets(0);
         assert!(acct.ec2.active_count(mon.fleet) > 0);
-        let done = mon.tick(&mut acct, &cfg, MINUTE);
-        assert!(done);
+        let done = mon.tick(&mut acct, &cfg, MINUTE, false);
+        assert!(done.done);
         assert!(mon.cleanup_done);
         assert_eq!(acct.ec2.active_count(mon.fleet), 0);
         assert!(!acct.sqs.queue_exists(&cfg.sqs_queue_name));
@@ -258,7 +343,7 @@ mod tests {
     fn nonempty_queue_keeps_running() {
         let (mut acct, cfg, mut mon) = rig();
         acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
-        assert!(!mon.tick(&mut acct, &cfg, MINUTE));
+        assert!(!mon.tick(&mut acct, &cfg, MINUTE, false).done);
         assert!(acct.sqs.queue_exists(&cfg.sqs_queue_name));
     }
 
@@ -268,9 +353,9 @@ mod tests {
         acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
         let fleet = 1;
         let mut mon = MonitorState::new(fleet, true, "ds-data", 0);
-        mon.tick(&mut acct, &cfg, 5 * MINUTE);
+        mon.tick(&mut acct, &cfg, 5 * MINUTE, false);
         assert_eq!(acct.ec2.fleet_target(fleet), AppConfig::default().cluster_machines);
-        mon.tick(&mut acct, &cfg, 16 * MINUTE);
+        mon.tick(&mut acct, &cfg, 16 * MINUTE, false);
         assert_eq!(acct.ec2.fleet_target(fleet), 1);
     }
 
@@ -280,7 +365,7 @@ mod tests {
         acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
         let _ = acct.sqs.receive(&cfg.sqs_queue_name, MINUTE).unwrap();
         // visible=0 but in_flight=1 -> not done.
-        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE, false).done);
     }
 
     #[test]
@@ -296,12 +381,92 @@ mod tests {
         }
         assert_eq!(acct.ec2.active_count(1), 4);
         let mut mon = MonitorState::new(1, false, "ds-data", 0).with_queue_downscale();
-        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE, false).done);
         assert_eq!(acct.ec2.fleet_target(1), 2);
         assert_eq!(acct.ec2.active_weight(1), 2);
         // And it never scales back *up*: target only moves down.
-        assert!(!mon.tick(&mut acct, &cfg, 3 * MINUTE));
+        assert!(!mon.tick(&mut acct, &cfg, 3 * MINUTE, false).done);
         assert_eq!(acct.ec2.fleet_target(1), 2);
+    }
+
+    #[test]
+    fn autoscale_closed_loop_scales_out_and_in_through_alarms() {
+        use crate::coordinator::autoscale::{AutoscaleState, ScalingPolicy};
+        let (mut acct, cfg, _) = rig(); // fleet target 4
+        // Shrink the fleet to 1 unit first so there is room to grow.
+        acct.ec2.evaluate_fleets(0);
+        for id in acct.ec2.instances_in_state(1, InstanceState::Pending) {
+            acct.ec2.mark_running(id, 1);
+        }
+        acct.ec2.scale_in(1, 1, 1);
+        let mut policy = ScalingPolicy::target_tracking(2.0);
+        policy.limits.max_capacity = 4;
+        policy.limits.scale_in_cooldown = MINUTE;
+        policy.limits.warmup = MINUTE;
+        let ctl = AutoscaleState::new(policy, 1, 1, 0);
+        ctl.arm(&mut acct.alarms, &cfg, 0);
+        let mut mon = MonitorState::new(1, false, "ds-data", 0).with_autoscale(ctl);
+        // 10 jobs queued: backlog/unit = 10 > 2 target.
+        for _ in 0..10 {
+            acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
+        }
+        // Tick 1 publishes metrics; alarm evaluation then fires ScaleOut.
+        assert!(!mon.tick(&mut acct, &cfg, MINUTE, false).done);
+        let fired = acct.alarms.evaluate(&acct.metrics, 2 * MINUTE);
+        assert!(
+            fired.contains(&crate::aws::cloudwatch::AlarmAction::ScaleOut(1)),
+            "{fired:?}"
+        );
+        for a in &fired {
+            mon.scale_signal(a);
+        }
+        // Tick 2 applies the decision: capacity jumps to ceil(10/2) = 5,
+        // clamped to max 4, and the launches come back as fleet events.
+        let out = mon.tick(&mut acct, &cfg, 2 * MINUTE, false);
+        assert!(!out.done);
+        assert!(!out.fleet_events.is_empty());
+        assert_eq!(acct.ec2.fleet_target(1), 4);
+        let b = mon.scaling_breakdown(2 * MINUTE).unwrap();
+        assert_eq!(b.scale_outs, 1);
+        assert_eq!(b.units_launched, 3);
+        assert_eq!(b.peak_capacity, 4);
+
+        // Drain the queue; the low alarm eventually signals scale-in.
+        let t = 3 * MINUTE;
+        while let Some((_, h)) = acct.sqs.receive(&cfg.sqs_queue_name, t).unwrap() {
+            acct.sqs.delete(&cfg.sqs_queue_name, h, t).unwrap();
+        }
+        // Keep the run alive (hold_cleanup) and let the low alarm breach
+        // for its 3 evaluation periods.
+        let mut scaled_in = false;
+        for k in 0..12u64 {
+            let now = t + k * MINUTE;
+            mon.tick(&mut acct, &cfg, now, true);
+            for a in acct.alarms.evaluate(&acct.metrics, now + MINUTE / 2) {
+                mon.scale_signal(&a);
+            }
+            if acct.ec2.fleet_target(1) < 4 {
+                scaled_in = true;
+                break;
+            }
+        }
+        assert!(scaled_in, "low-backlog alarm never shrank the fleet");
+        let b = mon.scaling_breakdown(t + 12 * MINUTE).unwrap();
+        assert!(b.scale_ins >= 1, "{b:?}");
+        assert!(b.floor_capacity < 4, "{b:?}");
+    }
+
+    #[test]
+    fn hold_cleanup_defers_teardown_between_bursts() {
+        let (mut acct, cfg, mut mon) = rig();
+        acct.ec2.evaluate_fleets(0);
+        // Queue empty but more work is scheduled: no teardown.
+        assert!(!mon.tick(&mut acct, &cfg, MINUTE, true).done);
+        assert!(acct.sqs.queue_exists(&cfg.sqs_queue_name));
+        assert!(!mon.cleanup_done);
+        // Once nothing is pending, the empty queue tears down as before.
+        assert!(mon.tick(&mut acct, &cfg, 2 * MINUTE, false).done);
+        assert!(mon.cleanup_done);
     }
 
     #[test]
@@ -309,7 +474,7 @@ mod tests {
         let (mut acct, cfg, mut mon) = rig();
         acct.sqs.send(&cfg.sqs_queue_name, "{}", 0).unwrap();
         acct.ec2.evaluate_fleets(0);
-        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE));
+        assert!(!mon.tick(&mut acct, &cfg, 2 * MINUTE, false).done);
         assert_eq!(
             acct.ec2.fleet_target(1),
             AppConfig::default().cluster_machines

@@ -51,6 +51,7 @@ use crate::sim::{EventQueue, SimRng};
 use crate::worker::{check_if_done, parse_message};
 use crate::workloads::drivers::{job_output_prefix, output_bucket, JobCtx, JobExecutor, JobOutcome};
 
+use super::autoscale::{AutoscaleState, ScalingPolicy};
 use super::monitor::MonitorState;
 use super::{cluster, setup, submit};
 
@@ -66,6 +67,10 @@ pub struct RunOptions {
     /// Monitor scales the fleet in as the queue drains (cheapest pool
     /// last).  Ignored without the monitor.
     pub queue_downscale: bool,
+    /// Closed-loop elastic scaling policy (requires the monitor;
+    /// mutually exclusive with cheapest mode and queue-downscale — one
+    /// scale-in authority at a time).  See [`super::autoscale`].
+    pub scaling: Option<ScalingPolicy>,
     /// Mean time to instance crash (None = reliable machines).
     pub crash_mttf: Option<SimTime>,
     /// Hard stop for the simulation.
@@ -88,6 +93,7 @@ impl Default for RunOptions {
             monitor: true,
             cheapest: false,
             queue_downscale: false,
+            scaling: None,
             crash_mttf: None,
             max_sim_time: 7 * 24 * HOUR,
             overrun_after_drain: 0,
@@ -125,6 +131,9 @@ enum Event {
     InstanceCrash(InstanceId),
     AlarmEval,
     MonitorTick,
+    /// A scheduled mid-run submission lands on the queue (bursty
+    /// arrival patterns; see [`Simulation::submit_at`]).
+    SubmitJobs(JobSpec),
 }
 
 /// A job waiting on a data-plane flow (the state between phases).
@@ -161,6 +170,9 @@ pub struct Simulation {
     monitor: Option<MonitorState>,
     stats: RunStats,
     jobs_submitted: u64,
+    /// Scheduled `SubmitJobs` events not yet delivered; while non-zero
+    /// the monitor holds off end-of-run cleanup on an empty queue.
+    pending_submits: usize,
     /// Busy cores per container (jobs in *compute*; a core moving bytes
     /// is not CPU-busy — that's what the reaper sees).
     busy: HashMap<ContainerId, u32>,
@@ -192,6 +204,7 @@ impl Simulation {
             monitor: None,
             stats: RunStats::default(),
             jobs_submitted: 0,
+            pending_submits: 0,
             busy: HashMap::new(),
             cores_done: HashMap::new(),
             xfers: HashMap::new(),
@@ -214,13 +227,36 @@ impl Simulation {
         Ok(n)
     }
 
+    /// Schedule a submission `delay` after the current simulated time:
+    /// the messages land on the queue mid-run (bursty arrival
+    /// patterns).  The monitor defers end-of-run cleanup while
+    /// scheduled submissions are outstanding, so a gap between bursts
+    /// does not tear the cluster down.
+    pub fn submit_at(&mut self, delay: SimTime, jobs: JobSpec) {
+        self.pending_submits += 1;
+        self.events.schedule_in(delay, Event::SubmitJobs(jobs));
+    }
+
     /// Step 3 (+4): `startCluster` and optionally `monitor`.
     pub fn start(&mut self, fleet_file: &FleetSpec) -> Result<()> {
-        ensure!(self.jobs_submitted > 0, "submit jobs before starting the cluster");
+        ensure!(
+            self.jobs_submitted > 0 || self.pending_submits > 0,
+            "submit jobs before starting the cluster"
+        );
         ensure!(
             !(self.opts.cheapest && self.opts.queue_downscale),
             "queue_downscale conflicts with cheapest mode (cheapest never terminates running machines)"
         );
+        if self.opts.scaling.is_some() {
+            ensure!(
+                self.opts.monitor,
+                "scaling requires the monitor (the control loop lives on its tick)"
+            );
+            ensure!(
+                !self.opts.cheapest && !self.opts.queue_downscale,
+                "scaling conflicts with cheapest mode and queue-downscale (one scale-in authority at a time)"
+            );
+        }
         let fleet =
             cluster::start_cluster(&mut self.acct, &self.cfg, fleet_file, self.events.now())?;
         self.fleet = Some(fleet);
@@ -235,6 +271,16 @@ impl Simulation {
             );
             if self.opts.queue_downscale {
                 mon = mon.with_queue_downscale();
+            }
+            if let Some(policy) = &self.opts.scaling {
+                let ctl = AutoscaleState::new(
+                    policy.clone(),
+                    fleet,
+                    self.acct.ec2.fleet_target(fleet),
+                    self.events.now(),
+                );
+                ctl.arm(&mut self.acct.alarms, &self.cfg, self.events.now());
+                mon = mon.with_autoscale(ctl);
             }
             self.monitor = Some(mon);
             self.events.schedule_in(0, Event::MonitorTick);
@@ -264,8 +310,10 @@ impl Simulation {
             return true;
         }
         // Without a monitor the run "ends" for reporting purposes after
-        // the queue has drained and the configured overrun has elapsed.
-        if self.monitor.is_none() {
+        // the queue has drained and the configured overrun has elapsed —
+        // unless scheduled submissions are still pending (a gap between
+        // arrival bursts is not the end of the workload).
+        if self.monitor.is_none() && self.pending_submits == 0 {
             if let Some(d) = self.drained_at {
                 if now >= d + self.opts.overrun_after_drain {
                     return true;
@@ -308,6 +356,7 @@ impl Simulation {
             Event::InstanceCrash(id) => self.on_instance_crash(now, id),
             Event::AlarmEval => self.on_alarm_eval(now),
             Event::MonitorTick => self.on_monitor_tick(now),
+            Event::SubmitJobs(jobs) => self.on_submit_jobs(now, &jobs),
         }
     }
 
@@ -335,6 +384,20 @@ impl Simulation {
 
         // Fleet evaluation: interruptions + fulfillment.
         let evs = self.acct.ec2.evaluate_fleets(now);
+        self.apply_fleet_events(now, evs);
+
+        // ECS placement pass.
+        self.place_and_start_containers(now);
+
+        // Storage billing integration.
+        self.acct.sample_storage(now);
+
+        self.events.schedule_in(MINUTE, Event::MarketTick);
+    }
+
+    /// Schedule the consequences of a batch of fleet events — from the
+    /// per-minute evaluation or from a mid-run autoscale launch.
+    fn apply_fleet_events(&mut self, now: SimTime, evs: Vec<FleetEvent>) {
         for ev in evs {
             match ev {
                 FleetEvent::InstanceRequested { id, ready_at, .. } => {
@@ -349,14 +412,6 @@ impl Simulation {
                 FleetEvent::CapacityUnavailable { .. } => {}
             }
         }
-
-        // ECS placement pass.
-        self.place_and_start_containers(now);
-
-        // Storage billing integration.
-        self.acct.sample_storage(now);
-
-        self.events.schedule_in(MINUTE, Event::MarketTick);
     }
 
     fn on_instance_ready(&mut self, now: SimTime, id: InstanceId) {
@@ -825,17 +880,45 @@ impl Simulation {
                     }
                 }
                 AlarmAction::RebootInstance(_) => {}
+                // Scaling signals go to the monitor's controller; the
+                // next monitor tick turns them into one bounded,
+                // cooldown-gated capacity decision.
+                AlarmAction::ScaleOut(_) | AlarmAction::ScaleIn(_) => {
+                    if let Some(mon) = &mut self.monitor {
+                        mon.scale_signal(&a);
+                    }
+                }
             }
         }
         self.events.schedule_in(MINUTE, Event::AlarmEval);
+    }
+
+    /// A scheduled mid-run submission: enqueue the jobs and re-open the
+    /// drain window (the queue is no longer drained).
+    fn on_submit_jobs(&mut self, now: SimTime, jobs: &JobSpec) {
+        self.pending_submits = self.pending_submits.saturating_sub(1);
+        match submit::submit_job(&mut self.acct, &self.cfg, jobs, now) {
+            Ok(n) => {
+                self.jobs_submitted += n;
+                self.drained_at = None;
+            }
+            Err(_) => {
+                // The queue is gone: the run ended before this burst
+                // (no monitor + max-time cap).  Nothing to enqueue.
+            }
+        }
     }
 
     fn on_monitor_tick(&mut self, now: SimTime) {
         let Some(mut mon) = self.monitor.take() else {
             return;
         };
-        let done = mon.tick(&mut self.acct, &self.cfg, now);
+        let tick = mon.tick(&mut self.acct, &self.cfg, now, self.pending_submits > 0);
         self.monitor = Some(mon);
+        let done = tick.done;
+        // A scale-out decision launches immediately into the fleet's
+        // allocation strategy: schedule the boots it produced.
+        self.apply_fleet_events(now, tick.fleet_events);
         // The monitor terminates machines on its own (queue downscale,
         // final cleanup): abort transfers stranded on machines that are
         // no longer alive.
@@ -899,6 +982,11 @@ impl Simulation {
         let cost = self.acct.cost_report(ended_at);
         let pools = self.acct.ec2.pool_breakdown(ended_at);
         let data = data_breakdown(self.acct.s3.stats(), self.acct.net.stats());
+        let scaling = self
+            .monitor
+            .as_ref()
+            .and_then(|m| m.scaling_breakdown(ended_at))
+            .unwrap_or_default();
         RunReport {
             stats,
             drained_at: self.drained_at,
@@ -911,6 +999,7 @@ impl Simulation {
             cost,
             pools,
             data,
+            scaling,
             jobs_submitted: self.jobs_submitted,
         }
     }
@@ -938,29 +1027,14 @@ pub fn run_full(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workloads::{DurationModel, ModeledExecutor};
+    use crate::workloads::ModeledExecutor;
 
     fn quick_cfg() -> AppConfig {
-        AppConfig {
-            cluster_machines: 3,
-            tasks_per_machine: 2,
-            docker_cores: 2,
-            machine_types: vec!["m5.xlarge".into()],
-            machine_price: 0.10,
-            sqs_message_visibility: 5 * MINUTE,
-            ..Default::default()
-        }
+        crate::testutil::fixtures::quick_cfg(3)
     }
 
     fn modeled(mean_s: f64) -> ModeledExecutor {
-        ModeledExecutor {
-            model: DurationModel {
-                mean_s,
-                cv: 0.2,
-                ..Default::default()
-            },
-            ..Default::default()
-        }
+        crate::testutil::fixtures::modeled(mean_s)
     }
 
     #[test]
@@ -1156,6 +1230,94 @@ mod tests {
         sim.submit(&jobs).unwrap();
         let err = sim.start(&fleet).unwrap_err();
         assert!(err.to_string().contains("cheapest"), "{err}");
+    }
+
+    #[test]
+    fn scaling_requires_monitor_and_excludes_other_downscalers() {
+        use crate::coordinator::autoscale::ScalingPolicy;
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 2, 1, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let bad = [
+            RunOptions {
+                scaling: Some(ScalingPolicy::target_tracking(4.0)),
+                monitor: false,
+                ..Default::default()
+            },
+            RunOptions {
+                scaling: Some(ScalingPolicy::target_tracking(4.0)),
+                cheapest: true,
+                ..Default::default()
+            },
+            RunOptions {
+                scaling: Some(ScalingPolicy::step(4.0)),
+                queue_downscale: true,
+                ..Default::default()
+            },
+        ];
+        for opts in bad {
+            let mut sim = Simulation::new(cfg.clone(), opts).unwrap();
+            sim.submit(&jobs).unwrap();
+            assert!(sim.start(&fleet).is_err());
+        }
+    }
+
+    #[test]
+    fn elastic_run_scales_in_while_draining_and_completes() {
+        let cfg = quick_cfg(); // 3 machines = 12 workers
+        let jobs = JobSpec::plate("P1", 12, 2, vec![]); // 24 jobs
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let policy = crate::coordinator::autoscale::ScalingPolicy::target_tracking(8.0);
+        let opts = RunOptions {
+            scaling: Some(policy),
+            ..Default::default()
+        };
+        let mut ex = modeled(300.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap();
+        assert!(report.fully_accounted(), "{}", report.summary());
+        assert!(report.cleaned_up);
+        assert_eq!(report.scaling.policy, "target-tracking");
+        // The wide scale-in band shrinks the fleet as the queue drains.
+        assert!(report.scaling.scale_ins >= 1, "{:?}", report.scaling);
+        assert!(report.scaling.floor_capacity < 3, "{:?}", report.scaling);
+        assert_eq!(
+            report.scaling.decisions as usize,
+            report.scaling.timeline.len()
+        );
+        // The summary line surfaces the policy.
+        assert!(report.summary().contains("scaling(target-tracking)"), "{}", report.summary());
+    }
+
+    #[test]
+    fn bursty_arrivals_hold_cleanup_and_rescale_out() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 6, 2, vec![]); // 12 jobs per wave
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut policy = crate::coordinator::autoscale::ScalingPolicy::target_tracking(1.0);
+        policy.limits.scale_in_cooldown = 2 * MINUTE;
+        policy.limits.warmup = 2 * MINUTE;
+        let opts = RunOptions {
+            scaling: Some(policy),
+            ..Default::default()
+        };
+        let mut sim = Simulation::new(cfg, opts).unwrap();
+        sim.submit(&jobs).unwrap();
+        sim.submit_at(40 * MINUTE, jobs.clone());
+        sim.start(&fleet).unwrap();
+        let mut ex = modeled(120.0);
+        let report = sim.run(&mut ex).unwrap();
+        assert_eq!(report.jobs_submitted, 24);
+        assert!(report.fully_accounted(), "{}", report.summary());
+        assert!(report.cleaned_up, "cleanup only after the last wave");
+        // The final drain postdates the second wave: drained_at re-opens
+        // when a scheduled burst lands.
+        assert!(report.drained_at.unwrap() > 40 * MINUTE);
+        // The idle gap scaled the fleet in; the second wave scaled it
+        // back out through the alarm loop.
+        assert!(report.scaling.scale_ins >= 1, "{:?}", report.scaling);
+        assert!(report.scaling.scale_outs >= 1, "{:?}", report.scaling);
+        assert!(report.scaling.floor_capacity == 1, "{:?}", report.scaling);
+        assert_eq!(report.scaling.peak_capacity, 3);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! whole configuration *matrix* — the cartesian product of the typed
 //! axes registered in [`crate::scenario`] (seeds × volatility ×
 //! visibility × machines × allocation × instance set × input MB × net
-//! profile × duration model) — on a pool of OS threads, one independent
+//! profile × scaling policy × scaling target × duration model) — on a
+//! pool of OS threads, one independent
 //! [`Simulation`](super::Simulation) per cell.
 //!
 //! The types describing *what* to sweep — [`Scenario`],
@@ -204,21 +205,13 @@ mod tests {
     use super::*;
     use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
     use crate::aws::s3::dataplane::NetProfile;
-    use crate::config::{AppConfig, JobSpec};
+    use crate::config::JobSpec;
     use crate::json::Value;
     use crate::sim::MINUTE;
     use crate::workloads::DurationModel;
 
     fn small_plan() -> SweepPlan {
-        let cfg = AppConfig {
-            cluster_machines: 2,
-            tasks_per_machine: 2,
-            docker_cores: 2,
-            machine_types: vec!["m5.xlarge".into()],
-            machine_price: 0.10,
-            sqs_message_visibility: 5 * MINUTE,
-            ..Default::default()
-        };
+        let cfg = crate::testutil::fixtures::quick_cfg(2);
         let jobs = JobSpec::plate("P", 4, 2, vec![]);
         let matrix = ScenarioMatrix {
             seeds: vec![1, 2],
@@ -392,6 +385,8 @@ mod tests {
             instance_set: Vec::new(),
             input_mb: 0.0,
             net: NetProfile::default(),
+            scaling: crate::coordinator::autoscale::ScalingMode::None,
+            scaling_target: 4.0,
             model: DurationModel {
                 mean_s: 120.0,
                 ..Default::default()
@@ -416,6 +411,46 @@ mod tests {
         assert_eq!(
             sc.label(),
             "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow"
+        );
+        // Scaling axes label only when a policy is engaged, at the end
+        // of the fragment order — fixed-fleet labels stay byte-stable.
+        sc.input_mb = 0.0;
+        sc.net = NetProfile::default();
+        sc.scaling = crate::coordinator::autoscale::ScalingMode::TargetTracking;
+        sc.scaling_target = 3.0;
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified scale=target-tracking tgt=3"
+        );
+    }
+
+    #[test]
+    fn scaling_axis_sweep_reports_breakdowns() {
+        use crate::coordinator::autoscale::ScalingMode;
+        let mut plan = small_plan();
+        plan.matrix.seeds = vec![1];
+        plan.matrix.cluster_machines = vec![2];
+        plan.matrix.scalings = vec![ScalingMode::None, ScalingMode::TargetTracking];
+        plan.matrix.scaling_targets = vec![1.0];
+        let run = run_sweep(&plan, 2).unwrap();
+        assert_eq!(run.report.scenarios.len(), 2);
+        let fixed = &run.report.scenarios[0];
+        let elastic = &run.report.scenarios[1];
+        assert_eq!(fixed.scaling.policy, "none");
+        assert_eq!(fixed.scaling.decisions, 0);
+        assert_eq!(elastic.scaling.policy, "target-tracking");
+        // Elasticity never loses work.
+        assert_eq!(elastic.completed, 8);
+        // The axes object carries the policy only when engaged, like
+        // the label.
+        assert!(fixed.axes.get("SCALING").is_none());
+        assert_eq!(
+            elastic.axes.get("SCALING").and_then(Value::as_str),
+            Some("target-tracking")
+        );
+        assert_eq!(
+            elastic.axes.get("SCALING_TARGET").and_then(Value::as_f64),
+            Some(1.0)
         );
     }
 

@@ -13,7 +13,10 @@
 //! and the paper's four commands are [`coordinator`].  Storage is not
 //! free: jobs that declare byte sizes move them through a
 //! bandwidth-aware S3 data plane ([`aws::s3::dataplane`]) that shares
-//! instance NICs and bucket throughput max-min fairly.  Whole
+//! instance NICs and bucket throughput max-min fairly.  Capacity is not
+//! hand-tuned: CloudWatch alarms on the SQS backlog drive typed
+//! target-tracking and step scaling policies that grow and shrink the
+//! fleet mid-run ([`coordinator::autoscale`]).  Whole
 //! configuration matrices replay in parallel through the scenario-sweep
 //! engine ([`coordinator::sweep`]) with cross-seed aggregation in
 //! [`metrics`]; the sweep surface itself — CLI flags, the declarative

@@ -6,7 +6,9 @@
 //! ds make-job     --plate P1 --wells 96 --sites 4 --out files/job.json
 //! ds run          --config files/config.json --job files/job.json \
 //!                 --fleet files/fleet.json [--no-monitor] [--cheapest] \
-//!                 [--pjrt artifacts/] [--seed N] [--volatility low|medium|high]
+//!                 [--scaling none|target-tracking|step] [--scaling-target B] \
+//!                 [--pjrt artifacts/] [--seed N] [--volatility low|medium|high] \
+//!                 [--json]
 //! ds sweep        [--plan files/sweep.json] [--dry-run] \
 //!                 [--config files/config.json] [--job files/job.json] \
 //!                 [--fleet files/fleet.json] \
@@ -15,6 +17,7 @@
 //!                 --allocation lowest-price,diversified,capacity-optimized \
 //!                 --instance-types m5.large+c5.xlarge:2,m5.xlarge \
 //!                 --input-mb 0,64,256 --net-profile standard,narrow \
+//!                 --scaling none,target-tracking,step --scaling-target 2,4 \
 //!                 [--on-demand-base N] [--threads N] [--json]
 //! ds describe     --config files/config.json [--fleet files/fleet.json]
 //!                 [--job files/job.json]
@@ -362,15 +365,26 @@ fn run(args: &Args) -> Result<()> {
         jobs
     };
 
-    println!(
-        "run: app={} jobs={} machines={} bid=${}/h monitor={} cheapest={}",
+    let preamble = format!(
+        "run: app={} jobs={} machines={} bid=${}/h monitor={} cheapest={} scaling={}",
         cell.cfg.app_name,
         jobs.groups.len(),
         cell.cfg.cluster_machines,
         cell.cfg.machine_price,
         cell.opts.monitor,
-        cell.opts.cheapest
+        cell.opts.cheapest,
+        cell.opts
+            .scaling
+            .as_ref()
+            .map(|p| p.name())
+            .unwrap_or("none"),
     );
+    // Keep stdout machine-parseable under --json: chatter goes to stderr.
+    if args.flag("json") {
+        eprintln!("{preamble}");
+    } else {
+        println!("{preamble}");
+    }
 
     let report = if let Some(artifacts) = args.get("pjrt") {
         let runtime = PjrtRuntime::new(artifacts)?;
@@ -385,7 +399,11 @@ fn run(args: &Args) -> Result<()> {
         run_full(&cell.cfg, &jobs, &cell.fleet, &mut ex, cell.opts)?
     };
 
-    println!("\n{}", report.summary());
+    if args.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        println!("\n{}", report.summary());
+    }
     Ok(())
 }
 

@@ -28,7 +28,7 @@ use crate::json::Value;
 use crate::sim::clock::fmt_dur;
 use crate::sim::SimTime;
 
-use super::{DataBreakdown, PoolBreakdown, RunReport, Table};
+use super::{DataBreakdown, PoolBreakdown, RunReport, ScalingBreakdown, Table};
 
 /// Distribution summary over a sample of f64s.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -127,6 +127,11 @@ pub struct ScenarioSummary {
     /// Data-plane activity summed across all cells: bytes moved/wasted,
     /// request + egress dollars, bucket-vs-NIC bottleneck attribution.
     pub data: DataBreakdown,
+    /// Autoscaling activity merged across all cells: decision counters
+    /// and capacity-unit-hours summed, peak/floor capacity taken as the
+    /// max/min over cells.  The per-decision timeline is per-run
+    /// evidence, not an aggregate, so it stays empty here.
+    pub scaling: ScalingBreakdown,
 }
 
 impl ScenarioSummary {
@@ -192,6 +197,30 @@ impl ScenarioSummary {
             data.nic_bound_ms += r.data.nic_bound_ms;
             data.first_byte_wait_ms += r.data.first_byte_wait_ms;
         }
+        // Merge the scaling slices: summed counters, max peak, min
+        // floor.  Every cell of a scenario ran the same policy, so the
+        // first report's name is the scenario's.
+        let mut scaling = ScalingBreakdown {
+            policy: reports
+                .first()
+                .map(|r| r.scaling.policy.clone())
+                .unwrap_or_else(|| "none".to_string()),
+            ..ScalingBreakdown::default()
+        };
+        for r in reports {
+            scaling.decisions += r.scaling.decisions;
+            scaling.scale_outs += r.scaling.scale_outs;
+            scaling.scale_ins += r.scaling.scale_ins;
+            scaling.units_launched += r.scaling.units_launched;
+            scaling.units_terminated += r.scaling.units_terminated;
+            scaling.peak_capacity = scaling.peak_capacity.max(r.scaling.peak_capacity);
+            scaling.floor_capacity = if scaling.floor_capacity == 0 {
+                r.scaling.floor_capacity
+            } else {
+                scaling.floor_capacity.min(r.scaling.floor_capacity)
+            };
+            scaling.capacity_unit_hours += r.scaling.capacity_unit_hours;
+        }
         Self {
             label: label.to_string(),
             axes: Value::obj(),
@@ -212,6 +241,7 @@ impl ScenarioSummary {
             dead_letter_rate: Aggregate::from_values(&dlq_rates),
             pools: pool_map.into_values().collect(),
             data,
+            scaling,
         }
     }
 
@@ -257,11 +287,12 @@ impl ScenarioSummary {
                 Value::Arr(self.pools.iter().map(pool_to_json).collect()),
             )
             .with("data", data_to_json(&self.data))
+            .with("scaling", scaling_to_json(&self.scaling, false))
     }
 }
 
 /// JSON shape of one merged [`PoolBreakdown`] row.
-fn pool_to_json(p: &PoolBreakdown) -> Value {
+pub(crate) fn pool_to_json(p: &PoolBreakdown) -> Value {
     Value::obj()
         .with("pool", p.pool.as_str())
         .with("launched", p.launched)
@@ -273,7 +304,7 @@ fn pool_to_json(p: &PoolBreakdown) -> Value {
 /// JSON shape of the merged [`DataBreakdown`] (the sweep's data axis
 /// lands here: byte totals, request/egress dollars, and the
 /// bucket-vs-NIC bottleneck attribution).
-fn data_to_json(d: &DataBreakdown) -> Value {
+pub(crate) fn data_to_json(d: &DataBreakdown) -> Value {
     Value::obj()
         .with("bytes_downloaded", d.bytes_downloaded)
         .with("bytes_uploaded", d.bytes_uploaded)
@@ -288,6 +319,40 @@ fn data_to_json(d: &DataBreakdown) -> Value {
         .with("nic_bound_ms", d.nic_bound_ms)
         .with("first_byte_wait_ms", d.first_byte_wait_ms)
         .with("bucket_bound_fraction", d.bucket_bound_fraction())
+}
+
+/// JSON shape of a [`ScalingBreakdown`].  The per-decision `timeline`
+/// rides along only in single-run reports (`ds run --json`); cross-seed
+/// summaries carry counters alone.
+pub(crate) fn scaling_to_json(s: &ScalingBreakdown, timeline: bool) -> Value {
+    let mut v = Value::obj()
+        .with("policy", s.policy.as_str())
+        .with("decisions", s.decisions)
+        .with("scale_outs", s.scale_outs)
+        .with("scale_ins", s.scale_ins)
+        .with("units_launched", s.units_launched)
+        .with("units_terminated", s.units_terminated)
+        .with("peak_capacity", s.peak_capacity)
+        .with("floor_capacity", s.floor_capacity)
+        .with("capacity_unit_hours", s.capacity_unit_hours);
+    if timeline {
+        v = v.with(
+            "timeline",
+            Value::Arr(
+                s.timeline
+                    .iter()
+                    .map(|d| {
+                        Value::obj()
+                            .with("at_s", d.at as f64 / 1000.0)
+                            .with("from", d.from)
+                            .with("to", d.to)
+                            .with("backlog", d.backlog)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    v
 }
 
 /// The whole sweep: one [`ScenarioSummary`] per scenario, in matrix order.
@@ -385,6 +450,18 @@ mod tests {
                 nic_bound_ms: 10,
                 ..Default::default()
             },
+            scaling: ScalingBreakdown {
+                policy: "target-tracking".into(),
+                decisions: 2,
+                scale_outs: 1,
+                scale_ins: 1,
+                units_launched: 3,
+                units_terminated: 2,
+                peak_capacity: 4,
+                floor_capacity: 1,
+                capacity_unit_hours: 2.5,
+                ..Default::default()
+            },
             jobs_submitted: completed + 2,
         }
     }
@@ -441,6 +518,29 @@ mod tests {
         assert_eq!(s.data.bytes_uploaded, 300);
         assert!((s.data.egress_usd - 0.75).abs() < 1e-12);
         assert!((s.data.bucket_bound_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_merges_scaling_counters() {
+        let r1 = report(10, Some(HOUR), 0.5);
+        let mut r2 = report(20, Some(2 * HOUR), 1.5);
+        r2.scaling.peak_capacity = 8;
+        r2.scaling.floor_capacity = 2;
+        let s = ScenarioSummary::from_reports("s", &[&r1, &r2]);
+        assert_eq!(s.scaling.policy, "target-tracking");
+        assert_eq!(s.scaling.decisions, 4);
+        assert_eq!(s.scaling.scale_outs, 2);
+        assert_eq!(s.scaling.units_launched, 6);
+        assert_eq!(s.scaling.peak_capacity, 8, "max over cells");
+        assert_eq!(s.scaling.floor_capacity, 1, "min over cells");
+        assert!((s.scaling.capacity_unit_hours - 5.0).abs() < 1e-12);
+        assert!(s.scaling.timeline.is_empty(), "timeline is per-run only");
+        // The summary JSON carries the counters but no timeline.
+        let j = s.to_json();
+        let sc = j.get("scaling").unwrap();
+        assert_eq!(sc.get("policy").and_then(Value::as_str), Some("target-tracking"));
+        assert_eq!(sc.get("decisions").and_then(Value::as_u64), Some(4));
+        assert!(sc.get("timeline").is_none());
     }
 
     #[test]

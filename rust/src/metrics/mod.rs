@@ -5,8 +5,10 @@ pub mod aggregate;
 pub use aggregate::{Aggregate, ScenarioSummary, SweepReport};
 pub use crate::aws::billing::DataBreakdown;
 pub use crate::aws::ec2::PoolBreakdown;
+pub use crate::coordinator::autoscale::{ScalingBreakdown, ScalingDecision};
 
 use crate::aws::billing::CostReport;
+use crate::json::Value;
 use crate::sim::clock::{fmt_dur, SimTime, HOUR};
 
 /// Raw counters accumulated by the event loop.
@@ -60,7 +62,12 @@ pub struct RunReport {
     /// (output PUTs, CHECK_IF_DONE LISTs), so they are nonzero whenever
     /// the run touched the store at all.
     pub data: DataBreakdown,
-    /// Jobs submitted initially.
+    /// The elasticity slice: what the autoscaling control loop decided
+    /// (policy, decision counts, capacity timeline, units added and
+    /// released, time-at-capacity).  `policy == "none"` — the default —
+    /// is the paper's fixed fleet.
+    pub scaling: ScalingBreakdown,
+    /// Jobs submitted (initial submission plus any scheduled bursts).
     pub jobs_submitted: u64,
 }
 
@@ -150,6 +157,20 @@ impl RunReport {
                 p.pool, p.launched, p.interrupted, p.machine_hours, p.cost_usd
             ));
         }
+        if self.scaling.policy != "none" {
+            s.push_str(&format!(
+                "scaling({}): {} decisions ({} out / {} in), +{}/-{} units, capacity {}..{}, {:.2} unit-h\n",
+                self.scaling.policy,
+                self.scaling.decisions,
+                self.scaling.scale_outs,
+                self.scaling.scale_ins,
+                self.scaling.units_launched,
+                self.scaling.units_terminated,
+                self.scaling.floor_capacity,
+                self.scaling.peak_capacity,
+                self.scaling.capacity_unit_hours,
+            ));
+        }
         if self.data.total_bytes() > 0 {
             s.push_str(&format!(
                 "data: {:.2} GB down, {:.2} GB up ({:.2} GB wasted); bottleneck {:.0}% bucket / {:.0}% NIC; requests ${:.4}, egress ${:.4}\n",
@@ -163,6 +184,60 @@ impl RunReport {
             ));
         }
         s
+    }
+
+    /// The full report as JSON — what `ds run --json` prints.  The
+    /// field set is pinned by the golden-snapshot test
+    /// (`rust/tests/golden_json.rs`): schema drift fails loudly there
+    /// instead of silently breaking downstream parsers.
+    pub fn to_json(&self) -> Value {
+        let st = &self.stats;
+        let stats = Value::obj()
+            .with("completed", st.completed)
+            .with("skipped_done", st.skipped_done)
+            .with("duplicates", st.duplicates)
+            .with("failed_attempts", st.failed_attempts)
+            .with("stalled", st.stalled)
+            .with("lost_to_death", st.lost_to_death)
+            .with("dead_lettered", st.dead_lettered)
+            .with("instances_launched", st.instances_launched)
+            .with("interruptions", st.interruptions)
+            .with("crashes", st.crashes)
+            .with("alarm_terminations", st.alarm_terminations)
+            .with("self_shutdowns", st.self_shutdowns)
+            .with("events_processed", st.events_processed);
+        let cost = Value::obj()
+            .with("total_usd", self.cost.total_usd())
+            .with("ec2_usd", self.cost.ec2_usd)
+            .with("sqs_usd", self.cost.sqs_usd)
+            .with("s3_usd", self.cost.s3_usd)
+            .with("s3_egress_usd", self.cost.s3_egress_usd)
+            .with("cloudwatch_usd", self.cost.cloudwatch_usd)
+            .with("machine_hours", self.cost.machine_hours)
+            .with("on_demand_equivalent_usd", self.cost.on_demand_equivalent_usd)
+            .with("spot_savings_factor", self.cost.spot_savings_factor())
+            .with("overhead_fraction", self.cost.overhead_fraction());
+        Value::obj()
+            .with("jobs_submitted", self.jobs_submitted)
+            .with("stats", stats)
+            .with(
+                "drained_at_s",
+                match self.drained_at {
+                    Some(t) => Value::from(t as f64 / 1000.0),
+                    None => Value::Null,
+                },
+            )
+            .with("ended_at_s", self.ended_at as f64 / 1000.0)
+            .with("cleaned_up", self.cleaned_up)
+            .with("jobs_per_hour", self.jobs_per_hour())
+            .with("duplicate_fraction", self.duplicate_fraction())
+            .with("cost", cost)
+            .with(
+                "pools",
+                Value::Arr(self.pools.iter().map(aggregate::pool_to_json).collect()),
+            )
+            .with("data", aggregate::data_to_json(&self.data))
+            .with("scaling", aggregate::scaling_to_json(&self.scaling, true))
     }
 }
 
@@ -230,6 +305,7 @@ mod tests {
             cost: CostReport::default(),
             pools: vec![],
             data: DataBreakdown::default(),
+            scaling: ScalingBreakdown::default(),
             jobs_submitted: 100,
         }
     }

@@ -6,7 +6,7 @@
 //! fragment, and JSON identity — so adding an axis is one impl plus one
 //! entry in [`AXES`].  The registry order is the **label order**
 //! (machines, visibility, volatility, duration, allocation, instance
-//! set, input MB, net profile), chosen so registry-assembled labels are
+//! set, input MB, net profile, scaling, scaling target), chosen so registry-assembled labels are
 //! byte-identical to the historical hand-formatted ones; the cartesian
 //! *expansion* order lives in
 //! [`ScenarioMatrix::scenarios`](super::ScenarioMatrix::scenarios).
@@ -20,6 +20,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
 use crate::aws::s3::dataplane::NetProfile;
+use crate::coordinator::autoscale::{ScalingMode, DEFAULT_TARGET_PER_UNIT};
 use crate::cli::Args;
 use crate::json::Value;
 use crate::sim::clock::{fmt_dur, from_secs_f64};
@@ -87,6 +88,8 @@ pub static AXES: &[&dyn Axis] = &[
     &InstanceSetAxis,
     &InputMbAxis,
     &NetProfileAxis,
+    &ScalingAxis,
+    &ScalingTargetAxis,
 ];
 
 // ---------------------------------------------------------------------------
@@ -168,6 +171,12 @@ pub fn parse_volatility(s: &str) -> Result<Volatility> {
 pub fn parse_net_profile(s: &str) -> Result<NetProfile> {
     NetProfile::parse(s)
         .ok_or_else(|| anyhow!("net-profile must be wide|standard|narrow, got '{s}'"))
+}
+
+/// Parse a scaling mode name.
+pub fn parse_scaling(s: &str) -> Result<ScalingMode> {
+    ScalingMode::parse(s)
+        .ok_or_else(|| anyhow!("scaling must be none|target-tracking|step, got '{s}'"))
 }
 
 /// Parse an allocation strategy name.
@@ -838,6 +847,133 @@ impl Axis for NetProfileAxis {
     }
 }
 
+/// Autoscaling policy mode — `--scaling` / `SCALING`.  `none` is the
+/// paper's fixed fleet; `target-tracking` and `step` engage the
+/// monitor's closed-loop controller
+/// ([`crate::coordinator::autoscale`]).
+pub struct ScalingAxis;
+
+impl Axis for ScalingAxis {
+    fn key(&self) -> &'static str {
+        "SCALING"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "scaling",
+            value: "P,P,..",
+            help: "autoscaling policy axis: none|target-tracking|step (alarm-driven monitor scaling)",
+            file_key: Some("SCALING"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.scalings.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.scalings.iter().map(|s| s.name()))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "scaling")? {
+            m.scalings = items
+                .iter()
+                .map(|s| parse_scaling(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "SCALING")? {
+            m.scalings = items
+                .iter()
+                .map(|v| item_str(v, "SCALING").and_then(parse_scaling))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "SCALING",
+            Value::Arr(m.scalings.iter().map(|s| Value::from(s.name())).collect()),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        // The mode picks the canonical policy; the scaling-target axis
+        // (registered after this one) overrides the target knob.
+        cell.opts.scaling = sc.scaling.policy(DEFAULT_TARGET_PER_UNIT);
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        // Fixed-fleet cells stay unlabeled, so historical labels are
+        // byte-stable (the only-label-when-used rule).
+        (sc.scaling != ScalingMode::None).then(|| format!("scale={}", sc.scaling.name()))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.scaling != ScalingMode::None).then(|| Value::from(sc.scaling.name()))
+    }
+}
+
+/// Scaling-policy backlog target — `--scaling-target` /
+/// `SCALING_TARGET`: desired backlog (visible + in-flight jobs) per
+/// weighted capacity unit.  Labeled (and serialized into scenario JSON)
+/// only when a scaling policy is engaged.
+pub struct ScalingTargetAxis;
+
+impl Axis for ScalingTargetAxis {
+    fn key(&self) -> &'static str {
+        "SCALING_TARGET"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "scaling-target",
+            value: "B,B,..",
+            help: "target backlog per capacity unit for --scaling (default 4)",
+            file_key: Some("SCALING_TARGET"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.scaling_targets.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(&m.scaling_targets)
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(targets) = cli_typed_list::<f64>(args, "scaling-target")? {
+            ensure!(
+                targets.iter().all(|t| *t > 0.0),
+                "--scaling-target values must be > 0"
+            );
+            m.scaling_targets = targets;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "SCALING_TARGET")? {
+            let targets: Vec<f64> = items
+                .iter()
+                .map(|v| item_f64(v, "SCALING_TARGET"))
+                .collect::<Result<_>>()?;
+            ensure!(
+                targets.iter().all(|t| *t > 0.0),
+                "SCALING_TARGET values must be > 0"
+            );
+            m.scaling_targets = targets;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![("SCALING_TARGET", num_arr(m.scaling_targets.iter().copied()))]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        if let Some(policy) = &mut cell.opts.scaling {
+            policy.target_per_unit = sc.scaling_target;
+        }
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        (sc.scaling != ScalingMode::None).then(|| format!("tgt={}", sc.scaling_target))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.scaling != ScalingMode::None).then(|| Value::from(sc.scaling_target))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The flag tables (generated surfaces)
 // ---------------------------------------------------------------------------
@@ -999,6 +1135,12 @@ static RUN_ONLY_POST: &[FlagSpec] = &[
         flag: "time-scale",
         value: "X",
         help: "PJRT wall-time to sim-time scale (default 1.0)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "json",
+        value: "",
+        help: "emit the run report as JSON on stdout (chatter to stderr)",
         file_key: None,
     },
     FlagSpec {
@@ -1177,6 +1319,8 @@ mod tests {
             ],
             input_mbs: vec![0.0, 64.0],
             net_profiles: vec![NetProfile::narrow()],
+            scalings: vec![ScalingMode::None, ScalingMode::TargetTracking],
+            scaling_targets: vec![2.0, 6.0],
             models: vec![DurationModel {
                 mean_s: 45.0,
                 cv: 0.5,
@@ -1244,6 +1388,67 @@ mod tests {
         let file = crate::json::parse(r#"{"JOB_MEAN_S": [{"CV": 0.9}]}"#).unwrap();
         let err = DurationAxis.parse_file(&file, &mut m).unwrap_err();
         assert!(format!("{err:#}").contains("MEAN_S"), "{err:#}");
+    }
+
+    #[test]
+    fn scaling_axes_parse_expand_and_label_when_used() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --scaling none,target-tracking --scaling-target 2,8");
+        ScalingAxis.parse_cli(&args, &mut m).unwrap();
+        ScalingTargetAxis.parse_cli(&args, &mut m).unwrap();
+        assert_eq!(
+            m.scalings,
+            vec![ScalingMode::None, ScalingMode::TargetTracking]
+        );
+        assert_eq!(m.scaling_targets, vec![2.0, 8.0]);
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 4);
+        // Fixed-fleet cells stay unlabeled (historical labels stable);
+        // engaged cells carry both fragments and both JSON keys.
+        assert!(ScalingAxis.label(&scs[0]).is_none());
+        assert!(ScalingTargetAxis.label(&scs[0]).is_none());
+        assert!(ScalingAxis.json_value(&scs[1]).is_none());
+        assert_eq!(
+            ScalingAxis.label(&scs[2]).as_deref(),
+            Some("scale=target-tracking")
+        );
+        assert_eq!(ScalingTargetAxis.label(&scs[2]).as_deref(), Some("tgt=2"));
+        assert_eq!(
+            ScalingTargetAxis.json_value(&scs[3]).and_then(|v| v.as_f64()),
+            Some(8.0)
+        );
+        // Bad values are rejected, not defaulted.
+        let args = parse("sweep --scaling sometimes");
+        assert!(ScalingAxis.parse_cli(&args, &mut m).is_err());
+        let args = parse("sweep --scaling-target 0");
+        assert!(ScalingTargetAxis.parse_cli(&args, &mut m).is_err());
+        let file = crate::json::parse(r#"{"SCALING_TARGET": [-1]}"#).unwrap();
+        assert!(ScalingTargetAxis.parse_file(&file, &mut m).is_err());
+    }
+
+    #[test]
+    fn scaling_overlay_builds_the_policy() {
+        use crate::config::{AppConfig, FleetSpec};
+        use crate::coordinator::run::RunOptions;
+        let m = ScenarioMatrix {
+            scalings: vec![ScalingMode::Step],
+            scaling_targets: vec![6.0],
+            ..Default::default()
+        };
+        let sc = m.scenarios().remove(0);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        let p = cell.opts.scaling.expect("policy engaged");
+        assert_eq!(p.mode(), ScalingMode::Step);
+        assert_eq!(p.target_per_unit, 6.0);
+        // `ds run` shares the axes (they are opts-owned, not file-owned).
+        let cell = sc.run_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.scaling.is_some());
+        // A none-mode scenario leaves the options untouched.
+        let m = ScenarioMatrix::default();
+        let sc = m.scenarios().remove(0);
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.scaling.is_none());
     }
 
     #[test]

@@ -32,6 +32,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
 use crate::aws::s3::dataplane::NetProfile;
+use crate::coordinator::autoscale::ScalingMode;
 use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::coordinator::run::RunOptions;
 use crate::sim::SimTime;
@@ -55,6 +56,8 @@ pub struct SweepPlanBuilder {
     instance_sets: Option<Vec<Vec<InstanceSlot>>>,
     input_mbs: Option<Vec<f64>>,
     net_profiles: Option<Vec<NetProfile>>,
+    scalings: Option<Vec<ScalingMode>>,
+    scaling_targets: Option<Vec<f64>>,
     models: Option<Vec<DurationModel>>,
 }
 
@@ -144,6 +147,18 @@ impl SweepPlanBuilder {
         self
     }
 
+    /// Autoscaling policy axis (default: none, the fixed fleet).
+    pub fn scalings(mut self, scalings: impl IntoIterator<Item = ScalingMode>) -> Self {
+        self.scalings = Some(scalings.into_iter().collect());
+        self
+    }
+
+    /// Scaling backlog-per-unit target axis (default: 4).
+    pub fn scaling_targets(mut self, targets: impl IntoIterator<Item = f64>) -> Self {
+        self.scaling_targets = Some(targets.into_iter().collect());
+        self
+    }
+
     /// Duration-model axis (default: one `DurationModel::default()`).
     pub fn models(mut self, models: impl IntoIterator<Item = DurationModel>) -> Self {
         self.models = Some(models.into_iter().collect());
@@ -187,6 +202,8 @@ impl SweepPlanBuilder {
         set_axis!(instance_sets, instance_sets);
         set_axis!(input_mbs, input_mbs);
         set_axis!(net_profiles, net_profiles);
+        set_axis!(scalings, scalings);
+        set_axis!(scaling_targets, scaling_targets);
         set_axis!(models, models);
         Ok(SweepPlan {
             base_cfg: cfg,

@@ -5,7 +5,8 @@
 //! human-readable files; this module keeps the *experiment* surface
 //! honest the same way.  Every sweep axis — machines, visibility,
 //! volatility, duration model, allocation strategy, instance set, input
-//! MB, net profile — is one [`Axis`] implementation declaring its CLI
+//! MB, net profile, scaling policy, scaling target — is one [`Axis`]
+//! implementation declaring its CLI
 //! flag(s), its Sweep-file key, its per-cell config/fleet/job overlay,
 //! its label fragment, and its JSON identity.  The registry ([`AXES`])
 //! is the single source of truth: `ds sweep --help`, the strict
@@ -50,6 +51,7 @@ pub use file::{plan_from_cli, SweepFile};
 use crate::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
 use crate::aws::s3::dataplane::NetProfile;
 use crate::config::{AppConfig, FleetSpec, JobSpec};
+use crate::coordinator::autoscale::ScalingMode;
 use crate::coordinator::run::RunOptions;
 use crate::json::Value;
 use crate::sim::{SimTime, MINUTE};
@@ -87,6 +89,12 @@ pub struct Scenario {
     pub input_mb: f64,
     /// Network profile for this cell's data plane.
     pub net: NetProfile,
+    /// Autoscaling policy mode for this cell's monitor
+    /// ([`ScalingMode::None`] = the paper's fixed fleet).
+    pub scaling: ScalingMode,
+    /// Target backlog (visible + in-flight jobs) per capacity unit for
+    /// the scaling policy; ignored when `scaling` is `None`.
+    pub scaling_target: f64,
     pub model: DurationModel,
 }
 
@@ -204,6 +212,11 @@ pub struct ScenarioMatrix {
     pub input_mbs: Vec<f64>,
     /// Network profiles (`--net-profile`).
     pub net_profiles: Vec<NetProfile>,
+    /// Autoscaling policy modes (`--scaling`); `None` = fixed fleet.
+    pub scalings: Vec<ScalingMode>,
+    /// Backlog-per-unit targets for the scaling policy
+    /// (`--scaling-target`).
+    pub scaling_targets: Vec<f64>,
     pub models: Vec<DurationModel>,
 }
 
@@ -218,6 +231,8 @@ impl Default for ScenarioMatrix {
             instance_sets: vec![Vec::new()],
             input_mbs: vec![0.0],
             net_profiles: vec![NetProfile::default()],
+            scalings: vec![ScalingMode::None],
+            scaling_targets: vec![crate::coordinator::autoscale::DEFAULT_TARGET_PER_UNIT],
             models: vec![DurationModel::default()],
         }
     }
@@ -237,7 +252,8 @@ impl ScenarioMatrix {
 
     /// Expand the cartesian product in a fixed order: machines outermost,
     /// then visibility, volatility, allocation strategy, instance set,
-    /// input MB, net profile, and innermost the duration model.  Axis
+    /// input MB, net profile, scaling mode, scaling target, and
+    /// innermost the duration model.  Axis
     /// element order is preserved, so single-axis sweeps read like the
     /// input list.  (This expansion order is pinned by historical
     /// reports; the registry's order is the *label* order, which differs
@@ -251,6 +267,8 @@ impl ScenarioMatrix {
                 * self.instance_sets.len()
                 * self.input_mbs.len()
                 * self.net_profiles.len()
+                * self.scalings.len()
+                * self.scaling_targets.len()
                 * self.models.len(),
         );
         for &machines in &self.cluster_machines {
@@ -260,17 +278,23 @@ impl ScenarioMatrix {
                         for instance_set in &self.instance_sets {
                             for &input_mb in &self.input_mbs {
                                 for net in &self.net_profiles {
-                                    for model in &self.models {
-                                        out.push(Scenario {
-                                            volatility,
-                                            visibility,
-                                            machines,
-                                            allocation,
-                                            instance_set: instance_set.clone(),
-                                            input_mb,
-                                            net: net.clone(),
-                                            model: model.clone(),
-                                        });
+                                    for &scaling in &self.scalings {
+                                        for &scaling_target in &self.scaling_targets {
+                                            for model in &self.models {
+                                                out.push(Scenario {
+                                                    volatility,
+                                                    visibility,
+                                                    machines,
+                                                    allocation,
+                                                    instance_set: instance_set.clone(),
+                                                    input_mb,
+                                                    net: net.clone(),
+                                                    scaling,
+                                                    scaling_target,
+                                                    model: model.clone(),
+                                                });
+                                            }
+                                        }
                                     }
                                 }
                             }
@@ -345,6 +369,8 @@ mod tests {
             instance_set: Vec::new(),
             input_mb: 0.0,
             net: NetProfile::default(),
+            scaling: ScalingMode::None,
+            scaling_target: 4.0,
             model: DurationModel {
                 mean_s: 120.0,
                 ..Default::default()

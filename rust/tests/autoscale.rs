@@ -1,0 +1,309 @@
+//! Control-loop invariants for the elastic autoscaler (DESIGN.md §8):
+//!
+//! * capacity never exits `[min_capacity, max_capacity]`, for any
+//!   policy, backlog sequence, or signal order;
+//! * applied scale-outs are never closer together than the scale-out
+//!   cooldown (ditto scale-ins);
+//! * target-tracking converges on steady arrivals: the backlog per
+//!   unit ends inside the policy band instead of diverging;
+//! * scale-in never strands work: a job whose machine is terminated
+//!   mid-flight redelivers through its SQS visibility lease and still
+//!   completes — elasticity cannot lose jobs;
+//! * the `--scaling` axes round-trip through a Sweep file into a
+//!   bit-identical report (the `ds sweep --scaling … --json`
+//!   acceptance path).
+
+use ds_rs::config::JobSpec;
+use ds_rs::coordinator::autoscale::{ScalingMode, ScalingPolicy};
+use ds_rs::coordinator::run::{run_full, RunOptions, Simulation};
+use ds_rs::coordinator::sweep::{run_sweep, SweepPlan};
+use ds_rs::scenario::SweepFile;
+use ds_rs::sim::MINUTE;
+use ds_rs::testutil::fixtures::{modeled, plate_jobs, quick_cfg, shaped, template_fleet};
+use ds_rs::testutil::forall_r;
+
+/// Random policy with random (ordered) bounds.
+fn random_policy(rng: &mut ds_rs::sim::SimRng) -> ScalingPolicy {
+    let target = 0.5 + rng.f64() * 8.0;
+    let mut p = if rng.chance(0.5) {
+        ScalingPolicy::target_tracking(target)
+    } else {
+        ScalingPolicy::step(target)
+    };
+    let a = 1 + rng.below(12) as u32;
+    let b = 1 + rng.below(12) as u32;
+    p.limits.min_capacity = a.min(b);
+    p.limits.max_capacity = a.max(b);
+    p
+}
+
+#[test]
+fn prop_desired_capacity_never_exits_bounds() {
+    forall_r(
+        "autoscale-bounds",
+        120,
+        0x5CA1E,
+        |rng| {
+            let p = random_policy(rng);
+            let current = rng.below(20) as u32;
+            let backlog = rng.below(10_000);
+            (p, current, backlog)
+        },
+        |(p, current, backlog)| {
+            let (lo, hi) = (p.limits.min_capacity, p.limits.max_capacity);
+            let out = p.desired_out(*current, *backlog);
+            let inn = p.desired_in(*current, *backlog);
+            if !(lo..=hi).contains(&out) {
+                return Err(format!("desired_out {out} outside [{lo}, {hi}]"));
+            }
+            if !(lo..=hi).contains(&inn) {
+                return Err(format!("desired_in {inn} outside [{lo}, {hi}]"));
+            }
+            // Directionality: out never shrinks below a bounded current,
+            // in never grows above it.
+            if (lo..=hi).contains(current) {
+                if out < *current {
+                    return Err(format!("scale-out shrank: {current} -> {out}"));
+                }
+                if inn > *current {
+                    return Err(format!("scale-in grew: {current} -> {inn}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_desired_out_monotone_in_backlog() {
+    // More backlog never asks for less capacity (both policies).
+    forall_r(
+        "autoscale-monotone",
+        80,
+        0xB4C0,
+        |rng| {
+            let p = random_policy(rng);
+            let current = 1 + rng.below(10) as u32;
+            let b1 = rng.below(2_000);
+            let b2 = b1 + rng.below(2_000);
+            (p, current, b1, b2)
+        },
+        |(p, current, b1, b2)| {
+            let d1 = p.desired_out(*current, *b1);
+            let d2 = p.desired_out(*current, *b2);
+            if d2 < d1 {
+                return Err(format!(
+                    "backlog {b1}->{b2} lowered desired {d1}->{d2} ({:?})",
+                    p.kind
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Run one elastic simulation and return its report.
+fn elastic_run(
+    policy: ScalingPolicy,
+    waves: &[(u64, u32)],
+    mean_s: f64,
+    seed: u64,
+) -> ds_rs::metrics::RunReport {
+    let cfg = quick_cfg(4); // 4 machines = 16 workers at full size
+    let opts = RunOptions {
+        seed,
+        scaling: Some(policy),
+        ..Default::default()
+    };
+    let mut sim = Simulation::new(cfg, opts).unwrap();
+    let (first, rest) = waves.split_first().expect("at least one wave");
+    sim.submit(&JobSpec::plate("P1", first.1, 1, vec![])).unwrap();
+    for &(at_min, jobs) in rest {
+        sim.submit_at(at_min * MINUTE, JobSpec::plate("P1", jobs, 1, vec![]));
+    }
+    sim.start(&template_fleet()).unwrap();
+    let mut ex = modeled(mean_s);
+    sim.run(&mut ex).unwrap()
+}
+
+#[test]
+fn capacity_timeline_respects_bounds_and_cooldowns() {
+    for mode in [ScalingMode::TargetTracking, ScalingMode::Step] {
+        let mut policy = mode.policy(2.0).unwrap();
+        policy.limits.scale_in_cooldown = 4 * MINUTE;
+        policy.limits.scale_out_cooldown = 3 * MINUTE;
+        policy.limits.warmup = 4 * MINUTE;
+        let limits = policy.limits.clone();
+        // Three bursts with idle gaps: plenty of in and out decisions.
+        let report = elastic_run(policy, &[(0, 24), (45, 24), (90, 24)], 180.0, 7);
+        assert!(report.fully_accounted(), "{}", report.summary());
+        assert!(
+            report.scaling.scale_ins >= 1 && report.scaling.scale_outs >= 1,
+            "loop never exercised both directions: {:?}",
+            report.scaling
+        );
+        let tl = &report.scaling.timeline;
+        let mut last_out: Option<u64> = None;
+        let mut last_in: Option<u64> = None;
+        for d in tl {
+            assert!(
+                (1..=4).contains(&d.to),
+                "capacity {} exits [1, 4] at {} ({mode:?})",
+                d.to,
+                d.at
+            );
+            if d.to > d.from {
+                if let Some(prev) = last_out {
+                    assert!(
+                        d.at - prev >= limits.scale_out_cooldown,
+                        "scale-outs {prev} and {} inside the cooldown ({mode:?})",
+                        d.at
+                    );
+                }
+                last_out = Some(d.at);
+            } else {
+                if let Some(prev) = last_in {
+                    assert!(
+                        d.at - prev >= limits.scale_in_cooldown,
+                        "scale-ins {prev} and {} inside the cooldown ({mode:?})",
+                        d.at
+                    );
+                }
+                last_in = Some(d.at);
+            }
+        }
+        // The breakdown's counters agree with its own timeline.
+        assert_eq!(report.scaling.decisions as usize, tl.len());
+        assert_eq!(
+            report.scaling.scale_outs as usize,
+            tl.iter().filter(|d| d.to > d.from).count()
+        );
+    }
+}
+
+#[test]
+fn target_tracking_converges_on_steady_arrivals() {
+    // Steady load: 4 jobs/minute at 120 s mean on 2-core containers —
+    // about 8 compute-busy workers, i.e. ~2 machines of the 4 allowed.
+    // After two hours of arrivals the controller must have settled: the
+    // backlog per unit ends within the policy band (not diverging, not
+    // collapsed to the floor with a runaway queue).
+    let mut policy = ScalingPolicy::target_tracking(4.0);
+    policy.limits.scale_in_cooldown = 3 * MINUTE;
+    policy.limits.warmup = 3 * MINUTE;
+    let target = policy.target_per_unit;
+    let cfg = quick_cfg(4);
+    let opts = RunOptions {
+        seed: 11,
+        scaling: Some(policy),
+        // Cut the run at the end of the arrival phase: we inspect the
+        // steady state, not the final drain.
+        max_sim_time: 120 * MINUTE,
+        ..Default::default()
+    };
+    let mut sim = Simulation::new(cfg, opts).unwrap();
+    sim.submit(&JobSpec::plate("P1", 4, 1, vec![])).unwrap();
+    for k in 1..120u64 {
+        sim.submit_at(k * MINUTE, JobSpec::plate("P1", 4, 1, vec![]));
+    }
+    sim.start(&template_fleet()).unwrap();
+    let mut ex = modeled(120.0);
+    let report = sim.run(&mut ex).unwrap();
+    // Steady state at cutoff: look at the live queue and fleet.
+    let (visible, in_flight) = sim
+        .acct
+        .sqs
+        .approximate_counts("MyApp-queue", 120 * MINUTE);
+    let backlog = (visible + in_flight) as f64;
+    let capacity = f64::from(sim.acct.ec2.fleet_target(1).max(1));
+    let per_unit = backlog / capacity;
+    assert!(
+        per_unit <= 3.0 * target,
+        "diverged: backlog/unit {per_unit:.1} vs target {target} ({})",
+        report.summary()
+    );
+    assert!(
+        backlog < 200.0,
+        "runaway queue: {backlog} jobs pending after 2 h of steady load"
+    );
+    // The controller actually worked (made decisions) and the loop kept
+    // completing jobs at the arrival rate.
+    assert!(report.scaling.decisions >= 1, "{:?}", report.scaling);
+    assert!(
+        report.stats.completed >= 400,
+        "throughput fell behind steady arrivals: {}",
+        report.summary()
+    );
+}
+
+#[test]
+fn scale_in_never_strands_in_flight_work() {
+    // An aggressive scale-in policy (tight band, short cooldowns) that
+    // terminates machines running jobs: every terminated job's message
+    // redelivers via its visibility lease and the run still accounts
+    // for every submitted job, across failure-heavy executors.
+    forall_r(
+        "autoscale-no-strand",
+        6,
+        0xA5CA,
+        |rng| {
+            let seed = rng.next_u64();
+            let target = 1.0 + rng.f64() * 4.0;
+            let mean_s = 120.0 + rng.f64() * 240.0;
+            let step = rng.chance(0.5);
+            (seed, target, mean_s, step)
+        },
+        |&(seed, target, mean_s, step)| {
+            let mut policy = if step {
+                ScalingPolicy::step(target)
+            } else {
+                ScalingPolicy::target_tracking(target)
+            };
+            policy.limits.scale_in_cooldown = MINUTE;
+            policy.limits.warmup = MINUTE;
+            let cfg = quick_cfg(4);
+            let jobs = plate_jobs(10, 2); // 20 jobs
+            let opts = RunOptions {
+                seed,
+                scaling: Some(policy),
+                ..Default::default()
+            };
+            let mut ex = shaped(mean_s, 0.4, 0.0, 0.05);
+            let report = run_full(&cfg, &jobs, &template_fleet(), &mut ex, opts)
+                .map_err(|e| e.to_string())?;
+            if !report.fully_accounted() {
+                return Err(format!("stranded work: {}", report.summary()));
+            }
+            if !report.cleaned_up {
+                return Err(format!("no cleanup: {}", report.summary()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn scaling_sweep_round_trips_through_a_sweep_file_bit_identically() {
+    // The acceptance path: `ds sweep --scaling … --json` rendered to a
+    // Sweep file, re-parsed, re-run — bit-identical report.
+    let plan = SweepPlan::builder()
+        .config(quick_cfg(3))
+        .jobs(plate_jobs(8, 2))
+        .seeds([1, 2])
+        .scalings([ScalingMode::None, ScalingMode::TargetTracking, ScalingMode::Step])
+        .scaling_targets([2.0])
+        .job_mean_s([240.0])
+        .build()
+        .unwrap();
+    let text = SweepFile::render(&plan);
+    let back = SweepFile::from_text(&text).unwrap().to_plan().unwrap();
+    let a = run_sweep(&plan, 2).unwrap();
+    let b = run_sweep(&back, 2).unwrap();
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.cells, b.cells);
+    // Labels distinguish the policies, and only when engaged.
+    let labels: Vec<String> = a.report.scenarios.iter().map(|s| s.label.clone()).collect();
+    assert!(!labels[0].contains("scale="), "{labels:?}");
+    assert!(labels[1].contains("scale=target-tracking tgt=2"), "{labels:?}");
+    assert!(labels[2].contains("scale=step tgt=2"), "{labels:?}");
+}

@@ -129,6 +129,63 @@ fn make_files_then_full_run() {
 }
 
 #[test]
+fn run_json_output_parses_and_carries_scaling() {
+    let dir = std::env::temp_dir().join(format!("ds-cli-runjson-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = |name: &str| dir.join(name).to_str().unwrap().to_string();
+    run_ok(&["make-config", "--machines", "2", "--out", &p("config.json")]);
+    run_ok(&["make-fleet-file", "--out", &p("fleet.json")]);
+    run_ok(&["make-job", "--wells", "4", "--sites", "2", "--out", &p("job.json")]);
+    let out = run_ok(&[
+        "run",
+        "--config",
+        &p("config.json"),
+        "--job",
+        &p("job.json"),
+        "--fleet",
+        &p("fleet.json"),
+        "--seed",
+        "5",
+        "--job-mean-s",
+        "30",
+        "--scaling",
+        "target-tracking",
+        "--scaling-target",
+        "2",
+        "--json",
+    ]);
+    // With --json, stdout is exactly one JSON object.
+    let v = ds_rs::json::parse(out.trim()).unwrap();
+    assert_eq!(
+        v.get("jobs_submitted").and_then(ds_rs::json::Value::as_u64),
+        Some(8)
+    );
+    let stats = v.get("stats").unwrap();
+    assert_eq!(
+        stats.get("completed").and_then(ds_rs::json::Value::as_u64),
+        Some(8)
+    );
+    let scaling = v.get("scaling").unwrap();
+    assert_eq!(
+        scaling.get("policy").and_then(ds_rs::json::Value::as_str),
+        Some("target-tracking")
+    );
+    assert!(scaling.get("timeline").and_then(ds_rs::json::Value::as_arr).is_some());
+    assert!(v.get("cost").and_then(|c| c.get("total_usd")).is_some());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_and_sweep_reject_bad_scaling_values() {
+    let out = ds().args(["sweep", "--scaling", "sometimes"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("scaling"));
+    let out = ds().args(["sweep", "--scaling-target", "0"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("scaling-target"));
+}
+
+#[test]
 fn sweep_prints_scenario_table() {
     // 2 scenarios x 2 seeds over a tiny synthetic plate, in parallel.
     let out = run_ok(&[

@@ -6,30 +6,20 @@ use ds_rs::aws::s3::dataplane::{gbps_to_bytes_per_ms, DataPlane, Direction, NetP
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::sim::MINUTE;
+use ds_rs::testutil::fixtures;
 use ds_rs::testutil::forall_r;
 use ds_rs::workloads::{DurationModel, ModeledExecutor};
 
+/// The shared small rig, with the data plane's historical 10-minute
+/// visibility (long transfers must not churn redeliveries).
 fn quick_cfg() -> AppConfig {
-    AppConfig {
-        cluster_machines: 2,
-        tasks_per_machine: 2,
-        docker_cores: 2,
-        machine_types: vec!["m5.xlarge".into()],
-        machine_price: 0.10,
-        sqs_message_visibility: 10 * MINUTE,
-        ..Default::default()
-    }
+    let mut cfg = fixtures::quick_cfg(2);
+    cfg.sqs_message_visibility = 10 * MINUTE;
+    cfg
 }
 
 fn modeled(mean_s: f64) -> ModeledExecutor {
-    ModeledExecutor {
-        model: DurationModel {
-            mean_s,
-            cv: 0.2,
-            ..Default::default()
-        },
-        ..Default::default()
-    }
+    fixtures::modeled(mean_s)
 }
 
 /// One random data-plane episode: flows arriving on random instances and

@@ -6,42 +6,31 @@
 //! only, never a single bit of the output.  These tests pin both.
 
 use ds_rs::aws::ec2::{AllocationStrategy, InstanceSlot};
-use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
+use ds_rs::config::AppConfig;
+use ds_rs::coordinator::autoscale::ScalingMode;
 use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
 use ds_rs::metrics::RunReport;
 use ds_rs::sim::MINUTE;
+use ds_rs::testutil::fixtures::{plate_jobs, quick_cfg, shaped, template_fleet};
 use ds_rs::workloads::{DurationModel, ModeledExecutor};
 
 fn cfg() -> AppConfig {
-    AppConfig {
-        cluster_machines: 3,
-        tasks_per_machine: 2,
-        docker_cores: 2,
-        machine_types: vec!["m5.xlarge".into()],
-        machine_price: 0.10,
-        sqs_message_visibility: 5 * MINUTE,
-        ..Default::default()
-    }
+    quick_cfg(3)
 }
 
 fn serial_run(seed: u64) -> RunReport {
-    let jobs = JobSpec::plate("P1", 8, 2, vec![]);
-    let fleet = FleetSpec::template("us-east-1").unwrap();
-    let mut ex = ModeledExecutor {
-        model: DurationModel {
-            mean_s: 45.0,
-            cv: 0.3,
-            stall_prob: 0.02,
-            fail_prob: 0.05,
-        },
-        ..Default::default()
-    };
+    let jobs = plate_jobs(8, 2);
+    let mut ex = shaped(45.0, 0.3, 0.02, 0.05);
     let opts = RunOptions {
         seed,
         ..Default::default()
     };
-    run_full(&cfg(), &jobs, &fleet, &mut ex, opts).unwrap()
+    run_full(&cfg(), &jobs, &fleet(), &mut ex, opts).unwrap()
+}
+
+fn fleet() -> ds_rs::config::FleetSpec {
+    template_fleet()
 }
 
 #[test]
@@ -63,7 +52,7 @@ fn different_seeds_diverge() {
 }
 
 fn sweep_plan() -> SweepPlan {
-    let jobs = JobSpec::plate("P1", 6, 2, vec![]); // 12 jobs per cell
+    let jobs = plate_jobs(6, 2); // 12 jobs per cell
     let matrix = ScenarioMatrix {
         seeds: (0..8).collect(),
         cluster_machines: vec![2, 4],
@@ -127,7 +116,7 @@ fn sweep_cell_matches_standalone_run() {
 fn heterogeneous_sweep_plan() -> SweepPlan {
     let mut base = cfg();
     base.machine_price = 0.20; // per weighted unit
-    let jobs = JobSpec::plate("P1", 5, 2, vec![]); // 10 jobs per cell
+    let jobs = plate_jobs(5, 2); // 10 jobs per cell
     let matrix = ScenarioMatrix {
         seeds: (0..4).collect(),
         cluster_machines: vec![3],
@@ -164,7 +153,7 @@ fn builder_and_sweep_file_paths_are_bit_identical() {
     use ds_rs::scenario::SweepFile;
     let plan = ds_rs::coordinator::sweep::SweepPlan::builder()
         .config(cfg())
-        .jobs(JobSpec::plate("P1", 6, 2, vec![]))
+        .jobs(plate_jobs(6, 2))
         .seeds(0..8)
         .machines([2, 4])
         // The builder inherits visibility from the config (like the
@@ -213,4 +202,53 @@ fn heterogeneous_sweep_identical_at_1_2_and_8_threads() {
         assert!(!s.pools.is_empty(), "no pool rows for '{}'", s.label);
         assert!(s.pools.iter().any(|p| p.pool.ends_with("/on-demand")));
     }
+}
+
+/// The scaling axes join the thread-count invariance gate: a sweep over
+/// fixed vs target-tracking vs step policies is bit-identical at 1/2/8
+/// threads, and the elastic cells actually moved the fleet.
+#[test]
+fn scaling_sweep_identical_at_1_2_and_8_threads() {
+    let jobs = plate_jobs(12, 2); // 24 jobs per cell
+    let matrix = ScenarioMatrix {
+        seeds: (0..3).collect(),
+        cluster_machines: vec![4],
+        scalings: ScalingMode::ALL.to_vec(),
+        // A high per-unit target makes the scale-in band wide, so the
+        // elastic cells shrink well before the tail (deterministically
+        // across seeds), not just at the last job.
+        scaling_targets: vec![8.0],
+        models: vec![DurationModel {
+            mean_s: 300.0,
+            cv: 0.3,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    let plan = SweepPlan::new(cfg(), jobs, matrix);
+    let one = run_sweep(&plan, 1).unwrap();
+    let two = run_sweep(&plan, 2).unwrap();
+    let eight = run_sweep(&plan, 8).unwrap();
+    assert_eq!(one.report, two.report);
+    assert_eq!(one.report, eight.report);
+    assert_eq!(one.cells, two.cells);
+    assert_eq!(one.cells, eight.cells);
+    // Three distinct scenarios, policies threaded into the summaries.
+    let policies: Vec<&str> = one
+        .report
+        .scenarios
+        .iter()
+        .map(|s| s.scaling.policy.as_str())
+        .collect();
+    assert_eq!(policies, vec!["none", "target-tracking", "step"]);
+    for s in &one.report.scenarios {
+        // Elasticity never loses work: every cell completes its jobs.
+        assert!(s.completed + s.skipped_done + s.dead_lettered >= 72, "{s:?}");
+    }
+    // The elastic scenarios scaled in while the queue drained.
+    assert!(
+        one.report.scenarios[1].scaling.decisions > 0,
+        "target-tracking never decided: {:?}",
+        one.report.scenarios[1].scaling
+    );
 }

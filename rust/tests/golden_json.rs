@@ -1,0 +1,125 @@
+//! Golden-snapshot gates for the report JSON schemas.
+//!
+//! The *field sets* of `ds run --json` and `ds sweep --json` are pinned
+//! against checked-in fixtures (`tests/golden/*.keys`), so schema drift
+//! — a renamed key, a dropped object, an accidentally-omitted new field
+//! — fails loudly here instead of silently breaking downstream parsers.
+//! Values are deliberately not pinned (they are covered by the
+//! determinism suite); only the shape is.
+//!
+//! To update after an intentional schema change: the failure message
+//! prints the full actual key list — paste it over the fixture body.
+
+use std::collections::BTreeSet;
+
+use ds_rs::coordinator::autoscale::{ScalingMode, ScalingPolicy};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::coordinator::sweep::{run_sweep, SweepPlan};
+use ds_rs::json::Value;
+use ds_rs::testutil::fixtures::{modeled, plate_jobs, quick_cfg, template_fleet};
+
+/// Collect every key path in `v`: object fields as `a.b.c`, array
+/// elements as `a[]` (first element only — rows share one shape).
+fn key_paths(v: &Value, prefix: &str, out: &mut BTreeSet<String>) {
+    match v {
+        Value::Obj(fields) => {
+            for (k, val) in fields {
+                let path = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                out.insert(path.clone());
+                key_paths(val, &path, out);
+            }
+        }
+        Value::Arr(items) => {
+            if let Some(first) = items.first() {
+                key_paths(first, &format!("{prefix}[]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn paths_of(v: &Value) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    key_paths(v, "", &mut out);
+    out
+}
+
+fn assert_matches_golden(actual: &BTreeSet<String>, fixture: &str) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(fixture);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing golden fixture {}: {e}", path.display()));
+    let want: BTreeSet<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    if *actual != want {
+        let added: Vec<&String> = actual.difference(&want).collect();
+        let removed: Vec<&String> = want.difference(actual).collect();
+        panic!(
+            "report JSON schema drifted from tests/golden/{fixture}\n\
+             keys not in the fixture: {added:?}\n\
+             fixture keys now missing: {removed:?}\n\
+             If this change is intentional, replace the fixture body with:\n{}",
+            actual.iter().cloned().collect::<Vec<_>>().join("\n")
+        );
+    }
+}
+
+/// A deterministic elastic run whose controller provably decides at
+/// least once, so the `scaling.timeline[]` row shape is exercised.
+fn elastic_report() -> ds_rs::metrics::RunReport {
+    let cfg = quick_cfg(3);
+    let jobs = plate_jobs(12, 2); // 24 jobs, mean 300 s: scale-in fires
+    let opts = RunOptions {
+        scaling: Some(ScalingPolicy::target_tracking(8.0)),
+        ..Default::default()
+    };
+    let mut ex = modeled(300.0);
+    run_full(&cfg, &jobs, &template_fleet(), &mut ex, opts).unwrap()
+}
+
+#[test]
+fn run_report_json_field_set_is_pinned() {
+    let report = elastic_report();
+    assert!(
+        report.scaling.decisions >= 1,
+        "golden run must exercise the timeline: {:?}",
+        report.scaling
+    );
+    assert_matches_golden(&paths_of(&report.to_json()), "run_report.keys");
+}
+
+#[test]
+fn sweep_report_json_field_set_is_pinned() {
+    // One scenario engaging the optional axes whose JSON keys are
+    // conditional: INPUT_MB (non-zero) and the two scaling axes.
+    let plan = SweepPlan::builder()
+        .config(quick_cfg(2))
+        .jobs(plate_jobs(2, 1))
+        .seeds([1])
+        .machines([2])
+        .input_mbs([8.0])
+        .scalings([ScalingMode::TargetTracking])
+        .scaling_targets([2.0])
+        .job_mean_s([30.0])
+        .build()
+        .unwrap();
+    let run = run_sweep(&plan, 2).unwrap();
+    assert_matches_golden(&paths_of(&run.report.to_json()), "sweep_report.keys");
+}
+
+#[test]
+fn run_and_sweep_json_round_trip_through_the_parser() {
+    // The emitted JSON is valid and value-stable through parse→pretty.
+    let j = elastic_report().to_json();
+    let parsed = ds_rs::json::parse(&j.pretty()).unwrap();
+    assert_eq!(parsed, j);
+}

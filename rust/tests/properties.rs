@@ -507,6 +507,18 @@ fn gen_report(rng: &mut SimRng) -> RunReport {
             nic_bound_ms: rng.below(1u64 << 20),
             ..Default::default()
         },
+        scaling: ds_rs::metrics::ScalingBreakdown {
+            policy: "target-tracking".into(),
+            decisions: rng.below(16),
+            scale_outs: rng.below(8),
+            scale_ins: rng.below(8),
+            units_launched: rng.below(64),
+            units_terminated: rng.below(64),
+            peak_capacity: rng.below(32) as u32,
+            floor_capacity: 1 + rng.below(4) as u32,
+            capacity_unit_hours: rng.f64() * 50.0,
+            ..Default::default()
+        },
         jobs_submitted: submitted,
     }
 }
@@ -574,6 +586,15 @@ fn prop_scenario_summary_conserves_totals() {
                 || s.interruptions != sum(|r| r.stats.interruptions)
             {
                 return Err(format!("summed counters drifted: {s:?}"));
+            }
+            if s.scaling.decisions != sum(|r| r.scaling.decisions)
+                || s.scaling.units_launched != sum(|r| r.scaling.units_launched)
+                || s.scaling.units_terminated != sum(|r| r.scaling.units_terminated)
+            {
+                return Err(format!("scaling counters drifted: {:?}", s.scaling));
+            }
+            if reports.iter().any(|r| r.scaling.peak_capacity > s.scaling.peak_capacity) {
+                return Err("scaling peak is not the max over cells".into());
             }
             if s.cells != reports.len() {
                 return Err(format!("cells={} != {}", s.cells, reports.len()));

@@ -12,19 +12,16 @@
 
 use ds_rs::aws::ec2::{AllocationStrategy, InstanceSlot, Volatility};
 use ds_rs::aws::s3::dataplane::NetProfile;
-use ds_rs::cli::Args;
 use ds_rs::config::JobSpec;
+use ds_rs::coordinator::autoscale::ScalingMode;
 use ds_rs::coordinator::sweep::{run_sweep, Scenario, SweepPlan};
 use ds_rs::scenario::{
     plan_from_cli, render_flag_specs, run_flags, sweep_flags, Axis, SweepFile, AXES,
 };
 use ds_rs::sim::{SimRng, MINUTE};
+use ds_rs::testutil::fixtures::args as cli;
 use ds_rs::testutil::forall_r;
 use ds_rs::workloads::DurationModel;
-
-fn cli(s: &str) -> Args {
-    Args::parse(s.split_whitespace().map(String::from))
-}
 
 /// A random small-but-varied plan touching every axis with some
 /// probability.  Kept tiny so the executed round-trip cases stay fast.
@@ -66,6 +63,15 @@ fn random_plan(rng: &mut SimRng) -> SweepPlan {
     }
     if rng.chance(0.4) {
         b = b.net_profiles(vec![rng.pick(&NetProfile::ALL).clone()]);
+    }
+    if rng.chance(0.4) {
+        b = b.scalings(vec![ScalingMode::None, *rng.pick(&[
+            ScalingMode::TargetTracking,
+            ScalingMode::Step,
+        ])]);
+    }
+    if rng.chance(0.4) {
+        b = b.scaling_targets(vec![1.0 + rng.below(8) as f64]);
     }
     if rng.chance(0.6) {
         b = b.models(vec![DurationModel {
@@ -196,7 +202,10 @@ fn run_flags_are_the_registry_subset_plus_run_only() {
     let run = run_flags();
     let sweep = sweep_flags();
     // The shared axes appear in both tables with identical spelling.
-    for shared in ["volatility", "job-mean-s", "job-cv", "stall-prob", "fail-prob", "input-mb", "net-profile"] {
+    for shared in [
+        "volatility", "job-mean-s", "job-cv", "stall-prob", "fail-prob", "input-mb",
+        "net-profile", "scaling", "scaling-target",
+    ] {
         assert!(run.iter().any(|f| f.flag == shared), "run missing --{shared}");
         assert!(sweep.iter().any(|f| f.flag == shared), "sweep missing --{shared}");
     }
