@@ -1,0 +1,117 @@
+#!/usr/bin/env bash
+# Perf harness for the event core (DESIGN.md §"Event core").
+#
+# Builds and runs the event_core bench (queue/store micro-benches plus
+# the macro-scale simulation), compares the result against the committed
+# BENCH_*.json snapshot, and rewrites the snapshot with the fresh
+# numbers.  Exits non-zero when macro throughput (jobs/s) drops below
+# 80% of the baseline for the same mode — the CI bench lane runs
+# `--smoke` on every push.
+#
+#   ./benchmark_compare.sh            # smoke macro (10^5 jobs / 500 machines)
+#   ./benchmark_compare.sh --million  # full 10^6 jobs / 10^3 machines
+#
+# The snapshot keeps one macro section per mode (smoke / million); a run
+# only overwrites its own mode's section, so the committed million
+# number survives smoke runs.  Baselines whose matching section is null
+# or that carry `"unmeasured": true` (bootstrap snapshots committed
+# before a machine ever ran the bench) are recorded, not compared.
+
+set -euo pipefail
+
+cd "$(dirname "$0")"
+
+MODE=smoke
+for arg in "$@"; do
+  case "$arg" in
+    --smoke) MODE=smoke ;;
+    --million) MODE=million ;;
+    *)
+      echo "usage: $0 [--smoke|--million]" >&2
+      exit 2
+      ;;
+  esac
+done
+
+SNAPSHOT="${BENCH_SNAPSHOT:-BENCH_6.json}"
+
+BENCH_ARGS=(--json)
+if [ "$MODE" = million ]; then
+  BENCH_ARGS+=(--million)
+fi
+
+echo "==> cargo bench --bench event_core ($MODE)" >&2
+RESULT=$(cargo bench --manifest-path rust/Cargo.toml --bench event_core -- "${BENCH_ARGS[@]}" | tail -n 1)
+
+NEW_JSON="$RESULT" python3 - "$SNAPSHOT" <<'PY'
+import json
+import os
+import sys
+
+snapshot = sys.argv[1]
+new = json.loads(os.environ["NEW_JSON"])
+mode = new.get("mode") or "smoke"
+
+baseline = None
+if os.path.exists(snapshot):
+    try:
+        with open(snapshot) as f:
+            baseline = json.load(f)
+    except ValueError:
+        print(f"!! existing {snapshot} is not valid JSON; ignoring baseline",
+              file=sys.stderr)
+if not isinstance(baseline, dict):
+    baseline = {}
+
+base_macro = (baseline.get("macro") or {}).get(mode) or {}
+old_tp = base_macro.get("jobs_per_s") or 0
+new_tp = (new.get("macro") or {}).get("jobs_per_s") or 0
+
+THRESHOLD = 0.80
+failed = False
+if baseline.get("unmeasured"):
+    print("== baseline is an unmeasured bootstrap snapshot: recording "
+          "first real measurement", file=sys.stderr)
+elif old_tp > 0 and new_tp > 0:
+    ratio = new_tp / old_tp
+    print(f"== macro[{mode}] throughput: {old_tp:.0f} -> {new_tp:.0f} jobs/s "
+          f"({ratio:.1%} of baseline)", file=sys.stderr)
+    if ratio < THRESHOLD:
+        print(f"!! regression: {ratio:.1%} < {THRESHOLD:.0%} of baseline",
+              file=sys.stderr)
+        failed = True
+else:
+    print(f"== no measured {mode} baseline: recording first measurement",
+          file=sys.stderr)
+
+# Informational only: micro-bench movement.
+for section, key in (("queue_ops_per_s", "calendar"),
+                     ("queue_ops_per_s", "heap"),
+                     ("store_lookups_per_s", "dense"),
+                     ("store_lookups_per_s", "map")):
+    old_v = (baseline.get(section) or {}).get(key) or 0
+    new_v = (new.get(section) or {}).get(key) or 0
+    if old_v > 0 and new_v > 0:
+        print(f"   {section}.{key}: {old_v:.0f} -> {new_v:.0f} "
+              f"({new_v / old_v:.1%})", file=sys.stderr)
+
+merged = dict(baseline)
+merged.pop("unmeasured", None)
+merged.pop("note", None)
+merged.pop("mode", None)
+merged["bench"] = "event_core"
+for k in ("queue_ops_per_s", "store_lookups_per_s"):
+    merged[k] = new.get(k)
+macro = merged.get("macro")
+if not isinstance(macro, dict) or "jobs_per_s" in macro:
+    # Flat / legacy macro section: start the per-mode layout fresh.
+    macro = {"smoke": None, "million": None}
+macro[mode] = new.get("macro")
+merged["macro"] = macro
+
+with open(snapshot, "w") as f:
+    json.dump(merged, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"== wrote {snapshot} (macro[{mode}] updated)", file=sys.stderr)
+sys.exit(1 if failed else 0)
+PY

@@ -1,0 +1,150 @@
+//! Event-core throughput: queue backends, store backends, and the
+//! macro-scale simulation (the million-job number).
+//!
+//!     cargo bench --bench event_core                  # micro + smoke macro
+//!     cargo bench --bench event_core -- --million     # the full 10⁶-job run
+//!     cargo bench --bench event_core -- --json        # machine-readable line
+//!
+//! `benchmark_compare.sh` at the repo root drives the `--json` mode and
+//! diffs the output against the committed `BENCH_*.json` snapshot; the
+//! CI bench lane fails on a >20% throughput regression.
+
+use std::time::Instant;
+
+use ds_rs::config::{FleetSpec, JobSpec};
+use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::json::Value;
+use ds_rs::sim::{EventQueue, IdStore, QueueKind, SimRng, StoreKind};
+use ds_rs::testutil::fixtures::{modeled, quick_cfg};
+
+/// Hold-one-pop-one churn at a steady population of `n`: the DES access
+/// pattern.  Returns operations (pushes + pops) per second.
+fn queue_churn(kind: QueueKind, n: usize, ops: usize) -> f64 {
+    let mut q = EventQueue::with_kind(kind);
+    let mut rng = SimRng::new(0xBEEF);
+    for _ in 0..n {
+        q.schedule_in(rng.below(60_000), 0u64);
+    }
+    let t0 = Instant::now();
+    for _ in 0..ops {
+        let (_, e) = q.pop().expect("steady population");
+        q.schedule_in(rng.below(60_000), e + 1);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    std::hint::black_box(q.len());
+    (ops * 2) as f64 / wall.max(1e-9)
+}
+
+/// Random lookups over `n` sequential ids.  Returns lookups per second.
+fn store_churn(kind: StoreKind, n: u64, ops: u64) -> f64 {
+    let mut s: IdStore<u64> = IdStore::with_kind(kind);
+    for id in 1..=n {
+        s.insert(id, id * 3);
+    }
+    let mut rng = SimRng::new(0xFEED);
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    for _ in 0..ops {
+        let id = 1 + rng.below(n);
+        acc = acc.wrapping_add(*s.get(id).expect("id in range"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    ops as f64 / wall.max(1e-9)
+}
+
+struct MacroResult {
+    jobs: u64,
+    machines: u32,
+    wall_s: f64,
+    events: u64,
+    jobs_per_s: f64,
+    events_per_s: f64,
+}
+
+/// The full simulation at scale: `wells × sites` jobs on `machines`
+/// on-demand machines, default engine (calendar + dense stores).
+fn macro_run(wells: u32, sites: u32, machines: u32) -> MacroResult {
+    let mut cfg = quick_cfg(machines);
+    cfg.check_if_done.enabled = false;
+    let jobs = JobSpec::plate("P", wells, sites, vec![]);
+    let mut fleet = FleetSpec::template("us-east-1").expect("builtin fleet");
+    fleet.on_demand_base = machines;
+    let mut ex = modeled(60.0);
+    let t0 = Instant::now();
+    let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default())
+        .expect("macro bench run");
+    let wall = t0.elapsed().as_secs_f64();
+    let jobs_n = u64::from(wells) * u64::from(sites);
+    assert_eq!(report.stats.completed, jobs_n, "bench must complete all jobs");
+    MacroResult {
+        jobs: jobs_n,
+        machines,
+        wall_s: wall,
+        events: report.stats.events_processed,
+        jobs_per_s: jobs_n as f64 / wall.max(1e-9),
+        events_per_s: report.stats.events_processed as f64 / wall.max(1e-9),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let million = args.iter().any(|a| a == "--million");
+
+    // Micro: queue backends at DES-typical populations.
+    const QUEUE_OPS: usize = 400_000;
+    let heap_qps = queue_churn(QueueKind::Heap, 4_096, QUEUE_OPS);
+    let calendar_qps = queue_churn(QueueKind::Calendar, 4_096, QUEUE_OPS);
+
+    // Micro: store backends at fleet-typical id counts.
+    const STORE_OPS: u64 = 2_000_000;
+    let map_lps = store_churn(StoreKind::Map, 4_096, STORE_OPS);
+    let dense_lps = store_churn(StoreKind::Dense, 4_096, STORE_OPS);
+
+    // Macro: smoke = 10⁵ jobs / 500 machines; --million = the real thing.
+    let mac = if million {
+        macro_run(1_000, 1_000, 1_000)
+    } else {
+        macro_run(500, 200, 500)
+    };
+
+    if json {
+        let out = Value::obj()
+            .with("bench", "event_core")
+            .with("mode", if million { "million" } else { "smoke" })
+            .with(
+                "queue_ops_per_s",
+                Value::obj()
+                    .with("heap", heap_qps)
+                    .with("calendar", calendar_qps),
+            )
+            .with(
+                "store_lookups_per_s",
+                Value::obj().with("map", map_lps).with("dense", dense_lps),
+            )
+            .with(
+                "macro",
+                Value::obj()
+                    .with("jobs", mac.jobs)
+                    .with("machines", mac.machines)
+                    .with("wall_s", mac.wall_s)
+                    .with("events", mac.events)
+                    .with("jobs_per_s", mac.jobs_per_s)
+                    .with("events_per_s", mac.events_per_s),
+            );
+        println!("{out}");
+        return;
+    }
+
+    println!("queue churn @ 4096 live events ({QUEUE_OPS} op pairs):");
+    println!("  {:>10} {:>14.0} ops/s", "heap", heap_qps);
+    println!("  {:>10} {:>14.0} ops/s", "calendar", calendar_qps);
+    println!("store lookups @ 4096 ids ({STORE_OPS} lookups):");
+    println!("  {:>10} {:>14.0} lookups/s", "map", map_lps);
+    println!("  {:>10} {:>14.0} lookups/s", "dense", dense_lps);
+    println!(
+        "macro ({} jobs / {} machines): {:.2} s wall, {} events, {:.0} jobs/s, {:.0} events/s",
+        mac.jobs, mac.machines, mac.wall_s, mac.events, mac.jobs_per_s, mac.events_per_s
+    );
+}

@@ -1,7 +1,7 @@
 //! One AWS account: all five services plus billing inputs, built from a
 //! seed and a market volatility preset.
 
-use crate::sim::{SimRng, SimTime};
+use crate::sim::{SimRng, SimTime, StoreKind};
 
 use super::billing::{compute_report, CostReport};
 use super::cloudwatch::{Alarms, Logs, Metrics};
@@ -29,14 +29,22 @@ pub struct AwsAccount {
 
 impl AwsAccount {
     pub fn new(seed: u64, vol: Volatility) -> Self {
+        Self::with_store(seed, vol, StoreKind::default())
+    }
+
+    /// An account with an explicit entity-storage backend for EC2/ECS —
+    /// the A/B equivalence gate builds one of each and asserts the
+    /// resulting runs are bit-identical.  RNG consumption order is
+    /// independent of `kind`.
+    pub fn with_store(seed: u64, vol: Volatility, kind: StoreKind) -> Self {
         let mut root = SimRng::new(seed);
         let market = SpotMarket::new(root.next_u64(), vol);
-        let ec2 = Ec2::new(market, root.fork(0xEC2));
+        let ec2 = Ec2::with_store(market, root.fork(0xEC2), kind);
         Self {
             s3: S3::new(),
             sqs: Sqs::new(),
             ec2,
-            ecs: Ecs::new(),
+            ecs: Ecs::with_store(kind),
             metrics: Metrics::new(),
             alarms: Alarms::new(),
             logs: Logs::new(),

@@ -59,6 +59,7 @@
 use std::collections::{BTreeMap, HashMap};
 
 use crate::sim::clock::{SimTime, SECOND};
+use crate::sim::store::{IdStore, StoreKind};
 use crate::sim::SimRng;
 
 use super::instance::{Instance, InstanceId, InstanceState, Lifecycle, TerminationReason};
@@ -313,7 +314,10 @@ fn billed_cost(
 /// The EC2 service: spot market + instances + fleets.
 pub struct Ec2 {
     pub market: SpotMarket,
-    instances: HashMap<InstanceId, Instance>,
+    /// Instance table — dense, id-indexed by default (ids are the
+    /// sequential `i-N` tags), so the per-tick interruption/fulfillment
+    /// scans walk contiguous memory instead of chasing hash buckets.
+    instances: IdStore<Instance>,
     fleets: HashMap<FleetId, Fleet>,
     next_instance: InstanceId,
     next_fleet: FleetId,
@@ -323,9 +327,15 @@ pub struct Ec2 {
 
 impl Ec2 {
     pub fn new(market: SpotMarket, rng: SimRng) -> Self {
+        Self::with_store(market, rng, StoreKind::default())
+    }
+
+    /// An EC2 service on an explicit entity-storage backend (the A/B
+    /// equivalence gate runs both).
+    pub fn with_store(market: SpotMarket, rng: SimRng, kind: StoreKind) -> Self {
         Self {
             market,
-            instances: HashMap::new(),
+            instances: IdStore::with_kind(kind),
             fleets: HashMap::new(),
             next_instance: 0,
             next_fleet: 0,
@@ -598,11 +608,11 @@ impl Ec2 {
     }
 
     pub fn instance(&self, id: InstanceId) -> Option<&Instance> {
-        self.instances.get(&id)
+        self.instances.get(id)
     }
 
     pub fn instance_mut(&mut self, id: InstanceId) -> Option<&mut Instance> {
-        self.instances.get_mut(&id)
+        self.instances.get_mut(id)
     }
 
     /// Fulfillment latency model.  Boot floor plus a "bid headroom" term:
@@ -878,7 +888,7 @@ impl Ec2 {
 
     /// Boot complete: Pending → Running.  No-op if it died while booting.
     pub fn mark_running(&mut self, id: InstanceId, now: SimTime) -> bool {
-        match self.instances.get_mut(&id) {
+        match self.instances.get_mut(id) {
             Some(i) if i.state == InstanceState::Pending => {
                 i.state = InstanceState::Running;
                 i.running_at = Some(now);
@@ -890,7 +900,7 @@ impl Ec2 {
 
     /// TerminateInstances: bill and mark.  Idempotent.
     pub fn terminate(&mut self, id: InstanceId, reason: TerminationReason, now: SimTime) {
-        let Some(inst) = self.instances.get_mut(&id) else {
+        let Some(inst) = self.instances.get_mut(id) else {
             return;
         };
         if inst.state == InstanceState::Terminated {
@@ -998,9 +1008,8 @@ impl Ec2 {
 
     /// All instances (sorted by id) — used by reports and tests.
     pub fn all_instances(&self) -> Vec<&Instance> {
-        let mut v: Vec<&Instance> = self.instances.values().collect();
-        v.sort_by_key(|i| i.id);
-        v
+        // IdStore iterates in ascending-id order on both backends.
+        self.instances.values().collect()
     }
 }
 

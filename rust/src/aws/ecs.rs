@@ -17,6 +17,7 @@
 
 use std::collections::HashMap;
 
+use crate::sim::store::{IdStore, StoreKind};
 use crate::sim::SimTime;
 
 use super::ec2::{InstanceId, InstanceType};
@@ -83,6 +84,22 @@ struct Cluster {
     instances: Vec<InstanceId>,
 }
 
+/// Per-instance placement state: capacity, consumption, and the sorted
+/// container index — one contiguous record per registered instance
+/// (previously three parallel `HashMap`s), keeping `containers_on` /
+/// `free_on` O(k) with a single id-indexed lookup.
+#[derive(Debug, Default)]
+struct EcsInstance {
+    /// vCPU shares and memory capacity.
+    cap_cpu: u32,
+    cap_mem: u64,
+    /// Consumed shares/memory.
+    used_cpu: u32,
+    used_mem: u64,
+    /// Containers on this instance, ids ascending.
+    containers: Vec<ContainerId>,
+}
+
 #[derive(Debug, thiserror::Error, PartialEq)]
 pub enum EcsError {
     #[error("ClusterNotFound: {0}")]
@@ -99,14 +116,10 @@ pub struct Ecs {
     clusters: HashMap<String, Cluster>,
     task_defs: HashMap<String, TaskDefinition>,
     services: HashMap<String, Service>,
-    containers: HashMap<ContainerId, Container>,
-    /// vCPU shares and memory capacity per registered instance.
-    capacity: HashMap<InstanceId, (u32, u64)>,
-    /// Per-instance container index (ids ascending) and consumed
-    /// (cpu_shares, memory) — keeps `containers_on`/`free_on` O(k)
-    /// instead of O(all containers) (perf pass).
-    by_instance: HashMap<InstanceId, Vec<ContainerId>>,
-    used: HashMap<InstanceId, (u32, u64)>,
+    /// Containers by id — dense index by default (ids are sequential).
+    containers: IdStore<Container>,
+    /// Placement state per registered instance.
+    instances: IdStore<EcsInstance>,
     /// Running container count per service (placement bookkeeping).
     per_service: HashMap<String, u32>,
     next_container: ContainerId,
@@ -114,7 +127,17 @@ pub struct Ecs {
 
 impl Ecs {
     pub fn new() -> Self {
-        let mut ecs = Self::default();
+        Self::with_store(StoreKind::default())
+    }
+
+    /// An ECS control plane on an explicit entity-storage backend (the
+    /// A/B equivalence gate runs both).
+    pub fn with_store(kind: StoreKind) -> Self {
+        let mut ecs = Self {
+            containers: IdStore::with_kind(kind),
+            instances: IdStore::with_kind(kind),
+            ..Self::default()
+        };
         // Every AWS account comes with a "default" cluster.
         ecs.create_cluster("default");
         ecs
@@ -193,7 +216,21 @@ impl Ecs {
         if !c.instances.contains(&id) {
             c.instances.push(id);
         }
-        self.capacity.insert(id, (vcpus * 1024, memory_mb));
+        // Re-registration updates capacity in place (consumption and the
+        // container index survive, as with the old separate maps).
+        if let Some(rec) = self.instances.get_mut(id) {
+            rec.cap_cpu = vcpus * 1024;
+            rec.cap_mem = memory_mb;
+        } else {
+            self.instances.insert(
+                id,
+                EcsInstance {
+                    cap_cpu: vcpus * 1024,
+                    cap_mem: memory_mb,
+                    ..EcsInstance::default()
+                },
+            );
+        }
         Ok(())
     }
 
@@ -203,11 +240,13 @@ impl Ecs {
         for c in self.clusters.values_mut() {
             c.instances.retain(|&i| i != id);
         }
-        self.capacity.remove(&id);
-        let stopped = self.by_instance.remove(&id).unwrap_or_default();
-        self.used.remove(&id);
+        let stopped = self
+            .instances
+            .remove(id)
+            .map(|rec| rec.containers)
+            .unwrap_or_default();
         for &cid in &stopped {
-            if let Some(c) = self.containers.remove(&cid) {
+            if let Some(c) = self.containers.remove(cid) {
                 if let Some(n) = self.per_service.get_mut(&c.service) {
                     *n = n.saturating_sub(1);
                 }
@@ -218,16 +257,16 @@ impl Ecs {
 
     /// Drop one container record, maintaining all indexes.
     fn remove_container(&mut self, id: ContainerId) {
-        let Some(c) = self.containers.remove(&id) else {
+        let Some(c) = self.containers.remove(id) else {
             return;
         };
-        if let Some(v) = self.by_instance.get_mut(&c.instance) {
-            v.retain(|&x| x != id);
+        if let Some(rec) = self.instances.get_mut(c.instance) {
+            rec.containers.retain(|&x| x != id);
         }
         if let Some(td) = self.task_defs.get(&c.task_family) {
-            if let Some(u) = self.used.get_mut(&c.instance) {
-                u.0 = u.0.saturating_sub(td.cpu_shares);
-                u.1 = u.1.saturating_sub(td.memory_mb);
+            if let Some(rec) = self.instances.get_mut(c.instance) {
+                rec.used_cpu = rec.used_cpu.saturating_sub(td.cpu_shares);
+                rec.used_mem = rec.used_mem.saturating_sub(td.memory_mb);
             }
         }
         if let Some(n) = self.per_service.get_mut(&c.service) {
@@ -235,15 +274,14 @@ impl Ecs {
         }
     }
 
-    /// Free (cpu_shares, memory) on an instance — O(1) via the used map.
+    /// Free (cpu_shares, memory) on an instance — O(1) via the record.
     fn free_on(&self, id: InstanceId) -> (u32, u64) {
-        let Some(&(cap_cpu, cap_mem)) = self.capacity.get(&id) else {
+        let Some(rec) = self.instances.get(id) else {
             return (0, 0);
         };
-        let (used_cpu, used_mem) = self.used.get(&id).copied().unwrap_or((0, 0));
         (
-            cap_cpu.saturating_sub(used_cpu),
-            cap_mem.saturating_sub(used_mem),
+            rec.cap_cpu.saturating_sub(rec.used_cpu),
+            rec.cap_mem.saturating_sub(rec.used_mem),
         )
     }
 
@@ -293,11 +331,13 @@ impl Ecs {
                         stopped: false,
                     };
                     self.containers.insert(c.id, c.clone());
-                    // Ids ascend, so push keeps the index sorted.
-                    self.by_instance.entry(iid).or_default().push(c.id);
-                    let u = self.used.entry(iid).or_insert((0, 0));
-                    u.0 += td.cpu_shares;
-                    u.1 += td.memory_mb;
+                    // free_on returned nonzero, so the record exists.
+                    if let Some(rec) = self.instances.get_mut(iid) {
+                        // Ids ascend, so push keeps the index sorted.
+                        rec.containers.push(c.id);
+                        rec.used_cpu += td.cpu_shares;
+                        rec.used_mem += td.memory_mb;
+                    }
                     *self.per_service.entry(sname.clone()).or_insert(0) += 1;
                     placed.push(c);
                     running += 1;
@@ -315,14 +355,19 @@ impl Ecs {
     }
 
     pub fn container(&self, id: ContainerId) -> Option<&Container> {
-        self.containers.get(&id)
+        self.containers.get(id)
     }
 
     /// Running containers on an instance, sorted by id (O(k) via index).
     pub fn containers_on(&self, id: InstanceId) -> Vec<&Container> {
-        self.by_instance
-            .get(&id)
-            .map(|ids| ids.iter().filter_map(|c| self.containers.get(c)).collect())
+        self.instances
+            .get(id)
+            .map(|rec| {
+                rec.containers
+                    .iter()
+                    .filter_map(|&c| self.containers.get(c))
+                    .collect()
+            })
             .unwrap_or_default()
     }
 

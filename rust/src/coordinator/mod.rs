@@ -28,5 +28,5 @@ pub mod submit;
 pub mod sweep;
 
 pub use autoscale::{ScalingBreakdown, ScalingMode, ScalingPolicy};
-pub use run::{RunOptions, Simulation};
+pub use run::{EngineOptions, RunOptions, Simulation};
 pub use sweep::{run_sweep, Scenario, ScenarioMatrix, SweepPlan, SweepRun};

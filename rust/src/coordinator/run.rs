@@ -1,7 +1,7 @@
 //! The discrete-event run driver: everything that "happens automatically"
 //! in Figure 1's orange text, plus the optional monitor.
 //!
-//! One [`Simulation`] owns the AWS account and an event heap.  Events:
+//! One [`Simulation`] owns the AWS account and an event queue.  Events:
 //!
 //! * `MarketTick`    (1/min) — spot prices move, fleets fulfill/interrupt,
 //!   ECS places containers, instances publish CPU metrics.
@@ -31,8 +31,6 @@
 //! All randomness flows from one seeded RNG: identical runs replay
 //! bit-identically.
 
-use std::collections::HashMap;
-
 use anyhow::{ensure, Result};
 
 use crate::aws::billing::data_breakdown;
@@ -47,13 +45,26 @@ use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::json::Value;
 use crate::metrics::{RunReport, RunStats};
 use crate::sim::clock::{SimTime, HOUR, MINUTE};
-use crate::sim::{EventQueue, SimRng};
+use crate::sim::{Arena, EventQueue, QueueKind, SimRng, SlotId, StoreKind};
 use crate::worker::{check_if_done, parse_message};
 use crate::workloads::drivers::{job_output_prefix, output_bucket, JobCtx, JobExecutor, JobOutcome};
 
 use super::autoscale::{AutoscaleState, ScalingPolicy};
 use super::monitor::MonitorState;
 use super::{cluster, setup, submit};
+
+/// Which hot-path engine implementations a run uses.  The defaults are
+/// the fast paths (calendar event queue, dense id-indexed entity
+/// stores); the reference implementations (binary heap, hash maps) stay
+/// selectable so the A/B equivalence gate in `tests/determinism.rs` can
+/// prove the fast paths bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct EngineOptions {
+    /// Priority-queue backend for the event loop.
+    pub queue: QueueKind,
+    /// Entity-storage backend for EC2 instances / ECS containers.
+    pub store: StoreKind,
+}
 
 /// Knobs for one simulated run.
 #[derive(Debug, Clone)]
@@ -83,6 +94,8 @@ pub struct RunOptions {
     /// S3 side of the data plane: per-bucket aggregate throughput and
     /// first-byte latency (only matters for jobs that declare bytes).
     pub net: NetProfile,
+    /// Event-core engine selection (queue + entity-storage backends).
+    pub engine: EngineOptions,
 }
 
 impl Default for RunOptions {
@@ -99,6 +112,7 @@ impl Default for RunOptions {
             overrun_after_drain: 0,
             data_bucket: "ds-data".into(),
             net: NetProfile::default(),
+            engine: EngineOptions::default(),
         }
     }
 }
@@ -159,6 +173,17 @@ enum Xfer {
     },
 }
 
+/// Per-container core bookkeeping, stored in one arena slot for the
+/// container's whole lifetime (placed → stopped).
+#[derive(Debug)]
+struct WorkerState {
+    /// Cores currently in *compute* (a core moving bytes is not
+    /// CPU-busy — that's what the reaper sees).
+    busy: u32,
+    /// Cores that saw an empty queue and exited.
+    cores_done: u32,
+}
+
 /// A full DS run over the simulated account.
 pub struct Simulation {
     pub acct: AwsAccount,
@@ -173,13 +198,16 @@ pub struct Simulation {
     /// Scheduled `SubmitJobs` events not yet delivered; while non-zero
     /// the monitor holds off end-of-run cleanup on an empty queue.
     pending_submits: usize,
-    /// Busy cores per container (jobs in *compute*; a core moving bytes
-    /// is not CPU-busy — that's what the reaper sees).
-    busy: HashMap<ContainerId, u32>,
-    /// Cores that saw an empty queue and exited, per container.
-    cores_done: HashMap<ContainerId, u32>,
-    /// Jobs parked on a data-plane flow, by flow id.
-    xfers: HashMap<FlowId, Xfer>,
+    /// Per-container worker bookkeeping, one arena slot per live
+    /// container (busy cores + exited cores together; the old design
+    /// kept them in two parallel maps).
+    workers: Arena<WorkerState>,
+    /// Container id → arena slot, dense by raw id (container ids are
+    /// sequential and never reused).
+    container_slot: Vec<Option<SlotId>>,
+    /// Jobs parked on a data-plane flow, dense by raw flow id (flow ids
+    /// are sequential and never reused).
+    flow_job: Vec<Option<Xfer>>,
     /// Bumped whenever the flow set changes; stale `NetTick`s no-op.
     net_epoch: u64,
     drained_at: Option<SimTime>,
@@ -189,25 +217,26 @@ pub struct Simulation {
 impl Simulation {
     /// Create the account and run Step 1 (`setup`).
     pub fn new(cfg: AppConfig, opts: RunOptions) -> Result<Self> {
-        let mut acct = AwsAccount::new(opts.seed, opts.volatility);
+        let mut acct = AwsAccount::with_store(opts.seed, opts.volatility, opts.engine.store);
         acct.s3.create_bucket(&opts.data_bucket);
         acct.net.set_profile(opts.net.clone());
         setup::setup(&mut acct, &cfg, 0)?;
         let rng = SimRng::new(opts.seed ^ 0xD15C);
+        let engine = opts.engine;
         Ok(Self {
             acct,
             cfg,
             opts,
-            events: EventQueue::new(),
+            events: EventQueue::with_kind(engine.queue),
             rng,
             fleet: None,
             monitor: None,
             stats: RunStats::default(),
             jobs_submitted: 0,
             pending_submits: 0,
-            busy: HashMap::new(),
-            cores_done: HashMap::new(),
-            xfers: HashMap::new(),
+            workers: Arena::new(),
+            container_slot: Vec::new(),
+            flow_job: Vec::new(),
             net_epoch: 0,
             drained_at: None,
             finished: false,
@@ -370,7 +399,7 @@ impl Simulation {
             let total_cores = (containers.len() as u32 * self.cfg.docker_cores).max(1);
             let busy: u32 = containers
                 .iter()
-                .map(|c| self.busy.get(&c.id).copied().unwrap_or(0))
+                .map(|c| self.worker_busy(c.id))
                 .sum();
             let cpu = if crashed {
                 0.1
@@ -469,8 +498,7 @@ impl Simulation {
                 inst_id,
                 &format!("container {} placed ({})", c.id, c.task_family),
             );
-            self.busy.insert(c.id, 0);
-            self.cores_done.insert(c.id, 0);
+            self.new_worker(c.id);
             // SECONDS_TO_START staggers core startup.
             for core in 0..self.cfg.docker_cores {
                 self.events.schedule_in(
@@ -482,6 +510,63 @@ impl Simulation {
                 );
             }
         }
+    }
+
+    // -- arena-backed per-run bookkeeping -----------------------------------
+
+    fn slot_of(&self, container: ContainerId) -> Option<SlotId> {
+        self.container_slot.get(container as usize).copied().flatten()
+    }
+
+    /// Busy-core count for a container (0 if it has no worker slot).
+    fn worker_busy(&self, container: ContainerId) -> u32 {
+        self.slot_of(container)
+            .and_then(|s| self.workers.get(s))
+            .map(|w| w.busy)
+            .unwrap_or(0)
+    }
+
+    fn worker_mut(&mut self, container: ContainerId) -> Option<&mut WorkerState> {
+        let slot = self.slot_of(container)?;
+        self.workers.get_mut(slot)
+    }
+
+    /// Allocate the container's worker slot (at placement).
+    fn new_worker(&mut self, container: ContainerId) {
+        let slot = self.workers.insert(WorkerState {
+            busy: 0,
+            cores_done: 0,
+        });
+        let i = container as usize;
+        if i >= self.container_slot.len() {
+            self.container_slot.resize(i + 1, None);
+        }
+        self.container_slot[i] = Some(slot);
+    }
+
+    /// Release the container's worker slot (when it stops).  No-op if
+    /// the slot was already released.
+    fn free_worker(&mut self, container: ContainerId) {
+        if let Some(slot) = self
+            .container_slot
+            .get_mut(container as usize)
+            .and_then(Option::take)
+        {
+            self.workers.remove(slot);
+        }
+    }
+
+    /// Park a job on a data-plane flow (flow ids are sequential).
+    fn park_flow(&mut self, flow: FlowId, xfer: Xfer) {
+        let i = flow as usize;
+        if i >= self.flow_job.len() {
+            self.flow_job.resize_with(i + 1, || None);
+        }
+        self.flow_job[i] = Some(xfer);
+    }
+
+    fn take_flow(&mut self, flow: FlowId) -> Option<Xfer> {
+        self.flow_job.get_mut(flow as usize).and_then(Option::take)
     }
 
     fn container_alive(&self, container: ContainerId) -> Option<InstanceId> {
@@ -557,7 +642,7 @@ impl Simulation {
                 Direction::Download,
                 input_bytes,
             );
-            self.xfers.insert(
+            self.park_flow(
                 flow,
                 Xfer::Download {
                     container,
@@ -601,7 +686,9 @@ impl Simulation {
                 outputs,
                 log,
             } => {
-                *self.busy.entry(container).or_insert(0) += 1;
+                if let Some(w) = self.worker_mut(container) {
+                    w.busy += 1;
+                }
                 self.events.schedule_in(
                     duration,
                     Event::JobDone {
@@ -617,7 +704,9 @@ impl Simulation {
                 );
             }
             JobOutcome::Failed { duration, log } => {
-                *self.busy.entry(container).or_insert(0) += 1;
+                if let Some(w) = self.worker_mut(container) {
+                    w.busy += 1;
+                }
                 self.events.schedule_in(
                     duration,
                     Event::JobDone {
@@ -670,7 +759,7 @@ impl Simulation {
         }
         let done = self.acct.net.poll(now);
         for (flow, _end) in done {
-            let Some(xfer) = self.xfers.remove(&flow) else {
+            let Some(xfer) = self.take_flow(flow) else {
                 continue;
             };
             match xfer {
@@ -748,7 +837,7 @@ impl Simulation {
         let cancelled = self.acct.net.cancel_instance(now, id);
         if !cancelled.is_empty() {
             for flow in &cancelled {
-                self.xfers.remove(flow);
+                self.take_flow(*flow);
             }
             self.schedule_net_tick();
         }
@@ -764,21 +853,27 @@ impl Simulation {
     /// the ECS service re-places containers there, so late redeliveries
     /// (visibility timeouts, poison retries) always find a poller again.
     fn core_exit(&mut self, now: SimTime, container: ContainerId, inst_id: InstanceId) {
-        let done = self.cores_done.entry(container).or_insert(0);
-        *done += 1;
-        if *done < self.cfg.docker_cores {
+        let done = {
+            let Some(w) = self.worker_mut(container) else {
+                return;
+            };
+            w.cores_done += 1;
+            w.cores_done
+        };
+        if done < self.cfg.docker_cores {
             return;
         }
         self.acct.ecs.stop_container(container);
-        self.busy.remove(&container);
-        self.cores_done.remove(&container);
+        self.free_worker(container);
         if self.acct.ecs.containers_on(inst_id).is_empty() {
             self.stats.self_shutdowns += 1;
             self.log_instance(now, inst_id, "queue empty: shutting down");
             self.acct
                 .ec2
                 .terminate(inst_id, TerminationReason::SelfShutdown, now);
-            self.acct.ecs.deregister_instance(inst_id);
+            for c in self.acct.ecs.deregister_instance(inst_id) {
+                self.free_worker(c);
+            }
         }
     }
 
@@ -795,8 +890,8 @@ impl Simulation {
         log: String,
         output_bytes: u64,
     ) {
-        if let Some(b) = self.busy.get_mut(&container) {
-            *b = b.saturating_sub(1);
+        if let Some(w) = self.worker_mut(container) {
+            w.busy = w.busy.saturating_sub(1);
         }
         let Some(inst_id) = self.container_alive(container) else {
             // Machine died mid-job: work lost, message redelivers.
@@ -816,7 +911,7 @@ impl Simulation {
                     Direction::Upload,
                     output_bytes,
                 );
-                self.xfers.insert(
+                self.park_flow(
                     flow,
                     Xfer::Upload {
                         container,
@@ -871,7 +966,9 @@ impl Simulation {
                         self.acct
                             .ec2
                             .terminate(id, TerminationReason::AlarmAction, now);
-                        self.acct.ecs.deregister_instance(id);
+                        for c in self.acct.ecs.deregister_instance(id) {
+                            self.free_worker(c);
+                        }
                         self.acct.metrics.drop_dimension(&format!("i-{id}"));
                         // A machine that was only *network*-busy looks
                         // idle to the CPU alarm; its transfers are lost
@@ -941,7 +1038,9 @@ impl Simulation {
     }
 
     fn instance_died(&mut self, now: SimTime, id: InstanceId) {
-        self.acct.ecs.deregister_instance(id);
+        for c in self.acct.ecs.deregister_instance(id) {
+            self.free_worker(c);
+        }
         self.acct.metrics.drop_dimension(&format!("i-{id}"));
         self.cancel_transfers(now, id);
     }

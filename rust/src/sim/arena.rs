@@ -1,0 +1,222 @@
+//! Generational slot arena — contiguous, allocation-free entity storage
+//! for the simulation hot path.
+//!
+//! `Arena<T>` stores values in a `Vec` of slots addressed by [`SlotId`]
+//! (a `u32` index plus a `u32` generation).  Freed slots go on a free
+//! list and are reused; the generation counter bumps on every free, so a
+//! stale `SlotId` held across a remove can never alias the slot's new
+//! occupant — `get` on a stale id returns `None` instead of someone
+//! else's state.  Lookups are a bounds check and a generation compare
+//! (no hashing), and the steady-state tick loop allocates nothing: slots
+//! recycle in place.
+//!
+//! This is the per-run bookkeeping store for `coordinator/run.rs` (one
+//! slot per live container), replacing the trio of
+//! `HashMap<ContainerId, _>` maps that used to shadow each other.
+
+/// Handle to a slot in an [`Arena`]: index + generation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SlotId {
+    index: u32,
+    generation: u32,
+}
+
+impl SlotId {
+    /// The slot's raw index (diagnostics only — not a stable identity;
+    /// use the full `SlotId` for that).
+    pub fn index(self) -> u32 {
+        self.index
+    }
+}
+
+#[derive(Debug)]
+struct Slot<T> {
+    generation: u32,
+    value: Option<T>,
+}
+
+/// Contiguous generational storage.  See the module docs.
+#[derive(Debug)]
+pub struct Arena<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Arena<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Arena<T> {
+    pub fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            slots: Vec::with_capacity(cap),
+            free: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of live values.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert a value, reusing a freed slot when one exists.
+    pub fn insert(&mut self, value: T) -> SlotId {
+        self.len += 1;
+        if let Some(index) = self.free.pop() {
+            let slot = &mut self.slots[index as usize];
+            debug_assert!(slot.value.is_none());
+            slot.value = Some(value);
+            SlotId {
+                index,
+                generation: slot.generation,
+            }
+        } else {
+            let index = u32::try_from(self.slots.len()).expect("arena capacity exceeds u32");
+            self.slots.push(Slot {
+                generation: 0,
+                value: Some(value),
+            });
+            SlotId {
+                index,
+                generation: 0,
+            }
+        }
+    }
+
+    /// Borrow the value at `id`; `None` if it was removed (stale
+    /// generation) or never existed.
+    pub fn get(&self, id: SlotId) -> Option<&T> {
+        let slot = self.slots.get(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        slot.value.as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: SlotId) -> Option<&mut T> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        slot.value.as_mut()
+    }
+
+    pub fn contains(&self, id: SlotId) -> bool {
+        self.get(id).is_some()
+    }
+
+    /// Remove and return the value at `id`; the slot's generation bumps
+    /// so outstanding copies of `id` go stale.
+    pub fn remove(&mut self, id: SlotId) -> Option<T> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        let value = slot.value.take()?;
+        slot.generation = slot.generation.wrapping_add(1);
+        self.free.push(id.index);
+        self.len -= 1;
+        Some(value)
+    }
+
+    /// Iterate live `(SlotId, &T)` pairs in slot-index order
+    /// (deterministic for a deterministic insert/remove history).
+    pub fn iter(&self) -> impl Iterator<Item = (SlotId, &T)> {
+        self.slots.iter().enumerate().filter_map(|(i, slot)| {
+            slot.value.as_ref().map(|v| {
+                (
+                    SlotId {
+                        index: i as u32,
+                        generation: slot.generation,
+                    },
+                    v,
+                )
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a = Arena::new();
+        let x = a.insert("x");
+        let y = a.insert("y");
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(x), Some(&"x"));
+        assert_eq!(a.get(y), Some(&"y"));
+        assert_eq!(a.remove(x), Some("x"));
+        assert_eq!(a.get(x), None);
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn stale_id_cannot_alias_reused_slot() {
+        let mut a = Arena::new();
+        let old = a.insert(1u32);
+        a.remove(old);
+        let new = a.insert(2u32);
+        // Same physical slot, different generation.
+        assert_eq!(old.index(), new.index());
+        assert_ne!(old, new);
+        assert_eq!(a.get(old), None);
+        assert_eq!(a.remove(old), None);
+        assert_eq!(a.get(new), Some(&2));
+    }
+
+    #[test]
+    fn free_list_recycles_without_growth() {
+        let mut a = Arena::new();
+        let ids: Vec<_> = (0..8).map(|i| a.insert(i)).collect();
+        for id in &ids {
+            a.remove(*id);
+        }
+        for i in 0..8 {
+            a.insert(i + 100);
+        }
+        // All churn happened in the original 8 slots.
+        assert_eq!(a.slots.len(), 8);
+        assert_eq!(a.len(), 8);
+    }
+
+    #[test]
+    fn iter_walks_index_order() {
+        let mut a = Arena::new();
+        let first = a.insert(10);
+        a.insert(20);
+        a.insert(30);
+        a.remove(first);
+        let live: Vec<u32> = a.iter().map(|(_, v)| *v).collect();
+        assert_eq!(live, vec![20, 30]);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        let mut a = Arena::new();
+        let id = a.insert(0u64);
+        *a.get_mut(id).unwrap() += 41;
+        *a.get_mut(id).unwrap() += 1;
+        assert_eq!(a.get(id), Some(&42));
+        assert!(a.contains(id));
+    }
+}

@@ -1,0 +1,273 @@
+//! Bucketed calendar queue (Brown 1988) — the O(1)-amortised priority
+//! queue behind [`crate::sim::EventQueue`]'s `Calendar` backend.
+//!
+//! The structure is a circular array of "days" (buckets), each `width`
+//! milliseconds of simulated time wide; an event at time `t` lives in
+//! bucket `(t / width) % nbuckets`.  Because a discrete-event simulation
+//! dequeues in near-monotone time order, the next event is almost always
+//! found in the bucket the clock is already pointing at, making both
+//! enqueue and dequeue O(1) amortised — versus O(log n) for the binary
+//! heap — at million-event scale.
+//!
+//! Contract: pops come out in strictly ascending `(time, seq)` order,
+//! bit-identical to the `BinaryHeap` implementation (the A/B gate in
+//! `tests/determinism.rs` enforces this end-to-end).  Each bucket is kept
+//! sorted by `(time, seq)` via binary-search insertion; since `seq` is
+//! strictly increasing, keys are unique and FIFO tie-breaking on equal
+//! timestamps is exact.
+//!
+//! Resizing: the bucket count doubles when occupancy exceeds two events
+//! per bucket and halves below one event per two buckets (floor
+//! [`MIN_BUCKETS`]); a resize rehashes every event and re-derives `width`
+//! from the observed inter-event spacing, so the calendar adapts to the
+//! workload's event density without tuning.
+
+use super::clock::SimTime;
+
+/// Smallest bucket count the calendar will shrink to.
+const MIN_BUCKETS: usize = 16;
+
+/// Starting width: one simulated second per bucket (event timestamps are
+/// millisecond-resolution).  Self-corrects at the first resize.
+const INITIAL_WIDTH: u64 = 1_000;
+
+#[derive(Debug)]
+struct Slot<E> {
+    time: SimTime,
+    seq: u64,
+    event: E,
+}
+
+/// A calendar queue of `(time, seq, event)` entries popping in ascending
+/// `(time, seq)` order.
+///
+/// Invariants assumed from the caller ([`crate::sim::EventQueue`]):
+/// `seq` values are unique and every inserted `time` is `>=` the time of
+/// the last pop (the simulation clock never runs backwards).
+#[derive(Debug)]
+pub struct CalendarQueue<E> {
+    buckets: Vec<Vec<Slot<E>>>,
+    /// Simulated width of one bucket, in ms (always `>= 1`).
+    width: u64,
+    len: usize,
+    /// Timestamp of the most recent pop; the dequeue scan starts at this
+    /// bucket.  Monotone non-decreasing.
+    last_time: SimTime,
+}
+
+impl<E> Default for CalendarQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> CalendarQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: INITIAL_WIDTH,
+            len: 0,
+            last_time: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn bucket_of(&self, time: SimTime) -> usize {
+        ((time / self.width) % self.buckets.len() as u64) as usize
+    }
+
+    /// Insert an entry.  `seq` must be unique across all live entries.
+    pub fn push(&mut self, time: SimTime, seq: u64, event: E) {
+        let b = self.bucket_of(time);
+        let bucket = &mut self.buckets[b];
+        // Keep the bucket sorted by (time, seq): binary search for the
+        // insertion point.  Err is guaranteed (seq unique ⇒ no duplicate
+        // keys).
+        let at = match bucket.binary_search_by(|s| (s.time, s.seq).cmp(&(time, seq))) {
+            Ok(i) | Err(i) => i,
+        };
+        bucket.insert(at, Slot { time, seq, event });
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            let target = self.buckets.len() * 2;
+            self.resize(target);
+        }
+    }
+
+    /// Remove and return the entry with the smallest `(time, seq)`.
+    pub fn pop(&mut self) -> Option<(SimTime, u64, E)> {
+        let b = self.find_min()?;
+        let slot = self.buckets[b].remove(0);
+        self.len -= 1;
+        self.last_time = slot.time;
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 2 {
+            let target = (self.buckets.len() / 2).max(MIN_BUCKETS);
+            self.resize(target);
+        }
+        Some((slot.time, slot.seq, slot.event))
+    }
+
+    /// Timestamp of the minimum entry without removing it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        let b = self.find_min()?;
+        self.buckets[b].first().map(|s| s.time)
+    }
+
+    /// Index of the bucket whose head is the global minimum `(time, seq)`.
+    ///
+    /// Walks day-by-day from the bucket containing `last_time`: a bucket
+    /// head qualifies only if it falls inside that step's calendar "day"
+    /// (otherwise it belongs to a later lap of the circular array).  All
+    /// live entries have `time >= last_time`, so the first qualifying
+    /// head is the global minimum — equal timestamps always share a
+    /// bucket, where sorting makes the head the FIFO-earliest.  If a full
+    /// lap finds nothing (a sparse queue far in the future), fall back to
+    /// a direct scan of all bucket heads.
+    fn find_min(&self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        let mut day = self.last_time / self.width;
+        for _ in 0..self.buckets.len() {
+            let b = (day % n) as usize;
+            if let Some(head) = self.buckets[b].first() {
+                let day_end = (day + 1).saturating_mul(self.width);
+                if head.time < day_end {
+                    return Some(b);
+                }
+            }
+            day += 1;
+        }
+        // Direct search: compare heads by (time, seq).
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| b.first().map(|s| ((s.time, s.seq), i)))
+            .min_by_key(|&(key, _)| key)
+            .map(|(_, i)| i)
+    }
+
+    /// Rehash into `nbuckets` buckets, re-deriving the bucket width from
+    /// the observed event-time span.
+    fn resize(&mut self, nbuckets: usize) {
+        let mut entries: Vec<Slot<E>> = Vec::with_capacity(self.len);
+        for bucket in &mut self.buckets {
+            entries.append(bucket);
+        }
+        // Sorting once and appending in order keeps every per-bucket
+        // insertion at the tail (binary search hits the end), making the
+        // rehash O(len log len) overall.
+        entries.sort_by_key(|s| (s.time, s.seq));
+        self.width = Self::derive_width(&entries, self.width);
+        self.buckets = (0..nbuckets).map(|_| Vec::new()).collect();
+        self.len = 0;
+        for s in entries {
+            self.push(s.time, s.seq, s.event);
+        }
+    }
+
+    /// Width heuristic: twice the average gap between adjacent event
+    /// times (clamped to `>= 1` ms), so a bucket holds a couple of events
+    /// on average.  With fewer than two distinct times there is no
+    /// spacing signal — keep the current width.
+    fn derive_width(sorted: &[Slot<E>], current: u64) -> u64 {
+        if sorted.len() < 2 {
+            return current;
+        }
+        let span = sorted[sorted.len() - 1].time - sorted[0].time;
+        if span == 0 {
+            return current;
+        }
+        (span / (sorted.len() as u64 - 1)).saturating_mul(2).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_seq_order() {
+        let mut q = CalendarQueue::new();
+        q.push(30, 1, "c");
+        q.push(10, 2, "a");
+        q.push(20, 3, "b");
+        assert_eq!(q.pop(), Some((10, 2, "a")));
+        assert_eq!(q.pop(), Some((20, 3, "b")));
+        assert_eq!(q.pop(), Some((30, 1, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_on_equal_times_across_resizes() {
+        // 200 equal-time entries force several doublings; order must
+        // still be insertion (seq) order.
+        let mut q = CalendarQueue::new();
+        for i in 0..200u64 {
+            q.push(5, i, i);
+        }
+        assert_eq!(q.len(), 200);
+        for i in 0..200u64 {
+            assert_eq!(q.pop(), Some((5, i, i)));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn sparse_far_future_uses_direct_search() {
+        // One event many "years" past the current cursor: the lap finds
+        // nothing and the head scan must locate it.
+        let mut q = CalendarQueue::new();
+        q.push(3, 1, "near");
+        assert_eq!(q.pop(), Some((3, 1, "near")));
+        q.push(10_000_000, 2, "far");
+        assert_eq!(q.peek_time(), Some(10_000_000));
+        assert_eq!(q.pop(), Some((10_000_000, 2, "far")));
+    }
+
+    #[test]
+    fn shrinks_after_drain() {
+        let mut q = CalendarQueue::new();
+        for i in 0..500u64 {
+            q.push(i * 7, i, ());
+        }
+        let grown = q.buckets.len();
+        assert!(grown > MIN_BUCKETS);
+        while q.pop().is_some() {}
+        assert!(q.buckets.len() < grown);
+        assert!(q.buckets.len() >= MIN_BUCKETS);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn interleaved_monotone_workload() {
+        // A DES-shaped workload: pop the minimum, schedule a few events
+        // relative to it.  Verify global (time, seq) ascending order.
+        let mut q = CalendarQueue::new();
+        let mut seq = 0u64;
+        q.push(0, seq, 0u32);
+        let mut last = (0u64, 0u64);
+        let mut popped = 0;
+        while let Some((t, s, e)) = q.pop() {
+            assert!((t, s) > last || popped == 0, "order violated at {t},{s}");
+            last = (t, s);
+            popped += 1;
+            if e < 7 {
+                for k in 1..=3u64 {
+                    seq += 1;
+                    q.push(t + k * 13 % 97, seq, e + 1);
+                }
+            }
+        }
+        // A full ternary tree of depth 7: 3^0 + … + 3^7 pops.
+        assert_eq!(popped, (0u32..=7).map(|d| 3usize.pow(d)).sum::<usize>());
+    }
+}

@@ -1,13 +1,38 @@
 //! Generic timestamped event queue with deterministic FIFO tie-breaking.
 //!
-//! The binary heap orders by `(time, seq)`: two events scheduled for the
-//! same simulated instant pop in the order they were pushed, which keeps
+//! Events are ordered by `(time, seq)`: two events scheduled for the same
+//! simulated instant pop in the order they were pushed, which keeps
 //! whole-simulation replays bit-identical.
+//!
+//! Two interchangeable backends implement that contract (selected by
+//! [`QueueKind`]; see DESIGN.md §"Event core"):
+//!
+//! - `Heap` — the classic `BinaryHeap` min-heap, O(log n) per operation.
+//! - `Calendar` — a bucketed [`CalendarQueue`], O(1) amortised for the
+//!   near-monotone access pattern of a DES.  The default.
+//!
+//! The backends are *bit-equivalent*, not merely both correct: the A/B
+//! gate in `tests/determinism.rs` runs the full determinism matrix under
+//! each and asserts identical `RunReport`s, and the differential property
+//! suite in `tests/calendar_queue.rs` pins pop-order equality on
+//! randomized schedules.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
+use super::calendar::CalendarQueue;
 use super::clock::SimTime;
+
+/// Which priority-queue implementation backs an [`EventQueue`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// `BinaryHeap` of `(time, seq)` entries — the reference
+    /// implementation the calendar is gated against.
+    Heap,
+    /// Bucketed calendar queue — O(1) amortised; the default.
+    #[default]
+    Calendar,
+}
 
 struct Entry<E> {
     time: SimTime,
@@ -36,9 +61,14 @@ impl<E> Ord for Entry<E> {
     }
 }
 
-/// Min-heap of `(SimTime, E)` with FIFO ordering for equal timestamps.
+enum Backend<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    Calendar(CalendarQueue<E>),
+}
+
+/// Min-queue of `(SimTime, E)` with FIFO ordering for equal timestamps.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    backend: Backend<E>,
     seq: u64,
     now: SimTime,
 }
@@ -50,11 +80,30 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// A queue on the default backend ([`QueueKind::Calendar`]).
     pub fn new() -> Self {
+        Self::with_kind(QueueKind::default())
+    }
+
+    /// A queue on an explicit backend (the A/B equivalence gate runs the
+    /// same simulation under both).
+    pub fn with_kind(kind: QueueKind) -> Self {
+        let backend = match kind {
+            QueueKind::Heap => Backend::Heap(BinaryHeap::new()),
+            QueueKind::Calendar => Backend::Calendar(CalendarQueue::new()),
+        };
         Self {
-            heap: BinaryHeap::new(),
+            backend,
             seq: 0,
             now: 0,
+        }
+    }
+
+    /// Which backend this queue runs on.
+    pub fn kind(&self) -> QueueKind {
+        match self.backend {
+            Backend::Heap(_) => QueueKind::Heap,
+            Backend::Calendar(_) => QueueKind::Calendar,
         }
     }
 
@@ -70,11 +119,14 @@ impl<E> EventQueue<E> {
         debug_assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
         let at = at.max(self.now);
         self.seq += 1;
-        self.heap.push(Entry {
-            time: at,
-            seq: self.seq,
-            event,
-        });
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(Entry {
+                time: at,
+                seq: self.seq,
+                event,
+            }),
+            Backend::Calendar(c) => c.push(at, self.seq, event),
+        }
     }
 
     /// Schedule `event` `delay` after now.
@@ -84,23 +136,32 @@ impl<E> EventQueue<E> {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let e = self.heap.pop()?;
-        debug_assert!(e.time >= self.now);
-        self.now = e.time;
-        Some((e.time, e.event))
+        let (time, event) = match &mut self.backend {
+            Backend::Heap(h) => h.pop().map(|e| (e.time, e.event))?,
+            Backend::Calendar(c) => c.pop().map(|(t, _, e)| (t, e))?,
+        };
+        debug_assert!(time >= self.now);
+        self.now = time;
+        Some((time, event))
     }
 
     /// Timestamp of the next event without popping.
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.time)
+        match &self.backend {
+            Backend::Heap(h) => h.peek().map(|e| e.time),
+            Backend::Calendar(c) => c.peek_time(),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len(),
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     /// Total events ever scheduled (telemetry for the perf pass).
@@ -113,65 +174,88 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    /// Every module test runs against both backends: the API contract is
+    /// backend-independent by construction.
+    fn both(check: impl Fn(EventQueue<&'static str>)) {
+        check(EventQueue::with_kind(QueueKind::Heap));
+        check(EventQueue::with_kind(QueueKind::Calendar));
+    }
+
+    #[test]
+    fn default_backend_is_calendar() {
+        let q: EventQueue<()> = EventQueue::new();
+        assert_eq!(q.kind(), QueueKind::Calendar);
+        assert_eq!(QueueKind::default(), QueueKind::Calendar);
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(30, "c");
-        q.schedule_at(10, "a");
-        q.schedule_at(20, "b");
-        assert_eq!(q.pop(), Some((10, "a")));
-        assert_eq!(q.pop(), Some((20, "b")));
-        assert_eq!(q.pop(), Some((30, "c")));
-        assert_eq!(q.pop(), None);
+        both(|mut q| {
+            q.schedule_at(30, "c");
+            q.schedule_at(10, "a");
+            q.schedule_at(20, "b");
+            assert_eq!(q.pop(), Some((10, "a")));
+            assert_eq!(q.pop(), Some((20, "b")));
+            assert_eq!(q.pop(), Some((30, "c")));
+            assert_eq!(q.pop(), None);
+        });
     }
 
     #[test]
     fn fifo_for_equal_times() {
-        let mut q = EventQueue::new();
-        for i in 0..100 {
-            q.schedule_at(5, i);
-        }
-        for i in 0..100 {
-            assert_eq!(q.pop(), Some((5, i)));
+        for kind in [QueueKind::Heap, QueueKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..100 {
+                q.schedule_at(5, i);
+            }
+            for i in 0..100 {
+                assert_eq!(q.pop(), Some((5, i)), "{kind:?}");
+            }
         }
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.schedule_at(10, ());
-        q.schedule_at(10, ());
-        q.schedule_at(25, ());
-        let mut last = 0;
-        while let Some((t, _)) = q.pop() {
-            assert!(t >= last);
-            last = t;
+        for kind in [QueueKind::Heap, QueueKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(10, ());
+            q.schedule_at(10, ());
+            q.schedule_at(25, ());
+            let mut last = 0;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= last);
+                last = t;
+            }
+            assert_eq!(q.now(), 25);
         }
-        assert_eq!(q.now(), 25);
     }
 
     #[test]
     fn schedule_in_is_relative() {
-        let mut q = EventQueue::new();
-        q.schedule_at(100, "first");
-        q.pop();
-        q.schedule_in(50, "second");
-        assert_eq!(q.pop(), Some((150, "second")));
+        both(|mut q| {
+            q.schedule_at(100, "first");
+            q.pop();
+            q.schedule_in(50, "second");
+            assert_eq!(q.pop(), Some((150, "second")));
+        });
     }
 
     #[test]
     fn peek_does_not_advance() {
-        let mut q = EventQueue::new();
-        q.schedule_at(42, ());
-        assert_eq!(q.peek_time(), Some(42));
-        assert_eq!(q.now(), 0);
+        for kind in [QueueKind::Heap, QueueKind::Calendar] {
+            let mut q = EventQueue::with_kind(kind);
+            q.schedule_at(42, ());
+            assert_eq!(q.peek_time(), Some(42));
+            assert_eq!(q.now(), 0);
+        }
     }
 
     #[test]
     fn interleaved_schedule_pop_deterministic() {
-        // Two identical runs produce identical traces.
-        let run = || {
-            let mut q = EventQueue::new();
+        // Two identical runs produce identical traces — and so do the
+        // two backends, against each other.
+        let run = |kind: QueueKind| {
+            let mut q = EventQueue::with_kind(kind);
             let mut trace = vec![];
             q.schedule_at(1, 0u32);
             while let Some((t, e)) = q.pop() {
@@ -186,6 +270,7 @@ mod tests {
             }
             trace
         };
-        assert_eq!(run(), run());
+        assert_eq!(run(QueueKind::Heap), run(QueueKind::Heap));
+        assert_eq!(run(QueueKind::Heap), run(QueueKind::Calendar));
     }
 }

@@ -3,17 +3,24 @@
 //! Everything in the AWS substrate runs on a simulated clock so that a
 //! multi-hour spot-fleet run (the paper's "walk away and let things run")
 //! replays in milliseconds, deterministically, under a fixed seed.  The
-//! design is a classic DES: a monotone virtual clock plus a binary heap of
-//! timestamped events with FIFO tie-breaking.
+//! design is a classic DES: a monotone virtual clock plus a priority
+//! queue of timestamped events with FIFO tie-breaking (a bucketed
+//! calendar queue by default, with the reference binary heap selectable
+//! for A/B equivalence runs — see [`events`] and [`calendar`]).
 //!
 //! Real compute (PJRT execution of the AOT artifacts) happens *inline*
 //! during an event; its measured wall-time is charged to the simulated
 //! clock by the worker's duration model (see [`crate::workloads`]).
 
+pub mod arena;
+pub mod calendar;
 pub mod clock;
 pub mod events;
 pub mod rng;
+pub mod store;
 
+pub use arena::{Arena, SlotId};
 pub use clock::{SimTime, HOUR, MINUTE, SECOND};
-pub use events::EventQueue;
+pub use events::{EventQueue, QueueKind};
 pub use rng::SimRng;
+pub use store::{IdStore, StoreKind};

@@ -1,0 +1,234 @@
+//! Keyed entity storage for the AWS substrate: a `HashMap`-compatible
+//! store with a dense, index-addressed backend.
+//!
+//! EC2 instances and ECS containers get small sequential `u64` ids
+//! (1, 2, 3, …), so keying them through a general-purpose `HashMap`
+//! pays hashing and pointer-chasing on every lookup in the tick loop.
+//! [`IdStore`] keeps the map API but defaults to a dense `Vec<Option<T>>`
+//! indexed by the raw id — a lookup is one bounds check, iteration is a
+//! contiguous scan, and no id arithmetic is needed (slot 0 is simply
+//! never used).  The [`StoreKind::Map`] backend remains available as the
+//! reference implementation for the A/B equivalence gate in
+//! `tests/determinism.rs`.
+//!
+//! Determinism note: `values()`/`iter()` yield in ascending-id order on
+//! *both* backends (the map backend sorts), so switching backends cannot
+//! reorder any downstream iteration.
+
+use std::collections::HashMap;
+
+/// Which backing storage an [`IdStore`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StoreKind {
+    /// `HashMap<u64, T>` — the reference implementation the dense
+    /// backend is gated against.
+    Map,
+    /// `Vec<Option<T>>` indexed by the raw id — cache-local; the default.
+    #[default]
+    Dense,
+}
+
+#[derive(Debug)]
+enum Backend<T> {
+    Map(HashMap<u64, T>),
+    Dense(Vec<Option<T>>),
+}
+
+/// Map from small sequential `u64` ids to values.  See the module docs.
+#[derive(Debug)]
+pub struct IdStore<T> {
+    backend: Backend<T>,
+    len: usize,
+}
+
+impl<T> Default for IdStore<T> {
+    fn default() -> Self {
+        Self::with_kind(StoreKind::default())
+    }
+}
+
+impl<T> IdStore<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_kind(kind: StoreKind) -> Self {
+        let backend = match kind {
+            StoreKind::Map => Backend::Map(HashMap::new()),
+            StoreKind::Dense => Backend::Dense(Vec::new()),
+        };
+        Self { backend, len: 0 }
+    }
+
+    /// Which backend this store runs on.
+    pub fn kind(&self) -> StoreKind {
+        match self.backend {
+            Backend::Map(_) => StoreKind::Map,
+            Backend::Dense(_) => StoreKind::Dense,
+        }
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert `value` at `id`, returning the previous occupant if any.
+    pub fn insert(&mut self, id: u64, value: T) -> Option<T> {
+        let prev = match &mut self.backend {
+            Backend::Map(m) => m.insert(id, value),
+            Backend::Dense(v) => {
+                let i = usize::try_from(id).expect("id exceeds usize");
+                if i >= v.len() {
+                    v.resize_with(i + 1, || None);
+                }
+                v[i].replace(value)
+            }
+        };
+        if prev.is_none() {
+            self.len += 1;
+        }
+        prev
+    }
+
+    pub fn get(&self, id: u64) -> Option<&T> {
+        match &self.backend {
+            Backend::Map(m) => m.get(&id),
+            Backend::Dense(v) => v.get(id as usize).and_then(|s| s.as_ref()),
+        }
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut T> {
+        match &mut self.backend {
+            Backend::Map(m) => m.get_mut(&id),
+            Backend::Dense(v) => v.get_mut(id as usize).and_then(|s| s.as_mut()),
+        }
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.get(id).is_some()
+    }
+
+    pub fn remove(&mut self, id: u64) -> Option<T> {
+        let prev = match &mut self.backend {
+            Backend::Map(m) => m.remove(&id),
+            Backend::Dense(v) => v.get_mut(id as usize).and_then(|s| s.take()),
+        };
+        if prev.is_some() {
+            self.len -= 1;
+        }
+        prev
+    }
+
+    /// Live values in ascending-id order (both backends).
+    pub fn values(&self) -> std::vec::IntoIter<&T> {
+        match &self.backend {
+            Backend::Map(m) => {
+                let mut pairs: Vec<(u64, &T)> = m.iter().map(|(&id, v)| (id, v)).collect();
+                pairs.sort_unstable_by_key(|&(id, _)| id);
+                pairs
+                    .into_iter()
+                    .map(|(_, v)| v)
+                    .collect::<Vec<_>>()
+                    .into_iter()
+            }
+            Backend::Dense(v) => v.iter().flatten().collect::<Vec<_>>().into_iter(),
+        }
+    }
+
+    /// Live `(id, &value)` pairs in ascending-id order (both backends).
+    pub fn iter(&self) -> std::vec::IntoIter<(u64, &T)> {
+        match &self.backend {
+            Backend::Map(m) => {
+                let mut pairs: Vec<(u64, &T)> = m.iter().map(|(&id, v)| (id, v)).collect();
+                pairs.sort_unstable_by_key(|&(id, _)| id);
+                pairs.into_iter()
+            }
+            Backend::Dense(v) => v
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|v| (i as u64, v)))
+                .collect::<Vec<_>>()
+                .into_iter(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn on_both(check: impl Fn(IdStore<String>, StoreKind)) {
+        for kind in [StoreKind::Map, StoreKind::Dense] {
+            check(IdStore::with_kind(kind), kind);
+        }
+    }
+
+    #[test]
+    fn default_backend_is_dense() {
+        let s: IdStore<u32> = IdStore::new();
+        assert_eq!(s.kind(), StoreKind::Dense);
+        assert_eq!(StoreKind::default(), StoreKind::Dense);
+    }
+
+    #[test]
+    fn map_semantics_on_both_backends() {
+        on_both(|mut s, kind| {
+            assert!(s.insert(3, "c".into()).is_none(), "{kind:?}");
+            assert!(s.insert(1, "a".into()).is_none());
+            assert_eq!(s.insert(3, "c2".into()).as_deref(), Some("c"));
+            assert_eq!(s.len(), 2);
+            assert_eq!(s.get(3).map(String::as_str), Some("c2"));
+            assert!(s.contains(1));
+            assert!(!s.contains(2));
+            assert_eq!(s.remove(1).as_deref(), Some("a"));
+            assert!(s.remove(1).is_none());
+            assert_eq!(s.len(), 1);
+            assert!(!s.is_empty());
+        });
+    }
+
+    #[test]
+    fn iteration_is_id_ascending_on_both_backends() {
+        on_both(|mut s, kind| {
+            for id in [5u64, 2, 9, 1] {
+                s.insert(id, format!("v{id}"));
+            }
+            s.remove(9);
+            let ids: Vec<u64> = s.iter().map(|(id, _)| id).collect();
+            assert_eq!(ids, vec![1, 2, 5], "{kind:?}");
+            let vals: Vec<&String> = s.values().collect();
+            assert_eq!(
+                vals.iter().map(|v| v.as_str()).collect::<Vec<_>>(),
+                vec!["v1", "v2", "v5"],
+                "{kind:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn get_mut_updates_in_place() {
+        on_both(|mut s, _| {
+            s.insert(7, "x".into());
+            s.get_mut(7).unwrap().push('!');
+            assert_eq!(s.get(7).map(String::as_str), Some("x!"));
+            assert!(s.get_mut(8).is_none());
+        });
+    }
+
+    #[test]
+    fn sparse_ids_work_on_dense_backend() {
+        // register_instance-style usage: arbitrary (not insertion-order)
+        // small ids.
+        let mut s: IdStore<u8> = IdStore::with_kind(StoreKind::Dense);
+        s.insert(100, 1);
+        s.insert(2, 2);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(100), Some(&1));
+        assert_eq!(s.iter().map(|(id, _)| id).collect::<Vec<_>>(), vec![2, 100]);
+    }
+}

@@ -1,0 +1,277 @@
+//! Property suite for the calendar event queue (DESIGN.md §"Event core").
+//!
+//! The calendar backend must be *bit-equivalent* to the reference binary
+//! heap, not merely correct: on any workload the pops come out in
+//! identical `(time, seq)` order.  These tests drive randomized schedules
+//! through both implementations and compare full traces, alongside direct
+//! invariant checks: globally time-ordered pops, FIFO on equal
+//! timestamps, and `len`/`peek_time`/`is_empty` accounting at every step.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use ds_rs::sim::calendar::CalendarQueue;
+use ds_rs::sim::{EventQueue, QueueKind, SimRng};
+use ds_rs::testutil::forall_r;
+
+/// One step of a randomized queue workload.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    /// Schedule an event `delay` ms after the current clock.
+    Push { delay: u64 },
+    /// Pop the minimum (no-op on an empty queue).
+    Pop,
+}
+
+/// A DES-shaped random script: push-heavy, with a large tie mass
+/// (delay 0), mid-range delays, and rare far-future jumps that force the
+/// calendar's direct-search fallback and its resize paths.
+fn random_script(rng: &mut SimRng) -> Vec<Op> {
+    let n = 40 + rng.below(160);
+    (0..n)
+        .map(|_| {
+            if rng.chance(0.6) {
+                Op::Push {
+                    delay: match rng.below(10) {
+                        0..=3 => 0,
+                        4..=7 => rng.below(5_000),
+                        8 => rng.below(200_000),
+                        _ => rng.below(50_000_000),
+                    },
+                }
+            } else {
+                Op::Pop
+            }
+        })
+        .collect()
+}
+
+/// Replay a script on an [`EventQueue`] backend, returning the pop trace.
+/// Payloads number the pushes, so a trace pins both times and identities.
+fn replay(kind: QueueKind, script: &[Op]) -> Vec<(u64, u32)> {
+    let mut q = EventQueue::with_kind(kind);
+    let mut payload = 0u32;
+    let mut trace = Vec::new();
+    for op in script {
+        match *op {
+            Op::Push { delay } => {
+                payload += 1;
+                q.schedule_in(delay, payload);
+            }
+            Op::Pop => {
+                if let Some((t, e)) = q.pop() {
+                    trace.push((t, e));
+                }
+            }
+        }
+    }
+    while let Some((t, e)) = q.pop() {
+        trace.push((t, e));
+    }
+    trace
+}
+
+/// Raw differential: the [`CalendarQueue`] against a shadow
+/// `BinaryHeap` on the same `(time, seq)` keys, with `len`, `is_empty`,
+/// and `peek_time` checked after every operation and a full drain at the
+/// end.
+#[test]
+fn calendar_matches_binary_heap_step_by_step() {
+    forall_r(
+        "calendar-vs-heap-raw",
+        80,
+        0xCA1,
+        random_script,
+        |script| {
+            let mut cal: CalendarQueue<u64> = CalendarQueue::new();
+            let mut heap: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new();
+            let mut now = 0u64;
+            let mut seq = 0u64;
+            for op in script {
+                match *op {
+                    Op::Push { delay } => {
+                        seq += 1;
+                        let t = now + delay;
+                        cal.push(t, seq, seq);
+                        heap.push(Reverse((t, seq)));
+                    }
+                    Op::Pop => {
+                        let expect = heap.pop().map(|Reverse((t, s))| (t, s, s));
+                        let got = cal.pop();
+                        if got != expect {
+                            return Err(format!(
+                                "pop mismatch: calendar {got:?} vs heap {expect:?}"
+                            ));
+                        }
+                        if let Some((t, _, _)) = got {
+                            now = t;
+                        }
+                    }
+                }
+                if cal.len() != heap.len() {
+                    return Err(format!("len mismatch: {} vs {}", cal.len(), heap.len()));
+                }
+                if cal.is_empty() != heap.is_empty() {
+                    return Err("is_empty mismatch".into());
+                }
+                let peek = heap.peek().map(|&Reverse((t, _))| t);
+                if cal.peek_time() != peek {
+                    return Err(format!(
+                        "peek mismatch: {:?} vs {:?}",
+                        cal.peek_time(),
+                        peek
+                    ));
+                }
+            }
+            loop {
+                let expect = heap.pop().map(|Reverse((t, s))| (t, s, s));
+                let got = cal.pop();
+                if got != expect {
+                    return Err(format!("drain mismatch: {got:?} vs {expect:?}"));
+                }
+                if got.is_none() {
+                    return Ok(());
+                }
+            }
+        },
+    );
+}
+
+/// End-to-end differential through the public [`EventQueue`] API: the two
+/// backends produce identical traces, and every trace is globally ordered
+/// by time with FIFO tie-breaking (payloads are assigned in schedule
+/// order, so within one timestamp they must ascend).
+#[test]
+fn event_queue_backends_produce_identical_traces() {
+    forall_r(
+        "heap-vs-calendar-traces",
+        80,
+        0xE0E,
+        random_script,
+        |script| {
+            let heap = replay(QueueKind::Heap, script);
+            let cal = replay(QueueKind::Calendar, script);
+            if heap != cal {
+                return Err(format!(
+                    "traces diverge: heap {} pops, calendar {} pops",
+                    heap.len(),
+                    cal.len()
+                ));
+            }
+            for w in cal.windows(2) {
+                let ((t0, p0), (t1, p1)) = (w[0], w[1]);
+                if t1 < t0 || (t1 == t0 && p1 < p0) {
+                    return Err(format!(
+                        "order violated: ({t0},{p0}) then ({t1},{p1})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Interleaved equal-timestamp bursts big enough to cross several resize
+/// thresholds pop in exact insertion order on both backends.
+#[test]
+fn equal_timestamp_bursts_pop_in_insertion_order() {
+    forall_r(
+        "fifo-equal-timestamps",
+        40,
+        0xF1F0,
+        |rng| {
+            // Three distinct instants; pushes round-robin across them so
+            // the schedule order interleaves timestamps.
+            let times: Vec<u64> = (0..3).map(|b| b * 10_000 + rng.below(1_000)).collect();
+            let rounds = 15 + rng.below(40);
+            let mut pushes = Vec::new();
+            for _ in 0..rounds {
+                pushes.extend_from_slice(&times);
+            }
+            pushes
+        },
+        |pushes| {
+            let mut expected: Vec<(u64, usize)> =
+                pushes.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+            expected.sort_by_key(|&(t, i)| (t, i));
+            for kind in [QueueKind::Heap, QueueKind::Calendar] {
+                let mut q = EventQueue::with_kind(kind);
+                for (i, &t) in pushes.iter().enumerate() {
+                    q.schedule_at(t, i);
+                }
+                let mut got = Vec::new();
+                while let Some((t, i)) = q.pop() {
+                    got.push((t, i));
+                }
+                if got != expected {
+                    return Err(format!(
+                        "{kind:?}: FIFO order broken over {} events",
+                        pushes.len()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `len`, `is_empty`, and `scheduled_total` stay consistent with a simple
+/// push/pop counter model at every step, and `peek_time` never runs
+/// behind the clock.
+#[test]
+fn len_and_scheduled_total_accounting() {
+    forall_r(
+        "len-accounting",
+        60,
+        0xACC7,
+        random_script,
+        |script| {
+            for kind in [QueueKind::Heap, QueueKind::Calendar] {
+                let mut q = EventQueue::with_kind(kind);
+                let mut pushed = 0u64;
+                let mut popped = 0u64;
+                for op in script {
+                    match *op {
+                        Op::Push { delay } => {
+                            pushed += 1;
+                            q.schedule_in(delay, ());
+                        }
+                        Op::Pop => {
+                            if q.pop().is_some() {
+                                popped += 1;
+                            } else if !q.is_empty() {
+                                return Err(format!(
+                                    "{kind:?}: pop() returned None on a non-empty queue"
+                                ));
+                            }
+                        }
+                    }
+                    if q.len() as u64 != pushed - popped {
+                        return Err(format!(
+                            "{kind:?}: len {} != pushed {pushed} - popped {popped}",
+                            q.len()
+                        ));
+                    }
+                    if q.is_empty() != (q.len() == 0) {
+                        return Err(format!("{kind:?}: is_empty inconsistent with len"));
+                    }
+                    if q.scheduled_total() != pushed {
+                        return Err(format!(
+                            "{kind:?}: scheduled_total {} != pushed {pushed}",
+                            q.scheduled_total()
+                        ));
+                    }
+                    if let Some(pt) = q.peek_time() {
+                        if pt < q.now() {
+                            return Err(format!(
+                                "{kind:?}: peek_time {pt} is before now {}",
+                                q.now()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

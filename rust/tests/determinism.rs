@@ -8,10 +8,10 @@
 use ds_rs::aws::ec2::{AllocationStrategy, InstanceSlot};
 use ds_rs::config::AppConfig;
 use ds_rs::coordinator::autoscale::ScalingMode;
-use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::coordinator::run::{run_full, EngineOptions, RunOptions};
 use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
 use ds_rs::metrics::RunReport;
-use ds_rs::sim::MINUTE;
+use ds_rs::sim::{QueueKind, StoreKind, MINUTE};
 use ds_rs::testutil::fixtures::{plate_jobs, quick_cfg, shaped, template_fleet};
 use ds_rs::workloads::{DurationModel, ModeledExecutor};
 
@@ -19,11 +19,39 @@ fn cfg() -> AppConfig {
     quick_cfg(3)
 }
 
+/// All four engine combinations.  Index 0 is the reference engine (binary
+/// heap + hash maps) every fast path is gated against.
+fn all_engines() -> [EngineOptions; 4] {
+    [
+        EngineOptions {
+            queue: QueueKind::Heap,
+            store: StoreKind::Map,
+        },
+        EngineOptions {
+            queue: QueueKind::Heap,
+            store: StoreKind::Dense,
+        },
+        EngineOptions {
+            queue: QueueKind::Calendar,
+            store: StoreKind::Map,
+        },
+        EngineOptions {
+            queue: QueueKind::Calendar,
+            store: StoreKind::Dense,
+        },
+    ]
+}
+
 fn serial_run(seed: u64) -> RunReport {
+    serial_run_with(seed, EngineOptions::default())
+}
+
+fn serial_run_with(seed: u64, engine: EngineOptions) -> RunReport {
     let jobs = plate_jobs(8, 2);
     let mut ex = shaped(45.0, 0.3, 0.02, 0.05);
     let opts = RunOptions {
         seed,
+        engine,
         ..Default::default()
     };
     run_full(&cfg(), &jobs, &fleet(), &mut ex, opts).unwrap()
@@ -251,4 +279,111 @@ fn scaling_sweep_identical_at_1_2_and_8_threads() {
         "target-tracking never decided: {:?}",
         one.report.scenarios[1].scaling
     );
+}
+
+// ---------------------------------------------------------------------------
+// Engine A/B equivalence gate (DESIGN.md §"Event core").
+//
+// The calendar event queue and the dense id-indexed entity stores are
+// *replacements* for the binary heap and the hash maps, so the bar is not
+// "also correct" but "bit-identical": every determinism scenario must
+// produce byte-for-byte the same RunReport (and sweep JSON) under all
+// four `{queue} × {store}` combinations.  These tests are what allowed
+// the fast paths to become the defaults.
+
+#[test]
+fn engine_backends_bit_identical_on_serial_runs() {
+    for seed in [7, 11] {
+        let reference = serial_run_with(seed, all_engines()[0]);
+        for engine in &all_engines()[1..] {
+            assert_eq!(reference, serial_run_with(seed, *engine), "{engine:?} seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn engine_backends_bit_identical_on_data_shaped_crashy_runs() {
+    // Data-plane flows (park/cancel on the flow table) plus crashes and
+    // alarm reaping (instance deregistration, container teardown) hit
+    // every arena/store mutation path.
+    let cfg = cfg();
+    let fleet = fleet();
+    let jobs = plate_jobs(6, 2).with_uniform_data(32_000_000, 4_000_000);
+    let run = |engine: EngineOptions| {
+        let mut ex = shaped(45.0, 0.3, 0.02, 0.05);
+        let opts = RunOptions {
+            seed: 13,
+            volatility: ds_rs::aws::ec2::Volatility::High,
+            crash_mttf: Some(40 * MINUTE),
+            net: ds_rs::aws::s3::dataplane::NetProfile::narrow(),
+            engine,
+            ..Default::default()
+        };
+        run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap()
+    };
+    let reference = run(all_engines()[0]);
+    assert!(reference.data.total_bytes() > 0);
+    for engine in &all_engines()[1..] {
+        assert_eq!(reference, run(*engine), "{engine:?}");
+    }
+}
+
+#[test]
+fn engine_backends_bit_identical_across_sweep_threads() {
+    let mut reference_plan = sweep_plan();
+    reference_plan.base_opts.engine = all_engines()[0];
+    let reference = run_sweep(&reference_plan, 2).unwrap();
+    for engine in all_engines() {
+        let mut plan = sweep_plan();
+        plan.base_opts.engine = engine;
+        for threads in [1, 2, 8] {
+            let run = run_sweep(&plan, threads).unwrap();
+            assert_eq!(reference.report, run.report, "{engine:?} @ {threads} threads");
+            assert_eq!(reference.cells, run.cells, "{engine:?} @ {threads} threads");
+            // Byte-level: the exported sweep JSON is identical too.
+            assert_eq!(
+                reference.report.to_json().to_string(),
+                run.report.to_json().to_string(),
+                "{engine:?} @ {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_backends_bit_identical_on_scaling_and_data_axes_sweep() {
+    let jobs = plate_jobs(5, 2); // 10 jobs per cell
+    let matrix = ScenarioMatrix {
+        seeds: (0..2).collect(),
+        cluster_machines: vec![3],
+        scalings: ScalingMode::ALL.to_vec(),
+        scaling_targets: vec![8.0],
+        input_mbs: vec![0.0, 24.0],
+        models: vec![DurationModel {
+            mean_s: 120.0,
+            cv: 0.3,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    let mk = |engine: EngineOptions| {
+        let mut plan = SweepPlan::new(cfg(), jobs.clone(), matrix.clone());
+        plan.base_opts.engine = engine;
+        plan
+    };
+    let reference = run_sweep(&mk(all_engines()[0]), 2).unwrap();
+    // Sanity: the axes actually exercised scaling and the data plane.
+    assert!(reference
+        .report
+        .scenarios
+        .iter()
+        .any(|s| s.scaling.policy == "target-tracking"));
+    assert!(reference.cells.iter().any(|c| c.report.data.total_bytes() > 0));
+    for engine in &all_engines()[1..] {
+        for threads in [1, 8] {
+            let run = run_sweep(&mk(*engine), threads).unwrap();
+            assert_eq!(reference.report, run.report, "{engine:?} @ {threads} threads");
+            assert_eq!(reference.cells, run.cells, "{engine:?} @ {threads} threads");
+        }
+    }
 }
