@@ -10,12 +10,16 @@
 #
 #   ./benchmark_compare.sh            # smoke macro (10^5 jobs / 500 machines)
 #   ./benchmark_compare.sh --million  # full 10^6 jobs / 10^3 machines
+#   ./benchmark_compare.sh --shards   # sharded sweep across 1/2/4/8 workers
 #
-# The snapshot keeps one macro section per mode (smoke / million); a run
-# only overwrites its own mode's section, so the committed million
-# number survives smoke runs.  Baselines whose matching section is null
-# or that carry `"unmeasured": true` (bootstrap snapshots committed
-# before a machine ever ran the bench) are recorded, not compared.
+# The event-core snapshot keeps one macro section per mode (smoke /
+# million); a run only overwrites its own mode's section, so the
+# committed million number survives smoke runs.  `--shards` runs the
+# sweep bench's sharded-dispatch mode instead (real `ds shard-worker`
+# processes) and diffs per-shard-count throughput against BENCH_7.json.
+# Baselines whose matching section is null or that carry
+# `"unmeasured": true` (bootstrap snapshots committed before a machine
+# ever ran the bench) are recorded, not compared.
 
 set -euo pipefail
 
@@ -26,12 +30,75 @@ for arg in "$@"; do
   case "$arg" in
     --smoke) MODE=smoke ;;
     --million) MODE=million ;;
+    --shards) MODE=shards ;;
     *)
-      echo "usage: $0 [--smoke|--million]" >&2
+      echo "usage: $0 [--smoke|--million|--shards]" >&2
       exit 2
       ;;
   esac
 done
+
+if [ "$MODE" = shards ]; then
+  SNAPSHOT="${BENCH_SHARD_SNAPSHOT:-BENCH_7.json}"
+  echo "==> cargo bench --bench sweep (--shards)" >&2
+  RESULT=$(cargo bench --manifest-path rust/Cargo.toml --bench sweep -- --shards --json | tail -n 1)
+
+  NEW_JSON="$RESULT" python3 - "$SNAPSHOT" <<'PY'
+import json
+import os
+import sys
+
+snapshot = sys.argv[1]
+new = json.loads(os.environ["NEW_JSON"])
+
+baseline = None
+if os.path.exists(snapshot):
+    try:
+        with open(snapshot) as f:
+            baseline = json.load(f)
+    except ValueError:
+        print(f"!! existing {snapshot} is not valid JSON; ignoring baseline",
+              file=sys.stderr)
+if not isinstance(baseline, dict):
+    baseline = {}
+
+THRESHOLD = 0.80
+failed = False
+old_tp = baseline.get("shard_throughput") or {}
+new_tp = new.get("shard_throughput") or {}
+if baseline.get("unmeasured"):
+    print("== baseline is an unmeasured bootstrap snapshot: recording "
+          "first real measurement", file=sys.stderr)
+else:
+    for shards in sorted(new_tp, key=int):
+        old_v = old_tp.get(shards) or 0
+        new_v = new_tp.get(shards) or 0
+        if old_v > 0 and new_v > 0:
+            ratio = new_v / old_v
+            print(f"== shard_throughput[{shards}]: {old_v:.0f} -> {new_v:.0f} "
+                  f"sim jobs/s ({ratio:.1%} of baseline)", file=sys.stderr)
+            if ratio < THRESHOLD:
+                print(f"!! regression at {shards} shards: {ratio:.1%} < "
+                      f"{THRESHOLD:.0%} of baseline", file=sys.stderr)
+                failed = True
+        else:
+            print(f"== no measured baseline at {shards} shards: recording "
+                  "first measurement", file=sys.stderr)
+
+merged = {
+    "bench": "sweep_shards",
+    "cells": new.get("cells"),
+    "jobs_per_cell": new.get("jobs_per_cell"),
+    "shard_throughput": new_tp,
+}
+with open(snapshot, "w") as f:
+    json.dump(merged, f, indent=2, sort_keys=True)
+    f.write("\n")
+print(f"== wrote {snapshot}", file=sys.stderr)
+sys.exit(1 if failed else 0)
+PY
+  exit $?
+fi
 
 SNAPSHOT="${BENCH_SNAPSHOT:-BENCH_6.json}"
 

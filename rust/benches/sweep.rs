@@ -4,18 +4,27 @@
 //! + cartesian expansion of a 1000-scenario matrix).
 //!
 //!     cargo bench --bench sweep
+//!     cargo bench --bench sweep -- --shards [--json]
 //!
 //! Each cell is an independent discrete-event simulation, so the engine
 //! is embarrassingly parallel; the only serial parts are plan expansion
 //! and the final aggregation.  The bench also cross-checks that every
 //! thread count produced the bit-identical SweepReport — perf must never
 //! buy nondeterminism.
+//!
+//! `--shards` benches the sharded dispatch path instead: the same
+//! 64-cell plan across 1/2/4/8 real `ds shard-worker` processes
+//! (2 threads each), bit-identity-checked against single-process
+//! `run_sweep`; `benchmark_compare.sh --shards` drives the `--json`
+//! output and diffs it against the committed `BENCH_7.json` snapshot.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use ds_rs::aws::ec2::Volatility;
 use ds_rs::config::{AppConfig, JobSpec};
+use ds_rs::coordinator::shard::{run_sweep_sharded, ProcessExecutor, ShardOptions};
 use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan};
+use ds_rs::json::Value;
 use ds_rs::scenario::SweepFile;
 use ds_rs::sim::MINUTE;
 use ds_rs::workloads::DurationModel;
@@ -95,7 +104,62 @@ fn plan_expansion_bench() {
     );
 }
 
+/// Shard-count scaling over real worker processes.  Throughput is
+/// simulated jobs per wall-clock second (cells × jobs/cell ÷ wall);
+/// every shard count is cross-checked bit-identical against the
+/// single-process engine before its number is reported.
+fn sharded_bench(json: bool) {
+    let plan = plan_64_cells();
+    let jobs_total = (plan.matrix.cell_count() * plan.jobs.groups.len()) as f64;
+    let reference = run_sweep(&plan, 2).expect("reference sweep failed");
+
+    if !json {
+        println!(
+            "== sharded sweep: {} cells x {} jobs across real worker processes ==\n",
+            plan.matrix.cell_count(),
+            plan.jobs.groups.len()
+        );
+        println!("{:>7} {:>10} {:>12}", "shards", "wall s", "sim jobs/s");
+    }
+    let mut throughput = Value::obj();
+    for &shards in &[1usize, 2, 4, 8] {
+        let exec = ProcessExecutor::new(env!("CARGO_BIN_EXE_ds"), Duration::from_secs(600));
+        let opts = ShardOptions {
+            shards,
+            threads: 2,
+            retries: 0,
+        };
+        let t0 = Instant::now();
+        let run = run_sweep_sharded(&plan, &opts, &exec).expect("sharded sweep failed");
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(
+            reference.report, run.report,
+            "shard count changed the report — determinism broken"
+        );
+        let jobs_per_s = jobs_total / wall.max(1e-9);
+        if json {
+            throughput = throughput.with(&shards.to_string(), jobs_per_s);
+        } else {
+            println!("{shards:>7} {wall:>10.2} {jobs_per_s:>12.0}");
+        }
+    }
+    if json {
+        let out = Value::obj()
+            .with("bench", "sweep")
+            .with("mode", "shards")
+            .with("cells", plan.matrix.cell_count())
+            .with("jobs_per_cell", plan.jobs.groups.len())
+            .with("shard_throughput", throughput);
+        println!("{out}");
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--shards") {
+        sharded_bench(args.iter().any(|a| a == "--json"));
+        return;
+    }
     let plan = plan_64_cells();
     println!(
         "== sweep thread scaling: {} cells x {} jobs ==\n",

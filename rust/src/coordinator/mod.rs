@@ -18,15 +18,21 @@
 //! * [`autoscale`] — the closed-loop elastic scaling control plane:
 //!   typed [`ScalingPolicy`]s driven by CloudWatch alarms on SQS
 //!   metrics, applied on the monitor tick.
+//! * [`shard`]   — sharded sweep execution: a versioned JSON wire
+//!   contract partitioning the scenario × seed matrix across worker
+//!   processes (`ds shard-worker`), supervised with timeout + bounded
+//!   retry, merging bit-identically to [`run_sweep`](sweep::run_sweep).
 
 pub mod autoscale;
 pub mod cluster;
 pub mod monitor;
 pub mod run;
 pub mod setup;
+pub mod shard;
 pub mod submit;
 pub mod sweep;
 
 pub use autoscale::{ScalingBreakdown, ScalingMode, ScalingPolicy};
 pub use run::{EngineOptions, RunOptions, Simulation};
+pub use shard::{run_sweep_sharded, shard_plan, ShardAssignment, ShardOptions};
 pub use sweep::{run_sweep, Scenario, ScenarioMatrix, SweepPlan, SweepRun};

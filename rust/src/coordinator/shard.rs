@@ -1,0 +1,1152 @@
+//! Sharded sweep execution: a typed wire contract and Lambda-style
+//! parent/child dispatch (DESIGN.md §10).
+//!
+//! The in-process sweep engine ([`run_sweep`](super::sweep::run_sweep))
+//! fans a plan out on one OS-thread pool; this module generalizes the
+//! fan-out across *worker processes*, which is the paper's actual shape
+//! — a coordinator handing chunks of a job matrix to disposable workers
+//! and merging whatever comes back:
+//!
+//! * [`shard_plan`] deterministically partitions the scenario × seed
+//!   matrix into balanced [`ShardAssignment`]s (every cell exactly once,
+//!   sizes within ±1, round-robin striped so scenario-major cost
+//!   gradients spread across shards).
+//! * [`SweepShardRequest`] / [`ShardResult`] are the versioned JSON
+//!   envelopes.  The plan travels as the self-contained Sweep file
+//!   (`SweepFile::render`, already gated for bit-identical replay);
+//!   the base run options the Sweep file does not carry (monitor mode,
+//!   crash MTTF, engine selection, …) ride in a `base_opts` object, and
+//!   per-cell results carry the *exact* [`RunReport`] — times as
+//!   integer milliseconds, f64s through the shortest-round-trip
+//!   formatter — so the parent can re-run the same pure fold the
+//!   single-process engine uses.
+//! * [`shard_worker`] is the child half: decode request → run assigned
+//!   cells on a small thread pool → encode result.  `ds shard-worker`
+//!   (hidden subcommand) wires it to stdin/stdout.
+//! * [`run_sweep_sharded`] is the parent half: dispatch every shard
+//!   through a [`ShardExecutor`] (separate process, or in-process for
+//!   tests), supervise with bounded retry — each retry is a fresh
+//!   dispatch — validate that every result matches its assignment
+//!   exactly, and merge via [`SweepReport::from_cells`].
+//!
+//! The contract's load-bearing property is *bit identity*: for any
+//! shard count, any thread count per shard, and any completion order,
+//! the merged [`SweepReport`] equals the single-process one byte for
+//! byte (table bytes and JSON bytes — `tests/sharding.rs` pins this
+//! differentially).  Failures are structured, never silent: a shard
+//! that exhausts its retries fails the sweep with a typed
+//! [`ShardError`] carrying the child's stderr, and a result whose cell
+//! set deviates from its assignment is rejected before it can poison
+//! the merge.
+
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use thiserror::Error;
+
+use crate::aws::billing::CostReport;
+use crate::json::Value;
+use crate::metrics::{
+    DataBreakdown, PoolBreakdown, RunReport, RunStats, ScalingBreakdown, ScalingDecision,
+    SweepReport,
+};
+use crate::scenario::SweepFile;
+use crate::sim::{QueueKind, SimTime, StoreKind};
+
+use super::run::{EngineOptions, RunOptions};
+use super::sweep::{assemble_run, expand_and_validate, run_cell, CellResult, SweepRun};
+pub use super::sweep::SweepPlan;
+
+/// Version stamped on both envelopes.  Bump on any breaking change to
+/// the field sets (the golden snapshots in `tests/golden/` pin them);
+/// both the worker and the parent reject mismatched envelopes with a
+/// typed error instead of guessing.
+pub const WIRE_VERSION: u64 = 1;
+
+const REQUEST_KIND: &str = "sweep-shard-request";
+const RESULT_KIND: &str = "shard-result";
+
+// ---------------------------------------------------------------------
+// Shard plan
+// ---------------------------------------------------------------------
+
+/// One shard's slice of the sweep: which global cell indices it runs.
+/// Cell `i` of a plan is scenario `i / seeds` at seed slot `i % seeds`
+/// — the same scenario-major order the single-process engine uses.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardAssignment {
+    /// This shard's index in `0..count`.
+    pub index: usize,
+    /// Total shards in the plan.
+    pub count: usize,
+    /// Global cell indices assigned to this shard, ascending.
+    pub cells: Vec<usize>,
+}
+
+/// Deterministically partition `cell_count` cells into at most `shards`
+/// balanced shards (a pure function: re-invoking with the same inputs
+/// yields the same plan).  Cells are striped round-robin, so shard
+/// sizes differ by at most one and the expensive end of a scenario-major
+/// matrix (big-machine scenarios cluster at high indices) spreads
+/// across all workers instead of landing on the last one.
+pub fn shard_plan(cell_count: usize, shards: usize) -> Vec<ShardAssignment> {
+    let count = shards.clamp(1, cell_count.max(1));
+    let mut plans: Vec<ShardAssignment> = (0..count)
+        .map(|index| ShardAssignment {
+            index,
+            count,
+            cells: Vec::with_capacity(cell_count / count + 1),
+        })
+        .collect();
+    for cell in 0..cell_count {
+        plans[cell % count].cells.push(cell);
+    }
+    plans
+}
+
+// ---------------------------------------------------------------------
+// Wire codec
+// ---------------------------------------------------------------------
+
+fn field<'a>(v: &'a Value, key: &str) -> Result<&'a Value> {
+    v.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+}
+
+fn u64_field(v: &Value, key: &str) -> Result<u64> {
+    field(v, key)?
+        .as_u64()
+        .ok_or_else(|| anyhow!("field '{key}' is not an unsigned integer"))
+}
+
+fn u32_field(v: &Value, key: &str) -> Result<u32> {
+    u32::try_from(u64_field(v, key)?).with_context(|| format!("field '{key}' overflows u32"))
+}
+
+fn usize_field(v: &Value, key: &str) -> Result<usize> {
+    usize::try_from(u64_field(v, key)?).with_context(|| format!("field '{key}' overflows usize"))
+}
+
+fn f64_field(v: &Value, key: &str) -> Result<f64> {
+    field(v, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+}
+
+fn bool_field(v: &Value, key: &str) -> Result<bool> {
+    field(v, key)?
+        .as_bool()
+        .ok_or_else(|| anyhow!("field '{key}' is not a bool"))
+}
+
+fn str_field<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    field(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{key}' is not a string"))
+}
+
+fn arr_field<'a>(v: &'a Value, key: &str) -> Result<&'a [Value]> {
+    field(v, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("field '{key}' is not an array"))
+}
+
+/// Optional-SimTime field: `null` ⇔ `None`, integer milliseconds
+/// otherwise.
+fn opt_ms_field(v: &Value, key: &str) -> Result<Option<SimTime>> {
+    match field(v, key)? {
+        Value::Null => Ok(None),
+        val => val
+            .as_u64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("field '{key}' is neither null nor integer ms")),
+    }
+}
+
+fn opt_ms_json(t: Option<SimTime>) -> Value {
+    match t {
+        Some(ms) => Value::from(ms),
+        None => Value::Null,
+    }
+}
+
+/// The slice of [`RunOptions`] the Sweep file does *not* carry and no
+/// axis overlays per cell: execution-mode knobs that must survive the
+/// wire for the child to reproduce the parent's cells exactly.  The
+/// axis-owned knobs (seed, volatility, net profile, scaling policy) are
+/// deliberately absent — `Scenario::cell_inputs` overwrites them per
+/// cell from the plan's matrix, which does travel.
+fn opts_to_json(o: &RunOptions) -> Value {
+    Value::obj()
+        .with("monitor", o.monitor)
+        .with("cheapest", o.cheapest)
+        .with("queue_downscale", o.queue_downscale)
+        .with("crash_mttf_ms", opt_ms_json(o.crash_mttf))
+        .with("max_sim_time_ms", o.max_sim_time)
+        .with("overrun_after_drain_ms", o.overrun_after_drain)
+        .with("data_bucket", o.data_bucket.as_str())
+        .with(
+            "engine",
+            Value::obj()
+                .with(
+                    "queue",
+                    match o.engine.queue {
+                        QueueKind::Heap => "heap",
+                        QueueKind::Calendar => "calendar",
+                    },
+                )
+                .with(
+                    "store",
+                    match o.engine.store {
+                        StoreKind::Map => "map",
+                        StoreKind::Dense => "dense",
+                    },
+                ),
+        )
+}
+
+fn opts_from_json(v: &Value) -> Result<RunOptions> {
+    let engine = field(v, "engine")?;
+    let queue = match str_field(engine, "queue")? {
+        "heap" => QueueKind::Heap,
+        "calendar" => QueueKind::Calendar,
+        other => bail!("unknown engine queue '{other}'"),
+    };
+    let store = match str_field(engine, "store")? {
+        "map" => StoreKind::Map,
+        "dense" => StoreKind::Dense,
+        other => bail!("unknown engine store '{other}'"),
+    };
+    Ok(RunOptions {
+        monitor: bool_field(v, "monitor")?,
+        cheapest: bool_field(v, "cheapest")?,
+        queue_downscale: bool_field(v, "queue_downscale")?,
+        crash_mttf: opt_ms_field(v, "crash_mttf_ms")?,
+        max_sim_time: u64_field(v, "max_sim_time_ms")?,
+        overrun_after_drain: u64_field(v, "overrun_after_drain_ms")?,
+        data_bucket: str_field(v, "data_bucket")?.to_string(),
+        engine: EngineOptions { queue, store },
+        ..RunOptions::default()
+    })
+}
+
+/// Exact wire shape of a [`RunReport`].  Unlike `RunReport::to_json`
+/// (a human-facing export that renders times as fractional seconds),
+/// this codec keeps every `SimTime` as integer milliseconds and every
+/// f64 as the shortest-round-trip decimal the repo's JSON layer
+/// guarantees to parse back bit-exactly — a report must survive the
+/// hop to the parent without losing a single bit, or the merged sweep
+/// stops being byte-identical to the single-process one.
+///
+/// Struct fields are enumerated exhaustively (no `..Default::default()`
+/// on decode), so adding a field to any report struct breaks this
+/// module's compile instead of silently dropping data on the wire; the
+/// golden snapshot `tests/golden/shard_result.keys` pins the emitted
+/// field set.
+pub fn report_to_wire(r: &RunReport) -> Value {
+    let s = &r.stats;
+    let stats = Value::obj()
+        .with("completed", s.completed)
+        .with("skipped_done", s.skipped_done)
+        .with("duplicates", s.duplicates)
+        .with("failed_attempts", s.failed_attempts)
+        .with("stalled", s.stalled)
+        .with("lost_to_death", s.lost_to_death)
+        .with("dead_lettered", s.dead_lettered)
+        .with("instances_launched", s.instances_launched)
+        .with("interruptions", s.interruptions)
+        .with("crashes", s.crashes)
+        .with("alarm_terminations", s.alarm_terminations)
+        .with("self_shutdowns", s.self_shutdowns)
+        .with("events_processed", s.events_processed);
+    let c = &r.cost;
+    let cost = Value::obj()
+        .with("ec2_usd", c.ec2_usd)
+        .with("sqs_usd", c.sqs_usd)
+        .with("s3_usd", c.s3_usd)
+        .with("s3_egress_usd", c.s3_egress_usd)
+        .with("cloudwatch_usd", c.cloudwatch_usd)
+        .with("machine_hours", c.machine_hours)
+        .with("on_demand_equivalent_usd", c.on_demand_equivalent_usd);
+    let d = &r.data;
+    let data = Value::obj()
+        .with("bytes_downloaded", d.bytes_downloaded)
+        .with("bytes_uploaded", d.bytes_uploaded)
+        .with("bytes_wasted", d.bytes_wasted)
+        .with("get_requests", d.get_requests)
+        .with("put_requests", d.put_requests)
+        .with("head_requests", d.head_requests)
+        .with("list_requests", d.list_requests)
+        .with("request_usd", d.request_usd)
+        .with("egress_usd", d.egress_usd)
+        .with("bucket_bound_ms", d.bucket_bound_ms)
+        .with("nic_bound_ms", d.nic_bound_ms)
+        .with("first_byte_wait_ms", d.first_byte_wait_ms);
+    let sc = &r.scaling;
+    let scaling = Value::obj()
+        .with("policy", sc.policy.as_str())
+        .with("decisions", sc.decisions)
+        .with("scale_outs", sc.scale_outs)
+        .with("scale_ins", sc.scale_ins)
+        .with("units_launched", sc.units_launched)
+        .with("units_terminated", sc.units_terminated)
+        .with("peak_capacity", sc.peak_capacity)
+        .with("floor_capacity", sc.floor_capacity)
+        .with("capacity_unit_hours", sc.capacity_unit_hours)
+        .with(
+            "timeline",
+            Value::Arr(
+                sc.timeline
+                    .iter()
+                    .map(|dec| {
+                        Value::obj()
+                            .with("at_ms", dec.at)
+                            .with("from", dec.from)
+                            .with("to", dec.to)
+                            .with("backlog", dec.backlog)
+                    })
+                    .collect(),
+            ),
+        );
+    Value::obj()
+        .with("stats", stats)
+        .with("drained_at_ms", opt_ms_json(r.drained_at))
+        .with("ended_at_ms", r.ended_at)
+        .with("cleaned_up", r.cleaned_up)
+        .with("cost", cost)
+        .with(
+            "pools",
+            Value::Arr(
+                r.pools
+                    .iter()
+                    .map(|p| {
+                        Value::obj()
+                            .with("pool", p.pool.as_str())
+                            .with("launched", p.launched)
+                            .with("interrupted", p.interrupted)
+                            .with("machine_hours", p.machine_hours)
+                            .with("cost_usd", p.cost_usd)
+                    })
+                    .collect(),
+            ),
+        )
+        .with("data", data)
+        .with("scaling", scaling)
+        .with("jobs_submitted", r.jobs_submitted)
+}
+
+/// Inverse of [`report_to_wire`]; bit-exact (pinned by the round-trip
+/// tests in `tests/sharding.rs`).
+pub fn report_from_wire(v: &Value) -> Result<RunReport> {
+    let sv = field(v, "stats")?;
+    let stats = RunStats {
+        completed: u64_field(sv, "completed")?,
+        skipped_done: u64_field(sv, "skipped_done")?,
+        duplicates: u64_field(sv, "duplicates")?,
+        failed_attempts: u64_field(sv, "failed_attempts")?,
+        stalled: u64_field(sv, "stalled")?,
+        lost_to_death: u64_field(sv, "lost_to_death")?,
+        dead_lettered: u64_field(sv, "dead_lettered")?,
+        instances_launched: u64_field(sv, "instances_launched")?,
+        interruptions: u64_field(sv, "interruptions")?,
+        crashes: u64_field(sv, "crashes")?,
+        alarm_terminations: u64_field(sv, "alarm_terminations")?,
+        self_shutdowns: u64_field(sv, "self_shutdowns")?,
+        events_processed: u64_field(sv, "events_processed")?,
+    };
+    let cv = field(v, "cost")?;
+    let cost = CostReport {
+        ec2_usd: f64_field(cv, "ec2_usd")?,
+        sqs_usd: f64_field(cv, "sqs_usd")?,
+        s3_usd: f64_field(cv, "s3_usd")?,
+        s3_egress_usd: f64_field(cv, "s3_egress_usd")?,
+        cloudwatch_usd: f64_field(cv, "cloudwatch_usd")?,
+        machine_hours: f64_field(cv, "machine_hours")?,
+        on_demand_equivalent_usd: f64_field(cv, "on_demand_equivalent_usd")?,
+    };
+    let pools = arr_field(v, "pools")?
+        .iter()
+        .map(|p| {
+            Ok(PoolBreakdown {
+                pool: str_field(p, "pool")?.to_string(),
+                launched: u64_field(p, "launched")?,
+                interrupted: u64_field(p, "interrupted")?,
+                machine_hours: f64_field(p, "machine_hours")?,
+                cost_usd: f64_field(p, "cost_usd")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let dv = field(v, "data")?;
+    let data = DataBreakdown {
+        bytes_downloaded: u64_field(dv, "bytes_downloaded")?,
+        bytes_uploaded: u64_field(dv, "bytes_uploaded")?,
+        bytes_wasted: u64_field(dv, "bytes_wasted")?,
+        get_requests: u64_field(dv, "get_requests")?,
+        put_requests: u64_field(dv, "put_requests")?,
+        head_requests: u64_field(dv, "head_requests")?,
+        list_requests: u64_field(dv, "list_requests")?,
+        request_usd: f64_field(dv, "request_usd")?,
+        egress_usd: f64_field(dv, "egress_usd")?,
+        bucket_bound_ms: u64_field(dv, "bucket_bound_ms")?,
+        nic_bound_ms: u64_field(dv, "nic_bound_ms")?,
+        first_byte_wait_ms: u64_field(dv, "first_byte_wait_ms")?,
+    };
+    let scv = field(v, "scaling")?;
+    let timeline = arr_field(scv, "timeline")?
+        .iter()
+        .map(|dec| {
+            Ok(ScalingDecision {
+                at: u64_field(dec, "at_ms")?,
+                from: u32_field(dec, "from")?,
+                to: u32_field(dec, "to")?,
+                backlog: u64_field(dec, "backlog")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let scaling = ScalingBreakdown {
+        policy: str_field(scv, "policy")?.to_string(),
+        decisions: u64_field(scv, "decisions")?,
+        scale_outs: u64_field(scv, "scale_outs")?,
+        scale_ins: u64_field(scv, "scale_ins")?,
+        units_launched: u64_field(scv, "units_launched")?,
+        units_terminated: u64_field(scv, "units_terminated")?,
+        peak_capacity: u32_field(scv, "peak_capacity")?,
+        floor_capacity: u32_field(scv, "floor_capacity")?,
+        capacity_unit_hours: f64_field(scv, "capacity_unit_hours")?,
+        timeline,
+    };
+    Ok(RunReport {
+        stats,
+        drained_at: opt_ms_field(v, "drained_at_ms")?,
+        ended_at: u64_field(v, "ended_at_ms")?,
+        cleaned_up: bool_field(v, "cleaned_up")?,
+        cost,
+        pools,
+        data,
+        scaling,
+        jobs_submitted: u64_field(v, "jobs_submitted")?,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Envelopes
+// ---------------------------------------------------------------------
+
+/// Parent → child: one shard's work order.  The plan travels as the
+/// self-contained Sweep file plus the non-axis `base_opts` slice, so a
+/// fresh process with no shared memory reproduces the parent's cells
+/// bit-identically.  Seeds ride through JSON numbers and are exact only
+/// up to 2^53, the same documented bound as the Sweep file's `SEEDS`.
+#[derive(Debug, Clone)]
+pub struct SweepShardRequest {
+    pub plan: SweepPlan,
+    /// Worker threads the child should use for its cells.
+    pub threads: usize,
+    pub assignment: ShardAssignment,
+}
+
+impl SweepShardRequest {
+    pub fn to_json(&self) -> Value {
+        let plan_text = SweepFile::render(&self.plan);
+        let plan_json =
+            crate::json::parse(&plan_text).expect("rendered Sweep file is valid JSON");
+        Value::obj()
+            .with("kind", REQUEST_KIND)
+            .with("version", WIRE_VERSION)
+            .with("plan", plan_json)
+            .with("base_opts", opts_to_json(&self.plan.base_opts))
+            .with("threads", self.threads)
+            .with(
+                "assignment",
+                Value::obj()
+                    .with("index", self.assignment.index)
+                    .with("count", self.assignment.count)
+                    .with(
+                        "cells",
+                        Value::Arr(
+                            self.assignment.cells.iter().map(|&c| Value::from(c)).collect(),
+                        ),
+                    ),
+            )
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let kind = str_field(v, "kind")?;
+        ensure!(kind == REQUEST_KIND, "unexpected envelope kind '{kind}'");
+        let version = u64_field(v, "version")?;
+        ensure!(
+            version == WIRE_VERSION,
+            "wire version mismatch: request carries v{version}, this worker speaks v{WIRE_VERSION}"
+        );
+        let plan_v = field(v, "plan")?;
+        let mut plan = SweepFile::from_text(&plan_v.pretty())
+            .context("decoding embedded Sweep file")?
+            .to_plan()
+            .context("expanding embedded Sweep file")?;
+        plan.base_opts = opts_from_json(field(v, "base_opts")?).context("decoding base_opts")?;
+        let av = field(v, "assignment")?;
+        let cells = arr_field(av, "cells")?
+            .iter()
+            .map(|c| {
+                c.as_u64()
+                    .and_then(|n| usize::try_from(n).ok())
+                    .ok_or_else(|| anyhow!("assignment cell is not an index"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self {
+            plan,
+            threads: usize_field(v, "threads")?,
+            assignment: ShardAssignment {
+                index: usize_field(av, "index")?,
+                count: usize_field(av, "count")?,
+                cells,
+            },
+        })
+    }
+}
+
+/// One finished cell on the wire: its global index plus the tagged
+/// result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardCell {
+    /// Global cell index (matches the request's assignment).
+    pub cell: usize,
+    pub result: CellResult,
+}
+
+/// Why a result envelope failed to decode.  Version mismatches are
+/// split out so the parent can surface them as the typed
+/// [`ShardError::VersionMismatch`] instead of a generic parse failure.
+#[derive(Debug, Error)]
+pub enum WireError {
+    #[error("wire version mismatch: got v{got}, expected v{want}")]
+    Version { got: u64, want: u64 },
+    #[error("{0}")]
+    Malformed(String),
+}
+
+/// Child → parent: every assigned cell's exact report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardResult {
+    /// Which shard produced this (echoes the request's index).
+    pub shard: usize,
+    pub cells: Vec<ShardCell>,
+}
+
+impl ShardResult {
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("kind", RESULT_KIND)
+            .with("version", WIRE_VERSION)
+            .with("shard", self.shard)
+            .with(
+                "cells",
+                Value::Arr(
+                    self.cells
+                        .iter()
+                        .map(|c| {
+                            Value::obj()
+                                .with("cell", c.cell)
+                                .with("scenario", c.result.scenario)
+                                .with("seed", c.result.seed)
+                                .with("report", report_to_wire(&c.result.report))
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self, WireError> {
+        let malformed = |msg: String| WireError::Malformed(msg);
+        let kind = v
+            .get("kind")
+            .and_then(Value::as_str)
+            .ok_or_else(|| malformed("missing 'kind'".into()))?;
+        if kind != RESULT_KIND {
+            return Err(malformed(format!("unexpected envelope kind '{kind}'")));
+        }
+        let got = v
+            .get("version")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| malformed("missing 'version'".into()))?;
+        if got != WIRE_VERSION {
+            return Err(WireError::Version {
+                got,
+                want: WIRE_VERSION,
+            });
+        }
+        let decode = || -> Result<Self> {
+            let cells = arr_field(v, "cells")?
+                .iter()
+                .map(|c| {
+                    Ok(ShardCell {
+                        cell: usize_field(c, "cell")?,
+                        result: CellResult {
+                            scenario: usize_field(c, "scenario")?,
+                            seed: u64_field(c, "seed")?,
+                            report: report_from_wire(field(c, "report")?)
+                                .context("decoding cell report")?,
+                        },
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Self {
+                shard: usize_field(v, "shard")?,
+                cells,
+            })
+        };
+        decode().map_err(|e| malformed(format!("{e:#}")))
+    }
+}
+
+// ---------------------------------------------------------------------
+// The child half
+// ---------------------------------------------------------------------
+
+/// The shard worker's whole body, pure text → text: decode a
+/// [`SweepShardRequest`], run its assigned cells on a small
+/// work-stealing thread pool (same claim-by-counter scheme as
+/// `run_sweep`, so per-cell determinism is untouched), and encode the
+/// [`ShardResult`].  `ds shard-worker` pipes stdin/stdout through this;
+/// [`InProcExecutor`] calls it directly, which is what lets the fault
+/// tests exercise the parent without process overhead.
+pub fn shard_worker(input: &str) -> Result<String> {
+    let v = crate::json::parse(input.trim()).context("parsing shard request")?;
+    let req = SweepShardRequest::from_json(&v)?;
+    let scenarios = expand_and_validate(&req.plan)?;
+    let nseeds = req.plan.matrix.seeds.len();
+    let cell_count = scenarios.len() * nseeds;
+    for &cell in &req.assignment.cells {
+        ensure!(
+            cell < cell_count,
+            "assignment references cell {cell} of a {cell_count}-cell sweep"
+        );
+    }
+    let assigned = &req.assignment.cells;
+    let threads = req.threads.clamp(1, assigned.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<Result<RunReport>>>> =
+        Mutex::new((0..assigned.len()).map(|_| None).collect());
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= assigned.len() {
+                    break;
+                }
+                let cell = assigned[i];
+                let seed = req.plan.matrix.seeds[cell % nseeds];
+                let report = run_cell(&req.plan, &scenarios[cell / nseeds], seed);
+                slots.lock().unwrap()[i] = Some(report);
+            });
+        }
+    });
+    let slots = slots.into_inner().unwrap();
+    let mut cells = Vec::with_capacity(assigned.len());
+    for (&cell, slot) in assigned.iter().zip(slots) {
+        let scenario = cell / nseeds;
+        let seed = req.plan.matrix.seeds[cell % nseeds];
+        let report = slot
+            .ok_or_else(|| anyhow!("shard cell never ran (worker died?)"))?
+            .with_context(|| {
+                format!("shard cell '{}' seed={seed}", scenarios[scenario].label())
+            })?;
+        cells.push(ShardCell {
+            cell,
+            result: CellResult {
+                scenario,
+                seed,
+                report,
+            },
+        });
+    }
+    let result = ShardResult {
+        shard: req.assignment.index,
+        cells,
+    };
+    Ok(result.to_json().pretty())
+}
+
+// ---------------------------------------------------------------------
+// Executors
+// ---------------------------------------------------------------------
+
+/// Why one dispatch attempt failed, before the retry policy weighs in.
+#[derive(Debug, Error)]
+pub enum ExecFailure {
+    #[error("worker timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("worker failed ({status}): {stderr}")]
+    Crashed { status: String, stderr: String },
+    #[error("spawning worker: {0}")]
+    Spawn(String),
+}
+
+/// How the parent runs one shard attempt: hand over the request
+/// envelope, get back the child's raw stdout.  `Sync` because the
+/// parent dispatches shards from scoped threads.  Implementations:
+/// [`ProcessExecutor`] (real child processes — production),
+/// [`InProcExecutor`] (same-process — fast differential tests), and the
+/// fault-injecting double in [`crate::testutil::shard_exec`].
+pub trait ShardExecutor: Sync {
+    fn run_shard(&self, request_json: &str) -> Result<String, ExecFailure>;
+}
+
+/// Runs the shard in-process by calling [`shard_worker`] directly.
+/// Same code path as a real child minus the OS process, so the
+/// differential tests can sweep shard × thread matrices cheaply.
+pub struct InProcExecutor;
+
+impl ShardExecutor for InProcExecutor {
+    fn run_shard(&self, request_json: &str) -> Result<String, ExecFailure> {
+        shard_worker(request_json).map_err(|e| ExecFailure::Crashed {
+            status: "in-process worker error".to_string(),
+            stderr: format!("{e:#}"),
+        })
+    }
+}
+
+/// Spawns `<exe> shard-worker` per attempt, feeds the request on stdin,
+/// and enforces a wall-clock timeout (poll + kill — a hung child must
+/// not hang the sweep).
+pub struct ProcessExecutor {
+    /// Binary to spawn (the `ds` binary itself in production).
+    pub exe: PathBuf,
+    /// Per-attempt wall-clock budget.
+    pub timeout: Duration,
+    /// Extra environment for the child.  Tests use this to arm the
+    /// hidden `DS_SHARD_FAULT*` hooks without polluting the parent's
+    /// own environment (env vars are process-global; test threads are
+    /// not).
+    pub envs: Vec<(String, String)>,
+}
+
+impl ProcessExecutor {
+    pub fn new(exe: impl Into<PathBuf>, timeout: Duration) -> Self {
+        Self {
+            exe: exe.into(),
+            timeout,
+            envs: Vec::new(),
+        }
+    }
+
+    /// The running binary itself: `ds sweep --shards N` re-invokes
+    /// itself as `ds shard-worker`.
+    pub fn current_exe(timeout: Duration) -> std::io::Result<Self> {
+        Ok(Self::new(std::env::current_exe()?, timeout))
+    }
+}
+
+impl ShardExecutor for ProcessExecutor {
+    fn run_shard(&self, request_json: &str) -> Result<String, ExecFailure> {
+        let mut cmd = Command::new(&self.exe);
+        cmd.arg("shard-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped());
+        for (k, val) in &self.envs {
+            cmd.env(k, val);
+        }
+        let mut child = cmd.spawn().map_err(|e| ExecFailure::Spawn(e.to_string()))?;
+        // Feed the request and close stdin so the child sees EOF.  A
+        // child that died before reading (EPIPE) surfaces through its
+        // exit status below, not here.
+        let mut stdin = child.stdin.take().expect("piped stdin");
+        let fed = stdin.write_all(request_json.as_bytes()).is_ok();
+        drop(stdin);
+        // Drain stdout/stderr on their own threads: a shard result can
+        // exceed the pipe buffer, and a child blocked on a full pipe
+        // would be indistinguishable from a hang.
+        let mut stdout = child.stdout.take().expect("piped stdout");
+        let mut stderr = child.stderr.take().expect("piped stderr");
+        let out_thread = thread::spawn(move || {
+            let mut buf = Vec::new();
+            stdout.read_to_end(&mut buf).ok();
+            buf
+        });
+        let err_thread = thread::spawn(move || {
+            let mut buf = Vec::new();
+            stderr.read_to_end(&mut buf).ok();
+            buf
+        });
+        let deadline = Instant::now() + self.timeout;
+        let status = loop {
+            match child.try_wait() {
+                Ok(Some(status)) => break status,
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        child.kill().ok();
+                        child.wait().ok();
+                        out_thread.join().ok();
+                        err_thread.join().ok();
+                        return Err(ExecFailure::Timeout(self.timeout));
+                    }
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    child.kill().ok();
+                    child.wait().ok();
+                    return Err(ExecFailure::Spawn(format!("waiting on worker: {e}")));
+                }
+            }
+        };
+        let out = String::from_utf8_lossy(&out_thread.join().unwrap_or_default()).into_owned();
+        let err = String::from_utf8_lossy(&err_thread.join().unwrap_or_default()).into_owned();
+        if !status.success() {
+            return Err(ExecFailure::Crashed {
+                status: status.to_string(),
+                stderr: err.trim().to_string(),
+            });
+        }
+        if !fed {
+            return Err(ExecFailure::Crashed {
+                status: "exited 0 without reading its request".to_string(),
+                stderr: err.trim().to_string(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The parent half
+// ---------------------------------------------------------------------
+
+/// Structured shard-level failure.  `Exhausted` is what callers see
+/// when a shard burns through its retries; the boxed `last` error
+/// preserves the final cause (including the child's stderr for crashes)
+/// through anyhow's chain, and tests downcast to assert on the exact
+/// variant.
+#[derive(Debug, Error)]
+pub enum ShardError {
+    #[error("shard {shard}: {failure}")]
+    Exec {
+        shard: usize,
+        failure: ExecFailure,
+    },
+    #[error("shard {shard}: result version mismatch (got v{got}, expected v{want})")]
+    VersionMismatch { shard: usize, got: u64, want: u64 },
+    #[error("shard {shard}: malformed result: {detail}")]
+    Malformed { shard: usize, detail: String },
+    #[error("shard {shard}: result does not match its assignment: {detail}")]
+    AssignmentMismatch { shard: usize, detail: String },
+    #[error("shard {shard} failed after {attempts} attempts; last error: {last}")]
+    Exhausted {
+        shard: usize,
+        attempts: usize,
+        last: Box<ShardError>,
+    },
+}
+
+/// Parent-side knobs for a sharded sweep.
+#[derive(Debug, Clone)]
+pub struct ShardOptions {
+    /// Worker shards (clamped to `[1, cells]` by the shard plan).
+    pub shards: usize,
+    /// Worker threads per shard.
+    pub threads: usize,
+    /// Extra attempts after a shard's first failure, each a fresh
+    /// dispatch (for [`ProcessExecutor`]: a fresh process).
+    pub retries: usize,
+}
+
+impl Default for ShardOptions {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            threads: 1,
+            retries: 2,
+        }
+    }
+}
+
+/// One dispatch attempt: execute, decode, and hold the result to its
+/// assignment — the returned cell set must equal the assigned set
+/// exactly (no hole, no duplicate, no borrowed cell) and every cell's
+/// scenario/seed tags must match its index, or the attempt fails before
+/// anything reaches the merge.
+fn attempt_shard(
+    executor: &dyn ShardExecutor,
+    assignment: &ShardAssignment,
+    request_json: &str,
+    nseeds: usize,
+    seeds: &[u64],
+) -> Result<ShardResult, ShardError> {
+    let shard = assignment.index;
+    let stdout = executor
+        .run_shard(request_json)
+        .map_err(|failure| ShardError::Exec { shard, failure })?;
+    let v = crate::json::parse(stdout.trim()).map_err(|e| ShardError::Malformed {
+        shard,
+        detail: format!("invalid JSON: {e}"),
+    })?;
+    let result = ShardResult::from_json(&v).map_err(|e| match e {
+        WireError::Version { got, want } => ShardError::VersionMismatch { shard, got, want },
+        WireError::Malformed(detail) => ShardError::Malformed { shard, detail },
+    })?;
+    if result.shard != shard {
+        return Err(ShardError::Malformed {
+            shard,
+            detail: format!("result labeled shard {}", result.shard),
+        });
+    }
+    let mut got: Vec<usize> = result.cells.iter().map(|c| c.cell).collect();
+    got.sort_unstable();
+    let mut want = assignment.cells.clone();
+    want.sort_unstable();
+    if got != want {
+        let missing: Vec<usize> = want.iter().copied().filter(|c| !got.contains(c)).collect();
+        let extra: Vec<usize> = got
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(i, c)| !want.contains(&c) || (i > 0 && got[i - 1] == c))
+            .map(|(_, c)| c)
+            .collect();
+        return Err(ShardError::AssignmentMismatch {
+            shard,
+            detail: format!("missing cells {missing:?}, unexpected or duplicated {extra:?}"),
+        });
+    }
+    for c in &result.cells {
+        let (scenario, seed) = (c.cell / nseeds, seeds[c.cell % nseeds]);
+        if c.result.scenario != scenario || c.result.seed != seed {
+            return Err(ShardError::AssignmentMismatch {
+                shard,
+                detail: format!(
+                    "cell {} tagged (scenario {}, seed {}) but the plan says (scenario {scenario}, seed {seed})",
+                    c.cell, c.result.scenario, c.result.seed
+                ),
+            });
+        }
+    }
+    Ok(result)
+}
+
+/// Supervise one shard: bounded retry, each attempt a fresh dispatch.
+fn supervise_shard(
+    executor: &dyn ShardExecutor,
+    assignment: &ShardAssignment,
+    request_json: &str,
+    retries: usize,
+    nseeds: usize,
+    seeds: &[u64],
+) -> Result<ShardResult, ShardError> {
+    let attempts = retries + 1;
+    let mut last = None;
+    for _ in 0..attempts {
+        match attempt_shard(executor, assignment, request_json, nseeds, seeds) {
+            Ok(r) => return Ok(r),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(ShardError::Exhausted {
+        shard: assignment.index,
+        attempts,
+        last: Box::new(last.expect("at least one attempt ran")),
+    })
+}
+
+/// The parent half: partition the plan with [`shard_plan`], dispatch
+/// every shard through `executor` on its own supervisor thread (bounded
+/// retry per shard), and fold the validated partial results back into a
+/// [`SweepRun`] that is bit-identical to `run_sweep(plan, …)` — same
+/// report, same table bytes, same JSON bytes, regardless of shard
+/// count, per-shard thread count, or completion order.
+///
+/// Failure is structured: if any shard exhausts its retries the whole
+/// sweep fails with that shard's typed [`ShardError`] (lowest shard
+/// index wins when several fail), never a report with holes.
+pub fn run_sweep_sharded(
+    plan: &SweepPlan,
+    opts: &ShardOptions,
+    executor: &dyn ShardExecutor,
+) -> Result<SweepRun> {
+    let scenarios = expand_and_validate(plan)?;
+    let nseeds = plan.matrix.seeds.len();
+    let cell_count = scenarios.len() * nseeds;
+    let assignments = shard_plan(cell_count, opts.shards);
+
+    let requests: Vec<String> = assignments
+        .iter()
+        .map(|a| {
+            SweepShardRequest {
+                plan: plan.clone(),
+                threads: opts.threads,
+                assignment: a.clone(),
+            }
+            .to_json()
+            .pretty()
+        })
+        .collect();
+
+    let slots: Mutex<Vec<Option<Result<ShardResult, ShardError>>>> =
+        Mutex::new((0..assignments.len()).map(|_| None).collect());
+    thread::scope(|s| {
+        let slots = &slots;
+        let seeds = &plan.matrix.seeds;
+        for a in &assignments {
+            let request = &requests[a.index];
+            s.spawn(move || {
+                let res = supervise_shard(executor, a, request, opts.retries, nseeds, seeds);
+                slots.lock().unwrap()[a.index] = Some(res);
+            });
+        }
+    });
+
+    // Merge in canonical cell order.  Assignments partition the cell
+    // range and every result was validated against its assignment, so
+    // the slot table fills exactly once; anything else is a bug worth a
+    // loud panic, not a quietly wrong report.
+    let mut collected: Vec<Option<CellResult>> = (0..cell_count).map(|_| None).collect();
+    for slot in slots.into_inner().unwrap() {
+        let result = slot.expect("every shard was supervised")?;
+        for c in result.cells {
+            let target = &mut collected[c.cell];
+            assert!(target.is_none(), "cell {} produced by two shards", c.cell);
+            *target = Some(c.result);
+        }
+    }
+    let results: Vec<CellResult> = collected
+        .into_iter()
+        .enumerate()
+        .map(|(i, slot)| slot.unwrap_or_else(|| panic!("cell {i} missing after merge")))
+        .collect();
+    Ok(assemble_run(scenarios, results, nseeds))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::JobSpec;
+    use crate::coordinator::sweep::ScenarioMatrix;
+    use crate::sim::HOUR;
+    use crate::workloads::DurationModel;
+
+    fn tiny_plan() -> SweepPlan {
+        let cfg = crate::testutil::fixtures::quick_cfg(2);
+        let jobs = JobSpec::plate("P", 2, 1, vec![]);
+        let matrix = ScenarioMatrix {
+            seeds: vec![1, 2],
+            cluster_machines: vec![1, 2],
+            models: vec![DurationModel {
+                mean_s: 30.0,
+                cv: 0.2,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        SweepPlan::new(cfg, jobs, matrix)
+    }
+
+    #[test]
+    fn shard_plan_is_balanced_and_exact() {
+        let plans = shard_plan(10, 3);
+        assert_eq!(plans.len(), 3);
+        let mut all: Vec<usize> = plans.iter().flat_map(|p| p.cells.iter().copied()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+        let sizes: Vec<usize> = plans.iter().map(|p| p.cells.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn shard_plan_clamps_shard_count_to_cells() {
+        let plans = shard_plan(2, 8);
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].count, 2);
+    }
+
+    #[test]
+    fn opts_round_trip_preserves_the_non_axis_slice() {
+        let mut opts = RunOptions {
+            monitor: false,
+            cheapest: true,
+            queue_downscale: true,
+            crash_mttf: Some(40 * 60 * 1000),
+            max_sim_time: 3 * HOUR,
+            overrun_after_drain: 1234,
+            data_bucket: "elsewhere".into(),
+            engine: EngineOptions {
+                queue: QueueKind::Heap,
+                store: StoreKind::Map,
+            },
+            ..Default::default()
+        };
+        let back = opts_from_json(&opts_to_json(&opts)).unwrap();
+        assert_eq!(back.monitor, opts.monitor);
+        assert_eq!(back.cheapest, opts.cheapest);
+        assert_eq!(back.queue_downscale, opts.queue_downscale);
+        assert_eq!(back.crash_mttf, opts.crash_mttf);
+        assert_eq!(back.max_sim_time, opts.max_sim_time);
+        assert_eq!(back.overrun_after_drain, opts.overrun_after_drain);
+        assert_eq!(back.data_bucket, opts.data_bucket);
+        assert_eq!(back.engine, opts.engine);
+        opts.crash_mttf = None;
+        assert_eq!(opts_from_json(&opts_to_json(&opts)).unwrap().crash_mttf, None);
+    }
+
+    #[test]
+    fn request_round_trips_and_runs_identically() {
+        let plan = tiny_plan();
+        let req = SweepShardRequest {
+            plan: plan.clone(),
+            threads: 2,
+            assignment: shard_plan(4, 2)[1].clone(),
+        };
+        let v = crate::json::parse(&req.to_json().pretty()).unwrap();
+        let back = SweepShardRequest::from_json(&v).unwrap();
+        assert_eq!(back.threads, 2);
+        assert_eq!(back.assignment, req.assignment);
+        let a = crate::coordinator::sweep::run_sweep(&plan, 2).unwrap();
+        let b = crate::coordinator::sweep::run_sweep(&back.plan, 2).unwrap();
+        assert_eq!(a.cells, b.cells);
+        assert_eq!(a.report.to_json().pretty(), b.report.to_json().pretty());
+    }
+
+    #[test]
+    fn worker_rejects_version_mismatched_requests() {
+        let req = SweepShardRequest {
+            plan: tiny_plan(),
+            threads: 1,
+            assignment: shard_plan(4, 1)[0].clone(),
+        };
+        let bumped = match req.to_json() {
+            Value::Obj(fields) => Value::Obj(
+                fields
+                    .into_iter()
+                    .map(|(k, val)| {
+                        if k == "version" {
+                            (k, Value::from(WIRE_VERSION + 1))
+                        } else {
+                            (k, val)
+                        }
+                    })
+                    .collect(),
+            ),
+            other => other,
+        };
+        let err = shard_worker(&bumped.pretty()).unwrap_err();
+        assert!(format!("{err:#}").contains("version mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn worker_rejects_out_of_range_assignments() {
+        let req = SweepShardRequest {
+            plan: tiny_plan(),
+            threads: 1,
+            assignment: ShardAssignment {
+                index: 0,
+                count: 1,
+                cells: vec![99],
+            },
+        };
+        let err = shard_worker(&req.to_json().pretty()).unwrap_err();
+        assert!(format!("{err:#}").contains("cell 99"), "{err:#}");
+    }
+}

@@ -51,7 +51,8 @@ use std::thread;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
-use crate::metrics::{RunReport, ScenarioSummary, SweepReport};
+use crate::json::Value;
+use crate::metrics::{RunReport, SweepReport};
 use crate::workloads::ModeledExecutor;
 
 pub use crate::scenario::{volatility_name, Scenario, ScenarioMatrix, SweepPlan};
@@ -108,17 +109,15 @@ pub fn run_cell(plan: &SweepPlan, scenario: &Scenario, seed: u64) -> Result<RunR
     }
 }
 
-/// Run the whole matrix on `threads` worker threads (clamped to
-/// `[1, cells]`).  Cells are claimed from a shared atomic counter —
-/// classic work stealing, no per-thread partitioning imbalance — and each
-/// result is written to its cell's slot, so the output order (and every
-/// aggregate computed from it) is independent of scheduling.
-pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
+/// Expand the plan's matrix and fail fast on invalid scenarios: one bad
+/// cell config must not cost a full sweep's worth of simulation before
+/// its error surfaces.  Shared by [`run_sweep`] and the sharded parent
+/// and worker (`super::shard`), so both sides of the wire agree on what
+/// a runnable plan is.
+pub fn expand_and_validate(plan: &SweepPlan) -> Result<Vec<Scenario>> {
     let scenarios = plan.matrix.scenarios();
     ensure!(!scenarios.is_empty(), "sweep matrix has no scenarios");
     ensure!(!plan.matrix.seeds.is_empty(), "sweep matrix has no seeds");
-    // Fail fast: one bad scenario must not cost a full sweep's worth of
-    // simulation before its config error surfaces.
     for sc in &scenarios {
         let cell = sc.cell_inputs(&plan.base_cfg, &plan.fleet, &plan.base_opts);
         cell.cfg
@@ -135,6 +134,45 @@ pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
             sc.machines
         );
     }
+    Ok(scenarios)
+}
+
+/// Assemble a [`SweepRun`] from canonically-ordered cell results
+/// (scenario-major, seed order) via the pure order-insensitive fold in
+/// [`SweepReport::from_cells`] — the single report-assembly path shared
+/// with the sharded parent.
+pub(crate) fn assemble_run(
+    scenarios: Vec<Scenario>,
+    results: Vec<CellResult>,
+    nseeds: usize,
+) -> SweepRun {
+    // The label and the machine-readable axis coordinates both come
+    // from the registry — aggregation never hand-formats a scenario
+    // identity.
+    let ids: Vec<(String, Value)> = scenarios
+        .iter()
+        .map(|sc| (sc.label(), sc.axis_json()))
+        .collect();
+    let tagged: Vec<(usize, usize, &RunReport)> = results
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.scenario, i % nseeds, &c.report))
+        .collect();
+    let report = SweepReport::from_cells(&ids, &tagged);
+    SweepRun {
+        scenarios,
+        cells: results,
+        report,
+    }
+}
+
+/// Run the whole matrix on `threads` worker threads (clamped to
+/// `[1, cells]`).  Cells are claimed from a shared atomic counter —
+/// classic work stealing, no per-thread partitioning imbalance — and each
+/// result is written to its cell's slot, so the output order (and every
+/// aggregate computed from it) is independent of scheduling.
+pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
+    let scenarios = expand_and_validate(plan)?;
 
     let cells: Vec<(usize, u64)> = scenarios
         .iter()
@@ -175,29 +213,7 @@ pub fn run_sweep(plan: &SweepPlan, threads: usize) -> Result<SweepRun> {
         });
     }
 
-    let summaries = scenarios
-        .iter()
-        .enumerate()
-        .map(|(i, sc)| {
-            let reports: Vec<&RunReport> = results
-                .iter()
-                .filter(|c| c.scenario == i)
-                .map(|c| &c.report)
-                .collect();
-            // The label and the machine-readable axis coordinates both
-            // come from the registry — aggregation never hand-formats a
-            // scenario identity.
-            ScenarioSummary::from_reports(&sc.label(), &reports).with_axes(sc.axis_json())
-        })
-        .collect();
-
-    Ok(SweepRun {
-        scenarios,
-        cells: results,
-        report: SweepReport {
-            scenarios: summaries,
-        },
-    })
+    Ok(assemble_run(scenarios, results, plan.matrix.seeds.len()))
 }
 
 #[cfg(test)]

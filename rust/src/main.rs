@@ -18,7 +18,9 @@
 //!                 --instance-types m5.large+c5.xlarge:2,m5.xlarge \
 //!                 --input-mb 0,64,256 --net-profile standard,narrow \
 //!                 --scaling none,target-tracking,step --scaling-target 2,4 \
-//!                 [--on-demand-base N] [--threads N] [--json]
+//!                 [--on-demand-base N] [--threads N] [--json] \
+//!                 [--shards N] [--shard-exec process|inproc] \
+//!                 [--shard-timeout-s S] [--shard-retries N]
 //! ds describe     --config files/config.json [--fleet files/fleet.json]
 //!                 [--job files/job.json]
 //!                 # validate + print + the per-type container packing
@@ -31,7 +33,11 @@
 //! simulated account and prints the run report.  With `--pjrt` the jobs
 //! execute the real AOT-compiled pipeline through PJRT.  `sweep` replays
 //! the whole cartesian matrix of scenarios on a worker-thread pool and
-//! prints per-scenario aggregates (mean/p50/p95 across seeds).
+//! prints per-scenario aggregates (mean/p50/p95 across seeds); with
+//! `--shards N` it partitions the matrix across N worker processes
+//! instead, re-invoking this binary as the hidden `shard-worker`
+//! subcommand (request on stdin, result on stdout) and merging the
+//! partial reports bit-identically.
 //!
 //! Every sweep axis, its flag, its Sweep-file key, and its help line
 //! come from the typed axis registry (`ds_rs::scenario`): the help
@@ -49,7 +55,8 @@ use ds_rs::cli::Args;
 use ds_rs::config::{AppConfig, FleetSpec, JobSpec};
 use ds_rs::coordinator::cluster::fleet_slots;
 use ds_rs::coordinator::run::{run_full, RunOptions};
-use ds_rs::coordinator::sweep::{default_threads, run_sweep};
+use ds_rs::coordinator::shard::{run_sweep_sharded, InProcExecutor, ProcessExecutor, ShardOptions};
+use ds_rs::coordinator::sweep::{default_threads, run_sweep, SweepRun};
 use ds_rs::json::Value;
 use ds_rs::runtime::{Manifest, PjrtRuntime};
 use ds_rs::scenario::{
@@ -79,6 +86,10 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("workloads") => workloads(args),
         Some("run") => run(args),
         Some("sweep") => sweep(args),
+        // Hidden: the child half of `ds sweep --shards N`.  Not listed
+        // in usage or the unknown-command hint — it is wire plumbing,
+        // not a user-facing command.
+        Some("shard-worker") => shard_worker_cmd(),
         Some(other) => bail!(
             "unknown command '{other}' (try: make-config, make-fleet-file, make-job, describe, workloads, run, sweep)"
         ),
@@ -286,6 +297,70 @@ fn parse_scalar<T: std::str::FromStr>(args: &Args, name: &str, default: T) -> Re
     args.try_parse(name, default).map_err(|e| anyhow!(e))
 }
 
+/// `ds shard-worker` (hidden): read a `SweepShardRequest` envelope from
+/// stdin, run the assigned cells, write the `ShardResult` envelope to
+/// stdout.  All human-facing chatter belongs on stderr — stdout is the
+/// wire.
+fn shard_worker_cmd() -> Result<()> {
+    use std::io::Read as _;
+    let mut input = String::new();
+    std::io::stdin()
+        .read_to_string(&mut input)
+        .context("reading shard request from stdin")?;
+    if let Some(faulted) = injected_fault(&input) {
+        return faulted;
+    }
+    let output = ds_rs::coordinator::shard::shard_worker(&input)?;
+    println!("{output}");
+    Ok(())
+}
+
+/// Test-only fault hooks for the real-process supervision tests: a
+/// worker that genuinely dies / hangs / prints garbage, armed through
+/// the child's environment so nothing can trip in production use.
+///
+/// * `DS_SHARD_FAULT` = `kill` | `hang` | `garbage` arms the fault.
+/// * `DS_SHARD_FAULT_SHARD` = N restricts it to the shard whose request
+///   carries `assignment.index == N` (default: every shard).
+/// * `DS_SHARD_FAULT_ONCE` = PATH makes it one-shot across retries: the
+///   fault only trips while PATH does not exist and creates PATH when it
+///   does — the retried fresh process then runs clean.
+///
+/// Returns `None` when no fault trips (the normal path).
+fn injected_fault(input: &str) -> Option<Result<()>> {
+    let fault = std::env::var("DS_SHARD_FAULT").ok()?;
+    if let Ok(only) = std::env::var("DS_SHARD_FAULT_SHARD") {
+        let shard = ds_rs::json::parse(input.trim())
+            .ok()?
+            .get("assignment")?
+            .get("index")?
+            .as_u64()?;
+        if only != shard.to_string() {
+            return None;
+        }
+    }
+    if let Ok(marker) = std::env::var("DS_SHARD_FAULT_ONCE") {
+        if std::path::Path::new(&marker).exists() {
+            return None;
+        }
+        std::fs::write(&marker, b"tripped").ok();
+    }
+    match fault.as_str() {
+        "kill" => {
+            eprintln!("worker killed mid-shard (injected)");
+            std::process::abort();
+        }
+        "hang" => loop {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        },
+        "garbage" => {
+            println!("{{\"cells\": [tru");
+            Some(Ok(()))
+        }
+        other => Some(Err(anyhow!("unknown DS_SHARD_FAULT '{other}'"))),
+    }
+}
+
 /// `ds run`: the four-command flow for one configuration.  The axis
 /// flags it shares with `ds sweep` (volatility, duration model, input
 /// MB, net profile) parse through the same registry but must carry a
@@ -455,6 +530,14 @@ fn sweep(args: &Args) -> Result<()> {
     };
     let plan = plan_from_cli(args, file.as_ref())?;
     let threads = parse_scalar(args, "threads", default_threads())?.max(1);
+    // --shards 0 (the default) keeps the single-process engine; N > 0
+    // partitions the matrix across N worker processes (or in-process
+    // workers under --shard-exec inproc, the test/debug path).
+    let shards = parse_scalar(args, "shards", 0usize)?;
+    let shard_exec = args.get_or("shard-exec", "process").to_string();
+    if !matches!(shard_exec.as_str(), "process" | "inproc") {
+        bail!("unknown --shard-exec '{shard_exec}' (expected process or inproc)");
+    }
 
     // Counts come from the registry's per-axis lengths, not from
     // expanding the product — a dry run of a 10^8-scenario file must
@@ -502,8 +585,13 @@ fn sweep(args: &Args) -> Result<()> {
         return Ok(());
     }
 
+    let sharding = if shards > 0 {
+        format!(" across {shards} {shard_exec} shards")
+    } else {
+        String::new()
+    };
     let preamble = format!(
-        "sweep: {} scenarios x {} seeds = {} cells on {} threads ({} jobs/cell)",
+        "sweep: {} scenarios x {} seeds = {} cells on {} threads{sharding} ({} jobs/cell)",
         scenario_count,
         plan.matrix.seeds.len(),
         plan.matrix.cell_count(),
@@ -518,7 +606,24 @@ fn sweep(args: &Args) -> Result<()> {
     }
 
     let t0 = std::time::Instant::now();
-    let run = run_sweep(&plan, threads)?;
+    let run: SweepRun = if shards > 0 {
+        let opts = ShardOptions {
+            shards,
+            threads,
+            retries: parse_scalar(args, "shard-retries", 2usize)?,
+        };
+        let timeout =
+            std::time::Duration::from_secs(parse_scalar(args, "shard-timeout-s", 600u64)?);
+        if shard_exec == "inproc" {
+            run_sweep_sharded(&plan, &opts, &InProcExecutor)?
+        } else {
+            let exec = ProcessExecutor::current_exe(timeout)
+                .context("locating the ds binary to spawn shard workers")?;
+            run_sweep_sharded(&plan, &opts, &exec)?
+        }
+    } else {
+        run_sweep(&plan, threads)?
+    };
     let wall = t0.elapsed().as_secs_f64();
 
     if args.flag("json") {

@@ -362,6 +362,57 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
+    /// Assemble the whole report as a pure fold over tagged cells — the
+    /// single merge point shared by the in-process sweep engine and the
+    /// sharded parent (`coordinator::shard`).
+    ///
+    /// `scenario_ids` is one `(label, axes)` pair per scenario in matrix
+    /// order; `cells` is *any permutation* of the sweep's
+    /// `(scenario_index, seed_slot, report)` triples — thread-completion
+    /// order, shard-arrival order, whatever.  The fold canonically sorts
+    /// by `(scenario, seed_slot)` before reducing, so the output (every
+    /// byte of it, f64 sums included) is identical for every input
+    /// order.  A duplicated or out-of-range cell is a caller bug — the
+    /// sharded path validates cell sets against assignments before it
+    /// gets here — and panics rather than merging a corrupt matrix.
+    pub fn from_cells(
+        scenario_ids: &[(String, Value)],
+        cells: &[(usize, usize, &RunReport)],
+    ) -> Self {
+        let mut order: Vec<usize> = (0..cells.len()).collect();
+        order.sort_by_key(|&i| (cells[i].0, cells[i].1));
+        for w in order.windows(2) {
+            let a = (cells[w[0]].0, cells[w[0]].1);
+            let b = (cells[w[1]].0, cells[w[1]].1);
+            assert_ne!(
+                a, b,
+                "duplicate sweep cell (scenario {}, seed slot {})",
+                a.0, a.1
+            );
+        }
+        for &(scenario, _, _) in cells {
+            assert!(
+                scenario < scenario_ids.len(),
+                "cell references scenario {scenario} of a {}-scenario sweep",
+                scenario_ids.len()
+            );
+        }
+        let scenarios = scenario_ids
+            .iter()
+            .enumerate()
+            .map(|(i, (label, axes))| {
+                let reports: Vec<&RunReport> = order
+                    .iter()
+                    .map(|&k| &cells[k])
+                    .filter(|c| c.0 == i)
+                    .map(|c| c.2)
+                    .collect();
+                ScenarioSummary::from_reports(label, &reports).with_axes(axes.clone())
+            })
+            .collect();
+        Self { scenarios }
+    }
+
     /// Cells across every scenario.
     pub fn total_cells(&self) -> usize {
         self.scenarios.iter().map(|s| s.cells).sum()
@@ -570,6 +621,54 @@ mod tests {
         );
         let parsed = crate::json::parse(&j.pretty()).unwrap();
         assert_eq!(parsed, j);
+    }
+
+    #[test]
+    fn from_cells_is_order_insensitive_to_the_byte() {
+        let r1 = report(10, Some(HOUR), 0.5);
+        let r2 = report(20, Some(2 * HOUR), 1.5);
+        let r3 = report(5, None, 0.25);
+        let r4 = report(7, Some(3 * HOUR), 0.125);
+        let ids = vec![
+            ("a".to_string(), Value::obj().with("MACHINES", 2u32)),
+            ("b".to_string(), Value::obj().with("MACHINES", 4u32)),
+        ];
+        let canonical = vec![(0, 0, &r1), (0, 1, &r2), (1, 0, &r3), (1, 1, &r4)];
+        let reference = SweepReport::from_cells(&ids, &canonical);
+        assert_eq!(reference.scenarios.len(), 2);
+        assert_eq!(reference.scenarios[0].label, "a");
+        assert_eq!(
+            reference.scenarios[0].axes.get("MACHINES").and_then(Value::as_u64),
+            Some(2)
+        );
+        assert_eq!(reference.scenarios[0].completed, 30);
+        // Every arrival order folds to the same bytes.
+        let arrivals = [
+            vec![(1, 1, &r4), (1, 0, &r3), (0, 1, &r2), (0, 0, &r1)],
+            vec![(1, 0, &r3), (0, 0, &r1), (1, 1, &r4), (0, 1, &r2)],
+            vec![(0, 1, &r2), (1, 1, &r4), (0, 0, &r1), (1, 0, &r3)],
+        ];
+        for shuffled in &arrivals {
+            let folded = SweepReport::from_cells(&ids, shuffled);
+            assert_eq!(folded, reference);
+            assert_eq!(folded.to_json().pretty(), reference.to_json().pretty());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate sweep cell")]
+    fn from_cells_rejects_duplicated_cells() {
+        let r = report(10, Some(HOUR), 0.5);
+        let ids = vec![("a".to_string(), Value::obj())];
+        SweepReport::from_cells(&ids, &[(0, 0, &r), (0, 0, &r)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "references scenario")]
+    fn from_cells_rejects_out_of_range_scenarios() {
+        let r = report(10, Some(HOUR), 0.5);
+        let ids = vec![("a".to_string(), Value::obj())];
+        SweepReport::from_cells(&ids, &[(1, 0, &r)]);
     }
 
     #[test]

@@ -1054,7 +1054,31 @@ static SWEEP_EXEC_FLAGS: &[FlagSpec] = &[
     FlagSpec {
         flag: "threads",
         value: "N",
-        help: "worker threads (default: available cores)",
+        help: "worker threads (default: available cores; with --shards: threads per shard)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "shards",
+        value: "N",
+        help: "split the sweep across N worker shards (default 0 = single process; see --shard-exec)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "shard-exec",
+        value: "MODE",
+        help: "shard executor: process (a fresh `ds shard-worker` child per shard) | inproc (default process)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "shard-timeout-s",
+        value: "S",
+        help: "per-shard worker timeout in seconds before a fresh retry (default 600)",
+        file_key: None,
+    },
+    FlagSpec {
+        flag: "shard-retries",
+        value: "N",
+        help: "extra attempts per failed shard before the sweep fails (default 2)",
         file_key: None,
     },
     FlagSpec {

@@ -11,6 +11,9 @@
 //! that used to be copy-pasted across the integration suites — one
 //! definition of the "small test rig", so a knob change (or a new
 //! required field) is one edit, not seven.
+//!
+//! [`shard_exec`] holds the fault-injecting executor double the
+//! sharded-sweep supervision tests script their worker failures with.
 
 use crate::sim::SimRng;
 
@@ -92,6 +95,128 @@ pub mod fixtures {
             let a = args("sweep --machines 2,4 --json");
             assert!(a.flag("json"));
             assert_eq!(a.get("machines"), Some("2,4"));
+        }
+    }
+}
+
+pub mod shard_exec {
+    //! Fault-injecting [`ShardExecutor`] double for the sharded-sweep
+    //! supervision tests: wrap a real executor, script exactly which
+    //! (shard, attempt) pairs misbehave and how, and assert the parent
+    //! retries or fails typed — without OS processes or signals.
+
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    use crate::coordinator::shard::{ExecFailure, ShardExecutor, WIRE_VERSION};
+    use crate::json::Value;
+
+    /// One scripted misbehavior.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Fault {
+        /// The worker dies mid-shard (signal-style crash, stderr
+        /// attached).
+        Kill,
+        /// The worker prints bytes that are not JSON at all.
+        Garbage,
+        /// The worker's real output is cut off mid-stream (pipe closed
+        /// early, partial write).
+        Truncate,
+        /// The worker hangs past the executor's timeout.
+        Hang,
+        /// The worker answers with a result envelope from a future wire
+        /// version.
+        VersionBump,
+    }
+
+    /// Wraps an inner executor and applies the scripted [`Fault`] when
+    /// `(shard, attempt)` matches; other attempts pass through.  Attempt
+    /// numbering starts at 0 per shard.  Thread-safe: the parent
+    /// dispatches shards from scoped threads.
+    pub struct FaultyExecutor<E> {
+        inner: E,
+        faults: HashMap<(usize, usize), Fault>,
+        attempts: Mutex<HashMap<usize, usize>>,
+    }
+
+    impl<E: ShardExecutor> FaultyExecutor<E> {
+        pub fn new(inner: E) -> Self {
+            Self {
+                inner,
+                faults: HashMap::new(),
+                attempts: Mutex::new(HashMap::new()),
+            }
+        }
+
+        /// Script `fault` for the given shard's `attempt` (0-based).
+        #[must_use]
+        pub fn fault(mut self, shard: usize, attempt: usize, fault: Fault) -> Self {
+            self.faults.insert((shard, attempt), fault);
+            self
+        }
+
+        /// How many attempts the parent has made against `shard`.
+        pub fn attempts(&self, shard: usize) -> usize {
+            self.attempts.lock().unwrap().get(&shard).copied().unwrap_or(0)
+        }
+
+        fn shard_of(request_json: &str) -> usize {
+            crate::json::parse(request_json)
+                .ok()
+                .and_then(|v| {
+                    v.get("assignment")
+                        .and_then(|a| a.get("index"))
+                        .and_then(Value::as_u64)
+                })
+                .and_then(|n| usize::try_from(n).ok())
+                .expect("request envelope carries assignment.index")
+        }
+    }
+
+    impl<E: ShardExecutor> ShardExecutor for FaultyExecutor<E> {
+        fn run_shard(&self, request_json: &str) -> Result<String, ExecFailure> {
+            let shard = Self::shard_of(request_json);
+            let attempt = {
+                let mut attempts = self.attempts.lock().unwrap();
+                let n = attempts.entry(shard).or_insert(0);
+                let attempt = *n;
+                *n += 1;
+                attempt
+            };
+            match self.faults.get(&(shard, attempt)) {
+                None => self.inner.run_shard(request_json),
+                Some(Fault::Kill) => Err(ExecFailure::Crashed {
+                    status: "signal: 9 (injected kill)".to_string(),
+                    stderr: "worker killed mid-shard (injected)".to_string(),
+                }),
+                Some(Fault::Hang) => Err(ExecFailure::Timeout(Duration::from_secs(1))),
+                Some(Fault::Garbage) => Ok("{\"cells\": [tru".to_string()),
+                Some(Fault::Truncate) => {
+                    let out = self.inner.run_shard(request_json)?;
+                    Ok(out.chars().take(out.len() / 2).collect())
+                }
+                Some(Fault::VersionBump) => {
+                    let out = self.inner.run_shard(request_json)?;
+                    let v = crate::json::parse(&out).expect("inner executor emits JSON");
+                    let bumped = match v {
+                        Value::Obj(fields) => Value::Obj(
+                            fields
+                                .into_iter()
+                                .map(|(k, val)| {
+                                    if k == "version" {
+                                        (k, Value::from(WIRE_VERSION + 1))
+                                    } else {
+                                        (k, val)
+                                    }
+                                })
+                                .collect(),
+                        ),
+                        other => other,
+                    };
+                    Ok(bumped.pretty())
+                }
+            }
         }
     }
 }

@@ -123,3 +123,109 @@ fn run_and_sweep_json_round_trip_through_the_parser() {
     let parsed = ds_rs::json::parse(&j.pretty()).unwrap();
     assert_eq!(parsed, j);
 }
+
+// ---------------------------------------------------------------------
+// Shard wire envelopes (DESIGN.md §10): the field sets both halves of
+// the parent/child contract speak.  A drift here is a wire break, not
+// just a schema change — it must come with a WIRE_VERSION bump.
+// ---------------------------------------------------------------------
+
+use ds_rs::coordinator::shard::{shard_plan, shard_worker, SweepShardRequest, WIRE_VERSION};
+
+/// One elastic data-shaped cell, so the result envelope exercises every
+/// report family: pools, data plane, and a non-empty scaling timeline.
+fn shard_golden_plan() -> SweepPlan {
+    SweepPlan::builder()
+        .config(quick_cfg(3))
+        .jobs(plate_jobs(12, 2))
+        .seeds([1])
+        .machines([3])
+        .input_mbs([8.0])
+        .scalings([ScalingMode::TargetTracking])
+        .scaling_targets([8.0])
+        .job_mean_s([300.0])
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn shard_request_envelope_field_set_is_pinned() {
+    let plan = shard_golden_plan();
+    let req = SweepShardRequest {
+        plan,
+        threads: 2,
+        assignment: shard_plan(1, 1)[0].clone(),
+    };
+    // The embedded "plan" subtree is the Sweep file schema, pinned by
+    // its own round-trip gate (tests/scenario_api.rs) — pinning it
+    // again here would make every new axis a wire-fixture churn.  Only
+    // the envelope proper is golden.
+    let paths: BTreeSet<String> = paths_of(&req.to_json())
+        .into_iter()
+        .filter(|p| p == "plan" || !p.starts_with("plan."))
+        .collect();
+    assert_matches_golden(&paths, "shard_request.keys");
+}
+
+#[test]
+fn shard_result_envelope_field_set_is_pinned() {
+    let plan = shard_golden_plan();
+    let req = SweepShardRequest {
+        plan,
+        threads: 2,
+        assignment: shard_plan(1, 1)[0].clone(),
+    };
+    let out = shard_worker(&req.to_json().pretty()).unwrap();
+    let v = ds_rs::json::parse(&out).unwrap();
+    // key_paths only walks the first array element, so the one golden
+    // cell must populate every optional family.
+    let report = v.get("cells").unwrap().as_arr().unwrap()[0].get("report").unwrap();
+    let scaling = report.get("scaling").unwrap();
+    assert!(
+        scaling.get("decisions").unwrap().as_u64().unwrap() >= 1,
+        "golden cell must exercise the scaling timeline"
+    );
+    assert!(
+        report.get("data").unwrap().get("bytes_downloaded").unwrap().as_u64().unwrap() > 0,
+        "golden cell must exercise the data plane"
+    );
+    assert!(
+        !report.get("pools").unwrap().as_arr().unwrap().is_empty(),
+        "golden cell must have pool rows"
+    );
+    assert_matches_golden(&paths_of(&v), "shard_result.keys");
+}
+
+#[test]
+fn version_bumped_result_envelope_is_rejected() {
+    use ds_rs::coordinator::shard::{ShardResult, WireError};
+    let plan = shard_golden_plan();
+    let req = SweepShardRequest {
+        plan,
+        threads: 1,
+        assignment: shard_plan(1, 1)[0].clone(),
+    };
+    let out = shard_worker(&req.to_json().pretty()).unwrap();
+    let bumped = match ds_rs::json::parse(&out).unwrap() {
+        Value::Obj(fields) => Value::Obj(
+            fields
+                .into_iter()
+                .map(|(k, val)| {
+                    if k == "version" {
+                        (k, Value::from(WIRE_VERSION + 1))
+                    } else {
+                        (k, val)
+                    }
+                })
+                .collect(),
+        ),
+        other => other,
+    };
+    match ShardResult::from_json(&bumped) {
+        Err(WireError::Version { got, want }) => {
+            assert_eq!(got, WIRE_VERSION + 1);
+            assert_eq!(want, WIRE_VERSION);
+        }
+        other => panic!("expected a version error, got {other:?}"),
+    }
+}

@@ -10,7 +10,8 @@
 use std::time::Instant;
 
 use ds_rs::config::{FleetSpec, JobSpec};
-use ds_rs::coordinator::run::{run_full, RunOptions};
+use ds_rs::coordinator::run::{run_full, EngineOptions, RunOptions};
+use ds_rs::sim::{QueueKind, StoreKind};
 use ds_rs::testutil::fixtures::{modeled, quick_cfg};
 
 /// One million jobs / one thousand machines, default engine (calendar
@@ -46,17 +47,49 @@ fn million_jobs_thousand_machines_complete_within_budget() {
 }
 
 /// Mid-scale smoke inside the default test run: 10k jobs on 100
-/// machines, exact conservation, full cleanup.
+/// machines, exact conservation, full cleanup — under all four
+/// `{queue} × {store}` engine combinations, so the non-default engines
+/// (the old binary heap, the hash-map stores) keep default-lane
+/// coverage at a scale where their data structures actually churn.
 #[test]
-fn ten_thousand_jobs_conserve_totals() {
-    let mut cfg = quick_cfg(100);
-    cfg.check_if_done.enabled = false;
-    let jobs = JobSpec::plate("P", 100, 100, vec![]);
-    let mut fleet = FleetSpec::template("us-east-1").unwrap();
-    fleet.on_demand_base = 100;
-    let mut ex = modeled(60.0);
-    let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
-    assert_eq!(report.stats.completed, 10_000, "{}", report.summary());
-    assert!(report.fully_accounted(), "{}", report.summary());
-    assert!(report.cleaned_up);
+fn ten_thousand_jobs_conserve_totals_on_every_engine() {
+    let engines = [
+        EngineOptions {
+            queue: QueueKind::Heap,
+            store: StoreKind::Map,
+        },
+        EngineOptions {
+            queue: QueueKind::Heap,
+            store: StoreKind::Dense,
+        },
+        EngineOptions {
+            queue: QueueKind::Calendar,
+            store: StoreKind::Map,
+        },
+        EngineOptions {
+            queue: QueueKind::Calendar,
+            store: StoreKind::Dense,
+        },
+    ];
+    for engine in engines {
+        let mut cfg = quick_cfg(100);
+        cfg.check_if_done.enabled = false;
+        let jobs = JobSpec::plate("P", 100, 100, vec![]);
+        let mut fleet = FleetSpec::template("us-east-1").unwrap();
+        fleet.on_demand_base = 100;
+        let mut ex = modeled(60.0);
+        let opts = RunOptions {
+            engine,
+            ..Default::default()
+        };
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap();
+        assert_eq!(
+            report.stats.completed,
+            10_000,
+            "{engine:?}: {}",
+            report.summary()
+        );
+        assert!(report.fully_accounted(), "{engine:?}: {}", report.summary());
+        assert!(report.cleaned_up, "{engine:?}");
+    }
 }

@@ -1,0 +1,630 @@
+//! Sharded sweep execution gates (DESIGN.md §10).
+//!
+//! The contract under test: `run_sweep_sharded` is *indistinguishable*
+//! from single-process `run_sweep` — same report struct, same JSON
+//! bytes, same table bytes — for any shard count, any per-shard thread
+//! count, and any completion order; and worker failure is never silent:
+//! every injected fault (kill, garbage, truncation, hang, version skew,
+//! dropped/duplicated cells) ends in either a recovered retry or a
+//! typed `ShardError`, never a merged report with a hole in the matrix.
+//!
+//! Three plan shapes mirror the determinism matrix: a serial sweep, a
+//! crashy data-shaped sweep (crash MTTF in `base_opts` — exercising the
+//! non-axis options on the wire), and a scaling × data sweep.  The fast
+//! differential tests run every shard through [`InProcExecutor`] (same
+//! code path as a child minus the OS process); the `real process`
+//! section spawns genuine `ds shard-worker` children via
+//! `CARGO_BIN_EXE_ds`, including workers that really die, hang, and
+//! print garbage (armed through `DS_SHARD_FAULT*` in the child's
+//! environment only).
+
+use std::time::Duration;
+
+use ds_rs::aws::ec2::Volatility;
+use ds_rs::aws::s3::dataplane::NetProfile;
+use ds_rs::coordinator::autoscale::ScalingMode;
+use ds_rs::coordinator::shard::{
+    report_from_wire, report_to_wire, run_sweep_sharded, shard_plan, ExecFailure, InProcExecutor,
+    ProcessExecutor, ShardError, ShardExecutor, ShardOptions, SweepShardRequest, WIRE_VERSION,
+};
+use ds_rs::coordinator::sweep::{run_sweep, ScenarioMatrix, SweepPlan, SweepRun};
+use ds_rs::json::Value;
+use ds_rs::metrics::{RunReport, ScenarioSummary, SweepReport};
+use ds_rs::sim::MINUTE;
+use ds_rs::testutil::fixtures::{plate_jobs, quick_cfg};
+use ds_rs::testutil::shard_exec::{Fault, FaultyExecutor};
+use ds_rs::testutil::{forall_r, forall};
+use ds_rs::workloads::DurationModel;
+
+// ---------------------------------------------------------------------
+// The determinism-matrix plans
+// ---------------------------------------------------------------------
+
+/// 2 machines-axis scenarios × 4 seeds = 8 cells, no failure modes.
+fn serial_plan() -> SweepPlan {
+    let matrix = ScenarioMatrix {
+        seeds: (0..4).collect(),
+        cluster_machines: vec![2, 4],
+        models: vec![DurationModel {
+            mean_s: 40.0,
+            cv: 0.3,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    SweepPlan::new(quick_cfg(3), plate_jobs(6, 2), matrix)
+}
+
+/// 1 scenario × 2 seeds = 2 cells: high volatility, data-shaped jobs on
+/// a narrow network, stall/fail probabilities, and — crucially for the
+/// wire contract — a crash MTTF set in `base_opts`, which no axis
+/// overlays, so it only survives sharding if the envelope carries it.
+fn crashy_data_plan() -> SweepPlan {
+    let matrix = ScenarioMatrix {
+        seeds: vec![7, 13],
+        cluster_machines: vec![3],
+        volatilities: vec![Volatility::High],
+        input_mbs: vec![24.0],
+        net_profiles: vec![NetProfile::narrow()],
+        models: vec![DurationModel {
+            mean_s: 45.0,
+            cv: 0.3,
+            stall_prob: 0.02,
+            fail_prob: 0.05,
+        }],
+        ..Default::default()
+    };
+    let mut plan = SweepPlan::new(quick_cfg(3), plate_jobs(6, 2), matrix);
+    plan.base_opts.crash_mttf = Some(40 * MINUTE);
+    plan
+}
+
+/// 6 scenarios (3 scaling modes × 2 input shapes) × 2 seeds = 12 cells.
+fn scaling_data_plan() -> SweepPlan {
+    let matrix = ScenarioMatrix {
+        seeds: vec![0, 1],
+        cluster_machines: vec![3],
+        scalings: ScalingMode::ALL.to_vec(),
+        scaling_targets: vec![8.0],
+        input_mbs: vec![0.0, 24.0],
+        models: vec![DurationModel {
+            mean_s: 120.0,
+            cv: 0.3,
+            ..Default::default()
+        }],
+        ..Default::default()
+    };
+    SweepPlan::new(quick_cfg(3), plate_jobs(5, 2), matrix)
+}
+
+/// Full-fidelity equality: struct, per-cell results, JSON bytes, table
+/// bytes.
+fn assert_runs_identical(reference: &SweepRun, sharded: &SweepRun, label: &str) {
+    assert_eq!(reference.cells, sharded.cells, "{label}: cells diverge");
+    assert_eq!(reference.report, sharded.report, "{label}: report diverges");
+    assert_eq!(
+        reference.report.to_json().pretty(),
+        sharded.report.to_json().pretty(),
+        "{label}: JSON bytes diverge"
+    );
+    assert_eq!(
+        reference.report.table().render(),
+        sharded.report.table().render(),
+        "{label}: table bytes diverge"
+    );
+}
+
+fn sharded_inproc(plan: &SweepPlan, shards: usize, threads: usize) -> SweepRun {
+    let opts = ShardOptions {
+        shards,
+        threads,
+        retries: 0,
+    };
+    run_sweep_sharded(plan, &opts, &InProcExecutor).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Differential gates (in-process executor)
+// ---------------------------------------------------------------------
+
+#[test]
+fn sharded_serial_sweep_identical_across_shard_and_thread_matrix() {
+    let plan = serial_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    for shards in [1, 2, 8] {
+        for threads in [1, 2, 8] {
+            let sharded = sharded_inproc(&plan, shards, threads);
+            assert_runs_identical(
+                &reference,
+                &sharded,
+                &format!("serial {shards} shards x {threads} threads"),
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_crashy_data_sweep_identical_at_1_2_and_8_shards() {
+    let plan = crashy_data_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    // Sanity: the plan actually exercises the data plane and crashes —
+    // otherwise this differential is weaker than it claims.
+    assert!(reference.cells.iter().any(|c| c.report.data.total_bytes() > 0));
+    assert!(reference.cells.iter().any(|c| c.report.stats.crashes > 0));
+    for shards in [1, 2, 8] {
+        let sharded = sharded_inproc(&plan, shards, 2);
+        assert_runs_identical(&reference, &sharded, &format!("crashy {shards} shards"));
+    }
+}
+
+#[test]
+fn sharded_scaling_data_sweep_identical_at_1_2_and_8_shards() {
+    let plan = scaling_data_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    assert!(reference
+        .report
+        .scenarios
+        .iter()
+        .any(|s| s.scaling.policy == "target-tracking"));
+    for shards in [1, 2, 8] {
+        let sharded = sharded_inproc(&plan, shards, 2);
+        assert_runs_identical(&reference, &sharded, &format!("scaling {shards} shards"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard-plan properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn shard_plan_covers_every_cell_exactly_once_balanced_within_one() {
+    forall_r(
+        "shard-plan-partition",
+        200,
+        0xDEC0DE,
+        |r| (1 + r.below(200) as usize, 1 + r.below(24) as usize),
+        |&(cells, shards)| {
+            let plans = shard_plan(cells, shards);
+            let mut seen: Vec<usize> =
+                plans.iter().flat_map(|p| p.cells.iter().copied()).collect();
+            seen.sort_unstable();
+            if seen != (0..cells).collect::<Vec<_>>() {
+                return Err(format!("not a partition: {seen:?}"));
+            }
+            let sizes: Vec<usize> = plans.iter().map(|p| p.cells.len()).collect();
+            let (min, max) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            if max - min > 1 {
+                return Err(format!("unbalanced: sizes {sizes:?}"));
+            }
+            for (i, p) in plans.iter().enumerate() {
+                if p.index != i || p.count != plans.len() {
+                    return Err(format!("bad labels on shard {i}: {p:?}"));
+                }
+                if p.cells.windows(2).any(|w| w[0] >= w[1]) {
+                    return Err(format!("cells not ascending on shard {i}: {p:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shard_plan_is_stable_under_reinvocation() {
+    forall(
+        "shard-plan-stability",
+        100,
+        0x5EED,
+        |r| (1 + r.below(500) as usize, 1 + r.below(16) as usize),
+        |&(cells, shards)| shard_plan(cells, shards) == shard_plan(cells, shards),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Merge-fold properties (satellite: from_reports associativity)
+// ---------------------------------------------------------------------
+
+/// Overwrite every f64 in the report with small dyadic rationals
+/// (multiples of 0.25): their sums are exact in f64 regardless of
+/// addition order, which is what lets the raw `from_reports` fold be
+/// asserted permutation-invariant without the canonical pre-sort.
+fn dyadicize(report: &mut RunReport, i: u64) {
+    let d = |k: u64| (i * 16 + k) as f64 * 0.25;
+    report.cost.ec2_usd = d(1);
+    report.cost.sqs_usd = d(2);
+    report.cost.s3_usd = d(3);
+    report.cost.s3_egress_usd = d(4);
+    report.cost.cloudwatch_usd = d(5);
+    report.cost.machine_hours = d(6);
+    report.cost.on_demand_equivalent_usd = d(7);
+    report.data.request_usd = d(8);
+    report.data.egress_usd = d(9);
+    report.scaling.capacity_unit_hours = d(10);
+    for (k, pool) in report.pools.iter_mut().enumerate() {
+        pool.machine_hours = d(11 + 2 * k as u64);
+        pool.cost_usd = d(12 + 2 * k as u64);
+    }
+}
+
+#[test]
+fn from_reports_shard_arrival_order_folds_identically_to_sorted_order() {
+    // Real reports (so pools/data/scaling are populated), dyadic f64s
+    // (so the sums cannot depend on fold order).
+    let run = run_sweep(&serial_plan(), 2).unwrap();
+    let mut reports: Vec<RunReport> = run.cells[0..4].iter().map(|c| c.report.clone()).collect();
+    for (i, r) in reports.iter_mut().enumerate() {
+        dyadicize(r, i as u64);
+    }
+    let sorted: Vec<&RunReport> = reports.iter().collect();
+    let sorted_json = ScenarioSummary::from_reports("perm", &sorted).to_json().pretty();
+    // Every arrival order a 4-shard sweep could deliver this scenario in.
+    let orders: &[[usize; 4]] = &[
+        [3, 1, 0, 2],
+        [1, 0, 3, 2],
+        [2, 3, 1, 0],
+        [3, 2, 1, 0],
+    ];
+    for order in orders {
+        let arrival: Vec<&RunReport> = order.iter().map(|&k| &reports[k]).collect();
+        let arrival_json = ScenarioSummary::from_reports("perm", &arrival).to_json().pretty();
+        assert_eq!(arrival_json, sorted_json, "order {order:?}");
+    }
+}
+
+#[test]
+fn from_cells_merges_shard_results_identically_to_the_engine() {
+    // The real thing `run_sweep_sharded` relies on: feeding the cells
+    // to `SweepReport::from_cells` in any shard arrival order produces
+    // the single-process report, bit for bit — including its JSON.
+    let plan = scaling_data_plan();
+    let run = run_sweep(&plan, 2).unwrap();
+    let nseeds = plan.matrix.seeds.len();
+    let ids: Vec<(String, Value)> = run
+        .scenarios
+        .iter()
+        .map(|sc| (sc.label(), sc.axis_json()))
+        .collect();
+    let indexed: Vec<(usize, usize, &RunReport)> = run
+        .cells
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.scenario, i % nseeds, &c.report))
+        .collect();
+    // Interleave as a 3-shard round-robin completion would: shard 2
+    // first, then 0, then 1.
+    for first in 0..3 {
+        let mut arrival: Vec<(usize, usize, &RunReport)> = Vec::new();
+        for s in [first, (first + 1) % 3, (first + 2) % 3] {
+            arrival.extend(indexed.iter().skip(s).step_by(3).copied());
+        }
+        let merged = SweepReport::from_cells(&ids, &arrival);
+        assert_eq!(merged, run.report);
+        assert_eq!(merged.to_json().pretty(), run.report.to_json().pretty());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire codec round-trips
+// ---------------------------------------------------------------------
+
+#[test]
+fn report_wire_codec_round_trips_real_cells_bit_exactly() {
+    // Crashy + scaling cells cover every report field family: stats,
+    // nullable drain time, pools, data plane, scaling timeline.
+    for plan in [crashy_data_plan(), scaling_data_plan()] {
+        let run = run_sweep(&plan, 2).unwrap();
+        for cell in &run.cells {
+            let wire = report_to_wire(&cell.report).pretty();
+            let parsed = ds_rs::json::parse(&wire).unwrap();
+            let back = report_from_wire(&parsed).unwrap();
+            assert_eq!(back, cell.report);
+            // And the re-encoded bytes are stable (canonical encoding).
+            assert_eq!(report_to_wire(&back).pretty(), wire);
+        }
+    }
+}
+
+#[test]
+fn shard_request_round_trip_preserves_the_whole_plan() {
+    // The crashy plan is the adversarial one: crash MTTF lives in
+    // base_opts (not the Sweep file), so this round trip proves the
+    // envelope's base_opts channel actually works.
+    let plan = crashy_data_plan();
+    let req = SweepShardRequest {
+        plan: plan.clone(),
+        threads: 2,
+        assignment: shard_plan(2, 2)[0].clone(),
+    };
+    let decoded = SweepShardRequest::from_json(&ds_rs::json::parse(&req.to_json().pretty()).unwrap())
+        .unwrap();
+    assert_eq!(decoded.plan.base_opts.crash_mttf, Some(40 * MINUTE));
+    let a = run_sweep(&plan, 2).unwrap();
+    let b = run_sweep(&decoded.plan, 2).unwrap();
+    assert_runs_identical(&a, &b, "request round trip");
+}
+
+// ---------------------------------------------------------------------
+// Fault injection (scripted executor double)
+// ---------------------------------------------------------------------
+
+fn fault_opts() -> ShardOptions {
+    ShardOptions {
+        shards: 2,
+        threads: 2,
+        retries: 1,
+    }
+}
+
+#[test]
+fn every_fault_kind_recovers_on_retry_with_identical_bytes() {
+    let plan = crashy_data_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    for fault in [
+        Fault::Kill,
+        Fault::Garbage,
+        Fault::Truncate,
+        Fault::Hang,
+        Fault::VersionBump,
+    ] {
+        let exec = FaultyExecutor::new(InProcExecutor).fault(0, 0, fault);
+        let run = run_sweep_sharded(&plan, &fault_opts(), &exec).unwrap();
+        assert_runs_identical(&reference, &run, &format!("{fault:?} then retry"));
+        assert_eq!(exec.attempts(0), 2, "{fault:?}: shard 0 should retry once");
+        assert_eq!(exec.attempts(1), 1, "{fault:?}: shard 1 was healthy");
+    }
+}
+
+#[test]
+fn exhausted_retries_fail_typed_with_the_childs_stderr_attached() {
+    let plan = crashy_data_plan();
+    let exec = FaultyExecutor::new(InProcExecutor)
+        .fault(1, 0, Fault::Kill)
+        .fault(1, 1, Fault::Kill)
+        .fault(1, 2, Fault::Kill);
+    let opts = ShardOptions {
+        shards: 2,
+        threads: 2,
+        retries: 2,
+    };
+    let err = run_sweep_sharded(&plan, &opts, &exec).unwrap_err();
+    let shard_err = err
+        .downcast_ref::<ShardError>()
+        .unwrap_or_else(|| panic!("untyped error: {err:#}"));
+    match shard_err {
+        ShardError::Exhausted {
+            shard: 1,
+            attempts: 3,
+            last,
+        } => match last.as_ref() {
+            ShardError::Exec {
+                shard: 1,
+                failure: ExecFailure::Crashed { stderr, .. },
+            } => assert!(
+                stderr.contains("killed mid-shard"),
+                "stderr not surfaced: {stderr:?}"
+            ),
+            other => panic!("wrong last error: {other:?}"),
+        },
+        other => panic!("wrong error shape: {other:?}"),
+    }
+    assert_eq!(exec.attempts(1), 3);
+}
+
+#[test]
+fn persistent_version_skew_is_a_typed_version_mismatch() {
+    let plan = crashy_data_plan();
+    let exec = FaultyExecutor::new(InProcExecutor)
+        .fault(0, 0, Fault::VersionBump)
+        .fault(0, 1, Fault::VersionBump)
+        .fault(0, 2, Fault::VersionBump);
+    let opts = ShardOptions {
+        shards: 2,
+        threads: 1,
+        retries: 2,
+    };
+    let err = run_sweep_sharded(&plan, &opts, &exec).unwrap_err();
+    match err.downcast_ref::<ShardError>() {
+        Some(ShardError::Exhausted { last, .. }) => match last.as_ref() {
+            ShardError::VersionMismatch { shard: 0, got, want } => {
+                assert_eq!(*got, WIRE_VERSION + 1);
+                assert_eq!(*want, WIRE_VERSION);
+            }
+            other => panic!("wrong last error: {other:?}"),
+        },
+        other => panic!("wrong error shape: {other:?}"),
+    }
+}
+
+/// Executor that tampers with a healthy worker's result: drops the last
+/// cell, or duplicates the first.  Both must die in assignment
+/// validation — the merge must never see them.
+struct TamperingExecutor {
+    drop_last: bool,
+}
+
+impl ShardExecutor for TamperingExecutor {
+    fn run_shard(&self, request_json: &str) -> Result<String, ExecFailure> {
+        let out = InProcExecutor.run_shard(request_json)?;
+        let v = ds_rs::json::parse(&out).expect("worker emits JSON");
+        let tampered = match v {
+            Value::Obj(fields) => Value::Obj(
+                fields
+                    .into_iter()
+                    .map(|(k, val)| {
+                        if k != "cells" {
+                            return (k, val);
+                        }
+                        let Value::Arr(mut cells) = val else {
+                            return (k, val);
+                        };
+                        if self.drop_last {
+                            cells.pop();
+                        } else if let Some(first) = cells.first().cloned() {
+                            cells.push(first);
+                        }
+                        (k, Value::Arr(cells))
+                    })
+                    .collect(),
+            ),
+            other => other,
+        };
+        Ok(tampered.pretty())
+    }
+}
+
+#[test]
+fn dropped_and_duplicated_cells_are_typed_assignment_mismatches() {
+    let plan = serial_plan();
+    for drop_last in [true, false] {
+        let exec = TamperingExecutor { drop_last };
+        let opts = ShardOptions {
+            shards: 2,
+            threads: 2,
+            retries: 0,
+        };
+        let err = run_sweep_sharded(&plan, &opts, &exec).unwrap_err();
+        match err.downcast_ref::<ShardError>() {
+            Some(ShardError::Exhausted { last, .. }) => {
+                assert!(
+                    matches!(last.as_ref(), ShardError::AssignmentMismatch { .. }),
+                    "drop_last={drop_last}: wrong last error: {last:?}"
+                );
+            }
+            other => panic!("drop_last={drop_last}: wrong error shape: {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Real worker processes (`ds shard-worker` via CARGO_BIN_EXE_ds)
+// ---------------------------------------------------------------------
+
+fn process_exec() -> ProcessExecutor {
+    ProcessExecutor::new(env!("CARGO_BIN_EXE_ds"), Duration::from_secs(120))
+}
+
+/// A scratch marker path unique to this test binary invocation; the
+/// `DS_SHARD_FAULT_ONCE` hook creates it when the fault trips.
+fn marker(name: &str) -> std::path::PathBuf {
+    let path = std::env::temp_dir().join(format!("ds-shard-{name}-{}", std::process::id()));
+    std::fs::remove_file(&path).ok();
+    path
+}
+
+#[test]
+fn real_process_shards_match_single_process_bytes() {
+    let plan = crashy_data_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    let opts = ShardOptions {
+        shards: 2,
+        threads: 1,
+        retries: 0,
+    };
+    let run = run_sweep_sharded(&plan, &opts, &process_exec()).unwrap();
+    assert_runs_identical(&reference, &run, "real process, 2 shards");
+}
+
+#[test]
+fn real_worker_killed_once_recovers_on_the_fresh_process() {
+    let plan = crashy_data_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    let marker = marker("kill-once");
+    let mut exec = process_exec();
+    exec.envs = vec![
+        ("DS_SHARD_FAULT".into(), "kill".into()),
+        ("DS_SHARD_FAULT_SHARD".into(), "0".into()),
+        ("DS_SHARD_FAULT_ONCE".into(), marker.display().to_string()),
+    ];
+    let opts = ShardOptions {
+        shards: 2,
+        threads: 1,
+        retries: 1,
+    };
+    let run = run_sweep_sharded(&plan, &opts, &exec).unwrap();
+    assert!(marker.exists(), "the fault never tripped — test is vacuous");
+    std::fs::remove_file(&marker).ok();
+    assert_runs_identical(&reference, &run, "killed once, retried");
+}
+
+#[test]
+fn real_worker_garbage_once_recovers_on_the_fresh_process() {
+    let plan = crashy_data_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    let marker = marker("garbage-once");
+    let mut exec = process_exec();
+    exec.envs = vec![
+        ("DS_SHARD_FAULT".into(), "garbage".into()),
+        ("DS_SHARD_FAULT_SHARD".into(), "1".into()),
+        ("DS_SHARD_FAULT_ONCE".into(), marker.display().to_string()),
+    ];
+    let opts = ShardOptions {
+        shards: 2,
+        threads: 1,
+        retries: 1,
+    };
+    let run = run_sweep_sharded(&plan, &opts, &exec).unwrap();
+    assert!(marker.exists(), "the fault never tripped — test is vacuous");
+    std::fs::remove_file(&marker).ok();
+    assert_runs_identical(&reference, &run, "garbage once, retried");
+}
+
+#[test]
+fn real_worker_hang_times_out_as_a_typed_error() {
+    let plan = crashy_data_plan();
+    let mut exec = ProcessExecutor::new(env!("CARGO_BIN_EXE_ds"), Duration::from_millis(400));
+    exec.envs = vec![("DS_SHARD_FAULT".into(), "hang".into())];
+    let opts = ShardOptions {
+        shards: 1,
+        threads: 1,
+        retries: 0,
+    };
+    let err = run_sweep_sharded(&plan, &opts, &exec).unwrap_err();
+    match err.downcast_ref::<ShardError>() {
+        Some(ShardError::Exhausted { attempts: 1, last, .. }) => {
+            assert!(
+                matches!(
+                    last.as_ref(),
+                    ShardError::Exec {
+                        failure: ExecFailure::Timeout(_),
+                        ..
+                    }
+                ),
+                "wrong last error: {last:?}"
+            );
+        }
+        other => panic!("wrong error shape: {other:?}"),
+    }
+}
+
+/// The full differential matrix against real worker processes.  Heavy
+/// (dozens of child processes), so the default lane skips it; the
+/// release CI shard lane runs it with `--include-ignored`.
+#[test]
+#[ignore = "real-process differential matrix; the release CI shard lane runs it with --ignored"]
+fn real_process_differential_matrix() {
+    for (name, plan) in [
+        ("serial", serial_plan()),
+        ("crashy", crashy_data_plan()),
+        ("scaling", scaling_data_plan()),
+    ] {
+        let reference = run_sweep(&plan, 2).unwrap();
+        for shards in [2, 8] {
+            for threads in [2, 8] {
+                let opts = ShardOptions {
+                    shards,
+                    threads,
+                    retries: 0,
+                };
+                let run = run_sweep_sharded(&plan, &opts, &process_exec()).unwrap();
+                assert_runs_identical(
+                    &reference,
+                    &run,
+                    &format!("{name}: real {shards} shards x {threads} threads"),
+                );
+            }
+        }
+    }
+}
