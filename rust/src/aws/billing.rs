@@ -154,9 +154,10 @@ pub fn data_breakdown(s3: S3Stats, net: TransferStats) -> DataBreakdown {
 }
 
 /// Egress dollars: data-plane download bytes only (see
-/// [`S3_PER_GB_EGRESS`]).
+/// [`S3_PER_GB_EGRESS`]).  Peer-class flows (node-local / shared-fs
+/// artifact sharing) never leave S3, so their bytes are exempt.
 fn egress_usd(net: TransferStats) -> f64 {
-    net.bytes_downloaded as f64 / 1e9 * S3_PER_GB_EGRESS
+    (net.bytes_downloaded - net.peer_bytes_downloaded) as f64 / 1e9 * S3_PER_GB_EGRESS
 }
 
 /// Build a report from raw service counters.
@@ -345,6 +346,25 @@ mod tests {
         let r = compute_report(&[], 0.0, 0, s3, 0.0, 0, net);
         assert_eq!(d.egress_usd, r.s3_egress_usd);
         assert!((d.request_usd - r.s3_usd).abs() < 1e-12, "no storage term here");
+    }
+
+    #[test]
+    fn peer_bytes_are_exempt_from_egress_and_requests() {
+        // 3 GB moved, 2 GB of it over peer links: only the S3 GB bills
+        // egress, and only the S3 flows bill GET requests.
+        let net = TransferStats {
+            bytes_downloaded: 3_000_000_000,
+            peer_bytes_downloaded: 2_000_000_000,
+            downloads_started: 10,
+            peer_flows_started: 20,
+            ..Default::default()
+        };
+        let r = compute_report(&[], 0.0, 0, S3Stats::default(), 0.0, 0, net);
+        assert!((r.s3_egress_usd - 0.02).abs() < 1e-9, "{}", r.s3_egress_usd);
+        let d = data_breakdown(S3Stats::default(), net);
+        assert_eq!(d.get_requests, 10, "peer flows bill no GETs");
+        assert_eq!(d.bytes_downloaded, 3_000_000_000, "breakdown still shows all bytes");
+        assert_eq!(d.egress_usd, r.s3_egress_usd);
     }
 
     #[test]

@@ -141,6 +141,14 @@ pub struct TransferStats {
     pub downloads_started: u64,
     /// `PutObject` requests issued by the data plane.
     pub uploads_started: u64,
+    /// The slice of `bytes_downloaded` that moved over *peer* links
+    /// (node-local / shared-filesystem artifact sharing, DESIGN.md §11)
+    /// rather than S3 — exempt from egress and request billing.
+    pub peer_bytes_downloaded: u64,
+    /// The slice of `bytes_uploaded` that moved over peer links.
+    pub peer_bytes_uploaded: u64,
+    /// Peer transfers begun (no GET/PUT request is billed for these).
+    pub peer_flows_started: u64,
     pub flows_completed: u64,
     pub flows_cancelled: u64,
     /// Flow-milliseconds where the *bucket* budget was the binding
@@ -175,6 +183,9 @@ struct Flow {
     rate: f64,
     /// Which link froze this flow in the current plan.
     bucket_bound: bool,
+    /// Peer-class flow: shares bandwidth like any other, but bills no
+    /// S3 request and no egress (the "bucket" is a peer link name).
+    peer: bool,
 }
 
 /// A capacity constraint in the fairness plan.
@@ -239,13 +250,46 @@ impl DataPlane {
         dir: Direction,
         bytes: u64,
     ) -> FlowId {
-        self.progress(now);
-        self.next_id += 1;
-        let id = self.next_id;
         match dir {
             Direction::Download => self.stats.downloads_started += 1,
             Direction::Upload => self.stats.uploads_started += 1,
         }
+        self.start_flow(now, instance, nic_gbps, bucket, dir, bytes, false)
+    }
+
+    /// Begin a *peer* transfer: same bandwidth sharing and first-byte
+    /// latency as [`start`](Self::start), but `link` is a peer link name
+    /// (e.g. `node:split` or `fs:shared`, each with the profile's full
+    /// bucket budget), not an S3 bucket — no GET/PUT request is billed
+    /// and the bytes are exempt from egress.  Used by the workflow
+    /// scheduler's node-local and shared-fs sharing modes (DESIGN.md §11).
+    pub fn start_peer(
+        &mut self,
+        now: SimTime,
+        instance: u64,
+        nic_gbps: f64,
+        link: &str,
+        dir: Direction,
+        bytes: u64,
+    ) -> FlowId {
+        self.stats.peer_flows_started += 1;
+        self.start_flow(now, instance, nic_gbps, link, dir, bytes, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn start_flow(
+        &mut self,
+        now: SimTime,
+        instance: u64,
+        nic_gbps: f64,
+        bucket: &str,
+        dir: Direction,
+        bytes: u64,
+        peer: bool,
+    ) -> FlowId {
+        self.progress(now);
+        self.next_id += 1;
+        let id = self.next_id;
         self.flows.insert(
             id,
             Flow {
@@ -258,6 +302,7 @@ impl DataPlane {
                 active_at: now.saturating_add(self.profile.first_byte_ms),
                 rate: 0.0,
                 bucket_bound: false,
+                peer,
             },
         );
         self.replan();
@@ -316,7 +361,7 @@ impl DataPlane {
         for id in &ids {
             let f = self.flows.remove(id).expect("cancelling a listed flow");
             let flowed = (f.bytes as f64 - f.remaining).clamp(0.0, f.bytes as f64).round() as u64;
-            self.credit(f.dir, flowed);
+            self.credit(f.dir, f.peer, flowed);
             self.stats.bytes_wasted += flowed;
             self.stats.flows_cancelled += 1;
         }
@@ -352,10 +397,20 @@ impl DataPlane {
         self.clock
     }
 
-    fn credit(&mut self, dir: Direction, bytes: u64) {
+    fn credit(&mut self, dir: Direction, peer: bool, bytes: u64) {
         match dir {
-            Direction::Download => self.stats.bytes_downloaded += bytes,
-            Direction::Upload => self.stats.bytes_uploaded += bytes,
+            Direction::Download => {
+                self.stats.bytes_downloaded += bytes;
+                if peer {
+                    self.stats.peer_bytes_downloaded += bytes;
+                }
+            }
+            Direction::Upload => {
+                self.stats.bytes_uploaded += bytes;
+                if peer {
+                    self.stats.peer_bytes_uploaded += bytes;
+                }
+            }
         }
     }
 
@@ -400,7 +455,7 @@ impl DataPlane {
             let completed_any = !done.is_empty();
             for id in done {
                 let f = self.flows.remove(&id).expect("completing a listed flow");
-                self.credit(f.dir, f.bytes);
+                self.credit(f.dir, f.peer, f.bytes);
                 self.stats.flows_completed += 1;
                 self.finished.push((
                     id,
@@ -667,6 +722,51 @@ mod tests {
             (trace, p.stats())
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn peer_flows_move_bytes_without_requests() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        // A peer pull from a producer's node link: same physics...
+        let id = p.start_peer(0, 1, NIC, "node:split", Direction::Download, 1_562_500);
+        assert_eq!(p.next_event(), Some(30));
+        assert_eq!(p.poll(40).len(), 1);
+        assert_eq!(p.rate_of(id), None);
+        let st = p.stats();
+        // ...same byte totals, but flagged peer and request-free.
+        assert_eq!(st.bytes_downloaded, 1_562_500);
+        assert_eq!(st.peer_bytes_downloaded, 1_562_500);
+        assert_eq!(st.downloads_started, 0);
+        assert_eq!(st.peer_flows_started, 1);
+        assert_eq!(st.flows_completed, 1);
+    }
+
+    #[test]
+    fn cancelled_peer_flow_credits_partial_peer_bytes() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        let _ = p.start_peer(0, 7, NIC, "fs:shared", Direction::Upload, 10_000_000);
+        // 30 ms latency + 20 ms of wire at 156 250 B/ms.
+        assert_eq!(p.cancel_instance(50, 7).len(), 1);
+        let st = p.stats();
+        assert_eq!(st.bytes_uploaded, 3_125_000);
+        assert_eq!(st.peer_bytes_uploaded, 3_125_000);
+        assert_eq!(st.bytes_wasted, 3_125_000);
+        assert_eq!(st.uploads_started, 0);
+    }
+
+    #[test]
+    fn peer_links_have_their_own_bandwidth_budget() {
+        // Two flows on distinct peer links and distinct NICs never
+        // contend; on the *same* link they share it like a bucket.
+        let mut p = DataPlane::new(NetProfile::narrow()); // 125 000 B/ms links
+        let a = p.start_peer(0, 1, NIC, "node:a", Direction::Download, 1_000_000);
+        let b = p.start_peer(0, 2, NIC, "node:b", Direction::Download, 1_000_000);
+        let c = p.start_peer(0, 3, NIC, "node:b", Direction::Download, 1_000_000);
+        p.poll(NetProfile::narrow().first_byte_ms);
+        let link = gbps_to_bytes_per_ms(1.0);
+        assert!((p.rate_of(a).unwrap() - link).abs() < 1e-9, "a is alone on node:a");
+        assert!((p.rate_of(b).unwrap() - link / 2.0).abs() < 1e-9);
+        assert!((p.rate_of(c).unwrap() - link / 2.0).abs() < 1e-9);
     }
 
     #[test]

@@ -31,6 +31,8 @@
 //! All randomness flows from one seeded RNG: identical runs replay
 //! bit-identically.
 
+use std::collections::BTreeMap;
+
 use anyhow::{ensure, Result};
 
 use crate::aws::billing::data_breakdown;
@@ -47,7 +49,10 @@ use crate::metrics::{RunReport, RunStats};
 use crate::sim::clock::{SimTime, HOUR, MINUTE};
 use crate::sim::{Arena, EventQueue, QueueKind, SimRng, SlotId, StoreKind};
 use crate::worker::{check_if_done, parse_message};
-use crate::workloads::drivers::{job_output_prefix, output_bucket, JobCtx, JobExecutor, JobOutcome};
+use crate::workflow::{SharingMode, StageSpan, WorkflowBreakdown, WorkflowSpec};
+use crate::workloads::drivers::{
+    job_output_prefix, job_tag, output_bucket, JobCtx, JobExecutor, JobOutcome,
+};
 
 use super::autoscale::{AutoscaleState, ScalingPolicy};
 use super::monitor::MonitorState;
@@ -96,6 +101,13 @@ pub struct RunOptions {
     pub net: NetProfile,
     /// Event-core engine selection (queue + entity-storage backends).
     pub engine: EngineOptions,
+    /// DAG workflow replacing the flat job list: each job becomes
+    /// SQS-visible only once every parent artifact has committed to the
+    /// data plane (DESIGN.md §11).  `None` = flat submission.
+    pub workflow: Option<WorkflowSpec>,
+    /// Where intermediate workflow artifacts live and what moving them
+    /// costs.  Only consulted for workflow runs.
+    pub sharing: SharingMode,
 }
 
 impl Default for RunOptions {
@@ -113,6 +125,8 @@ impl Default for RunOptions {
             data_bucket: "ds-data".into(),
             net: NetProfile::default(),
             engine: EngineOptions::default(),
+            workflow: None,
+            sharing: SharingMode::default(),
         }
     }
 }
@@ -184,6 +198,91 @@ struct WorkerState {
     cores_done: u32,
 }
 
+/// Per-node scheduling state for a DAG workflow run.
+#[derive(Debug)]
+struct WfNode {
+    parents: Vec<usize>,
+    children: Vec<usize>,
+    output_bytes: u64,
+    depth: u32,
+    /// Parents whose artifact has not committed yet; the node is
+    /// released to SQS when this hits zero.
+    unmet: usize,
+    released_at: Option<SimTime>,
+    committed_at: Option<SimTime>,
+}
+
+/// The readiness scheduler layered on the queue/worker loop: roots are
+/// enqueued up front, everything else is held back until its parents'
+/// artifacts commit.  While any node is unreleased, an empty queue is a
+/// gap between stages, not the end of the workload — the monitor and the
+/// no-monitor drain window both consult [`Simulation::workload_pending`].
+#[derive(Debug)]
+struct WorkflowState {
+    spec: WorkflowSpec,
+    nodes: Vec<WfNode>,
+    /// Receipt of the delivery currently working each node (overwritten
+    /// per redelivery): maps a finishing receipt back to its node.
+    by_receipt: BTreeMap<ReceiptHandle, usize>,
+    /// Nodes not yet released to SQS.
+    pending_releases: usize,
+    /// Artifact bytes moved through the sharing medium (staged uploads
+    /// plus consumer downloads).
+    bytes_staged: u64,
+    /// Total time released children spent waiting on their remaining
+    /// parents, measured from each node's first-committed parent.
+    stall_ms: u64,
+    /// Dependency-triggered releases (every node except the roots).
+    releases: u64,
+}
+
+impl WorkflowState {
+    fn new(spec: &WorkflowSpec) -> Self {
+        let children = spec.children();
+        let depths = spec.depths();
+        let mut nodes = Vec::with_capacity(spec.node_count());
+        for (i, (parents, children)) in spec.parents().into_iter().zip(children).enumerate() {
+            nodes.push(WfNode {
+                unmet: parents.len(),
+                parents,
+                children,
+                output_bytes: spec.jobs[i].output_bytes,
+                depth: depths[i],
+                released_at: None,
+                committed_at: None,
+            });
+        }
+        let pending_releases = nodes.iter().filter(|n| n.unmet > 0).count();
+        Self {
+            spec: spec.clone(),
+            nodes,
+            by_receipt: BTreeMap::new(),
+            pending_releases,
+            bytes_staged: 0,
+            stall_ms: 0,
+            releases: 0,
+        }
+    }
+
+    /// The SQS message body for node `i` — the same schema flat jobs
+    /// use (`Metadata_*` tag, declared byte footprints), so the worker
+    /// loop, CHECK_IF_DONE and the executors need no workflow awareness.
+    fn message(&self, i: usize, bucket: &str) -> String {
+        Value::obj()
+            .with("Metadata_Task", self.spec.jobs[i].name.as_str())
+            .with("input_bucket", bucket)
+            .with("output_bucket", bucket)
+            .with("input_bytes", self.spec.input_bytes(i))
+            .with("output_bytes", self.spec.jobs[i].output_bytes)
+            .pretty()
+    }
+
+    /// Node index for a delivered message, by its `Metadata_*` tag.
+    fn node_of(&self, msg: &Value) -> Option<usize> {
+        self.spec.index_of(&job_tag(msg))
+    }
+}
+
 /// A full DS run over the simulated account.
 pub struct Simulation {
     pub acct: AwsAccount,
@@ -198,6 +297,8 @@ pub struct Simulation {
     /// Scheduled `SubmitJobs` events not yet delivered; while non-zero
     /// the monitor holds off end-of-run cleanup on an empty queue.
     pending_submits: usize,
+    /// Readiness scheduler for DAG runs (`opts.workflow`).
+    workflow: Option<WorkflowState>,
     /// Per-container worker bookkeeping, one arena slot per live
     /// container (busy cores + exited cores together; the old design
     /// kept them in two parallel maps).
@@ -223,6 +324,7 @@ impl Simulation {
         setup::setup(&mut acct, &cfg, 0)?;
         let rng = SimRng::new(opts.seed ^ 0xD15C);
         let engine = opts.engine;
+        let workflow = opts.workflow.as_ref().map(WorkflowState::new);
         Ok(Self {
             acct,
             cfg,
@@ -234,6 +336,7 @@ impl Simulation {
             stats: RunStats::default(),
             jobs_submitted: 0,
             pending_submits: 0,
+            workflow,
             workers: Arena::new(),
             container_slot: Vec::new(),
             flow_job: Vec::new(),
@@ -264,6 +367,31 @@ impl Simulation {
     pub fn submit_at(&mut self, delay: SimTime, jobs: JobSpec) {
         self.pending_submits += 1;
         self.events.schedule_in(delay, Event::SubmitJobs(jobs));
+    }
+
+    /// Step 2 for a DAG run: enqueue the workflow's root jobs.  Every
+    /// other node is released by the commit hook as its parents'
+    /// artifacts land.  Returns the number of roots enqueued.
+    pub fn submit_workflow(&mut self) -> Result<u64> {
+        ensure!(
+            self.workflow.is_some(),
+            "run options carry no workflow — use submit() for flat job lists"
+        );
+        let now = self.events.now();
+        let wf = self.workflow.as_mut().unwrap();
+        let roots: Vec<usize> = (0..wf.nodes.len())
+            .filter(|&i| wf.nodes[i].unmet == 0)
+            .collect();
+        for &i in &roots {
+            let body = wf.message(i, &self.opts.data_bucket);
+            self.acct
+                .sqs
+                .send(&self.cfg.sqs_queue_name, body, now)
+                .map_err(|e| anyhow::anyhow!("sending workflow root: {e}"))?;
+            wf.nodes[i].released_at = Some(now);
+            self.jobs_submitted += 1;
+        }
+        Ok(roots.len() as u64)
     }
 
     /// Step 3 (+4): `startCluster` and optionally `monitor`.
@@ -340,9 +468,9 @@ impl Simulation {
         }
         // Without a monitor the run "ends" for reporting purposes after
         // the queue has drained and the configured overrun has elapsed —
-        // unless scheduled submissions are still pending (a gap between
-        // arrival bursts is not the end of the workload).
-        if self.monitor.is_none() && self.pending_submits == 0 {
+        // unless the workload is still pending (a gap between arrival
+        // bursts or workflow stages is not the end of the workload).
+        if self.monitor.is_none() && !self.workload_pending() {
             if let Some(d) = self.drained_at {
                 if now >= d + self.opts.overrun_after_drain {
                     return true;
@@ -350,6 +478,18 @@ impl Simulation {
             }
         }
         false
+    }
+
+    /// Scheduled submissions or unreleased workflow nodes outstanding:
+    /// an empty queue is a gap in the workload, not its end.  This is
+    /// what generalizes "queue drained" into "workload done" for both
+    /// the monitor's cleanup decision and the no-monitor drain window.
+    fn workload_pending(&self) -> bool {
+        self.pending_submits > 0
+            || self
+                .workflow
+                .as_ref()
+                .is_some_and(|w| w.pending_releases > 0)
     }
 
     // -- event handlers ----------------------------------------------------
@@ -606,6 +746,14 @@ impl Simulation {
             return;
         };
 
+        // A workflow delivery: remember which node this receipt works
+        // so the finish paths can commit its artifact.
+        if let Some(wf) = self.workflow.as_mut() {
+            if let Some(i) = wf.node_of(&parsed) {
+                wf.by_receipt.insert(receipt, i);
+            }
+        }
+
         // CHECK_IF_DONE: skip already-complete jobs.
         let bucket = output_bucket(&parsed).to_string();
         let prefix = job_output_prefix(&parsed);
@@ -613,6 +761,9 @@ impl Simulation {
             let _ = self.acct.sqs.delete(&self.cfg.sqs_queue_name, receipt, now);
             self.stats.skipped_done += 1;
             self.log_job(now, &prefix, "already done, skipping (CHECK_IF_DONE)");
+            // The outputs exist, so the artifact counts as committed —
+            // children must not wait on a job that will never rerun.
+            self.workflow_commit(now, receipt);
             self.mark_drained_if_empty(now);
             self.events.schedule_in(0, Event::CoreWake { container, core });
             return;
@@ -624,24 +775,49 @@ impl Simulation {
         // draws), so old experiments replay bit-identically.
         let input_bytes = parsed.get("input_bytes").and_then(Value::as_u64).unwrap_or(0);
         if input_bytes > 0 {
-            let input_bucket = parsed
-                .get("input_bucket")
-                .and_then(Value::as_str)
-                .unwrap_or("ds-data")
-                .to_string();
-            // Size the input first (HeadObject, like a worker does before
-            // `aws s3 cp`): a billable request even when the object only
-            // exists as a declared size.
-            let input_key = crate::workloads::drivers::input_key(&parsed);
-            let _ = self.acct.s3.head(&input_bucket, &input_key);
-            let flow = self.acct.net.start(
-                now,
-                inst_id,
-                self.nic_gbps(inst_id),
-                &input_bucket,
-                Direction::Download,
-                input_bytes,
-            );
+            // Workflow consumers route by sharing mode: node-local pulls
+            // straight from the producer's machine, shared-fs from the
+            // filesystem link — both peer flows (no S3 requests, no
+            // egress) that skip the HeadObject probe, since there is no
+            // staged object to size.  S3 staging and every flat job take
+            // the legacy path below.
+            let flow = if let Some(link) = self.workflow_peer_link(&parsed) {
+                if let Some(wf) = self.workflow.as_mut() {
+                    wf.bytes_staged += input_bytes;
+                }
+                self.acct.net.start_peer(
+                    now,
+                    inst_id,
+                    self.nic_gbps(inst_id),
+                    &link,
+                    Direction::Download,
+                    input_bytes,
+                )
+            } else {
+                let input_bucket = parsed
+                    .get("input_bucket")
+                    .and_then(Value::as_str)
+                    .unwrap_or("ds-data")
+                    .to_string();
+                // Size the input first (HeadObject, like a worker does
+                // before `aws s3 cp`): a billable request even when the
+                // object only exists as a declared size.
+                let input_key = crate::workloads::drivers::input_key(&parsed);
+                let _ = self.acct.s3.head(&input_bucket, &input_key);
+                if let Some(wf) = self.workflow.as_mut() {
+                    if wf.node_of(&parsed).is_some() {
+                        wf.bytes_staged += input_bytes;
+                    }
+                }
+                self.acct.net.start(
+                    now,
+                    inst_id,
+                    self.nic_gbps(inst_id),
+                    &input_bucket,
+                    Direction::Download,
+                    input_bytes,
+                )
+            };
             self.park_flow(
                 flow,
                 Xfer::Download {
@@ -827,8 +1003,135 @@ impl Simulation {
                 self.log_job(now, &log, " [duplicate: visibility expired mid-job]");
             }
         }
+        // Commit the artifact (first completion wins; duplicates no-op)
+        // *before* the drain check, so children released in this instant
+        // keep the queue visibly non-empty.
+        self.workflow_commit(now, receipt);
         self.mark_drained_if_empty(now);
         self.events.schedule_in(0, Event::CoreWake { container, core });
+    }
+
+    // -- workflow scheduling ------------------------------------------------
+
+    /// For a workflow consumer in a peer sharing mode, the link its
+    /// input artifact flows over (`None` = legacy S3 staging path).
+    fn workflow_peer_link(&self, msg: &Value) -> Option<String> {
+        let wf = self.workflow.as_ref()?;
+        let i = wf.node_of(msg)?;
+        match self.opts.sharing {
+            SharingMode::S3Staging => None,
+            SharingMode::SharedFs => Some("fs:shared".into()),
+            // The artifact sits on the machine that produced it; name
+            // the link after the (lexicographically first) producer so
+            // each producer's NIC-side budget is its own.
+            SharingMode::NodeLocal => {
+                let producer = wf.nodes[i]
+                    .parents
+                    .iter()
+                    .map(|&p| wf.spec.jobs[p].name.as_str())
+                    .min()?;
+                Some(format!("node:{producer}"))
+            }
+        }
+    }
+
+    /// The sharing mode governing a finishing delivery's output: flat
+    /// jobs always stage through S3.
+    fn sharing_of(&self, receipt: ReceiptHandle) -> SharingMode {
+        match &self.workflow {
+            Some(wf) if wf.by_receipt.contains_key(&receipt) => self.opts.sharing,
+            _ => SharingMode::S3Staging,
+        }
+    }
+
+    /// Commit the artifact behind a finished delivery and release any
+    /// child whose last parent just landed.  The first commit wins;
+    /// later duplicates of the same node no-op.
+    fn workflow_commit(&mut self, now: SimTime, receipt: ReceiptHandle) {
+        let Some(wf) = self.workflow.as_mut() else {
+            return;
+        };
+        let Some(i) = wf.by_receipt.remove(&receipt) else {
+            return;
+        };
+        if wf.nodes[i].committed_at.is_some() {
+            return;
+        }
+        wf.nodes[i].committed_at = Some(now);
+        if wf.nodes[i].output_bytes > 0 && self.opts.sharing != SharingMode::NodeLocal {
+            // S3 staging and shared-fs park the artifact on the sharing
+            // medium; node-local leaves it where it was produced.
+            wf.bytes_staged += wf.nodes[i].output_bytes;
+        }
+        for c in wf.nodes[i].children.clone() {
+            wf.nodes[c].unmet -= 1;
+            if wf.nodes[c].unmet > 0 {
+                continue;
+            }
+            // Released: this commit was the last parent the child was
+            // waiting on.  Stall is measured from the child's
+            // first-committed parent — how long the artifact sat before
+            // the slowest sibling branch caught up.
+            let first_parent_commit = wf.nodes[c]
+                .parents
+                .iter()
+                .filter_map(|&p| wf.nodes[p].committed_at)
+                .min()
+                .unwrap_or(now);
+            let body = wf.message(c, &self.opts.data_bucket);
+            if self.acct.sqs.send(&self.cfg.sqs_queue_name, body, now).is_ok() {
+                self.jobs_submitted += 1;
+                // The queue is no longer drained (mirrors
+                // `on_submit_jobs`); the fleet replaces any machines
+                // that self-shut-down during the stage gap.
+                self.drained_at = None;
+            }
+            wf.nodes[c].released_at = Some(now);
+            wf.stall_ms += now.saturating_sub(first_parent_commit);
+            wf.releases += 1;
+            wf.pending_releases -= 1;
+        }
+    }
+
+    /// The per-run [`WorkflowBreakdown`]: topology counts from the spec,
+    /// scheduling counters from the run, one [`StageSpan`] per depth
+    /// that saw at least one release and one commit.
+    fn workflow_breakdown(&self) -> WorkflowBreakdown {
+        let Some(wf) = &self.workflow else {
+            return WorkflowBreakdown::default();
+        };
+        let max_depth = wf.nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+        let mut stages = Vec::new();
+        for d in 0..=max_depth {
+            let mut released: Option<SimTime> = None;
+            let mut committed: Option<SimTime> = None;
+            for n in wf.nodes.iter().filter(|n| n.depth == d) {
+                if let Some(r) = n.released_at {
+                    released = Some(released.map_or(r, |x: SimTime| x.min(r)));
+                }
+                if let Some(c) = n.committed_at {
+                    committed = Some(committed.map_or(c, |x: SimTime| x.max(c)));
+                }
+            }
+            if let (Some(released_ms), Some(committed_ms)) = (released, committed) {
+                stages.push(StageSpan {
+                    depth: d,
+                    released_ms,
+                    committed_ms,
+                });
+            }
+        }
+        WorkflowBreakdown {
+            workflow: wf.spec.name.clone(),
+            sharing: self.opts.sharing.name().to_string(),
+            nodes: wf.spec.node_count() as u64,
+            edges: wf.spec.edge_count() as u64,
+            critical_path_len: wf.spec.critical_path_len(),
+            releases: wf.releases,
+            artifact_bytes_staged: wf.bytes_staged,
+            stall_ms: wf.stall_ms,
+            stages,
+        }
     }
 
     /// Abort every flow on a dead or wedged machine.  Bytes already
@@ -901,16 +1204,30 @@ impl Simulation {
         if success {
             // Phase 3, if the job declares output bytes: the results
             // only land (and the message is only deleted) after the
-            // upload flow drains.
-            if output_bytes > 0 {
-                let flow = self.acct.net.start(
-                    now,
-                    inst_id,
-                    self.nic_gbps(inst_id),
-                    &bucket,
-                    Direction::Upload,
-                    output_bytes,
-                );
+            // upload flow drains.  Workflow producers route by sharing
+            // mode: node-local publishes in place (no flow at all — the
+            // consumer pays the transfer instead), shared-fs flows to
+            // the filesystem link, S3 staging takes the legacy upload.
+            let sharing = self.sharing_of(receipt);
+            if output_bytes > 0 && sharing != SharingMode::NodeLocal {
+                let flow = match sharing {
+                    SharingMode::SharedFs => self.acct.net.start_peer(
+                        now,
+                        inst_id,
+                        self.nic_gbps(inst_id),
+                        "fs:shared",
+                        Direction::Upload,
+                        output_bytes,
+                    ),
+                    _ => self.acct.net.start(
+                        now,
+                        inst_id,
+                        self.nic_gbps(inst_id),
+                        &bucket,
+                        Direction::Upload,
+                        output_bytes,
+                    ),
+                };
                 self.park_flow(
                     flow,
                     Xfer::Upload {
@@ -1007,10 +1324,11 @@ impl Simulation {
     }
 
     fn on_monitor_tick(&mut self, now: SimTime) {
+        let pending = self.workload_pending();
         let Some(mut mon) = self.monitor.take() else {
             return;
         };
-        let tick = mon.tick(&mut self.acct, &self.cfg, now, self.pending_submits > 0);
+        let tick = mon.tick(&mut self.acct, &self.cfg, now, pending);
         self.monitor = Some(mon);
         let done = tick.done;
         // A scale-out decision launches immediately into the fleet's
@@ -1099,6 +1417,7 @@ impl Simulation {
             pools,
             data,
             scaling,
+            workflow: self.workflow_breakdown(),
             jobs_submitted: self.jobs_submitted,
         }
     }
@@ -1109,7 +1428,9 @@ impl Simulation {
     }
 }
 
-/// Convenience wrapper: the full four-command flow with defaults.
+/// Convenience wrapper: the full four-command flow with defaults.  When
+/// the options carry a workflow, the DAG replaces `jobs` (only its
+/// roots are enqueued up front; the rest release as parents commit).
 pub fn run_full(
     cfg: &AppConfig,
     jobs: &JobSpec,
@@ -1118,7 +1439,11 @@ pub fn run_full(
     opts: RunOptions,
 ) -> Result<RunReport> {
     let mut sim = Simulation::new(cfg.clone(), opts)?;
-    sim.submit(jobs)?;
+    if sim.opts.workflow.is_some() {
+        sim.submit_workflow()?;
+    } else {
+        sim.submit(jobs)?;
+    }
     sim.start(fleet_file)?;
     sim.run(executor)
 }
@@ -1148,6 +1473,8 @@ mod tests {
         assert!(report.fully_accounted());
         assert!(report.drained_at.is_some());
         assert!(report.cost.total_usd() > 0.0);
+        // A flat run reports the flat workflow breakdown.
+        assert_eq!(report.workflow, crate::workflow::WorkflowBreakdown::default());
     }
 
     #[test]
@@ -1529,6 +1856,134 @@ mod tests {
         let b = run();
         assert_eq!(a, b);
         assert!(a.data.total_bytes() > 0);
+    }
+
+    fn workflow_opts(spec: WorkflowSpec, sharing: SharingMode) -> RunOptions {
+        RunOptions {
+            workflow: Some(spec),
+            sharing,
+            ..Default::default()
+        }
+    }
+
+    fn run_workflow(opts: RunOptions) -> RunReport {
+        let cfg = quick_cfg();
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut sim = Simulation::new(cfg, opts).unwrap();
+        sim.submit_workflow().unwrap();
+        sim.start(&fleet).unwrap();
+        let mut ex = modeled(60.0);
+        sim.run(&mut ex).unwrap()
+    }
+
+    #[test]
+    fn submit_workflow_requires_a_workflow() {
+        let mut sim = Simulation::new(quick_cfg(), RunOptions::default()).unwrap();
+        let err = sim.submit_workflow().unwrap_err();
+        assert!(err.to_string().contains("no workflow"), "{err}");
+    }
+
+    #[test]
+    fn diamond_workflow_releases_stages_in_dependency_order() {
+        let spec = crate::workloads::dag::diamond();
+        let report = run_workflow(workflow_opts(spec, SharingMode::S3Staging));
+        assert_eq!(report.stats.completed, 6, "{}", report.summary());
+        assert!(report.cleaned_up);
+        assert!(report.fully_accounted());
+        let wf = &report.workflow;
+        assert_eq!(wf.workflow, "diamond");
+        assert_eq!(wf.sharing, "s3");
+        assert_eq!((wf.nodes, wf.edges, wf.critical_path_len), (6, 8, 3));
+        // One root enqueued up front; everything else released by the
+        // scheduler as parent artifacts committed.
+        assert_eq!(wf.releases, 5);
+        assert_eq!(report.jobs_submitted, 6);
+        // Three stages, each released no earlier than the one above and
+        // committed no earlier than released.
+        assert_eq!(wf.stages.len(), 3, "{wf:?}");
+        for (d, s) in wf.stages.iter().enumerate() {
+            assert_eq!(s.depth as usize, d);
+            assert!(s.committed_ms >= s.released_ms, "{wf:?}");
+        }
+        for w in wf.stages.windows(2) {
+            assert!(w[1].released_ms >= w[0].released_ms, "{wf:?}");
+            // A child stage can only be released once its parent stage
+            // has fully committed.
+            assert!(w[1].released_ms >= w[0].committed_ms, "{wf:?}");
+        }
+        // The merge job waited on four randomly-timed branches: its
+        // first-committed parent sat for a while.
+        assert!(wf.stall_ms > 0, "{wf:?}");
+        // 256 MB root + 4x64 MB branches + 32 MB merge staged up, and
+        // every consumer pulled its inputs back down.
+        assert!(wf.artifact_bytes_staged >= 544_000_000, "{wf:?}");
+        // The summary surfaces the workflow line.
+        assert!(report.summary().contains("workflow(diamond/s3)"), "{}", report.summary());
+    }
+
+    #[test]
+    fn linear_pipeline_survives_drained_queue_between_stages() {
+        // The queue is empty after every stage (one job at a time); the
+        // monitor must treat that as a gap, not the end of the workload
+        // — this is what `workload_pending` generalizes beyond
+        // `submit_at`'s pending counter.
+        let spec = crate::workloads::dag::linear();
+        let report = run_workflow(workflow_opts(spec, SharingMode::S3Staging));
+        assert_eq!(report.stats.completed, 5, "{}", report.summary());
+        assert!(report.cleaned_up, "cleanup only after the last stage");
+        assert!(report.fully_accounted());
+        assert_eq!(report.workflow.releases, 4);
+        assert_eq!(report.workflow.stages.len(), 5);
+        // The final drain postdates the last stage's release.
+        let last = report.workflow.stages.last().unwrap();
+        assert!(report.drained_at.unwrap() >= last.released_ms);
+    }
+
+    #[test]
+    fn sharing_modes_route_artifact_bytes_differently() {
+        let run = |sharing| run_workflow(workflow_opts(crate::workloads::dag::diamond(), sharing));
+        let s3 = run(SharingMode::S3Staging);
+        let nl = run(SharingMode::NodeLocal);
+        let fs = run(SharingMode::SharedFs);
+        for r in [&s3, &nl, &fs] {
+            assert_eq!(r.stats.completed, 6, "{}", r.summary());
+            assert!(r.cleaned_up && r.fully_accounted());
+        }
+        // S3 staging pays real S3 traffic: egress dollars and upload
+        // flows through the bucket.
+        assert!(s3.cost.s3_egress_usd > 0.0, "{:?}", s3.cost);
+        assert!(s3.data.bytes_uploaded > 0, "{:?}", s3.data);
+        // Peer modes move the same artifacts without touching S3: no
+        // egress, and node-local producers never upload at all.
+        assert_eq!(nl.cost.s3_egress_usd, 0.0, "{:?}", nl.cost);
+        assert_eq!(fs.cost.s3_egress_usd, 0.0, "{:?}", fs.cost);
+        assert_eq!(nl.data.bytes_uploaded, 0, "{:?}", nl.data);
+        assert!(fs.data.bytes_uploaded > 0, "shared-fs still flows uploads");
+        // Node-local stages only the consumer-side transfers, so it
+        // moves strictly fewer artifact bytes than the staging modes.
+        assert!(
+            nl.workflow.artifact_bytes_staged < s3.workflow.artifact_bytes_staged,
+            "nl={} s3={}",
+            nl.workflow.artifact_bytes_staged,
+            s3.workflow.artifact_bytes_staged
+        );
+        // Downloads skip the HeadObject size probe on peer links.
+        assert!(nl.data.head_requests < s3.data.head_requests, "{:?}", nl.data);
+    }
+
+    #[test]
+    fn workflow_runs_replay_bit_identically() {
+        let run = || {
+            run_workflow(workflow_opts(
+                crate::workloads::dag::mosaic(),
+                SharingMode::NodeLocal,
+            ))
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(a.stats.completed, 20, "{}", a.summary());
+        assert_eq!(a.workflow.releases, 14); // 20 nodes - 6 roots
     }
 
     #[test]

@@ -54,7 +54,7 @@ use crate::aws::billing::CostReport;
 use crate::json::Value;
 use crate::metrics::{
     DataBreakdown, PoolBreakdown, RunReport, RunStats, ScalingBreakdown, ScalingDecision,
-    SweepReport,
+    StageSpan, SweepReport, WorkflowBreakdown,
 };
 use crate::scenario::SweepFile;
 use crate::sim::{QueueKind, SimTime, StoreKind};
@@ -67,7 +67,11 @@ pub use super::sweep::SweepPlan;
 /// the field sets (the golden snapshots in `tests/golden/` pin them);
 /// both the worker and the parent reject mismatched envelopes with a
 /// typed error instead of guessing.
-pub const WIRE_VERSION: u64 = 1;
+///
+/// v2: the result envelope's per-cell reports grew the `workflow`
+/// object (DAG breakdown, DESIGN.md §11) and the embedded Sweep file
+/// learned the WORKFLOW/SHARING axes.
+pub const WIRE_VERSION: u64 = 2;
 
 const REQUEST_KIND: &str = "sweep-shard-request";
 const RESULT_KIND: &str = "shard-result";
@@ -313,6 +317,30 @@ pub fn report_to_wire(r: &RunReport) -> Value {
                     .collect(),
             ),
         );
+    let w = &r.workflow;
+    let workflow = Value::obj()
+        .with("workflow", w.workflow.as_str())
+        .with("sharing", w.sharing.as_str())
+        .with("nodes", w.nodes)
+        .with("edges", w.edges)
+        .with("critical_path_len", w.critical_path_len)
+        .with("releases", w.releases)
+        .with("artifact_bytes_staged", w.artifact_bytes_staged)
+        .with("stall_ms", w.stall_ms)
+        .with(
+            "stages",
+            Value::Arr(
+                w.stages
+                    .iter()
+                    .map(|st| {
+                        Value::obj()
+                            .with("depth", st.depth)
+                            .with("released_ms", st.released_ms)
+                            .with("committed_ms", st.committed_ms)
+                    })
+                    .collect(),
+            ),
+        );
     Value::obj()
         .with("stats", stats)
         .with("drained_at_ms", opt_ms_json(r.drained_at))
@@ -337,6 +365,7 @@ pub fn report_to_wire(r: &RunReport) -> Value {
         )
         .with("data", data)
         .with("scaling", scaling)
+        .with("workflow", workflow)
         .with("jobs_submitted", r.jobs_submitted)
 }
 
@@ -420,6 +449,28 @@ pub fn report_from_wire(v: &Value) -> Result<RunReport> {
         capacity_unit_hours: f64_field(scv, "capacity_unit_hours")?,
         timeline,
     };
+    let wv = field(v, "workflow")?;
+    let stages = arr_field(wv, "stages")?
+        .iter()
+        .map(|st| {
+            Ok(StageSpan {
+                depth: u32_field(st, "depth")?,
+                released_ms: u64_field(st, "released_ms")?,
+                committed_ms: u64_field(st, "committed_ms")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let workflow = WorkflowBreakdown {
+        workflow: str_field(wv, "workflow")?.to_string(),
+        sharing: str_field(wv, "sharing")?.to_string(),
+        nodes: u64_field(wv, "nodes")?,
+        edges: u64_field(wv, "edges")?,
+        critical_path_len: u64_field(wv, "critical_path_len")?,
+        releases: u64_field(wv, "releases")?,
+        artifact_bytes_staged: u64_field(wv, "artifact_bytes_staged")?,
+        stall_ms: u64_field(wv, "stall_ms")?,
+        stages,
+    };
     Ok(RunReport {
         stats,
         drained_at: opt_ms_field(v, "drained_at_ms")?,
@@ -429,6 +480,7 @@ pub fn report_from_wire(v: &Value) -> Result<RunReport> {
         pools,
         data,
         scaling,
+        workflow,
         jobs_submitted: u64_field(v, "jobs_submitted")?,
     })
 }

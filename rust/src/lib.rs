@@ -36,4 +36,5 @@ pub mod scenario;
 pub mod sim;
 pub mod testutil;
 pub mod worker;
+pub mod workflow;
 pub mod workloads;

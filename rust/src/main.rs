@@ -18,14 +18,16 @@
 //!                 --instance-types m5.large+c5.xlarge:2,m5.xlarge \
 //!                 --input-mb 0,64,256 --net-profile standard,narrow \
 //!                 --scaling none,target-tracking,step --scaling-target 2,4 \
+//!                 --workflow none,diamond,mosaic --sharing s3,node-local,shared-fs \
 //!                 [--on-demand-base N] [--threads N] [--json] \
 //!                 [--shards N] [--shard-exec process|inproc] \
 //!                 [--shard-timeout-s S] [--shard-retries N]
 //! ds describe     --config files/config.json [--fleet files/fleet.json]
-//!                 [--job files/job.json]
+//!                 [--job files/job.json] [--workflow W]
 //!                 # validate + print + the per-type container packing
-//!                 # of the machines the run will actually use, and the
-//!                 # Job file's data footprint (GB in/out)
+//!                 # of the machines the run will actually use, the
+//!                 # Job file's data footprint (GB in/out), and the
+//!                 # workflow DAG's stage structure
 //! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
 //! ```
 //!
@@ -215,6 +217,35 @@ fn describe(args: &Args) -> Result<()> {
             input as f64 / n / 1e6,
             output as f64 / n / 1e6,
         );
+    }
+    // With --workflow, validate and summarize the DAG the run would
+    // schedule (canonical shape name or Workflow file).  Cycles and
+    // unknown job references surface here as typed errors, before any
+    // run burns fleet time on a workload that can never finish.
+    if let Some(w) = args.get("workflow") {
+        let spec = ds_rs::workflow::WorkflowSpec::resolve(w)
+            .with_context(|| format!("describing workflow '{w}'"))?;
+        let depths = spec.depths();
+        println!(
+            "\nworkflow '{}': {} nodes, {} edges, critical path {} stage(s), \
+             {} root(s), fingerprint {:016x}",
+            spec.name,
+            spec.jobs.len(),
+            spec.edges.len(),
+            spec.critical_path_len(),
+            depths.iter().filter(|&&d| d == 0).count(),
+            spec.fingerprint(),
+        );
+        for d in 0..=depths.iter().copied().max().unwrap_or(0) {
+            let stage: Vec<&str> = spec
+                .jobs
+                .iter()
+                .zip(&depths)
+                .filter(|(_, dd)| **dd == d)
+                .map(|(j, _)| j.name.as_str())
+                .collect();
+            println!("  stage {d}: {}", stage.join(", "));
+        }
     }
     println!(
         "\nderived: task_family={} service={} instance_log_group={}",
@@ -582,6 +613,18 @@ fn sweep(args: &Args) -> Result<()> {
             plan.matrix.cell_count(),
             plan.jobs.groups.len(),
         );
+        // Workflow cells get one structural line each — the DAG is the
+        // only axis whose value is a whole graph, so the one-word
+        // describe_matrix entry undersells what will actually run.
+        for spec in plan.matrix.workflows.iter().flatten() {
+            println!(
+                "  workflow {}: {} nodes, {} edges, critical path {} stage(s)",
+                spec.name,
+                spec.jobs.len(),
+                spec.edges.len(),
+                spec.critical_path_len(),
+            );
+        }
         return Ok(());
     }
 

@@ -28,7 +28,7 @@ use crate::json::Value;
 use crate::sim::clock::fmt_dur;
 use crate::sim::SimTime;
 
-use super::{DataBreakdown, PoolBreakdown, RunReport, ScalingBreakdown, Table};
+use super::{DataBreakdown, PoolBreakdown, RunReport, ScalingBreakdown, Table, WorkflowBreakdown};
 
 /// Distribution summary over a sample of f64s.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -132,6 +132,12 @@ pub struct ScenarioSummary {
     /// max/min over cells.  The per-decision timeline is per-run
     /// evidence, not an aggregate, so it stays empty here.
     pub scaling: ScalingBreakdown,
+    /// Workflow activity merged across all cells: releases, artifact
+    /// bytes, and stall time summed; the shape/sharing identity and the
+    /// topology counts come from the first report (every cell of a
+    /// scenario runs the same DAG).  Per-stage spans are per-run
+    /// evidence, like the scaling timeline, so they stay empty here.
+    pub workflow: WorkflowBreakdown,
 }
 
 impl ScenarioSummary {
@@ -221,6 +227,24 @@ impl ScenarioSummary {
             };
             scaling.capacity_unit_hours += r.scaling.capacity_unit_hours;
         }
+        // Merge the workflow slices the same way: identity + topology
+        // from the first report, activity counters summed, stages
+        // dropped (per-run only).
+        let mut workflow = reports
+            .first()
+            .map(|r| WorkflowBreakdown {
+                stages: Vec::new(),
+                releases: 0,
+                artifact_bytes_staged: 0,
+                stall_ms: 0,
+                ..r.workflow.clone()
+            })
+            .unwrap_or_default();
+        for r in reports {
+            workflow.releases += r.workflow.releases;
+            workflow.artifact_bytes_staged += r.workflow.artifact_bytes_staged;
+            workflow.stall_ms += r.workflow.stall_ms;
+        }
         Self {
             label: label.to_string(),
             axes: Value::obj(),
@@ -242,6 +266,7 @@ impl ScenarioSummary {
             pools: pool_map.into_values().collect(),
             data,
             scaling,
+            workflow,
         }
     }
 
@@ -288,6 +313,7 @@ impl ScenarioSummary {
             )
             .with("data", data_to_json(&self.data))
             .with("scaling", scaling_to_json(&self.scaling, false))
+            .with("workflow", workflow_to_json(&self.workflow, false))
     }
 }
 
@@ -347,6 +373,38 @@ pub(crate) fn scaling_to_json(s: &ScalingBreakdown, timeline: bool) -> Value {
                             .with("from", d.from)
                             .with("to", d.to)
                             .with("backlog", d.backlog)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    v
+}
+
+/// JSON shape of a [`WorkflowBreakdown`].  The per-stage `stages` rows
+/// ride along only in single-run reports (`ds run --json`); cross-seed
+/// summaries carry counters alone, like the scaling timeline.
+pub(crate) fn workflow_to_json(w: &WorkflowBreakdown, stages: bool) -> Value {
+    let mut v = Value::obj()
+        .with("workflow", w.workflow.as_str())
+        .with("sharing", w.sharing.as_str())
+        .with("nodes", w.nodes)
+        .with("edges", w.edges)
+        .with("critical_path_len", w.critical_path_len)
+        .with("releases", w.releases)
+        .with("artifact_bytes_staged", w.artifact_bytes_staged)
+        .with("stall_ms", w.stall_ms);
+    if stages {
+        v = v.with(
+            "stages",
+            Value::Arr(
+                w.stages
+                    .iter()
+                    .map(|s| {
+                        Value::obj()
+                            .with("depth", s.depth)
+                            .with("released_s", s.released_ms as f64 / 1000.0)
+                            .with("committed_s", s.committed_ms as f64 / 1000.0)
                     })
                     .collect(),
             ),
@@ -513,6 +571,21 @@ mod tests {
                 capacity_unit_hours: 2.5,
                 ..Default::default()
             },
+            workflow: WorkflowBreakdown {
+                workflow: "diamond".into(),
+                sharing: "s3".into(),
+                nodes: 6,
+                edges: 8,
+                critical_path_len: 3,
+                releases: 5,
+                artifact_bytes_staged: 1_000,
+                stall_ms: 40,
+                stages: vec![crate::workflow::StageSpan {
+                    depth: 0,
+                    released_ms: 0,
+                    committed_ms: 100,
+                }],
+            },
             jobs_submitted: completed + 2,
         }
     }
@@ -592,6 +665,29 @@ mod tests {
         assert_eq!(sc.get("policy").and_then(Value::as_str), Some("target-tracking"));
         assert_eq!(sc.get("decisions").and_then(Value::as_u64), Some(4));
         assert!(sc.get("timeline").is_none());
+    }
+
+    #[test]
+    fn summary_merges_workflow_counters() {
+        let r1 = report(10, Some(HOUR), 0.5);
+        let mut r2 = report(20, Some(2 * HOUR), 1.5);
+        r2.workflow.releases = 7;
+        r2.workflow.stall_ms = 60;
+        let s = ScenarioSummary::from_reports("s", &[&r1, &r2]);
+        assert_eq!(s.workflow.workflow, "diamond");
+        assert_eq!(s.workflow.sharing, "s3");
+        assert_eq!(s.workflow.nodes, 6, "topology comes from the first cell");
+        assert_eq!(s.workflow.critical_path_len, 3);
+        assert_eq!(s.workflow.releases, 12, "activity counters sum");
+        assert_eq!(s.workflow.artifact_bytes_staged, 2_000);
+        assert_eq!(s.workflow.stall_ms, 100);
+        assert!(s.workflow.stages.is_empty(), "stages are per-run only");
+        // The summary JSON carries the counters but no stage rows.
+        let j = s.to_json();
+        let w = j.get("workflow").unwrap();
+        assert_eq!(w.get("workflow").and_then(Value::as_str), Some("diamond"));
+        assert_eq!(w.get("releases").and_then(Value::as_u64), Some(12));
+        assert!(w.get("stages").is_none());
     }
 
     #[test]

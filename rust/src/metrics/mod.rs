@@ -6,6 +6,7 @@ pub use aggregate::{Aggregate, ScenarioSummary, SweepReport};
 pub use crate::aws::billing::DataBreakdown;
 pub use crate::aws::ec2::PoolBreakdown;
 pub use crate::coordinator::autoscale::{ScalingBreakdown, ScalingDecision};
+pub use crate::workflow::{StageSpan, WorkflowBreakdown};
 
 use crate::aws::billing::CostReport;
 use crate::json::Value;
@@ -67,7 +68,13 @@ pub struct RunReport {
     /// released, time-at-capacity).  `policy == "none"` — the default —
     /// is the paper's fixed fleet.
     pub scaling: ScalingBreakdown,
-    /// Jobs submitted (initial submission plus any scheduled bursts).
+    /// The DAG slice: what the readiness scheduler did (workflow shape,
+    /// sharing mode, critical path, dependent-job releases, artifact
+    /// bytes staged, stall time, per-stage spans).  `workflow == "none"`
+    /// — the default — is the paper's flat bag of independent jobs.
+    pub workflow: WorkflowBreakdown,
+    /// Jobs submitted (initial submission plus any scheduled bursts and
+    /// dependent jobs released by the workflow scheduler).
     pub jobs_submitted: u64,
 }
 
@@ -171,6 +178,19 @@ impl RunReport {
                 self.scaling.capacity_unit_hours,
             ));
         }
+        if self.workflow.workflow != "none" {
+            s.push_str(&format!(
+                "workflow({}/{}): {} nodes, {} edges, critical path {}; {} releases, {:.2} GB staged, {} stalled on parents\n",
+                self.workflow.workflow,
+                self.workflow.sharing,
+                self.workflow.nodes,
+                self.workflow.edges,
+                self.workflow.critical_path_len,
+                self.workflow.releases,
+                self.workflow.artifact_bytes_staged as f64 / 1e9,
+                fmt_dur(self.workflow.stall_ms),
+            ));
+        }
         if self.data.total_bytes() > 0 {
             s.push_str(&format!(
                 "data: {:.2} GB down, {:.2} GB up ({:.2} GB wasted); bottleneck {:.0}% bucket / {:.0}% NIC; requests ${:.4}, egress ${:.4}\n",
@@ -238,6 +258,7 @@ impl RunReport {
             )
             .with("data", aggregate::data_to_json(&self.data))
             .with("scaling", aggregate::scaling_to_json(&self.scaling, true))
+            .with("workflow", aggregate::workflow_to_json(&self.workflow, true))
     }
 }
 
@@ -306,6 +327,7 @@ mod tests {
             pools: vec![],
             data: DataBreakdown::default(),
             scaling: ScalingBreakdown::default(),
+            workflow: WorkflowBreakdown::default(),
             jobs_submitted: 100,
         }
     }
@@ -338,6 +360,22 @@ mod tests {
         let s = data_run.summary();
         assert!(s.contains("3.00 GB down"), "{s}");
         assert!(s.contains("90% bucket"), "{s}");
+    }
+
+    #[test]
+    fn summary_shows_workflow_line_only_for_dag_runs() {
+        let flat = report();
+        assert!(!flat.summary().contains("workflow("));
+        let mut dag = report();
+        dag.workflow.workflow = "diamond".into();
+        dag.workflow.sharing = "node-local".into();
+        dag.workflow.nodes = 6;
+        dag.workflow.edges = 8;
+        dag.workflow.critical_path_len = 3;
+        dag.workflow.releases = 5;
+        let s = dag.summary();
+        assert!(s.contains("workflow(diamond/node-local)"), "{s}");
+        assert!(s.contains("critical path 3"), "{s}");
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! fragment, and JSON identity — so adding an axis is one impl plus one
 //! entry in [`AXES`].  The registry order is the **label order**
 //! (machines, visibility, volatility, duration, allocation, instance
-//! set, input MB, net profile, scaling, scaling target), chosen so registry-assembled labels are
+//! set, input MB, net profile, scaling, scaling target, workflow,
+//! sharing), chosen so registry-assembled labels are
 //! byte-identical to the historical hand-formatted ones; the cartesian
 //! *expansion* order lives in
 //! [`ScenarioMatrix::scenarios`](super::ScenarioMatrix::scenarios).
@@ -24,6 +25,7 @@ use crate::coordinator::autoscale::{ScalingMode, DEFAULT_TARGET_PER_UNIT};
 use crate::cli::Args;
 use crate::json::Value;
 use crate::sim::clock::{fmt_dur, from_secs_f64};
+use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
 use super::{volatility_name, CellInputs, Scenario, ScenarioMatrix};
@@ -90,6 +92,8 @@ pub static AXES: &[&dyn Axis] = &[
     &NetProfileAxis,
     &ScalingAxis,
     &ScalingTargetAxis,
+    &WorkflowAxis,
+    &SharingAxis,
 ];
 
 // ---------------------------------------------------------------------------
@@ -974,6 +978,153 @@ impl Axis for ScalingTargetAxis {
     }
 }
 
+/// DAG workflow replacing the flat job list — `--workflow` /
+/// `WORKFLOW`.  CLI items are canonical shape names
+/// ([`crate::workloads::dag::SHAPES`]), Workflow-file paths, or `none`
+/// (flat submission).  Sweep files additionally accept inline workflow
+/// objects, and [`Axis::render_file`] always inlines the full spec so a
+/// rendered plan stays hermetic (shard workers never chase file paths).
+pub struct WorkflowAxis;
+
+/// Parse one CLI/file workflow item: `none` for flat submission, else a
+/// shape name or Workflow-file path resolved by [`WorkflowSpec::resolve`].
+fn parse_workflow(s: &str) -> Result<Option<WorkflowSpec>> {
+    if s == "none" {
+        return Ok(None);
+    }
+    WorkflowSpec::resolve(s).map(Some).map_err(|e| anyhow!(e))
+}
+
+impl Axis for WorkflowAxis {
+    fn key(&self) -> &'static str {
+        "WORKFLOW"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "workflow",
+            value: "W,W,..",
+            help: "DAG workflow axis: none|diamond|fanout|linear|mosaic or a Workflow-file path",
+            file_key: Some("WORKFLOW"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.workflows.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(
+            m.workflows
+                .iter()
+                .map(|w| w.as_ref().map_or("none", |s| s.name.as_str())),
+        )
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "workflow")? {
+            m.workflows = items
+                .iter()
+                .map(|s| parse_workflow(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "WORKFLOW")? {
+            m.workflows = items
+                .iter()
+                .map(|v| match v {
+                    Value::Obj(_) => WorkflowSpec::from_json(v).map(Some).map_err(|e| anyhow!(e)),
+                    _ => item_str(v, "WORKFLOW").and_then(parse_workflow),
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "WORKFLOW",
+            Value::Arr(
+                m.workflows
+                    .iter()
+                    .map(|w| w.as_ref().map_or(Value::from("none"), |s| s.to_json()))
+                    .collect(),
+            ),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.workflow = sc.workflow.clone();
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        // Flat-submission cells stay unlabeled (only-label-when-used).
+        sc.workflow.as_ref().map(|w| format!("wf={}", w.name))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        sc.workflow.as_ref().map(|w| Value::from(w.name.as_str()))
+    }
+}
+
+/// Artifact sharing mode for workflow cells — `--sharing` / `SHARING`:
+/// where intermediate artifacts live and what moving them costs
+/// (S3 staging, producer-node pull, or a shared filesystem).  Labeled
+/// (and serialized into scenario JSON) only when it departs from the
+/// default S3 staging.
+pub struct SharingAxis;
+
+fn parse_sharing(s: &str) -> Result<SharingMode> {
+    SharingMode::parse(s).ok_or_else(|| anyhow!("sharing must be s3|node-local|shared-fs, got {s}"))
+}
+
+impl Axis for SharingAxis {
+    fn key(&self) -> &'static str {
+        "SHARING"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "sharing",
+            value: "S,S,..",
+            help: "workflow artifact sharing axis: s3|node-local|shared-fs",
+            file_key: Some("SHARING"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.sharings.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.sharings.iter().map(|s| s.name()))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "sharing")? {
+            m.sharings = items
+                .iter()
+                .map(|s| parse_sharing(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "SHARING")? {
+            m.sharings = items
+                .iter()
+                .map(|v| item_str(v, "SHARING").and_then(parse_sharing))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "SHARING",
+            Value::Arr(m.sharings.iter().map(|s| Value::from(s.name())).collect()),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.sharing = sc.sharing;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        (sc.sharing != SharingMode::S3Staging).then(|| format!("share={}", sc.sharing.name()))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.sharing != SharingMode::S3Staging).then(|| Value::from(sc.sharing.name()))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The flag tables (generated surfaces)
 // ---------------------------------------------------------------------------
@@ -1351,6 +1502,8 @@ mod tests {
                 stall_prob: 0.01,
                 fail_prob: 0.02,
             }],
+            workflows: vec![None, Some(crate::workloads::dag::diamond())],
+            sharings: vec![SharingMode::S3Staging, SharingMode::NodeLocal],
         };
         let mut file = Value::obj();
         for (k, v) in render_matrix_entries(&m) {
@@ -1473,6 +1626,104 @@ mod tests {
         let sc = m.scenarios().remove(0);
         let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
         assert!(cell.opts.scaling.is_none());
+    }
+
+    #[test]
+    fn workflow_axis_parses_shapes_and_labels_when_used() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --workflow none,diamond --sharing s3,node-local");
+        WorkflowAxis.parse_cli(&args, &mut m).unwrap();
+        SharingAxis.parse_cli(&args, &mut m).unwrap();
+        assert_eq!(m.workflows.len(), 2);
+        assert!(m.workflows[0].is_none());
+        assert_eq!(m.workflows[1].as_ref().unwrap().name, "diamond");
+        assert_eq!(
+            m.sharings,
+            vec![SharingMode::S3Staging, SharingMode::NodeLocal]
+        );
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 4);
+        // Flat cells and default-sharing cells stay unlabeled; engaged
+        // cells carry both fragments and both JSON keys.
+        assert!(WorkflowAxis.label(&scs[0]).is_none());
+        assert!(SharingAxis.label(&scs[0]).is_none());
+        assert_eq!(
+            SharingAxis.label(&scs[1]).as_deref(),
+            Some("share=node-local")
+        );
+        assert_eq!(WorkflowAxis.label(&scs[2]).as_deref(), Some("wf=diamond"));
+        assert_eq!(
+            WorkflowAxis
+                .json_value(&scs[3])
+                .and_then(|v| v.as_str().map(String::from))
+                .as_deref(),
+            Some("diamond")
+        );
+        assert_eq!(
+            SharingAxis
+                .json_value(&scs[3])
+                .and_then(|v| v.as_str().map(String::from))
+                .as_deref(),
+            Some("node-local")
+        );
+        // Bad values are rejected, not defaulted.
+        let args = parse("sweep --workflow no-such-shape");
+        assert!(WorkflowAxis.parse_cli(&args, &mut m).is_err());
+        let args = parse("sweep --sharing nfs");
+        let err = SharingAxis.parse_cli(&args, &mut m).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("s3|node-local|shared-fs"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn workflow_file_accepts_inline_objects_and_rejects_bad_specs() {
+        let mut m = ScenarioMatrix::default();
+        let inline = crate::workloads::dag::linear().to_json().pretty();
+        let file =
+            crate::json::parse(&format!(r#"{{"WORKFLOW": ["none", {inline}]}}"#)).unwrap();
+        WorkflowAxis.parse_file(&file, &mut m).unwrap();
+        assert_eq!(m.workflows.len(), 2);
+        assert_eq!(
+            format!("{:?}", m.workflows[1].as_ref().unwrap()),
+            format!("{:?}", crate::workloads::dag::linear())
+        );
+        // A cyclic inline spec surfaces the typed validation error.
+        let file = crate::json::parse(
+            r#"{"WORKFLOW": [{"NAME": "loop",
+                "JOBS": [{"NAME": "a", "OUTPUT_BYTES": 1}, {"NAME": "b", "OUTPUT_BYTES": 1}],
+                "EDGES": [{"FROM": "a", "TO": "b", "ARTIFACT": "x"},
+                          {"FROM": "b", "TO": "a", "ARTIFACT": "y"}]}]}"#,
+        )
+        .unwrap();
+        let err = WorkflowAxis.parse_file(&file, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("cycle"), "{err:#}");
+    }
+
+    #[test]
+    fn workflow_overlay_reaches_run_options() {
+        use crate::config::{AppConfig, FleetSpec};
+        use crate::coordinator::run::RunOptions;
+        let m = ScenarioMatrix {
+            workflows: vec![Some(crate::workloads::dag::fan_out_in())],
+            sharings: vec![SharingMode::SharedFs],
+            ..Default::default()
+        };
+        let sc = m.scenarios().remove(0);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert_eq!(cell.opts.workflow.as_ref().unwrap().name, "fanout");
+        assert_eq!(cell.opts.sharing, SharingMode::SharedFs);
+        // `ds run` shares the axes (opts-owned, not file-owned).
+        let cell = sc.run_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.workflow.is_some());
+        // Flat scenarios leave the options untouched.
+        let m = ScenarioMatrix::default();
+        let sc = m.scenarios().remove(0);
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.workflow.is_none());
+        assert_eq!(cell.opts.sharing, SharingMode::S3Staging);
     }
 
     #[test]

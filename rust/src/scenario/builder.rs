@@ -36,6 +36,7 @@ use crate::coordinator::autoscale::ScalingMode;
 use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::coordinator::run::RunOptions;
 use crate::sim::SimTime;
+use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
 use super::{ScenarioMatrix, SweepPlan};
@@ -59,6 +60,8 @@ pub struct SweepPlanBuilder {
     scalings: Option<Vec<ScalingMode>>,
     scaling_targets: Option<Vec<f64>>,
     models: Option<Vec<DurationModel>>,
+    workflows: Option<Vec<Option<WorkflowSpec>>>,
+    sharings: Option<Vec<SharingMode>>,
 }
 
 impl SweepPlanBuilder {
@@ -174,6 +177,23 @@ impl SweepPlanBuilder {
         }))
     }
 
+    /// DAG-workflow axis; `None` entries keep flat submission (default:
+    /// `[None]`).
+    pub fn workflows(
+        mut self,
+        workflows: impl IntoIterator<Item = Option<WorkflowSpec>>,
+    ) -> Self {
+        self.workflows = Some(workflows.into_iter().collect());
+        self
+    }
+
+    /// Artifact sharing-mode axis for workflow cells (default: S3
+    /// staging).
+    pub fn sharings(mut self, sharings: impl IntoIterator<Item = SharingMode>) -> Self {
+        self.sharings = Some(sharings.into_iter().collect());
+        self
+    }
+
     /// Assemble the plan.  Errors on missing jobs or any explicitly
     /// empty axis (an empty axis would silently erase the whole matrix).
     pub fn build(self) -> Result<SweepPlan> {
@@ -205,6 +225,8 @@ impl SweepPlanBuilder {
         set_axis!(scalings, scalings);
         set_axis!(scaling_targets, scaling_targets);
         set_axis!(models, models);
+        set_axis!(workflows, workflows);
+        set_axis!(sharings, sharings);
         Ok(SweepPlan {
             base_cfg: cfg,
             jobs,

@@ -5,7 +5,8 @@
 //! human-readable files; this module keeps the *experiment* surface
 //! honest the same way.  Every sweep axis — machines, visibility,
 //! volatility, duration model, allocation strategy, instance set, input
-//! MB, net profile, scaling policy, scaling target — is one [`Axis`]
+//! MB, net profile, scaling policy, scaling target, workflow, sharing
+//! mode — is one [`Axis`]
 //! implementation declaring its CLI
 //! flag(s), its Sweep-file key, its per-cell config/fleet/job overlay,
 //! its label fragment, and its JSON identity.  The registry ([`AXES`])
@@ -55,6 +56,7 @@ use crate::coordinator::autoscale::ScalingMode;
 use crate::coordinator::run::RunOptions;
 use crate::json::Value;
 use crate::sim::{SimTime, MINUTE};
+use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
 /// Stable display name for a volatility level.
@@ -96,6 +98,12 @@ pub struct Scenario {
     /// the scaling policy; ignored when `scaling` is `None`.
     pub scaling_target: f64,
     pub model: DurationModel,
+    /// DAG workflow replacing the flat job list; `None` = flat
+    /// submission of the plan's Job file.
+    pub workflow: Option<WorkflowSpec>,
+    /// Where workflow artifacts live ([`SharingMode::S3Staging`] is the
+    /// paper's bucket-staging baseline); ignored for flat cells.
+    pub sharing: SharingMode,
 }
 
 impl Scenario {
@@ -218,6 +226,10 @@ pub struct ScenarioMatrix {
     /// (`--scaling-target`).
     pub scaling_targets: Vec<f64>,
     pub models: Vec<DurationModel>,
+    /// DAG workflows (`--workflow`); `None` = flat submission.
+    pub workflows: Vec<Option<WorkflowSpec>>,
+    /// Artifact sharing modes (`--sharing`).
+    pub sharings: Vec<SharingMode>,
 }
 
 impl Default for ScenarioMatrix {
@@ -234,6 +246,8 @@ impl Default for ScenarioMatrix {
             scalings: vec![ScalingMode::None],
             scaling_targets: vec![crate::coordinator::autoscale::DEFAULT_TARGET_PER_UNIT],
             models: vec![DurationModel::default()],
+            workflows: vec![None],
+            sharings: vec![SharingMode::S3Staging],
         }
     }
 }
@@ -252,8 +266,8 @@ impl ScenarioMatrix {
 
     /// Expand the cartesian product in a fixed order: machines outermost,
     /// then visibility, volatility, allocation strategy, instance set,
-    /// input MB, net profile, scaling mode, scaling target, and
-    /// innermost the duration model.  Axis
+    /// input MB, net profile, scaling mode, scaling target, duration
+    /// model, workflow, and innermost the sharing mode.  Axis
     /// element order is preserved, so single-axis sweeps read like the
     /// input list.  (This expansion order is pinned by historical
     /// reports; the registry's order is the *label* order, which differs
@@ -269,7 +283,9 @@ impl ScenarioMatrix {
                 * self.net_profiles.len()
                 * self.scalings.len()
                 * self.scaling_targets.len()
-                * self.models.len(),
+                * self.models.len()
+                * self.workflows.len()
+                * self.sharings.len(),
         );
         for &machines in &self.cluster_machines {
             for &visibility in &self.visibilities {
@@ -281,18 +297,24 @@ impl ScenarioMatrix {
                                     for &scaling in &self.scalings {
                                         for &scaling_target in &self.scaling_targets {
                                             for model in &self.models {
-                                                out.push(Scenario {
-                                                    volatility,
-                                                    visibility,
-                                                    machines,
-                                                    allocation,
-                                                    instance_set: instance_set.clone(),
-                                                    input_mb,
-                                                    net: net.clone(),
-                                                    scaling,
-                                                    scaling_target,
-                                                    model: model.clone(),
-                                                });
+                                                for workflow in &self.workflows {
+                                                    for &sharing in &self.sharings {
+                                                        out.push(Scenario {
+                                                            volatility,
+                                                            visibility,
+                                                            machines,
+                                                            allocation,
+                                                            instance_set: instance_set.clone(),
+                                                            input_mb,
+                                                            net: net.clone(),
+                                                            scaling,
+                                                            scaling_target,
+                                                            model: model.clone(),
+                                                            workflow: workflow.clone(),
+                                                            sharing,
+                                                        });
+                                                    }
+                                                }
                                             }
                                         }
                                     }
@@ -375,6 +397,8 @@ mod tests {
                 mean_s: 120.0,
                 ..Default::default()
             },
+            workflow: None,
+            sharing: SharingMode::S3Staging,
         };
         assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
         sc.input_mb = 64.0;
@@ -382,6 +406,15 @@ mod tests {
         assert_eq!(
             sc.label(),
             "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow"
+        );
+        // Workflow and sharing fragments trail the registry (and stay
+        // out of flat labels entirely — asserted above).
+        sc.workflow = Some(crate::workloads::dag::diamond());
+        sc.sharing = SharingMode::NodeLocal;
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow \
+             wf=diamond share=node-local"
         );
     }
 

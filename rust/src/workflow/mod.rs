@@ -1,0 +1,816 @@
+//! DAG workflows: typed specs, topological validation, and data-sharing
+//! modes (DESIGN.md §11).
+//!
+//! The paper's workloads are embarrassingly parallel — every SQS message
+//! is independent.  Real scientific pipelines (Montage mosaics, the
+//! CellProfiler → Fiji → OME-Zarr chain the paper targets) are DAGs
+//! whose edges are *data*: a job may only start once every parent's
+//! artifact has been committed to the sharing medium.  This module is
+//! the typed half of that story:
+//!
+//! * [`WorkflowSpec`] — jobs plus directed dependency edges with named
+//!   intermediate artifacts.  Construction validates eagerly: duplicate
+//!   job names, dangling edge endpoints, self-loops, duplicate edges,
+//!   and dependency cycles are all typed [`WorkflowError`]s, never
+//!   panics.  Specs parse from a WORKFLOW JSON file ([`WorkflowSpec::parse`],
+//!   strict about unknown keys like the Sweep file), render back
+//!   bit-identically ([`WorkflowSpec::render`]), and build in code via
+//!   [`WorkflowSpec::builder`].
+//! * Topology queries — canonical Kahn order ([`WorkflowSpec::topo_order`],
+//!   lexicographic job-name tie-break, so it is a pure function of the
+//!   spec), per-node depths, critical-path length, and a topological
+//!   [`fingerprint`](WorkflowSpec::fingerprint) that labels a workflow's
+//!   *shape* independently of declaration order.
+//! * [`SharingMode`] — where artifact bytes move and what they cost:
+//!   S3 staging (upload + download through the data bucket, full request
+//!   and egress billing), node-local with transfer (producers keep
+//!   artifacts on their node; consumers pull peer-to-peer, no S3
+//!   dollars), or a shared-filesystem profile (all artifact traffic
+//!   contends on one FS server link, no S3 dollars).
+//! * [`WorkflowBreakdown`] — the workflow slice of a run report
+//!   (critical path, per-stage spans, artifact bytes staged, stall time
+//!   waiting on parents), threaded RunReport → ScenarioSummary → sweep
+//!   JSON exactly like the pool/data/scaling breakdowns.
+//!
+//! The readiness scheduler that consumes all of this lives in
+//! [`crate::coordinator::run`]; the canonical shape generators (diamond,
+//! fan-out/fan-in, Montage-shaped mosaic, linear pipeline) live in
+//! [`crate::workloads::dag`].
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+use crate::json::{parse, Value};
+use crate::sim::SimTime;
+
+/// Why a workflow spec was rejected.  Every variant names the workflow
+/// and the offending element, so `ds describe`/`ds sweep --dry-run` can
+/// surface the problem without a panic.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum WorkflowError {
+    #[error("workflow spec: {0}")]
+    Parse(String),
+    #[error("workflow '{workflow}': no jobs declared")]
+    Empty { workflow: String },
+    #[error("workflow '{workflow}': duplicate job name '{job}'")]
+    DuplicateJob { workflow: String, job: String },
+    #[error("workflow '{workflow}': edge '{artifact}' references unknown job '{job}'")]
+    UnknownJob {
+        workflow: String,
+        artifact: String,
+        job: String,
+    },
+    #[error("workflow '{workflow}': edge '{artifact}' is a self-loop on '{job}'")]
+    SelfLoop {
+        workflow: String,
+        artifact: String,
+        job: String,
+    },
+    #[error("workflow '{workflow}': duplicate edge '{from}' -> '{to}'")]
+    DuplicateEdge {
+        workflow: String,
+        from: String,
+        to: String,
+    },
+    #[error("workflow '{workflow}': dependency cycle through {jobs:?}")]
+    Cycle { workflow: String, jobs: Vec<String> },
+    #[error(
+        "unknown workflow '{0}' (expected a shape name — diamond, fanout, mosaic, linear — or a readable WORKFLOW file path)"
+    )]
+    Unknown(String),
+}
+
+fn parse_err(msg: impl Into<String>) -> WorkflowError {
+    WorkflowError::Parse(msg.into())
+}
+
+/// One node of the DAG: a named job producing `output_bytes` of
+/// artifact data for its children.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkflowJob {
+    pub name: String,
+    /// Bytes of intermediate artifact this job writes to the sharing
+    /// medium (0 = control-only dependency).
+    pub output_bytes: u64,
+}
+
+/// One directed dependency edge: `to` may not start before `from`'s
+/// artifact has committed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkflowEdge {
+    pub from: String,
+    pub to: String,
+    /// Name of the intermediate artifact the edge carries.
+    pub artifact: String,
+}
+
+/// A validated DAG workflow.  Invariants (enforced by every
+/// constructor): at least one job, unique job names, every edge endpoint
+/// declared, no self-loops, no duplicate edges, no cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkflowSpec {
+    pub name: String,
+    /// Jobs in declaration order (parse/render round-trips preserve it).
+    pub jobs: Vec<WorkflowJob>,
+    /// Edges in declaration order.
+    pub edges: Vec<WorkflowEdge>,
+}
+
+impl WorkflowSpec {
+    /// Build and validate.  The single gate every front door (file,
+    /// JSON, builder, generators) funnels through.
+    pub fn new(
+        name: &str,
+        jobs: Vec<WorkflowJob>,
+        edges: Vec<WorkflowEdge>,
+    ) -> Result<Self, WorkflowError> {
+        let spec = Self {
+            name: name.to_string(),
+            jobs,
+            edges,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Start an in-code spec.
+    pub fn builder(name: &str) -> WorkflowBuilder {
+        WorkflowBuilder {
+            name: name.to_string(),
+            jobs: Vec::new(),
+            edges: Vec::new(),
+        }
+    }
+
+    fn validate(&self) -> Result<(), WorkflowError> {
+        let wf = || self.name.clone();
+        if self.jobs.is_empty() {
+            return Err(WorkflowError::Empty { workflow: wf() });
+        }
+        let mut index: BTreeMap<&str, usize> = BTreeMap::new();
+        for (i, j) in self.jobs.iter().enumerate() {
+            if index.insert(j.name.as_str(), i).is_some() {
+                return Err(WorkflowError::DuplicateJob {
+                    workflow: wf(),
+                    job: j.name.clone(),
+                });
+            }
+        }
+        let mut seen: BTreeMap<(usize, usize), ()> = BTreeMap::new();
+        for e in &self.edges {
+            let missing = [&e.from, &e.to]
+                .into_iter()
+                .find(|j| !index.contains_key(j.as_str()));
+            if let Some(job) = missing {
+                return Err(WorkflowError::UnknownJob {
+                    workflow: wf(),
+                    artifact: e.artifact.clone(),
+                    job: job.clone(),
+                });
+            }
+            if e.from == e.to {
+                return Err(WorkflowError::SelfLoop {
+                    workflow: wf(),
+                    artifact: e.artifact.clone(),
+                    job: e.from.clone(),
+                });
+            }
+            let key = (index[e.from.as_str()], index[e.to.as_str()]);
+            if seen.insert(key, ()).is_some() {
+                return Err(WorkflowError::DuplicateEdge {
+                    workflow: wf(),
+                    from: e.from.clone(),
+                    to: e.to.clone(),
+                });
+            }
+        }
+        // Kahn's algorithm: whatever the canonical order cannot reach is
+        // on (or downstream of) a cycle.
+        let order = self.topo_order();
+        if order.len() < self.jobs.len() {
+            let mut reached = vec![false; self.jobs.len()];
+            for &i in &order {
+                reached[i] = true;
+            }
+            let mut jobs: Vec<String> = self
+                .jobs
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| !reached[i])
+                .map(|(_, j)| j.name.clone())
+                .collect();
+            jobs.sort();
+            return Err(WorkflowError::Cycle {
+                workflow: wf(),
+                jobs,
+            });
+        }
+        Ok(())
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Job index by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.jobs.iter().position(|j| j.name == name)
+    }
+
+    /// Parent job indices per job index (edge declaration order).
+    pub fn parents(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.jobs.len()];
+        for e in &self.edges {
+            if let (Some(f), Some(t)) = (self.index_of(&e.from), self.index_of(&e.to)) {
+                out[t].push(f);
+            }
+        }
+        out
+    }
+
+    /// Child job indices per job index (edge declaration order).
+    pub fn children(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.jobs.len()];
+        for e in &self.edges {
+            if let (Some(f), Some(t)) = (self.index_of(&e.from), self.index_of(&e.to)) {
+                out[f].push(t);
+            }
+        }
+        out
+    }
+
+    /// Canonical topological order: Kahn's algorithm, always popping the
+    /// lexicographically smallest ready job name — a pure function of
+    /// the spec, shared by the fingerprint and the property tests.  On a
+    /// cyclic graph (only reachable pre-validation) the order is
+    /// truncated to the acyclic prefix.
+    pub fn topo_order(&self) -> Vec<usize> {
+        let parents = self.parents();
+        let children = self.children();
+        let mut unmet: Vec<usize> = parents.iter().map(Vec::len).collect();
+        let mut ready: BTreeMap<&str, usize> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| unmet[i] == 0)
+            .map(|(i, j)| (j.name.as_str(), i))
+            .collect();
+        let mut order = Vec::with_capacity(self.jobs.len());
+        while let Some((&name, &i)) = ready.iter().next() {
+            ready.remove(name);
+            order.push(i);
+            for &c in &children[i] {
+                unmet[c] -= 1;
+                if unmet[c] == 0 {
+                    ready.insert(self.jobs[c].name.as_str(), c);
+                }
+            }
+        }
+        order
+    }
+
+    /// Longest-path depth per job: roots are 0, every other job is one
+    /// past its deepest parent.
+    pub fn depths(&self) -> Vec<u32> {
+        let parents = self.parents();
+        let mut depth = vec![0u32; self.jobs.len()];
+        for &i in &self.topo_order() {
+            depth[i] = parents[i]
+                .iter()
+                .map(|&p| depth[p] + 1)
+                .max()
+                .unwrap_or(0);
+        }
+        depth
+    }
+
+    /// Jobs on the longest dependency chain (depth stages): the lower
+    /// bound on sequential stages no amount of machines removes.
+    pub fn critical_path_len(&self) -> u64 {
+        self.depths().iter().map(|&d| u64::from(d) + 1).max().unwrap_or(0)
+    }
+
+    /// Bytes job `i` must pull before it can start: the sum of its
+    /// parents' declared `output_bytes`.
+    pub fn input_bytes(&self, i: usize) -> u64 {
+        self.parents()[i]
+            .iter()
+            .map(|&p| self.jobs[p].output_bytes)
+            .sum()
+    }
+
+    /// Deterministic 64-bit fingerprint of the workflow's *topology*:
+    /// FNV-1a over the canonical Kahn order (names, bytes, sorted parent
+    /// names).  Two declarations of the same DAG — jobs or edges listed
+    /// in any order — fingerprint identically.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+            h ^= 0xff;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        eat(self.name.as_bytes());
+        let parents = self.parents();
+        for &i in &self.topo_order() {
+            let j = &self.jobs[i];
+            eat(j.name.as_bytes());
+            eat(&j.output_bytes.to_le_bytes());
+            let mut ps: Vec<&str> = parents[i].iter().map(|&p| self.jobs[p].name.as_str()).collect();
+            ps.sort_unstable();
+            for p in ps {
+                eat(p.as_bytes());
+            }
+        }
+        h
+    }
+
+    /// The WORKFLOW file as JSON (NAME / JOBS / EDGES, declaration order
+    /// preserved) — [`parse`](Self::parse) inverts it bit-identically.
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("NAME", self.name.as_str())
+            .with(
+                "JOBS",
+                Value::Arr(
+                    self.jobs
+                        .iter()
+                        .map(|j| {
+                            Value::obj()
+                                .with("name", j.name.as_str())
+                                .with("output_bytes", j.output_bytes)
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "EDGES",
+                Value::Arr(
+                    self.edges
+                        .iter()
+                        .map(|e| {
+                            Value::obj()
+                                .with("from", e.from.as_str())
+                                .with("to", e.to.as_str())
+                                .with("artifact", e.artifact.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Decode (and validate) a WORKFLOW JSON value.  Strict like the
+    /// Sweep file: unknown keys are rejected, not ignored.
+    pub fn from_json(v: &Value) -> Result<Self, WorkflowError> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| parse_err("expected a WORKFLOW object"))?;
+        let mut name = None;
+        let mut jobs = None;
+        let mut edges = None;
+        for (k, val) in fields {
+            match k.as_str() {
+                "NAME" => {
+                    name = Some(
+                        val.as_str()
+                            .ok_or_else(|| parse_err("NAME must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "JOBS" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| parse_err("JOBS must be an array"))?;
+                    jobs = Some(
+                        arr.iter()
+                            .map(Self::job_from_json)
+                            .collect::<Result<Vec<_>, _>>()?,
+                    );
+                }
+                "EDGES" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| parse_err("EDGES must be an array"))?;
+                    edges = Some(
+                        arr.iter()
+                            .map(Self::edge_from_json)
+                            .collect::<Result<Vec<_>, _>>()?,
+                    );
+                }
+                other => return Err(parse_err(format!("unknown WORKFLOW key '{other}'"))),
+            }
+        }
+        let name = name.ok_or_else(|| parse_err("missing NAME"))?;
+        let jobs = jobs.ok_or_else(|| parse_err("missing JOBS"))?;
+        let edges = edges.unwrap_or_default();
+        Self::new(&name, jobs, edges)
+    }
+
+    fn job_from_json(v: &Value) -> Result<WorkflowJob, WorkflowError> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| parse_err("each JOBS entry must be an object"))?;
+        let mut name = None;
+        let mut output_bytes = 0u64;
+        for (k, val) in fields {
+            match k.as_str() {
+                "name" => {
+                    name = Some(
+                        val.as_str()
+                            .ok_or_else(|| parse_err("job name must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "output_bytes" => {
+                    output_bytes = val
+                        .as_u64()
+                        .ok_or_else(|| parse_err("output_bytes must be an unsigned integer"))?;
+                }
+                other => return Err(parse_err(format!("unknown job key '{other}'"))),
+            }
+        }
+        Ok(WorkflowJob {
+            name: name.ok_or_else(|| parse_err("job missing 'name'"))?,
+            output_bytes,
+        })
+    }
+
+    fn edge_from_json(v: &Value) -> Result<WorkflowEdge, WorkflowError> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| parse_err("each EDGES entry must be an object"))?;
+        let mut from = None;
+        let mut to = None;
+        let mut artifact = None;
+        for (k, val) in fields {
+            let s = val
+                .as_str()
+                .ok_or_else(|| parse_err(format!("edge key '{k}' must be a string")))?
+                .to_string();
+            match k.as_str() {
+                "from" => from = Some(s),
+                "to" => to = Some(s),
+                "artifact" => artifact = Some(s),
+                other => return Err(parse_err(format!("unknown edge key '{other}'"))),
+            }
+        }
+        Ok(WorkflowEdge {
+            from: from.ok_or_else(|| parse_err("edge missing 'from'"))?,
+            to: to.ok_or_else(|| parse_err("edge missing 'to'"))?,
+            artifact: artifact.ok_or_else(|| parse_err("edge missing 'artifact'"))?,
+        })
+    }
+
+    /// Parse (and validate) a WORKFLOW file's text.
+    pub fn parse(text: &str) -> Result<Self, WorkflowError> {
+        let v = parse(text).map_err(|e| parse_err(format!("invalid JSON: {e}")))?;
+        Self::from_json(&v)
+    }
+
+    /// Render the WORKFLOW file text; `parse(render())` is bit-identical
+    /// (pinned by the round-trip tests).
+    pub fn render(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// Resolve a `--workflow` value: a canonical shape name
+    /// ([`crate::workloads::dag`]) first, else a WORKFLOW file path.
+    pub fn resolve(value: &str) -> Result<Self, WorkflowError> {
+        if let Some(spec) = crate::workloads::dag::shape(value) {
+            return Ok(spec);
+        }
+        match std::fs::read_to_string(value) {
+            Ok(text) => Self::parse(&text),
+            Err(_) => Err(WorkflowError::Unknown(value.to_string())),
+        }
+    }
+}
+
+/// In-code spec construction; `build` runs the same validation as the
+/// file parser.
+///
+/// ```
+/// use ds_rs::workflow::WorkflowSpec;
+///
+/// let wf = WorkflowSpec::builder("two-step")
+///     .job("extract", 1_000_000)
+///     .job("report", 0)
+///     .edge("extract", "report", "features")
+///     .build()
+///     .unwrap();
+/// assert_eq!(wf.critical_path_len(), 2);
+/// ```
+#[derive(Debug, Clone)]
+pub struct WorkflowBuilder {
+    name: String,
+    jobs: Vec<WorkflowJob>,
+    edges: Vec<WorkflowEdge>,
+}
+
+impl WorkflowBuilder {
+    /// Declare a job producing `output_bytes` of artifact data.
+    pub fn job(mut self, name: &str, output_bytes: u64) -> Self {
+        self.jobs.push(WorkflowJob {
+            name: name.to_string(),
+            output_bytes,
+        });
+        self
+    }
+
+    /// Declare a dependency: `to` waits for `from`'s `artifact`.
+    pub fn edge(mut self, from: &str, to: &str, artifact: &str) -> Self {
+        self.edges.push(WorkflowEdge {
+            from: from.to_string(),
+            to: to.to_string(),
+            artifact: artifact.to_string(),
+        });
+        self
+    }
+
+    pub fn build(self) -> Result<WorkflowSpec, WorkflowError> {
+        WorkflowSpec::new(&self.name, self.jobs, self.edges)
+    }
+}
+
+/// Where intermediate artifacts live between producer and consumer —
+/// the Juve et al. data-sharing axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SharingMode {
+    /// Producers upload artifacts to the S3 data bucket, consumers
+    /// download them: full request + egress billing, bucket-throughput
+    /// contention.  The neutral default — non-workflow runs are
+    /// unaffected by it.
+    #[default]
+    S3Staging,
+    /// Artifacts stay on the producing node; consumers pull
+    /// peer-to-peer, contending on the producer's serving link.  No S3
+    /// requests, no egress dollars.
+    NodeLocal,
+    /// All artifact traffic goes through one shared-filesystem server
+    /// link (uploads and downloads both contend on it).  No S3 dollars.
+    SharedFs,
+}
+
+impl SharingMode {
+    pub const ALL: [SharingMode; 3] = [Self::S3Staging, Self::NodeLocal, Self::SharedFs];
+
+    /// Stable name (also the sweep-axis label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::S3Staging => "s3",
+            Self::NodeLocal => "node-local",
+            Self::SharedFs => "shared-fs",
+        }
+    }
+
+    /// Parse a mode name (the `--sharing` axis).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|m| m.name() == s)
+    }
+}
+
+/// One depth stage's observed span: when its first job became
+/// SQS-visible and when its last artifact committed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpan {
+    /// Longest-path depth of the jobs in this stage (0 = roots).
+    pub depth: u32,
+    /// Earliest release (SQS visibility) among the stage's jobs, ms.
+    pub released_ms: SimTime,
+    /// Latest artifact commit among the stage's jobs, ms.
+    pub committed_ms: SimTime,
+}
+
+/// The workflow slice of a run report, the DAG analog of
+/// `Pool`/`Data`/`ScalingBreakdown`.  `workflow == "none"` — the
+/// default — is the paper's flat bag of independent jobs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkflowBreakdown {
+    /// Workflow name ("none" when the run had no DAG).
+    pub workflow: String,
+    /// Sharing-mode name the artifacts moved under.
+    pub sharing: String,
+    pub nodes: u64,
+    pub edges: u64,
+    /// Jobs on the longest dependency chain.
+    pub critical_path_len: u64,
+    /// Dependent jobs released by the readiness scheduler (roots are
+    /// submitted up front and not counted).
+    pub releases: u64,
+    /// Artifact bytes moved through the sharing medium (producer
+    /// uploads where the mode stages them, plus consumer downloads;
+    /// duplicate attempts re-stage and count again).
+    pub artifact_bytes_staged: u64,
+    /// Total time released jobs spent waiting on their slowest parent,
+    /// measured from each job's first-committed parent artifact.
+    pub stall_ms: u64,
+    /// Per-depth-stage spans (per-run evidence, like the scaling
+    /// timeline; dropped in cross-seed summaries).
+    pub stages: Vec<StageSpan>,
+}
+
+impl Default for WorkflowBreakdown {
+    fn default() -> Self {
+        Self {
+            workflow: "none".to_string(),
+            sharing: SharingMode::S3Staging.name().to_string(),
+            nodes: 0,
+            edges: 0,
+            critical_path_len: 0,
+            releases: 0,
+            artifact_bytes_staged: 0,
+            stall_ms: 0,
+            stages: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> WorkflowSpec {
+        WorkflowSpec::builder("d")
+            .job("split", 100)
+            .job("a", 10)
+            .job("b", 20)
+            .job("merge", 1)
+            .edge("split", "a", "tiles")
+            .edge("split", "b", "tiles")
+            .edge("a", "merge", "part-a")
+            .edge("b", "merge", "part-b")
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_and_topology() {
+        let wf = diamond();
+        assert_eq!(wf.node_count(), 4);
+        assert_eq!(wf.edge_count(), 4);
+        assert_eq!(wf.critical_path_len(), 3);
+        assert_eq!(wf.depths(), vec![0, 1, 1, 2]);
+        // Canonical Kahn: split first, then a before b, merge last.
+        assert_eq!(wf.topo_order(), vec![0, 1, 2, 3]);
+        // merge pulls both branch artifacts.
+        assert_eq!(wf.input_bytes(wf.index_of("merge").unwrap()), 30);
+        assert_eq!(wf.input_bytes(0), 0);
+    }
+
+    #[test]
+    fn cycle_is_a_typed_error() {
+        let err = WorkflowSpec::builder("c")
+            .job("a", 0)
+            .job("b", 0)
+            .edge("a", "b", "x")
+            .edge("b", "a", "y")
+            .build()
+            .unwrap_err();
+        match err {
+            WorkflowError::Cycle { workflow, jobs } => {
+                assert_eq!(workflow, "c");
+                assert_eq!(jobs, vec!["a".to_string(), "b".to_string()]);
+            }
+            other => panic!("expected Cycle, got {other}"),
+        }
+    }
+
+    #[test]
+    fn dangling_edge_names_the_unknown_job() {
+        let err = WorkflowSpec::builder("d")
+            .job("a", 0)
+            .edge("a", "ghost", "x")
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            WorkflowError::UnknownJob {
+                workflow: "d".into(),
+                artifact: "x".into(),
+                job: "ghost".into(),
+            }
+        );
+    }
+
+    #[test]
+    fn duplicate_names_self_loops_and_empty_are_rejected() {
+        assert!(matches!(
+            WorkflowSpec::builder("w").job("a", 0).job("a", 0).build(),
+            Err(WorkflowError::DuplicateJob { .. })
+        ));
+        assert!(matches!(
+            WorkflowSpec::builder("w").job("a", 0).edge("a", "a", "x").build(),
+            Err(WorkflowError::SelfLoop { .. })
+        ));
+        assert!(matches!(
+            WorkflowSpec::builder("w").build(),
+            Err(WorkflowError::Empty { .. })
+        ));
+        assert!(matches!(
+            WorkflowSpec::builder("w")
+                .job("a", 0)
+                .job("b", 0)
+                .edge("a", "b", "x")
+                .edge("a", "b", "y")
+                .build(),
+            Err(WorkflowError::DuplicateEdge { .. })
+        ));
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_bit_identical() {
+        let wf = diamond();
+        let text = wf.render();
+        let back = WorkflowSpec::parse(&text).unwrap();
+        assert_eq!(back, wf);
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_shapes() {
+        assert!(matches!(
+            WorkflowSpec::parse(r#"{"NAME": "w", "JOBS": [], "EXTRA": 1}"#),
+            Err(WorkflowError::Parse(_))
+        ));
+        assert!(matches!(
+            WorkflowSpec::parse(r#"{"NAME": "w", "JOBS": [{"name": "a", "color": "red"}]}"#),
+            Err(WorkflowError::Parse(_))
+        ));
+        assert!(matches!(
+            WorkflowSpec::parse(r#"{"JOBS": [{"name": "a"}]}"#),
+            Err(WorkflowError::Parse(_))
+        ));
+        // Empty JOBS parses as JSON but fails validation.
+        assert!(matches!(
+            WorkflowSpec::parse(r#"{"NAME": "w", "JOBS": []}"#),
+            Err(WorkflowError::Empty { .. })
+        ));
+    }
+
+    #[test]
+    fn fingerprint_is_declaration_order_independent() {
+        let a = diamond();
+        let b = WorkflowSpec::builder("d")
+            .job("merge", 1)
+            .job("b", 20)
+            .job("a", 10)
+            .job("split", 100)
+            .edge("b", "merge", "part-b")
+            .edge("a", "merge", "part-a")
+            .edge("split", "b", "tiles")
+            .edge("split", "a", "tiles")
+            .build()
+            .unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // ...but a different topology fingerprints differently.
+        let c = WorkflowSpec::builder("d")
+            .job("split", 100)
+            .job("a", 10)
+            .job("b", 20)
+            .job("merge", 1)
+            .edge("split", "a", "tiles")
+            .edge("split", "b", "tiles")
+            .edge("a", "merge", "part-a")
+            .build()
+            .unwrap();
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn sharing_mode_parse_round_trip() {
+        for m in SharingMode::ALL {
+            assert_eq!(SharingMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SharingMode::parse("carrier-pigeon"), None);
+        assert_eq!(SharingMode::default(), SharingMode::S3Staging);
+    }
+
+    #[test]
+    fn breakdown_default_is_the_flat_run() {
+        let b = WorkflowBreakdown::default();
+        assert_eq!(b.workflow, "none");
+        assert_eq!(b.sharing, "s3");
+        assert_eq!(b.nodes, 0);
+        assert!(b.stages.is_empty());
+    }
+
+    #[test]
+    fn resolve_finds_shapes_and_rejects_nonsense() {
+        let wf = WorkflowSpec::resolve("diamond").unwrap();
+        assert_eq!(wf.name, "diamond");
+        assert!(matches!(
+            WorkflowSpec::resolve("no-such-workflow"),
+            Err(WorkflowError::Unknown(_))
+        ));
+    }
+}

@@ -1,0 +1,169 @@
+//! Canonical DAG workflow shapes for the readiness scheduler and the
+//! T15 data-sharing study (DESIGN.md §11).
+//!
+//! Each generator returns a concrete, validated [`WorkflowSpec`] with
+//! declared artifact sizes, so a rendered sweep plan embedding one is
+//! hermetic — a shard worker in another process rebuilds the identical
+//! DAG from the name alone via [`shape`].  Sizes are chosen to make the
+//! sharing-mode axis *bite* on the standard net profile (10 Gbit/s
+//! bucket, 1.25 Gbit/s NICs): artifacts are tens to hundreds of MB, so
+//! staging them takes seconds to minutes, comparable to job runtimes.
+
+use crate::workflow::WorkflowSpec;
+
+const MB: u64 = 1_000_000;
+
+/// Shape names accepted by [`shape`] (and therefore by `--workflow`).
+pub const SHAPES: [&str; 4] = ["diamond", "fanout", "linear", "mosaic"];
+
+/// Look up a canonical shape by name.
+pub fn shape(name: &str) -> Option<WorkflowSpec> {
+    match name {
+        "diamond" => Some(diamond()),
+        "fanout" => Some(fan_out_in()),
+        "linear" => Some(linear()),
+        "mosaic" => Some(mosaic()),
+        _ => None,
+    }
+}
+
+/// Split → four parallel branches → merge (6 nodes, 8 edges, critical
+/// path 3).  The smallest shape where readiness and artifact fan-in
+/// both matter.
+pub fn diamond() -> WorkflowSpec {
+    let mut b = WorkflowSpec::builder("diamond").job("split", 256 * MB);
+    for branch in ["branch-a", "branch-b", "branch-c", "branch-d"] {
+        b = b
+            .job(branch, 64 * MB)
+            .edge("split", branch, "tiles");
+    }
+    b = b.job("merge", 32 * MB);
+    for branch in ["branch-a", "branch-b", "branch-c", "branch-d"] {
+        b = b.edge(branch, "merge", "partial");
+    }
+    b.build().expect("diamond shape is valid by construction")
+}
+
+/// One source fanning out to eight workers that fan back into a sink
+/// (10 nodes, 16 edges, critical path 3).  Stresses one producer
+/// serving many consumers — the shape where node-local sharing contends
+/// hardest on the producer's link.
+pub fn fan_out_in() -> WorkflowSpec {
+    let mut b = WorkflowSpec::builder("fanout").job("source", 512 * MB);
+    let workers: Vec<String> = (1..=8).map(|i| format!("worker-{i}")).collect();
+    for w in &workers {
+        b = b.job(w, 32 * MB).edge("source", w, "shard");
+    }
+    b = b.job("sink", 16 * MB);
+    for w in &workers {
+        b = b.edge(w, "sink", "result");
+    }
+    b.build().expect("fanout shape is valid by construction")
+}
+
+/// Five-stage linear pipeline (5 nodes, 4 edges, critical path 5): the
+/// pure serial case — sharing mode changes cost, never parallelism.
+pub fn linear() -> WorkflowSpec {
+    let mut b = WorkflowSpec::builder("linear");
+    for i in 1..=5 {
+        b = b.job(&format!("stage-{i}"), 128 * MB);
+        if i > 1 {
+            b = b.edge(
+                &format!("stage-{}", i - 1),
+                &format!("stage-{i}"),
+                "frames",
+            );
+        }
+    }
+    b.build().expect("linear shape is valid by construction")
+}
+
+/// Montage-shaped mosaic (Berriman et al., PAPERS.md): 6 projections,
+/// pairwise difference fits, one background model, per-tile background
+/// correction, co-addition, shrink.  20 nodes, 34 edges, critical path
+/// 6 — the realistic mixed shape with both wide and narrow stages.
+pub fn mosaic() -> WorkflowSpec {
+    let mut b = WorkflowSpec::builder("mosaic");
+    for i in 1..=6 {
+        b = b.job(&format!("project-{i}"), 96 * MB);
+    }
+    for i in 1..=5 {
+        let diff = format!("diff-{i}");
+        b = b
+            .job(&diff, 8 * MB)
+            .edge(&format!("project-{i}"), &diff, "reprojected")
+            .edge(&format!("project-{}", i + 1), &diff, "reprojected");
+    }
+    b = b.job("fit", MB);
+    for i in 1..=5 {
+        b = b.edge(&format!("diff-{i}"), "fit", "fit-plane");
+    }
+    for i in 1..=6 {
+        let bg = format!("background-{i}");
+        b = b
+            .job(&bg, 96 * MB)
+            .edge("fit", &bg, "corrections")
+            .edge(&format!("project-{i}"), &bg, "reprojected");
+    }
+    b = b.job("add", 256 * MB);
+    for i in 1..=6 {
+        b = b.edge(&format!("background-{i}"), "add", "corrected");
+    }
+    b = b.job("shrink", 16 * MB).edge("add", "shrink", "mosaic");
+    b.build().expect("mosaic shape is valid by construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_shape_resolves_and_validates() {
+        for name in SHAPES {
+            let wf = shape(name).unwrap_or_else(|| panic!("shape {name} missing"));
+            assert_eq!(wf.name, name);
+            assert!(wf.node_count() > 0);
+            // Validated at build: topo order covers every node.
+            assert_eq!(wf.topo_order().len(), wf.node_count());
+        }
+        assert!(shape("moebius").is_none());
+    }
+
+    #[test]
+    fn shape_topology_counts_are_pinned() {
+        // (name, nodes, edges, critical path) — the describe/dry-run
+        // surface prints exactly these numbers.
+        let want = [
+            ("diamond", 6, 8, 3),
+            ("fanout", 10, 16, 3),
+            ("linear", 5, 4, 5),
+            ("mosaic", 20, 34, 6),
+        ];
+        for (name, nodes, edges, cp) in want {
+            let wf = shape(name).unwrap();
+            assert_eq!(wf.node_count(), nodes, "{name} nodes");
+            assert_eq!(wf.edge_count(), edges, "{name} edges");
+            assert_eq!(wf.critical_path_len(), cp, "{name} critical path");
+        }
+    }
+
+    #[test]
+    fn shapes_render_parse_round_trip() {
+        for name in SHAPES {
+            let wf = shape(name).unwrap();
+            let back = WorkflowSpec::parse(&wf.render()).unwrap();
+            assert_eq!(back, wf, "{name} round trip");
+            assert_eq!(back.fingerprint(), wf.fingerprint());
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_distinct_across_shapes() {
+        let prints: Vec<u64> = SHAPES.iter().map(|n| shape(n).unwrap().fingerprint()).collect();
+        for i in 0..prints.len() {
+            for j in (i + 1)..prints.len() {
+                assert_ne!(prints[i], prints[j], "{} vs {}", SHAPES[i], SHAPES[j]);
+            }
+        }
+    }
+}

@@ -9,7 +9,10 @@
 //!   experiments that simulate thousands of jobs without running PJRT.
 //! * [`zarr`]     — minimal chunked, multiscale store layout (the
 //!   Distributed-OmeZarrCreator output format).
+//! * [`dag`]      — canonical DAG workflow shapes (diamond, fan-out/fan-in,
+//!   Montage-shaped mosaic, linear pipeline) for the workflow scheduler.
 
+pub mod dag;
 pub mod drivers;
 pub mod duration;
 pub mod synth;

@@ -387,3 +387,125 @@ fn engine_backends_bit_identical_on_scaling_and_data_axes_sweep() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// DAG workflow gates (DESIGN.md §11).
+//
+// The readiness scheduler adds a second wave of SQS sends *during* the
+// run (children released as parents commit), so it gets the same wall
+// the flat path earned: thread-count invariance, engine A/B equivalence,
+// and declaration-order independence.
+
+/// A workflow sweep over shape × sharing mode is bit-identical at 1/2/8
+/// worker threads under every `{queue} × {store}` engine combination —
+/// the mid-run release sends must not introduce any ordering the seed
+/// does not fully determine.
+#[test]
+fn workflow_sweep_identical_across_threads_and_engines() {
+    use ds_rs::workflow::SharingMode;
+    use ds_rs::workloads::dag;
+    let mk = |engine: EngineOptions| {
+        let mut plan = SweepPlan::builder()
+            .config(cfg())
+            // Workflow cells ignore the Job file: the DAG is the workload.
+            .jobs(plate_jobs(2, 1))
+            .seeds(0..2)
+            .workflows([Some(dag::diamond()), Some(dag::mosaic())])
+            .sharings(SharingMode::ALL)
+            .models([DurationModel {
+                mean_s: 40.0,
+                cv: 0.3,
+                ..Default::default()
+            }])
+            .build()
+            .unwrap();
+        plan.base_opts.engine = engine;
+        plan
+    };
+    let reference = run_sweep(&mk(all_engines()[0]), 2).unwrap();
+    // Sanity: 2 shapes x 3 sharing modes, every cell ran its whole DAG
+    // and the workflow breakdown made it into the aggregates.
+    assert_eq!(reference.report.scenarios.len(), 6);
+    for s in &reference.report.scenarios {
+        assert!(s.workflow.nodes > 0, "no workflow identity in '{}'", s.label);
+        assert!(s.workflow.releases > 0, "no releases in '{}'", s.label);
+        assert_eq!(s.completed, s.workflow.nodes * 2, "{}", s.label);
+    }
+    for engine in all_engines() {
+        for threads in [1, 2, 8] {
+            let run = run_sweep(&mk(engine), threads).unwrap();
+            assert_eq!(reference.report, run.report, "{engine:?} @ {threads} threads");
+            assert_eq!(reference.cells, run.cells, "{engine:?} @ {threads} threads");
+            // Byte-level: the exported sweep JSON is identical too.
+            assert_eq!(
+                reference.report.to_json().to_string(),
+                run.report.to_json().to_string(),
+                "{engine:?} @ {threads} threads"
+            );
+        }
+    }
+}
+
+/// Scheduling is a function of the DAG, not of how it was written down:
+/// permuting the job and edge declaration lists changes neither the
+/// fingerprint nor — with a constant-duration executor, so sampling
+/// order carries no noise — a single byte of the run report.  Every
+/// canonical shape keeps same-depth peers byte-symmetric precisely so
+/// this holds under core contention.
+#[test]
+fn topological_declaration_order_does_not_change_report_bytes() {
+    use ds_rs::workflow::WorkflowSpec;
+    use ds_rs::workloads::dag;
+
+    fn permuted(spec: &WorkflowSpec, rot: usize, rev: bool) -> WorkflowSpec {
+        let mut jobs = spec.jobs.clone();
+        let mut edges = spec.edges.clone();
+        jobs.rotate_left(rot % jobs.len());
+        if !edges.is_empty() {
+            edges.rotate_left((rot * 3) % edges.len());
+        }
+        if rev {
+            jobs.reverse();
+            edges.reverse();
+        }
+        WorkflowSpec::new(&spec.name, jobs, edges).expect("permutations stay valid")
+    }
+
+    let run_spec = |spec: WorkflowSpec| {
+        let mut ex = shaped(60.0, 0.0, 0.0, 0.0); // constant durations
+        let opts = RunOptions {
+            seed: 5,
+            workflow: Some(spec),
+            ..Default::default()
+        };
+        run_full(&cfg(), &plate_jobs(2, 1), &fleet(), &mut ex, opts).unwrap()
+    };
+
+    for shape in [dag::diamond(), dag::fan_out_in(), dag::linear(), dag::mosaic()] {
+        let reference = run_spec(shape.clone());
+        assert_eq!(
+            reference.stats.completed,
+            shape.jobs.len() as u64,
+            "{} did not complete",
+            shape.name
+        );
+        for (rot, rev) in [(1, false), (2, true), (0, true)] {
+            let p = permuted(&shape, rot, rev);
+            assert_eq!(
+                p.fingerprint(),
+                shape.fingerprint(),
+                "{} rot={rot} rev={rev} fingerprint",
+                shape.name
+            );
+            assert_eq!(p.critical_path_len(), shape.critical_path_len());
+            let report = run_spec(p);
+            assert_eq!(reference, report, "{} rot={rot} rev={rev}", shape.name);
+            assert_eq!(
+                reference.to_json().to_string(),
+                report.to_json().to_string(),
+                "{} rot={rot} rev={rev} JSON bytes",
+                shape.name
+            );
+        }
+    }
+}

@@ -17,6 +17,8 @@ use ds_rs::coordinator::run::{run_full, RunOptions};
 use ds_rs::coordinator::sweep::{run_sweep, SweepPlan};
 use ds_rs::json::Value;
 use ds_rs::testutil::fixtures::{modeled, plate_jobs, quick_cfg, template_fleet};
+use ds_rs::workflow::{SharingMode, WorkflowSpec};
+use ds_rs::workloads::dag;
 
 /// Collect every key path in `v`: object fields as `a.b.c`, array
 /// elements as `a[]` (first element only — rows share one shape).
@@ -100,7 +102,9 @@ fn run_report_json_field_set_is_pinned() {
 #[test]
 fn sweep_report_json_field_set_is_pinned() {
     // One scenario engaging the optional axes whose JSON keys are
-    // conditional: INPUT_MB (non-zero) and the two scaling axes.
+    // conditional: INPUT_MB (non-zero), the two scaling axes, and the
+    // two workflow axes (WORKFLOW only labels DAG scenarios; SHARING
+    // only labels non-default modes).
     let plan = SweepPlan::builder()
         .config(quick_cfg(2))
         .jobs(plate_jobs(2, 1))
@@ -110,10 +114,57 @@ fn sweep_report_json_field_set_is_pinned() {
         .scalings([ScalingMode::TargetTracking])
         .scaling_targets([2.0])
         .job_mean_s([30.0])
+        .workflows([Some(dag::diamond())])
+        .sharings([SharingMode::NodeLocal])
         .build()
         .unwrap();
     let run = run_sweep(&plan, 2).unwrap();
     assert_matches_golden(&paths_of(&run.report.to_json()), "sweep_report.keys");
+}
+
+// ---------------------------------------------------------------------
+// DAG workflow schemas (DESIGN.md §11): the WORKFLOW file format and
+// the workflow slice of the run report, stage rows included.
+// ---------------------------------------------------------------------
+
+/// A deterministic DAG run — diamond over node-local sharing — so the
+/// report's workflow slice has releases, staged bytes, and stage spans.
+fn dag_report() -> ds_rs::metrics::RunReport {
+    let cfg = quick_cfg(3);
+    let opts = RunOptions {
+        workflow: Some(dag::diamond()),
+        sharing: SharingMode::NodeLocal,
+        ..Default::default()
+    };
+    let mut ex = modeled(60.0);
+    run_full(&cfg, &plate_jobs(2, 1), &template_fleet(), &mut ex, opts).unwrap()
+}
+
+#[test]
+fn workflow_run_report_field_set_pins_stage_rows() {
+    let report = dag_report();
+    assert!(report.drained_at.is_some(), "golden DAG run must drain");
+    assert!(report.workflow.releases > 0, "must exercise releases");
+    assert!(
+        !report.workflow.stages.is_empty(),
+        "must exercise the stage rows — key_paths only walks populated arrays"
+    );
+    assert_matches_golden(&paths_of(&report.to_json()), "workflow_run_report.keys");
+}
+
+#[test]
+fn workflow_file_field_set_is_pinned_and_render_is_bit_stable() {
+    for name in dag::SHAPES {
+        let spec = dag::shape(name).unwrap();
+        assert_matches_golden(&paths_of(&spec.to_json()), "workflow_spec.keys");
+        // render → parse → render is byte-stable: WORKFLOW files and the
+        // inline axis objects in rendered Sweep files share this codec,
+        // so any asymmetry would desynchronise shard workers.
+        let text = spec.render();
+        let back = WorkflowSpec::parse(&text).unwrap();
+        assert_eq!(back, spec, "{name}: parse must invert render");
+        assert_eq!(back.render(), text, "{name}: render must be bit-stable");
+    }
 }
 
 #[test]

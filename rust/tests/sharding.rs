@@ -79,6 +79,30 @@ fn crashy_data_plan() -> SweepPlan {
     plan
 }
 
+/// 2 DAG shapes × 2 sharing modes × 2 seeds = 8 cells: the workflow
+/// axes on the wire.  The embedded plan matrix must carry whole inline
+/// DAGs to the workers (a shard worker never chases shape names or file
+/// paths), and the readiness scheduler's mid-run release sends must
+/// stay bit-stable across process boundaries.
+fn workflow_plan() -> SweepPlan {
+    use ds_rs::workflow::SharingMode;
+    use ds_rs::workloads::dag;
+    SweepPlan::builder()
+        .config(quick_cfg(3))
+        // Workflow cells ignore the Job file: the DAG is the workload.
+        .jobs(plate_jobs(2, 1))
+        .seeds([7, 8])
+        .workflows([Some(dag::diamond()), Some(dag::mosaic())])
+        .sharings([SharingMode::S3Staging, SharingMode::NodeLocal])
+        .models([DurationModel {
+            mean_s: 45.0,
+            cv: 0.3,
+            ..Default::default()
+        }])
+        .build()
+        .expect("workflow plan")
+}
+
 /// 6 scenarios (3 scaling modes × 2 input shapes) × 2 seeds = 12 cells.
 fn scaling_data_plan() -> SweepPlan {
     let matrix = ScenarioMatrix {
@@ -170,6 +194,71 @@ fn sharded_scaling_data_sweep_identical_at_1_2_and_8_shards() {
         let sharded = sharded_inproc(&plan, shards, 2);
         assert_runs_identical(&reference, &sharded, &format!("scaling {shards} shards"));
     }
+}
+
+#[test]
+fn sharded_workflow_sweep_identical_at_1_3_and_8_shards() {
+    let plan = workflow_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    // Sanity: every cell really ran a DAG with mid-run releases and
+    // staged artifacts (the differential is vacuous otherwise).
+    assert!(reference.cells.iter().all(|c| c.report.workflow.releases > 0));
+    assert!(reference
+        .cells
+        .iter()
+        .any(|c| c.report.workflow.artifact_bytes_staged > 0));
+    for shards in [1, 3, 8] {
+        let sharded = sharded_inproc(&plan, shards, 2);
+        assert_runs_identical(&reference, &sharded, &format!("workflow {shards} shards"));
+    }
+}
+
+#[test]
+fn workflow_shards_survive_kill_and_retry_with_identical_bytes() {
+    let plan = workflow_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    let exec = FaultyExecutor::new(InProcExecutor).fault(1, 0, Fault::Kill);
+    let opts = ShardOptions {
+        shards: 3,
+        threads: 2,
+        retries: 1,
+    };
+    let run = run_sweep_sharded(&plan, &opts, &exec).unwrap();
+    assert_runs_identical(&reference, &run, "workflow kill then retry");
+    assert_eq!(exec.attempts(1), 2, "shard 1 should retry once");
+    assert_eq!(exec.attempts(0), 1, "shard 0 was healthy");
+    assert_eq!(exec.attempts(2), 1, "shard 2 was healthy");
+}
+
+#[test]
+fn workflow_request_round_trip_preserves_inline_dags() {
+    // The workflow axis is the first whose file values are whole JSON
+    // objects; the envelope must round-trip them without flattening.
+    let plan = workflow_plan();
+    let req = SweepShardRequest {
+        plan: plan.clone(),
+        threads: 2,
+        assignment: shard_plan(8, 3)[0].clone(),
+    };
+    let decoded =
+        SweepShardRequest::from_json(&ds_rs::json::parse(&req.to_json().pretty()).unwrap())
+            .unwrap();
+    assert_eq!(decoded.plan.matrix.workflows.len(), 2);
+    for (a, b) in decoded
+        .plan
+        .matrix
+        .workflows
+        .iter()
+        .zip(&plan.matrix.workflows)
+    {
+        assert_eq!(
+            a.as_ref().unwrap().fingerprint(),
+            b.as_ref().unwrap().fingerprint()
+        );
+    }
+    let a = run_sweep(&plan, 2).unwrap();
+    let b = run_sweep(&decoded.plan, 2).unwrap();
+    assert_runs_identical(&a, &b, "workflow request round trip");
 }
 
 // ---------------------------------------------------------------------
@@ -609,6 +698,7 @@ fn real_process_differential_matrix() {
         ("serial", serial_plan()),
         ("crashy", crashy_data_plan()),
         ("scaling", scaling_data_plan()),
+        ("workflow", workflow_plan()),
     ] {
         let reference = run_sweep(&plan, 2).unwrap();
         for shards in [2, 8] {
