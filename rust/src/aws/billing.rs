@@ -30,6 +30,15 @@ pub const S3_PER_GB_MONTH: f64 = 0.023;
 /// the store's instantaneous GETs neither re-price pre-data-plane runs
 /// nor double-bill an input a flow already carried.
 pub const S3_PER_GB_EGRESS: f64 = 0.02;
+/// $/GB leaving a bucket for an instance in *another region* (the
+/// inter-region transfer sheet rate).  Billed *in addition* to
+/// [`S3_PER_GB_EGRESS`] and only as a [`TopologyBreakdown`] line item
+/// (`xregion_usd`) when a multi-region topology is installed — the flat
+/// single-domain bill is untouched, so pre-topology runs re-price to the
+/// exact same dollars.
+///
+/// [`TopologyBreakdown`]: crate::topology::TopologyBreakdown
+pub const S3_XREGION_PER_GB: f64 = 0.09;
 /// $/1k CloudWatch metric PutMetricData requests (approximation).
 pub const CW_PER_1K_PUTS: f64 = 0.01;
 
@@ -212,6 +221,7 @@ mod tests {
             span: (0, hours * HOUR),
             cost_usd: cost,
             reason: TerminationReason::FleetCancelled,
+            domain: 0,
         }
     }
 

@@ -61,6 +61,7 @@ use std::collections::{BTreeMap, HashMap};
 use crate::sim::clock::{SimTime, SECOND};
 use crate::sim::store::{IdStore, StoreKind};
 use crate::sim::SimRng;
+use crate::topology::Placement;
 
 use super::instance::{Instance, InstanceId, InstanceState, Lifecycle, TerminationReason};
 use super::market::SpotMarket;
@@ -249,6 +250,8 @@ pub struct CostRecord {
     pub span: (SimTime, SimTime),
     pub cost_usd: f64,
     pub reason: TerminationReason,
+    /// Failure domain the instance ran in (0 without a topology).
+    pub domain: u32,
 }
 
 /// Per-pool slice of a run's fleet activity: launches, interruptions,
@@ -281,10 +284,17 @@ impl PoolBreakdown {
     }
 }
 
-fn pool_label(itype: &str, lifecycle: Lifecycle) -> String {
-    match lifecycle {
+/// Pool label: the instance type (with `"/on-demand"` for the on-demand
+/// slice), suffixed `"@<domain>"` only when a topology is installed, so
+/// pre-topology labels stay byte-identical.
+fn pool_label(itype: &str, lifecycle: Lifecycle, domain: u32, domains: &[String]) -> String {
+    let base = match lifecycle {
         Lifecycle::Spot => itype.to_string(),
         Lifecycle::OnDemand => format!("{itype}/on-demand"),
+    };
+    match domains.get(domain as usize) {
+        Some(name) => format!("{base}@{name}"),
+        None => base,
     }
 }
 
@@ -302,13 +312,27 @@ fn billed_cost(
     itype: &'static str,
     od_hourly: f64,
     lifecycle: Lifecycle,
+    domain: u32,
     start: SimTime,
     end: SimTime,
 ) -> f64 {
     match lifecycle {
-        Lifecycle::Spot => market.cost_integral(itype, start, end),
+        Lifecycle::Spot => market.cost_integral_in(domain, itype, start, end),
         Lifecycle::OnDemand => od_hourly * (end - start) as f64 / crate::sim::HOUR as f64,
     }
+}
+
+/// One failure domain's share of the fleet activity (the compute half of
+/// a `TopologyBreakdown` domain slice; jobs are the coordinator's).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DomainUsage {
+    /// Instances ever launched into the domain.
+    pub launched: u64,
+    /// Correlated + market interruptions (spot reclaims and AZ-outage
+    /// kills) suffered in the domain.
+    pub interrupted: u64,
+    /// Billed dollars (terminated + still-running accrual).
+    pub cost_usd: f64,
 }
 
 /// The EC2 service: spot market + instances + fleets.
@@ -323,6 +347,11 @@ pub struct Ec2 {
     next_fleet: FleetId,
     rng: SimRng,
     cost_log: Vec<CostRecord>,
+    /// Installed failure-domain names (empty = no topology: every code
+    /// path below is bit-identical to the pre-topology fleet).
+    domains: Vec<String>,
+    /// How spot capacity is distributed over the installed domains.
+    placement: Placement,
 }
 
 impl Ec2 {
@@ -341,7 +370,37 @@ impl Ec2 {
             next_fleet: 0,
             rng,
             cost_log: Vec::new(),
+            domains: Vec::new(),
+            placement: Placement::Pack,
         }
+    }
+
+    /// Install a cluster topology: named failure domains (each becoming
+    /// an independent set of capacity pools in the market) and the
+    /// placement policy that distributes spot capacity over them.  Call
+    /// before any fleet activity.
+    pub fn install_topology(&mut self, domains: Vec<String>, placement: Placement) {
+        self.market.install_domains(domains.len() as u32);
+        self.domains = domains;
+        self.placement = placement;
+    }
+
+    /// Installed failure-domain names (empty without a topology).
+    pub fn domains(&self) -> &[String] {
+        &self.domains
+    }
+
+    /// Active instance ids in failure domain `domain`, sorted (the
+    /// AZ-outage kill list).
+    pub fn active_in_domain(&self, domain: u32) -> Vec<InstanceId> {
+        let mut v: Vec<InstanceId> = self
+            .instances
+            .values()
+            .filter(|i| i.is_active() && i.domain == domain)
+            .map(|i| i.id)
+            .collect();
+        v.sort_unstable();
+        v
     }
 
     /// RequestSpotFleet: returns the fleet id; instances appear on the
@@ -396,7 +455,7 @@ impl Ec2 {
                 continue;
             }
             let hourly = match inst.lifecycle {
-                Lifecycle::Spot => self.market.price_at(inst.itype.name, now),
+                Lifecycle::Spot => self.market.price_at_in(inst.domain, inst.itype.name, now),
                 Lifecycle::OnDemand => inst.itype.on_demand_hourly,
             };
             let pending = if inst.state == InstanceState::Pending { 0u8 } else { 1 };
@@ -641,6 +700,7 @@ impl Ec2 {
         bid: f64,
         lifecycle: Lifecycle,
         price: f64,
+        domain: u32,
         now: SimTime,
         events: &mut Vec<FleetEvent>,
     ) {
@@ -669,6 +729,7 @@ impl Ec2 {
                 weight,
                 lifecycle,
                 name_tag: None,
+                domain,
             },
         );
         events.push(FleetEvent::InstanceRequested {
@@ -693,7 +754,7 @@ impl Ec2 {
             if !inst.is_active() || inst.lifecycle != Lifecycle::Spot {
                 continue;
             }
-            let price = self.market.price_at(inst.itype.name, now);
+            let price = self.market.price_at_in(inst.domain, inst.itype.name, now);
             if price > inst.bid * f64::from(inst.weight) {
                 to_interrupt.push((inst.id, price));
             }
@@ -748,7 +809,9 @@ impl Ec2 {
         }
 
         // 2a. On-demand base floor: fill from the cheapest per-unit
-        //     on-demand pool; capacity is unconstrained.
+        //     on-demand pool; capacity is unconstrained.  On-demand
+        //     always lands in the home domain — it is the survivable
+        //     floor, and its flat price is domain-independent anyway.
         let od_floor = od_base.min(target);
         let od_active = self.active_weight_of(fid, Lifecycle::OnDemand);
         if od_active < od_floor {
@@ -777,6 +840,7 @@ impl Ec2 {
                         bid,
                         Lifecycle::OnDemand,
                         ty.on_demand_hourly,
+                        0,
                         now,
                         events,
                     );
@@ -785,37 +849,55 @@ impl Ec2 {
             }
         }
 
-        // 2b. Spot deficit per the allocation strategy.
+        // 2b. Spot deficit per the allocation strategy, over the pools
+        //     the placement policy exposes: the home domain only
+        //     (no topology, or pack placement), or every domain's pools
+        //     (spread / cheapest).
         let active = self.active_weight(fid);
         if active >= target {
             return;
         }
         let mut deficit = target - active;
         struct Pool {
+            domain: u32,
             name: &'static str,
             weight: u32,
             price: f64,
             free: u32,
         }
-        let mut pools: Vec<Pool> = pools_spec
-            .iter()
-            .filter_map(|s| {
-                let ty = instance_type(&s.name)?;
-                let snap = self.market.snapshot(ty.name, now);
-                (snap.price <= bid * f64::from(s.weight) && snap.free > 0).then_some(Pool {
-                    name: ty.name,
-                    weight: s.weight,
-                    price: snap.price,
-                    free: snap.free,
-                })
-            })
-            .collect();
+        let domain_ids: Vec<u32> = if self.domains.is_empty()
+            || self.placement == Placement::Pack
+        {
+            vec![0]
+        } else {
+            (0..self.domains.len() as u32).collect()
+        };
+        let mut pools: Vec<Pool> = Vec::new();
+        for &d in &domain_ids {
+            for s in &pools_spec {
+                let Some(ty) = instance_type(&s.name) else {
+                    continue;
+                };
+                let snap = self.market.snapshot_in(d, ty.name, now);
+                if snap.price <= bid * f64::from(s.weight) && snap.free > 0 {
+                    pools.push(Pool {
+                        domain: d,
+                        name: ty.name,
+                        weight: s.weight,
+                        price: snap.price,
+                        free: snap.free,
+                    });
+                }
+            }
+        }
+        let spread = !self.domains.is_empty() && self.placement == Placement::Spread;
         match allocation {
             AllocationStrategy::LowestPrice => pools.sort_by(|a, b| {
                 per_unit(a.price, a.weight)
                     .partial_cmp(&per_unit(b.price, b.weight))
                     .unwrap()
                     .then(a.name.cmp(b.name))
+                    .then(a.domain.cmp(&b.domain))
             }),
             AllocationStrategy::CapacityOptimized => pools.sort_by(|a, b| {
                 b.free
@@ -826,33 +908,78 @@ impl Ec2 {
                             .unwrap(),
                     )
                     .then(a.name.cmp(b.name))
+                    .then(a.domain.cmp(&b.domain))
             }),
             // Diversified keeps slot order and spreads below.
             AllocationStrategy::Diversified => {}
         }
-        if allocation == AllocationStrategy::Diversified {
+        if spread {
+            // Spread placement: round-robin the *domains* (blast-radius
+            // isolation), taking each domain's cheapest eligible pool —
+            // pool-level strategy preferences are secondary to surviving
+            // a whole-domain fault.
             let mut progressed = true;
             while deficit > 0 && progressed {
                 progressed = false;
-                for p in pools.iter_mut() {
+                for &d in &domain_ids {
                     if deficit == 0 {
                         break;
                     }
-                    if p.free == 0 {
+                    let Some(p) = pools
+                        .iter_mut()
+                        .filter(|p| p.domain == d && p.free > 0)
+                        .min_by(|a, b| {
+                            per_unit(a.price, a.weight)
+                                .partial_cmp(&per_unit(b.price, b.weight))
+                                .unwrap()
+                                .then(a.name.cmp(b.name))
+                        })
+                    else {
                         continue;
-                    }
+                    };
                     p.free -= 1;
+                    let (name, weight, price, domain) = (p.name, p.weight, p.price, p.domain);
                     self.launch(
                         fid,
-                        p.name,
-                        p.weight,
+                        name,
+                        weight,
                         bid,
                         Lifecycle::Spot,
-                        p.price,
+                        price,
+                        domain,
                         now,
                         events,
                     );
-                    deficit = deficit.saturating_sub(p.weight);
+                    deficit = deficit.saturating_sub(weight);
+                    progressed = true;
+                }
+            }
+        } else if allocation == AllocationStrategy::Diversified {
+            let mut progressed = true;
+            while deficit > 0 && progressed {
+                progressed = false;
+                for i in 0..pools.len() {
+                    if deficit == 0 {
+                        break;
+                    }
+                    if pools[i].free == 0 {
+                        continue;
+                    }
+                    pools[i].free -= 1;
+                    let (name, weight, price, domain) =
+                        (pools[i].name, pools[i].weight, pools[i].price, pools[i].domain);
+                    self.launch(
+                        fid,
+                        name,
+                        weight,
+                        bid,
+                        Lifecycle::Spot,
+                        price,
+                        domain,
+                        now,
+                        events,
+                    );
+                    deficit = deficit.saturating_sub(weight);
                     progressed = true;
                 }
             }
@@ -871,6 +998,7 @@ impl Ec2 {
                         bid,
                         Lifecycle::Spot,
                         p.price,
+                        p.domain,
                         now,
                         events,
                     );
@@ -912,12 +1040,14 @@ impl Ec2 {
         let itype = inst.itype.name;
         let od_hourly = inst.itype.on_demand_hourly;
         let lifecycle = inst.lifecycle;
+        let domain = inst.domain;
         // AWS bills Linux spot per-second with a 60-second minimum: even
         // a boot-poll-shutdown instance costs a billing minute (this is
         // what makes unmonitored churn expensive — experiment T3/T7).
         if let Some(start) = inst.running_at {
             let end = now.max(start + crate::sim::MINUTE);
-            let cost = billed_cost(&mut self.market, itype, od_hourly, lifecycle, start, end);
+            let cost =
+                billed_cost(&mut self.market, itype, od_hourly, lifecycle, domain, start, end);
             self.cost_log.push(CostRecord {
                 instance: id,
                 itype,
@@ -925,6 +1055,7 @@ impl Ec2 {
                 span: (start, end),
                 cost_usd: cost,
                 reason,
+                domain,
             });
         }
     }
@@ -937,18 +1068,19 @@ impl Ec2 {
     /// Bill any still-running instances up to `now` (end-of-run report for
     /// scenarios that never tear down).
     pub fn accrued_cost_of_active(&mut self, now: SimTime) -> f64 {
-        let spans: Vec<(&'static str, Lifecycle, f64, SimTime, SimTime)> = self
+        let spans: Vec<(&'static str, Lifecycle, f64, u32, SimTime, SimTime)> = self
             .all_instances()
             .into_iter()
             .filter(|i| i.is_active())
             .filter_map(|i| {
-                i.billable_span(now)
-                    .map(|(s, e)| (i.itype.name, i.lifecycle, i.itype.on_demand_hourly, s, e))
+                i.billable_span(now).map(|(s, e)| {
+                    (i.itype.name, i.lifecycle, i.itype.on_demand_hourly, i.domain, s, e)
+                })
             })
             .collect();
         spans
             .into_iter()
-            .map(|(t, lc, od, s, e)| billed_cost(&mut self.market, t, od, lc, s, e))
+            .map(|(t, lc, od, d, s, e)| billed_cost(&mut self.market, t, od, lc, d, s, e))
             .sum()
     }
 
@@ -961,10 +1093,10 @@ impl Ec2 {
         // One pass over the instance table (sorted by id so f64
         // accumulation order is replay-stable): launch/interruption
         // counters, plus the billable spans of still-active instances.
-        let mut active: Vec<(String, &'static str, Lifecycle, f64, SimTime, SimTime)> =
+        let mut active: Vec<(String, &'static str, Lifecycle, f64, u32, SimTime, SimTime)> =
             Vec::new();
         for inst in self.all_instances() {
-            let key = pool_label(inst.itype.name, inst.lifecycle);
+            let key = pool_label(inst.itype.name, inst.lifecycle, inst.domain, &self.domains);
             if inst.is_active() {
                 if let Some((s, e)) = inst.billable_span(now) {
                     active.push((
@@ -972,6 +1104,7 @@ impl Ec2 {
                         inst.itype.name,
                         inst.lifecycle,
                         inst.itype.on_demand_hourly,
+                        inst.domain,
                         s,
                         e,
                     ));
@@ -987,7 +1120,7 @@ impl Ec2 {
         }
         // Billed lifetimes (insertion order: termination order).
         for rec in &self.cost_log {
-            let key = pool_label(rec.itype, rec.lifecycle);
+            let key = pool_label(rec.itype, rec.lifecycle, rec.domain, &self.domains);
             let e = map
                 .entry(key.clone())
                 .or_insert_with(|| PoolBreakdown::empty(key));
@@ -995,8 +1128,8 @@ impl Ec2 {
             e.cost_usd += rec.cost_usd;
         }
         // Accrue the still-running spans collected above.
-        for (key, tname, lc, od, s, e) in active {
-            let cost = billed_cost(&mut self.market, tname, od, lc, s, e);
+        for (key, tname, lc, od, d, s, e) in active {
+            let cost = billed_cost(&mut self.market, tname, od, lc, d, s, e);
             let entry = map
                 .entry(key.clone())
                 .or_insert_with(|| PoolBreakdown::empty(key));
@@ -1004,6 +1137,54 @@ impl Ec2 {
             entry.cost_usd += cost;
         }
         map.into_values().collect()
+    }
+
+    /// Per-failure-domain slice of the fleet activity: launches,
+    /// correlated + market interruptions, and billed dollars (terminated
+    /// lifetimes plus accrual of still-running instances up to `now`).
+    /// One row per installed domain, declaration order; empty without a
+    /// topology.
+    pub fn domain_breakdown(&mut self, now: SimTime) -> Vec<DomainUsage> {
+        let n = self.domains.len();
+        let mut out = vec![DomainUsage::default(); n];
+        if n == 0 {
+            return out;
+        }
+        let mut active: Vec<(&'static str, Lifecycle, f64, u32, SimTime, SimTime)> = Vec::new();
+        for inst in self.all_instances() {
+            let Some(slot) = out.get_mut(inst.domain as usize) else {
+                continue;
+            };
+            slot.launched += 1;
+            if matches!(
+                inst.termination_reason,
+                Some(TerminationReason::SpotInterruption) | Some(TerminationReason::AzOutage)
+            ) {
+                slot.interrupted += 1;
+            }
+            if inst.is_active() {
+                if let Some((s, e)) = inst.billable_span(now) {
+                    active.push((
+                        inst.itype.name,
+                        inst.lifecycle,
+                        inst.itype.on_demand_hourly,
+                        inst.domain,
+                        s,
+                        e,
+                    ));
+                }
+            }
+        }
+        for rec in &self.cost_log {
+            if let Some(slot) = out.get_mut(rec.domain as usize) {
+                slot.cost_usd += rec.cost_usd;
+            }
+        }
+        for (tname, lc, od, d, s, e) in active {
+            let cost = billed_cost(&mut self.market, tname, od, lc, d, s, e);
+            out[d as usize].cost_usd += cost;
+        }
+        out
     }
 
     /// All instances (sorted by id) — used by reports and tests.
@@ -1591,5 +1772,134 @@ mod tests {
             })
         }));
         assert!(r.is_err());
+    }
+
+    fn ec2_with_domains(seed: u64, placement: Placement) -> Ec2 {
+        let mut e = ec2(Volatility::Low, seed);
+        e.install_topology(
+            vec!["us-east-1a".to_string(), "us-west-2a".to_string()],
+            placement,
+        );
+        e
+    }
+
+    fn domain_counts(e: &Ec2) -> Vec<usize> {
+        let mut v = vec![0usize; e.domains().len()];
+        for i in e.all_instances() {
+            if i.is_active() {
+                v[i.domain as usize] += 1;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn pack_placement_fills_the_home_domain_only() {
+        let mut e = ec2_with_domains(61, Placement::Pack);
+        let fid = e.request_spot_fleet(spec(4, 0.09));
+        e.evaluate_fleets(0);
+        assert_eq!(e.active_weight(fid), 4);
+        assert_eq!(domain_counts(&e), vec![4, 0]);
+        assert_eq!(e.active_in_domain(0).len(), 4);
+        assert!(e.active_in_domain(1).is_empty());
+    }
+
+    #[test]
+    fn spread_placement_round_robins_domains() {
+        let mut e = ec2_with_domains(63, Placement::Spread);
+        let fid = e.request_spot_fleet(spec(4, 0.09));
+        e.evaluate_fleets(0);
+        assert_eq!(e.active_weight(fid), 4);
+        assert_eq!(domain_counts(&e), vec![2, 2]);
+    }
+
+    #[test]
+    fn spread_survives_a_home_domain_outage() {
+        use crate::aws::ec2::market::{MarketFault, MarketFaultKind};
+        let mut e = ec2_with_domains(65, Placement::Spread);
+        e.market.install_fault(MarketFault {
+            domain: 0,
+            kind: MarketFaultKind::Outage,
+            start: 0,
+            end: 10 * HOUR,
+            magnitude: 1.0,
+        });
+        let fid = e.request_spot_fleet(spec(4, 0.09));
+        e.evaluate_fleets(0);
+        // The home domain is dark: everything lands in the survivor.
+        assert_eq!(e.active_weight(fid), 4);
+        assert_eq!(domain_counts(&e), vec![0, 4]);
+        // Pack placement under the same outage gets nothing.
+        let mut p = ec2_with_domains(65, Placement::Pack);
+        p.market.install_fault(MarketFault {
+            domain: 0,
+            kind: MarketFaultKind::Outage,
+            start: 0,
+            end: 10 * HOUR,
+            magnitude: 1.0,
+        });
+        let pf = p.request_spot_fleet(spec(4, 0.09));
+        let evs = p.evaluate_fleets(0);
+        assert_eq!(p.active_weight(pf), 0);
+        assert!(matches!(
+            evs.as_slice(),
+            [FleetEvent::CapacityUnavailable { missing: 4, .. }]
+        ));
+    }
+
+    #[test]
+    fn cheapest_placement_takes_the_lowest_priced_domain() {
+        use crate::aws::ec2::market::{MarketFault, MarketFaultKind};
+        let mut e = ec2_with_domains(67, Placement::Cheapest);
+        // Make the home domain expensive: cheapest must flee to domain 1.
+        e.market.install_fault(MarketFault {
+            domain: 0,
+            kind: MarketFaultKind::PriceStorm,
+            start: 0,
+            end: 10 * HOUR,
+            magnitude: 10.0,
+        });
+        let fid = e.request_spot_fleet(spec(4, 0.50));
+        e.evaluate_fleets(0);
+        assert_eq!(e.active_weight(fid), 4);
+        assert_eq!(domain_counts(&e), vec![0, 4]);
+    }
+
+    #[test]
+    fn domain_labels_and_breakdown_slice_by_domain() {
+        let mut e = ec2_with_domains(69, Placement::Spread);
+        let fid = e.request_spot_fleet(spec(4, 0.09));
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        e.cancel_fleet(fid, 2 * HOUR);
+        let pools = e.pool_breakdown(2 * HOUR);
+        let labels: Vec<&str> = pools.iter().map(|p| p.pool.as_str()).collect();
+        assert_eq!(labels, vec!["m5.large@us-east-1a", "m5.large@us-west-2a"]);
+        let d = e.domain_breakdown(2 * HOUR);
+        assert_eq!(d.len(), 2);
+        assert_eq!((d[0].launched, d[1].launched), (2, 2));
+        assert!(d[0].cost_usd > 0.0 && d[1].cost_usd > 0.0);
+        // Domain slices cover the same dollars as the pools.
+        let pool_total: f64 = pools.iter().map(|p| p.cost_usd).sum();
+        let dom_total: f64 = d.iter().map(|s| s.cost_usd).sum();
+        assert!((pool_total - dom_total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn az_outage_kills_count_as_interruptions_in_domain_slices() {
+        let mut e = ec2_with_domains(71, Placement::Spread);
+        let fid = e.request_spot_fleet(spec(4, 0.09));
+        e.evaluate_fleets(0);
+        for id in e.instances_in_state(fid, InstanceState::Pending) {
+            e.mark_running(id, MINUTE);
+        }
+        for id in e.active_in_domain(0) {
+            e.terminate(id, TerminationReason::AzOutage, 5 * MINUTE);
+        }
+        let d = e.domain_breakdown(10 * MINUTE);
+        assert_eq!(d[0].interrupted, 2);
+        assert_eq!(d[1].interrupted, 0);
     }
 }

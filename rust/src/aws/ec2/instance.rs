@@ -37,6 +37,8 @@ pub enum TerminationReason {
     /// Simulated hardware/OS crash (stops doing work; stays "running"
     /// until the alarm reaper notices, unless replaced).
     Crash,
+    /// The instance's failure domain went dark (correlated AZ outage).
+    AzOutage,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -73,6 +75,9 @@ pub struct Instance {
     /// Docker container gets placed it gives the instance it's on its own
     /// name").
     pub name_tag: Option<String>,
+    /// Failure-domain index the instance runs in (0 = the home domain;
+    /// always 0 when no topology is installed).
+    pub domain: u32,
 }
 
 impl Instance {
@@ -110,6 +115,7 @@ mod tests {
             weight: 1,
             lifecycle: Lifecycle::Spot,
             name_tag: None,
+            domain: 0,
         }
     }
 

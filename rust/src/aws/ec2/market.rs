@@ -20,6 +20,15 @@
 //! a pool's joint (price, free capacity) state to the allocation
 //! strategies in one query.
 //!
+//! With a [`crate::topology::ClusterTopology`] installed
+//! ([`SpotMarket::install_domains`]) every (type, domain) pair gets its
+//! own independent path — AWS's real (type, AZ) pool granularity — and
+//! correlated faults ([`MarketFault`]) overlay deterministic windows on
+//! one domain: an outage zeroes its free capacity, a price storm
+//! multiplies its published prices.  Without a topology the market is
+//! bit-identical to the pre-topology single-pool behaviour (same seeds,
+//! same walks, same query results).
+//!
 //! [`Diversified`]: super::fleet::AllocationStrategy::Diversified
 //! [`snapshot`]: SpotMarket::snapshot
 
@@ -123,11 +132,38 @@ impl Path {
     }
 }
 
-/// The spot market for all instance types.
+/// What a correlated fault does to one domain's market for a window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MarketFaultKind {
+    /// Free capacity is zero for the window (running instances are the
+    /// driver's problem — see `coordinator::run`).
+    Outage,
+    /// Published prices are multiplied by `magnitude` for the window.
+    PriceStorm,
+}
+
+/// One deterministic fault window overlaying a domain's pools.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MarketFault {
+    pub domain: u32,
+    pub kind: MarketFaultKind,
+    /// Window `[start, end)` in simulated ms (STEP-aligned in practice:
+    /// TOPOLOGY files declare whole minutes).
+    pub start: SimTime,
+    pub end: SimTime,
+    /// Price multiplier for `PriceStorm`; ignored for `Outage`.
+    pub magnitude: f64,
+}
+
+/// The spot market for all instance types, keyed (domain, type).
 pub struct SpotMarket {
     vol: Volatility,
-    paths: HashMap<&'static str, Path>,
+    paths: HashMap<(u32, &'static str), Path>,
     seed: u64,
+    /// Number of installed failure domains; 0 = no topology, which keeps
+    /// the per-type RNG streams bit-identical to the pre-topology market.
+    domain_count: u32,
+    faults: Vec<MarketFault>,
 }
 
 impl SpotMarket {
@@ -136,6 +172,8 @@ impl SpotMarket {
             vol,
             paths: HashMap::new(),
             seed,
+            domain_count: 0,
+            faults: Vec::new(),
         }
     }
 
@@ -143,16 +181,58 @@ impl SpotMarket {
         self.vol
     }
 
-    fn path(&mut self, ty: &'static InstanceType) -> &mut Path {
+    /// Install `n` failure domains (call before any query; the domain
+    /// count is folded into each pool's RNG seed).
+    pub fn install_domains(&mut self, n: u32) {
+        debug_assert!(self.paths.is_empty(), "install_domains before queries");
+        self.domain_count = n;
+    }
+
+    pub fn domain_count(&self) -> u32 {
+        self.domain_count
+    }
+
+    /// Overlay a deterministic fault window on one domain.
+    pub fn install_fault(&mut self, fault: MarketFault) {
+        self.faults.push(fault);
+    }
+
+    /// Product of active price-storm multipliers on `domain` at `t`.
+    fn storm_mult(&self, domain: u32, t: SimTime) -> f64 {
+        self.faults
+            .iter()
+            .filter(|f| {
+                f.domain == domain
+                    && f.kind == MarketFaultKind::PriceStorm
+                    && f.start <= t
+                    && t < f.end
+            })
+            .map(|f| f.magnitude)
+            .product()
+    }
+
+    /// Whether an outage window covers `domain` at `t`.
+    fn outage_active(&self, domain: u32, t: SimTime) -> bool {
+        self.faults.iter().any(|f| {
+            f.domain == domain && f.kind == MarketFaultKind::Outage && f.start <= t && t < f.end
+        })
+    }
+
+    fn path(&mut self, domain: u32, ty: &'static InstanceType) -> &mut Path {
         let seed = self.seed;
-        self.paths.entry(ty.name).or_insert_with(|| {
-            // Stable per-type stream: seed ^ hash(name).
-            let tag = ty
-                .name
-                .bytes()
-                .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
-                    (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3)
-                });
+        let domained = self.domain_count > 0;
+        self.paths.entry((domain, ty.name)).or_insert_with(|| {
+            // Stable per-pool stream: seed ^ hash(name) without a
+            // topology (bit-identical to the pre-topology market),
+            // seed ^ hash("name@domain") with one.
+            let fold = |h: u64, b: u8| (h ^ u64::from(b)).wrapping_mul(0x1000_0000_01b3u64);
+            let mut tag = ty.name.bytes().fold(0xcbf2_9ce4_8422_2325u64, fold);
+            if domained {
+                tag = fold(tag, b'@');
+                for b in domain.to_string().bytes() {
+                    tag = fold(tag, b);
+                }
+            }
             let mut rng = SimRng::new(seed ^ tag);
             let base = ty.on_demand_hourly * ty.spot_base_fraction;
             // Warm start: ±5% of base.
@@ -169,46 +249,83 @@ impl SpotMarket {
         })
     }
 
-    /// Spot price (USD/h) of `type_name` at simulated time `t`.
+    /// Spot price (USD/h) of `type_name` at simulated time `t` (home
+    /// domain).
     pub fn price_at(&mut self, type_name: &str, t: SimTime) -> f64 {
-        let ty = instance_type(type_name).expect("unknown instance type");
-        let vol = self.vol;
-        let idx = (t / STEP) as usize;
-        let path = self.path(ty);
-        path.extend_to(idx, vol);
-        path.steps[idx]
+        self.price_at_in(0, type_name, t)
     }
 
-    /// Free machines of this type at time `t` (pool minus outside demand).
-    pub fn free_capacity(&mut self, type_name: &str, t: SimTime) -> u32 {
+    /// Spot price (USD/h) in failure domain `domain`, storm-adjusted.
+    pub fn price_at_in(&mut self, domain: u32, type_name: &str, t: SimTime) -> f64 {
         let ty = instance_type(type_name).expect("unknown instance type");
         let vol = self.vol;
+        let mult = self.storm_mult(domain, t);
         let idx = (t / STEP) as usize;
-        let path = self.path(ty);
+        let path = self.path(domain, ty);
+        path.extend_to(idx, vol);
+        path.steps[idx] * mult
+    }
+
+    /// Free machines of this type at time `t` (home domain).
+    pub fn free_capacity(&mut self, type_name: &str, t: SimTime) -> u32 {
+        self.free_capacity_in(0, type_name, t)
+    }
+
+    /// Free machines in failure domain `domain` (zero during an outage).
+    pub fn free_capacity_in(&mut self, domain: u32, type_name: &str, t: SimTime) -> u32 {
+        let ty = instance_type(type_name).expect("unknown instance type");
+        let vol = self.vol;
+        if self.outage_active(domain, t) {
+            return 0;
+        }
+        let idx = (t / STEP) as usize;
+        let path = self.path(domain, ty);
         path.extend_to(idx, vol);
         free_machines(ty.pool_capacity, path.pool_used[idx])
     }
 
     /// Joint (price, free-capacity) view of one pool at time `t` — a
     /// single path access where `price_at` + `free_capacity` would do
-    /// two.  Allocation strategies rank these.
+    /// two.  Allocation strategies rank these.  Home domain.
     pub fn snapshot(&mut self, type_name: &str, t: SimTime) -> PoolSnapshot {
+        self.snapshot_in(0, type_name, t)
+    }
+
+    /// Joint pool view in failure domain `domain`, fault-adjusted.
+    pub fn snapshot_in(&mut self, domain: u32, type_name: &str, t: SimTime) -> PoolSnapshot {
         let ty = instance_type(type_name).expect("unknown instance type");
         let vol = self.vol;
+        let mult = self.storm_mult(domain, t);
+        let dark = self.outage_active(domain, t);
         let idx = (t / STEP) as usize;
-        let path = self.path(ty);
+        let path = self.path(domain, ty);
         path.extend_to(idx, vol);
         PoolSnapshot {
             itype: ty.name,
-            price: path.steps[idx],
-            free: free_machines(ty.pool_capacity, path.pool_used[idx]),
+            price: path.steps[idx] * mult,
+            free: if dark {
+                0
+            } else {
+                free_machines(ty.pool_capacity, path.pool_used[idx])
+            },
             base: path.base,
         }
     }
 
     /// Integrate the price path over [start, end): instance-hours × $/h.
-    /// This is what a terminated instance gets billed.
+    /// This is what a terminated instance gets billed.  Home domain.
     pub fn cost_integral(&mut self, type_name: &str, start: SimTime, end: SimTime) -> f64 {
+        self.cost_integral_in(0, type_name, start, end)
+    }
+
+    /// Price-path integral in failure domain `domain`, storm-adjusted.
+    pub fn cost_integral_in(
+        &mut self,
+        domain: u32,
+        type_name: &str,
+        start: SimTime,
+        end: SimTime,
+    ) -> f64 {
         if end <= start {
             return 0.0;
         }
@@ -217,7 +334,7 @@ impl SpotMarket {
         while t < end {
             let step_end = ((t / STEP) + 1) * STEP;
             let seg_end = step_end.min(end);
-            let price = self.price_at(type_name, t);
+            let price = self.price_at_in(domain, type_name, t);
             total += price * (seg_end - t) as f64 / crate::sim::HOUR as f64;
             t = seg_end;
         }
@@ -361,5 +478,91 @@ mod tests {
         for i in 0..2_000 {
             assert!(m.price_at("r5.xlarge", i * STEP) > 0.0);
         }
+    }
+
+    #[test]
+    fn legacy_queries_are_unchanged_by_the_domain_plumbing() {
+        // A market without install_domains must answer exactly like the
+        // pre-topology market: same seed tag, same walk, and the *_in
+        // variants with domain 0 agree with the legacy methods.
+        let mut m = SpotMarket::new(41, Volatility::Medium);
+        for i in 0..300 {
+            let t = i * STEP;
+            assert_eq!(m.price_at("m5.large", t), m.price_at_in(0, "m5.large", t));
+            assert_eq!(
+                m.free_capacity("m5.large", t),
+                m.free_capacity_in(0, "m5.large", t)
+            );
+        }
+    }
+
+    #[test]
+    fn domains_have_independent_paths() {
+        let mut m = SpotMarket::new(43, Volatility::Medium);
+        m.install_domains(2);
+        let a: Vec<f64> = (0..20)
+            .map(|i| m.price_at_in(0, "m5.large", i * STEP))
+            .collect();
+        let b: Vec<f64> = (0..20)
+            .map(|i| m.price_at_in(1, "m5.large", i * STEP))
+            .collect();
+        assert_ne!(a, b);
+        // ...and deterministically so, independent of query order.
+        let mut m2 = SpotMarket::new(43, Volatility::Medium);
+        m2.install_domains(2);
+        let b2: Vec<f64> = (0..20)
+            .map(|i| m2.price_at_in(1, "m5.large", i * STEP))
+            .collect();
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn outage_zeroes_capacity_only_in_window_and_domain() {
+        let mut m = SpotMarket::new(47, Volatility::Low);
+        m.install_domains(2);
+        m.install_fault(MarketFault {
+            domain: 0,
+            kind: MarketFaultKind::Outage,
+            start: 10 * STEP,
+            end: 20 * STEP,
+            magnitude: 1.0,
+        });
+        assert!(m.free_capacity_in(0, "m5.large", 9 * STEP) > 0);
+        assert_eq!(m.free_capacity_in(0, "m5.large", 10 * STEP), 0);
+        assert_eq!(m.free_capacity_in(0, "m5.large", 19 * STEP), 0);
+        assert!(m.free_capacity_in(0, "m5.large", 20 * STEP) > 0);
+        // The other domain is untouched.
+        assert!(m.free_capacity_in(1, "m5.large", 15 * STEP) > 0);
+        assert_eq!(m.snapshot_in(0, "m5.large", 15 * STEP).free, 0);
+        // Outages do not move prices.
+        assert_eq!(
+            m.price_at_in(0, "m5.large", 15 * STEP),
+            m.snapshot_in(0, "m5.large", 15 * STEP).price
+        );
+    }
+
+    #[test]
+    fn price_storm_multiplies_prices_in_window() {
+        let mut m = SpotMarket::new(53, Volatility::Low);
+        m.install_domains(2);
+        let before = m.price_at_in(0, "m5.large", 15 * STEP);
+        m.install_fault(MarketFault {
+            domain: 0,
+            kind: MarketFaultKind::PriceStorm,
+            start: 10 * STEP,
+            end: 20 * STEP,
+            magnitude: 3.0,
+        });
+        let during = m.price_at_in(0, "m5.large", 15 * STEP);
+        assert!((during - before * 3.0).abs() < 1e-12);
+        // Outside the window and in the other domain: no effect.
+        assert_eq!(m.price_at_in(0, "m5.large", 25 * STEP), {
+            let mut clean = SpotMarket::new(53, Volatility::Low);
+            clean.install_domains(2);
+            clean.price_at_in(0, "m5.large", 25 * STEP)
+        });
+        // Billing integrates the storm-adjusted path.
+        let c = m.cost_integral_in(0, "m5.large", 15 * STEP, 16 * STEP);
+        assert!((c - during * (STEP as f64 / HOUR as f64)).abs() < 1e-12);
     }
 }

@@ -24,8 +24,9 @@ pub mod market;
 pub mod pricing;
 
 pub use fleet::{
-    AllocationStrategy, Ec2, FleetEvent, FleetId, InstanceSlot, PoolBreakdown, SpotFleetSpec,
+    AllocationStrategy, DomainUsage, Ec2, FleetEvent, FleetId, InstanceSlot, PoolBreakdown,
+    SpotFleetSpec,
 };
 pub use instance::{Instance, InstanceId, InstanceState, Lifecycle, TerminationReason};
-pub use market::{PoolSnapshot, SpotMarket, Volatility};
+pub use market::{MarketFault, MarketFaultKind, PoolSnapshot, SpotMarket, Volatility};
 pub use pricing::{instance_type, InstanceType, INSTANCE_TYPES};

@@ -208,6 +208,12 @@ pub struct DataPlane {
     /// Internal clock: the last instant flows were progressed to.
     clock: SimTime,
     stats: TransferStats,
+    /// Per-bucket throughput multipliers (correlated throttling events,
+    /// DESIGN.md §12); absent buckets run at the profile's full budget.
+    bucket_factor: BTreeMap<String, f64>,
+    /// Extra first-byte latency per instance (cross-region requests pay
+    /// an additional round trip); absent instances pay none.
+    first_byte_penalty: BTreeMap<u64, SimTime>,
 }
 
 impl Default for DataPlane {
@@ -225,6 +231,8 @@ impl DataPlane {
             next_id: 0,
             clock: 0,
             stats: TransferStats::default(),
+            bucket_factor: BTreeMap::new(),
+            first_byte_penalty: BTreeMap::new(),
         }
     }
 
@@ -235,6 +243,32 @@ impl DataPlane {
     /// Swap the profile (before the run starts flows).
     pub fn set_profile(&mut self, profile: NetProfile) {
         self.profile = profile;
+    }
+
+    /// Scale one bucket's aggregate throughput by `factor` (a correlated
+    /// throttling event: `factor < 1` slows it, `1.0` restores it).  The
+    /// change takes effect immediately — in-flight flows are progressed
+    /// to `now` and re-planned under the new budget.  The factor is
+    /// floored at a tiny positive rate so throttled flows still converge.
+    pub fn set_bucket_factor(&mut self, now: SimTime, bucket: &str, factor: f64) {
+        self.progress(now);
+        if (factor - 1.0).abs() < f64::EPSILON {
+            self.bucket_factor.remove(bucket);
+        } else {
+            self.bucket_factor.insert(bucket.to_string(), factor.max(1e-6));
+        }
+        self.replan();
+    }
+
+    /// Add `penalty_ms` of extra first-byte latency to every *future*
+    /// flow started by `instance` (the cross-region request tax; zero
+    /// clears it).  In-flight flows keep their original activation time.
+    pub fn set_instance_penalty(&mut self, instance: u64, penalty_ms: SimTime) {
+        if penalty_ms == 0 {
+            self.first_byte_penalty.remove(&instance);
+        } else {
+            self.first_byte_penalty.insert(instance, penalty_ms);
+        }
     }
 
     /// Begin a transfer of `bytes` between `instance` (whose NIC runs at
@@ -290,6 +324,7 @@ impl DataPlane {
         self.progress(now);
         self.next_id += 1;
         let id = self.next_id;
+        let penalty = self.first_byte_penalty.get(&instance).copied().unwrap_or(0);
         self.flows.insert(
             id,
             Flow {
@@ -299,7 +334,7 @@ impl DataPlane {
                 dir,
                 bytes,
                 remaining: bytes as f64,
-                active_at: now.saturating_add(self.profile.first_byte_ms),
+                active_at: now.saturating_add(self.profile.first_byte_ms).saturating_add(penalty),
                 rate: 0.0,
                 bucket_bound: false,
                 peer,
@@ -312,8 +347,17 @@ impl DataPlane {
     /// Progress every flow to `now` and collect the ones that finished at
     /// or before it, in completion order (FIFO within an instant).
     pub fn poll(&mut self, now: SimTime) -> Vec<(FlowId, FlowEnd)> {
+        let mut out = Vec::new();
+        self.poll_into(now, &mut out);
+        out
+    }
+
+    /// Allocation-free [`poll`](Self::poll): appends completions to
+    /// `out` instead of returning a fresh `Vec`.  The driver's net tick
+    /// reuses one scratch buffer across the whole run.
+    pub fn poll_into(&mut self, now: SimTime, out: &mut Vec<(FlowId, FlowEnd)>) {
         self.progress(now);
-        std::mem::take(&mut self.finished)
+        out.append(&mut self.finished);
     }
 
     /// When the plane next needs attention: completions already awaiting
@@ -373,8 +417,19 @@ impl DataPlane {
 
     /// Instances that currently have at least one flow, ascending.
     pub fn instances_with_flows(&self) -> Vec<u64> {
-        let set: BTreeSet<u64> = self.flows.values().map(|f| f.instance).collect();
-        set.into_iter().collect()
+        let mut out = Vec::new();
+        self.instances_with_flows_into(&mut out);
+        out
+    }
+
+    /// Allocation-free [`instances_with_flows`](Self::instances_with_flows):
+    /// clears and refills `out` (ascending, deduplicated) without an
+    /// intermediate set.
+    pub fn instances_with_flows_into(&self, out: &mut Vec<u64>) {
+        out.clear();
+        out.extend(self.flows.values().map(|f| f.instance));
+        out.sort_unstable();
+        out.dedup();
     }
 
     /// Flows currently in the plane (latent + active).
@@ -495,8 +550,9 @@ impl DataPlane {
         let mut members: BTreeMap<Link, Vec<FlowId>> = BTreeMap::new();
         for &id in &active {
             let f = &self.flows[&id];
+            let factor = self.bucket_factor.get(&f.bucket).copied().unwrap_or(1.0);
             cap.entry(Link::Nic(f.instance)).or_insert(f.nic_bytes_per_ms);
-            cap.entry(Link::Bucket(f.bucket.clone())).or_insert(bucket_cap);
+            cap.entry(Link::Bucket(f.bucket.clone())).or_insert(bucket_cap * factor);
             members.entry(Link::Nic(f.instance)).or_default().push(id);
             members.entry(Link::Bucket(f.bucket.clone())).or_default().push(id);
         }
@@ -767,6 +823,71 @@ mod tests {
         assert!((p.rate_of(a).unwrap() - link).abs() < 1e-9, "a is alone on node:a");
         assert!((p.rate_of(b).unwrap() - link / 2.0).abs() < 1e-9);
         assert!((p.rate_of(c).unwrap() - link / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bucket_throttle_scales_the_budget_and_clears() {
+        // narrow bucket: 125 000 B/ms; throttled to 0.25 it paces one
+        // flow at 31 250 B/ms even though the NIC could do 156 250.
+        let mut p = DataPlane::new(NetProfile::narrow());
+        let id = p.start(0, 1, NIC, "b", Direction::Download, 10_000_000);
+        p.set_bucket_factor(0, "b", 0.25);
+        p.poll(NetProfile::narrow().first_byte_ms);
+        let quarter = gbps_to_bytes_per_ms(1.0) / 4.0;
+        assert!((p.rate_of(id).unwrap() - quarter).abs() < 1e-9);
+        // Restoring to 1.0 drops the override and re-plans immediately.
+        p.set_bucket_factor(p.clock(), "b", 1.0);
+        assert!((p.rate_of(id).unwrap() - gbps_to_bytes_per_ms(1.0)).abs() < 1e-9);
+        // Other buckets were never affected.
+        let other = p.start(p.clock(), 2, NIC, "c", Direction::Download, 1_000_000);
+        p.poll(p.clock() + NetProfile::narrow().first_byte_ms);
+        assert!((p.rate_of(other).unwrap() - gbps_to_bytes_per_ms(1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instance_penalty_delays_the_first_byte_of_new_flows_only() {
+        let mut p = DataPlane::new(NetProfile::standard());
+        let a = p.start(0, 1, NIC, "b", Direction::Download, 1_562_500);
+        p.set_instance_penalty(2, 70);
+        let b = p.start(0, 2, NIC, "b", Direction::Download, 1_562_500);
+        // a: 30 ms latency + 10 ms wire; b: 100 ms latency + 10 ms wire.
+        let done = drain(&mut p);
+        assert_eq!(done.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![a, b]);
+        assert_eq!(p.stats().first_byte_wait_ms, 30 + 100);
+        // Zero clears the penalty.
+        p.set_instance_penalty(2, 0);
+        let _ = p.start(p.clock(), 2, NIC, "b", Direction::Download, 1_562_500);
+        let t0 = p.clock();
+        assert_eq!(p.next_event(), Some(t0 + 30));
+    }
+
+    #[test]
+    fn allocation_free_variants_match_the_allocating_apis() {
+        let run = |scratch: bool| {
+            let mut p = DataPlane::new(NetProfile::standard());
+            let mut done: Vec<(FlowId, FlowEnd)> = Vec::new();
+            let mut busy: Vec<u64> = Vec::new();
+            let mut trace = Vec::new();
+            for i in 0..12u64 {
+                p.start(i * 5, i % 3, NIC, "b", Direction::Download, 1 + i * 400_000);
+                if scratch {
+                    p.instances_with_flows_into(&mut busy);
+                } else {
+                    busy = p.instances_with_flows();
+                }
+                trace.push(busy.clone());
+            }
+            while let Some(t) = p.next_event() {
+                if scratch {
+                    p.poll_into(t, &mut done);
+                } else {
+                    done.extend(p.poll(t));
+                }
+            }
+            trace.push(done.iter().map(|(id, _)| *id).collect());
+            (trace, done, p.stats())
+        };
+        assert_eq!(run(false), run(true));
     }
 
     #[test]

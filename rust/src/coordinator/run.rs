@@ -35,10 +35,13 @@ use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
-use crate::aws::billing::data_breakdown;
-use crate::aws::ec2::{FleetEvent, FleetId, InstanceId, InstanceState, TerminationReason, Volatility};
+use crate::aws::billing::{data_breakdown, S3_XREGION_PER_GB};
+use crate::aws::ec2::{
+    FleetEvent, FleetId, InstanceId, InstanceState, MarketFault, MarketFaultKind,
+    TerminationReason, Volatility,
+};
 use crate::aws::ecs::ContainerId;
-use crate::aws::s3::dataplane::{Direction, FlowId, NetProfile};
+use crate::aws::s3::dataplane::{Direction, FlowEnd, FlowId, NetProfile};
 use crate::aws::s3::Body;
 use crate::aws::sqs::ReceiptHandle;
 use crate::aws::AwsAccount;
@@ -48,6 +51,9 @@ use crate::json::Value;
 use crate::metrics::{RunReport, RunStats};
 use crate::sim::clock::{SimTime, HOUR, MINUTE};
 use crate::sim::{Arena, EventQueue, QueueKind, SimRng, SlotId, StoreKind};
+use crate::topology::{
+    ClusterTopology, DomainSlice, FaultKind, OutageWindow, Placement, TopologyBreakdown,
+};
 use crate::worker::{check_if_done, parse_message};
 use crate::workflow::{SharingMode, StageSpan, WorkflowBreakdown, WorkflowSpec};
 use crate::workloads::drivers::{
@@ -108,6 +114,14 @@ pub struct RunOptions {
     /// Where intermediate workflow artifacts live and what moving them
     /// costs.  Only consulted for workflow runs.
     pub sharing: SharingMode,
+    /// Failure-domain layout (regions → AZs) plus any scripted
+    /// correlated faults (DESIGN.md §12).  `None` = the legacy
+    /// single-domain world: every topology code path is skipped and the
+    /// run replays bit-identically to pre-topology builds.
+    pub topology: Option<ClusterTopology>,
+    /// How the fleet spreads capacity across the topology's domains.
+    /// Ignored without a topology.
+    pub placement: Placement,
 }
 
 impl Default for RunOptions {
@@ -127,9 +141,16 @@ impl Default for RunOptions {
             engine: EngineOptions::default(),
             workflow: None,
             sharing: SharingMode::default(),
+            topology: None,
+            placement: Placement::default(),
         }
     }
 }
+
+/// Extra first-byte latency (ms) a cross-region machine pays on every
+/// bucket request: the inter-region round trip in front of S3's own
+/// time-to-first-byte.
+const XREGION_FIRST_BYTE_MS: SimTime = 60;
 
 #[derive(Debug)]
 enum Event {
@@ -162,6 +183,13 @@ enum Event {
     /// A scheduled mid-run submission lands on the queue (bursty
     /// arrival patterns; see [`Simulation::submit_at`]).
     SubmitJobs(JobSpec),
+    /// A scripted correlated fault opens (index into the topology's
+    /// fault list): AZ outages kill everything running in the domain,
+    /// bucket throttles squeeze the home bucket's aggregate budget.
+    FaultStart(usize),
+    /// The fault's window closes: restore whatever `FaultStart` took
+    /// away (market-side pricing/capacity overlays clear on their own).
+    FaultEnd(usize),
 }
 
 /// A job waiting on a data-plane flow (the state between phases).
@@ -311,6 +339,17 @@ pub struct Simulation {
     flow_job: Vec<Option<Xfer>>,
     /// Bumped whenever the flow set changes; stale `NetTick`s no-op.
     net_epoch: u64,
+    /// Jobs completed per failure domain (empty without a topology).
+    domain_jobs: Vec<u64>,
+    /// Bytes completed downloads moved across a region boundary.
+    xregion_bytes: u64,
+    /// Fault windows that actually opened during the run.
+    outages: Vec<OutageWindow>,
+    /// Scratch for `on_net_tick`'s finished-flow sweep: reused every
+    /// tick so the steady-state event loop allocates nothing.
+    net_done: Vec<(FlowId, FlowEnd)>,
+    /// Scratch for `on_monitor_tick`'s stranded-transfer sweep.
+    net_busy: Vec<InstanceId>,
     drained_at: Option<SimTime>,
     finished: bool,
 }
@@ -322,6 +361,38 @@ impl Simulation {
         acct.s3.create_bucket(&opts.data_bucket);
         acct.net.set_profile(opts.net.clone());
         setup::setup(&mut acct, &cfg, 0)?;
+        // Install the failure-domain layout before any price path is
+        // materialized: the market re-keys its walks per (domain, type)
+        // and overlays the scripted pricing/capacity faults.  Without a
+        // topology none of this runs and the account is bit-identical
+        // to the legacy single-domain build.
+        let mut domain_jobs = Vec::new();
+        if let Some(topo) = &opts.topology {
+            topo.validate().map_err(|e| anyhow::anyhow!("topology: {e}"))?;
+            acct.ec2.install_topology(
+                topo.domains.iter().map(|d| d.name.clone()).collect(),
+                opts.placement,
+            );
+            for f in &topo.faults {
+                let (start, end) = f.window_ms();
+                let domain = topo.index_of(&f.domain).unwrap() as u32;
+                let kind = match f.kind {
+                    FaultKind::AzOutage => Some(MarketFaultKind::Outage),
+                    FaultKind::PriceStorm => Some(MarketFaultKind::PriceStorm),
+                    FaultKind::BucketThrottle => None, // data-plane side only
+                };
+                if let Some(kind) = kind {
+                    acct.ec2.market.install_fault(MarketFault {
+                        domain,
+                        kind,
+                        start,
+                        end,
+                        magnitude: f.magnitude,
+                    });
+                }
+            }
+            domain_jobs = vec![0; topo.domain_count()];
+        }
         let rng = SimRng::new(opts.seed ^ 0xD15C);
         let engine = opts.engine;
         let workflow = opts.workflow.as_ref().map(WorkflowState::new);
@@ -341,6 +412,11 @@ impl Simulation {
             container_slot: Vec::new(),
             flow_job: Vec::new(),
             net_epoch: 0,
+            domain_jobs,
+            xregion_bytes: 0,
+            outages: Vec::new(),
+            net_done: Vec::new(),
+            net_busy: Vec::new(),
             drained_at: None,
             finished: false,
         })
@@ -419,6 +495,17 @@ impl Simulation {
         self.fleet = Some(fleet);
         self.events.schedule_in(0, Event::MarketTick);
         self.events.schedule_in(0, Event::AlarmEval);
+        // Scripted fault windows become first-class events.  The
+        // market-side overlays (pricing, capacity) are time-gated inside
+        // the market itself, so ordering against the tick at the same
+        // instant cannot change what fulfillment sees.
+        if let Some(topo) = &self.opts.topology {
+            for (idx, f) in topo.faults.iter().enumerate() {
+                let (start, end) = f.window_ms();
+                self.events.schedule_at(start, Event::FaultStart(idx));
+                self.events.schedule_at(end, Event::FaultEnd(idx));
+            }
+        }
         if self.opts.monitor {
             let mut mon = MonitorState::new(
                 fleet,
@@ -526,6 +613,78 @@ impl Simulation {
             Event::AlarmEval => self.on_alarm_eval(now),
             Event::MonitorTick => self.on_monitor_tick(now),
             Event::SubmitJobs(jobs) => self.on_submit_jobs(now, &jobs),
+            Event::FaultStart(idx) => self.on_fault_start(now, idx),
+            Event::FaultEnd(idx) => self.on_fault_end(now, idx),
+        }
+    }
+
+    // -- correlated faults --------------------------------------------------
+
+    /// A scripted fault window opens.  The market already prices the
+    /// window (capacity zeroed / prices multiplied from `start`); the
+    /// driver's half is the *correlated* part: killing everything that
+    /// is currently running in the domain, or squeezing the home
+    /// bucket's aggregate budget.
+    fn on_fault_start(&mut self, now: SimTime, idx: usize) {
+        let (fault, domain, hits_home_bucket) = {
+            let Some(topo) = &self.opts.topology else {
+                return;
+            };
+            let f = topo.faults[idx].clone();
+            let d = topo.index_of(&f.domain).unwrap();
+            let home = topo.region_of(d) == topo.home_region();
+            (f, d as u32, home)
+        };
+        let (start, end) = fault.window_ms();
+        self.outages.push(OutageWindow {
+            domain: fault.domain.clone(),
+            kind: fault.kind.name().to_string(),
+            start_ms: start,
+            end_ms: end,
+        });
+        match fault.kind {
+            FaultKind::AzOutage => {
+                // Every machine in the domain goes dark at once — the
+                // correlated loss AZ-spread placement exists to survive.
+                for id in self.acct.ec2.active_in_domain(domain) {
+                    self.stats.interruptions += 1;
+                    self.log_instance(now, id, "AZ outage: correlated termination");
+                    self.acct.ec2.terminate(id, TerminationReason::AzOutage, now);
+                    self.instance_died(now, id);
+                }
+            }
+            // Pricing is the market's overlay; interruptions follow on
+            // the ordinary per-minute evaluation as prices cross bids.
+            FaultKind::PriceStorm => {}
+            FaultKind::BucketThrottle => {
+                // The run's data bucket lives in the home region; a
+                // throttle scripted against a cross-region domain has
+                // nothing of ours to squeeze.
+                if hits_home_bucket {
+                    let bucket = self.opts.data_bucket.clone();
+                    self.acct.net.set_bucket_factor(now, &bucket, fault.magnitude);
+                    self.schedule_net_tick();
+                }
+            }
+        }
+    }
+
+    /// The fault window closes: undo the data-plane squeeze.  Market
+    /// overlays expire on their own, and outage-killed machines come
+    /// back through ordinary fleet replacement.
+    fn on_fault_end(&mut self, now: SimTime, idx: usize) {
+        let restore = {
+            let Some(topo) = &self.opts.topology else {
+                return;
+            };
+            let f = &topo.faults[idx];
+            f.kind == FaultKind::BucketThrottle
+                && topo.region_of(topo.index_of(&f.domain).unwrap()) == topo.home_region()
+        };
+        if restore {
+            let bucket = self.opts.data_bucket.clone();
+            self.acct.net.set_bucket_factor(now, &bucket, 1.0);
+            self.schedule_net_tick();
         }
     }
 
@@ -593,6 +752,15 @@ impl Simulation {
         };
         let _ = self.acct.ecs.register_instance(&self.cfg.ecs_cluster, id, vcpus, mem);
         self.log_instance(now, id, "boot complete, ECS agent registered");
+        // Machines outside the bucket's home region pay an inter-region
+        // round trip on every bucket request (first byte only; the
+        // bandwidth model is unchanged).
+        if let Some(topo) = &self.opts.topology {
+            let domain = self.acct.ec2.instance(id).map(|i| i.domain).unwrap_or(0);
+            if topo.is_cross_region(domain as usize) {
+                self.acct.net.set_instance_penalty(id, XREGION_FIRST_BYTE_MS);
+            }
+        }
         // Arm the crash clock.
         if let Some(mttf) = self.opts.crash_mttf {
             let dt = crate::sim::clock::from_secs_f64(
@@ -933,8 +1101,20 @@ impl Simulation {
         if epoch != self.net_epoch {
             return; // superseded by a later re-plan
         }
-        let done = self.acct.net.poll(now);
-        for (flow, _end) in done {
+        // Reuse the scratch vector: the steady-state tick allocates
+        // nothing (the report is bit-identical either way — see the
+        // differential test in `aws::s3::dataplane`).
+        let mut done = std::mem::take(&mut self.net_done);
+        done.clear();
+        self.acct.net.poll_into(now, &mut done);
+        for i in 0..done.len() {
+            let (flow, ref end) = done[i];
+            // Cross-region byte accounting: a completed download whose
+            // machine sits outside the bucket's region bills the
+            // inter-region rate on top of the regular egress line.
+            if end.dir == Direction::Download {
+                self.account_xregion(end);
+            }
             let Some(xfer) = self.take_flow(flow) else {
                 continue;
             };
@@ -972,7 +1152,28 @@ impl Simulation {
                 }
             }
         }
+        done.clear();
+        self.net_done = done;
         self.schedule_net_tick();
+    }
+
+    /// Count a completed download's bytes against the inter-region
+    /// egress meter when its machine lives outside the data bucket's
+    /// home region.  Peer links (node-local, shared-fs) never leave
+    /// S3, so only the real data bucket is metered.
+    fn account_xregion(&mut self, end: &FlowEnd) {
+        let Some(topo) = &self.opts.topology else {
+            return;
+        };
+        if end.bucket != self.opts.data_bucket {
+            return;
+        }
+        let Some(inst) = self.acct.ec2.instance(end.instance) else {
+            return;
+        };
+        if topo.is_cross_region(inst.domain as usize) {
+            self.xregion_bytes += end.bytes;
+        }
     }
 
     /// Land outputs, delete the message, count the job, poll again —
@@ -994,6 +1195,7 @@ impl Simulation {
         match self.acct.sqs.delete(&self.cfg.sqs_queue_name, receipt, now) {
             Ok(()) => {
                 self.stats.completed += 1;
+                self.count_domain_job(container);
                 self.log_job(now, &log, "");
             }
             Err(_) => {
@@ -1337,7 +1539,9 @@ impl Simulation {
         // The monitor terminates machines on its own (queue downscale,
         // final cleanup): abort transfers stranded on machines that are
         // no longer alive.
-        for id in self.acct.net.instances_with_flows() {
+        let mut busy = std::mem::take(&mut self.net_busy);
+        self.acct.net.instances_with_flows_into(&mut busy);
+        for &id in &busy {
             let alive = self
                 .acct
                 .ec2
@@ -1348,6 +1552,8 @@ impl Simulation {
                 self.cancel_transfers(now, id);
             }
         }
+        busy.clear();
+        self.net_busy = busy;
         if done {
             self.finished = true;
         } else {
@@ -1361,6 +1567,23 @@ impl Simulation {
         }
         self.acct.metrics.drop_dimension(&format!("i-{id}"));
         self.cancel_transfers(now, id);
+    }
+
+    /// Credit a completed job to the failure domain its container's
+    /// machine sits in (no-op without a topology).
+    fn count_domain_job(&mut self, container: ContainerId) {
+        if self.domain_jobs.is_empty() {
+            return;
+        }
+        let Some(c) = self.acct.ecs.container(container) else {
+            return;
+        };
+        let Some(inst) = self.acct.ec2.instance(c.instance) else {
+            return;
+        };
+        if let Some(slot) = self.domain_jobs.get_mut(inst.domain as usize) {
+            *slot += 1;
+        }
     }
 
     fn mark_drained_if_empty(&mut self, now: SimTime) {
@@ -1418,7 +1641,43 @@ impl Simulation {
             data,
             scaling,
             workflow: self.workflow_breakdown(),
+            topology: self.topology_breakdown(ended_at),
             jobs_submitted: self.jobs_submitted,
+        }
+    }
+
+    /// The per-run [`TopologyBreakdown`]: fleet usage per domain zipped
+    /// with the driver's own counters (jobs per domain, cross-region
+    /// bytes, fault windows that opened).  The default breakdown for
+    /// topology-free runs — their report JSON carries no topology key.
+    fn topology_breakdown(&mut self, ended_at: SimTime) -> TopologyBreakdown {
+        let Some(topo) = self.opts.topology.clone() else {
+            return TopologyBreakdown::default();
+        };
+        let usage = self.acct.ec2.domain_breakdown(ended_at);
+        let domains = topo
+            .domains
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let u = usage.get(i).cloned().unwrap_or_default();
+                DomainSlice {
+                    domain: d.name.clone(),
+                    region: d.region.clone(),
+                    launched: u.launched,
+                    interrupted: u.interrupted,
+                    jobs_completed: self.domain_jobs.get(i).copied().unwrap_or(0),
+                    cost_usd: u.cost_usd,
+                }
+            })
+            .collect();
+        TopologyBreakdown {
+            topology: topo.name.clone(),
+            placement: self.opts.placement.name().to_string(),
+            domains,
+            xregion_bytes: self.xregion_bytes,
+            xregion_usd: self.xregion_bytes as f64 / 1e9 * S3_XREGION_PER_GB,
+            outages: self.outages.clone(),
         }
     }
 
@@ -2002,5 +2261,154 @@ mod tests {
             report.summary()
         );
         assert!(report.fully_accounted());
+    }
+
+    // -- topology and correlated faults -------------------------------------
+
+    /// Two regions, with the home AZ dark for the whole window.
+    fn two_region_outage(duration_min: u64) -> ClusterTopology {
+        ClusterTopology::builder("two-region")
+            .domain("us-east-1a", "us-east-1")
+            .domain("us-west-2a", "us-west-2")
+            .fault(FaultKind::AzOutage, "us-east-1a", 0, duration_min, 1.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn topology_free_runs_report_the_default_breakdown() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(30.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert_eq!(report.topology, TopologyBreakdown::default());
+        assert!(!report.summary().contains("topology("), "{}", report.summary());
+        assert!(report.to_json().get("topology").is_none());
+    }
+
+    #[test]
+    fn az_outage_darkens_pack_but_spread_completes_cross_region() {
+        let cfg = quick_cfg();
+        // Data-shaped jobs so the surviving region's completions move
+        // metered bytes across the region boundary.
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]).with_uniform_data(8_000_000, 1_000_000);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let run = |placement| {
+            let opts = RunOptions {
+                topology: Some(two_region_outage(24 * 60)),
+                placement,
+                max_sim_time: 4 * HOUR,
+                ..Default::default()
+            };
+            let mut ex = modeled(60.0);
+            run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap()
+        };
+        let pack = run(Placement::Pack);
+        let spread = run(Placement::Spread);
+        // Pack puts everything in the dark home domain: nothing ever
+        // launches, nothing completes.
+        assert_eq!(pack.stats.completed, 0, "{}", pack.summary());
+        assert_eq!(pack.topology.domains[0].launched, 0, "{:?}", pack.topology);
+        // Spread routes around the outage through us-west-2...
+        assert_eq!(spread.stats.completed, 8, "{}", spread.summary());
+        assert_eq!(spread.topology.domains[1].jobs_completed, 8, "{:?}", spread.topology);
+        assert_eq!(spread.topology.domains[0].jobs_completed, 0, "{:?}", spread.topology);
+        // ...and pays for it as cross-region egress line items.
+        assert!(spread.topology.xregion_bytes >= 8 * 8_000_000, "{:?}", spread.topology);
+        assert!(spread.topology.xregion_usd > 0.0, "{:?}", spread.topology);
+        // Both runs witnessed the scripted window.
+        for r in [&pack, &spread] {
+            assert_eq!(r.topology.outages.len(), 1, "{:?}", r.topology);
+            assert_eq!(r.topology.outages[0].kind, "az-outage");
+            assert_eq!(r.topology.topology, "two-region");
+        }
+        assert!(spread.summary().contains("topology(two-region/spread)"), "{}", spread.summary());
+    }
+
+    #[test]
+    fn az_outage_mid_run_kills_running_machines_at_once() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 12, 4, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let topo = ClusterTopology::builder("two-region")
+            .domain("us-east-1a", "us-east-1")
+            .domain("us-west-2a", "us-west-2")
+            .fault(FaultKind::AzOutage, "us-east-1a", 10, 23 * 60, 1.0)
+            .build()
+            .unwrap();
+        let opts = RunOptions {
+            topology: Some(topo),
+            placement: Placement::Spread,
+            max_sim_time: 8 * HOUR,
+            ..Default::default()
+        };
+        let mut ex = modeled(300.0); // long jobs: machines are busy at +30 min
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap();
+        // The window opened with machines running in the home domain:
+        // the correlated kill shows up as domain-0 interruptions.
+        assert!(report.topology.domains[0].launched > 0, "{:?}", report.topology);
+        assert!(report.topology.domains[0].interrupted > 0, "{:?}", report.topology);
+        // The workload still finishes on the surviving domain.
+        assert_eq!(report.stats.completed, 48, "{}", report.summary());
+        assert!(report.fully_accounted(), "{}", report.summary());
+    }
+
+    #[test]
+    fn bucket_throttle_fault_stretches_the_drain() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]).with_uniform_data(64_000_000, 8_000_000);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let run = |throttle: Option<f64>| {
+            let mut topo = ClusterTopology::builder("one-az").domain("us-east-1a", "us-east-1");
+            if let Some(m) = throttle {
+                topo = topo.fault(FaultKind::BucketThrottle, "us-east-1a", 0, 24 * 60, m);
+            }
+            let opts = RunOptions {
+                topology: Some(topo.build().unwrap()),
+                // Narrow bucket: the throttle binds (on the default
+                // profile the NICs are the bottleneck and a squeezed
+                // bucket budget would change nothing).
+                net: crate::aws::s3::dataplane::NetProfile::narrow(),
+                ..Default::default()
+            };
+            let mut ex = modeled(60.0);
+            run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap()
+        };
+        let full = run(None);
+        let squeezed = run(Some(0.05));
+        assert_eq!(full.stats.completed, 8, "{}", full.summary());
+        assert_eq!(squeezed.stats.completed, 8, "{}", squeezed.summary());
+        // 5% of the bucket budget: the same bytes take longer to flow.
+        assert!(
+            squeezed.drained_at.unwrap() > full.drained_at.unwrap(),
+            "squeezed={:?} full={:?}",
+            squeezed.drained_at,
+            full.drained_at
+        );
+        assert_eq!(squeezed.topology.outages[0].kind, "bucket-throttle");
+        // Same region: no cross-region egress either way.
+        assert_eq!(squeezed.topology.xregion_bytes, 0);
+    }
+
+    #[test]
+    fn topology_runs_replay_bit_identically() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 6, 2, vec![]).with_uniform_data(16_000_000, 2_000_000);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let run = || {
+            let opts = RunOptions {
+                topology: Some(two_region_outage(2 * 60)),
+                placement: Placement::Cheapest,
+                max_sim_time: 8 * HOUR,
+                ..Default::default()
+            };
+            let mut ex = modeled(45.0);
+            run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(a.topology.domains.len(), 2);
     }
 }

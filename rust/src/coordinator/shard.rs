@@ -58,6 +58,7 @@ use crate::metrics::{
 };
 use crate::scenario::SweepFile;
 use crate::sim::{QueueKind, SimTime, StoreKind};
+use crate::topology::{DomainSlice, OutageWindow, TopologyBreakdown};
 
 use super::run::{EngineOptions, RunOptions};
 use super::sweep::{assemble_run, expand_and_validate, run_cell, CellResult, SweepRun};
@@ -71,7 +72,11 @@ pub use super::sweep::SweepPlan;
 /// v2: the result envelope's per-cell reports grew the `workflow`
 /// object (DAG breakdown, DESIGN.md §11) and the embedded Sweep file
 /// learned the WORKFLOW/SHARING axes.
-pub const WIRE_VERSION: u64 = 2;
+///
+/// v3: the per-cell reports grew the `topology` object (per-domain
+/// slices, cross-region egress, outage timelines, DESIGN.md §12) and
+/// the embedded Sweep file learned the TOPOLOGY/PLACEMENT axes.
+pub const WIRE_VERSION: u64 = 3;
 
 const REQUEST_KIND: &str = "sweep-shard-request";
 const RESULT_KIND: &str = "shard-result";
@@ -341,6 +346,44 @@ pub fn report_to_wire(r: &RunReport) -> Value {
                     .collect(),
             ),
         );
+    let t = &r.topology;
+    let topology = Value::obj()
+        .with("topology", t.topology.as_str())
+        .with("placement", t.placement.as_str())
+        .with(
+            "domains",
+            Value::Arr(
+                t.domains
+                    .iter()
+                    .map(|d| {
+                        Value::obj()
+                            .with("domain", d.domain.as_str())
+                            .with("region", d.region.as_str())
+                            .with("launched", d.launched)
+                            .with("interrupted", d.interrupted)
+                            .with("jobs_completed", d.jobs_completed)
+                            .with("cost_usd", d.cost_usd)
+                    })
+                    .collect(),
+            ),
+        )
+        .with("xregion_bytes", t.xregion_bytes)
+        .with("xregion_usd", t.xregion_usd)
+        .with(
+            "outages",
+            Value::Arr(
+                t.outages
+                    .iter()
+                    .map(|o| {
+                        Value::obj()
+                            .with("domain", o.domain.as_str())
+                            .with("kind", o.kind.as_str())
+                            .with("start_ms", o.start_ms)
+                            .with("end_ms", o.end_ms)
+                    })
+                    .collect(),
+            ),
+        );
     Value::obj()
         .with("stats", stats)
         .with("drained_at_ms", opt_ms_json(r.drained_at))
@@ -366,6 +409,7 @@ pub fn report_to_wire(r: &RunReport) -> Value {
         .with("data", data)
         .with("scaling", scaling)
         .with("workflow", workflow)
+        .with("topology", topology)
         .with("jobs_submitted", r.jobs_submitted)
 }
 
@@ -471,6 +515,39 @@ pub fn report_from_wire(v: &Value) -> Result<RunReport> {
         stall_ms: u64_field(wv, "stall_ms")?,
         stages,
     };
+    let tv = field(v, "topology")?;
+    let domains = arr_field(tv, "domains")?
+        .iter()
+        .map(|d| {
+            Ok(DomainSlice {
+                domain: str_field(d, "domain")?.to_string(),
+                region: str_field(d, "region")?.to_string(),
+                launched: u64_field(d, "launched")?,
+                interrupted: u64_field(d, "interrupted")?,
+                jobs_completed: u64_field(d, "jobs_completed")?,
+                cost_usd: f64_field(d, "cost_usd")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let outages = arr_field(tv, "outages")?
+        .iter()
+        .map(|o| {
+            Ok(OutageWindow {
+                domain: str_field(o, "domain")?.to_string(),
+                kind: str_field(o, "kind")?.to_string(),
+                start_ms: u64_field(o, "start_ms")?,
+                end_ms: u64_field(o, "end_ms")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let topology = TopologyBreakdown {
+        topology: str_field(tv, "topology")?.to_string(),
+        placement: str_field(tv, "placement")?.to_string(),
+        domains,
+        xregion_bytes: u64_field(tv, "xregion_bytes")?,
+        xregion_usd: f64_field(tv, "xregion_usd")?,
+        outages,
+    };
     Ok(RunReport {
         stats,
         drained_at: opt_ms_field(v, "drained_at_ms")?,
@@ -481,6 +558,7 @@ pub fn report_from_wire(v: &Value) -> Result<RunReport> {
         data,
         scaling,
         workflow,
+        topology,
         jobs_submitted: u64_field(v, "jobs_submitted")?,
     })
 }

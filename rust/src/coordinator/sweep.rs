@@ -407,6 +407,10 @@ mod tests {
                 mean_s: 120.0,
                 ..Default::default()
             },
+            workflow: None,
+            sharing: crate::workflow::SharingMode::S3Staging,
+            topology: None,
+            placement: crate::topology::Placement::Pack,
         };
         assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
         sc.instance_set = vec![

@@ -35,6 +35,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod testutil;
+pub mod topology;
 pub mod worker;
 pub mod workflow;
 pub mod workloads;

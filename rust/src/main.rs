@@ -19,15 +19,17 @@
 //!                 --input-mb 0,64,256 --net-profile standard,narrow \
 //!                 --scaling none,target-tracking,step --scaling-target 2,4 \
 //!                 --workflow none,diamond,mosaic --sharing s3,node-local,shared-fs \
+//!                 --topology single,three-az,two-region --placement pack,spread \
 //!                 [--on-demand-base N] [--threads N] [--json] \
 //!                 [--shards N] [--shard-exec process|inproc] \
 //!                 [--shard-timeout-s S] [--shard-retries N]
 //! ds describe     --config files/config.json [--fleet files/fleet.json]
-//!                 [--job files/job.json] [--workflow W]
+//!                 [--job files/job.json] [--workflow W] [--topology T]
 //!                 # validate + print + the per-type container packing
 //!                 # of the machines the run will actually use, the
-//!                 # Job file's data footprint (GB in/out), and the
-//!                 # workflow DAG's stage structure
+//!                 # Job file's data footprint (GB in/out), the
+//!                 # workflow DAG's stage structure, and the topology's
+//!                 # domains, per-domain pools, and bucket homes
 //! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
 //! ```
 //!
@@ -299,6 +301,49 @@ fn describe(args: &Args) -> Result<()> {
             ""
         };
         println!("  {}: fits {fit}{note}", slot.render());
+    }
+    // With --topology, validate and summarize the failure-domain layout
+    // capacity would place over (built-in shape name or TOPOLOGY file),
+    // mirroring --workflow: bad specs surface here as typed errors
+    // before any run burns fleet time.
+    if let Some(t) = args.get("topology") {
+        let topo = ds_rs::topology::ClusterTopology::resolve(t)
+            .with_context(|| format!("describing topology '{t}'"))?;
+        println!(
+            "\ntopology '{}': {} failure domain(s), {} fault window(s); home region {}",
+            topo.name,
+            topo.domain_count(),
+            topo.faults.len(),
+            topo.home_region(),
+        );
+        for (i, d) in topo.domains.iter().enumerate() {
+            let bucket = if topo.is_cross_region(i) {
+                format!("{} (cross-region: egress billed)", topo.home_region())
+            } else {
+                d.region.clone()
+            };
+            let pools: Vec<String> = slots
+                .iter()
+                .map(|s| format!("{}@{}", s.name, d.name))
+                .collect();
+            println!(
+                "  domain {i}: {} in {} — bucket home {bucket}; pools {}",
+                d.name,
+                d.region,
+                pools.join(", ")
+            );
+        }
+        for f in &topo.faults {
+            let (start, end) = f.window_ms();
+            println!(
+                "  fault: {} on {} from {}m to {}m (magnitude {})",
+                f.kind.name(),
+                f.domain,
+                start / 60_000,
+                end / 60_000,
+                f.magnitude
+            );
+        }
     }
     Ok(())
 }

@@ -28,7 +28,10 @@ use crate::json::Value;
 use crate::sim::clock::fmt_dur;
 use crate::sim::SimTime;
 
-use super::{DataBreakdown, PoolBreakdown, RunReport, ScalingBreakdown, Table, WorkflowBreakdown};
+use super::{
+    DataBreakdown, DomainSlice, PoolBreakdown, RunReport, ScalingBreakdown, Table,
+    TopologyBreakdown, WorkflowBreakdown,
+};
 
 /// Distribution summary over a sample of f64s.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -138,6 +141,12 @@ pub struct ScenarioSummary {
     /// scenario runs the same DAG).  Per-stage spans are per-run
     /// evidence, like the scaling timeline, so they stay empty here.
     pub workflow: WorkflowBreakdown,
+    /// Topology activity merged across all cells: per-domain counters and
+    /// cross-region egress summed; the topology/placement identity and
+    /// the domain list come from the first report (every cell of a
+    /// scenario runs the same topology).  Observed fault windows are
+    /// per-run evidence and stay empty here.
+    pub topology: TopologyBreakdown,
 }
 
 impl ScenarioSummary {
@@ -245,6 +254,40 @@ impl ScenarioSummary {
             workflow.artifact_bytes_staged += r.workflow.artifact_bytes_staged;
             workflow.stall_ms += r.workflow.stall_ms;
         }
+        // Merge the topology slices: identity and domain list from the
+        // first report (cells share the topology, so the lists align
+        // positionally), activity counters summed, fault windows dropped.
+        let mut topology = reports
+            .first()
+            .map(|r| TopologyBreakdown {
+                domains: r
+                    .topology
+                    .domains
+                    .iter()
+                    .map(|d| DomainSlice {
+                        launched: 0,
+                        interrupted: 0,
+                        jobs_completed: 0,
+                        cost_usd: 0.0,
+                        ..d.clone()
+                    })
+                    .collect(),
+                xregion_bytes: 0,
+                xregion_usd: 0.0,
+                outages: Vec::new(),
+                ..r.topology.clone()
+            })
+            .unwrap_or_default();
+        for r in reports {
+            topology.xregion_bytes += r.topology.xregion_bytes;
+            topology.xregion_usd += r.topology.xregion_usd;
+            for (slot, d) in topology.domains.iter_mut().zip(&r.topology.domains) {
+                slot.launched += d.launched;
+                slot.interrupted += d.interrupted;
+                slot.jobs_completed += d.jobs_completed;
+                slot.cost_usd += d.cost_usd;
+            }
+        }
         Self {
             label: label.to_string(),
             axes: Value::obj(),
@@ -267,6 +310,7 @@ impl ScenarioSummary {
             data,
             scaling,
             workflow,
+            topology,
         }
     }
 
@@ -289,7 +333,7 @@ impl ScenarioSummary {
     }
 
     pub fn to_json(&self) -> Value {
-        Value::obj()
+        let mut v = Value::obj()
             .with("label", self.label.as_str())
             .with("axes", self.axes.clone())
             .with("cells", self.cells)
@@ -313,7 +357,12 @@ impl ScenarioSummary {
             )
             .with("data", data_to_json(&self.data))
             .with("scaling", scaling_to_json(&self.scaling, false))
-            .with("workflow", workflow_to_json(&self.workflow, false))
+            .with("workflow", workflow_to_json(&self.workflow, false));
+        // Like the run report: single-domain summaries stay legacy-shaped.
+        if self.topology.topology != "single" {
+            v = v.with("topology", topology_to_json(&self.topology, false));
+        }
+        v
     }
 }
 
@@ -405,6 +454,54 @@ pub(crate) fn workflow_to_json(w: &WorkflowBreakdown, stages: bool) -> Value {
                             .with("depth", s.depth)
                             .with("released_s", s.released_ms as f64 / 1000.0)
                             .with("committed_s", s.committed_ms as f64 / 1000.0)
+                    })
+                    .collect(),
+            ),
+        );
+    }
+    v
+}
+
+/// JSON shape of a [`TopologyBreakdown`].  The observed fault-window
+/// rows ride along only in single-run reports (`ds run --json`);
+/// cross-seed summaries carry per-domain counters alone.  Callers emit
+/// this object only when a topology was actually installed, so
+/// single-domain output keeps its legacy field set.
+pub(crate) fn topology_to_json(t: &TopologyBreakdown, outages: bool) -> Value {
+    let mut v = Value::obj()
+        .with("topology", t.topology.as_str())
+        .with("placement", t.placement.as_str())
+        .with(
+            "domains",
+            Value::Arr(
+                t.domains
+                    .iter()
+                    .map(|d| {
+                        Value::obj()
+                            .with("domain", d.domain.as_str())
+                            .with("region", d.region.as_str())
+                            .with("launched", d.launched)
+                            .with("interrupted", d.interrupted)
+                            .with("jobs_completed", d.jobs_completed)
+                            .with("cost_usd", d.cost_usd)
+                    })
+                    .collect(),
+            ),
+        )
+        .with("xregion_bytes", t.xregion_bytes)
+        .with("xregion_usd", t.xregion_usd);
+    if outages {
+        v = v.with(
+            "outages",
+            Value::Arr(
+                t.outages
+                    .iter()
+                    .map(|o| {
+                        Value::obj()
+                            .with("domain", o.domain.as_str())
+                            .with("kind", o.kind.as_str())
+                            .with("start_s", o.start_ms as f64 / 1000.0)
+                            .with("end_s", o.end_ms as f64 / 1000.0)
                     })
                     .collect(),
             ),
@@ -586,6 +683,36 @@ mod tests {
                     committed_ms: 100,
                 }],
             },
+            topology: TopologyBreakdown {
+                topology: "two-region".into(),
+                placement: "spread".into(),
+                domains: vec![
+                    DomainSlice {
+                        domain: "us-east-1a".into(),
+                        region: "us-east-1".into(),
+                        launched: 2,
+                        interrupted: 1,
+                        jobs_completed: completed / 2,
+                        cost_usd: cost / 2.0,
+                    },
+                    DomainSlice {
+                        domain: "us-west-2a".into(),
+                        region: "us-west-2".into(),
+                        launched: 1,
+                        interrupted: 0,
+                        jobs_completed: completed - completed / 2,
+                        cost_usd: cost / 2.0,
+                    },
+                ],
+                xregion_bytes: 500,
+                xregion_usd: 0.045,
+                outages: vec![crate::topology::OutageWindow {
+                    domain: "us-east-1a".into(),
+                    kind: "az-outage".into(),
+                    start_ms: 0,
+                    end_ms: HOUR,
+                }],
+            },
             jobs_submitted: completed + 2,
         }
     }
@@ -688,6 +815,42 @@ mod tests {
         assert_eq!(w.get("workflow").and_then(Value::as_str), Some("diamond"));
         assert_eq!(w.get("releases").and_then(Value::as_u64), Some(12));
         assert!(w.get("stages").is_none());
+    }
+
+    #[test]
+    fn summary_merges_topology_counters() {
+        let r1 = report(10, Some(HOUR), 0.5);
+        let mut r2 = report(20, Some(2 * HOUR), 1.5);
+        r2.topology.xregion_bytes = 1_500;
+        let s = ScenarioSummary::from_reports("s", &[&r1, &r2]);
+        assert_eq!(s.topology.topology, "two-region");
+        assert_eq!(s.topology.placement, "spread");
+        assert_eq!(s.topology.domains.len(), 2, "domain list from the first cell");
+        assert_eq!(s.topology.domains[0].domain, "us-east-1a");
+        assert_eq!(s.topology.domains[0].launched, 4, "per-domain counters sum");
+        assert_eq!(s.topology.domains[0].interrupted, 2);
+        assert_eq!(s.topology.domains[0].jobs_completed, 15);
+        assert!((s.topology.domains[1].cost_usd - 1.0).abs() < 1e-12);
+        assert_eq!(s.topology.xregion_bytes, 2_000);
+        assert!((s.topology.xregion_usd - 0.09).abs() < 1e-12);
+        assert!(s.topology.outages.is_empty(), "fault windows are per-run only");
+        // The summary JSON carries the domain rows but no outage rows.
+        let j = s.to_json();
+        let t = j.get("topology").unwrap();
+        assert_eq!(t.get("placement").and_then(Value::as_str), Some("spread"));
+        assert_eq!(
+            t.get("domains").and_then(Value::as_arr).map(Vec::len),
+            Some(2)
+        );
+        assert!(t.get("outages").is_none());
+    }
+
+    #[test]
+    fn single_domain_summary_json_stays_legacy_shaped() {
+        let mut r = report(10, Some(HOUR), 0.5);
+        r.topology = TopologyBreakdown::default();
+        let s = ScenarioSummary::from_reports("s", &[&r]);
+        assert!(s.to_json().get("topology").is_none());
     }
 
     #[test]

@@ -6,6 +6,7 @@ pub use aggregate::{Aggregate, ScenarioSummary, SweepReport};
 pub use crate::aws::billing::DataBreakdown;
 pub use crate::aws::ec2::PoolBreakdown;
 pub use crate::coordinator::autoscale::{ScalingBreakdown, ScalingDecision};
+pub use crate::topology::{DomainSlice, OutageWindow, TopologyBreakdown};
 pub use crate::workflow::{StageSpan, WorkflowBreakdown};
 
 use crate::aws::billing::CostReport;
@@ -73,6 +74,13 @@ pub struct RunReport {
     /// bytes staged, stall time, per-stage spans).  `workflow == "none"`
     /// — the default — is the paper's flat bag of independent jobs.
     pub workflow: WorkflowBreakdown,
+    /// The multi-region slice: which failure domains the fleet spanned,
+    /// per-domain launches / interruptions / jobs / dollars, cross-region
+    /// egress, and the fault windows that opened.  `topology == "single"`
+    /// — the default — is the paper's implicit one-region cluster and
+    /// emits nothing extra in summaries or JSON, so pre-topology output
+    /// is byte-identical.
+    pub topology: TopologyBreakdown,
     /// Jobs submitted (initial submission plus any scheduled bursts and
     /// dependent jobs released by the workflow scheduler).
     pub jobs_submitted: u64,
@@ -191,6 +199,23 @@ impl RunReport {
                 fmt_dur(self.workflow.stall_ms),
             ));
         }
+        if self.topology.topology != "single" {
+            s.push_str(&format!(
+                "topology({}/{}): {} domains, {} fault windows; x-region {:.2} GB (${:.4})\n",
+                self.topology.topology,
+                self.topology.placement,
+                self.topology.domains.len(),
+                self.topology.outages.len(),
+                self.topology.xregion_bytes as f64 / 1e9,
+                self.topology.xregion_usd,
+            ));
+            for d in &self.topology.domains {
+                s.push_str(&format!(
+                    "  domain {} ({}): {} launched, {} interrupted, {} jobs, ${:.4}\n",
+                    d.domain, d.region, d.launched, d.interrupted, d.jobs_completed, d.cost_usd
+                ));
+            }
+        }
         if self.data.total_bytes() > 0 {
             s.push_str(&format!(
                 "data: {:.2} GB down, {:.2} GB up ({:.2} GB wasted); bottleneck {:.0}% bucket / {:.0}% NIC; requests ${:.4}, egress ${:.4}\n",
@@ -237,7 +262,7 @@ impl RunReport {
             .with("on_demand_equivalent_usd", self.cost.on_demand_equivalent_usd)
             .with("spot_savings_factor", self.cost.spot_savings_factor())
             .with("overhead_fraction", self.cost.overhead_fraction());
-        Value::obj()
+        let mut v = Value::obj()
             .with("jobs_submitted", self.jobs_submitted)
             .with("stats", stats)
             .with(
@@ -258,7 +283,14 @@ impl RunReport {
             )
             .with("data", aggregate::data_to_json(&self.data))
             .with("scaling", aggregate::scaling_to_json(&self.scaling, true))
-            .with("workflow", aggregate::workflow_to_json(&self.workflow, true))
+            .with("workflow", aggregate::workflow_to_json(&self.workflow, true));
+        // The topology object appears only for multi-domain runs, so the
+        // default single-domain JSON stays byte-identical to pre-topology
+        // output (the golden snapshots pin exactly this).
+        if self.topology.topology != "single" {
+            v = v.with("topology", aggregate::topology_to_json(&self.topology, true));
+        }
+        v
     }
 }
 
@@ -328,6 +360,7 @@ mod tests {
             data: DataBreakdown::default(),
             scaling: ScalingBreakdown::default(),
             workflow: WorkflowBreakdown::default(),
+            topology: TopologyBreakdown::default(),
             jobs_submitted: 100,
         }
     }
@@ -376,6 +409,58 @@ mod tests {
         let s = dag.summary();
         assert!(s.contains("workflow(diamond/node-local)"), "{s}");
         assert!(s.contains("critical path 3"), "{s}");
+    }
+
+    #[test]
+    fn summary_and_json_show_topology_only_for_multi_domain_runs() {
+        let flat = report();
+        assert!(!flat.summary().contains("topology("));
+        assert!(flat.to_json().get("topology").is_none(), "single-domain JSON is legacy-shaped");
+        let mut multi = report();
+        multi.topology.topology = "two-region".into();
+        multi.topology.placement = "spread".into();
+        multi.topology.domains = vec![
+            DomainSlice {
+                domain: "us-east-1a".into(),
+                region: "us-east-1".into(),
+                launched: 3,
+                interrupted: 2,
+                jobs_completed: 40,
+                cost_usd: 0.25,
+            },
+            DomainSlice {
+                domain: "us-west-2a".into(),
+                region: "us-west-2".into(),
+                launched: 4,
+                interrupted: 0,
+                jobs_completed: 60,
+                cost_usd: 0.5,
+            },
+        ];
+        multi.topology.xregion_bytes = 2_000_000_000;
+        multi.topology.xregion_usd = 0.18;
+        multi.topology.outages.push(OutageWindow {
+            domain: "us-east-1a".into(),
+            kind: "az-outage".into(),
+            start_ms: 0,
+            end_ms: HOUR,
+        });
+        let s = multi.summary();
+        assert!(s.contains("topology(two-region/spread)"), "{s}");
+        assert!(s.contains("domain us-west-2a (us-west-2): 4 launched"), "{s}");
+        assert!(s.contains("x-region 2.00 GB ($0.1800)"), "{s}");
+        let t = multi.to_json().get("topology").cloned().unwrap();
+        assert_eq!(t.get("topology").and_then(Value::as_str), Some("two-region"));
+        assert_eq!(
+            t.get("domains").and_then(Value::as_arr).map(Vec::len),
+            Some(2)
+        );
+        assert_eq!(
+            t.get("outages").and_then(Value::as_arr).unwrap()[0]
+                .get("kind")
+                .and_then(Value::as_str),
+            Some("az-outage")
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! entry in [`AXES`].  The registry order is the **label order**
 //! (machines, visibility, volatility, duration, allocation, instance
 //! set, input MB, net profile, scaling, scaling target, workflow,
-//! sharing), chosen so registry-assembled labels are
+//! sharing, topology, placement), chosen so registry-assembled labels are
 //! byte-identical to the historical hand-formatted ones; the cartesian
 //! *expansion* order lives in
 //! [`ScenarioMatrix::scenarios`](super::ScenarioMatrix::scenarios).
@@ -25,6 +25,7 @@ use crate::coordinator::autoscale::{ScalingMode, DEFAULT_TARGET_PER_UNIT};
 use crate::cli::Args;
 use crate::json::Value;
 use crate::sim::clock::{fmt_dur, from_secs_f64};
+use crate::topology::{ClusterTopology, Placement};
 use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
@@ -94,6 +95,8 @@ pub static AXES: &[&dyn Axis] = &[
     &ScalingTargetAxis,
     &WorkflowAxis,
     &SharingAxis,
+    &TopologyAxis,
+    &PlacementAxis,
 ];
 
 // ---------------------------------------------------------------------------
@@ -1125,6 +1128,158 @@ impl Axis for SharingAxis {
     }
 }
 
+/// Failure-domain layout — `--topology` / `TOPOLOGY`.  CLI items are
+/// built-in shape names ([`ClusterTopology::SHAPES`]), TOPOLOGY-file
+/// paths, or `single` (the implicit pre-topology cluster, parsed to
+/// "no topology installed").  Sweep files additionally accept inline
+/// topology objects, and [`Axis::render_file`] always inlines the full
+/// spec so a rendered plan stays hermetic (shard workers never chase
+/// file paths).  Labeled and serialized only when a topology is
+/// installed, so legacy labels and sweep JSON stay byte-stable.
+pub struct TopologyAxis;
+
+/// Parse one CLI/file topology item: `single` for the legacy
+/// single-domain world, else a shape name or TOPOLOGY-file path
+/// resolved by [`ClusterTopology::resolve`].
+fn parse_topology(s: &str) -> Result<Option<ClusterTopology>> {
+    if s == "single" {
+        return Ok(None);
+    }
+    ClusterTopology::resolve(s).map(Some).map_err(|e| anyhow!(e))
+}
+
+impl Axis for TopologyAxis {
+    fn key(&self) -> &'static str {
+        "TOPOLOGY"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "topology",
+            value: "T,T,..",
+            help: "failure-domain axis: single|three-az|two-region or a TOPOLOGY-file path",
+            file_key: Some("TOPOLOGY"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.topologies.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(
+            m.topologies
+                .iter()
+                .map(|t| t.as_ref().map_or("single", |s| s.name.as_str())),
+        )
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "topology")? {
+            m.topologies = items
+                .iter()
+                .map(|s| parse_topology(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "TOPOLOGY")? {
+            m.topologies = items
+                .iter()
+                .map(|v| match v {
+                    Value::Obj(_) => ClusterTopology::from_json(v)
+                        .map(Some)
+                        .map_err(|e| anyhow!(e)),
+                    _ => item_str(v, "TOPOLOGY").and_then(parse_topology),
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "TOPOLOGY",
+            Value::Arr(
+                m.topologies
+                    .iter()
+                    .map(|t| t.as_ref().map_or(Value::from("single"), |s| s.to_json()))
+                    .collect(),
+            ),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.topology = sc.topology.clone();
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        // Single-domain cells stay unlabeled (only-label-when-used).
+        sc.topology.as_ref().map(|t| format!("topo={}", t.name))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        sc.topology.as_ref().map(|t| Value::from(t.name.as_str()))
+    }
+}
+
+/// Placement policy for topology cells — `--placement` / `PLACEMENT`:
+/// how the fleet spreads capacity across failure domains (pack the home
+/// domain, spread round-robin, or chase the cheapest pool anywhere).
+/// Labeled (and serialized into scenario JSON) only when it departs
+/// from the default pack policy.
+pub struct PlacementAxis;
+
+fn parse_placement(s: &str) -> Result<Placement> {
+    Placement::parse(s).ok_or_else(|| anyhow!("placement must be pack|spread|cheapest, got {s}"))
+}
+
+impl Axis for PlacementAxis {
+    fn key(&self) -> &'static str {
+        "PLACEMENT"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "placement",
+            value: "P,P,..",
+            help: "domain placement axis: pack|spread|cheapest",
+            file_key: Some("PLACEMENT"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.placements.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.placements.iter().map(|p| p.name()))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "placement")? {
+            m.placements = items
+                .iter()
+                .map(|s| parse_placement(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "PLACEMENT")? {
+            m.placements = items
+                .iter()
+                .map(|v| item_str(v, "PLACEMENT").and_then(parse_placement))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "PLACEMENT",
+            Value::Arr(m.placements.iter().map(|p| Value::from(p.name())).collect()),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.placement = sc.placement;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        (sc.placement != Placement::Pack).then(|| format!("place={}", sc.placement.name()))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.placement != Placement::Pack).then(|| Value::from(sc.placement.name()))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The flag tables (generated surfaces)
 // ---------------------------------------------------------------------------
@@ -1504,6 +1659,8 @@ mod tests {
             }],
             workflows: vec![None, Some(crate::workloads::dag::diamond())],
             sharings: vec![SharingMode::S3Staging, SharingMode::NodeLocal],
+            topologies: vec![None, ClusterTopology::shape("three-az")],
+            placements: vec![Placement::Pack, Placement::Spread],
         };
         let mut file = Value::obj();
         for (k, v) in render_matrix_entries(&m) {
@@ -1724,6 +1881,97 @@ mod tests {
         let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
         assert!(cell.opts.workflow.is_none());
         assert_eq!(cell.opts.sharing, SharingMode::S3Staging);
+    }
+
+    #[test]
+    fn topology_axis_parses_shapes_and_labels_when_used() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --topology single,two-region --placement pack,spread");
+        TopologyAxis.parse_cli(&args, &mut m).unwrap();
+        PlacementAxis.parse_cli(&args, &mut m).unwrap();
+        assert_eq!(m.topologies.len(), 2);
+        assert!(m.topologies[0].is_none(), "single parses to no topology");
+        assert_eq!(m.topologies[1].as_ref().unwrap().name, "two-region");
+        assert_eq!(m.placements, vec![Placement::Pack, Placement::Spread]);
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 4);
+        // Single-domain cells and pack cells stay unlabeled (historical
+        // labels stable); engaged cells carry fragments and JSON keys.
+        assert!(TopologyAxis.label(&scs[0]).is_none());
+        assert!(PlacementAxis.label(&scs[0]).is_none());
+        assert_eq!(PlacementAxis.label(&scs[1]).as_deref(), Some("place=spread"));
+        assert_eq!(TopologyAxis.label(&scs[2]).as_deref(), Some("topo=two-region"));
+        assert_eq!(
+            TopologyAxis
+                .json_value(&scs[3])
+                .and_then(|v| v.as_str().map(String::from))
+                .as_deref(),
+            Some("two-region")
+        );
+        assert_eq!(
+            PlacementAxis
+                .json_value(&scs[3])
+                .and_then(|v| v.as_str().map(String::from))
+                .as_deref(),
+            Some("spread")
+        );
+        // Bad values are rejected, not defaulted.
+        let args = parse("sweep --topology no-such-shape");
+        assert!(TopologyAxis.parse_cli(&args, &mut m).is_err());
+        let args = parse("sweep --placement scatter");
+        let err = PlacementAxis.parse_cli(&args, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("pack|spread|cheapest"), "{err:#}");
+    }
+
+    #[test]
+    fn topology_file_accepts_inline_objects_and_rejects_bad_specs() {
+        let mut m = ScenarioMatrix::default();
+        let inline = ClusterTopology::shape("three-az").unwrap().render();
+        let file =
+            crate::json::parse(&format!(r#"{{"TOPOLOGY": ["single", {inline}]}}"#)).unwrap();
+        TopologyAxis.parse_file(&file, &mut m).unwrap();
+        assert_eq!(m.topologies.len(), 2);
+        assert!(m.topologies[0].is_none());
+        assert_eq!(
+            format!("{:?}", m.topologies[1].as_ref().unwrap()),
+            format!("{:?}", ClusterTopology::shape("three-az").unwrap())
+        );
+        // An inline spec with a fault on an undeclared domain surfaces
+        // the typed validation error.
+        let file = crate::json::parse(
+            r#"{"TOPOLOGY": [{"NAME": "t",
+                "DOMAINS": [{"name": "a", "region": "r1"}],
+                "FAULTS": [{"kind": "az-outage", "domain": "ghost",
+                            "at_min": 0, "duration_min": 10, "magnitude": 1.0}]}]}"#,
+        )
+        .unwrap();
+        let err = TopologyAxis.parse_file(&file, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    }
+
+    #[test]
+    fn topology_overlay_reaches_run_options() {
+        use crate::config::{AppConfig, FleetSpec};
+        use crate::coordinator::run::RunOptions;
+        let m = ScenarioMatrix {
+            topologies: vec![ClusterTopology::shape("two-region")],
+            placements: vec![Placement::Cheapest],
+            ..Default::default()
+        };
+        let sc = m.scenarios().remove(0);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert_eq!(cell.opts.topology.as_ref().unwrap().name, "two-region");
+        assert_eq!(cell.opts.placement, Placement::Cheapest);
+        // `ds run` shares the axes (opts-owned, not file-owned).
+        let cell = sc.run_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.topology.is_some());
+        // Single-domain scenarios leave the options untouched.
+        let m = ScenarioMatrix::default();
+        let sc = m.scenarios().remove(0);
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.topology.is_none());
+        assert_eq!(cell.opts.placement, Placement::Pack);
     }
 
     #[test]

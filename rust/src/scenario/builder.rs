@@ -36,6 +36,7 @@ use crate::coordinator::autoscale::ScalingMode;
 use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::coordinator::run::RunOptions;
 use crate::sim::SimTime;
+use crate::topology::{ClusterTopology, Placement};
 use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
@@ -62,6 +63,8 @@ pub struct SweepPlanBuilder {
     models: Option<Vec<DurationModel>>,
     workflows: Option<Vec<Option<WorkflowSpec>>>,
     sharings: Option<Vec<SharingMode>>,
+    topologies: Option<Vec<Option<ClusterTopology>>>,
+    placements: Option<Vec<Placement>>,
 }
 
 impl SweepPlanBuilder {
@@ -194,6 +197,22 @@ impl SweepPlanBuilder {
         self
     }
 
+    /// Cluster-topology axis; `None` entries are the implicit
+    /// single-domain cluster (default: `[None]`).
+    pub fn topologies(
+        mut self,
+        topologies: impl IntoIterator<Item = Option<ClusterTopology>>,
+    ) -> Self {
+        self.topologies = Some(topologies.into_iter().collect());
+        self
+    }
+
+    /// Placement-policy axis for topology cells (default: pack).
+    pub fn placements(mut self, placements: impl IntoIterator<Item = Placement>) -> Self {
+        self.placements = Some(placements.into_iter().collect());
+        self
+    }
+
     /// Assemble the plan.  Errors on missing jobs or any explicitly
     /// empty axis (an empty axis would silently erase the whole matrix).
     pub fn build(self) -> Result<SweepPlan> {
@@ -227,6 +246,8 @@ impl SweepPlanBuilder {
         set_axis!(models, models);
         set_axis!(workflows, workflows);
         set_axis!(sharings, sharings);
+        set_axis!(topologies, topologies);
+        set_axis!(placements, placements);
         Ok(SweepPlan {
             base_cfg: cfg,
             jobs,

@@ -6,7 +6,7 @@
 //! honest the same way.  Every sweep axis — machines, visibility,
 //! volatility, duration model, allocation strategy, instance set, input
 //! MB, net profile, scaling policy, scaling target, workflow, sharing
-//! mode — is one [`Axis`]
+//! mode, topology, placement — is one [`Axis`]
 //! implementation declaring its CLI
 //! flag(s), its Sweep-file key, its per-cell config/fleet/job overlay,
 //! its label fragment, and its JSON identity.  The registry ([`AXES`])
@@ -56,6 +56,7 @@ use crate::coordinator::autoscale::ScalingMode;
 use crate::coordinator::run::RunOptions;
 use crate::json::Value;
 use crate::sim::{SimTime, MINUTE};
+use crate::topology::{ClusterTopology, Placement};
 use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
@@ -104,6 +105,13 @@ pub struct Scenario {
     /// Where workflow artifacts live ([`SharingMode::S3Staging`] is the
     /// paper's bucket-staging baseline); ignored for flat cells.
     pub sharing: SharingMode,
+    /// Failure-domain layout for this cell; `None` = the legacy
+    /// single-domain world.
+    pub topology: Option<ClusterTopology>,
+    /// How the fleet spreads capacity across the topology's domains
+    /// ([`Placement::Pack`] is the neutral default); ignored for
+    /// single-domain cells.
+    pub placement: Placement,
 }
 
 impl Scenario {
@@ -230,6 +238,10 @@ pub struct ScenarioMatrix {
     pub workflows: Vec<Option<WorkflowSpec>>,
     /// Artifact sharing modes (`--sharing`).
     pub sharings: Vec<SharingMode>,
+    /// Failure-domain layouts (`--topology`); `None` = single-domain.
+    pub topologies: Vec<Option<ClusterTopology>>,
+    /// Placement policies (`--placement`).
+    pub placements: Vec<Placement>,
 }
 
 impl Default for ScenarioMatrix {
@@ -248,6 +260,8 @@ impl Default for ScenarioMatrix {
             models: vec![DurationModel::default()],
             workflows: vec![None],
             sharings: vec![SharingMode::S3Staging],
+            topologies: vec![None],
+            placements: vec![Placement::Pack],
         }
     }
 }
@@ -267,26 +281,14 @@ impl ScenarioMatrix {
     /// Expand the cartesian product in a fixed order: machines outermost,
     /// then visibility, volatility, allocation strategy, instance set,
     /// input MB, net profile, scaling mode, scaling target, duration
-    /// model, workflow, and innermost the sharing mode.  Axis
-    /// element order is preserved, so single-axis sweeps read like the
-    /// input list.  (This expansion order is pinned by historical
-    /// reports; the registry's order is the *label* order, which differs
-    /// only in where the duration model sits.)
+    /// model, workflow, sharing mode, topology, and innermost the
+    /// placement policy.  Axis element order is preserved, so
+    /// single-axis sweeps read like the input list.  (This expansion
+    /// order is pinned by historical reports; the registry's order is
+    /// the *label* order, which differs only in where the duration
+    /// model sits.)
     pub fn scenarios(&self) -> Vec<Scenario> {
-        let mut out = Vec::with_capacity(
-            self.cluster_machines.len()
-                * self.visibilities.len()
-                * self.volatilities.len()
-                * self.allocations.len()
-                * self.instance_sets.len()
-                * self.input_mbs.len()
-                * self.net_profiles.len()
-                * self.scalings.len()
-                * self.scaling_targets.len()
-                * self.models.len()
-                * self.workflows.len()
-                * self.sharings.len(),
-        );
+        let mut out = Vec::with_capacity(self.scenario_count());
         for &machines in &self.cluster_machines {
             for &visibility in &self.visibilities {
                 for &volatility in &self.volatilities {
@@ -299,20 +301,27 @@ impl ScenarioMatrix {
                                             for model in &self.models {
                                                 for workflow in &self.workflows {
                                                     for &sharing in &self.sharings {
-                                                        out.push(Scenario {
-                                                            volatility,
-                                                            visibility,
-                                                            machines,
-                                                            allocation,
-                                                            instance_set: instance_set.clone(),
-                                                            input_mb,
-                                                            net: net.clone(),
-                                                            scaling,
-                                                            scaling_target,
-                                                            model: model.clone(),
-                                                            workflow: workflow.clone(),
-                                                            sharing,
-                                                        });
+                                                        for topology in &self.topologies {
+                                                            for &placement in &self.placements {
+                                                                out.push(Scenario {
+                                                                    volatility,
+                                                                    visibility,
+                                                                    machines,
+                                                                    allocation,
+                                                                    instance_set: instance_set
+                                                                        .clone(),
+                                                                    input_mb,
+                                                                    net: net.clone(),
+                                                                    scaling,
+                                                                    scaling_target,
+                                                                    model: model.clone(),
+                                                                    workflow: workflow.clone(),
+                                                                    sharing,
+                                                                    topology: topology.clone(),
+                                                                    placement,
+                                                                });
+                                                            }
+                                                        }
                                                     }
                                                 }
                                             }
@@ -399,6 +408,8 @@ mod tests {
             },
             workflow: None,
             sharing: SharingMode::S3Staging,
+            topology: None,
+            placement: Placement::Pack,
         };
         assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
         sc.input_mb = 64.0;
@@ -415,6 +426,15 @@ mod tests {
             sc.label(),
             "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow \
              wf=diamond share=node-local"
+        );
+        // Topology and placement trail everything, same
+        // only-label-when-used rule.
+        sc.topology = ClusterTopology::shape("two-region");
+        sc.placement = Placement::Spread;
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow \
+             wf=diamond share=node-local topo=two-region place=spread"
         );
     }
 

@@ -1,0 +1,759 @@
+//! Cluster topology: failure domains, placement policies, and
+//! correlated-fault injection (DESIGN.md §12).
+//!
+//! The paper's cluster is one implicit region — one spot market, one
+//! bucket, faults that are independent per machine.  Real AWS
+//! coordination is dominated by *where* things run: regions and AZs with
+//! independent spot markets and capacity, region-local buckets whose
+//! cross-region reads cost extra egress dollars and latency, and
+//! failures that are correlated within a domain (an AZ outage, a spot
+//! reclaim storm in one pool, a throttled regional bucket).  This module
+//! is the typed half of that story:
+//!
+//! * [`ClusterTopology`] — named [`FailureDomain`]s (AZ granularity,
+//!   each tagged with its region) plus declared [`FaultSpec`] windows.
+//!   Construction validates eagerly: empty topologies, duplicate domain
+//!   names, faults naming unknown domains, and zero-length or
+//!   nonsensical fault windows are typed [`TopologyError`]s, never
+//!   panics.  Topologies parse from a TOPOLOGY JSON file
+//!   ([`ClusterTopology::parse`], strict about unknown keys like the
+//!   Sweep and WORKFLOW files), render back bit-identically
+//!   ([`ClusterTopology::render`]), build in code via
+//!   [`ClusterTopology::builder`], and resolve from built-in shape names
+//!   (`single`, `three-az`, `two-region`) or file paths
+//!   ([`ClusterTopology::resolve`]).
+//! * [`Placement`] — how the fleet spreads capacity over domains: pack
+//!   everything into the home domain, spread round-robin for blast-radius
+//!   isolation, or chase the cheapest spot price across all domains.
+//! * [`FaultKind`] — the correlated-failure vocabulary: `az-outage`
+//!   (domain capacity zero, running instances killed), `price-storm`
+//!   (spot price multiplier on one domain's pools), `bucket-throttle`
+//!   (one region's bucket capacity scaled down).
+//! * [`TopologyBreakdown`] — the topology slice of a run report
+//!   (per-domain cost/interruptions/jobs, cross-region egress bytes and
+//!   dollars, outage timelines), threaded RunReport → ScenarioSummary →
+//!   sweep JSON exactly like the pool/data/scaling/workflow breakdowns.
+//!
+//! The market/fleet mechanics that consume all of this live in
+//! [`crate::aws::ec2`]; the driver that schedules fault windows and
+//! accounts cross-region egress is [`crate::coordinator::run`].
+
+use thiserror::Error;
+
+use crate::json::{parse, Value};
+use crate::sim::{SimTime, MINUTE};
+
+/// Why a topology spec was rejected.  Every variant names the topology
+/// and the offending element, so `ds describe`/`ds sweep --dry-run` can
+/// surface the problem without a panic.
+#[derive(Debug, Error, PartialEq)]
+pub enum TopologyError {
+    #[error("topology spec: {0}")]
+    Parse(String),
+    #[error("topology '{topology}': no failure domains declared")]
+    Empty { topology: String },
+    #[error("topology '{topology}': duplicate domain name '{domain}'")]
+    DuplicateDomain { topology: String, domain: String },
+    #[error("topology '{topology}': fault references unknown domain '{domain}'")]
+    UnknownDomain { topology: String, domain: String },
+    #[error("topology '{topology}': fault on '{domain}' has a zero-length window")]
+    EmptyWindow { topology: String, domain: String },
+    #[error("topology '{topology}': fault on '{domain}' has non-positive magnitude {magnitude}")]
+    BadMagnitude {
+        topology: String,
+        domain: String,
+        magnitude: f64,
+    },
+    #[error(
+        "unknown topology '{0}' (expected a shape name — single, three-az, two-region — or a readable TOPOLOGY file path)"
+    )]
+    Unknown(String),
+}
+
+fn parse_err(msg: impl Into<String>) -> TopologyError {
+    TopologyError::Parse(msg.into())
+}
+
+/// One failure domain — an availability zone — tagged with the region
+/// whose bucket is "local" to it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailureDomain {
+    /// AZ-style name, e.g. `us-east-1a`.
+    pub name: String,
+    /// Region the domain belongs to, e.g. `us-east-1`.
+    pub region: String,
+}
+
+/// The correlated-failure vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The domain loses all spot capacity for the window; running spot
+    /// instances there are terminated when the window opens.
+    AzOutage,
+    /// Spot prices in the domain are multiplied by `magnitude` for the
+    /// window — a reclaim storm that interrupts over-bid instances.
+    PriceStorm,
+    /// The region's bucket throughput is multiplied by `magnitude`
+    /// (< 1.0 throttles) for the window.
+    BucketThrottle,
+}
+
+impl FaultKind {
+    pub const ALL: [FaultKind; 3] = [Self::AzOutage, Self::PriceStorm, Self::BucketThrottle];
+
+    /// Stable name (also the TOPOLOGY file value and report label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::AzOutage => "az-outage",
+            Self::PriceStorm => "price-storm",
+            Self::BucketThrottle => "bucket-throttle",
+        }
+    }
+
+    /// Parse a kind name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|k| k.name() == s)
+    }
+}
+
+/// One declared fault window, deterministic from the spec (minutes, so
+/// TOPOLOGY files round-trip bit-identically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Name of the affected [`FailureDomain`].
+    pub domain: String,
+    /// Window start, minutes of simulated time.
+    pub at_min: u64,
+    /// Window length, minutes.
+    pub duration_min: u64,
+    /// Kind-specific strength: price multiplier for `price-storm`,
+    /// bucket capacity factor for `bucket-throttle`; ignored (use 1.0)
+    /// for `az-outage`.
+    pub magnitude: f64,
+}
+
+impl FaultSpec {
+    /// The window in simulated milliseconds `[start, end)`.
+    pub fn window_ms(&self) -> (SimTime, SimTime) {
+        let start = self.at_min * MINUTE;
+        (start, start + self.duration_min * MINUTE)
+    }
+}
+
+/// A validated cluster topology.  Invariants (enforced by every
+/// constructor): at least one domain, unique domain names, every fault
+/// naming a declared domain with a non-empty window and positive
+/// magnitude.
+///
+/// ```
+/// use ds_rs::topology::{ClusterTopology, FaultKind};
+///
+/// let topo = ClusterTopology::builder("demo")
+///     .domain("us-east-1a", "us-east-1")
+///     .domain("us-west-2a", "us-west-2")
+///     .fault(FaultKind::AzOutage, "us-east-1a", 30, 60, 1.0)
+///     .build()
+///     .unwrap();
+/// assert_eq!(topo.domain_count(), 2);
+/// assert_eq!(topo.home_region(), "us-east-1");
+/// // TOPOLOGY files round-trip bit-identically.
+/// let back = ClusterTopology::parse(&topo.render()).unwrap();
+/// assert_eq!(back, topo);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterTopology {
+    pub name: String,
+    /// Domains in declaration order; domain 0 is the *home* domain — the
+    /// data bucket lives in its region and pack placement fills it first.
+    pub domains: Vec<FailureDomain>,
+    /// Declared fault windows in declaration order.
+    pub faults: Vec<FaultSpec>,
+}
+
+impl ClusterTopology {
+    /// Build and validate.  The single gate every front door (file,
+    /// JSON, builder, shapes) funnels through.
+    pub fn new(
+        name: &str,
+        domains: Vec<FailureDomain>,
+        faults: Vec<FaultSpec>,
+    ) -> Result<Self, TopologyError> {
+        let topo = Self {
+            name: name.to_string(),
+            domains,
+            faults,
+        };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Start an in-code topology.
+    pub fn builder(name: &str) -> TopologyBuilder {
+        TopologyBuilder {
+            name: name.to_string(),
+            domains: Vec::new(),
+            faults: Vec::new(),
+        }
+    }
+
+    /// Re-check the invariants every constructor enforces (at least one
+    /// domain, unique names, faults reference declared domains with
+    /// non-empty windows and positive magnitude).  Useful for topologies
+    /// assembled field-by-field.
+    pub fn validate(&self) -> Result<(), TopologyError> {
+        let topo = || self.name.clone();
+        if self.domains.is_empty() {
+            return Err(TopologyError::Empty { topology: topo() });
+        }
+        for (i, d) in self.domains.iter().enumerate() {
+            if self.domains[..i].iter().any(|o| o.name == d.name) {
+                return Err(TopologyError::DuplicateDomain {
+                    topology: topo(),
+                    domain: d.name.clone(),
+                });
+            }
+        }
+        for f in &self.faults {
+            if self.index_of(&f.domain).is_none() {
+                return Err(TopologyError::UnknownDomain {
+                    topology: topo(),
+                    domain: f.domain.clone(),
+                });
+            }
+            if f.duration_min == 0 {
+                return Err(TopologyError::EmptyWindow {
+                    topology: topo(),
+                    domain: f.domain.clone(),
+                });
+            }
+            if !(f.magnitude > 0.0) {
+                return Err(TopologyError::BadMagnitude {
+                    topology: topo(),
+                    domain: f.domain.clone(),
+                    magnitude: f.magnitude,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    pub fn domain_count(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Domain index by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.domains.iter().position(|d| d.name == name)
+    }
+
+    /// The home region: where the data bucket lives (domain 0's region).
+    pub fn home_region(&self) -> &str {
+        &self.domains[0].region
+    }
+
+    /// Region of domain `i`.
+    pub fn region_of(&self, i: usize) -> &str {
+        &self.domains[i].region
+    }
+
+    /// Whether domain `i` reads the data bucket across a region boundary
+    /// (billed as cross-region egress, slower first byte).
+    pub fn is_cross_region(&self, i: usize) -> bool {
+        self.domains[i].region != self.home_region()
+    }
+
+    /// The TOPOLOGY file as JSON (NAME / DOMAINS / FAULTS, declaration
+    /// order preserved) — [`parse`](Self::parse) inverts it
+    /// bit-identically.
+    pub fn to_json(&self) -> Value {
+        Value::obj()
+            .with("NAME", self.name.as_str())
+            .with(
+                "DOMAINS",
+                Value::Arr(
+                    self.domains
+                        .iter()
+                        .map(|d| {
+                            Value::obj()
+                                .with("name", d.name.as_str())
+                                .with("region", d.region.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+            .with(
+                "FAULTS",
+                Value::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            Value::obj()
+                                .with("kind", f.kind.name())
+                                .with("domain", f.domain.as_str())
+                                .with("at_min", f.at_min)
+                                .with("duration_min", f.duration_min)
+                                .with("magnitude", f.magnitude)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Decode (and validate) a TOPOLOGY JSON value.  Strict like the
+    /// Sweep file: unknown keys are rejected, not ignored.
+    pub fn from_json(v: &Value) -> Result<Self, TopologyError> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| parse_err("expected a TOPOLOGY object"))?;
+        let mut name = None;
+        let mut domains = None;
+        let mut faults = None;
+        for (k, val) in fields {
+            match k.as_str() {
+                "NAME" => {
+                    name = Some(
+                        val.as_str()
+                            .ok_or_else(|| parse_err("NAME must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "DOMAINS" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| parse_err("DOMAINS must be an array"))?;
+                    domains = Some(
+                        arr.iter()
+                            .map(Self::domain_from_json)
+                            .collect::<Result<Vec<_>, _>>()?,
+                    );
+                }
+                "FAULTS" => {
+                    let arr = val
+                        .as_arr()
+                        .ok_or_else(|| parse_err("FAULTS must be an array"))?;
+                    faults = Some(
+                        arr.iter()
+                            .map(Self::fault_from_json)
+                            .collect::<Result<Vec<_>, _>>()?,
+                    );
+                }
+                other => return Err(parse_err(format!("unknown TOPOLOGY key '{other}'"))),
+            }
+        }
+        let name = name.ok_or_else(|| parse_err("missing NAME"))?;
+        let domains = domains.ok_or_else(|| parse_err("missing DOMAINS"))?;
+        let faults = faults.unwrap_or_default();
+        Self::new(&name, domains, faults)
+    }
+
+    fn domain_from_json(v: &Value) -> Result<FailureDomain, TopologyError> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| parse_err("each DOMAINS entry must be an object"))?;
+        let mut name = None;
+        let mut region = None;
+        for (k, val) in fields {
+            let s = val
+                .as_str()
+                .ok_or_else(|| parse_err(format!("domain key '{k}' must be a string")))?
+                .to_string();
+            match k.as_str() {
+                "name" => name = Some(s),
+                "region" => region = Some(s),
+                other => return Err(parse_err(format!("unknown domain key '{other}'"))),
+            }
+        }
+        Ok(FailureDomain {
+            name: name.ok_or_else(|| parse_err("domain missing 'name'"))?,
+            region: region.ok_or_else(|| parse_err("domain missing 'region'"))?,
+        })
+    }
+
+    fn fault_from_json(v: &Value) -> Result<FaultSpec, TopologyError> {
+        let fields = v
+            .as_obj()
+            .ok_or_else(|| parse_err("each FAULTS entry must be an object"))?;
+        let mut kind = None;
+        let mut domain = None;
+        let mut at_min = 0u64;
+        let mut duration_min = 0u64;
+        let mut magnitude = 1.0f64;
+        for (k, val) in fields {
+            match k.as_str() {
+                "kind" => {
+                    let s = val
+                        .as_str()
+                        .ok_or_else(|| parse_err("fault kind must be a string"))?;
+                    kind = Some(FaultKind::parse(s).ok_or_else(|| {
+                        parse_err(format!(
+                            "unknown fault kind '{s}' (expected az-outage, price-storm, or bucket-throttle)"
+                        ))
+                    })?);
+                }
+                "domain" => {
+                    domain = Some(
+                        val.as_str()
+                            .ok_or_else(|| parse_err("fault domain must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "at_min" => {
+                    at_min = val
+                        .as_u64()
+                        .ok_or_else(|| parse_err("at_min must be an unsigned integer"))?;
+                }
+                "duration_min" => {
+                    duration_min = val
+                        .as_u64()
+                        .ok_or_else(|| parse_err("duration_min must be an unsigned integer"))?;
+                }
+                "magnitude" => {
+                    magnitude = val
+                        .as_f64()
+                        .ok_or_else(|| parse_err("magnitude must be a number"))?;
+                }
+                other => return Err(parse_err(format!("unknown fault key '{other}'"))),
+            }
+        }
+        Ok(FaultSpec {
+            kind: kind.ok_or_else(|| parse_err("fault missing 'kind'"))?,
+            domain: domain.ok_or_else(|| parse_err("fault missing 'domain'"))?,
+            at_min,
+            duration_min,
+            magnitude,
+        })
+    }
+
+    /// Parse (and validate) a TOPOLOGY file's text.
+    pub fn parse(text: &str) -> Result<Self, TopologyError> {
+        let v = parse(text).map_err(|e| parse_err(format!("invalid JSON: {e}")))?;
+        Self::from_json(&v)
+    }
+
+    /// Render the TOPOLOGY file text; `parse(render())` is bit-identical
+    /// (pinned by the round-trip tests).
+    pub fn render(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// The built-in shape names [`resolve`](Self::resolve) knows.
+    pub const SHAPES: [&'static str; 3] = ["single", "three-az", "two-region"];
+
+    /// A built-in shape by name, if any.  `single` is the implicit
+    /// pre-topology cluster — one AZ, one region, no faults — and is what
+    /// the `--topology` axis treats as "no topology installed".
+    pub fn shape(name: &str) -> Option<Self> {
+        let topo = match name {
+            "single" => Self::builder("single").domain("us-east-1a", "us-east-1"),
+            "three-az" => Self::builder("three-az")
+                .domain("us-east-1a", "us-east-1")
+                .domain("us-east-1b", "us-east-1")
+                .domain("us-east-1c", "us-east-1"),
+            "two-region" => Self::builder("two-region")
+                .domain("us-east-1a", "us-east-1")
+                .domain("us-west-2a", "us-west-2"),
+            _ => return None,
+        };
+        Some(topo.build().expect("built-in shapes validate"))
+    }
+
+    /// Resolve a `--topology` value: a built-in shape name first, else a
+    /// TOPOLOGY file path.
+    pub fn resolve(value: &str) -> Result<Self, TopologyError> {
+        if let Some(topo) = Self::shape(value) {
+            return Ok(topo);
+        }
+        match std::fs::read_to_string(value) {
+            Ok(text) => Self::parse(&text),
+            Err(_) => Err(TopologyError::Unknown(value.to_string())),
+        }
+    }
+}
+
+/// In-code topology construction; `build` runs the same validation as
+/// the file parser.
+#[derive(Debug, Clone)]
+pub struct TopologyBuilder {
+    name: String,
+    domains: Vec<FailureDomain>,
+    faults: Vec<FaultSpec>,
+}
+
+impl TopologyBuilder {
+    /// Declare a failure domain in `region`.
+    pub fn domain(mut self, name: &str, region: &str) -> Self {
+        self.domains.push(FailureDomain {
+            name: name.to_string(),
+            region: region.to_string(),
+        });
+        self
+    }
+
+    /// Declare a fault window on `domain`.
+    pub fn fault(
+        mut self,
+        kind: FaultKind,
+        domain: &str,
+        at_min: u64,
+        duration_min: u64,
+        magnitude: f64,
+    ) -> Self {
+        self.faults.push(FaultSpec {
+            kind,
+            domain: domain.to_string(),
+            at_min,
+            duration_min,
+            magnitude,
+        });
+        self
+    }
+
+    pub fn build(self) -> Result<ClusterTopology, TopologyError> {
+        ClusterTopology::new(&self.name, self.domains, self.faults)
+    }
+}
+
+/// How the fleet distributes capacity over failure domains — the
+/// blast-radius-vs-cost axis.
+///
+/// ```
+/// use ds_rs::topology::Placement;
+///
+/// assert_eq!(Placement::parse("spread"), Some(Placement::Spread));
+/// assert_eq!(Placement::default().name(), "pack");
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Everything in the home domain (domain 0): no cross-region egress,
+    /// maximal blast radius.  The neutral default — single-domain runs
+    /// are unaffected by it.
+    #[default]
+    Pack,
+    /// Round-robin over domains: capacity survives any single-domain
+    /// outage at the price of cross-region egress from remote domains.
+    Spread,
+    /// Chase the lowest spot price across all domains' pools.
+    Cheapest,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 3] = [Self::Pack, Self::Spread, Self::Cheapest];
+
+    /// Stable name (also the sweep-axis label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Pack => "pack",
+            Self::Spread => "spread",
+            Self::Cheapest => "cheapest",
+        }
+    }
+
+    /// Parse a policy name (the `--placement` axis).
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|p| p.name() == s)
+    }
+}
+
+/// One domain's slice of a run: what launched, died, finished, and cost
+/// there.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DomainSlice {
+    /// Domain name, e.g. `us-west-2a`.
+    pub domain: String,
+    /// The domain's region.
+    pub region: String,
+    /// Instances launched in the domain.
+    pub launched: u64,
+    /// Spot interruptions (price- or outage-driven) in the domain.
+    pub interrupted: u64,
+    /// Jobs whose completing machine lived in the domain.
+    pub jobs_completed: u64,
+    /// Compute dollars billed to the domain's instances.
+    pub cost_usd: f64,
+}
+
+/// One observed fault window (per-run evidence, like the scaling
+/// timeline; dropped in cross-seed summaries).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutageWindow {
+    /// Affected domain name.
+    pub domain: String,
+    /// [`FaultKind`] name.
+    pub kind: String,
+    pub start_ms: SimTime,
+    pub end_ms: SimTime,
+}
+
+/// The topology slice of a run report, the multi-region analog of
+/// `Pool`/`Data`/`Scaling`/`WorkflowBreakdown`.  `topology == "single"`
+/// — the default — is the paper's implicit one-region cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyBreakdown {
+    /// Topology name ("single" when the run had no topology installed).
+    pub topology: String,
+    /// Placement-policy name the fleet ran under.
+    pub placement: String,
+    /// Per-domain slices, declaration order.
+    pub domains: Vec<DomainSlice>,
+    /// Bytes the data plane moved across a region boundary.
+    pub xregion_bytes: u64,
+    /// Cross-region egress dollars (billed on top of the regular
+    /// transfer line items).
+    pub xregion_usd: f64,
+    /// Fault windows that opened during the run.
+    pub outages: Vec<OutageWindow>,
+}
+
+impl Default for TopologyBreakdown {
+    fn default() -> Self {
+        Self {
+            topology: "single".to_string(),
+            placement: Placement::Pack.name().to_string(),
+            domains: Vec::new(),
+            xregion_bytes: 0,
+            xregion_usd: 0.0,
+            outages: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_region_with_outage() -> ClusterTopology {
+        ClusterTopology::builder("tr")
+            .domain("us-east-1a", "us-east-1")
+            .domain("us-west-2a", "us-west-2")
+            .fault(FaultKind::AzOutage, "us-east-1a", 30, 60, 1.0)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_and_queries() {
+        let t = two_region_with_outage();
+        assert_eq!(t.domain_count(), 2);
+        assert_eq!(t.home_region(), "us-east-1");
+        assert_eq!(t.index_of("us-west-2a"), Some(1));
+        assert!(!t.is_cross_region(0));
+        assert!(t.is_cross_region(1));
+        let (start, end) = t.faults[0].window_ms();
+        assert_eq!((start, end), (30 * MINUTE, 90 * MINUTE));
+    }
+
+    #[test]
+    fn validation_rejects_bad_topologies() {
+        assert!(matches!(
+            ClusterTopology::builder("t").build(),
+            Err(TopologyError::Empty { .. })
+        ));
+        assert!(matches!(
+            ClusterTopology::builder("t")
+                .domain("a", "r")
+                .domain("a", "r")
+                .build(),
+            Err(TopologyError::DuplicateDomain { .. })
+        ));
+        assert!(matches!(
+            ClusterTopology::builder("t")
+                .domain("a", "r")
+                .fault(FaultKind::AzOutage, "ghost", 0, 10, 1.0)
+                .build(),
+            Err(TopologyError::UnknownDomain { .. })
+        ));
+        assert!(matches!(
+            ClusterTopology::builder("t")
+                .domain("a", "r")
+                .fault(FaultKind::AzOutage, "a", 0, 0, 1.0)
+                .build(),
+            Err(TopologyError::EmptyWindow { .. })
+        ));
+        assert!(matches!(
+            ClusterTopology::builder("t")
+                .domain("a", "r")
+                .fault(FaultKind::PriceStorm, "a", 0, 10, 0.0)
+                .build(),
+            Err(TopologyError::BadMagnitude { .. })
+        ));
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_bit_identical() {
+        let t = two_region_with_outage();
+        let text = t.render();
+        let back = ClusterTopology::parse(&text).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_shapes() {
+        assert!(matches!(
+            ClusterTopology::parse(r#"{"NAME": "t", "DOMAINS": [], "EXTRA": 1}"#),
+            Err(TopologyError::Parse(_))
+        ));
+        assert!(matches!(
+            ClusterTopology::parse(r#"{"NAME": "t", "DOMAINS": [{"name": "a", "color": "red"}]}"#),
+            Err(TopologyError::Parse(_))
+        ));
+        assert!(matches!(
+            ClusterTopology::parse(r#"{"DOMAINS": [{"name": "a", "region": "r"}]}"#),
+            Err(TopologyError::Parse(_))
+        ));
+        assert!(matches!(
+            ClusterTopology::parse(
+                r#"{"NAME": "t", "DOMAINS": [{"name": "a", "region": "r"}],
+                    "FAULTS": [{"kind": "meteor", "domain": "a"}]}"#
+            ),
+            Err(TopologyError::Parse(_))
+        ));
+        // Empty DOMAINS parses as JSON but fails validation.
+        assert!(matches!(
+            ClusterTopology::parse(r#"{"NAME": "t", "DOMAINS": []}"#),
+            Err(TopologyError::Empty { .. })
+        ));
+    }
+
+    #[test]
+    fn shapes_resolve_and_validate() {
+        for name in ClusterTopology::SHAPES {
+            let t = ClusterTopology::resolve(name).unwrap();
+            assert_eq!(t.name, name);
+            assert!(t.domain_count() >= 1);
+        }
+        assert_eq!(ClusterTopology::shape("single").unwrap().domain_count(), 1);
+        assert_eq!(ClusterTopology::shape("three-az").unwrap().domain_count(), 3);
+        let tr = ClusterTopology::shape("two-region").unwrap();
+        assert_eq!(tr.domain_count(), 2);
+        assert!(tr.is_cross_region(1));
+        assert!(matches!(
+            ClusterTopology::resolve("no-such-topology"),
+            Err(TopologyError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn fault_kind_and_placement_names_round_trip() {
+        for k in FaultKind::ALL {
+            assert_eq!(FaultKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FaultKind::parse("meteor"), None);
+        for p in Placement::ALL {
+            assert_eq!(Placement::parse(p.name()), Some(p));
+        }
+        assert_eq!(Placement::parse("bogus"), None);
+        assert_eq!(Placement::default(), Placement::Pack);
+    }
+
+    #[test]
+    fn breakdown_default_is_the_flat_run() {
+        let b = TopologyBreakdown::default();
+        assert_eq!(b.topology, "single");
+        assert_eq!(b.placement, "pack");
+        assert!(b.domains.is_empty());
+        assert_eq!(b.xregion_bytes, 0);
+        assert!(b.outages.is_empty());
+    }
+}

@@ -167,6 +167,79 @@ fn workflow_file_field_set_is_pinned_and_render_is_bit_stable() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Topology schemas (DESIGN.md §12): the TOPOLOGY file format and the
+// topology slice of the run report, domain and outage rows included.
+// ---------------------------------------------------------------------
+
+use ds_rs::topology::{ClusterTopology, FaultKind, Placement};
+
+/// A deterministic multi-domain run — two regions, spread placement, an
+/// AZ outage on the remote domain — so the report carries the
+/// conditional `topology` object with domain rows and an outage window.
+fn topology_report() -> ds_rs::metrics::RunReport {
+    let cfg = quick_cfg(3);
+    let topo = ClusterTopology::builder("two-region")
+        .domain("us-east-1a", "us-east-1")
+        .domain("us-west-2a", "us-west-2")
+        .fault(FaultKind::AzOutage, "us-west-2a", 5, 30, 1.0)
+        .build()
+        .unwrap();
+    let opts = RunOptions {
+        scaling: Some(ScalingPolicy::target_tracking(8.0)),
+        topology: Some(topo),
+        placement: Placement::Spread,
+        ..Default::default()
+    };
+    let mut ex = modeled(300.0);
+    run_full(&cfg, &plate_jobs(12, 2), &template_fleet(), &mut ex, opts).unwrap()
+}
+
+#[test]
+fn topology_run_report_field_set_pins_domain_rows() {
+    let report = topology_report();
+    assert!(
+        report.scaling.decisions >= 1,
+        "golden topology run must exercise the scaling timeline: {:?}",
+        report.scaling
+    );
+    assert!(
+        !report.topology.domains.is_empty(),
+        "must exercise the domain rows — key_paths only walks populated arrays"
+    );
+    assert!(
+        !report.topology.outages.is_empty(),
+        "must exercise the outage rows"
+    );
+    assert_matches_golden(&paths_of(&report.to_json()), "topology_run_report.keys");
+}
+
+#[test]
+fn topology_file_field_set_is_pinned_and_render_is_bit_stable() {
+    // The golden spec carries a fault so the FAULTS row shape is pinned
+    // too (the built-in shapes all have empty fault lists).
+    let faulted = ClusterTopology::builder("golden")
+        .domain("us-east-1a", "us-east-1")
+        .domain("us-west-2a", "us-west-2")
+        .fault(FaultKind::AzOutage, "us-east-1a", 5, 10, 1.0)
+        .build()
+        .unwrap();
+    assert_matches_golden(&paths_of(&faulted.to_json()), "topology_spec.keys");
+    let text = faulted.render();
+    assert_eq!(ClusterTopology::parse(&text).unwrap(), faulted);
+    assert_eq!(ClusterTopology::parse(&text).unwrap().render(), text);
+    for name in ClusterTopology::SHAPES {
+        // render → parse → render is byte-stable: TOPOLOGY files and the
+        // inline axis objects in rendered Sweep files share this codec,
+        // so any asymmetry would desynchronise shard workers.
+        let spec = ClusterTopology::shape(name).unwrap();
+        let text = spec.render();
+        let back = ClusterTopology::parse(&text).unwrap();
+        assert_eq!(back, spec, "{name}: parse must invert render");
+        assert_eq!(back.render(), text, "{name}: render must be bit-stable");
+    }
+}
+
 #[test]
 fn run_and_sweep_json_round_trip_through_the_parser() {
     // The emitted JSON is valid and value-stable through parse→pretty.

@@ -21,6 +21,7 @@ use ds_rs::scenario::{
 use ds_rs::sim::{SimRng, MINUTE};
 use ds_rs::testutil::fixtures::args as cli;
 use ds_rs::testutil::forall_r;
+use ds_rs::topology::{ClusterTopology, Placement};
 use ds_rs::workloads::DurationModel;
 
 /// A random small-but-varied plan touching every axis with some
@@ -80,6 +81,35 @@ fn random_plan(rng: &mut SimRng) -> SweepPlan {
             stall_prob: 0.0,
             fail_prob: 0.0,
         }]);
+    }
+    if rng.chance(0.3) {
+        // An inline (non-shape) topology exercises the TOPOLOGY axis's
+        // object rendering through the file.
+        let topo = if rng.chance(0.5) {
+            ClusterTopology::shape(*rng.pick(&["three-az", "two-region"]))
+        } else {
+            Some(
+                ClusterTopology::builder("inline")
+                    .domain("az-a", "r1")
+                    .domain("az-b", "r2")
+                    .fault(
+                        ds_rs::topology::FaultKind::AzOutage,
+                        "az-a",
+                        rng.below(30),
+                        rng.range_u64(5, 60),
+                        1.0,
+                    )
+                    .build()
+                    .expect("inline topology"),
+            )
+        };
+        b = b.topologies(vec![None, topo]);
+    }
+    if rng.chance(0.3) {
+        b = b.placements(vec![Placement::Pack, *rng.pick(&[
+            Placement::Spread,
+            Placement::Cheapest,
+        ])]);
     }
     b.build().expect("builder plan")
 }

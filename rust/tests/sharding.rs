@@ -121,6 +121,32 @@ fn scaling_data_plan() -> SweepPlan {
     SweepPlan::new(quick_cfg(3), plate_jobs(5, 2), matrix)
 }
 
+/// 4 scenarios (2 topologies × 2 placements) × 2 seeds = 8 cells; the
+/// faulted topology travels inline through the rendered Sweep file, so
+/// the differential covers the TOPOLOGY axis codec end to end.
+fn topology_plan() -> SweepPlan {
+    use ds_rs::topology::{ClusterTopology, FaultKind, Placement};
+    let faulted = ClusterTopology::builder("two-region")
+        .domain("us-east-1a", "us-east-1")
+        .domain("us-west-2a", "us-west-2")
+        .fault(FaultKind::AzOutage, "us-east-1a", 10, 60, 1.0)
+        .build()
+        .expect("faulted topology");
+    SweepPlan::builder()
+        .config(quick_cfg(3))
+        .jobs(plate_jobs(5, 2).with_uniform_data(8_000_000, 1_000_000))
+        .seeds([7, 8])
+        .topologies([ClusterTopology::shape("three-az"), Some(faulted)])
+        .placements([Placement::Pack, Placement::Spread])
+        .models([DurationModel {
+            mean_s: 45.0,
+            cv: 0.3,
+            ..Default::default()
+        }])
+        .build()
+        .expect("topology plan")
+}
+
 /// Full-fidelity equality: struct, per-cell results, JSON bytes, table
 /// bytes.
 fn assert_runs_identical(reference: &SweepRun, sharded: &SweepRun, label: &str) {
@@ -210,6 +236,26 @@ fn sharded_workflow_sweep_identical_at_1_3_and_8_shards() {
     for shards in [1, 3, 8] {
         let sharded = sharded_inproc(&plan, shards, 2);
         assert_runs_identical(&reference, &sharded, &format!("workflow {shards} shards"));
+    }
+}
+
+#[test]
+fn sharded_topology_sweep_identical_at_1_3_and_8_shards() {
+    let plan = topology_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    // Sanity: every cell really ran multi-domain (the differential is
+    // vacuous otherwise), and the faulted cells observed their outage.
+    assert!(reference
+        .cells
+        .iter()
+        .all(|c| !c.report.topology.domains.is_empty()));
+    assert!(reference
+        .cells
+        .iter()
+        .any(|c| !c.report.topology.outages.is_empty()));
+    for shards in [1, 3, 8] {
+        let sharded = sharded_inproc(&plan, shards, 2);
+        assert_runs_identical(&reference, &sharded, &format!("topology {shards} shards"));
     }
 }
 
