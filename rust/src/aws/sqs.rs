@@ -252,6 +252,50 @@ impl Sqs {
         Ok(Some((msg, handle)))
     }
 
+    /// ReceiveMessage with a dispatch policy: like [`Sqs::receive`], but the
+    /// caller picks *which* visible message to serve via `choose`, which is
+    /// handed the visible queue in FIFO order and returns an index into it
+    /// (out-of-range falls back to the head; `None` with a non-empty queue
+    /// also falls back to the head).  Bookkeeping — receive counting,
+    /// receipt handles, visibility hold, expiry — is identical to the plain
+    /// receive, so a chooser that always returns 0 is byte-equivalent to
+    /// FIFO.  This is the hook the coordinator's tenant-aware queueing
+    /// policies (fair-share, priority) use.
+    pub fn receive_choose(
+        &mut self,
+        name: &str,
+        now: SimTime,
+        choose: impl FnOnce(&[Message]) -> Option<usize>,
+    ) -> Result<Option<(Message, ReceiptHandle)>, SqsError> {
+        if !self.queues.contains_key(name) {
+            return Err(SqsError::NoSuchQueue(name.into()));
+        }
+        self.run_expiry(name, now);
+        let q = self.queues.get_mut(name).unwrap();
+        q.stats.receive_requests += 1;
+        if q.visible.is_empty() {
+            return Ok(None);
+        }
+        let idx = match choose(q.visible.make_contiguous()) {
+            Some(i) if i < q.visible.len() => i,
+            _ => 0,
+        };
+        let mut msg = q.visible.remove(idx).unwrap();
+        msg.receive_count += 1;
+        q.next_receipt += 1;
+        let handle = q.next_receipt;
+        let visible_at = now + q.visibility_timeout;
+        q.in_flight.insert(
+            handle,
+            InFlight {
+                msg: msg.clone(),
+                visible_at,
+            },
+        );
+        q.expiry.push(Reverse((visible_at, handle)));
+        Ok(Some((msg, handle)))
+    }
+
     /// DeleteMessage: completes a job.  Stale handles (already expired and
     /// redelivered) are an error, mirroring real SQS.
     pub fn delete(
@@ -474,6 +518,62 @@ mod tests {
         assert_eq!(s.oldest_message_age("jobs", 3 * MINUTE), 2 * MINUTE);
         s.delete("jobs", h, 3 * MINUTE).unwrap();
         assert_eq!(s.oldest_message_age("jobs", 3 * MINUTE), MINUTE);
+    }
+
+    #[test]
+    fn receive_choose_serves_the_chosen_message() {
+        let mut s = sqs_with_queue(MINUTE);
+        for i in 0..3 {
+            s.send("jobs", format!("j{i}"), 0).unwrap();
+        }
+        // The chooser sees the full visible queue in FIFO order and picks
+        // the middle message.
+        let (m, h) = s
+            .receive_choose("jobs", 1, |msgs| {
+                assert_eq!(msgs.len(), 3);
+                assert_eq!(msgs[0].body, "j0");
+                Some(1)
+            })
+            .unwrap()
+            .unwrap();
+        assert_eq!(m.body, "j1");
+        assert_eq!(m.receive_count, 1);
+        // Bookkeeping matches plain receive: hidden while in flight,
+        // deletable by handle, remaining messages keep FIFO order.
+        assert_eq!(s.approximate_counts("jobs", 1), (2, 1));
+        s.delete("jobs", h, 2).unwrap();
+        let (m2, _) = s.receive("jobs", 3).unwrap().unwrap();
+        assert_eq!(m2.body, "j0");
+    }
+
+    #[test]
+    fn receive_choose_falls_back_to_head_of_line() {
+        let mut s = sqs_with_queue(MINUTE);
+        s.send("jobs", "a", 0).unwrap();
+        s.send("jobs", "b", 0).unwrap();
+        // None and out-of-range both degrade to FIFO.
+        let (m, _) = s.receive_choose("jobs", 1, |_| None).unwrap().unwrap();
+        assert_eq!(m.body, "a");
+        let (m, _) = s.receive_choose("jobs", 1, |_| Some(99)).unwrap().unwrap();
+        assert_eq!(m.body, "b");
+        // Empty queue: chooser is never consulted.
+        assert!(s
+            .receive_choose("jobs", 1, |_| panic!("chooser on empty queue"))
+            .unwrap()
+            .is_none());
+        assert!(s.receive_choose("nope", 1, |_| Some(0)).is_err());
+    }
+
+    #[test]
+    fn receive_choose_redelivers_on_timeout_like_receive() {
+        let mut s = sqs_with_queue(MINUTE);
+        s.send("jobs", "j", 0).unwrap();
+        let (_, h1) = s.receive_choose("jobs", 0, |_| Some(0)).unwrap().unwrap();
+        // Unfinished in-flight message reappears after the timeout, with
+        // the receive count advanced and the old handle dead.
+        let (m2, _) = s.receive_choose("jobs", MINUTE, |_| Some(0)).unwrap().unwrap();
+        assert_eq!(m2.receive_count, 2);
+        assert_eq!(s.delete("jobs", h1, MINUTE), Err(SqsError::InvalidReceipt));
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //!   network config (validated but inert in simulation) plus the
 //!   fleet-shaping keys `INSTANCE_TYPES`, `ALLOCATION_STRATEGY`, and
 //!   `ON_DEMAND_BASE` that drive heterogeneous spot fleets.
+//!
+//! The later file kinds follow the same paper-style shape (SCREAMING
+//! keys, strict parse, bit-exact render) but live with their subsystems:
+//! the Sweep plan (`coordinator::sweep`), the Workflow DAG
+//! (`crate::workflow`), the failure-domain TOPOLOGY file
+//! (`crate::topology`), and the multi-tenant TRAFFIC file
+//! (`crate::traffic`).
 
 pub mod app_config;
 pub mod fleet_spec;

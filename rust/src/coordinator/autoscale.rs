@@ -28,6 +28,12 @@
 //! Everything is a pure function of the queue counters and the policy,
 //! so scaled runs replay bit-identically and sweeps over scaling axes
 //! stay thread-count invariant (`rust/tests/autoscale.rs` pins both).
+//!
+//! The controller is demand-agnostic: it sees only the backlog, so it
+//! composes unchanged with open-loop multi-tenant traffic
+//! (`crate::traffic`), where a heavy-tailed tenant's bursts drive the
+//! backlog up and down mid-run — the T17 experiment pairs exactly this
+//! loop with fair-share queueing to bound the victim tenant's wait.
 
 use crate::aws::cloudwatch::alarms::Alarms;
 use crate::aws::cloudwatch::{AlarmAction, Comparison};

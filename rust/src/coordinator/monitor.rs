@@ -111,9 +111,11 @@ impl MonitorState {
     }
 
     /// One monitor tick.  `hold_cleanup` defers end-of-run teardown even
-    /// on an empty queue — the run driver sets it while scheduled
-    /// mid-run submissions are still pending, so a gap between arrival
-    /// bursts does not tear the cluster down.
+    /// on an empty queue — the run driver sets it while the workload is
+    /// still pending: scheduled mid-run submissions, unreleased workflow
+    /// nodes, or traffic generators with future arrivals drawn.  A quiet
+    /// gap between a tenant's arrival bursts therefore cannot tear the
+    /// cluster down mid-run (the `submit_at` drain race, DESIGN.md §13).
     pub fn tick(
         &mut self,
         acct: &mut AwsAccount,

@@ -54,6 +54,9 @@ use crate::sim::{Arena, EventQueue, QueueKind, SimRng, SlotId, StoreKind};
 use crate::topology::{
     ClusterTopology, DomainSlice, FaultKind, OutageWindow, Placement, TopologyBreakdown,
 };
+use crate::traffic::{
+    wait_percentile, DispatchState, QueueingPolicy, TenantBreakdown, TenantSlice, TrafficSpec,
+};
 use crate::worker::{check_if_done, parse_message};
 use crate::workflow::{SharingMode, StageSpan, WorkflowBreakdown, WorkflowSpec};
 use crate::workloads::drivers::{
@@ -122,6 +125,16 @@ pub struct RunOptions {
     /// How the fleet spreads capacity across the topology's domains.
     /// Ignored without a topology.
     pub placement: Placement,
+    /// Multi-tenant open-loop traffic replacing the flat job list: each
+    /// tenant's jobs arrive over time on its declared arrival process
+    /// (DESIGN.md §13).  `None` = the legacy closed batch: every traffic
+    /// code path is skipped and the run replays bit-identically to
+    /// pre-traffic builds.
+    pub traffic: Option<TrafficSpec>,
+    /// How the workers pick among tenants' queued messages.  FIFO is the
+    /// legacy tenant-blind order (and the only policy consulted without
+    /// a traffic spec).
+    pub queueing: QueueingPolicy,
 }
 
 impl Default for RunOptions {
@@ -143,6 +156,8 @@ impl Default for RunOptions {
             sharing: SharingMode::default(),
             topology: None,
             placement: Placement::default(),
+            traffic: None,
+            queueing: QueueingPolicy::default(),
         }
     }
 }
@@ -183,6 +198,10 @@ enum Event {
     /// A scheduled mid-run submission lands on the queue (bursty
     /// arrival patterns; see [`Simulation::submit_at`]).
     SubmitJobs(JobSpec),
+    /// A tenant's open-loop generator fires: enqueue one job and draw
+    /// the delay to the tenant's next arrival (index into the traffic
+    /// spec's tenant table).
+    TrafficArrival(usize),
     /// A scripted correlated fault opens (index into the topology's
     /// fault list): AZ outages kill everything running in the domain,
     /// bucket throttles squeeze the home bucket's aggregate budget.
@@ -311,6 +330,115 @@ impl WorkflowState {
     }
 }
 
+/// Per-tenant generator state for an open-loop traffic run.
+#[derive(Debug)]
+struct TenantState {
+    /// The tenant's private arrival RNG, forked from a dedicated root so
+    /// the schedule never interleaves with the main run RNG — arrival
+    /// times are engine-invariant by construction.
+    rng: SimRng,
+    /// Jobs the generator has not enqueued yet.
+    remaining: u64,
+    submitted: u64,
+    completed: u64,
+    /// Queue wait (first enqueue → dispatch) of each completed job.
+    waits_ms: Vec<u64>,
+    /// Completed jobs whose wait met the tenant's SLO target.
+    slo_attained: u64,
+}
+
+/// The open-loop generators plus the tenant-aware dispatch layer.  One
+/// `TrafficArrival` event per tenant is in flight at a time: each firing
+/// enqueues a job and draws the delay to the next, so quiet gaps are
+/// real — while any tenant still has arrivals scheduled, an empty queue
+/// is a gap in the workload, not its end (see
+/// [`Simulation::workload_pending`]).
+#[derive(Debug)]
+struct TrafficState {
+    spec: TrafficSpec,
+    dispatch: DispatchState,
+    tenants: Vec<TenantState>,
+    /// Total jobs not yet enqueued across all tenants; while non-zero
+    /// the monitor holds off end-of-run cleanup on an empty queue.
+    pending_arrivals: u64,
+    /// Receipt of each delivery in flight → (tenant index, queue wait at
+    /// dispatch): resolved when the delete lands, dropped on skips and
+    /// stale receipts.
+    by_receipt: BTreeMap<ReceiptHandle, (usize, u64)>,
+}
+
+impl TrafficState {
+    fn new(spec: &TrafficSpec, policy: QueueingPolicy, seed: u64) -> Self {
+        let mut root = SimRng::new(seed ^ 0x7AF1C);
+        let tenants = spec
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| TenantState {
+                rng: root.fork(i as u64 + 1),
+                remaining: t.jobs,
+                submitted: 0,
+                completed: 0,
+                waits_ms: Vec::new(),
+                slo_attained: 0,
+            })
+            .collect();
+        Self {
+            spec: spec.clone(),
+            dispatch: DispatchState::new(spec, policy),
+            tenants,
+            pending_arrivals: spec.total_jobs(),
+            by_receipt: BTreeMap::new(),
+        }
+    }
+
+    /// The SQS message body for tenant `i`'s `seq`-th job — the same
+    /// schema flat jobs use (`Metadata_*` tag parts, output bucket), plus
+    /// an explicit `tenant` key the dispatch layer and the accounting
+    /// read back.  The seq makes each job's tag (and output prefix)
+    /// unique, so CHECK_IF_DONE never false-skips a sibling.
+    fn message(&self, i: usize, seq: u64, bucket: &str) -> String {
+        let name = self.spec.tenants[i].name.as_str();
+        Value::obj()
+            .with("Metadata_Tenant", name)
+            .with("Metadata_Seq", format!("{seq:04}"))
+            .with("output_bucket", bucket)
+            .with("tenant", name)
+            .pretty()
+    }
+
+    /// Tenant index for a delivered message, by its `tenant` key.
+    fn tenant_of(&self, msg: &Value) -> Option<usize> {
+        msg.get("tenant")
+            .and_then(Value::as_str)
+            .and_then(|n| self.spec.index_of(n))
+    }
+
+    /// The dispatch chooser handed to [`crate::aws::sqs::Sqs::receive_choose`]:
+    /// map each tenant to its head-of-line position in the visible queue,
+    /// then let the policy pick.  Untagged messages (none in practice)
+    /// degrade to FIFO.
+    fn choose(&mut self, msgs: &[crate::aws::sqs::Message]) -> Option<usize> {
+        let mut heads: Vec<Option<usize>> = vec![None; self.spec.tenant_count()];
+        let mut tagged = false;
+        for (pos, m) in msgs.iter().enumerate() {
+            let Ok(v) = crate::json::parse(&m.body) else {
+                continue;
+            };
+            if let Some(t) = self.tenant_of(&v) {
+                tagged = true;
+                if heads[t].is_none() {
+                    heads[t] = Some(pos);
+                }
+            }
+        }
+        if !tagged {
+            return Some(0);
+        }
+        self.dispatch.choose(&heads)
+    }
+}
+
 /// A full DS run over the simulated account.
 pub struct Simulation {
     pub acct: AwsAccount,
@@ -327,6 +455,8 @@ pub struct Simulation {
     pending_submits: usize,
     /// Readiness scheduler for DAG runs (`opts.workflow`).
     workflow: Option<WorkflowState>,
+    /// Open-loop arrival generators + tenant dispatch (`opts.traffic`).
+    traffic: Option<TrafficState>,
     /// Per-container worker bookkeeping, one arena slot per live
     /// container (busy cores + exited cores together; the old design
     /// kept them in two parallel maps).
@@ -396,6 +526,17 @@ impl Simulation {
         let rng = SimRng::new(opts.seed ^ 0xD15C);
         let engine = opts.engine;
         let workflow = opts.workflow.as_ref().map(WorkflowState::new);
+        let traffic = match &opts.traffic {
+            Some(spec) => {
+                spec.validate().map_err(|e| anyhow::anyhow!("traffic: {e}"))?;
+                ensure!(
+                    opts.workflow.is_none(),
+                    "traffic conflicts with a workflow (one workload generator at a time)"
+                );
+                Some(TrafficState::new(spec, opts.queueing, opts.seed))
+            }
+            None => None,
+        };
         Ok(Self {
             acct,
             cfg,
@@ -408,6 +549,7 @@ impl Simulation {
             jobs_submitted: 0,
             pending_submits: 0,
             workflow,
+            traffic,
             workers: Arena::new(),
             container_slot: Vec::new(),
             flow_job: Vec::new(),
@@ -470,10 +612,31 @@ impl Simulation {
         Ok(roots.len() as u64)
     }
 
+    /// Step 2 for an open-loop traffic run: arm each tenant's generator
+    /// with its first arrival.  Nothing lands on the queue yet — every
+    /// job is enqueued by its own `TrafficArrival` event, one scheduled
+    /// draw per tenant at a time.  Returns the total jobs the generators
+    /// will submit over the run.
+    pub fn submit_traffic(&mut self) -> Result<u64> {
+        ensure!(
+            self.traffic.is_some(),
+            "run options carry no traffic spec — use submit() for flat job lists"
+        );
+        let now = self.events.now();
+        let tr = self.traffic.as_mut().unwrap();
+        for i in 0..tr.spec.tenant_count() {
+            let delay = tr.spec.process_of(i).next_delay_ms(&mut tr.tenants[i].rng, now);
+            self.events.schedule_in(delay, Event::TrafficArrival(i));
+        }
+        Ok(tr.spec.total_jobs())
+    }
+
     /// Step 3 (+4): `startCluster` and optionally `monitor`.
     pub fn start(&mut self, fleet_file: &FleetSpec) -> Result<()> {
         ensure!(
-            self.jobs_submitted > 0 || self.pending_submits > 0,
+            self.jobs_submitted > 0
+                || self.pending_submits > 0
+                || self.traffic.as_ref().is_some_and(|t| t.pending_arrivals > 0),
             "submit jobs before starting the cluster"
         );
         ensure!(
@@ -567,16 +730,23 @@ impl Simulation {
         false
     }
 
-    /// Scheduled submissions or unreleased workflow nodes outstanding:
-    /// an empty queue is a gap in the workload, not its end.  This is
-    /// what generalizes "queue drained" into "workload done" for both
-    /// the monitor's cleanup decision and the no-monitor drain window.
+    /// Scheduled submissions, unreleased workflow nodes, or future
+    /// generator arrivals outstanding: an empty queue is a gap in the
+    /// workload, not its end.  This is what generalizes "queue drained"
+    /// into "workload done" for both the monitor's cleanup decision and
+    /// the no-monitor drain window.  The traffic clause is the fix for
+    /// the `submit_at`-era drain race: a quiet gap between arrival
+    /// bursts used to look exactly like the end of the run.
     fn workload_pending(&self) -> bool {
         self.pending_submits > 0
             || self
                 .workflow
                 .as_ref()
                 .is_some_and(|w| w.pending_releases > 0)
+            || self
+                .traffic
+                .as_ref()
+                .is_some_and(|t| t.pending_arrivals > 0)
     }
 
     // -- event handlers ----------------------------------------------------
@@ -613,6 +783,7 @@ impl Simulation {
             Event::AlarmEval => self.on_alarm_eval(now),
             Event::MonitorTick => self.on_monitor_tick(now),
             Event::SubmitJobs(jobs) => self.on_submit_jobs(now, &jobs),
+            Event::TrafficArrival(tenant) => self.on_traffic_arrival(now, tenant),
             Event::FaultStart(idx) => self.on_fault_start(now, idx),
             Event::FaultEnd(idx) => self.on_fault_end(now, idx),
         }
@@ -896,7 +1067,18 @@ impl Simulation {
         let Some(inst_id) = self.container_alive(container) else {
             return;
         };
-        let received = match self.acct.sqs.receive(&self.cfg.sqs_queue_name, now) {
+        // Tenant-aware dispatch only engages for a traffic run under a
+        // non-FIFO policy; every other run takes the untouched legacy
+        // receive, so pre-traffic experiments replay bit-identically
+        // (and a FIFO-policy traffic run is byte-equal to head-of-line).
+        let received = match (&mut self.traffic, self.opts.queueing) {
+            (Some(tr), policy) if policy != QueueingPolicy::Fifo => self
+                .acct
+                .sqs
+                .receive_choose(&self.cfg.sqs_queue_name, now, |msgs| tr.choose(msgs)),
+            _ => self.acct.sqs.receive(&self.cfg.sqs_queue_name, now),
+        };
+        let received = match received {
             Ok(r) => r,
             Err(_) => return, // queue deleted: run is over
         };
@@ -922,6 +1104,16 @@ impl Simulation {
             }
         }
 
+        // A traffic delivery: remember its tenant and the queue wait at
+        // dispatch (first enqueue → now) so the finish paths can credit
+        // the completion and judge the SLO.
+        if let Some(tr) = self.traffic.as_mut() {
+            if let Some(t) = tr.tenant_of(&parsed) {
+                tr.by_receipt
+                    .insert(receipt, (t, now.saturating_sub(msg.first_enqueued)));
+            }
+        }
+
         // CHECK_IF_DONE: skip already-complete jobs.
         let bucket = output_bucket(&parsed).to_string();
         let prefix = job_output_prefix(&parsed);
@@ -932,6 +1124,11 @@ impl Simulation {
             // The outputs exist, so the artifact counts as committed —
             // children must not wait on a job that will never rerun.
             self.workflow_commit(now, receipt);
+            // A skipped traffic delivery is not a completion: drop the
+            // wait sample without counting it.
+            if let Some(tr) = self.traffic.as_mut() {
+                tr.by_receipt.remove(&receipt);
+            }
             self.mark_drained_if_empty(now);
             self.events.schedule_in(0, Event::CoreWake { container, core });
             return;
@@ -1196,12 +1393,17 @@ impl Simulation {
             Ok(()) => {
                 self.stats.completed += 1;
                 self.count_domain_job(container);
+                self.count_tenant_job(receipt);
                 self.log_job(now, &log, "");
             }
             Err(_) => {
                 // Receipt went stale: the message timed out mid-run
-                // and someone else will (or did) redo it.
+                // and someone else will (or did) redo it.  The redo's
+                // own receipt carries the tenant accounting.
                 self.stats.duplicates += 1;
+                if let Some(tr) = self.traffic.as_mut() {
+                    tr.by_receipt.remove(&receipt);
+                }
                 self.log_job(now, &log, " [duplicate: visibility expired mid-job]");
             }
         }
@@ -1525,6 +1727,46 @@ impl Simulation {
         }
     }
 
+    /// A tenant's generator fires: enqueue one job, then draw the delay
+    /// to the tenant's next arrival and reschedule.  The per-tenant RNG
+    /// never touches the main run RNG, so the schedule is a pure
+    /// function of (seed, spec) — engine- and policy-invariant.
+    fn on_traffic_arrival(&mut self, now: SimTime, tenant: usize) {
+        let Some(tr) = self.traffic.as_mut() else {
+            return;
+        };
+        if tr.tenants[tenant].remaining == 0 {
+            return;
+        }
+        let seq = tr.tenants[tenant].submitted;
+        let body = tr.message(tenant, seq, &self.opts.data_bucket);
+        match self.acct.sqs.send(&self.cfg.sqs_queue_name, body, now) {
+            Ok(()) => {
+                tr.tenants[tenant].remaining -= 1;
+                tr.tenants[tenant].submitted += 1;
+                tr.pending_arrivals -= 1;
+                self.jobs_submitted += 1;
+                // The queue is no longer drained (mirrors `on_submit_jobs`).
+                self.drained_at = None;
+                if tr.tenants[tenant].remaining > 0 {
+                    let delay = tr
+                        .spec
+                        .process_of(tenant)
+                        .next_delay_ms(&mut tr.tenants[tenant].rng, now);
+                    self.events.schedule_in(delay, Event::TrafficArrival(tenant));
+                }
+            }
+            Err(_) => {
+                // The queue is gone: the run ended before this tenant
+                // finished arriving (no monitor + max-time cap).  Drop
+                // the rest of its schedule so the pending count cannot
+                // hold a dead run open.
+                tr.pending_arrivals -= tr.tenants[tenant].remaining;
+                tr.tenants[tenant].remaining = 0;
+            }
+        }
+    }
+
     fn on_monitor_tick(&mut self, now: SimTime) {
         let pending = self.workload_pending();
         let Some(mut mon) = self.monitor.take() else {
@@ -1586,6 +1828,24 @@ impl Simulation {
         }
     }
 
+    /// Credit a completed delivery to its tenant: the wait sample joins
+    /// the percentile pool and the SLO verdict lands (no-op without a
+    /// traffic spec, or for deliveries the dispatch never tagged).
+    fn count_tenant_job(&mut self, receipt: ReceiptHandle) {
+        let Some(tr) = self.traffic.as_mut() else {
+            return;
+        };
+        let Some((t, wait)) = tr.by_receipt.remove(&receipt) else {
+            return;
+        };
+        let ts = &mut tr.tenants[t];
+        ts.completed += 1;
+        ts.waits_ms.push(wait);
+        if wait <= tr.spec.tenants[t].slo_wait_s * 1000 {
+            ts.slo_attained += 1;
+        }
+    }
+
     fn mark_drained_if_empty(&mut self, now: SimTime) {
         if self.drained_at.is_none() {
             let (v, f) = self.acct.sqs.approximate_counts(&self.cfg.sqs_queue_name, now);
@@ -1627,6 +1887,7 @@ impl Simulation {
             .as_ref()
             .and_then(|m| m.scaling_breakdown(ended_at))
             .unwrap_or_default();
+        let traffic = self.traffic_breakdown(cost.total_usd());
         RunReport {
             stats,
             drained_at: self.drained_at,
@@ -1642,7 +1903,51 @@ impl Simulation {
             scaling,
             workflow: self.workflow_breakdown(),
             topology: self.topology_breakdown(ended_at),
+            traffic,
             jobs_submitted: self.jobs_submitted,
+        }
+    }
+
+    /// The per-run [`TenantBreakdown`]: spec identity zipped with the
+    /// driver's own counters (submissions, completions, sorted wait
+    /// percentiles, SLO attainment) plus each tenant's bill share by
+    /// completed-job fraction.  The default breakdown for traffic-free
+    /// runs — their report JSON carries no traffic key.
+    fn traffic_breakdown(&self, total_usd: f64) -> TenantBreakdown {
+        let Some(tr) = &self.traffic else {
+            return TenantBreakdown::default();
+        };
+        let total_completed: u64 = tr.tenants.iter().map(|t| t.completed).sum();
+        let tenants = tr
+            .spec
+            .tenants
+            .iter()
+            .zip(&tr.tenants)
+            .map(|(spec, ts)| {
+                let mut waits = ts.waits_ms.clone();
+                waits.sort_unstable();
+                TenantSlice {
+                    tenant: spec.name.clone(),
+                    weight: spec.weight,
+                    priority: spec.priority,
+                    submitted: ts.submitted,
+                    completed: ts.completed,
+                    wait_p50_ms: wait_percentile(&waits, 0.5),
+                    wait_p95_ms: wait_percentile(&waits, 0.95),
+                    slo_target_ms: spec.slo_wait_s * 1000,
+                    slo_attained: ts.slo_attained,
+                    billed_usd: if total_completed == 0 {
+                        0.0
+                    } else {
+                        total_usd * ts.completed as f64 / total_completed as f64
+                    },
+                }
+            })
+            .collect();
+        TenantBreakdown {
+            traffic: tr.spec.name.clone(),
+            queueing: self.opts.queueing.name().to_string(),
+            tenants,
         }
     }
 
@@ -1690,6 +1995,9 @@ impl Simulation {
 /// Convenience wrapper: the full four-command flow with defaults.  When
 /// the options carry a workflow, the DAG replaces `jobs` (only its
 /// roots are enqueued up front; the rest release as parents commit).
+/// When they carry a traffic spec, the tenants' generators replace
+/// `jobs` (nothing is enqueued up front; every job arrives on its
+/// tenant's process).
 pub fn run_full(
     cfg: &AppConfig,
     jobs: &JobSpec,
@@ -1698,7 +2006,9 @@ pub fn run_full(
     opts: RunOptions,
 ) -> Result<RunReport> {
     let mut sim = Simulation::new(cfg.clone(), opts)?;
-    if sim.opts.workflow.is_some() {
+    if sim.opts.traffic.is_some() {
+        sim.submit_traffic()?;
+    } else if sim.opts.workflow.is_some() {
         sim.submit_workflow()?;
     } else {
         sim.submit(jobs)?;
@@ -2410,5 +2720,161 @@ mod tests {
         let b = run();
         assert_eq!(a, b);
         assert_eq!(a.topology.domains.len(), 2);
+    }
+
+    // -- multi-tenant open-loop traffic --------------------------------------
+
+    #[test]
+    fn traffic_free_runs_report_the_default_breakdown() {
+        let cfg = quick_cfg();
+        let jobs = JobSpec::plate("P1", 4, 2, vec![]);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let mut ex = modeled(30.0);
+        let report = run_full(&cfg, &jobs, &fleet, &mut ex, RunOptions::default()).unwrap();
+        assert_eq!(report.traffic, TenantBreakdown::default());
+        assert!(!report.summary().contains("traffic("), "{}", report.summary());
+        assert!(report.to_json().get("traffic").is_none());
+    }
+
+    fn run_traffic(spec: TrafficSpec, queueing: QueueingPolicy, seed: u64) -> RunReport {
+        let cfg = quick_cfg();
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let opts = RunOptions {
+            seed,
+            traffic: Some(spec),
+            queueing,
+            ..Default::default()
+        };
+        let mut ex = modeled(45.0);
+        let mut sim = Simulation::new(cfg, opts).unwrap();
+        sim.submit_traffic().unwrap();
+        sim.start(&fleet).unwrap();
+        sim.run(&mut ex).unwrap()
+    }
+
+    #[test]
+    fn traffic_run_completes_every_tenants_jobs() {
+        let spec = TrafficSpec::shape("two-tenant").unwrap();
+        let total = spec.total_jobs();
+        let report = run_traffic(spec, QueueingPolicy::Fifo, 42);
+        assert_eq!(report.jobs_submitted, total, "{}", report.summary());
+        assert!(report.cleaned_up);
+        assert!(report.fully_accounted());
+        let b = &report.traffic;
+        assert_eq!(b.traffic, "two-tenant");
+        assert_eq!(b.queueing, "fifo");
+        assert_eq!(b.tenants.len(), 2);
+        let completed: u64 = b.tenants.iter().map(|t| t.completed).sum();
+        assert_eq!(completed, total, "{b:?}");
+        for t in &b.tenants {
+            assert_eq!(t.submitted, t.completed, "{b:?}");
+            assert!(t.wait_p95_ms >= t.wait_p50_ms, "{b:?}");
+            assert!(t.slo_attained <= t.completed, "{b:?}");
+            assert!(t.billed_usd > 0.0, "{b:?}");
+        }
+        let billed: f64 = b.tenants.iter().map(|t| t.billed_usd).sum();
+        assert!(
+            (billed - report.cost.total_usd()).abs() < 1e-9,
+            "bill shares {billed} != total {}",
+            report.cost.total_usd()
+        );
+        // The summary surfaces the traffic block for engaged runs.
+        assert!(report.summary().contains("traffic(two-tenant/fifo)"), "{}", report.summary());
+    }
+
+    #[test]
+    fn submit_traffic_requires_a_traffic_spec() {
+        let mut sim = Simulation::new(quick_cfg(), RunOptions::default()).unwrap();
+        let err = sim.submit_traffic().unwrap_err();
+        assert!(err.to_string().contains("no traffic"), "{err}");
+    }
+
+    #[test]
+    fn traffic_conflicts_with_a_workflow() {
+        let opts = RunOptions {
+            traffic: TrafficSpec::shape("single"),
+            workflow: Some(crate::workloads::dag::diamond()),
+            ..Default::default()
+        };
+        let err = Simulation::new(quick_cfg(), opts).unwrap_err();
+        assert!(err.to_string().contains("conflicts"), "{err}");
+    }
+
+    /// The drain-race regression: a tenant whose arrivals are separated
+    /// by gaps far longer than a job (and than the monitor's patience)
+    /// empties the queue between bursts.  The monitor must treat the
+    /// scheduled future arrivals as `workload_pending` and hold cleanup
+    /// — before the fix it tore the cluster down at the first quiet gap
+    /// and the rest of the workload bounced off a deleted queue.
+    #[test]
+    fn quiet_gap_between_arrivals_holds_cleanup() {
+        let spec = TrafficSpec::builder("trickle")
+            .tenant("slow", 3, 1, 0, 3600)
+            .poisson("slow", 0.02) // mean 50 min between arrivals
+            .build()
+            .unwrap();
+        let report = run_traffic(spec, QueueingPolicy::Fifo, 7);
+        assert_eq!(report.jobs_submitted, 3, "{}", report.summary());
+        assert_eq!(report.stats.completed, 3, "{}", report.summary());
+        assert!(report.cleaned_up, "cleanup only after the last arrival");
+        assert_eq!(report.traffic.tenants[0].completed, 3, "{:?}", report.traffic);
+        // The final drain postdates at least two long inter-arrival
+        // gaps: the run really did idle across quiet stretches.
+        assert!(
+            report.drained_at.unwrap() > 30 * MINUTE,
+            "drained at {:?} — the gaps never happened",
+            report.drained_at
+        );
+    }
+
+    #[test]
+    fn traffic_runs_replay_bit_identically() {
+        let run = || {
+            run_traffic(
+                TrafficSpec::shape("noisy-neighbor").unwrap(),
+                QueueingPolicy::FairShare,
+                13,
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b);
+        assert_eq!(a.traffic.tenants.len(), 2);
+        let completed: u64 = a.traffic.tenants.iter().map(|t| t.completed).sum();
+        assert_eq!(
+            completed,
+            TrafficSpec::shape("noisy-neighbor").unwrap().total_jobs()
+        );
+    }
+
+    /// Fair sharing is not cosmetic: with a heavy-tailed noisy neighbor
+    /// flooding the queue, the victim tenant's p95 wait under fair-share
+    /// must come in strictly below FIFO's (T17 runs the full elastic
+    /// version of this; here the fleet is fixed and small so contention
+    /// is guaranteed).
+    #[test]
+    fn fair_share_bounds_the_victims_wait_below_fifo() {
+        let spec = || {
+            TrafficSpec::builder("crunch")
+                .tenant("victim", 12, 1, 1, 300)
+                .tenant("noisy", 90, 1, 0, 3600)
+                .poisson("victim", 1.0)
+                .heavy_tailed("noisy", 1.2, 0.02)
+                .build()
+                .unwrap()
+        };
+        let fifo = run_traffic(spec(), QueueingPolicy::Fifo, 5);
+        let fair = run_traffic(spec(), QueueingPolicy::FairShare, 5);
+        for r in [&fifo, &fair] {
+            let done: u64 = r.traffic.tenants.iter().map(|t| t.completed).sum();
+            assert_eq!(done, 102, "{}", r.summary());
+        }
+        let victim = |r: &RunReport| r.traffic.tenants[0].clone();
+        assert!(
+            victim(&fair).wait_p95_ms < victim(&fifo).wait_p95_ms,
+            "fair-share p95 {} !< fifo p95 {}",
+            victim(&fair).wait_p95_ms,
+            victim(&fifo).wait_p95_ms
+        );
     }
 }

@@ -54,7 +54,7 @@ use crate::aws::billing::CostReport;
 use crate::json::Value;
 use crate::metrics::{
     DataBreakdown, PoolBreakdown, RunReport, RunStats, ScalingBreakdown, ScalingDecision,
-    StageSpan, SweepReport, WorkflowBreakdown,
+    StageSpan, SweepReport, TenantBreakdown, TenantSlice, WorkflowBreakdown,
 };
 use crate::scenario::SweepFile;
 use crate::sim::{QueueKind, SimTime, StoreKind};
@@ -76,7 +76,12 @@ pub use super::sweep::SweepPlan;
 /// v3: the per-cell reports grew the `topology` object (per-domain
 /// slices, cross-region egress, outage timelines, DESIGN.md §12) and
 /// the embedded Sweep file learned the TOPOLOGY/PLACEMENT axes.
-pub const WIRE_VERSION: u64 = 3;
+///
+/// v4: the per-cell reports grew the `traffic` object (per-tenant job
+/// counters, wait percentiles, SLO attainment, billed dollar share,
+/// DESIGN.md §13) and the embedded Sweep file learned the
+/// TRAFFIC/QUEUEING axes.
+pub const WIRE_VERSION: u64 = 4;
 
 const REQUEST_KIND: &str = "sweep-shard-request";
 const RESULT_KIND: &str = "shard-result";
@@ -384,6 +389,31 @@ pub fn report_to_wire(r: &RunReport) -> Value {
                     .collect(),
             ),
         );
+    let tr = &r.traffic;
+    let traffic = Value::obj()
+        .with("traffic", tr.traffic.as_str())
+        .with("queueing", tr.queueing.as_str())
+        .with(
+            "tenants",
+            Value::Arr(
+                tr.tenants
+                    .iter()
+                    .map(|t| {
+                        Value::obj()
+                            .with("tenant", t.tenant.as_str())
+                            .with("weight", t.weight)
+                            .with("priority", t.priority)
+                            .with("submitted", t.submitted)
+                            .with("completed", t.completed)
+                            .with("wait_p50_ms", t.wait_p50_ms)
+                            .with("wait_p95_ms", t.wait_p95_ms)
+                            .with("slo_target_ms", t.slo_target_ms)
+                            .with("slo_attained", t.slo_attained)
+                            .with("billed_usd", t.billed_usd)
+                    })
+                    .collect(),
+            ),
+        );
     Value::obj()
         .with("stats", stats)
         .with("drained_at_ms", opt_ms_json(r.drained_at))
@@ -410,6 +440,7 @@ pub fn report_to_wire(r: &RunReport) -> Value {
         .with("scaling", scaling)
         .with("workflow", workflow)
         .with("topology", topology)
+        .with("traffic", traffic)
         .with("jobs_submitted", r.jobs_submitted)
 }
 
@@ -548,6 +579,29 @@ pub fn report_from_wire(v: &Value) -> Result<RunReport> {
         xregion_usd: f64_field(tv, "xregion_usd")?,
         outages,
     };
+    let trv = field(v, "traffic")?;
+    let tenants = arr_field(trv, "tenants")?
+        .iter()
+        .map(|t| {
+            Ok(TenantSlice {
+                tenant: str_field(t, "tenant")?.to_string(),
+                weight: u64_field(t, "weight")?,
+                priority: u32_field(t, "priority")?,
+                submitted: u64_field(t, "submitted")?,
+                completed: u64_field(t, "completed")?,
+                wait_p50_ms: u64_field(t, "wait_p50_ms")?,
+                wait_p95_ms: u64_field(t, "wait_p95_ms")?,
+                slo_target_ms: u64_field(t, "slo_target_ms")?,
+                slo_attained: u64_field(t, "slo_attained")?,
+                billed_usd: f64_field(t, "billed_usd")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let traffic = TenantBreakdown {
+        traffic: str_field(trv, "traffic")?.to_string(),
+        queueing: str_field(trv, "queueing")?.to_string(),
+        tenants,
+    };
     Ok(RunReport {
         stats,
         drained_at: opt_ms_field(v, "drained_at_ms")?,
@@ -559,6 +613,7 @@ pub fn report_from_wire(v: &Value) -> Result<RunReport> {
         scaling,
         workflow,
         topology,
+        traffic,
         jobs_submitted: u64_field(v, "jobs_submitted")?,
     })
 }

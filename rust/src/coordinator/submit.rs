@@ -2,6 +2,12 @@
 //!
 //! "it adds that list of tasks to the queue in SQS (which you made in the
 //! previous step)."
+//!
+//! This is the closed-batch path: the whole Job file becomes SQS
+//! messages at once.  Open-loop traffic runs
+//! ([`Simulation::submit_traffic`](super::run::Simulation::submit_traffic))
+//! bypass it — each tenant's generator enqueues one message per arrival
+//! event instead, against the same queue and message schema.
 
 use anyhow::{bail, Context, Result};
 

@@ -411,6 +411,8 @@ mod tests {
             sharing: crate::workflow::SharingMode::S3Staging,
             topology: None,
             placement: crate::topology::Placement::Pack,
+            traffic: None,
+            queueing: crate::traffic::QueueingPolicy::Fifo,
         };
         assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
         sc.instance_set = vec![

@@ -36,6 +36,7 @@ pub mod scenario;
 pub mod sim;
 pub mod testutil;
 pub mod topology;
+pub mod traffic;
 pub mod worker;
 pub mod workflow;
 pub mod workloads;

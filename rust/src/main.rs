@@ -20,16 +20,20 @@
 //!                 --scaling none,target-tracking,step --scaling-target 2,4 \
 //!                 --workflow none,diamond,mosaic --sharing s3,node-local,shared-fs \
 //!                 --topology single,three-az,two-region --placement pack,spread \
+//!                 --traffic single,two-tenant,noisy-neighbor \
+//!                 --queueing fifo,fair-share,priority \
 //!                 [--on-demand-base N] [--threads N] [--json] \
 //!                 [--shards N] [--shard-exec process|inproc] \
 //!                 [--shard-timeout-s S] [--shard-retries N]
 //! ds describe     --config files/config.json [--fleet files/fleet.json]
 //!                 [--job files/job.json] [--workflow W] [--topology T]
+//!                 [--traffic F]
 //!                 # validate + print + the per-type container packing
 //!                 # of the machines the run will actually use, the
 //!                 # Job file's data footprint (GB in/out), the
-//!                 # workflow DAG's stage structure, and the topology's
-//!                 # domains, per-domain pools, and bucket homes
+//!                 # workflow DAG's stage structure, the topology's
+//!                 # domains, per-domain pools, and bucket homes, and
+//!                 # the traffic spec's tenants and arrival processes
 //! ds workloads    [--artifacts artifacts/]           # list AOT artifacts
 //! ```
 //!
@@ -342,6 +346,39 @@ fn describe(args: &Args) -> Result<()> {
                 start / 60_000,
                 end / 60_000,
                 f.magnitude
+            );
+        }
+    }
+    // With --traffic, validate and summarize the multi-tenant arrival
+    // plan (built-in shape name or TRAFFIC file), mirroring --workflow
+    // and --topology: undeclared tenants, zero rates, and stray process
+    // parameters surface here as typed errors before any run burns
+    // fleet time.
+    if let Some(t) = args.get("traffic") {
+        let spec = ds_rs::traffic::TrafficSpec::resolve(t)
+            .with_context(|| format!("describing traffic '{t}'"))?;
+        println!(
+            "\ntraffic '{}': {} tenant(s), {} jobs total",
+            spec.name,
+            spec.tenants.len(),
+            spec.total_jobs(),
+        );
+        for tenant in &spec.tenants {
+            let arrival = spec
+                .arrivals
+                .iter()
+                .find(|a| a.tenant == tenant.name)
+                .expect("validated spec pairs every tenant with an arrival");
+            println!(
+                "  tenant {}: {} jobs, weight {}, priority {}, SLO wait {}s — \
+                 {} arrivals, mean {:.2}/min",
+                tenant.name,
+                tenant.jobs,
+                tenant.weight,
+                tenant.priority,
+                tenant.slo_wait_s,
+                arrival.process.kind(),
+                arrival.process.mean_rate_per_min(),
             );
         }
     }

@@ -30,7 +30,7 @@ use crate::sim::SimTime;
 
 use super::{
     DataBreakdown, DomainSlice, PoolBreakdown, RunReport, ScalingBreakdown, Table,
-    TopologyBreakdown, WorkflowBreakdown,
+    TenantBreakdown, TenantSlice, TopologyBreakdown, WorkflowBreakdown,
 };
 
 /// Distribution summary over a sample of f64s.
@@ -147,6 +147,14 @@ pub struct ScenarioSummary {
     /// scenario runs the same topology).  Observed fault windows are
     /// per-run evidence and stay empty here.
     pub topology: TopologyBreakdown,
+    /// Multi-tenant activity merged across all cells: per-tenant job
+    /// counters summed, wait percentiles averaged across seeds (integer
+    /// mean — a cross-seed typical value, not a re-derived percentile),
+    /// billed dollars summed; the traffic/queueing identity, tenant
+    /// list, weights, priorities, and SLO targets come from the first
+    /// report (every cell of a scenario runs the same traffic spec, so
+    /// the lists align positionally).
+    pub traffic: TenantBreakdown,
 }
 
 impl ScenarioSummary {
@@ -288,6 +296,47 @@ impl ScenarioSummary {
                 slot.cost_usd += d.cost_usd;
             }
         }
+        // Merge the traffic slices: identity and tenant list from the
+        // first report (cells share the spec, so tenants align
+        // positionally), job counters and dollars summed, wait
+        // percentiles averaged across seeds.
+        let mut traffic = reports
+            .first()
+            .map(|r| TenantBreakdown {
+                tenants: r
+                    .traffic
+                    .tenants
+                    .iter()
+                    .map(|t| TenantSlice {
+                        submitted: 0,
+                        completed: 0,
+                        wait_p50_ms: 0,
+                        wait_p95_ms: 0,
+                        slo_attained: 0,
+                        billed_usd: 0.0,
+                        ..t.clone()
+                    })
+                    .collect(),
+                ..r.traffic.clone()
+            })
+            .unwrap_or_default();
+        for r in reports {
+            for (slot, t) in traffic.tenants.iter_mut().zip(&r.traffic.tenants) {
+                slot.submitted += t.submitted;
+                slot.completed += t.completed;
+                slot.wait_p50_ms += t.wait_p50_ms;
+                slot.wait_p95_ms += t.wait_p95_ms;
+                slot.slo_attained += t.slo_attained;
+                slot.billed_usd += t.billed_usd;
+            }
+        }
+        let n = reports.len() as u64;
+        if n > 1 {
+            for slot in &mut traffic.tenants {
+                slot.wait_p50_ms /= n;
+                slot.wait_p95_ms /= n;
+            }
+        }
         Self {
             label: label.to_string(),
             axes: Value::obj(),
@@ -311,6 +360,7 @@ impl ScenarioSummary {
             scaling,
             workflow,
             topology,
+            traffic,
         }
     }
 
@@ -361,6 +411,11 @@ impl ScenarioSummary {
         // Like the run report: single-domain summaries stay legacy-shaped.
         if self.topology.topology != "single" {
             v = v.with("topology", topology_to_json(&self.topology, false));
+        }
+        // And single-tenant summaries: the traffic object only appears
+        // when a traffic spec actually drove the cells.
+        if self.traffic.traffic != "single" {
+            v = v.with("traffic", traffic_to_json(&self.traffic));
         }
         v
     }
@@ -508,6 +563,37 @@ pub(crate) fn topology_to_json(t: &TopologyBreakdown, outages: bool) -> Value {
         );
     }
     v
+}
+
+/// JSON shape of a [`TenantBreakdown`].  Same rows in single-run reports
+/// and cross-seed summaries — the per-tenant slice is already compact.
+/// Callers emit this object only when a traffic spec was actually
+/// installed, so single-tenant output keeps its legacy field set.
+pub(crate) fn traffic_to_json(t: &TenantBreakdown) -> Value {
+    Value::obj()
+        .with("traffic", t.traffic.as_str())
+        .with("queueing", t.queueing.as_str())
+        .with(
+            "tenants",
+            Value::Arr(
+                t.tenants
+                    .iter()
+                    .map(|t| {
+                        Value::obj()
+                            .with("tenant", t.tenant.as_str())
+                            .with("weight", t.weight)
+                            .with("priority", u64::from(t.priority))
+                            .with("submitted", t.submitted)
+                            .with("completed", t.completed)
+                            .with("wait_p50_ms", t.wait_p50_ms)
+                            .with("wait_p95_ms", t.wait_p95_ms)
+                            .with("slo_target_ms", t.slo_target_ms)
+                            .with("slo_attained", t.slo_attained)
+                            .with("billed_usd", t.billed_usd)
+                    })
+                    .collect(),
+            ),
+        )
 }
 
 /// The whole sweep: one [`ScenarioSummary`] per scenario, in matrix order.
@@ -713,6 +799,36 @@ mod tests {
                     end_ms: HOUR,
                 }],
             },
+            traffic: TenantBreakdown {
+                traffic: "two-tenant".into(),
+                queueing: "fair-share".into(),
+                tenants: vec![
+                    TenantSlice {
+                        tenant: "batch".into(),
+                        weight: 2,
+                        priority: 0,
+                        submitted: completed / 2 + 1,
+                        completed: completed / 2,
+                        wait_p50_ms: 20_000,
+                        wait_p95_ms: 80_000,
+                        slo_target_ms: 900_000,
+                        slo_attained: completed / 2,
+                        billed_usd: cost / 2.0,
+                    },
+                    TenantSlice {
+                        tenant: "interactive".into(),
+                        weight: 1,
+                        priority: 1,
+                        submitted: completed - completed / 2 + 1,
+                        completed: completed - completed / 2,
+                        wait_p50_ms: 10_000,
+                        wait_p95_ms: 40_000,
+                        slo_target_ms: 120_000,
+                        slo_attained: completed - completed / 2,
+                        billed_usd: cost / 2.0,
+                    },
+                ],
+            },
             jobs_submitted: completed + 2,
         }
     }
@@ -851,6 +967,44 @@ mod tests {
         r.topology = TopologyBreakdown::default();
         let s = ScenarioSummary::from_reports("s", &[&r]);
         assert!(s.to_json().get("topology").is_none());
+    }
+
+    #[test]
+    fn summary_merges_traffic_counters() {
+        let r1 = report(10, Some(HOUR), 0.5);
+        let mut r2 = report(20, Some(2 * HOUR), 1.5);
+        r2.traffic.tenants[0].wait_p50_ms = 40_000;
+        r2.traffic.tenants[0].wait_p95_ms = 120_000;
+        let s = ScenarioSummary::from_reports("s", &[&r1, &r2]);
+        assert_eq!(s.traffic.traffic, "two-tenant");
+        assert_eq!(s.traffic.queueing, "fair-share");
+        assert_eq!(s.traffic.tenants.len(), 2, "tenant list from the first cell");
+        let batch = &s.traffic.tenants[0];
+        assert_eq!(batch.tenant, "batch");
+        assert_eq!(batch.weight, 2, "identity fields from the first cell");
+        assert_eq!(batch.slo_target_ms, 900_000);
+        assert_eq!(batch.submitted, 17, "job counters sum");
+        assert_eq!(batch.completed, 15);
+        assert_eq!(batch.slo_attained, 15);
+        assert_eq!(batch.wait_p50_ms, 30_000, "percentiles average across seeds");
+        assert_eq!(batch.wait_p95_ms, 100_000);
+        assert!((batch.billed_usd - 1.0).abs() < 1e-12, "dollars sum");
+        // The summary JSON carries the tenant rows.
+        let j = s.to_json();
+        let t = j.get("traffic").unwrap();
+        assert_eq!(t.get("queueing").and_then(Value::as_str), Some("fair-share"));
+        let rows = t.get("tenants").and_then(Value::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("wait_p50_ms").and_then(Value::as_u64), Some(30_000));
+    }
+
+    #[test]
+    fn single_tenant_summary_json_stays_legacy_shaped() {
+        let mut r = report(10, Some(HOUR), 0.5);
+        r.traffic = TenantBreakdown::default();
+        let s = ScenarioSummary::from_reports("s", &[&r]);
+        assert_eq!(s.traffic, TenantBreakdown::default());
+        assert!(s.to_json().get("traffic").is_none());
     }
 
     #[test]

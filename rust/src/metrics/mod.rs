@@ -7,6 +7,7 @@ pub use crate::aws::billing::DataBreakdown;
 pub use crate::aws::ec2::PoolBreakdown;
 pub use crate::coordinator::autoscale::{ScalingBreakdown, ScalingDecision};
 pub use crate::topology::{DomainSlice, OutageWindow, TopologyBreakdown};
+pub use crate::traffic::{TenantBreakdown, TenantSlice};
 pub use crate::workflow::{StageSpan, WorkflowBreakdown};
 
 use crate::aws::billing::CostReport;
@@ -81,8 +82,16 @@ pub struct RunReport {
     /// emits nothing extra in summaries or JSON, so pre-topology output
     /// is byte-identical.
     pub topology: TopologyBreakdown,
-    /// Jobs submitted (initial submission plus any scheduled bursts and
-    /// dependent jobs released by the workflow scheduler).
+    /// The multi-tenant slice: which traffic spec drove the run, the
+    /// queueing policy that arbitrated it, and per-tenant submissions,
+    /// wait percentiles, SLO attainment, and billed dollar share.
+    /// `traffic == "single"` — the default — is the paper's one
+    /// anonymous submitter and emits nothing extra in summaries or
+    /// JSON, so pre-traffic output is byte-identical.
+    pub traffic: TenantBreakdown,
+    /// Jobs submitted (initial submission plus any scheduled bursts,
+    /// dependent jobs released by the workflow scheduler, and open-loop
+    /// traffic arrivals).
     pub jobs_submitted: u64,
 }
 
@@ -216,6 +225,29 @@ impl RunReport {
                 ));
             }
         }
+        if self.traffic.traffic != "single" {
+            s.push_str(&format!(
+                "traffic({}/{}): {} tenants\n",
+                self.traffic.traffic,
+                self.traffic.queueing,
+                self.traffic.tenants.len(),
+            ));
+            for t in &self.traffic.tenants {
+                s.push_str(&format!(
+                    "  tenant {} (w={} p={}): {}/{} done, wait p50 {} p95 {}, SLO {}/{}, ${:.4}\n",
+                    t.tenant,
+                    t.weight,
+                    t.priority,
+                    t.completed,
+                    t.submitted,
+                    fmt_dur(t.wait_p50_ms),
+                    fmt_dur(t.wait_p95_ms),
+                    t.slo_attained,
+                    t.completed,
+                    t.billed_usd,
+                ));
+            }
+        }
         if self.data.total_bytes() > 0 {
             s.push_str(&format!(
                 "data: {:.2} GB down, {:.2} GB up ({:.2} GB wasted); bottleneck {:.0}% bucket / {:.0}% NIC; requests ${:.4}, egress ${:.4}\n",
@@ -290,6 +322,10 @@ impl RunReport {
         if self.topology.topology != "single" {
             v = v.with("topology", aggregate::topology_to_json(&self.topology, true));
         }
+        // Likewise the traffic object: only multi-tenant runs grow it.
+        if self.traffic.traffic != "single" {
+            v = v.with("traffic", aggregate::traffic_to_json(&self.traffic));
+        }
         v
     }
 }
@@ -361,6 +397,7 @@ mod tests {
             scaling: ScalingBreakdown::default(),
             workflow: WorkflowBreakdown::default(),
             topology: TopologyBreakdown::default(),
+            traffic: TenantBreakdown::default(),
             jobs_submitted: 100,
         }
     }
@@ -461,6 +498,54 @@ mod tests {
                 .and_then(Value::as_str),
             Some("az-outage")
         );
+    }
+
+    #[test]
+    fn summary_and_json_show_traffic_only_for_multi_tenant_runs() {
+        let solo = report();
+        assert!(!solo.summary().contains("traffic("));
+        assert!(solo.to_json().get("traffic").is_none(), "single-tenant JSON is legacy-shaped");
+        let mut multi = report();
+        multi.traffic.traffic = "noisy-neighbor".into();
+        multi.traffic.queueing = "fair-share".into();
+        multi.traffic.tenants = vec![
+            TenantSlice {
+                tenant: "victim".into(),
+                weight: 1,
+                priority: 1,
+                submitted: 24,
+                completed: 24,
+                wait_p50_ms: 30_000,
+                wait_p95_ms: 120_000,
+                slo_target_ms: 300_000,
+                slo_attained: 23,
+                billed_usd: 0.25,
+            },
+            TenantSlice {
+                tenant: "noisy".into(),
+                weight: 1,
+                priority: 0,
+                submitted: 96,
+                completed: 96,
+                wait_p50_ms: 60_000,
+                wait_p95_ms: 600_000,
+                slo_target_ms: 3_600_000,
+                slo_attained: 96,
+                billed_usd: 1.0,
+            },
+        ];
+        let s = multi.summary();
+        assert!(s.contains("traffic(noisy-neighbor/fair-share): 2 tenants"), "{s}");
+        assert!(s.contains("tenant victim (w=1 p=1): 24/24 done"), "{s}");
+        assert!(s.contains("SLO 23/24"), "{s}");
+        let t = multi.to_json().get("traffic").cloned().unwrap();
+        assert_eq!(t.get("traffic").and_then(Value::as_str), Some("noisy-neighbor"));
+        assert_eq!(t.get("queueing").and_then(Value::as_str), Some("fair-share"));
+        let tenants = t.get("tenants").and_then(Value::as_arr).unwrap();
+        assert_eq!(tenants.len(), 2);
+        assert_eq!(tenants[0].get("tenant").and_then(Value::as_str), Some("victim"));
+        assert_eq!(tenants[0].get("wait_p95_ms").and_then(Value::as_u64), Some(120_000));
+        assert_eq!(tenants[1].get("slo_attained").and_then(Value::as_u64), Some(96));
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! entry in [`AXES`].  The registry order is the **label order**
 //! (machines, visibility, volatility, duration, allocation, instance
 //! set, input MB, net profile, scaling, scaling target, workflow,
-//! sharing, topology, placement), chosen so registry-assembled labels are
+//! sharing, topology, placement, traffic, queueing), chosen so
+//! registry-assembled labels are
 //! byte-identical to the historical hand-formatted ones; the cartesian
 //! *expansion* order lives in
 //! [`ScenarioMatrix::scenarios`](super::ScenarioMatrix::scenarios).
@@ -26,6 +27,7 @@ use crate::cli::Args;
 use crate::json::Value;
 use crate::sim::clock::{fmt_dur, from_secs_f64};
 use crate::topology::{ClusterTopology, Placement};
+use crate::traffic::{QueueingPolicy, TrafficSpec};
 use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
@@ -97,6 +99,8 @@ pub static AXES: &[&dyn Axis] = &[
     &SharingAxis,
     &TopologyAxis,
     &PlacementAxis,
+    &TrafficAxis,
+    &QueueingAxis,
 ];
 
 // ---------------------------------------------------------------------------
@@ -1280,6 +1284,159 @@ impl Axis for PlacementAxis {
     }
 }
 
+/// Multi-tenant traffic — `--traffic` / `TRAFFIC`.  CLI items are
+/// built-in shape names ([`TrafficSpec::SHAPES`]), TRAFFIC-file paths,
+/// or `single` (the implicit one-submitter world, parsed to "no
+/// traffic installed").  Sweep files additionally accept inline
+/// traffic objects, and [`Axis::render_file`] always inlines the full
+/// spec so a rendered plan stays hermetic (shard workers never chase
+/// file paths).  Labeled and serialized only when a traffic spec is
+/// installed, so legacy labels and sweep JSON stay byte-stable.
+pub struct TrafficAxis;
+
+/// Parse one CLI/file traffic item: `single` for the legacy
+/// one-submitter world, else a shape name or TRAFFIC-file path
+/// resolved by [`TrafficSpec::resolve`].
+fn parse_traffic(s: &str) -> Result<Option<TrafficSpec>> {
+    if s == "single" {
+        return Ok(None);
+    }
+    TrafficSpec::resolve(s).map(Some).map_err(|e| anyhow!(e))
+}
+
+impl Axis for TrafficAxis {
+    fn key(&self) -> &'static str {
+        "TRAFFIC"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "traffic",
+            value: "T,T,..",
+            help: "tenant-traffic axis: single|two-tenant|noisy-neighbor or a TRAFFIC-file path",
+            file_key: Some("TRAFFIC"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.traffics.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(
+            m.traffics
+                .iter()
+                .map(|t| t.as_ref().map_or("single", |s| s.name.as_str())),
+        )
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "traffic")? {
+            m.traffics = items
+                .iter()
+                .map(|s| parse_traffic(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "TRAFFIC")? {
+            m.traffics = items
+                .iter()
+                .map(|v| match v {
+                    Value::Obj(_) => TrafficSpec::from_json(v)
+                        .map(Some)
+                        .map_err(|e| anyhow!(e)),
+                    _ => item_str(v, "TRAFFIC").and_then(parse_traffic),
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "TRAFFIC",
+            Value::Arr(
+                m.traffics
+                    .iter()
+                    .map(|t| t.as_ref().map_or(Value::from("single"), |s| s.to_json()))
+                    .collect(),
+            ),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.traffic = sc.traffic.clone();
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        // Single-tenant cells stay unlabeled (only-label-when-used).
+        sc.traffic.as_ref().map(|t| format!("traffic={}", t.name))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        sc.traffic.as_ref().map(|t| Value::from(t.name.as_str()))
+    }
+}
+
+/// Queueing policy for traffic cells — `--queueing` / `QUEUEING`: how
+/// the coordinator arbitrates tenants at the queue head (strict FIFO,
+/// weighted-deficit fair share, or strict priority tiers).  Labeled
+/// (and serialized into scenario JSON) only when it departs from the
+/// default FIFO policy.
+pub struct QueueingAxis;
+
+fn parse_queueing(s: &str) -> Result<QueueingPolicy> {
+    QueueingPolicy::parse(s)
+        .ok_or_else(|| anyhow!("queueing must be fifo|fair-share|priority, got {s}"))
+}
+
+impl Axis for QueueingAxis {
+    fn key(&self) -> &'static str {
+        "QUEUEING"
+    }
+    fn flags(&self) -> &'static [FlagSpec] {
+        &[FlagSpec {
+            flag: "queueing",
+            value: "Q,Q,..",
+            help: "tenant-queueing axis: fifo|fair-share|priority",
+            file_key: Some("QUEUEING"),
+        }]
+    }
+    fn len(&self, m: &ScenarioMatrix) -> usize {
+        m.queueings.len()
+    }
+    fn describe(&self, m: &ScenarioMatrix) -> String {
+        join(m.queueings.iter().map(|q| q.name()))
+    }
+    fn parse_cli(&self, args: &Args, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = cli_list(args, "queueing")? {
+            m.queueings = items
+                .iter()
+                .map(|s| parse_queueing(s))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn parse_file(&self, file: &Value, m: &mut ScenarioMatrix) -> Result<()> {
+        if let Some(items) = file_list(file, "QUEUEING")? {
+            m.queueings = items
+                .iter()
+                .map(|v| item_str(v, "QUEUEING").and_then(parse_queueing))
+                .collect::<Result<_>>()?;
+        }
+        Ok(())
+    }
+    fn render_file(&self, m: &ScenarioMatrix) -> Vec<(&'static str, Value)> {
+        vec![(
+            "QUEUEING",
+            Value::Arr(m.queueings.iter().map(|q| Value::from(q.name())).collect()),
+        )]
+    }
+    fn overlay(&self, sc: &Scenario, cell: &mut CellInputs) {
+        cell.opts.queueing = sc.queueing;
+    }
+    fn label(&self, sc: &Scenario) -> Option<String> {
+        (sc.queueing != QueueingPolicy::Fifo).then(|| format!("queue={}", sc.queueing.name()))
+    }
+    fn json_value(&self, sc: &Scenario) -> Option<Value> {
+        (sc.queueing != QueueingPolicy::Fifo).then(|| Value::from(sc.queueing.name()))
+    }
+}
+
 // ---------------------------------------------------------------------------
 // The flag tables (generated surfaces)
 // ---------------------------------------------------------------------------
@@ -1661,6 +1818,8 @@ mod tests {
             sharings: vec![SharingMode::S3Staging, SharingMode::NodeLocal],
             topologies: vec![None, ClusterTopology::shape("three-az")],
             placements: vec![Placement::Pack, Placement::Spread],
+            traffics: vec![None, TrafficSpec::shape("noisy-neighbor")],
+            queueings: vec![QueueingPolicy::Fifo, QueueingPolicy::Priority],
         };
         let mut file = Value::obj();
         for (k, v) in render_matrix_entries(&m) {
@@ -1972,6 +2131,101 @@ mod tests {
         let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
         assert!(cell.opts.topology.is_none());
         assert_eq!(cell.opts.placement, Placement::Pack);
+    }
+
+    #[test]
+    fn traffic_axis_parses_shapes_and_labels_when_used() {
+        let mut m = ScenarioMatrix::default();
+        let args = parse("sweep --traffic single,noisy-neighbor --queueing fifo,fair-share");
+        TrafficAxis.parse_cli(&args, &mut m).unwrap();
+        QueueingAxis.parse_cli(&args, &mut m).unwrap();
+        assert_eq!(m.traffics.len(), 2);
+        assert!(m.traffics[0].is_none(), "single parses to no traffic");
+        assert_eq!(m.traffics[1].as_ref().unwrap().name, "noisy-neighbor");
+        assert_eq!(
+            m.queueings,
+            vec![QueueingPolicy::Fifo, QueueingPolicy::FairShare]
+        );
+        let scs = m.scenarios();
+        assert_eq!(scs.len(), 4);
+        // Single-tenant cells and FIFO cells stay unlabeled (historical
+        // labels stable); engaged cells carry fragments and JSON keys.
+        assert!(TrafficAxis.label(&scs[0]).is_none());
+        assert!(QueueingAxis.label(&scs[0]).is_none());
+        assert_eq!(QueueingAxis.label(&scs[1]).as_deref(), Some("queue=fair-share"));
+        assert_eq!(
+            TrafficAxis.label(&scs[2]).as_deref(),
+            Some("traffic=noisy-neighbor")
+        );
+        assert_eq!(
+            TrafficAxis
+                .json_value(&scs[3])
+                .and_then(|v| v.as_str().map(String::from))
+                .as_deref(),
+            Some("noisy-neighbor")
+        );
+        assert_eq!(
+            QueueingAxis
+                .json_value(&scs[3])
+                .and_then(|v| v.as_str().map(String::from))
+                .as_deref(),
+            Some("fair-share")
+        );
+        // Bad values are rejected, not defaulted.
+        let args = parse("sweep --traffic no-such-shape");
+        assert!(TrafficAxis.parse_cli(&args, &mut m).is_err());
+        let args = parse("sweep --queueing lifo");
+        let err = QueueingAxis.parse_cli(&args, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("fifo|fair-share|priority"), "{err:#}");
+    }
+
+    #[test]
+    fn traffic_file_accepts_inline_objects_and_rejects_bad_specs() {
+        let mut m = ScenarioMatrix::default();
+        let inline = TrafficSpec::shape("two-tenant").unwrap().render();
+        let file =
+            crate::json::parse(&format!(r#"{{"TRAFFIC": ["single", {inline}]}}"#)).unwrap();
+        TrafficAxis.parse_file(&file, &mut m).unwrap();
+        assert_eq!(m.traffics.len(), 2);
+        assert!(m.traffics[0].is_none());
+        assert_eq!(m.traffics[1], TrafficSpec::shape("two-tenant"));
+        // An inline spec with an arrival for an undeclared tenant
+        // surfaces the typed validation error.
+        let file = crate::json::parse(
+            r#"{"TRAFFIC": [{"NAME": "t",
+                "TENANTS": [{"name": "a", "jobs": 4, "weight": 1,
+                             "priority": 0, "slo_wait_s": 60}],
+                "ARRIVALS": [{"tenant": "ghost", "process": "poisson",
+                              "rate_per_min": 1.0}]}]}"#,
+        )
+        .unwrap();
+        let err = TrafficAxis.parse_file(&file, &mut m).unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    }
+
+    #[test]
+    fn traffic_overlay_reaches_run_options() {
+        use crate::config::{AppConfig, FleetSpec};
+        use crate::coordinator::run::RunOptions;
+        let m = ScenarioMatrix {
+            traffics: vec![TrafficSpec::shape("two-tenant")],
+            queueings: vec![QueueingPolicy::Priority],
+            ..Default::default()
+        };
+        let sc = m.scenarios().remove(0);
+        let fleet = FleetSpec::template("us-east-1").unwrap();
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert_eq!(cell.opts.traffic.as_ref().unwrap().name, "two-tenant");
+        assert_eq!(cell.opts.queueing, QueueingPolicy::Priority);
+        // `ds run` shares the axes (opts-owned, not file-owned).
+        let cell = sc.run_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.traffic.is_some());
+        // Single-tenant scenarios leave the options untouched.
+        let m = ScenarioMatrix::default();
+        let sc = m.scenarios().remove(0);
+        let cell = sc.cell_inputs(&AppConfig::default(), &fleet, &RunOptions::default());
+        assert!(cell.opts.traffic.is_none());
+        assert_eq!(cell.opts.queueing, QueueingPolicy::Fifo);
     }
 
     #[test]

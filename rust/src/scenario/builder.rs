@@ -37,6 +37,7 @@ use crate::config::{AppConfig, FleetSpec, JobSpec};
 use crate::coordinator::run::RunOptions;
 use crate::sim::SimTime;
 use crate::topology::{ClusterTopology, Placement};
+use crate::traffic::{QueueingPolicy, TrafficSpec};
 use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
@@ -65,6 +66,8 @@ pub struct SweepPlanBuilder {
     sharings: Option<Vec<SharingMode>>,
     topologies: Option<Vec<Option<ClusterTopology>>>,
     placements: Option<Vec<Placement>>,
+    traffics: Option<Vec<Option<TrafficSpec>>>,
+    queueings: Option<Vec<QueueingPolicy>>,
 }
 
 impl SweepPlanBuilder {
@@ -213,6 +216,22 @@ impl SweepPlanBuilder {
         self
     }
 
+    /// Multi-tenant traffic axis; `None` entries keep the legacy single
+    /// submitter (default: `[None]`).
+    pub fn traffics(
+        mut self,
+        traffics: impl IntoIterator<Item = Option<TrafficSpec>>,
+    ) -> Self {
+        self.traffics = Some(traffics.into_iter().collect());
+        self
+    }
+
+    /// Queueing-policy axis for traffic cells (default: FIFO).
+    pub fn queueings(mut self, queueings: impl IntoIterator<Item = QueueingPolicy>) -> Self {
+        self.queueings = Some(queueings.into_iter().collect());
+        self
+    }
+
     /// Assemble the plan.  Errors on missing jobs or any explicitly
     /// empty axis (an empty axis would silently erase the whole matrix).
     pub fn build(self) -> Result<SweepPlan> {
@@ -248,6 +267,8 @@ impl SweepPlanBuilder {
         set_axis!(sharings, sharings);
         set_axis!(topologies, topologies);
         set_axis!(placements, placements);
+        set_axis!(traffics, traffics);
+        set_axis!(queueings, queueings);
         Ok(SweepPlan {
             base_cfg: cfg,
             jobs,

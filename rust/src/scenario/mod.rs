@@ -6,7 +6,7 @@
 //! honest the same way.  Every sweep axis — machines, visibility,
 //! volatility, duration model, allocation strategy, instance set, input
 //! MB, net profile, scaling policy, scaling target, workflow, sharing
-//! mode, topology, placement — is one [`Axis`]
+//! mode, topology, placement, traffic, queueing — is one [`Axis`]
 //! implementation declaring its CLI
 //! flag(s), its Sweep-file key, its per-cell config/fleet/job overlay,
 //! its label fragment, and its JSON identity.  The registry ([`AXES`])
@@ -57,6 +57,7 @@ use crate::coordinator::run::RunOptions;
 use crate::json::Value;
 use crate::sim::{SimTime, MINUTE};
 use crate::topology::{ClusterTopology, Placement};
+use crate::traffic::{QueueingPolicy, TrafficSpec};
 use crate::workflow::{SharingMode, WorkflowSpec};
 use crate::workloads::DurationModel;
 
@@ -112,6 +113,13 @@ pub struct Scenario {
     /// ([`Placement::Pack`] is the neutral default); ignored for
     /// single-domain cells.
     pub placement: Placement,
+    /// Multi-tenant open-loop traffic replacing the flat job list;
+    /// `None` = the legacy single-submitter world.
+    pub traffic: Option<TrafficSpec>,
+    /// How the coordinator arbitrates tenants at the queue head
+    /// ([`QueueingPolicy::Fifo`] is the paper's baseline); ignored for
+    /// single-tenant cells.
+    pub queueing: QueueingPolicy,
 }
 
 impl Scenario {
@@ -242,6 +250,11 @@ pub struct ScenarioMatrix {
     pub topologies: Vec<Option<ClusterTopology>>,
     /// Placement policies (`--placement`).
     pub placements: Vec<Placement>,
+    /// Multi-tenant traffic specs (`--traffic`); `None` = single
+    /// submitter.
+    pub traffics: Vec<Option<TrafficSpec>>,
+    /// Queueing policies (`--queueing`).
+    pub queueings: Vec<QueueingPolicy>,
 }
 
 impl Default for ScenarioMatrix {
@@ -262,6 +275,8 @@ impl Default for ScenarioMatrix {
             sharings: vec![SharingMode::S3Staging],
             topologies: vec![None],
             placements: vec![Placement::Pack],
+            traffics: vec![None],
+            queueings: vec![QueueingPolicy::Fifo],
         }
     }
 }
@@ -281,8 +296,9 @@ impl ScenarioMatrix {
     /// Expand the cartesian product in a fixed order: machines outermost,
     /// then visibility, volatility, allocation strategy, instance set,
     /// input MB, net profile, scaling mode, scaling target, duration
-    /// model, workflow, sharing mode, topology, and innermost the
-    /// placement policy.  Axis element order is preserved, so
+    /// model, workflow, sharing mode, topology, placement, traffic
+    /// spec, and innermost the queueing policy.  Axis element order is
+    /// preserved, so
     /// single-axis sweeps read like the input list.  (This expansion
     /// order is pinned by historical reports; the registry's order is
     /// the *label* order, which differs only in where the duration
@@ -303,23 +319,35 @@ impl ScenarioMatrix {
                                                     for &sharing in &self.sharings {
                                                         for topology in &self.topologies {
                                                             for &placement in &self.placements {
-                                                                out.push(Scenario {
-                                                                    volatility,
-                                                                    visibility,
-                                                                    machines,
-                                                                    allocation,
-                                                                    instance_set: instance_set
-                                                                        .clone(),
-                                                                    input_mb,
-                                                                    net: net.clone(),
-                                                                    scaling,
-                                                                    scaling_target,
-                                                                    model: model.clone(),
-                                                                    workflow: workflow.clone(),
-                                                                    sharing,
-                                                                    topology: topology.clone(),
-                                                                    placement,
-                                                                });
+                                                                for traffic in &self.traffics {
+                                                                    for &queueing in
+                                                                        &self.queueings
+                                                                    {
+                                                                        out.push(Scenario {
+                                                                            volatility,
+                                                                            visibility,
+                                                                            machines,
+                                                                            allocation,
+                                                                            instance_set:
+                                                                                instance_set
+                                                                                    .clone(),
+                                                                            input_mb,
+                                                                            net: net.clone(),
+                                                                            scaling,
+                                                                            scaling_target,
+                                                                            model: model.clone(),
+                                                                            workflow: workflow
+                                                                                .clone(),
+                                                                            sharing,
+                                                                            topology: topology
+                                                                                .clone(),
+                                                                            placement,
+                                                                            traffic: traffic
+                                                                                .clone(),
+                                                                            queueing,
+                                                                        });
+                                                                    }
+                                                                }
                                                             }
                                                         }
                                                     }
@@ -410,6 +438,8 @@ mod tests {
             sharing: SharingMode::S3Staging,
             topology: None,
             placement: Placement::Pack,
+            traffic: None,
+            queueing: QueueingPolicy::Fifo,
         };
         assert_eq!(sc.label(), "m=8 vis=5.0m vol=medium mean=120s alloc=diversified");
         sc.input_mb = 64.0;
@@ -435,6 +465,15 @@ mod tests {
             sc.label(),
             "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow \
              wf=diamond share=node-local topo=two-region place=spread"
+        );
+        // Traffic and queueing trail everything, same rule again.
+        sc.traffic = TrafficSpec::shape("two-tenant");
+        sc.queueing = QueueingPolicy::FairShare;
+        assert_eq!(
+            sc.label(),
+            "m=8 vis=5.0m vol=medium mean=120s alloc=diversified in=64MB net=narrow \
+             wf=diamond share=node-local topo=two-region place=spread \
+             traffic=two-tenant queue=fair-share"
         );
     }
 

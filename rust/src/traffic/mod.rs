@@ -1,0 +1,1249 @@
+//! Multi-tenant open-loop traffic: arrival processes, queueing disciplines,
+//! and the per-tenant accounting that threads through RunReport and sweeps.
+//!
+//! A [`TrafficSpec`] is the seventh paper-style input file (after job spec,
+//! fleet, workload model, data shape, workflow, and topology): a `NAME`, a
+//! `TENANTS` table (jobs, weight, priority, SLO), and an `ARRIVALS` table
+//! binding each tenant to an open-loop arrival process. Arrivals are drawn
+//! from a dedicated fork of the run's seeded RNG, so the schedule is
+//! deterministic and engine-invariant by construction.
+//!
+//! The coordinator pairs the spec with a [`QueueingPolicy`] — plain FIFO,
+//! weighted deficit round-robin fair sharing, or strict priority tiers — and
+//! reports a [`TenantBreakdown`] per run. See DESIGN.md §13.
+
+use std::fmt;
+use std::fs;
+
+use crate::json::Value;
+use crate::sim::rng::SimRng;
+use crate::sim::clock::{SimTime, MINUTE};
+
+/// Errors raised while parsing or validating a traffic spec.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum TrafficError {
+    /// The spec text was not the JSON shape we expect.
+    #[error("traffic spec: {0}")]
+    Parse(String),
+    /// A spec must declare at least one tenant.
+    #[error("traffic '{traffic}' declares no tenants")]
+    Empty { traffic: String },
+    /// Tenant names must be unique within a spec.
+    #[error("traffic '{traffic}' declares tenant '{tenant}' twice")]
+    DuplicateTenant { traffic: String, tenant: String },
+    /// Every tenant must bring at least one job.
+    #[error("traffic '{traffic}' tenant '{tenant}' declares zero jobs")]
+    NoJobs { traffic: String, tenant: String },
+    /// Fair-share weights must be at least 1.
+    #[error("traffic '{traffic}' tenant '{tenant}' declares weight 0")]
+    BadWeight { traffic: String, tenant: String },
+    /// An arrival row names a tenant the spec does not declare.
+    #[error("traffic '{traffic}' arrival names unknown tenant '{tenant}'")]
+    UnknownTenant { traffic: String, tenant: String },
+    /// Each tenant gets exactly one arrival process.
+    #[error("traffic '{traffic}' declares two arrival processes for tenant '{tenant}'")]
+    DuplicateArrival { traffic: String, tenant: String },
+    /// Each tenant gets exactly one arrival process.
+    #[error("traffic '{traffic}' tenant '{tenant}' has no arrival process")]
+    MissingArrival { traffic: String, tenant: String },
+    /// An arrival process has out-of-range parameters.
+    #[error("traffic '{traffic}' tenant '{tenant}' arrival is invalid: {why}")]
+    BadProcess {
+        traffic: String,
+        tenant: String,
+        why: String,
+    },
+    /// A `--traffic` value that is neither a shape name nor a readable file.
+    #[error("{0}")]
+    Unknown(String),
+}
+
+fn parse_err(msg: impl Into<String>) -> TrafficError {
+    TrafficError::Parse(msg.into())
+}
+
+/// One tenant row: how many jobs it will submit over the run, its fair-share
+/// weight, its strict-priority tier (higher wins), and its wait-time SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant name, unique within the spec.
+    pub name: String,
+    /// Total jobs this tenant submits before its generator goes quiet.
+    pub jobs: u64,
+    /// Weighted-deficit-round-robin weight (fair-share policy); must be >= 1.
+    pub weight: u64,
+    /// Strict-priority tier (priority policy); higher tiers are served first.
+    pub priority: u32,
+    /// Wait-time SLO in seconds; jobs dispatched within it count as attained.
+    pub slo_wait_s: u64,
+}
+
+/// One arrival row: the open-loop process that spaces a tenant's submissions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalSpec {
+    /// Name of the tenant this process drives.
+    pub tenant: String,
+    /// The inter-arrival process.
+    pub process: ArrivalProcess,
+}
+
+/// An open-loop inter-arrival process. All rates are per simulated minute.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant rate: exponential inter-arrival
+    /// times with mean `1 / rate_per_min` minutes.
+    Poisson { rate_per_min: f64 },
+    /// A sinusoidal day/night cycle sampled by thinning: the instantaneous
+    /// rate swings from `base_per_min` (at t = 0) up to `peak_per_min` and
+    /// back over each `period_min` minutes, averaging `(base + peak) / 2`.
+    Diurnal {
+        base_per_min: f64,
+        peak_per_min: f64,
+        period_min: u64,
+    },
+    /// Pareto inter-arrival times: `scale_min * U^(-1/alpha)` minutes, a
+    /// heavy tail of quiet gaps punctuated by dense bursts. Mean exists only
+    /// for `alpha > 1`.
+    HeavyTailed { alpha: f64, scale_min: f64 },
+}
+
+impl ArrivalProcess {
+    /// Short process-kind name used in spec files and reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+            ArrivalProcess::HeavyTailed { .. } => "heavy-tailed",
+        }
+    }
+
+    /// Long-run mean arrival rate in jobs per minute (0 when the mean
+    /// diverges, i.e. a heavy tail with `alpha <= 1`).
+    pub fn mean_rate_per_min(&self) -> f64 {
+        match self {
+            ArrivalProcess::Poisson { rate_per_min } => *rate_per_min,
+            ArrivalProcess::Diurnal {
+                base_per_min,
+                peak_per_min,
+                ..
+            } => (base_per_min + peak_per_min) / 2.0,
+            ArrivalProcess::HeavyTailed { alpha, scale_min } => {
+                if *alpha > 1.0 {
+                    (*alpha - 1.0) / (*alpha * *scale_min)
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Draw the delay until the next arrival, in sim milliseconds (>= 1).
+    ///
+    /// `now` matters only for the diurnal process, whose instantaneous rate
+    /// depends on the phase of the cycle; the other processes are stationary.
+    pub fn next_delay_ms(&self, rng: &mut SimRng, now: SimTime) -> SimTime {
+        let minutes = match self {
+            ArrivalProcess::Poisson { rate_per_min } => rng.exp(1.0 / rate_per_min),
+            ArrivalProcess::Diurnal {
+                base_per_min,
+                peak_per_min,
+                period_min,
+            } => {
+                // Thinning against the constant peak envelope: propose
+                // candidate points at the peak rate, accept each with
+                // probability rate(t) / peak. rate(t) starts at base (t = 0)
+                // and crests at peak half a period later.
+                let mut t = now as f64 / MINUTE as f64;
+                let mut dt = 0.0;
+                loop {
+                    let step = rng.exp(1.0 / peak_per_min);
+                    dt += step;
+                    t += step;
+                    let phase = 2.0 * std::f64::consts::PI * (t / *period_min as f64);
+                    let rate = base_per_min + (peak_per_min - base_per_min) * 0.5 * (1.0 - phase.cos());
+                    if rng.f64() * peak_per_min <= rate {
+                        break;
+                    }
+                }
+                dt
+            }
+            ArrivalProcess::HeavyTailed { alpha, scale_min } => {
+                let u = 1.0 - rng.f64();
+                scale_min * u.powf(-1.0 / alpha)
+            }
+        };
+        ((minutes * MINUTE as f64).round() as SimTime).max(1)
+    }
+}
+
+/// A named multi-tenant traffic model: tenants plus their arrival processes.
+///
+/// Specs render to and parse from the same paper-style JSON file shape as the
+/// other six input files, and the rendered bytes round-trip exactly:
+///
+/// ```
+/// use ds_rs::traffic::TrafficSpec;
+///
+/// let spec = TrafficSpec::builder("demo")
+///     .tenant("batch", 24, 2, 0, 900)
+///     .tenant("interactive", 16, 1, 1, 120)
+///     .poisson("batch", 2.0)
+///     .diurnal("interactive", 0.5, 2.0, 120)
+///     .build()
+///     .unwrap();
+///
+/// let text = spec.render();
+/// let back = TrafficSpec::parse(&text).unwrap();
+/// assert_eq!(spec, back);
+/// assert_eq!(text, back.render());
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    /// Spec name, used in labels and reports.
+    pub name: String,
+    /// The tenant table.
+    pub tenants: Vec<TenantSpec>,
+    /// One arrival process per tenant.
+    pub arrivals: Vec<ArrivalSpec>,
+}
+
+impl TrafficSpec {
+    /// Built-in shape names accepted by [`TrafficSpec::resolve`].
+    pub const SHAPES: [&'static str; 3] = ["single", "two-tenant", "noisy-neighbor"];
+
+    /// Build a validated spec from parts.
+    pub fn new(
+        name: impl Into<String>,
+        tenants: Vec<TenantSpec>,
+        arrivals: Vec<ArrivalSpec>,
+    ) -> Result<Self, TrafficError> {
+        let spec = TrafficSpec {
+            name: name.into(),
+            tenants,
+            arrivals,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Start a fluent builder.
+    pub fn builder(name: impl Into<String>) -> TrafficBuilder {
+        TrafficBuilder {
+            name: name.into(),
+            tenants: Vec::new(),
+            arrivals: Vec::new(),
+        }
+    }
+
+    /// Check the structural invariants: at least one tenant, unique names,
+    /// positive job counts and weights, exactly one well-formed arrival
+    /// process per tenant.
+    pub fn validate(&self) -> Result<(), TrafficError> {
+        if self.tenants.is_empty() {
+            return Err(TrafficError::Empty {
+                traffic: self.name.clone(),
+            });
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                return Err(TrafficError::DuplicateTenant {
+                    traffic: self.name.clone(),
+                    tenant: t.name.clone(),
+                });
+            }
+            if t.jobs == 0 {
+                return Err(TrafficError::NoJobs {
+                    traffic: self.name.clone(),
+                    tenant: t.name.clone(),
+                });
+            }
+            if t.weight == 0 {
+                return Err(TrafficError::BadWeight {
+                    traffic: self.name.clone(),
+                    tenant: t.name.clone(),
+                });
+            }
+        }
+        for (i, a) in self.arrivals.iter().enumerate() {
+            if !self.tenants.iter().any(|t| t.name == a.tenant) {
+                return Err(TrafficError::UnknownTenant {
+                    traffic: self.name.clone(),
+                    tenant: a.tenant.clone(),
+                });
+            }
+            if self.arrivals[..i].iter().any(|o| o.tenant == a.tenant) {
+                return Err(TrafficError::DuplicateArrival {
+                    traffic: self.name.clone(),
+                    tenant: a.tenant.clone(),
+                });
+            }
+            let bad = |why: &str| TrafficError::BadProcess {
+                traffic: self.name.clone(),
+                tenant: a.tenant.clone(),
+                why: why.to_string(),
+            };
+            match &a.process {
+                ArrivalProcess::Poisson { rate_per_min } => {
+                    if !(*rate_per_min > 0.0) {
+                        return Err(bad("poisson rate must be positive"));
+                    }
+                }
+                ArrivalProcess::Diurnal {
+                    base_per_min,
+                    peak_per_min,
+                    period_min,
+                } => {
+                    if !(*peak_per_min > 0.0) {
+                        return Err(bad("diurnal peak rate must be positive"));
+                    }
+                    if !(*base_per_min >= 0.0) {
+                        return Err(bad("diurnal base rate must be non-negative"));
+                    }
+                    if *base_per_min > *peak_per_min {
+                        return Err(bad("diurnal base rate must not exceed the peak"));
+                    }
+                    if *period_min == 0 {
+                        return Err(bad("diurnal period must be positive"));
+                    }
+                }
+                ArrivalProcess::HeavyTailed { alpha, scale_min } => {
+                    if !(*alpha > 0.0) {
+                        return Err(bad("pareto alpha must be positive"));
+                    }
+                    if !(*scale_min > 0.0) {
+                        return Err(bad("pareto scale must be positive"));
+                    }
+                }
+            }
+        }
+        for t in &self.tenants {
+            if !self.arrivals.iter().any(|a| a.tenant == t.name) {
+                return Err(TrafficError::MissingArrival {
+                    traffic: self.name.clone(),
+                    tenant: t.name.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of tenants.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Total jobs across every tenant.
+    pub fn total_jobs(&self) -> u64 {
+        self.tenants.iter().map(|t| t.jobs).sum()
+    }
+
+    /// Index of the named tenant, if declared.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.tenants.iter().position(|t| t.name == name)
+    }
+
+    /// The arrival process of the tenant at `index`.
+    pub fn process_of(&self, index: usize) -> &ArrivalProcess {
+        let name = &self.tenants[index].name;
+        &self
+            .arrivals
+            .iter()
+            .find(|a| &a.tenant == name)
+            .expect("validated spec has one arrival per tenant")
+            .process
+    }
+
+    /// Render as the paper-style JSON object (NAME / TENANTS / ARRIVALS).
+    pub fn to_json(&self) -> Value {
+        let tenants: Vec<Value> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Value::obj()
+                    .with("name", t.name.as_str())
+                    .with("jobs", t.jobs)
+                    .with("weight", t.weight)
+                    .with("priority", t.priority as u64)
+                    .with("slo_wait_s", t.slo_wait_s)
+            })
+            .collect();
+        let arrivals: Vec<Value> = self
+            .arrivals
+            .iter()
+            .map(|a| {
+                let row = Value::obj()
+                    .with("tenant", a.tenant.as_str())
+                    .with("process", a.process.kind());
+                match &a.process {
+                    ArrivalProcess::Poisson { rate_per_min } => row.with("rate_per_min", *rate_per_min),
+                    ArrivalProcess::Diurnal {
+                        base_per_min,
+                        peak_per_min,
+                        period_min,
+                    } => row
+                        .with("base_per_min", *base_per_min)
+                        .with("peak_per_min", *peak_per_min)
+                        .with("period_min", *period_min),
+                    ArrivalProcess::HeavyTailed { alpha, scale_min } => {
+                        row.with("alpha", *alpha).with("scale_min", *scale_min)
+                    }
+                }
+            })
+            .collect();
+        Value::obj()
+            .with("NAME", self.name.as_str())
+            .with("TENANTS", Value::Arr(tenants))
+            .with("ARRIVALS", Value::Arr(arrivals))
+    }
+
+    /// Strictly decode a spec from its JSON object form. Unknown keys and
+    /// parameters that do not belong to the declared process kind are errors.
+    pub fn from_json(v: &Value) -> Result<Self, TrafficError> {
+        let obj = v.as_obj().ok_or_else(|| parse_err("expected an object"))?;
+        let mut name = None;
+        let mut tenants: Option<Vec<TenantSpec>> = None;
+        let mut arrivals: Option<Vec<ArrivalSpec>> = None;
+        for (k, val) in obj {
+            match k.as_str() {
+                "NAME" => {
+                    name = Some(
+                        val.as_str()
+                            .ok_or_else(|| parse_err("NAME must be a string"))?
+                            .to_string(),
+                    );
+                }
+                "TENANTS" => {
+                    let rows = val
+                        .as_arr()
+                        .ok_or_else(|| parse_err("TENANTS must be an array"))?;
+                    let mut out = Vec::with_capacity(rows.len());
+                    for row in rows {
+                        out.push(tenant_from_json(row)?);
+                    }
+                    tenants = Some(out);
+                }
+                "ARRIVALS" => {
+                    let rows = val
+                        .as_arr()
+                        .ok_or_else(|| parse_err("ARRIVALS must be an array"))?;
+                    let mut out = Vec::with_capacity(rows.len());
+                    for row in rows {
+                        out.push(arrival_from_json(row)?);
+                    }
+                    arrivals = Some(out);
+                }
+                other => return Err(parse_err(format!("unknown key '{other}'"))),
+            }
+        }
+        let spec = TrafficSpec {
+            name: name.ok_or_else(|| parse_err("missing NAME"))?,
+            tenants: tenants.ok_or_else(|| parse_err("missing TENANTS"))?,
+            arrivals: arrivals.ok_or_else(|| parse_err("missing ARRIVALS"))?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from file text.
+    pub fn parse(text: &str) -> Result<Self, TrafficError> {
+        let v = crate::json::parse(text).map_err(|e| parse_err(e.to_string()))?;
+        Self::from_json(&v)
+    }
+
+    /// Render as pretty-printed file text; `parse(render())` is bit-exact.
+    pub fn render(&self) -> String {
+        self.to_json().pretty()
+    }
+
+    /// The built-in shape with the given name, if any.
+    pub fn shape(name: &str) -> Option<TrafficSpec> {
+        let spec = match name {
+            "single" => TrafficSpec::builder("single")
+                .tenant("solo", 24, 1, 0, 600)
+                .poisson("solo", 2.0)
+                .build(),
+            "two-tenant" => TrafficSpec::builder("two-tenant")
+                .tenant("batch", 24, 2, 0, 900)
+                .tenant("interactive", 16, 1, 1, 120)
+                .poisson("batch", 2.0)
+                .diurnal("interactive", 0.5, 2.0, 120)
+                .build(),
+            "noisy-neighbor" => TrafficSpec::builder("noisy-neighbor")
+                .tenant("victim", 24, 1, 1, 300)
+                .tenant("noisy", 96, 1, 0, 3600)
+                .poisson("victim", 1.0)
+                .heavy_tailed("noisy", 1.5, 0.1)
+                .build(),
+            _ => return None,
+        };
+        Some(spec.expect("built-in shapes validate"))
+    }
+
+    /// Resolve a `--traffic` value: a built-in shape name, or a path to a
+    /// readable TRAFFIC file.
+    pub fn resolve(value: &str) -> Result<TrafficSpec, TrafficError> {
+        if let Some(spec) = TrafficSpec::shape(value) {
+            return Ok(spec);
+        }
+        match fs::read_to_string(value) {
+            Ok(text) => TrafficSpec::parse(&text),
+            Err(_) => Err(TrafficError::Unknown(format!(
+                "unknown traffic '{value}': expected a shape name — single, two-tenant, \
+                 noisy-neighbor — or a readable TRAFFIC file path"
+            ))),
+        }
+    }
+}
+
+fn tenant_from_json(v: &Value) -> Result<TenantSpec, TrafficError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| parse_err("TENANTS rows must be objects"))?;
+    let mut name = None;
+    let mut jobs = None;
+    let mut weight = None;
+    let mut priority = None;
+    let mut slo_wait_s = None;
+    for (k, val) in obj {
+        match k.as_str() {
+            "name" => {
+                name = Some(
+                    val.as_str()
+                        .ok_or_else(|| parse_err("tenant name must be a string"))?
+                        .to_string(),
+                );
+            }
+            "jobs" => {
+                jobs = Some(
+                    val.as_u64()
+                        .ok_or_else(|| parse_err("tenant jobs must be an integer"))?,
+                );
+            }
+            "weight" => {
+                weight = Some(
+                    val.as_u64()
+                        .ok_or_else(|| parse_err("tenant weight must be an integer"))?,
+                );
+            }
+            "priority" => {
+                let p = val
+                    .as_u64()
+                    .ok_or_else(|| parse_err("tenant priority must be an integer"))?;
+                priority = Some(u32::try_from(p).map_err(|_| parse_err("tenant priority too large"))?);
+            }
+            "slo_wait_s" => {
+                slo_wait_s = Some(
+                    val.as_u64()
+                        .ok_or_else(|| parse_err("tenant slo_wait_s must be an integer"))?,
+                );
+            }
+            other => return Err(parse_err(format!("unknown tenant key '{other}'"))),
+        }
+    }
+    Ok(TenantSpec {
+        name: name.ok_or_else(|| parse_err("tenant row missing name"))?,
+        jobs: jobs.ok_or_else(|| parse_err("tenant row missing jobs"))?,
+        weight: weight.ok_or_else(|| parse_err("tenant row missing weight"))?,
+        priority: priority.ok_or_else(|| parse_err("tenant row missing priority"))?,
+        slo_wait_s: slo_wait_s.ok_or_else(|| parse_err("tenant row missing slo_wait_s"))?,
+    })
+}
+
+fn arrival_from_json(v: &Value) -> Result<ArrivalSpec, TrafficError> {
+    let obj = v
+        .as_obj()
+        .ok_or_else(|| parse_err("ARRIVALS rows must be objects"))?;
+    let mut tenant = None;
+    let mut kind = None;
+    let mut rate_per_min = None;
+    let mut base_per_min = None;
+    let mut peak_per_min = None;
+    let mut period_min = None;
+    let mut alpha = None;
+    let mut scale_min = None;
+    for (k, val) in obj {
+        match k.as_str() {
+            "tenant" => {
+                tenant = Some(
+                    val.as_str()
+                        .ok_or_else(|| parse_err("arrival tenant must be a string"))?
+                        .to_string(),
+                );
+            }
+            "process" => {
+                kind = Some(
+                    val.as_str()
+                        .ok_or_else(|| parse_err("arrival process must be a string"))?
+                        .to_string(),
+                );
+            }
+            "rate_per_min" => {
+                rate_per_min = Some(
+                    val.as_f64()
+                        .ok_or_else(|| parse_err("rate_per_min must be a number"))?,
+                );
+            }
+            "base_per_min" => {
+                base_per_min = Some(
+                    val.as_f64()
+                        .ok_or_else(|| parse_err("base_per_min must be a number"))?,
+                );
+            }
+            "peak_per_min" => {
+                peak_per_min = Some(
+                    val.as_f64()
+                        .ok_or_else(|| parse_err("peak_per_min must be a number"))?,
+                );
+            }
+            "period_min" => {
+                period_min = Some(
+                    val.as_u64()
+                        .ok_or_else(|| parse_err("period_min must be an integer"))?,
+                );
+            }
+            "alpha" => {
+                alpha = Some(
+                    val.as_f64()
+                        .ok_or_else(|| parse_err("alpha must be a number"))?,
+                );
+            }
+            "scale_min" => {
+                scale_min = Some(
+                    val.as_f64()
+                        .ok_or_else(|| parse_err("scale_min must be a number"))?,
+                );
+            }
+            other => return Err(parse_err(format!("unknown arrival key '{other}'"))),
+        }
+    }
+    let tenant = tenant.ok_or_else(|| parse_err("arrival row missing tenant"))?;
+    let kind = kind.ok_or_else(|| parse_err("arrival row missing process"))?;
+    let stray = |params: &[(&str, bool)]| -> Result<(), TrafficError> {
+        for (name, present) in params {
+            if *present {
+                return Err(parse_err(format!(
+                    "arrival key '{name}' does not belong to process '{kind}'"
+                )));
+            }
+        }
+        Ok(())
+    };
+    let process = match kind.as_str() {
+        "poisson" => {
+            stray(&[
+                ("base_per_min", base_per_min.is_some()),
+                ("peak_per_min", peak_per_min.is_some()),
+                ("period_min", period_min.is_some()),
+                ("alpha", alpha.is_some()),
+                ("scale_min", scale_min.is_some()),
+            ])?;
+            ArrivalProcess::Poisson {
+                rate_per_min: rate_per_min
+                    .ok_or_else(|| parse_err("poisson arrival missing rate_per_min"))?,
+            }
+        }
+        "diurnal" => {
+            stray(&[
+                ("rate_per_min", rate_per_min.is_some()),
+                ("alpha", alpha.is_some()),
+                ("scale_min", scale_min.is_some()),
+            ])?;
+            ArrivalProcess::Diurnal {
+                base_per_min: base_per_min
+                    .ok_or_else(|| parse_err("diurnal arrival missing base_per_min"))?,
+                peak_per_min: peak_per_min
+                    .ok_or_else(|| parse_err("diurnal arrival missing peak_per_min"))?,
+                period_min: period_min
+                    .ok_or_else(|| parse_err("diurnal arrival missing period_min"))?,
+            }
+        }
+        "heavy-tailed" => {
+            stray(&[
+                ("rate_per_min", rate_per_min.is_some()),
+                ("base_per_min", base_per_min.is_some()),
+                ("peak_per_min", peak_per_min.is_some()),
+                ("period_min", period_min.is_some()),
+            ])?;
+            ArrivalProcess::HeavyTailed {
+                alpha: alpha.ok_or_else(|| parse_err("heavy-tailed arrival missing alpha"))?,
+                scale_min: scale_min
+                    .ok_or_else(|| parse_err("heavy-tailed arrival missing scale_min"))?,
+            }
+        }
+        other => {
+            return Err(parse_err(format!(
+                "unknown arrival process '{other}': expected poisson, diurnal, or heavy-tailed"
+            )))
+        }
+    };
+    Ok(ArrivalSpec { tenant, process })
+}
+
+/// Fluent builder for [`TrafficSpec`].
+#[derive(Debug, Clone)]
+pub struct TrafficBuilder {
+    name: String,
+    tenants: Vec<TenantSpec>,
+    arrivals: Vec<ArrivalSpec>,
+}
+
+impl TrafficBuilder {
+    /// Add a tenant row.
+    pub fn tenant(
+        mut self,
+        name: impl Into<String>,
+        jobs: u64,
+        weight: u64,
+        priority: u32,
+        slo_wait_s: u64,
+    ) -> Self {
+        self.tenants.push(TenantSpec {
+            name: name.into(),
+            jobs,
+            weight,
+            priority,
+            slo_wait_s,
+        });
+        self
+    }
+
+    /// Bind a Poisson arrival process to a tenant.
+    pub fn poisson(mut self, tenant: impl Into<String>, rate_per_min: f64) -> Self {
+        self.arrivals.push(ArrivalSpec {
+            tenant: tenant.into(),
+            process: ArrivalProcess::Poisson { rate_per_min },
+        });
+        self
+    }
+
+    /// Bind a diurnal arrival process to a tenant.
+    pub fn diurnal(
+        mut self,
+        tenant: impl Into<String>,
+        base_per_min: f64,
+        peak_per_min: f64,
+        period_min: u64,
+    ) -> Self {
+        self.arrivals.push(ArrivalSpec {
+            tenant: tenant.into(),
+            process: ArrivalProcess::Diurnal {
+                base_per_min,
+                peak_per_min,
+                period_min,
+            },
+        });
+        self
+    }
+
+    /// Bind a heavy-tailed (Pareto) arrival process to a tenant.
+    pub fn heavy_tailed(
+        mut self,
+        tenant: impl Into<String>,
+        alpha: f64,
+        scale_min: f64,
+    ) -> Self {
+        self.arrivals.push(ArrivalSpec {
+            tenant: tenant.into(),
+            process: ArrivalProcess::HeavyTailed { alpha, scale_min },
+        });
+        self
+    }
+
+    /// Validate and produce the spec.
+    pub fn build(self) -> Result<TrafficSpec, TrafficError> {
+        TrafficSpec::new(self.name, self.tenants, self.arrivals)
+    }
+}
+
+/// How the coordinator picks among tenants' queued messages.
+///
+/// ```
+/// use ds_rs::traffic::QueueingPolicy;
+///
+/// assert_eq!(QueueingPolicy::parse("fair-share"), Some(QueueingPolicy::FairShare));
+/// assert_eq!(QueueingPolicy::FairShare.name(), "fair-share");
+/// assert_eq!(QueueingPolicy::default(), QueueingPolicy::Fifo);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueingPolicy {
+    /// Serve messages strictly in enqueue order, tenant-blind.
+    #[default]
+    Fifo,
+    /// Weighted deficit round-robin across tenants: each tenant spends
+    /// credits equal to its weight per round, so a backlogged tenant cannot
+    /// starve the others.
+    FairShare,
+    /// Strict priority tiers: a higher-priority tenant's messages always go
+    /// first; FIFO order within a tier.
+    Priority,
+}
+
+impl QueueingPolicy {
+    /// Every policy, in declaration order.
+    pub const ALL: [QueueingPolicy; 3] = [
+        QueueingPolicy::Fifo,
+        QueueingPolicy::FairShare,
+        QueueingPolicy::Priority,
+    ];
+
+    /// Stable lowercase name used in flags, labels, and JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueingPolicy::Fifo => "fifo",
+            QueueingPolicy::FairShare => "fair-share",
+            QueueingPolicy::Priority => "priority",
+        }
+    }
+
+    /// Parse a policy name.
+    pub fn parse(s: &str) -> Option<QueueingPolicy> {
+        QueueingPolicy::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+impl fmt::Display for QueueingPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Pure per-tenant dispatch arithmetic for the queueing policies.
+///
+/// `choose` is handed, for each tenant, the queue position of its
+/// head-of-line visible message (`None` when the tenant has nothing queued)
+/// and returns the position to serve next. The struct owns the mutable
+/// fair-share state (credits and the round-robin pointer) so the decision is
+/// deterministic given the call sequence.
+#[derive(Debug, Clone)]
+pub struct DispatchState {
+    policy: QueueingPolicy,
+    weights: Vec<u64>,
+    priorities: Vec<u32>,
+    credits: Vec<u64>,
+    rr: usize,
+}
+
+impl DispatchState {
+    /// Build dispatch state for a spec under a policy.
+    pub fn new(spec: &TrafficSpec, policy: QueueingPolicy) -> DispatchState {
+        let weights: Vec<u64> = spec.tenants.iter().map(|t| t.weight).collect();
+        let priorities = spec.tenants.iter().map(|t| t.priority).collect();
+        let credits = weights.clone();
+        DispatchState {
+            policy,
+            weights,
+            priorities,
+            credits,
+            rr: 0,
+        }
+    }
+
+    /// Pick the queue position to serve, given each tenant's head-of-line
+    /// position. Returns `None` only when no tenant has a message queued.
+    pub fn choose(&mut self, heads: &[Option<usize>]) -> Option<usize> {
+        match self.policy {
+            QueueingPolicy::Fifo => heads.iter().flatten().copied().min(),
+            QueueingPolicy::Priority => {
+                let top = heads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, h)| h.is_some())
+                    .map(|(t, _)| self.priorities[t])
+                    .max()?;
+                heads
+                    .iter()
+                    .enumerate()
+                    .filter(|(t, h)| h.is_some() && self.priorities[*t] == top)
+                    .filter_map(|(_, h)| *h)
+                    .min()
+            }
+            QueueingPolicy::FairShare => {
+                if heads.iter().all(|h| h.is_none()) {
+                    return None;
+                }
+                let n = heads.len();
+                // Scan from the round-robin pointer for a backlogged tenant
+                // with credit; if a full pass finds none, refill everyone's
+                // credits from their weights and scan once more.
+                for _ in 0..=1 {
+                    for k in 0..n {
+                        let t = (self.rr + k) % n;
+                        if let Some(pos) = heads[t] {
+                            if self.credits[t] > 0 {
+                                self.credits[t] -= 1;
+                                self.rr = t;
+                                return Some(pos);
+                            }
+                        }
+                    }
+                    self.credits.copy_from_slice(&self.weights);
+                    self.rr = (self.rr + 1) % n;
+                }
+                heads.iter().flatten().copied().min()
+            }
+        }
+    }
+}
+
+/// Per-tenant outcome slice inside a [`TenantBreakdown`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSlice {
+    /// Tenant name.
+    pub tenant: String,
+    /// Fair-share weight, echoed from the spec.
+    pub weight: u64,
+    /// Priority tier, echoed from the spec.
+    pub priority: u32,
+    /// Jobs this tenant submitted onto the queue.
+    pub submitted: u64,
+    /// Jobs that completed.
+    pub completed: u64,
+    /// Median queue wait (enqueue → dispatch) in ms.
+    pub wait_p50_ms: u64,
+    /// 95th-percentile queue wait in ms.
+    pub wait_p95_ms: u64,
+    /// The tenant's SLO target in ms.
+    pub slo_target_ms: u64,
+    /// Completed jobs whose wait met the SLO target.
+    pub slo_attained: u64,
+    /// This tenant's share of the run's bill, by completed-job fraction.
+    pub billed_usd: f64,
+}
+
+/// Per-tenant rollup attached to every run report. Traffic-free runs carry
+/// the default ("single"/"fifo", no tenant rows) and emit nothing extra in
+/// summaries or JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantBreakdown {
+    /// Traffic spec name ("single" for traffic-free runs).
+    pub traffic: String,
+    /// Queueing policy name.
+    pub queueing: String,
+    /// One slice per tenant, in spec order.
+    pub tenants: Vec<TenantSlice>,
+}
+
+impl Default for TenantBreakdown {
+    fn default() -> Self {
+        TenantBreakdown {
+            traffic: "single".to_string(),
+            queueing: "fifo".to_string(),
+            tenants: Vec::new(),
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice of waits; 0 when
+/// empty. Matches the rounding used by `Aggregate::from_values`.
+pub fn wait_percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> TrafficSpec {
+        TrafficSpec::builder("demo")
+            .tenant("batch", 24, 2, 0, 900)
+            .tenant("interactive", 16, 1, 1, 120)
+            .poisson("batch", 2.0)
+            .diurnal("interactive", 0.5, 2.0, 120)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_and_queries() {
+        let spec = demo();
+        assert_eq!(spec.tenant_count(), 2);
+        assert_eq!(spec.total_jobs(), 40);
+        assert_eq!(spec.index_of("interactive"), Some(1));
+        assert_eq!(spec.index_of("nobody"), None);
+        assert_eq!(spec.process_of(0).kind(), "poisson");
+        assert_eq!(spec.process_of(1).kind(), "diurnal");
+        assert!((spec.process_of(0).mean_rate_per_min() - 2.0).abs() < 1e-12);
+        assert!((spec.process_of(1).mean_rate_per_min() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let empty = TrafficSpec {
+            name: "e".into(),
+            tenants: vec![],
+            arrivals: vec![],
+        };
+        assert_eq!(
+            empty.validate(),
+            Err(TrafficError::Empty { traffic: "e".into() })
+        );
+
+        let dup = TrafficSpec::builder("d")
+            .tenant("a", 1, 1, 0, 60)
+            .tenant("a", 1, 1, 0, 60)
+            .poisson("a", 1.0)
+            .build();
+        assert_eq!(
+            dup,
+            Err(TrafficError::DuplicateTenant {
+                traffic: "d".into(),
+                tenant: "a".into()
+            })
+        );
+
+        let no_jobs = TrafficSpec::builder("n")
+            .tenant("a", 0, 1, 0, 60)
+            .poisson("a", 1.0)
+            .build();
+        assert_eq!(
+            no_jobs,
+            Err(TrafficError::NoJobs {
+                traffic: "n".into(),
+                tenant: "a".into()
+            })
+        );
+
+        let bad_weight = TrafficSpec::builder("w")
+            .tenant("a", 1, 0, 0, 60)
+            .poisson("a", 1.0)
+            .build();
+        assert_eq!(
+            bad_weight,
+            Err(TrafficError::BadWeight {
+                traffic: "w".into(),
+                tenant: "a".into()
+            })
+        );
+
+        let unknown = TrafficSpec::builder("u")
+            .tenant("a", 1, 1, 0, 60)
+            .poisson("a", 1.0)
+            .poisson("ghost", 1.0)
+            .build();
+        assert_eq!(
+            unknown,
+            Err(TrafficError::UnknownTenant {
+                traffic: "u".into(),
+                tenant: "ghost".into()
+            })
+        );
+
+        let dup_arrival = TrafficSpec::builder("da")
+            .tenant("a", 1, 1, 0, 60)
+            .poisson("a", 1.0)
+            .poisson("a", 2.0)
+            .build();
+        assert_eq!(
+            dup_arrival,
+            Err(TrafficError::DuplicateArrival {
+                traffic: "da".into(),
+                tenant: "a".into()
+            })
+        );
+
+        let missing = TrafficSpec::builder("m")
+            .tenant("a", 1, 1, 0, 60)
+            .tenant("b", 1, 1, 0, 60)
+            .poisson("a", 1.0)
+            .build();
+        assert_eq!(
+            missing,
+            Err(TrafficError::MissingArrival {
+                traffic: "m".into(),
+                tenant: "b".into()
+            })
+        );
+
+        let bad_rate = TrafficSpec::builder("r")
+            .tenant("a", 1, 1, 0, 60)
+            .poisson("a", 0.0)
+            .build();
+        assert!(matches!(bad_rate, Err(TrafficError::BadProcess { .. })));
+
+        let bad_diurnal = TrafficSpec::builder("di")
+            .tenant("a", 1, 1, 0, 60)
+            .diurnal("a", 3.0, 2.0, 60)
+            .build();
+        assert!(matches!(bad_diurnal, Err(TrafficError::BadProcess { .. })));
+
+        let bad_period = TrafficSpec::builder("p")
+            .tenant("a", 1, 1, 0, 60)
+            .diurnal("a", 0.5, 2.0, 0)
+            .build();
+        assert!(matches!(bad_period, Err(TrafficError::BadProcess { .. })));
+
+        let bad_alpha = TrafficSpec::builder("al")
+            .tenant("a", 1, 1, 0, 60)
+            .heavy_tailed("a", 0.0, 0.1)
+            .build();
+        assert!(matches!(bad_alpha, Err(TrafficError::BadProcess { .. })));
+    }
+
+    #[test]
+    fn render_parse_round_trip_is_bit_identical() {
+        for shape in TrafficSpec::SHAPES {
+            let spec = match TrafficSpec::shape(shape) {
+                Some(s) => s,
+                None => continue,
+            };
+            let text = spec.render();
+            let back = TrafficSpec::parse(&text).unwrap();
+            assert_eq!(spec, back, "{shape} round trip changed the spec");
+            assert_eq!(text, back.render(), "{shape} render is not bit-stable");
+        }
+        let spec = demo();
+        let text = spec.render();
+        assert_eq!(TrafficSpec::parse(&text).unwrap().render(), text);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_shapes() {
+        assert!(matches!(
+            TrafficSpec::parse("[1, 2]"),
+            Err(TrafficError::Parse(_))
+        ));
+        assert!(matches!(
+            TrafficSpec::parse(r#"{"NAME": "x", "WAT": 1}"#),
+            Err(TrafficError::Parse(_))
+        ));
+        // A poisson arrival must not smuggle diurnal parameters.
+        let mixed = r#"{
+            "NAME": "x",
+            "TENANTS": [{"name": "a", "jobs": 1, "weight": 1, "priority": 0, "slo_wait_s": 60}],
+            "ARRIVALS": [{"tenant": "a", "process": "poisson", "rate_per_min": 1.0, "period_min": 60}]
+        }"#;
+        assert!(matches!(TrafficSpec::parse(mixed), Err(TrafficError::Parse(_))));
+        let bad_kind = r#"{
+            "NAME": "x",
+            "TENANTS": [{"name": "a", "jobs": 1, "weight": 1, "priority": 0, "slo_wait_s": 60}],
+            "ARRIVALS": [{"tenant": "a", "process": "uniform", "rate_per_min": 1.0}]
+        }"#;
+        assert!(matches!(TrafficSpec::parse(bad_kind), Err(TrafficError::Parse(_))));
+        assert!(matches!(
+            TrafficSpec::resolve("no-such-shape-or-file"),
+            Err(TrafficError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn shapes_resolve_and_validate() {
+        for shape in TrafficSpec::SHAPES {
+            let spec = TrafficSpec::resolve(shape).unwrap();
+            assert_eq!(spec.name, shape);
+            spec.validate().unwrap();
+            assert!(spec.total_jobs() > 0);
+        }
+        assert_eq!(TrafficSpec::shape("single").unwrap().tenant_count(), 1);
+        assert_eq!(TrafficSpec::shape("noisy-neighbor").unwrap().tenant_count(), 2);
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in QueueingPolicy::ALL {
+            assert_eq!(QueueingPolicy::parse(p.name()), Some(p));
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(QueueingPolicy::parse("lifo"), None);
+        assert_eq!(QueueingPolicy::default(), QueueingPolicy::Fifo);
+    }
+
+    #[test]
+    fn breakdown_default_is_the_flat_run() {
+        let b = TenantBreakdown::default();
+        assert_eq!(b.traffic, "single");
+        assert_eq!(b.queueing, "fifo");
+        assert!(b.tenants.is_empty());
+    }
+
+    #[test]
+    fn fifo_dispatch_serves_the_oldest_message() {
+        let spec = demo();
+        let mut d = DispatchState::new(&spec, QueueingPolicy::Fifo);
+        assert_eq!(d.choose(&[Some(3), Some(1)]), Some(1));
+        assert_eq!(d.choose(&[Some(0), None]), Some(0));
+        assert_eq!(d.choose(&[None, None]), None);
+    }
+
+    #[test]
+    fn priority_dispatch_serves_higher_tiers_first() {
+        // demo(): batch has priority 0, interactive priority 1.
+        let spec = demo();
+        let mut d = DispatchState::new(&spec, QueueingPolicy::Priority);
+        assert_eq!(d.choose(&[Some(0), Some(5)]), Some(5));
+        assert_eq!(d.choose(&[Some(0), None]), Some(0));
+        assert_eq!(d.choose(&[None, None]), None);
+    }
+
+    #[test]
+    fn fair_share_dispatch_honors_weights() {
+        // demo(): batch weight 2, interactive weight 1 → 2:1 service ratio.
+        let spec = demo();
+        let mut d = DispatchState::new(&spec, QueueingPolicy::FairShare);
+        let mut served = [0u64, 0u64];
+        for _ in 0..300 {
+            // Both tenants always backlogged; positions are arbitrary but
+            // distinct so we can tell who got served.
+            let pick = d.choose(&[Some(0), Some(1)]).unwrap();
+            served[pick] += 1;
+        }
+        assert_eq!(served[0], 200, "weight-2 tenant should get 2/3 of service");
+        assert_eq!(served[1], 100, "weight-1 tenant should get 1/3 of service");
+    }
+
+    #[test]
+    fn fair_share_dispatch_falls_through_to_backlogged_tenant() {
+        let spec = demo();
+        let mut d = DispatchState::new(&spec, QueueingPolicy::FairShare);
+        // Only one tenant has work: it must be served every time, credits
+        // refilling as needed.
+        for _ in 0..10 {
+            assert_eq!(d.choose(&[None, Some(4)]), Some(4));
+        }
+        assert_eq!(d.choose(&[None, None]), None);
+    }
+
+    #[test]
+    fn arrival_draws_are_seed_stable_and_positive() {
+        for process in [
+            ArrivalProcess::Poisson { rate_per_min: 2.0 },
+            ArrivalProcess::Diurnal {
+                base_per_min: 0.5,
+                peak_per_min: 2.0,
+                period_min: 120,
+            },
+            ArrivalProcess::HeavyTailed {
+                alpha: 1.5,
+                scale_min: 0.1,
+            },
+        ] {
+            let draw = |seed: u64| -> Vec<SimTime> {
+                let mut rng = SimRng::new(seed);
+                let mut now: SimTime = 0;
+                let mut out = Vec::new();
+                for _ in 0..64 {
+                    let d = process.next_delay_ms(&mut rng, now);
+                    assert!(d >= 1, "{} drew a non-positive delay", process.kind());
+                    now += d;
+                    out.push(d);
+                }
+                out
+            };
+            assert_eq!(draw(7), draw(7), "{} is not seed-stable", process.kind());
+            assert_ne!(draw(7), draw(8), "{} ignores its seed", process.kind());
+        }
+    }
+
+    #[test]
+    fn wait_percentile_matches_nearest_rank() {
+        assert_eq!(wait_percentile(&[], 0.95), 0);
+        assert_eq!(wait_percentile(&[42], 0.5), 42);
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(wait_percentile(&v, 0.5), 50);
+        assert_eq!(wait_percentile(&v, 0.95), 95);
+        assert_eq!(wait_percentile(&v, 1.0), 100);
+    }
+}

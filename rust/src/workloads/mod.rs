@@ -11,6 +11,12 @@
 //!   Distributed-OmeZarrCreator output format).
 //! * [`dag`]      — canonical DAG workflow shapes (diamond, fan-out/fan-in,
 //!   Montage-shaped mosaic, linear pipeline) for the workflow scheduler.
+//!
+//! Demand models live elsewhere: flat Job files and DAG workflows fix
+//! *what* runs, while `crate::traffic` fixes *when* it arrives — its
+//! per-tenant generators feed the same executors and duration models
+//! one SQS message per arrival, so every workload kind composes with
+//! open-loop multi-tenant traffic unchanged.
 
 pub mod dag;
 pub mod drivers;

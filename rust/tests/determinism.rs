@@ -569,3 +569,92 @@ fn topological_declaration_order_does_not_change_report_bytes() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Multi-tenant open-loop traffic gates (DESIGN.md §13).
+//
+// Traffic runs replace the t=0 batch with per-tenant generators that
+// enqueue SQS messages throughout the run, and non-FIFO queueing changes
+// which message a free core picks.  Both are new orderings the seed must
+// fully determine, so they get the same wall: thread-count invariance
+// and engine A/B equivalence over the full traffic × queueing matrix.
+
+/// A traffic sweep over arrival shapes × every queueing policy is
+/// bit-identical at 1/2/8 worker threads under every `{queue} × {store}`
+/// engine combination — generator draws and tenant-aware dispatch must
+/// not introduce any ordering the seed does not fully determine.
+#[test]
+fn traffic_sweep_identical_across_threads_and_engines() {
+    use ds_rs::traffic::{QueueingPolicy, TrafficSpec};
+    let mk = |engine: EngineOptions| {
+        let mut plan = SweepPlan::builder()
+            .config(cfg())
+            // Traffic cells ignore the Job file: the generators are the
+            // workload.
+            .jobs(plate_jobs(2, 1))
+            .seeds(0..2)
+            .traffics([
+                TrafficSpec::shape("two-tenant"),
+                TrafficSpec::shape("noisy-neighbor"),
+            ])
+            .queueings(QueueingPolicy::ALL)
+            .models([DurationModel {
+                mean_s: 40.0,
+                cv: 0.3,
+                ..Default::default()
+            }])
+            .build()
+            .unwrap();
+        plan.base_opts.engine = engine;
+        plan
+    };
+    let reference = run_sweep(&mk(all_engines()[0]), 2).unwrap();
+    // Sanity: 2 traffic shapes x 3 queueing policies, every cell carried
+    // its tenant identity into the aggregates and finished its jobs.
+    assert_eq!(reference.report.scenarios.len(), 6);
+    for s in &reference.report.scenarios {
+        assert_eq!(s.traffic.tenants.len(), 2, "no tenant rows in '{}'", s.label);
+        let submitted: u64 = s.traffic.tenants.iter().map(|t| t.submitted).sum();
+        let completed: u64 = s.traffic.tenants.iter().map(|t| t.completed).sum();
+        assert!(submitted > 0, "{}", s.label);
+        assert_eq!(completed, s.completed, "{}", s.label);
+    }
+    for engine in all_engines() {
+        for threads in [1, 2, 8] {
+            let run = run_sweep(&mk(engine), threads).unwrap();
+            assert_eq!(reference.report, run.report, "{engine:?} @ {threads} threads");
+            assert_eq!(reference.cells, run.cells, "{engine:?} @ {threads} threads");
+            // Byte-level: the exported sweep JSON is identical too.
+            assert_eq!(
+                reference.report.to_json().to_string(),
+                run.report.to_json().to_string(),
+                "{engine:?} @ {threads} threads"
+            );
+        }
+    }
+}
+
+/// The legacy-compatibility gate the axis promises: `--traffic single`
+/// parses to *no* traffic spec, so a plan that says "single" explicitly
+/// and a plan that never mentions traffic produce byte-identical sweep
+/// JSON — pre-traffic output is untouched.
+#[test]
+fn traffic_single_sweep_bytes_match_the_traffic_free_plan() {
+    let explicit = {
+        let mut plan = sweep_plan();
+        plan.matrix.traffics = vec![None]; // what `--traffic single` parses to
+        plan
+    };
+    let a = run_sweep(&explicit, 2).unwrap();
+    let b = run_sweep(&sweep_plan(), 2).unwrap();
+    assert_eq!(a.report, b.report);
+    assert_eq!(a.cells, b.cells);
+    assert_eq!(
+        a.report.to_json().to_string(),
+        b.report.to_json().to_string()
+    );
+    // And the legacy JSON shape is intact: no traffic key anywhere.
+    for s in &a.report.scenarios {
+        assert!(s.to_json().get("traffic").is_none(), "{}", s.label);
+    }
+}

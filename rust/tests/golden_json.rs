@@ -240,6 +240,59 @@ fn topology_file_field_set_is_pinned_and_render_is_bit_stable() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Traffic schemas (DESIGN.md §13): the TRAFFIC file format and the
+// traffic slice of the run report, per-tenant rows included.
+// ---------------------------------------------------------------------
+
+use ds_rs::traffic::{QueueingPolicy, TrafficSpec};
+
+/// A deterministic multi-tenant run — the noisy-neighbor shape under
+/// fair-share — so the report carries the conditional `traffic` object
+/// with populated tenant rows.
+fn traffic_report() -> ds_rs::metrics::RunReport {
+    let cfg = quick_cfg(3);
+    let opts = RunOptions {
+        traffic: TrafficSpec::shape("noisy-neighbor"),
+        queueing: QueueingPolicy::FairShare,
+        ..Default::default()
+    };
+    let mut ex = modeled(60.0);
+    run_full(&cfg, &plate_jobs(2, 1), &template_fleet(), &mut ex, opts).unwrap()
+}
+
+#[test]
+fn traffic_run_report_field_set_pins_tenant_rows() {
+    let report = traffic_report();
+    assert!(report.drained_at.is_some(), "golden traffic run must drain");
+    assert_eq!(
+        report.traffic.tenants.len(),
+        2,
+        "must exercise the tenant rows — key_paths only walks populated arrays"
+    );
+    assert!(
+        report.traffic.tenants.iter().all(|t| t.completed > 0),
+        "every tenant must complete work: {:?}",
+        report.traffic
+    );
+    assert_matches_golden(&paths_of(&report.to_json()), "traffic_run_report.keys");
+}
+
+#[test]
+fn traffic_file_field_set_is_pinned_and_render_is_bit_stable() {
+    for name in TrafficSpec::SHAPES {
+        let spec = TrafficSpec::shape(name).unwrap();
+        assert_matches_golden(&paths_of(&spec.to_json()), "traffic_spec.keys");
+        // render → parse → render is byte-stable: TRAFFIC files and the
+        // inline axis objects in rendered Sweep files share this codec,
+        // so any asymmetry would desynchronise shard workers.
+        let text = spec.render();
+        let back = TrafficSpec::parse(&text).unwrap();
+        assert_eq!(back, spec, "{name}: parse must invert render");
+        assert_eq!(back.render(), text, "{name}: render must be bit-stable");
+    }
+}
+
 #[test]
 fn run_and_sweep_json_round_trip_through_the_parser() {
     // The emitted JSON is valid and value-stable through parse→pretty.

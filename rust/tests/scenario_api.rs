@@ -22,6 +22,7 @@ use ds_rs::sim::{SimRng, MINUTE};
 use ds_rs::testutil::fixtures::args as cli;
 use ds_rs::testutil::forall_r;
 use ds_rs::topology::{ClusterTopology, Placement};
+use ds_rs::traffic::{QueueingPolicy, TrafficSpec};
 use ds_rs::workloads::DurationModel;
 
 /// A random small-but-varied plan touching every axis with some
@@ -109,6 +110,30 @@ fn random_plan(rng: &mut SimRng) -> SweepPlan {
         b = b.placements(vec![Placement::Pack, *rng.pick(&[
             Placement::Spread,
             Placement::Cheapest,
+        ])]);
+    }
+    if rng.chance(0.3) {
+        // An inline (non-shape) traffic spec exercises the TRAFFIC
+        // axis's object rendering through the file.
+        let spec = if rng.chance(0.5) {
+            TrafficSpec::shape(*rng.pick(&["two-tenant", "noisy-neighbor"]))
+        } else {
+            Some(
+                TrafficSpec::builder("inline")
+                    .tenant("a", rng.range_u64(2, 6), 1, 0, 600)
+                    .tenant("b", rng.range_u64(2, 6), 2, 1, 120)
+                    .poisson("a", 1.0 + rng.below(3) as f64)
+                    .diurnal("b", 0.5, 2.0, rng.range_u64(30, 120))
+                    .build()
+                    .expect("inline traffic"),
+            )
+        };
+        b = b.traffics(vec![None, spec]);
+    }
+    if rng.chance(0.3) {
+        b = b.queueings(vec![QueueingPolicy::Fifo, *rng.pick(&[
+            QueueingPolicy::FairShare,
+            QueueingPolicy::Priority,
         ])]);
     }
     b.build().expect("builder plan")

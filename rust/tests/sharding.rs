@@ -147,6 +147,35 @@ fn topology_plan() -> SweepPlan {
         .expect("topology plan")
 }
 
+/// 4 scenarios (2 traffic shapes × 2 queueing policies) × 2 seeds =
+/// 8 cells; the custom spec travels inline through the rendered Sweep
+/// file, so the differential covers the TRAFFIC axis codec end to end.
+fn traffic_plan() -> SweepPlan {
+    use ds_rs::traffic::{QueueingPolicy, TrafficSpec};
+    let bursty = TrafficSpec::builder("bursty")
+        .tenant("victim", 10, 1, 1, 300)
+        .tenant("noisy", 40, 1, 0, 3600)
+        .poisson("victim", 1.0)
+        .heavy_tailed("noisy", 1.5, 0.1)
+        .build()
+        .expect("bursty traffic");
+    SweepPlan::builder()
+        .config(quick_cfg(3))
+        // Traffic cells ignore the Job file: the generators are the
+        // workload.
+        .jobs(plate_jobs(2, 1))
+        .seeds([7, 8])
+        .traffics([TrafficSpec::shape("two-tenant"), Some(bursty)])
+        .queueings([QueueingPolicy::Fifo, QueueingPolicy::FairShare])
+        .models([DurationModel {
+            mean_s: 45.0,
+            cv: 0.3,
+            ..Default::default()
+        }])
+        .build()
+        .expect("traffic plan")
+}
+
 /// Full-fidelity equality: struct, per-cell results, JSON bytes, table
 /// bytes.
 fn assert_runs_identical(reference: &SweepRun, sharded: &SweepRun, label: &str) {
@@ -257,6 +286,61 @@ fn sharded_topology_sweep_identical_at_1_3_and_8_shards() {
         let sharded = sharded_inproc(&plan, shards, 2);
         assert_runs_identical(&reference, &sharded, &format!("topology {shards} shards"));
     }
+}
+
+#[test]
+fn sharded_traffic_sweep_identical_at_1_3_and_8_shards() {
+    let plan = traffic_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    // Sanity: every cell really ran multi-tenant (the differential is
+    // vacuous otherwise) and completed both tenants' jobs.
+    for c in &reference.cells {
+        assert_eq!(c.report.traffic.tenants.len(), 2);
+        let done: u64 = c.report.traffic.tenants.iter().map(|t| t.completed).sum();
+        assert_eq!(done, c.report.stats.completed);
+    }
+    for shards in [1, 3, 8] {
+        let sharded = sharded_inproc(&plan, shards, 2);
+        assert_runs_identical(&reference, &sharded, &format!("traffic {shards} shards"));
+    }
+}
+
+#[test]
+fn traffic_shards_survive_kill_and_retry_with_identical_bytes() {
+    let plan = traffic_plan();
+    let reference = run_sweep(&plan, 2).unwrap();
+    let exec = FaultyExecutor::new(InProcExecutor).fault(1, 0, Fault::Kill);
+    let opts = ShardOptions {
+        shards: 3,
+        threads: 2,
+        retries: 1,
+    };
+    let run = run_sweep_sharded(&plan, &opts, &exec).unwrap();
+    assert_runs_identical(&reference, &run, "traffic kill then retry");
+    assert_eq!(exec.attempts(1), 2, "shard 1 should retry once");
+    assert_eq!(exec.attempts(0), 1, "shard 0 was healthy");
+    assert_eq!(exec.attempts(2), 1, "shard 2 was healthy");
+}
+
+#[test]
+fn traffic_request_round_trip_preserves_inline_specs() {
+    // Like the workflow and topology axes, TRAFFIC values are whole
+    // JSON objects in the Sweep file; the envelope must round-trip them
+    // without flattening.
+    let plan = traffic_plan();
+    let req = SweepShardRequest {
+        plan: plan.clone(),
+        threads: 2,
+        assignment: shard_plan(8, 3)[0].clone(),
+    };
+    let decoded =
+        SweepShardRequest::from_json(&ds_rs::json::parse(&req.to_json().pretty()).unwrap())
+            .unwrap();
+    assert_eq!(decoded.plan.matrix.traffics, plan.matrix.traffics);
+    assert_eq!(decoded.plan.matrix.queueings, plan.matrix.queueings);
+    let a = run_sweep(&plan, 2).unwrap();
+    let b = run_sweep(&decoded.plan, 2).unwrap();
+    assert_runs_identical(&a, &b, "traffic request round trip");
 }
 
 #[test]
@@ -745,6 +829,7 @@ fn real_process_differential_matrix() {
         ("crashy", crashy_data_plan()),
         ("scaling", scaling_data_plan()),
         ("workflow", workflow_plan()),
+        ("traffic", traffic_plan()),
     ] {
         let reference = run_sweep(&plan, 2).unwrap();
         for shards in [2, 8] {

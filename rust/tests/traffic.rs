@@ -1,0 +1,210 @@
+//! Statistical property wall for the open-loop arrival generators
+//! (DESIGN.md §13).
+//!
+//! The generators are only useful if they are simultaneously (a) honest
+//! samplers of the process they claim to be and (b) bit-deterministic
+//! functions of the seed, invariant across event-engine backends.  The
+//! tests here pin both: empirical rates and tail indices within tolerance
+//! over large draws, and byte-stable draw sequences across seeds and all
+//! four `{queue} × {store}` engine combinations.
+
+use ds_rs::coordinator::run::{run_full, EngineOptions, RunOptions};
+use ds_rs::sim::{QueueKind, SimRng, StoreKind, MINUTE};
+use ds_rs::testutil::fixtures::{plate_jobs, quick_cfg, shaped, template_fleet};
+use ds_rs::traffic::{ArrivalProcess, QueueingPolicy, TrafficSpec};
+
+const DRAWS: usize = 100_000;
+
+fn delays(process: &ArrivalProcess, seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = SimRng::new(seed);
+    let mut now: u64 = 0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let d = process.next_delay_ms(&mut rng, now);
+        now += d;
+        out.push(d);
+    }
+    out
+}
+
+#[test]
+fn poisson_empirical_rate_matches_lambda() {
+    // λ = 2 jobs/min → mean inter-arrival 30 s = 30_000 ms.  Over 10⁵
+    // draws the sample mean of an exponential is within ~1% at 3σ
+    // (σ/√n ≈ 0.32%), so a 1% band is a comfortable, non-flaky gate.
+    let process = ArrivalProcess::Poisson { rate_per_min: 2.0 };
+    let ds = delays(&process, 42, DRAWS);
+    let mean = ds.iter().sum::<u64>() as f64 / ds.len() as f64;
+    let expect = 30_000.0;
+    assert!(
+        (mean - expect).abs() / expect < 0.01,
+        "poisson mean delay {mean} ms, expected ~{expect} ms"
+    );
+    assert!((process.mean_rate_per_min() - 2.0).abs() < 1e-12);
+}
+
+#[test]
+fn diurnal_phase_integrates_to_its_budget() {
+    // rate(t) swings 0.5..2.0 per minute over a 120-minute period, so the
+    // long-run average rate is (base + peak) / 2 = 1.25/min.  Count
+    // arrivals over many whole periods and compare.
+    let process = ArrivalProcess::Diurnal {
+        base_per_min: 0.5,
+        peak_per_min: 2.0,
+        period_min: 120,
+    };
+    let mut rng = SimRng::new(7);
+    let horizon: u64 = 200 * 120 * MINUTE; // 200 full periods
+    let mut now: u64 = 0;
+    let mut arrivals: u64 = 0;
+    while now < horizon {
+        now += process.next_delay_ms(&mut rng, now);
+        arrivals += 1;
+    }
+    let rate = arrivals as f64 / (horizon as f64 / MINUTE as f64);
+    assert!(
+        (rate - 1.25).abs() < 0.05,
+        "diurnal empirical rate {rate}/min, expected ~1.25/min"
+    );
+    assert!((process.mean_rate_per_min() - 1.25).abs() < 1e-12);
+
+    // The phase structure is real, not just the mean: the busiest
+    // half-period (centered on the crest) must see substantially more
+    // arrivals than the quietest.  Bucket arrivals by phase.
+    let mut rng = SimRng::new(11);
+    let mut now: u64 = 0;
+    let period_ms = 120 * MINUTE;
+    let mut crest: u64 = 0; // phase in [1/4, 3/4) of the period
+    let mut trough: u64 = 0;
+    while now < horizon {
+        now += process.next_delay_ms(&mut rng, now);
+        let phase = (now % period_ms) as f64 / period_ms as f64;
+        if (0.25..0.75).contains(&phase) {
+            crest += 1;
+        } else {
+            trough += 1;
+        }
+    }
+    assert!(
+        crest as f64 > 1.5 * trough as f64,
+        "diurnal crest {crest} vs trough {trough}: no day/night contrast"
+    );
+}
+
+#[test]
+fn pareto_tail_index_recovered_by_hill_estimator() {
+    // The Hill estimator over the top k order statistics consistently
+    // recovers the tail index α of a Pareto sample:
+    //   α̂ = k / Σ_{i=1..k} ln(x_(i) / x_(k+1))   (x_(1) ≥ x_(2) ≥ …)
+    let alpha = 1.5;
+    let process = ArrivalProcess::HeavyTailed {
+        alpha,
+        scale_min: 0.1,
+    };
+    let mut xs: Vec<f64> = delays(&process, 99, DRAWS)
+        .into_iter()
+        .map(|ms| ms as f64 / MINUTE as f64)
+        .collect();
+    xs.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    let k = 1000;
+    let tail = xs[k]; // x_(k+1)
+    let sum: f64 = xs[..k].iter().map(|x| (x / tail).ln()).sum();
+    let alpha_hat = k as f64 / sum;
+    assert!(
+        (alpha_hat - alpha).abs() / alpha < 0.15,
+        "Hill estimate {alpha_hat}, expected ~{alpha}"
+    );
+    // α > 1 → the mean rate is finite and positive.
+    assert!(process.mean_rate_per_min() > 0.0);
+    // α ≤ 1 → the mean diverges and the advertised rate is 0.
+    assert_eq!(
+        (ArrivalProcess::HeavyTailed {
+            alpha: 0.9,
+            scale_min: 0.1
+        })
+        .mean_rate_per_min(),
+        0.0
+    );
+}
+
+#[test]
+fn draw_sequences_are_seed_stable_with_pinned_bytes() {
+    // Same seed → byte-identical draw sequence (debug formatting pins the
+    // bytes without hard-coding generator constants); different seed →
+    // different sequence.
+    for process in [
+        ArrivalProcess::Poisson { rate_per_min: 2.0 },
+        ArrivalProcess::Diurnal {
+            base_per_min: 0.5,
+            peak_per_min: 2.0,
+            period_min: 120,
+        },
+        ArrivalProcess::HeavyTailed {
+            alpha: 1.5,
+            scale_min: 0.1,
+        },
+    ] {
+        let a = format!("{:?}", delays(&process, 1234, 512));
+        let b = format!("{:?}", delays(&process, 1234, 512));
+        let c = format!("{:?}", delays(&process, 1235, 512));
+        assert_eq!(a, b, "{} draws not seed-stable", process.kind());
+        assert_ne!(a, c, "{} draws ignore the seed", process.kind());
+    }
+}
+
+fn all_engines() -> [EngineOptions; 4] {
+    [
+        EngineOptions {
+            queue: QueueKind::Heap,
+            store: StoreKind::Map,
+        },
+        EngineOptions {
+            queue: QueueKind::Heap,
+            store: StoreKind::Dense,
+        },
+        EngineOptions {
+            queue: QueueKind::Calendar,
+            store: StoreKind::Map,
+        },
+        EngineOptions {
+            queue: QueueKind::Calendar,
+            store: StoreKind::Dense,
+        },
+    ]
+}
+
+#[test]
+fn traffic_runs_identical_across_engine_backends() {
+    // A full multi-tenant run — arrivals drawn live, fair-share dispatch,
+    // per-tenant accounting — is bit-identical under all four engine
+    // combinations, and its JSON bytes too.
+    let cfg = quick_cfg(3);
+    let fleet = template_fleet();
+    let jobs = plate_jobs(2, 1); // ignored: the traffic spec is the workload
+    let run = |engine: EngineOptions| {
+        let mut ex = shaped(45.0, 0.3, 0.0, 0.0);
+        let opts = RunOptions {
+            seed: 21,
+            engine,
+            traffic: TrafficSpec::shape("two-tenant"),
+            queueing: QueueingPolicy::FairShare,
+            ..Default::default()
+        };
+        run_full(&cfg, &jobs, &fleet, &mut ex, opts).unwrap()
+    };
+    let reference = run(all_engines()[0]);
+    assert_eq!(reference.traffic.traffic, "two-tenant");
+    assert_eq!(reference.traffic.queueing, "fair-share");
+    assert_eq!(reference.traffic.tenants.len(), 2);
+    let total: u64 = reference.traffic.tenants.iter().map(|t| t.completed).sum();
+    assert_eq!(total, TrafficSpec::shape("two-tenant").unwrap().total_jobs());
+    for engine in &all_engines()[1..] {
+        let report = run(*engine);
+        assert_eq!(reference, report, "{engine:?}");
+        assert_eq!(
+            reference.to_json().to_string(),
+            report.to_json().to_string(),
+            "{engine:?} JSON bytes"
+        );
+    }
+}
